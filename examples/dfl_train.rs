@@ -1,0 +1,74 @@
+//! **End-to-end driver**: decentralized federated learning with the full
+//! three-layer stack composing —
+//!
+//! * Layer 1/2: JAX + Pallas train/eval/aggregate steps, AOT-lowered to
+//!   HLO text (`make artifacts`), executed from Rust through PJRT;
+//! * Layer 3: the MOSGU protocol schedules gossip over the simulated
+//!   three-router testbed; real parameter vectors move between nodes and
+//!   are folded pairwise into FedAvg.
+//!
+//! Trains 10 federated nodes on a mildly non-IID synthetic next-token
+//! task and logs the loss curve + communication cost per round; the run
+//! is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dfl_train [ROUNDS] [LOCAL_STEPS]
+//! ```
+
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::round::run_dfl;
+use mosgu::dfl::trainer::Trainer;
+use mosgu::runtime::{artifacts_dir, ArtifactSet, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    mosgu::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rounds: u64 = args.first().map(|s| s.parse()).transpose()?.unwrap_or(40);
+    let local_steps: u32 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(5);
+
+    let rt = Runtime::cpu()?;
+    let artifacts = ArtifactSet::load(&rt, &artifacts_dir())?;
+    println!(
+        "model: {} params ({} padded) -> {:.1} MB gossip payload; PJRT {}",
+        artifacts.manifest.param_count,
+        artifacts.manifest.param_dim,
+        artifacts.model_mb(),
+        rt.platform(),
+    );
+
+    let cfg = ExperimentConfig::default();
+    let session = GossipSession::with_model(&cfg, artifacts.model_mb())?;
+    println!(
+        "gossip tree: {} edges over {} nodes / {} subnets; slot {:.3} s",
+        session.tree().edge_count(),
+        cfg.nodes,
+        cfg.subnets,
+        session.schedule().slot_len_s
+    );
+
+    let trainer = Trainer::new(&rt, &artifacts);
+    println!("\nround  train_loss  eval_loss  comm_s  slots");
+    let t0 = std::time::Instant::now();
+    let reports = run_dfl(&session, &trainer, rounds, local_steps, 0.1, |r| {
+        println!(
+            "{:>5}  {:>10.4}  {:>9.4}  {:>6.2}  {:>5}",
+            r.round, r.train_loss, r.eval_loss, r.comm_time_s, r.slots
+        );
+    })?;
+
+    let first = reports.first().expect("at least one round");
+    let last = reports.last().unwrap();
+    let total_comm: f64 = reports.iter().map(|r| r.comm_time_s).sum();
+    println!("\n== summary ==");
+    println!("rounds: {rounds} x {local_steps} local steps, wall {:.1} s", t0.elapsed().as_secs_f64());
+    println!("train loss: {:.4} -> {:.4}", first.train_loss, last.train_loss);
+    println!("eval  loss: {:.4} -> {:.4}", first.eval_loss, last.eval_loss);
+    println!("simulated communication: {total_comm:.1} s total ({:.2} s/round)", total_comm / rounds as f64);
+    anyhow::ensure!(
+        last.eval_loss < first.eval_loss,
+        "training did not reduce eval loss — e2e regression"
+    );
+    println!("OK: loss decreased through gossip + aggregation across all layers");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT export: lower the Layer-2 entry points to HLO **text** artifacts.
+
+HLO text (not `HloModuleProto.serialize()`) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (written to ../artifacts by default):
+
+  train_step.hlo.txt      (flat[D], tokens[B,T]i32, targets[B,T]i32, lr[]) -> (flat[D], loss[])
+  eval_step.hlo.txt       (flat[D], tokens[B,T]i32, targets[B,T]i32)      -> (loss[],)
+  aggregate.hlo.txt       (acc[D], w_acc[], model[D], w[])                 -> (acc[D], w[])
+  manifest.txt            dimensions the Rust runtime needs (D, B, T, ...)
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary then
+executes these through PJRT with no Python on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .model import ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> stablehlo -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str, cfg: ModelConfig, batch: int) -> dict:
+    """Lower and write every artifact; returns {name: path}."""
+    os.makedirs(out_dir, exist_ok=True)
+    d = model_mod.padded_dim(cfg)
+    flat_spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    scalar_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    paths = {}
+
+    def write(name: str, text: str) -> None:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        paths[name] = path
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+
+    train = jax.jit(lambda f, x, y, lr: model_mod.train_step(cfg, f, x, y, lr))
+    write("train_step", to_hlo_text(train.lower(flat_spec, tok_spec, tok_spec, scalar_spec)))
+
+    ev = jax.jit(lambda f, x, y: (model_mod.eval_step(cfg, f, x, y),))
+    write("eval_step", to_hlo_text(ev.lower(flat_spec, tok_spec, tok_spec)))
+
+    agg = jax.jit(model_mod.aggregate_pair)
+    write("aggregate", to_hlo_text(agg.lower(flat_spec, scalar_spec, flat_spec, scalar_spec)))
+
+    # initial parameters as raw little-endian f32 (seeded per node from Rust
+    # by adding node-id noise; one shared init keeps artifacts small)
+    init = model_mod.flatten_params(cfg, model_mod.init_params(cfg, seed=0))
+    init_path = os.path.join(out_dir, "init_params.f32")
+    import numpy as np
+
+    np.asarray(init, dtype="<f4").tofile(init_path)
+    paths["init_params"] = init_path
+    print(f"wrote init_params: {init.shape[0]} f32 -> {init_path}")
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"param_dim = {d}\n")
+        f.write(f"param_count = {model_mod.param_count(cfg)}\n")
+        f.write(f"batch = {batch}\n")
+        f.write(f"seq_len = {cfg.seq_len}\n")
+        f.write(f"vocab = {cfg.vocab}\n")
+        f.write(f"d_model = {cfg.d_model}\n")
+        f.write(f"d_ff = {cfg.d_ff}\n")
+        f.write(f"n_layers = {cfg.n_layers}\n")
+        f.write(f"n_heads = {cfg.n_heads}\n")
+        f.write(f"pad_multiple = {cfg.pad_multiple}\n")
+    paths["manifest"] = manifest
+    print(f"wrote manifest -> {manifest}")
+    return paths
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the pure-jnp reference FFN instead of the Pallas kernel")
+    args = ap.parse_args()
+    cfg = ModelConfig(
+        d_model=args.d_model,
+        d_ff=args.d_ff,
+        n_layers=args.layers,
+        seq_len=args.seq_len,
+        use_pallas=not args.no_pallas,
+    )
+    print(f"model: {model_mod.param_count(cfg):,} params "
+          f"(padded dim {model_mod.padded_dim(cfg):,})")
+    export_all(os.path.abspath(args.out), cfg, args.batch)
+
+
+if __name__ == "__main__":
+    main()

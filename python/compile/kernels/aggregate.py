@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: pairwise gossip aggregation (running FedAvg).
+
+The DFL hot-spot on the receive path: every model a node gossips in is
+folded into a running weighted average of flat parameter vectors. The
+kernel streams 1-D blocks HBM→VMEM (`BlockSpec((BLOCK,), lambda i: (i,))`),
+does the FMA on the vector unit, and writes the block back — nothing is
+resident twice, so the VMEM footprint is `3 × BLOCK × 4` bytes regardless
+of model size (see DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both the pytest
+oracle checks and the Rust runtime execute. Real-TPU performance is
+estimated from the BlockSpec in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size: 64 Ki f32 = 256 KiB per operand block; 3 operands in VMEM
+# (acc, model, out) = 768 KiB, comfortably inside a TPU core's ~16 MiB VMEM
+# while long enough to amortize the HBM latency.
+BLOCK = 65536
+
+
+def _aggregate_kernel(acc_ref, model_ref, wa_ref, wm_ref, out_ref):
+    """One grid step: out = (acc*wa + model*wm) / (wa + wm) on a block."""
+    wa = wa_ref[0]
+    wm = wm_ref[0]
+    inv_total = 1.0 / (wa + wm)
+    out_ref[...] = (acc_ref[...] * wa + model_ref[...] * wm) * inv_total
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gossip_aggregate(acc: jnp.ndarray, acc_weight: jnp.ndarray,
+                     model: jnp.ndarray, weight: jnp.ndarray,
+                     block: int = BLOCK) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold one neighbor model into the running average.
+
+    ``acc``/``model`` are flat f32 vectors whose length must be a multiple
+    of ``block`` (the AOT path pads the parameter vector once at export).
+    ``acc_weight``/``weight`` are scalar sample counts. Returns the new
+    accumulator and total weight.
+    """
+    (d,) = acc.shape
+    assert model.shape == (d,), f"shape mismatch {acc.shape} vs {model.shape}"
+    assert d % block == 0, f"length {d} not a multiple of block {block}"
+    wa = jnp.reshape(acc_weight.astype(jnp.float32), (1,))
+    wm = jnp.reshape(weight.astype(jnp.float32), (1,))
+    grid = (d // block,)
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # scalar weights broadcast to every grid step
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(acc, model, wa, wm)
+    return out, acc_weight + weight
+
+
+def vmem_footprint_bytes(block: int = BLOCK) -> int:
+    """Estimated VMEM bytes per grid step (3 f32 blocks + 2 scalars)."""
+    return 3 * block * 4 + 2 * 4

@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernel: fused linear layer (x·W + b, optional GELU).
+
+The compute hot-spot of the Layer-2 model. Tiled for the MXU systolic
+array: (BM, BK) × (BK, BN) blocks with a f32 accumulator in VMEM scratch,
+K-innermost grid so partial products accumulate in place — the TPU
+counterpart of a CUDA tiled-shared-memory GEMM (no warps/WMMA; BlockSpec
+expresses the HBM→VMEM schedule that threadblocks would).
+
+Pallas calls carry no autodiff rules, so the public entry point wraps the
+kernel in a `jax.custom_vjp`: the backward pass re-uses the same kernel
+for the two transposed matmuls (dx = dz·Wᵀ, dW = xᵀ·dz), keeping the MXU
+mapping on both sides of the tape.
+
+interpret=True for CPU-PJRT executability; see aggregate.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128 matches the MXU's 128×128 systolic array; BK=128 keeps the three
+# resident tiles at 3 × 128 × 128 × 4 B = 192 KiB of VMEM.
+BM = 128
+BK = 128
+BN = 128
+
+
+def _gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _gelu_grad(x):
+    """d/dx of the tanh-approximate GELU."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    u = c * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3.0 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, nsteps_k, activation):
+    """Grid (M/BM, N/BN, K/BK), K innermost: accumulate x·w tiles, then on
+    the last K step add bias and apply the activation."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _finish():
+        y = acc_ref[...] + b_ref[...]
+        if activation == "gelu":
+            y = _gelu(y)
+        out_ref[...] = y
+
+
+def _vmem_scratch(shape):
+    """VMEM f32 scratch allocation (interpret-mode compatible)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _pallas_linear(x, w, b, activation, bm, bk, bn):
+    """The raw kernel invocation (no AD)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"shapes ({m},{k},{n}) not tiles of ({bm},{bk},{bn})"
+    assert activation in ("gelu", "none")
+    nsteps_k = k // bk
+    kernel = functools.partial(_linear_kernel, nsteps_k=nsteps_k, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nsteps_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[_vmem_scratch((bm, bn))],
+        interpret=True,
+    )(x, w, b.reshape(1, n))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_linear_ad(x, w, b, activation, bm, bk, bn):
+    return _pallas_linear(x, w, b, activation, bm, bk, bn)
+
+
+def _fused_linear_fwd(x, w, b, activation, bm, bk, bn):
+    # keep the pre-activation for the backward pass (recompute-free)
+    z = _pallas_linear(x, w, b, "none", bm, bk, bn)
+    y = _gelu(z) if activation == "gelu" else z
+    return y, (x, w, z)
+
+
+def _fused_linear_bwd(activation, bm, bk, bn, residual, dy):
+    x, w, z = residual
+    dz = dy * _gelu_grad(z) if activation == "gelu" else dy
+    n = w.shape[1]
+    k = w.shape[0]
+    zeros_k = jnp.zeros((k,), dz.dtype)
+    zeros_n = jnp.zeros((n,), dz.dtype)
+    # dx (M,K) = dz (M,N) @ wT (N,K); dw (K,N) = xT (K,M) @ dz (M,N)
+    dx = _pallas_linear(dz, w.T, zeros_k, "none", bm, bn, bk)
+    dw = _pallas_linear(x.T, dz, zeros_n, "none", bk, bm, bn)
+    db = dz.sum(axis=0)
+    return dx, dw, db
+
+
+_fused_linear_ad.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def fused_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 activation: str = "gelu",
+                 bm: int = BM, bk: int = BK, bn: int = BN) -> jnp.ndarray:
+    """Compute ``act(x @ w + b)`` with an MXU-tiled Pallas kernel,
+    differentiable via a custom VJP that re-uses the kernel for the
+    transposed matmuls.
+
+    Shapes must tile exactly: x (M,K), w (K,N), b (N,) with M%bm = K%bk =
+    N%bn = 0. The model pads its dims to multiples of 128 at build time.
+    """
+    return _fused_linear_ad(x, w, b, activation, bm, bk, bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int,
+                             bm: int = BM, bk: int = BK, bn: int = BN) -> float:
+    """Fraction of MXU issue slots doing useful work for these dims —
+    1.0 when every tile is full (dims are multiples of the block shape)."""
+    import math
+
+    full = m * k * n
+    padded = (math.ceil(m / bm) * bm) * (math.ceil(k / bk) * bk) * (math.ceil(n / bn) * bn)
+    return full / padded
+
+
+def vmem_footprint_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    """Resident VMEM per grid step: x, w, bias, out and the accumulator."""
+    return 4 * (bm * bk + bk * bn + bn + bm * bn + bm * bn)

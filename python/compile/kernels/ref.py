@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/`) asserts allclose between the two across shape/dtype
+sweeps. The references are also used directly by `model.py` when a
+dimension is too small/ragged to tile (the kernels require block-aligned
+shapes; the model pads to avoid that, but the reference path keeps the
+maths honest).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_aggregate_ref(acc: jnp.ndarray, acc_weight: jnp.ndarray,
+                         model: jnp.ndarray, weight: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pairwise running weighted average of flat parameter vectors.
+
+    Folding ``(acc, w_acc) ⊕ (model, w)`` over any number of neighbor
+    models yields exactly FedAvg, so a single fixed-shape artifact serves
+    every MST degree::
+
+        new_acc = (acc * w_acc + model * w) / (w_acc + w)
+        new_w   = w_acc + w
+    """
+    total = acc_weight + weight
+    new_acc = (acc * acc_weight + model * weight) / total
+    return new_acc, total
+
+
+def fused_linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                     activation: str = "gelu") -> jnp.ndarray:
+    """x @ w + b with optional GELU (tanh approximation, matching the
+    kernel's MXU-friendly formulation)."""
+    y = x @ w + b
+    if activation == "gelu":
+        y = gelu_ref(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximate GELU (the form the Pallas kernel computes)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def sgd_update_ref(param: jnp.ndarray, grad: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Fused SGD step: p <- p - lr * g."""
+    return param - lr * grad

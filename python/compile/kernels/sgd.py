@@ -1,0 +1,42 @@
+"""Layer-1 Pallas kernel: fused SGD update p <- p - lr*g.
+
+Same 1-D streaming scheme as the aggregation kernel: one block of params
+and one block of grads in VMEM per grid step, FMA on the vector unit,
+write-back. Fusing the update avoids materializing `lr*g`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, out_ref):
+    out_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_update(param: jnp.ndarray, grad: jnp.ndarray, lr: jnp.ndarray,
+               block: int = BLOCK) -> jnp.ndarray:
+    """Apply one SGD step over flat f32 vectors (length % block == 0)."""
+    (d,) = param.shape
+    assert grad.shape == (d,), f"shape mismatch {param.shape} vs {grad.shape}"
+    assert d % block == 0, f"length {d} not a multiple of block {block}"
+    lr1 = jnp.reshape(lr.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(d // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(param, grad, lr1)

@@ -1,0 +1,254 @@
+"""Layer-2 JAX model: the federated learner's train/eval computation.
+
+The paper trains mobile-class CNNs (MobileNet/EfficientNet, 2.9–12 M
+parameters) and measures *communication only*; training accuracy is cited
+from prior work. For the end-to-end example we therefore train a real
+model of the same parameter class — a small GELU transformer LM (~3.3 M
+params at the default config) on synthetic sequence data — with the dense
+hot loops running through the Layer-1 Pallas kernels.
+
+Everything here is build-time: `aot.py` lowers `train_step`, `eval_step`
+and `aggregate_pair` to HLO text once; the Rust coordinator executes the
+artifacts through PJRT and never imports Python.
+
+Parameters cross the artifact boundary as ONE flat f32 vector (padded to
+the aggregation kernel's block multiple), so the Rust side is completely
+model-agnostic: gossip moves `param_dim` floats, aggregation folds them
+pairwise, the train artifact consumes and returns the same flat vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate as agg_kernel
+from .kernels import linear as linear_kernel
+from .kernels import ref as kernels_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer-LM hyperparameters. Defaults give ~3.3 M parameters —
+    the paper's "v2-class" size (MobileNetV2: 3.5 M)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    d_ff: int = 512
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    # pad the flat parameter vector to a multiple of this (the aggregation
+    # kernel's block size)
+    pad_multiple: int = 65536
+    # use the Pallas fused_linear kernel for the feed-forward blocks
+    use_pallas: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# parameter pytree <-> flat vector
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Ordered dict of parameter array shapes."""
+    shapes = {
+        "embed": (cfg.vocab, cfg.d_model),
+        "pos": (cfg.seq_len, cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        shapes.update({
+            f"l{i}.ln1_g": (cfg.d_model,),
+            f"l{i}.ln1_b": (cfg.d_model,),
+            f"l{i}.wqkv": (cfg.d_model, 3 * cfg.d_model),
+            f"l{i}.wo": (cfg.d_model, cfg.d_model),
+            f"l{i}.ln2_g": (cfg.d_model,),
+            f"l{i}.ln2_b": (cfg.d_model,),
+            f"l{i}.w1": (cfg.d_model, cfg.d_ff),
+            f"l{i}.b1": (cfg.d_ff,),
+            f"l{i}.w2": (cfg.d_ff, cfg.d_model),
+            f"l{i}.b2": (cfg.d_model,),
+        })
+    shapes.update({
+        "lnf_g": (cfg.d_model,),
+        "lnf_b": (cfg.d_model,),
+        "head": (cfg.d_model, cfg.vocab),
+    })
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    return sum(math.prod(s) for s in param_shapes(cfg).values())
+
+
+def padded_dim(cfg: ModelConfig) -> int:
+    """Flat vector length after padding to the kernel block multiple."""
+    n = param_count(cfg)
+    m = cfg.pad_multiple
+    return ((n + m - 1) // m) * m
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict:
+    """He/Glorot-ish init, deterministic per seed."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", ".b1", ".b2")) or name == "lnf_b":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("_g") :
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            / jnp.sqrt(jnp.float32(fan_in)))
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict) -> jnp.ndarray:
+    """Concatenate all parameters into one padded flat f32 vector."""
+    parts = [params[name].reshape(-1) for name in param_shapes(cfg)]
+    flat = jnp.concatenate(parts)
+    pad = padded_dim(cfg) - flat.shape[0]
+    return jnp.pad(flat, (0, pad))
+
+
+def unflatten_params(cfg: ModelConfig, flat: jnp.ndarray) -> dict:
+    """Inverse of `flatten_params` (ignores the padding tail)."""
+    import math
+
+    params = {}
+    offset = 0
+    for name, shape in param_shapes(cfg).items():
+        size = math.prod(shape)
+        params[name] = flat[offset:offset + size].reshape(shape)
+        offset += size
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _ffn(cfg: ModelConfig, x, w1, b1, w2, b2):
+    """Feed-forward block — the dense hot-spot, routed through the Pallas
+    fused-linear kernel when shapes tile (they do by construction:
+    d_model/d_ff are multiples of 128 and tokens are padded)."""
+    bt, d = x.shape
+    if cfg.use_pallas and bt % linear_kernel.BM == 0 and d % linear_kernel.BK == 0 \
+            and w1.shape[1] % linear_kernel.BN == 0:
+        h = linear_kernel.fused_linear(x, w1, b1, activation="gelu")
+        return linear_kernel.fused_linear(h, w2, b2, activation="none")
+    h = kernels_ref.fused_linear_ref(x, w1, b1, activation="gelu")
+    return kernels_ref.fused_linear_ref(h, w2, b2, activation="none")
+
+
+def _attention(cfg: ModelConfig, x, wqkv, wo):
+    bt = x.shape[0]
+    b = bt // cfg.seq_len
+    qkv = (x @ wqkv).reshape(b, cfg.seq_len, 3, cfg.n_heads, cfg.head_dim)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    # (b, heads, t, hd)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(cfg.head_dim))
+    causal = jnp.tril(jnp.ones((cfg.seq_len, cfg.seq_len), bool))
+    scores = jnp.where(causal, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bt, cfg.d_model)
+    return out @ wo
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a (batch, seq_len) int32 token array."""
+    b, t = tokens.shape
+    assert t == cfg.seq_len, f"seq len {t} != {cfg.seq_len}"
+    x = params["embed"][tokens.reshape(-1)] + jnp.tile(params["pos"], (b, 1))
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        x = x + _attention(cfg, h, params[f"l{i}.wqkv"], params[f"l{i}.wo"])
+        h = _layer_norm(x, params[f"l{i}.ln2_g"], params[f"l{i}.ln2_b"])
+        x = x + _ffn(cfg, h, params[f"l{i}.w1"], params[f"l{i}.b1"],
+                     params[f"l{i}.w2"], params[f"l{i}.b2"])
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return (x @ params["head"]).reshape(b, t, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+# ---------------------------------------------------------------------------
+# the three AOT entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray,
+               targets: jnp.ndarray, lr: jnp.ndarray):
+    """One SGD step over the flat parameter vector.
+
+    Returns `(new_flat, loss)`. Gradients flow through the same forward
+    (including the Pallas FFN kernels); the update itself stays on the flat
+    vector so the artifact signature is model-agnostic.
+    """
+    def flat_loss(f):
+        return loss_fn(cfg, unflatten_params(cfg, f), tokens, targets)
+
+    loss, grad = jax.value_and_grad(flat_loss)(flat)
+    # fused SGD over the flat vector (same maths as kernels/sgd.py; inlined
+    # jnp here so the train artifact stays a single fused HLO)
+    new_flat = flat - lr * grad
+    return new_flat, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def eval_step(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray,
+              targets: jnp.ndarray) -> jnp.ndarray:
+    """Loss only (no update) — used for the example's held-out curve."""
+    return loss_fn(cfg, unflatten_params(cfg, flat), tokens, targets)
+
+
+def aggregate_pair(acc: jnp.ndarray, acc_weight: jnp.ndarray,
+                   model: jnp.ndarray, weight: jnp.ndarray):
+    """Pairwise FedAvg fold — the Pallas aggregation kernel, exported as
+    its own artifact so the Rust gossip hot path can fold any number of
+    neighbor models with one fixed-shape executable."""
+    return agg_kernel.gossip_aggregate(acc, acc_weight, model, weight)
+
+
+# ---------------------------------------------------------------------------
+# synthetic workload (both for pytest and for the e2e example's data)
+# ---------------------------------------------------------------------------
+
+def synth_batch(cfg: ModelConfig, seed: int, batch: int, node: int = 0):
+    """Deterministic synthetic next-token task: token sequences follow a
+    per-node affine recurrence mod vocab, so the task is learnable and
+    mildly non-IID across federated nodes (each node has its own stride)."""
+    key = jax.random.PRNGKey(seed * 1000003 + node)
+    start = jax.random.randint(key, (batch, 1), 0, cfg.vocab)
+    stride = 3 + 2 * (node % 5)  # odd strides => full cycle mod 256
+    idx = jnp.arange(cfg.seq_len + 1)
+    seq = (start + stride * idx[None, :]) % cfg.vocab
+    return seq[:, :-1].astype(jnp.int32), seq[:, 1:].astype(jnp.int32)

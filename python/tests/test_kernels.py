@@ -1,0 +1,183 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (multiples of the kernels' block constraints) and
+value distributions; fixed-seed cases pin the exact numerics.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import aggregate as agg
+from compile.kernels import linear as lin
+from compile.kernels import ref
+from compile.kernels import sgd
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=20, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gossip_aggregate
+# ---------------------------------------------------------------------------
+
+class TestAggregate:
+    def test_matches_ref_basic(self):
+        d = 2 * agg.BLOCK
+        acc, m = rand(0, (d,)), rand(1, (d,))
+        wa, wm = jnp.float32(3.0), jnp.float32(1.0)
+        got, got_w = agg.gossip_aggregate(acc, wa, m, wm)
+        want, want_w = ref.gossip_aggregate_ref(acc, wa, m, wm)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got_w, want_w)
+
+    def test_equal_weights_is_mean(self):
+        d = agg.BLOCK
+        a, b = rand(2, (d,)), rand(3, (d,))
+        got, w = agg.gossip_aggregate(a, jnp.float32(1.0), b, jnp.float32(1.0))
+        np.testing.assert_allclose(got, (a + b) / 2.0, rtol=1e-5, atol=1e-6)
+        assert float(w) == 2.0
+
+    def test_zero_weight_neighbor_is_identity(self):
+        d = agg.BLOCK
+        a, b = rand(4, (d,)), rand(5, (d,))
+        got, _ = agg.gossip_aggregate(a, jnp.float32(2.0), b, jnp.float32(0.0))
+        np.testing.assert_allclose(got, a, rtol=1e-5, atol=1e-6)
+
+    def test_fold_order_converges_to_fedavg(self):
+        """Folding k models pairwise equals the flat weighted mean."""
+        d = agg.BLOCK
+        models = [rand(10 + i, (d,)) for i in range(4)]
+        acc, w = models[0], jnp.float32(1.0)
+        for mdl in models[1:]:
+            acc, w = agg.gossip_aggregate(acc, w, mdl, jnp.float32(1.0))
+        fedavg = sum(models) / len(models)
+        np.testing.assert_allclose(acc, fedavg, rtol=1e-4, atol=1e-6)
+        assert float(w) == 4.0
+
+    @hypothesis.given(
+        blocks=st.integers(min_value=1, max_value=3),
+        wa=st.floats(min_value=0.25, max_value=16.0),
+        wm=st.floats(min_value=0.25, max_value=16.0),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_sweep(self, blocks, wa, wm, seed):
+        d = blocks * 8192
+        acc = rand(seed, (d,), 2.0)
+        m = rand(seed + 1, (d,), 2.0)
+        got, got_w = agg.gossip_aggregate(
+            acc, jnp.float32(wa), m, jnp.float32(wm), block=8192)
+        want, want_w = ref.gossip_aggregate_ref(acc, jnp.float32(wa), m, jnp.float32(wm))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(got_w, want_w, rtol=1e-6)
+
+    def test_rejects_unaligned_length(self):
+        with pytest.raises(AssertionError):
+            agg.gossip_aggregate(
+                jnp.zeros((100,)), jnp.float32(1.0), jnp.zeros((100,)), jnp.float32(1.0))
+
+    def test_vmem_footprint_within_budget(self):
+        # 3 blocks of f32 must fit a 16 MiB VMEM with generous headroom
+        assert agg.vmem_footprint_bytes() < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+class TestFusedLinear:
+    def test_matches_ref_gelu(self):
+        x, w, b = rand(0, (128, 256)), rand(1, (256, 128)), rand(2, (128,))
+        got = lin.fused_linear(x, w, b, activation="gelu")
+        want = ref.fused_linear_ref(x, w, b, activation="gelu")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_ref_none(self):
+        x, w, b = rand(3, (256, 128)), rand(4, (128, 384)), rand(5, (384,))
+        got = lin.fused_linear(x, w, b, activation="none")
+        want = ref.fused_linear_ref(x, w, b, activation="none")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_k_accumulation_multiblock(self):
+        # K spans 4 blocks: exercises the accumulator init/finish logic
+        x, w, b = rand(6, (128, 512)), rand(7, (512, 128)), jnp.zeros((128,))
+        got = lin.fused_linear(x, w, b, activation="none")
+        np.testing.assert_allclose(got, x @ w, rtol=1e-3, atol=1e-4)
+
+    def test_gradients_match_ref(self):
+        x, w, b = rand(8, (128, 128), 0.5), rand(9, (128, 128), 0.5), rand(10, (128,), 0.1)
+
+        def f_kernel(x, w, b):
+            return jnp.sum(lin.fused_linear(x, w, b, activation="gelu") ** 2)
+
+        def f_ref(x, w, b):
+            return jnp.sum(ref.fused_linear_ref(x, w, b, activation="gelu") ** 2)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, e, name in zip(gk, gr, "xwb"):
+            np.testing.assert_allclose(a, e, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"grad wrt {name}")
+
+    @hypothesis.given(
+        m=st.sampled_from([128, 256]),
+        k=st.sampled_from([128, 256]),
+        n=st.sampled_from([128, 256]),
+        act=st.sampled_from(["gelu", "none"]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, n, act, seed):
+        x, w, b = rand(seed, (m, k)), rand(seed + 1, (k, n)), rand(seed + 2, (n,))
+        got = lin.fused_linear(x, w, b, activation=act)
+        want = ref.fused_linear_ref(x, w, b, activation=act)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_rejects_ragged_shapes(self):
+        with pytest.raises(AssertionError):
+            lin.fused_linear(jnp.zeros((100, 128)), jnp.zeros((128, 128)), jnp.zeros((128,)))
+
+    def test_mxu_utilization_estimate(self):
+        assert lin.mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert lin.mxu_utilization_estimate(100, 128, 128) < 1.0
+
+    def test_vmem_footprint_within_budget(self):
+        assert lin.vmem_footprint_bytes() < 2 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# sgd_update
+# ---------------------------------------------------------------------------
+
+class TestSgd:
+    def test_matches_ref(self):
+        d = sgd.BLOCK
+        p, g = rand(0, (d,)), rand(1, (d,))
+        got = sgd.sgd_update(p, g, jnp.float32(0.05))
+        np.testing.assert_allclose(got, ref.sgd_update_ref(p, g, jnp.float32(0.05)),
+                                   rtol=1e-4, atol=1e-7)
+
+    def test_zero_lr_identity(self):
+        d = sgd.BLOCK
+        p, g = rand(2, (d,)), rand(3, (d,))
+        np.testing.assert_allclose(sgd.sgd_update(p, g, jnp.float32(0.0)), p)
+
+    @hypothesis.given(
+        blocks=st.integers(min_value=1, max_value=3),
+        lr=st.floats(min_value=1e-4, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_sweep(self, blocks, lr, seed):
+        d = blocks * 8192
+        p, g = rand(seed, (d,)), rand(seed + 1, (d,))
+        got = sgd.sgd_update(p, g, jnp.float32(lr), block=8192)
+        np.testing.assert_allclose(got, p - jnp.float32(lr) * g, rtol=1e-5, atol=1e-6)

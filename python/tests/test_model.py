@@ -1,0 +1,151 @@
+"""Layer-2 correctness: shapes, flatten/unflatten round-trip, training
+signal, Pallas-vs-reference forward equivalence, and aggregation semantics
+at the model level."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.model import ModelConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    # tiny variant for fast gradient checks (still tile-aligned)
+    return ModelConfig(d_model=128, d_ff=128, n_layers=1, seq_len=16)
+
+
+class TestParams:
+    def test_param_count_is_v2_class(self, cfg):
+        # paper's model range: 2.9M - 12M parameters... our default sits at
+        # the small end by design (CPU training); must be < padded dim
+        n = M.param_count(cfg)
+        assert 400_000 < n < 13_000_000
+        assert M.padded_dim(cfg) % cfg.pad_multiple == 0
+        assert M.padded_dim(cfg) >= n
+
+    def test_flatten_roundtrip(self, cfg):
+        params = M.init_params(cfg, seed=3)
+        flat = M.flatten_params(cfg, params)
+        back = M.unflatten_params(cfg, flat)
+        for name in M.param_shapes(cfg):
+            np.testing.assert_array_equal(np.asarray(params[name]), np.asarray(back[name]),
+                                          err_msg=name)
+
+    def test_init_deterministic(self, cfg):
+        a = M.flatten_params(cfg, M.init_params(cfg, seed=1))
+        b = M.flatten_params(cfg, M.init_params(cfg, seed=1))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = M.flatten_params(cfg, M.init_params(cfg, seed=2))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_padding_is_zero(self, cfg):
+        flat = M.flatten_params(cfg, M.init_params(cfg, seed=0))
+        tail = np.asarray(flat[M.param_count(cfg):])
+        np.testing.assert_array_equal(tail, np.zeros_like(tail))
+
+
+class TestForward:
+    def test_logits_shape(self, small_cfg):
+        params = M.init_params(small_cfg, 0)
+        x, _ = M.synth_batch(small_cfg, 0, 8)
+        logits = M.forward(small_cfg, params, x)
+        assert logits.shape == (8, small_cfg.seq_len, small_cfg.vocab)
+
+    def test_pallas_and_ref_forward_agree(self, small_cfg):
+        ref_cfg = dataclasses.replace(small_cfg, use_pallas=False)
+        params = M.init_params(small_cfg, 0)
+        x, y = M.synth_batch(small_cfg, 0, 8)
+        lp = M.loss_fn(small_cfg, params, x, y)
+        lr_ = M.loss_fn(ref_cfg, params, x, y)
+        np.testing.assert_allclose(float(lp), float(lr_), rtol=1e-5)
+
+    def test_initial_loss_near_uniform(self, small_cfg):
+        params = M.init_params(small_cfg, 0)
+        x, y = M.synth_batch(small_cfg, 0, 8)
+        loss = float(M.loss_fn(small_cfg, params, x, y))
+        assert abs(loss - np.log(small_cfg.vocab)) < 1.0, loss
+
+    def test_causality(self, small_cfg):
+        """Changing a future token must not affect earlier logits."""
+        params = M.init_params(small_cfg, 0)
+        x, _ = M.synth_batch(small_cfg, 0, 2)
+        logits_a = M.forward(small_cfg, params, x)
+        x2 = x.at[:, -1].set((x[:, -1] + 7) % small_cfg.vocab)
+        logits_b = M.forward(small_cfg, params, x2)
+        np.testing.assert_allclose(np.asarray(logits_a[:, :-1]),
+                                   np.asarray(logits_b[:, :-1]), atol=1e-5)
+
+
+class TestTraining:
+    def test_loss_decreases(self, small_cfg):
+        flat = M.flatten_params(small_cfg, M.init_params(small_cfg, 0))
+        x, y = M.synth_batch(small_cfg, 0, 8)
+        first = None
+        for step in range(30):
+            flat, loss = M.train_step(small_cfg, flat, x, y, jnp.float32(0.1))
+            if first is None:
+                first = float(loss)
+        assert float(loss) < 0.5 * first, f"{first} -> {float(loss)}"
+
+    def test_train_step_preserves_padding(self, small_cfg):
+        flat = M.flatten_params(small_cfg, M.init_params(small_cfg, 0))
+        x, y = M.synth_batch(small_cfg, 0, 8)
+        new_flat, _ = M.train_step(small_cfg, flat, x, y, jnp.float32(0.1))
+        tail = np.asarray(new_flat[M.param_count(small_cfg):])
+        np.testing.assert_array_equal(tail, np.zeros_like(tail))
+
+    def test_eval_step_matches_loss(self, small_cfg):
+        flat = M.flatten_params(small_cfg, M.init_params(small_cfg, 0))
+        x, y = M.synth_batch(small_cfg, 1, 8)
+        le = float(M.eval_step(small_cfg, flat, x, y))
+        lf = float(M.loss_fn(small_cfg, M.unflatten_params(small_cfg, flat), x, y))
+        np.testing.assert_allclose(le, lf, rtol=1e-6)
+
+    def test_zero_lr_keeps_params(self, small_cfg):
+        flat = M.flatten_params(small_cfg, M.init_params(small_cfg, 0))
+        x, y = M.synth_batch(small_cfg, 0, 8)
+        new_flat, _ = M.train_step(small_cfg, flat, x, y, jnp.float32(0.0))
+        np.testing.assert_allclose(np.asarray(new_flat), np.asarray(flat), atol=1e-7)
+
+
+class TestAggregateAtModelLevel:
+    def test_aggregating_identical_models_is_identity(self, small_cfg):
+        flat = M.flatten_params(small_cfg, M.init_params(small_cfg, 0))
+        out, w = M.aggregate_pair(flat, jnp.float32(1.0), flat, jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(flat), rtol=1e-6)
+        assert float(w) == 2.0
+
+    def test_aggregated_model_still_evaluates(self, small_cfg):
+        fa = M.flatten_params(small_cfg, M.init_params(small_cfg, 1))
+        fb = M.flatten_params(small_cfg, M.init_params(small_cfg, 2))
+        out, _ = M.aggregate_pair(fa, jnp.float32(1.0), fb, jnp.float32(1.0))
+        x, y = M.synth_batch(small_cfg, 0, 4)
+        loss = float(M.eval_step(small_cfg, out, x, y))
+        assert np.isfinite(loss)
+
+
+class TestSynthData:
+    def test_targets_are_shifted_inputs(self, small_cfg):
+        x, y = M.synth_batch(small_cfg, 0, 4)
+        np.testing.assert_array_equal(np.asarray(x[:, 1:]), np.asarray(y[:, :-1]))
+
+    def test_non_iid_across_nodes(self, small_cfg):
+        xa, _ = M.synth_batch(small_cfg, 0, 4, node=0)
+        xb, _ = M.synth_batch(small_cfg, 0, 4, node=1)
+        assert not np.array_equal(np.asarray(xa), np.asarray(xb))
+
+    def test_deterministic_per_seed(self, small_cfg):
+        xa, ya = M.synth_batch(small_cfg, 5, 4, node=2)
+        xb, yb = M.synth_batch(small_cfg, 5, 4, node=2)
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+        np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))

@@ -1,0 +1,46 @@
+//! Ablation: MST algorithm choice (paper §III-B's complexity discussion —
+//! Kruskal O(E log E), Prim O(E + V log V), Borůvka O(E log V); the paper
+//! picks Prim for dense/complete overlays). Times all three on graphs of
+//! growing size and density and verifies they agree on total weight.
+
+use mosgu::bench::{bench, section};
+use mosgu::graph::topology::{complete, erdos_renyi};
+use mosgu::graph::Graph;
+use mosgu::mst::MstAlgorithm;
+use mosgu::util::rng::Pcg64;
+
+fn weighted(g: &Graph, rng: &mut Pcg64) -> Graph {
+    let mut out = Graph::new(g.node_count());
+    for e in g.sorted_edges() {
+        out.add_edge(e.u, e.v, rng.gen_f64_range(1.0, 100.0));
+    }
+    out
+}
+
+fn main() {
+    let mut rng = Pcg64::new(42);
+    for (label, n) in [("paper scale", 10usize), ("medium", 100), ("large", 400)] {
+        section(&format!("{label}: complete graph K_{n} (dense — the paper's overlay)"));
+        let g = weighted(&complete(n), &mut rng);
+        let mut weights = Vec::new();
+        for alg in MstAlgorithm::ALL {
+            let r = bench(&format!("{} on K_{n}", alg.name()), 2, 12, || alg.run(&g).unwrap());
+            println!("{}", r.report());
+            weights.push(alg.run(&g).unwrap().total_weight());
+        }
+        assert!(
+            weights.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-6),
+            "MST algorithms disagree: {weights:?}"
+        );
+        println!("  all algorithms agree: total weight {:.3}", weights[0]);
+    }
+
+    section("sparse Erdos-Renyi (p=0.05, n=400) — Kruskal's best case");
+    let g = weighted(&erdos_renyi(400, 0.05, &mut rng), &mut rng);
+    if g.is_connected() {
+        for alg in MstAlgorithm::ALL {
+            let r = bench(&format!("{} on sparse ER", alg.name()), 2, 12, || alg.run(&g).unwrap());
+            println!("{}", r.report());
+        }
+    }
+}

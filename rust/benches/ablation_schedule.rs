@@ -1,0 +1,71 @@
+//! Ablations around the scheduling design choices DESIGN.md calls out:
+//!
+//! * scalability: MOSGU vs broadcast as N grows beyond the paper's 10;
+//! * flooding-with-relay vs direct push (how much worse true flooding is);
+//! * failure injection: retransmission cost as loss probability grows;
+//! * slot-length sensitivity: the paper formula's budget vs actual slot
+//!   occupancy.
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::coordinator::schedule::slot_length_s;
+
+fn main() {
+    section("scalability sweep: N = 10..60, model v2 (14 MB)");
+    println!("{:>4} {:>12} {:>12} {:>10} {:>12}", "N", "B total(s)", "P exch(s)", "speedup", "P dissem(s)");
+    for n in [10usize, 20, 40, 60] {
+        let cfg = ExperimentConfig { nodes: n, repeats: 1, ..Default::default() };
+        let s = GossipSession::new(&cfg).expect("session");
+        let b = s.run_broadcast_round(14.0, 1);
+        let g = s.run_mosgu_round(14.0, 1, 0.0);
+        println!(
+            "{:>4} {:>12.2} {:>12.2} {:>10.2} {:>12.2}",
+            n,
+            b.total_time_s,
+            g.exchange_time_s,
+            b.total_time_s / g.exchange_time_s,
+            g.total_time_s
+        );
+    }
+
+    section("flooding-with-relay vs direct push (complete overlay, N=10, 14 MB)");
+    let cfg = ExperimentConfig::default();
+    let s = GossipSession::new(&cfg).expect("session");
+    let direct = s.run_broadcast_round(14.0, 1);
+    let flood = s.run_flood_round(14.0, 1);
+    println!(
+        "direct push: {} transfers, {:.1} s total;  flood: {} transfers, {:.1} s total ({}x more bytes)",
+        direct.transfer_count(),
+        direct.total_time_s,
+        flood.transfer_count(),
+        flood.total_time_s,
+        flood.transfer_count() / direct.transfer_count().max(1)
+    );
+
+    section("failure injection: retransmission overhead (MOSGU, v2)");
+    println!("{:>6} {:>8} {:>12} {:>12}", "p_fail", "slots", "transfers", "dissem(s)");
+    for p in [0.0, 0.05, 0.1, 0.2, 0.3] {
+        let m = s.run_mosgu_round(14.0, 3, p);
+        println!("{:>6.2} {:>8} {:>12} {:>12.2}", p, m.slots, m.transfer_count(), m.total_time_s);
+    }
+
+    section("slot-length formula vs observed occupancy");
+    for (code, mb) in [("v3s", 11.6), ("b0", 21.2), ("b3", 48.0)] {
+        let m = s.run_mosgu_round(mb, 1, 0.0);
+        // the formula's budget with the session's worst ping
+        let worst_ping_ms = s
+            .costs()
+            .edges()
+            .iter()
+            .fold(0.0f64, |acc, e| acc.max(e.weight));
+        let budget = slot_length_s(worst_ping_ms, mb, 56);
+        let occupancy = m.total_time_s / m.slots.max(1) as f64;
+        println!(
+            "{code:<4} formula budget {:>8.2} s/slot, observed mean occupancy {:>6.2} s/slot ({:.0}% of budget)",
+            budget,
+            occupancy,
+            100.0 * occupancy / budget
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! L3 hot-path microbenchmarks: the discrete-event simulator's event rate,
+//! max-min fair-share recomputation, gossip planning, and the moderator's
+//! full M+O+S computation — the pieces §Perf of EXPERIMENTS.md tracks.
+
+use mosgu::bench::{bench, section};
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::gossip::GossipState;
+use mosgu::coordinator::moderator::Moderator;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::netsim::fairshare::max_min_rates;
+use mosgu::netsim::testbed::Testbed;
+use mosgu::util::rng::Pcg64;
+
+fn main() {
+    let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+
+    section("fair-share allocation");
+    let mut rng = Pcg64::new(1);
+    for (nc, nf) in [(32usize, 100usize), (64, 500), (128, 2000)] {
+        let caps: Vec<f64> = (0..nc).map(|_| rng.gen_f64_range(5.0, 50.0)).collect();
+        let routes: Vec<Vec<usize>> = (0..nf)
+            .map(|_| {
+                let hops = 1 + rng.gen_range(3);
+                (0..hops).map(|_| rng.gen_range(nc)).collect()
+            })
+            .collect();
+        let r = bench(&format!("max_min_rates {nc}ch x {nf}flows"), 3, 30, || {
+            max_min_rates(&caps, &routes)
+        });
+        println!("{}", r.report());
+    }
+
+    section("DES end-to-end: broadcast round (90 concurrent flows)");
+    let tb = Testbed::new(&cfg);
+    let r = bench("broadcast round N=10", 3, 30, || {
+        mosgu::coordinator::broadcast::paper_baseline(&tb, 14.0, 1)
+    });
+    println!("{}  ({:.0} rounds/s)", r.report(), r.per_sec());
+
+    section("gossip protocol planning (no DES)");
+    let session = GossipSession::new(&cfg).expect("session");
+    let tree = session.tree().clone();
+    let sched = session.schedule().clone();
+    let r = bench("full logical round N=10", 3, 100, || {
+        let mut st = GossipState::new(tree.clone(), 0);
+        for slot in 0..200 {
+            if st.is_complete() {
+                break;
+            }
+            let planned = st.plan_slot(&sched.transmitters(slot));
+            for s in GossipState::sorted_sends(&planned) {
+                st.deliver(s);
+            }
+        }
+        st
+    });
+    println!("{}  ({:.0} rounds/s)", r.report(), r.per_sec());
+
+    section("moderator M+O+S computation (reports -> schedule)");
+    let costs = session.costs().clone();
+    let r = bench("moderator schedule N=10 complete", 3, 100, || {
+        let mut m = Moderator::new(
+            0,
+            10,
+            mosgu::mst::MstAlgorithm::Prim,
+            mosgu::coloring::ColoringAlgorithm::Bfs,
+        );
+        for u in 0..10 {
+            let peers: Vec<(usize, f64)> =
+                costs.neighbors(u).iter().map(|&(v, w)| (v, w)).collect();
+            m.submit_report(u, &peers);
+        }
+        m.compute_schedule(14.0, 56, 1).unwrap().tree.edge_count()
+    });
+    println!("{}", r.report());
+
+    section("timed MOSGU round through the DES");
+    let r = bench("mosgu sim round N=10 (14MB)", 3, 30, || session.run_mosgu_round(14.0, 1, 0.0));
+    println!("{}  ({:.0} rounds/s)", r.report(), r.per_sec());
+    let r = bench("full Table cell (5 repeats b+p)", 1, 5, || {
+        let mut b = mosgu::metrics::RepeatedMetrics::default();
+        for rep in 0..5u64 {
+            b.push(&session.run_broadcast_round(14.0, rep));
+            b.push(&session.run_mosgu_round(14.0, rep, 0.0));
+        }
+        b
+    });
+    println!("{}", r.report());
+}

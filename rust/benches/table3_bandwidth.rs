@@ -1,0 +1,31 @@
+//! Regenerates **Table III** — Bandwidth (MB/s) on different topology and
+//! model size, broadcast vs the proposed MOSGU method — and times the
+//! underlying round execution.
+//!
+//! Paper reference values: broadcast 1.785 (v3s) → 0.767 (b3) MB/s;
+//! proposed 3.6–6.6 MB/s, growing advantage with model size (up to ~8×).
+
+use mosgu::bench::tables::{all_models, render, run_grid, PaperTable};
+use mosgu::bench::{bench, section};
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::graph::topology::TopologyKind;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    section("Table III: bandwidth grid (4 topologies x 7 models)");
+    let cells = run_grid(&cfg, &TopologyKind::ALL, &all_models(), |s| eprintln!("  {s}"))
+        .expect("grid");
+    println!("{}", render(PaperTable::Bandwidth, &cells));
+
+    section("execution cost of one measured cell");
+    let session = GossipSession::new(&cfg).expect("session");
+    let r = bench("mosgu round (complete, b3=48MB)", 2, 10, || {
+        session.run_mosgu_round(48.0, 1, 0.0)
+    });
+    println!("{}", r.report());
+    let r = bench("broadcast round (complete, b3=48MB)", 2, 10, || {
+        session.run_broadcast_round(48.0, 1)
+    });
+    println!("{}", r.report());
+}

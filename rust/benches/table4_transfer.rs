@@ -1,0 +1,36 @@
+//! Regenerates **Table IV** — average time (s) for one transfer, broadcast
+//! vs MOSGU, per topology × model.
+//!
+//! Paper reference values: broadcast 6.5 s (v3s) → 62.6 s (b3);
+//! proposed 2.2–10.4 s (improvements 2.6–7.4×).
+
+use mosgu::bench::tables::{all_models, render, run_grid, PaperTable};
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::graph::topology::TopologyKind;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    section("Table IV: average single-transfer time grid");
+    let cells = run_grid(&cfg, &TopologyKind::ALL, &all_models(), |s| eprintln!("  {s}"))
+        .expect("grid");
+    println!("{}", render(PaperTable::TransferTime, &cells));
+
+    // per-size-category summary (paper §V-A's small/medium/large reading)
+    section("improvement factor by size category");
+    for (cat, codes) in [
+        ("small", vec!["v3s", "v2"]),
+        ("medium", vec!["b0", "v3l"]),
+        ("large", vec!["b1", "b2", "b3"]),
+    ] {
+        let mut ratio = 0.0;
+        let mut count = 0;
+        for c in &cells {
+            if codes.contains(&c.model.as_str()) {
+                ratio += c.broadcast.transfer.mean() / c.proposed.transfer.mean();
+                count += 1;
+            }
+        }
+        println!("  {cat:<7} mean transfer-time improvement: {:.2}x", ratio / count as f64);
+    }
+}

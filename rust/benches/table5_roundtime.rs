@@ -1,0 +1,28 @@
+//! Regenerates **Table V** — average total time (s) to complete one FL
+//! communication round (exchange phase; see metrics::RoundMetrics docs),
+//! broadcast vs MOSGU, per topology × model. Also reports the full
+//! dissemination time for reference.
+//!
+//! Paper reference values: broadcast 10 s (v3s) → 83 s (b3); proposed
+//! 3.16–38 s (improvements up to 4.4×).
+
+use mosgu::bench::section;
+use mosgu::bench::tables::{all_models, render, run_grid, PaperTable};
+use mosgu::config::ExperimentConfig;
+use mosgu::graph::topology::TopologyKind;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    section("Table V: communication-round total time grid");
+    let cells = run_grid(&cfg, &TopologyKind::ALL, &all_models(), |s| eprintln!("  {s}"))
+        .expect("grid");
+    println!("{}", render(PaperTable::RoundTime, &cells));
+
+    section("full-dissemination time (all N models at all nodes), MOSGU");
+    println!("{:<17}{:>10}{:>12}", "topology", "model", "dissem (s)");
+    for c in &cells {
+        if ["v3s", "b0", "b3"].contains(&c.model.as_str()) {
+            println!("{:<17}{:>10}{:>12.2}", c.topology, c.model, c.proposed.total.mean());
+        }
+    }
+}

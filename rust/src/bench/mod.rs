@@ -1,0 +1,104 @@
+//! Micro-benchmark harness (criterion is not available offline): warmup +
+//! timed iterations with mean/σ/min reporting, plus the shared
+//! paper-table grid runner used by `cargo bench` targets and the CLI.
+
+pub mod tables;
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+
+    pub fn report(&self) -> String {
+        let scale = |s: f64| {
+            if s < 1e-6 {
+                format!("{:8.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:8.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:8.2} ms", s * 1e3)
+            } else {
+                format!("{:8.3} s ", s)
+            }
+        };
+        format!(
+            "{:<44} {} ± {} (min {}, {} iters)",
+            self.name,
+            scale(self.mean_s),
+            scale(self.std_s),
+            scale(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. The closure's
+/// return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean(),
+        std_s: s.std_dev(),
+        min_s: s.min(),
+        max_s: s.max(),
+    }
+}
+
+/// Print a bench-section header (keeps `cargo bench` output scannable).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleeps() {
+        let r = bench("spin", 1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(r.mean_s >= 0.002, "mean {}", r.mean_s);
+        assert!(r.min_s >= 0.002);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn report_formats_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_s: 0.0021,
+            std_s: 0.0001,
+            min_s: 0.002,
+            max_s: 0.0025,
+        };
+        assert!(r.report().contains("ms"));
+        assert!((r.per_sec() - 476.19).abs() < 1.0);
+    }
+}

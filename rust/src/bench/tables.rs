@@ -1,0 +1,168 @@
+//! The paper-table grid runner: 4 topologies × 7 models × {broadcast,
+//! MOSGU} × `repeats` seeds, producing the cells of Tables III, IV and V.
+//! `cargo bench` targets and `mosgu tables` both call into here.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::session::GossipSession;
+use crate::dfl::models::{ModelSpec, MODELS};
+use crate::graph::topology::TopologyKind;
+use crate::metrics::{render_table, Cell, RepeatedMetrics};
+use anyhow::Result;
+
+/// Which paper table to render from a grid of cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperTable {
+    /// Table III: bandwidth (MB/s)
+    Bandwidth,
+    /// Table IV: average single-transfer time (s)
+    TransferTime,
+    /// Table V: total time for one communication round (s)
+    RoundTime,
+}
+
+impl PaperTable {
+    pub fn title(&self) -> &'static str {
+        match self {
+            PaperTable::Bandwidth => "Table III: Bandwidth (MB/s)",
+            PaperTable::TransferTime => "Table IV: Average time (s) for one transfer",
+            PaperTable::RoundTime => "Table V: Average total time (s) for one FL communication round",
+        }
+    }
+
+    /// Extract (broadcast, proposed) values from a cell.
+    pub fn values(&self, cell: &Cell) -> (f64, f64) {
+        match self {
+            PaperTable::Bandwidth => (cell.broadcast.bandwidth.mean(), cell.proposed.bandwidth.mean()),
+            PaperTable::TransferTime => (cell.broadcast.transfer.mean(), cell.proposed.transfer.mean()),
+            // Table V uses the exchange-phase time for MOSGU (the blocking
+            // part of one FL round; see metrics::RoundMetrics docs)
+            PaperTable::RoundTime => (cell.broadcast.total.mean(), cell.proposed.exchange.mean()),
+        }
+    }
+}
+
+/// Run the full grid (or a subset of topologies/models) and return cells.
+pub fn run_grid(
+    cfg: &ExperimentConfig,
+    topologies: &[TopologyKind],
+    models: &[&ModelSpec],
+    mut progress: impl FnMut(&str),
+) -> Result<Vec<Cell>> {
+    let mut cells = Vec::new();
+    for &kind in topologies {
+        let tcfg = ExperimentConfig { topology: kind, ..cfg.clone() };
+        let session = GossipSession::new(&tcfg)?;
+        for &spec in models {
+            progress(&format!("{} / {}", kind.name(), spec.code));
+            let mut broadcast = RepeatedMetrics::default();
+            let mut proposed = RepeatedMetrics::default();
+            for rep in 0..cfg.repeats as u64 {
+                let seed = cfg.seed ^ (rep + 1).wrapping_mul(0x9e37_79b9);
+                broadcast.push(&session.run_broadcast_round(spec.capacity_mb, seed));
+                proposed.push(&session.run_mosgu_round(spec.capacity_mb, seed, 0.0));
+            }
+            cells.push(Cell {
+                topology: kind.name().to_string(),
+                model: spec.code.to_string(),
+                broadcast,
+                proposed,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render one paper table from a cell grid.
+pub fn render(table: PaperTable, cells: &[Cell]) -> String {
+    let topologies: Vec<String> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&c.topology) {
+                seen.push(c.topology.clone());
+            }
+        }
+        seen
+    };
+    let models: Vec<String> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&c.model) {
+                seen.push(c.model.clone());
+            }
+        }
+        seen
+    };
+    render_table(table.title(), &topologies, &models, |c| table.values(c), cells)
+}
+
+/// Headline numbers (paper abstract: "reducing bandwidth and transfer time
+/// by up to circa 8 and 4.4 times"): max improvement ratios over the grid.
+pub struct Headline {
+    pub bandwidth_improvement: f64,
+    pub transfer_improvement: f64,
+    pub round_improvement: f64,
+}
+
+pub fn headline(cells: &[Cell]) -> Headline {
+    let mut h = Headline {
+        bandwidth_improvement: 0.0,
+        transfer_improvement: 0.0,
+        round_improvement: 0.0,
+    };
+    for c in cells {
+        let bw = c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean();
+        let tx = c.broadcast.transfer.mean() / c.proposed.transfer.mean();
+        let rt = c.broadcast.total.mean() / c.proposed.exchange.mean();
+        h.bandwidth_improvement = h.bandwidth_improvement.max(bw);
+        h.transfer_improvement = h.transfer_improvement.max(tx);
+        h.round_improvement = h.round_improvement.max(rt);
+    }
+    h
+}
+
+/// All seven Table II models, in table column order.
+pub fn all_models() -> Vec<&'static ModelSpec> {
+    MODELS.iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig { repeats: 1, latency_jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn grid_single_cell_runs() {
+        let cells = run_grid(
+            &tiny_cfg(),
+            &[TopologyKind::Complete],
+            &[&MODELS[0]],
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert!(c.proposed.bandwidth.mean() > c.broadcast.bandwidth.mean());
+    }
+
+    #[test]
+    fn render_all_three_tables() {
+        let cells = run_grid(&tiny_cfg(), &[TopologyKind::Complete], &[&MODELS[0]], |_| {}).unwrap();
+        for t in [PaperTable::Bandwidth, PaperTable::TransferTime, PaperTable::RoundTime] {
+            let s = render(t, &cells);
+            assert!(s.contains("Table"), "{s}");
+            assert!(s.contains("Complete"));
+        }
+    }
+
+    #[test]
+    fn headline_ratios_exceed_one() {
+        let cells = run_grid(&tiny_cfg(), &[TopologyKind::Complete], &[&MODELS[6]], |_| {}).unwrap();
+        let h = headline(&cells);
+        assert!(h.bandwidth_improvement > 1.0);
+        assert!(h.transfer_improvement > 1.0);
+        assert!(h.round_improvement > 1.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! BFS coloring — the paper's selected algorithm (§III-C): start from a
+//! root, give it color 0, alternate per BFS level. On bipartite graphs
+//! (every tree) this yields a proper 2-coloring in O(V+E). On non-bipartite
+//! inputs a level-alternating scheme cannot be proper, so we fall back to
+//! greedy first-fit along the same BFS order, still O(V+E)·Δ worst case,
+//! keeping the function total.
+
+use super::Coloring;
+use crate::graph::Graph;
+use std::collections::VecDeque;
+
+/// BFS 2-coloring from node 0 (also covers disconnected remainders by
+/// restarting at the next unvisited node, each with color 0).
+pub fn bfs_coloring(g: &Graph) -> Coloring {
+    let n = g.node_count();
+    let mut color = vec![usize::MAX; n];
+    let mut bipartite = true;
+
+    for start in 0..n {
+        if color[start] != usize::MAX {
+            continue;
+        }
+        color[start] = 0;
+        let mut queue = VecDeque::from([start]);
+        while let Some(u) = queue.pop_front() {
+            for &(v, _) in g.neighbors(u) {
+                if color[v] == usize::MAX {
+                    color[v] = 1 - color[u];
+                    queue.push_back(v);
+                } else if color[v] == color[u] {
+                    bipartite = false;
+                }
+            }
+        }
+    }
+
+    if bipartite {
+        return Coloring::new(color);
+    }
+
+    // Odd cycle present: redo as greedy first-fit in BFS visit order.
+    let order = bfs_order(g);
+    let mut color = vec![usize::MAX; n];
+    for &u in &order {
+        let mut used: Vec<bool> = vec![false; g.degree(u) + 1];
+        for &(v, _) in g.neighbors(u) {
+            if color[v] != usize::MAX && color[v] < used.len() {
+                used[color[v]] = true;
+            }
+        }
+        color[u] = used.iter().position(|&b| !b).unwrap();
+    }
+    Coloring::new(color)
+}
+
+/// BFS visitation order over all components, starting at node 0.
+pub fn bfs_order(g: &Graph) -> Vec<usize> {
+    let n = g.node_count();
+    let mut seen = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    for start in 0..n {
+        if seen[start] {
+            continue;
+        }
+        seen[start] = true;
+        let mut queue = VecDeque::from([start]);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &(v, _) in g.neighbors(u) {
+                if !seen[v] {
+                    seen[v] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_alternates() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        g.add_edge(2, 3, 1.0);
+        let c = bfs_coloring(&g);
+        assert_eq!(c.assignment(), &[0, 1, 0, 1]);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+    }
+
+    #[test]
+    fn star_two_colors() {
+        let mut g = Graph::new(5);
+        for v in 1..5 {
+            g.add_edge(0, v, 1.0);
+        }
+        let c = bfs_coloring(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+        assert_eq!(c.class(0), vec![0]);
+    }
+
+    #[test]
+    fn even_cycle_two_colors() {
+        let mut g = Graph::new(6);
+        for u in 0..6 {
+            g.add_edge(u, (u + 1) % 6, 1.0);
+        }
+        let c = bfs_coloring(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+    }
+
+    #[test]
+    fn odd_cycle_falls_back_to_proper_three_coloring() {
+        let mut g = Graph::new(5);
+        for u in 0..5 {
+            g.add_edge(u, (u + 1) % 5, 1.0);
+        }
+        let c = bfs_coloring(&g);
+        assert!(c.is_proper(&g), "fallback must still be proper");
+        assert_eq!(c.num_colors(), 3);
+    }
+
+    #[test]
+    fn disconnected_components_each_colored() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        let c = bfs_coloring(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.color_of(0), 0);
+        assert_eq!(c.color_of(2), 0); // new component restarts at color 0
+    }
+
+    #[test]
+    fn isolated_nodes_get_color_zero() {
+        let g = Graph::new(3);
+        let c = bfs_coloring(&g);
+        assert_eq!(c.assignment(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn bfs_order_visits_all_once() {
+        let mut g = Graph::new(5);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 1.0);
+        g.add_edge(3, 4, 1.0);
+        let order = bfs_order(&g);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        assert_eq!(order[0], 0);
+    }
+}

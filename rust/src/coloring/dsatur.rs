@@ -1,0 +1,132 @@
+//! DSatur (Brélaz 1979) — the paper's §III-C "more balanced, fewer colors
+//! on a standard graph" alternative, included for the coloring ablation.
+//!
+//! Repeatedly colors the node with the highest *saturation degree*
+//! (number of distinct colors among its neighbors), breaking ties by
+//! degree then id. O((V+E) log V) with a priority queue.
+
+use super::Coloring;
+use crate::graph::Graph;
+use std::collections::{BTreeSet, BinaryHeap};
+
+#[derive(PartialEq, Eq)]
+struct Entry {
+    saturation: usize,
+    degree: usize,
+    node: usize,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: saturation, then degree, then LOWER id preferred
+        self.saturation
+            .cmp(&other.saturation)
+            .then(self.degree.cmp(&other.degree))
+            .then(other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// DSatur coloring of `g`.
+pub fn dsatur(g: &Graph) -> Coloring {
+    let n = g.node_count();
+    let mut color = vec![usize::MAX; n];
+    let mut neighbor_colors: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    let mut heap = BinaryHeap::new();
+    for u in 0..n {
+        heap.push(Entry { saturation: 0, degree: g.degree(u), node: u });
+    }
+
+    let mut colored = 0;
+    while colored < n {
+        // lazily-deleted heap: skip stale entries
+        let Entry { saturation, node: u, .. } = heap.pop().expect("heap exhausted early");
+        if color[u] != usize::MAX || saturation != neighbor_colors[u].len() {
+            continue;
+        }
+        // smallest color not used by neighbors
+        let mut c = 0;
+        while neighbor_colors[u].contains(&c) {
+            c += 1;
+        }
+        color[u] = c;
+        colored += 1;
+        for &(v, _) in g.neighbors(u) {
+            if color[v] == usize::MAX && neighbor_colors[v].insert(c) {
+                heap.push(Entry {
+                    saturation: neighbor_colors[v].len(),
+                    degree: g.degree(v),
+                    node: v,
+                });
+            }
+        }
+    }
+    Coloring::new(color)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_needs_three() {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        g.add_edge(0, 2, 1.0);
+        let c = dsatur(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 3);
+    }
+
+    #[test]
+    fn bipartite_gets_two() {
+        // complete bipartite K_{3,3}
+        let mut g = Graph::new(6);
+        for u in 0..3 {
+            for v in 3..6 {
+                g.add_edge(u, v, 1.0);
+            }
+        }
+        let c = dsatur(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+    }
+
+    #[test]
+    fn tree_gets_two() {
+        let mut g = Graph::new(7);
+        for v in 1..7 {
+            g.add_edge((v - 1) / 2, v, 1.0); // binary tree
+        }
+        let c = dsatur(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+    }
+
+    #[test]
+    fn complete_graph_needs_n() {
+        let g = crate::graph::topology::complete(5);
+        let c = dsatur(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 5);
+    }
+
+    #[test]
+    fn wheel_graph_optimal() {
+        // odd wheel W_5: hub + 5-cycle needs 4 colors
+        let mut g = Graph::new(6);
+        for u in 0..5 {
+            g.add_edge(u, (u + 1) % 5, 1.0);
+            g.add_edge(u, 5, 1.0);
+        }
+        let c = dsatur(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 4);
+    }
+}

@@ -1,0 +1,130 @@
+//! Degree-ordered greedy colorings: Welsh–Powell and Largest-Degree-First
+//! (the remaining §III-C candidates).
+//!
+//! Both order nodes by non-increasing degree. LDF then runs plain
+//! first-fit down that order; Welsh–Powell instead fills one color class
+//! at a time (assign color c to every not-yet-colored node not adjacent to
+//! the class built so far), which is the classic 1967 formulation.
+
+use super::Coloring;
+use crate::graph::Graph;
+
+/// Nodes sorted by non-increasing degree, ties by ascending id.
+fn degree_order(g: &Graph) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..g.node_count()).collect();
+    order.sort_by(|&a, &b| g.degree(b).cmp(&g.degree(a)).then(a.cmp(&b)));
+    order
+}
+
+/// Largest-Degree-First: first-fit greedy down the degree order.
+pub fn largest_degree_first(g: &Graph) -> Coloring {
+    let n = g.node_count();
+    let mut color = vec![usize::MAX; n];
+    for &u in &degree_order(g) {
+        let mut used = vec![false; g.degree(u) + 1];
+        for &(v, _) in g.neighbors(u) {
+            if color[v] != usize::MAX && color[v] < used.len() {
+                used[color[v]] = true;
+            }
+        }
+        color[u] = used.iter().position(|&b| !b).unwrap();
+    }
+    Coloring::new(color)
+}
+
+/// Welsh–Powell: build maximal independent color classes in degree order.
+pub fn welsh_powell(g: &Graph) -> Coloring {
+    let n = g.node_count();
+    let mut color = vec![usize::MAX; n];
+    let order = degree_order(g);
+    let mut next_color = 0;
+    let mut remaining = n;
+    while remaining > 0 {
+        // greedily extend class `next_color`
+        let mut in_class: Vec<bool> = vec![false; n];
+        for &u in &order {
+            if color[u] != usize::MAX {
+                continue;
+            }
+            let conflict = g.neighbors(u).iter().any(|&(v, _)| in_class[v]);
+            if !conflict {
+                color[u] = next_color;
+                in_class[u] = true;
+                remaining -= 1;
+            }
+        }
+        next_color += 1;
+    }
+    Coloring::new(color)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn petersen() -> Graph {
+        // 3-chromatic, 3-regular classic
+        let mut g = Graph::new(10);
+        for u in 0..5 {
+            g.add_edge(u, (u + 1) % 5, 1.0); // outer cycle
+            g.add_edge(u + 5, (u + 2) % 5 + 5, 1.0); // inner pentagram
+            g.add_edge(u, u + 5, 1.0); // spokes
+        }
+        g
+    }
+
+    #[test]
+    fn ldf_proper_on_petersen() {
+        let g = petersen();
+        let c = largest_degree_first(&g);
+        assert!(c.is_proper(&g));
+        assert!(c.num_colors() <= 4); // greedy bound Δ+1
+    }
+
+    #[test]
+    fn wp_proper_on_petersen() {
+        let g = petersen();
+        let c = welsh_powell(&g);
+        assert!(c.is_proper(&g));
+        assert!(c.num_colors() <= 4);
+    }
+
+    #[test]
+    fn both_two_color_trees() {
+        let mut g = Graph::new(8);
+        for v in 1..8 {
+            g.add_edge((v - 1) / 2, v, 1.0);
+        }
+        for c in [largest_degree_first(&g), welsh_powell(&g)] {
+            assert!(c.is_proper(&g));
+            assert_eq!(c.num_colors(), 2);
+        }
+    }
+
+    #[test]
+    fn wp_classes_are_independent_sets() {
+        let g = petersen();
+        let c = welsh_powell(&g);
+        for class in c.classes() {
+            for (i, &u) in class.iter().enumerate() {
+                for &v in &class[i + 1..] {
+                    assert!(!g.has_edge(u, v), "class contains edge ({u},{v})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn complete_graph_needs_n_colors() {
+        let g = crate::graph::topology::complete(6);
+        assert_eq!(largest_degree_first(&g).num_colors(), 6);
+        assert_eq!(welsh_powell(&g).num_colors(), 6);
+    }
+
+    #[test]
+    fn empty_graph_one_color() {
+        let g = Graph::new(4);
+        assert_eq!(largest_degree_first(&g).num_colors(), 1);
+        assert_eq!(welsh_powell(&g).num_colors(), 1);
+    }
+}

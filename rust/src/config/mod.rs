@@ -1,0 +1,261 @@
+//! Experiment configuration: a TOML-subset parser (`toml` / `serde` are
+//! unavailable offline) plus the typed [`ExperimentConfig`] consumed by the
+//! CLI, benches and examples.
+
+pub mod parser;
+
+pub use parser::{ParseError, TomlValue, parse_toml};
+
+use crate::coloring::ColoringAlgorithm;
+use crate::graph::topology::{TopologyKind, TopologyParams};
+use crate::mst::MstAlgorithm;
+
+/// Full experiment configuration with paper-faithful defaults
+/// (N=10 nodes, 3 subnets, Prim + BFS, §IV hardware model).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Number of learning nodes (paper: 10).
+    pub nodes: usize,
+    /// Number of router subnets (paper: 3).
+    pub subnets: usize,
+    /// Topology family for the underlay.
+    pub topology: TopologyKind,
+    pub topology_params: TopologyParams,
+    /// MST algorithm (paper selects Prim).
+    pub mst: MstAlgorithm,
+    /// Coloring algorithm (paper selects BFS).
+    pub coloring: ColoringAlgorithm,
+    /// RNG seed for topology + netsim jitter.
+    pub seed: u64,
+    /// Link rate within a subnet, MB/s (device <-> its router).
+    pub local_link_mbps: f64,
+    /// Router <-> router backbone rate, MB/s.
+    pub backbone_mbps: f64,
+    /// One-way device->router latency, ms.
+    pub local_latency_ms: f64,
+    /// One-way router->router latency, ms.
+    pub backbone_latency_ms: f64,
+    /// Relative latency jitter (fraction of base, uniform).
+    pub latency_jitter: f64,
+    /// Ping probe payload size in bytes (paper's ping_size).
+    pub ping_size_bytes: u64,
+    /// Number of measurement repetitions to average over.
+    pub repeats: usize,
+    /// Per-transfer protocol overhead fraction (FTP/TCP headers, acks).
+    pub protocol_overhead: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        // Link rates are calibrated in `netsim::testbed` so that flooding
+        // broadcast reproduces the paper's Table III broadcast column
+        // (≈1.8 MB/s for v3s falling to ≈0.77 MB/s for b3) on the complete
+        // topology; see EXPERIMENTS.md §Calibration.
+        ExperimentConfig {
+            nodes: 10,
+            subnets: 3,
+            topology: TopologyKind::Complete,
+            topology_params: TopologyParams::default(),
+            mst: MstAlgorithm::Prim,
+            coloring: ColoringAlgorithm::Bfs,
+            seed: 2025,
+            local_link_mbps: 22.0,
+            backbone_mbps: 22.0,
+            local_latency_ms: 0.4,
+            backbone_latency_ms: 12.0,
+            latency_jitter: 0.08,
+            ping_size_bytes: 56,
+            repeats: 5,
+            protocol_overhead: 0.04,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file. Unknown keys are rejected so typos in
+    /// experiment configs fail loudly.
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.to_string(), e.to_string()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
+        let table = parse_toml(text)?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, value) in table.iter() {
+            cfg.apply(key, value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, key: &str, value: &TomlValue) -> Result<(), ConfigError> {
+        let bad = |exp: &str| ConfigError::Type(key.to_string(), exp.to_string());
+        match key {
+            "nodes" => self.nodes = value.as_int().ok_or_else(|| bad("integer"))? as usize,
+            "subnets" => self.subnets = value.as_int().ok_or_else(|| bad("integer"))? as usize,
+            "seed" => self.seed = value.as_int().ok_or_else(|| bad("integer"))? as u64,
+            "repeats" => self.repeats = value.as_int().ok_or_else(|| bad("integer"))? as usize,
+            "topology" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.topology = TopologyKind::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "mst" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.mst = MstAlgorithm::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "coloring" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.coloring = ColoringAlgorithm::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "er_p" => self.topology_params.er_p = value.as_float().ok_or_else(|| bad("float"))?,
+            "ws_k" => {
+                self.topology_params.ws_k = value.as_int().ok_or_else(|| bad("integer"))? as usize
+            }
+            "ws_beta" => {
+                self.topology_params.ws_beta = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "ba_m" => {
+                self.topology_params.ba_m = value.as_int().ok_or_else(|| bad("integer"))? as usize
+            }
+            "local_link_mbps" => {
+                self.local_link_mbps = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "backbone_mbps" => self.backbone_mbps = value.as_float().ok_or_else(|| bad("float"))?,
+            "local_latency_ms" => {
+                self.local_latency_ms = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "backbone_latency_ms" => {
+                self.backbone_latency_ms = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "latency_jitter" => {
+                self.latency_jitter = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "ping_size_bytes" => {
+                self.ping_size_bytes = value.as_int().ok_or_else(|| bad("integer"))? as u64
+            }
+            "protocol_overhead" => {
+                self.protocol_overhead = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            other => return Err(ConfigError::UnknownKey(other.to_string())),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let reject = |key: &str, why: &str| Err(ConfigError::Value(key.into(), why.into()));
+        if self.nodes < 2 {
+            return reject("nodes", "need >= 2");
+        }
+        if self.subnets == 0 || self.subnets > self.nodes {
+            return reject("subnets", "need 1 <= subnets <= nodes");
+        }
+        if self.local_link_mbps <= 0.0 || self.backbone_mbps <= 0.0 {
+            return reject("link rates", "must be positive");
+        }
+        if !(0.0..1.0).contains(&self.latency_jitter) {
+            return reject("latency_jitter", "must be in [0,1)");
+        }
+        if !(0.0..1.0).contains(&self.protocol_overhead) {
+            return reject("protocol_overhead", "must be in [0,1)");
+        }
+        if self.ping_size_bytes == 0 {
+            return reject("ping_size_bytes", "must be positive");
+        }
+        if self.repeats == 0 {
+            return reject("repeats", "must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("cannot read {0}: {1}")]
+    Io(String, String),
+    #[error("parse error: {0}")]
+    Parse(#[from] ParseError),
+    #[error("unknown config key {0:?}")]
+    UnknownKey(String),
+    #[error("key {0:?}: expected {1}")]
+    Type(String, String),
+    #[error("key {0:?}: invalid value {1:?}")]
+    Value(String, String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.nodes, 10);
+        assert_eq!(cfg.subnets, 3);
+        assert_eq!(cfg.mst, MstAlgorithm::Prim);
+        assert_eq!(cfg.coloring, ColoringAlgorithm::Bfs);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn full_toml_roundtrip() {
+        let text = r#"
+# experiment: watts-strogatz sweep
+nodes = 20
+subnets = 4
+topology = "ws"
+ws_k = 6
+ws_beta = 0.25
+mst = "kruskal"
+coloring = "dsatur"
+seed = 7
+local_link_mbps = 50.0
+backbone_latency_ms = 8.5
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.nodes, 20);
+        assert_eq!(cfg.subnets, 4);
+        assert_eq!(cfg.topology, TopologyKind::WattsStrogatz);
+        assert_eq!(cfg.topology_params.ws_k, 6);
+        assert_eq!(cfg.topology_params.ws_beta, 0.25);
+        assert_eq!(cfg.mst, MstAlgorithm::Kruskal);
+        assert_eq!(cfg.coloring, ColoringAlgorithm::DSatur);
+        assert_eq!(cfg.local_link_mbps, 50.0);
+        assert_eq!(cfg.backbone_latency_ms, 8.5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = ExperimentConfig::from_toml_str("bogus = 3").unwrap_err();
+        assert!(matches!(err, ConfigError::UnknownKey(k) if k == "bogus"));
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        let err = ExperimentConfig::from_toml_str("nodes = \"ten\"").unwrap_err();
+        assert!(matches!(err, ConfigError::Type(..)));
+    }
+
+    #[test]
+    fn invalid_topology_value_rejected() {
+        let err = ExperimentConfig::from_toml_str("topology = \"torus\"").unwrap_err();
+        assert!(matches!(err, ConfigError::Value(..)));
+    }
+
+    #[test]
+    fn semantic_validation_fires() {
+        assert!(ExperimentConfig::from_toml_str("nodes = 1").is_err());
+        assert!(ExperimentConfig::from_toml_str("subnets = 99").is_err());
+        assert!(ExperimentConfig::from_toml_str("latency_jitter = 1.5").is_err());
+    }
+
+    #[test]
+    fn int_accepted_for_float_keys() {
+        let cfg = ExperimentConfig::from_toml_str("local_link_mbps = 100").unwrap();
+        assert_eq!(cfg.local_link_mbps, 100.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! A small TOML-subset parser (flat `key = value` documents with comments;
+//! values: integers, floats, booleans, strings, and homogeneous arrays).
+//! Built in-repo because no TOML/serde crate is available offline. The
+//! subset covers everything our experiment configs need; nesting tables is
+//! deliberately unsupported (configs stay flat and greppable).
+
+use std::collections::BTreeMap;
+
+/// Parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`x = 3` where 3.0 is meant).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ParseError {
+    #[error("line {0}: missing '=' separator")]
+    MissingEquals(usize),
+    #[error("line {0}: empty key")]
+    EmptyKey(usize),
+    #[error("line {0}: duplicate key {1:?}")]
+    DuplicateKey(usize, String),
+    #[error("line {0}: cannot parse value {1:?}")]
+    BadValue(usize, String),
+    #[error("line {0}: unterminated string")]
+    UnterminatedString(usize),
+    #[error("line {0}: table headers are not supported in this subset")]
+    TableUnsupported(usize),
+}
+
+/// Parse a flat TOML document into an ordered key→value map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>, ParseError> {
+    let mut out = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(ParseError::TableUnsupported(lineno));
+        }
+        let eq = line.find('=').ok_or(ParseError::MissingEquals(lineno))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError::EmptyKey(lineno));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        if out.insert(key.to_string(), value).is_some() {
+            return Err(ParseError::DuplicateKey(lineno, key.to_string()));
+        }
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment, respecting `"..."` string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (idx, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, ParseError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(ParseError::BadValue(lineno, s.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or(ParseError::UnterminatedString(lineno))?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(ParseError::BadValue(lineno, s.to_string()));
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(ParseError::BadValue(lineno, s.to_string()));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // ints before floats so "42" stays an Int
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(ParseError::BadValue(lineno, s.to_string()))
+}
+
+/// Split on commas that are outside string literals (arrays of strings).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut current = String::new();
+    let mut in_str = false;
+    for ch in s.chars() {
+        match ch {
+            '"' => {
+                in_str = !in_str;
+                current.push(ch);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut current));
+            }
+            _ => current.push(ch),
+        }
+    }
+    parts.push(current);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let t = parse_toml("a = 1\nb = 2.5\nc = true\nd = \"hi\"").unwrap();
+        assert_eq!(t["a"], TomlValue::Int(1));
+        assert_eq!(t["b"], TomlValue::Float(2.5));
+        assert_eq!(t["c"], TomlValue::Bool(true));
+        assert_eq!(t["d"], TomlValue::Str("hi".into()));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let t = parse_toml("# header\n\na = 1   # trailing\n").unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t["a"], TomlValue::Int(1));
+    }
+
+    #[test]
+    fn hash_inside_string_not_a_comment() {
+        let t = parse_toml("s = \"a#b\"").unwrap();
+        assert_eq!(t["s"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn negative_and_underscored_numbers() {
+        let t = parse_toml("a = -3\nb = 1_000\nc = -2.5e2").unwrap();
+        assert_eq!(t["a"], TomlValue::Int(-3));
+        assert_eq!(t["b"], TomlValue::Int(1000));
+        assert_eq!(t["c"], TomlValue::Float(-250.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse_toml("xs = [1, 2, 3]\nss = [\"a\", \"b,c\"]").unwrap();
+        assert_eq!(
+            t["xs"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(
+            t["ss"],
+            TomlValue::Array(vec![TomlValue::Str("a".into()), TomlValue::Str("b,c".into())])
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(parse_toml("novalue").unwrap_err(), ParseError::MissingEquals(1));
+        assert_eq!(parse_toml(" = 3").unwrap_err(), ParseError::EmptyKey(1));
+        assert_eq!(
+            parse_toml("a = 1\na = 2").unwrap_err(),
+            ParseError::DuplicateKey(2, "a".into())
+        );
+        assert_eq!(
+            parse_toml("a = \"open").unwrap_err(),
+            ParseError::UnterminatedString(1)
+        );
+        assert_eq!(parse_toml("[table]").unwrap_err(), ParseError::TableUnsupported(1));
+        assert!(matches!(parse_toml("a = wat").unwrap_err(), ParseError::BadValue(1, _)));
+    }
+
+    #[test]
+    fn as_float_accepts_ints() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+        assert_eq!(TomlValue::Str("x".into()).as_float(), None);
+    }
+}

@@ -1,0 +1,187 @@
+//! The flooding-broadcast baseline (paper §V compares MOSGU against
+//! "conventional flooding broadcast" [32]).
+//!
+//! Two modes:
+//!
+//! * [`BroadcastMode::DirectPush`] — every node pushes its model to every
+//!   overlay neighbor simultaneously. On the paper's complete overlay this
+//!   is the baseline of Tables III–V: N·(N−1) concurrent transfers, no
+//!   scheduling, maximal contention.
+//! * [`BroadcastMode::Flood`] — classic flooding with duplicate
+//!   suppression at receivers: a node re-forwards every *new* model to all
+//!   neighbors except the source. Strictly worse on dense overlays (the
+//!   redundant copies still burn bandwidth); included for the ablation
+//!   bench.
+
+use crate::graph::{Graph, NodeId};
+use crate::metrics::RoundMetrics;
+use crate::netsim::testbed::Testbed;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BroadcastMode {
+    DirectPush,
+    Flood,
+}
+
+/// Tag layout for flow records: owner in the low 32 bits, sender above —
+/// lets metrics recover which model a flow carried.
+fn tag(owner: NodeId, from: NodeId) -> u64 {
+    ((from as u64) << 32) | owner as u64
+}
+
+pub fn tag_owner(tag: u64) -> NodeId {
+    (tag & 0xffff_ffff) as NodeId
+}
+
+pub fn tag_sender(tag: u64) -> NodeId {
+    (tag >> 32) as NodeId
+}
+
+/// Run one broadcast communication round of `model_mb`-sized models over
+/// the overlay `structure`, timed on the testbed's simulator.
+pub fn run_broadcast_round(
+    testbed: &Testbed,
+    structure: &Graph,
+    model_mb: f64,
+    mode: BroadcastMode,
+    seed: u64,
+) -> RoundMetrics {
+    let n = structure.node_count();
+    assert!(structure.is_connected(), "broadcast needs a connected overlay");
+    let mut sim = testbed.netsim(seed);
+    // holds[u] = set of model owners node u has
+    let mut holds: Vec<HashSet<NodeId>> = (0..n).map(|u| HashSet::from([u])).collect();
+
+    // t=0: every node pushes its own model to every overlay neighbor
+    for u in 0..n {
+        for v in structure.neighbor_ids(u) {
+            sim.start_flow(u, v, testbed.route(u, v), model_mb, tag(u, u));
+        }
+    }
+
+    match mode {
+        BroadcastMode::DirectPush => {
+            sim.run_until_idle();
+            for rec in sim.completed() {
+                holds[rec.dst].insert(tag_owner(rec.tag));
+            }
+        }
+        BroadcastMode::Flood => {
+            // reactive: forward each newly received model to all neighbors
+            // except the one it came from
+            let mut cursor = 0usize;
+            loop {
+                let Some(eta) = sim.next_completion_eta() else { break };
+                sim.advance_to(eta);
+                // apply newly completed deliveries in deterministic order
+                let mut fresh: Vec<(NodeId, NodeId, NodeId)> = Vec::new(); // (dst, src, owner)
+                while cursor < sim.completed().len() {
+                    let rec = sim.completed()[cursor].clone();
+                    cursor += 1;
+                    fresh.push((rec.dst, rec.src, tag_owner(rec.tag)));
+                }
+                fresh.sort_unstable();
+                for (dst, src, owner) in fresh {
+                    if holds[dst].insert(owner) {
+                        for v in structure.neighbor_ids(dst) {
+                            if v != src && v != owner {
+                                sim.start_flow(dst, v, testbed.route(dst, v), model_mb, tag(owner, dst));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // dissemination completeness: on a connected overlay both modes must
+    // deliver everything (DirectPush only on complete overlays)
+    if mode == BroadcastMode::Flood || is_complete_graph(structure) {
+        debug_assert!(
+            holds.iter().all(|h| h.len() == n),
+            "broadcast round left nodes without models"
+        );
+    }
+
+    let total = sim.now();
+    RoundMetrics { transfers: sim.take_completed(), total_time_s: total, exchange_time_s: total, slots: 0 }
+}
+
+fn is_complete_graph(g: &Graph) -> bool {
+    let n = g.node_count();
+    g.edge_count() == n * (n - 1) / 2
+}
+
+/// Convenience: all-to-all direct push on the complete overlay — the exact
+/// baseline of the paper's tables.
+pub fn paper_baseline(testbed: &Testbed, model_mb: f64, seed: u64) -> RoundMetrics {
+    let overlay = crate::graph::topology::complete(testbed.node_count());
+    run_broadcast_round(testbed, &overlay, model_mb, BroadcastMode::DirectPush, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn tb() -> Testbed {
+        Testbed::new(&ExperimentConfig { latency_jitter: 0.0, ..Default::default() })
+    }
+
+    #[test]
+    fn direct_push_transfer_count() {
+        let m = paper_baseline(&tb(), 11.6, 1);
+        assert_eq!(m.transfer_count(), 90, "N(N-1) transfers");
+        assert_eq!(m.slots, 0);
+        assert!(m.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn direct_push_congestion_lowers_bandwidth() {
+        let m = paper_baseline(&tb(), 11.6, 1);
+        // ~9-way uplink sharing on 11 MB/s links => well under 3 MB/s each
+        assert!(m.bandwidth_mbps() < 3.0, "bw={}", m.bandwidth_mbps());
+        assert!(m.bandwidth_mbps() > 0.2);
+    }
+
+    #[test]
+    fn bigger_models_lower_broadcast_bandwidth() {
+        // paper Table III broadcast column: bandwidth falls with model size
+        let small = paper_baseline(&tb(), 11.6, 1).bandwidth_mbps();
+        let large = paper_baseline(&tb(), 48.0, 1).bandwidth_mbps();
+        assert!(large < small, "large {large} should be slower than small {small}");
+    }
+
+    #[test]
+    fn flood_on_sparse_overlay_reaches_everyone() {
+        let mut overlay = Graph::new(10);
+        for u in 0..9 {
+            overlay.add_edge(u, u + 1, 1.0); // path overlay
+        }
+        let m = run_broadcast_round(&tb(), &overlay, 5.0, BroadcastMode::Flood, 1);
+        // path flooding: each of the 10 models crosses each of the 9 edges once
+        // => at least 90 transfers; duplicate-suppression keeps it finite
+        assert!(m.transfer_count() >= 90, "{}", m.transfer_count());
+        assert!(m.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn flood_on_complete_overlay_is_much_more_wasteful() {
+        let overlay = crate::graph::topology::complete(6);
+        // use a smaller testbed for speed
+        let cfg = ExperimentConfig { nodes: 6, latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let direct = run_broadcast_round(&tb, &overlay, 2.0, BroadcastMode::DirectPush, 1);
+        let flood = run_broadcast_round(&tb, &overlay, 2.0, BroadcastMode::Flood, 1);
+        assert!(flood.transfer_count() > 2 * direct.transfer_count());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = paper_baseline(&tb(), 14.0, 9);
+        let b = paper_baseline(&tb(), 14.0, 9);
+        assert_eq!(a.transfer_count(), b.transfer_count());
+        assert!((a.total_time_s - b.total_time_s).abs() < 1e-12);
+    }
+}

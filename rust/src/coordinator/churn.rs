@@ -1,0 +1,228 @@
+//! Dynamic membership ("churn") driver — the paper's §III-A requirement:
+//! "From the second round onward, the moderator only needs to recompute
+//! all graph-related computations and send information to affected nodes
+//! when there are changes in the network, such as nodes joining or
+//! leaving."
+//!
+//! The driver runs a sequence of communication rounds over the testbed;
+//! between rounds, scripted [`ChurnEvent`]s remove or restore devices. On
+//! a membership change the moderator epoch bumps, the MST/coloring/slot
+//! schedule are recomputed over the surviving overlay, and the round runs
+//! on the new tree; on quiet rounds the cached schedule is reused.
+
+use super::gossip::GossipState;
+use super::moderator::{Moderator, ScheduleBundle};
+use crate::config::ExperimentConfig;
+use crate::graph::{Graph, NodeId};
+use crate::metrics::RoundMetrics;
+use crate::netsim::testbed::Testbed;
+use anyhow::Result;
+
+/// A scripted membership change applied before round `round`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// Device (original id) leaves before the given round.
+    Leave { round: u64, node: NodeId },
+    /// Previously-left device rejoins before the given round.
+    Rejoin { round: u64, node: NodeId },
+}
+
+/// Per-round report of the churn experiment.
+#[derive(Debug, Clone)]
+pub struct ChurnRoundReport {
+    pub round: u64,
+    /// original-id list of active members this round
+    pub active: Vec<NodeId>,
+    /// whether the moderator had to recompute the schedule
+    pub recomputed: bool,
+    pub metrics: RoundMetrics,
+}
+
+/// Runs `rounds` MOSGU communication rounds over the config's testbed,
+/// applying `events` between rounds. Returns per-round reports.
+///
+/// The moderator recomputes iff membership changed — asserted by the
+/// report's `recomputed` flag, which integration tests pin.
+pub fn run_churn_experiment(
+    cfg: &ExperimentConfig,
+    model_mb: f64,
+    rounds: u64,
+    events: &[ChurnEvent],
+) -> Result<Vec<ChurnRoundReport>> {
+    let testbed = Testbed::new(cfg);
+    let full_overlay = crate::graph::topology::complete(cfg.nodes);
+    let full_costs = testbed.overlay_costs(&full_overlay);
+
+    let mut active: Vec<bool> = vec![true; cfg.nodes];
+    let mut moderator = Moderator::new(0, cfg.nodes, cfg.mst, cfg.coloring);
+    let mut bundle: Option<(ScheduleBundle, Vec<NodeId>)> = None;
+    let mut reports = Vec::new();
+
+    for round in 0..rounds {
+        // apply scripted events for this round
+        let mut changed = bundle.is_none();
+        for ev in events {
+            match *ev {
+                ChurnEvent::Leave { round: r, node } if r == round => {
+                    anyhow::ensure!(active[node], "node {node} left twice");
+                    active[node] = false;
+                    changed = true;
+                }
+                ChurnEvent::Rejoin { round: r, node } if r == round => {
+                    anyhow::ensure!(!active[node], "node {node} rejoined while active");
+                    active[node] = true;
+                    changed = true;
+                }
+                _ => {}
+            }
+        }
+        let members: Vec<NodeId> =
+            (0..cfg.nodes).filter(|&u| active[u]).collect();
+        anyhow::ensure!(members.len() >= 2, "round {round}: fewer than 2 members");
+
+        if changed {
+            // membership epoch bump: fresh reports over the survivors
+            moderator.membership_changed(members.len());
+            let (sub_costs, map) = full_costs.induced(&members);
+            for u in 0..sub_costs.node_count() {
+                let peers: Vec<(usize, f64)> =
+                    sub_costs.neighbors(u).iter().map(|&(v, w)| (v, w)).collect();
+                moderator.submit_report(u, &peers);
+            }
+            let b = moderator.compute_schedule(model_mb, cfg.ping_size_bytes, 1)?.clone();
+            bundle = Some((b, map));
+        }
+        let recomputed = changed;
+        debug_assert!(!moderator.needs_recompute());
+        let (b, map) = bundle.as_ref().unwrap();
+
+        // run a timed round over the (relabeled) tree; routes use original ids
+        let metrics = run_round_on_tree(&testbed, &b.tree, &b.schedule, map, model_mb, cfg.seed ^ round)?;
+        reports.push(ChurnRoundReport { round, active: map.clone(), recomputed, metrics });
+    }
+    Ok(reports)
+}
+
+/// One timed MOSGU round over an arbitrary relabeled tree (`map[new] =
+/// original device id` for testbed routing).
+fn run_round_on_tree(
+    testbed: &Testbed,
+    tree: &Graph,
+    schedule: &super::schedule::Schedule,
+    map: &[NodeId],
+    model_mb: f64,
+    seed: u64,
+) -> Result<RoundMetrics> {
+    let mut sim = testbed.netsim(seed);
+    let mut state = GossipState::new(tree.clone(), 0);
+    let n = tree.node_count();
+    let max_slots = 8 * n + 64;
+    let mut slots_used = 0;
+    for slot in 0..max_slots {
+        if state.is_complete() {
+            break;
+        }
+        slots_used = slot + 1;
+        let planned = state.plan_slot(&schedule.transmitters(slot));
+        if planned.is_empty() {
+            continue;
+        }
+        for tx in &planned {
+            for &to in &tx.recipients {
+                let (src, dst) = (map[tx.from], map[to]);
+                let tag = ((src as u64) << 32) | map[tx.entry.key.owner] as u64;
+                sim.start_flow(src, dst, testbed.route(src, dst), model_mb, tag);
+            }
+        }
+        sim.run_until_idle();
+        for s in GossipState::sorted_sends(&planned) {
+            state.deliver(s);
+        }
+    }
+    anyhow::ensure!(state.is_complete(), "churn round incomplete");
+    let total = sim.now();
+    let transfers = sim.take_completed();
+    let exchange = transfers
+        .iter()
+        .filter(|r| super::broadcast::tag_owner(r.tag) == super::broadcast::tag_sender(r.tag))
+        .map(|r| r.end)
+        .fold(0.0, f64::max);
+    Ok(RoundMetrics { transfers, total_time_s: total, exchange_time_s: exchange, slots: slots_used })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn quiet_rounds_reuse_schedule() {
+        let reports = run_churn_experiment(&cfg(), 5.0, 4, &[]).unwrap();
+        assert_eq!(reports.len(), 4);
+        assert!(reports[0].recomputed, "first round always computes");
+        for r in &reports[1..] {
+            assert!(!r.recomputed, "round {}: no change, no recompute", r.round);
+            assert_eq!(r.active.len(), 10);
+        }
+    }
+
+    #[test]
+    fn leave_triggers_recompute_and_smaller_tree() {
+        let events = [ChurnEvent::Leave { round: 2, node: 3 }];
+        let reports = run_churn_experiment(&cfg(), 5.0, 4, &events).unwrap();
+        assert!(!reports[1].recomputed);
+        assert!(reports[2].recomputed, "leave must recompute");
+        assert_eq!(reports[2].active.len(), 9);
+        assert!(!reports[2].active.contains(&3));
+        // a 9-node round moves 9*8 copies
+        assert_eq!(reports[2].metrics.transfer_count(), 72);
+        assert!(!reports[3].recomputed, "stable again");
+    }
+
+    #[test]
+    fn rejoin_restores_full_membership() {
+        let events = [
+            ChurnEvent::Leave { round: 1, node: 7 },
+            ChurnEvent::Rejoin { round: 3, node: 7 },
+        ];
+        let reports = run_churn_experiment(&cfg(), 5.0, 5, &events).unwrap();
+        assert_eq!(reports[1].active.len(), 9);
+        assert!(reports[3].recomputed);
+        assert_eq!(reports[3].active.len(), 10);
+        assert_eq!(reports[3].metrics.transfer_count(), 90);
+    }
+
+    #[test]
+    fn multiple_leaves_same_round() {
+        let events = [
+            ChurnEvent::Leave { round: 1, node: 0 },
+            ChurnEvent::Leave { round: 1, node: 5 },
+        ];
+        let reports = run_churn_experiment(&cfg(), 5.0, 2, &events).unwrap();
+        assert_eq!(reports[1].active.len(), 8);
+        assert_eq!(reports[1].metrics.transfer_count(), 56);
+    }
+
+    #[test]
+    fn double_leave_rejected() {
+        let events = [
+            ChurnEvent::Leave { round: 1, node: 2 },
+            ChurnEvent::Leave { round: 2, node: 2 },
+        ];
+        assert!(run_churn_experiment(&cfg(), 5.0, 3, &events).is_err());
+    }
+
+    #[test]
+    fn churn_rounds_remain_efficient() {
+        // even after churn, the gossip round beats broadcast on bandwidth
+        let events = [ChurnEvent::Leave { round: 1, node: 4 }];
+        let reports = run_churn_experiment(&cfg(), 14.0, 2, &events).unwrap();
+        let session =
+            crate::coordinator::session::GossipSession::new(&cfg()).unwrap();
+        let b = session.run_broadcast_round(14.0, 1);
+        assert!(reports[1].metrics.bandwidth_mbps() > 2.0 * b.bandwidth_mbps());
+    }
+}

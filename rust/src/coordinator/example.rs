@@ -1,0 +1,156 @@
+//! The paper's running example (Fig 1, Fig 2, Table I): a 10-node graph
+//! labeled A..K (skipping J, as the paper does) whose Prim MST is the tree
+//!
+//! ```text
+//!        A - H - F - E
+//!                |
+//!                G - K - I - B - C - D
+//! ```
+//!
+//! with BFS 2-coloring (root A): blue = {A, B, D, F, K}, red = {C, E, G,
+//! H, I}. Table I traces one gossip round on this tree starting with the
+//! red slot; `tests/table1_trace.rs` replays it move for move.
+
+use crate::coloring::{bfs_coloring, Coloring};
+use crate::graph::{Graph, NodeId};
+
+/// Node indices for the labels the paper uses.
+pub const A: NodeId = 0;
+pub const B: NodeId = 1;
+pub const C: NodeId = 2;
+pub const D: NodeId = 3;
+pub const E: NodeId = 4;
+pub const F: NodeId = 5;
+pub const G: NodeId = 6;
+pub const H: NodeId = 7;
+pub const I: NodeId = 8;
+pub const K: NodeId = 9;
+
+/// Label of a node in the example (A..K skipping J).
+pub fn label(u: NodeId) -> char {
+    ['A', 'B', 'C', 'D', 'E', 'F', 'G', 'H', 'I', 'K'][u]
+}
+
+/// Parse a label back to its node id.
+pub fn node_of(label: char) -> Option<NodeId> {
+    "ABCDEFGHIK".find(label)
+}
+
+/// The example's weighted overlay graph. Edge weights are ping costs chosen
+/// so that Prim's algorithm yields exactly the paper's MST; the extra
+/// (non-MST) edges are the "redundant connections" Fig 2 prunes.
+pub fn paper_example_graph() -> Graph {
+    let mut g = Graph::new(10);
+    // MST edges (cheap paths)
+    g.add_edge(A, H, 1.0);
+    g.add_edge(H, F, 1.2);
+    g.add_edge(F, E, 1.1);
+    g.add_edge(F, G, 1.3);
+    g.add_edge(G, K, 1.0);
+    g.add_edge(K, I, 1.2);
+    g.add_edge(I, B, 1.1);
+    g.add_edge(B, C, 1.0);
+    g.add_edge(C, D, 1.3);
+    // redundant edges removed by the MST (§III-B "eliminate unnecessary
+    // edges or connections")
+    g.add_edge(A, B, 4.0);
+    g.add_edge(A, E, 3.5);
+    g.add_edge(D, K, 5.0);
+    g.add_edge(E, G, 2.8);
+    g.add_edge(H, I, 3.2);
+    g.add_edge(C, I, 2.6);
+    g.add_edge(D, G, 4.4);
+    g.add_edge(B, F, 3.9);
+    g
+}
+
+/// The MST edge set the paper's Table I gossips over.
+pub fn paper_example_mst_edges() -> Vec<(NodeId, NodeId)> {
+    vec![
+        (A, H),
+        (H, F),
+        (F, E),
+        (F, G),
+        (G, K),
+        (K, I),
+        (I, B),
+        (B, C),
+        (C, D),
+    ]
+}
+
+/// The MST as a graph (weights from the example graph).
+pub fn paper_example_mst() -> Graph {
+    let g = paper_example_graph();
+    let mut t = Graph::new(10);
+    for (u, v) in paper_example_mst_edges() {
+        t.add_edge(u, v, g.weight(u, v).unwrap());
+    }
+    t
+}
+
+/// BFS 2-coloring of the MST rooted at A: color 0 = blue {A,B,D,F,K},
+/// color 1 = red {C,E,G,H,I}. The paper's Table I starts with red.
+pub fn paper_example_coloring() -> Coloring {
+    bfs_coloring(&paper_example_mst())
+}
+
+/// The color index that transmits first in Table I (red).
+pub const RED: usize = 1;
+/// The silent-first color (blue).
+pub const BLUE: usize = 0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mst::prim;
+
+    #[test]
+    fn labels_roundtrip() {
+        for u in 0..10 {
+            assert_eq!(node_of(label(u)), Some(u));
+        }
+        assert_eq!(node_of('J'), None);
+    }
+
+    #[test]
+    fn example_graph_is_connected_with_redundancy() {
+        let g = paper_example_graph();
+        assert!(g.is_connected());
+        assert!(g.edge_count() > 9, "must contain redundant edges to prune");
+    }
+
+    #[test]
+    fn prim_recovers_paper_mst() {
+        let t = prim(&paper_example_graph()).unwrap();
+        for (u, v) in paper_example_mst_edges() {
+            assert!(t.has_edge(u, v), "missing ({},{})", label(u), label(v));
+        }
+        assert_eq!(t.edge_count(), 9);
+    }
+
+    #[test]
+    fn coloring_matches_paper_classes() {
+        let c = paper_example_coloring();
+        let red: Vec<char> = c.class(RED).into_iter().map(label).collect();
+        let blue: Vec<char> = c.class(BLUE).into_iter().map(label).collect();
+        assert_eq!(red, vec!['C', 'E', 'G', 'H', 'I']);
+        assert_eq!(blue, vec!['A', 'B', 'D', 'F', 'K']);
+    }
+
+    #[test]
+    fn mst_is_tree_and_proper() {
+        let t = paper_example_mst();
+        assert!(t.is_tree());
+        assert!(paper_example_coloring().is_proper(&t));
+    }
+
+    #[test]
+    fn degree_one_nodes_match_paper() {
+        // Table I's degree-1 observation applies to A, D, E (leaves)
+        let t = paper_example_mst();
+        let leaves: Vec<char> =
+            (0..10).filter(|&u| t.degree(u) == 1).map(label).collect();
+        assert_eq!(leaves, vec!['A', 'D', 'E']);
+    }
+}

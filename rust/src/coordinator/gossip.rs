@@ -1,0 +1,390 @@
+//! The MOSGU gossip engine (paper §III-D).
+//!
+//! [`GossipState`] holds the protocol logic — who sends which queue entry
+//! to whom in a slot, and how deliveries update the recipients' queues.
+//! Two drivers share it:
+//!
+//! * [`run_logical_round`] — untimed slot-by-slot execution producing the
+//!   exact queue trace of the paper's Table I;
+//! * `session::run_mosgu_round` — the same protocol driven through the
+//!   discrete-event network simulator, yielding the timing metrics of
+//!   Tables III–V.
+
+use super::queue::{GossipQueue, ModelKey, QueueEntry};
+use super::schedule::Schedule;
+use crate::graph::{Graph, NodeId};
+
+/// One delivered copy: `from` forwards model `key` to `to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Send {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub key: ModelKey,
+}
+
+/// One transmitter's planned slot activity: the popped queue entry and the
+/// neighbors it addresses. A network failure re-queues the *entry* (all
+/// recipients retried next turn; duplicate deliveries are deduplicated at
+/// the receiver).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedTx {
+    pub from: NodeId,
+    pub entry: QueueEntry,
+    pub recipients: Vec<NodeId>,
+}
+
+impl PlannedTx {
+    pub fn sends(&self) -> impl Iterator<Item = Send> + '_ {
+        self.recipients.iter().map(move |&to| Send { from: self.from, to, key: self.entry.key })
+    }
+}
+
+/// Protocol state for one communication round over a gossip tree.
+#[derive(Debug, Clone)]
+pub struct GossipState {
+    tree: Graph,
+    queues: Vec<GossipQueue>,
+    round: u64,
+}
+
+impl GossipState {
+    /// Start a round: every node seeds its locally trained model.
+    pub fn new(tree: Graph, round: u64) -> Self {
+        assert!(tree.is_tree(), "gossip graph must be the moderator's MST");
+        let n = tree.node_count();
+        let mut queues: Vec<GossipQueue> = (0..n).map(GossipQueue::new).collect();
+        for q in queues.iter_mut() {
+            q.seed_own(round);
+        }
+        GossipState { tree, queues, round }
+    }
+
+    pub fn tree(&self) -> &Graph {
+        &self.tree
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn queue(&self, u: NodeId) -> &GossipQueue {
+        &self.queues[u]
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.tree.node_count()
+    }
+
+    /// All nodes hold all models ⇒ the communication round is complete.
+    pub fn is_complete(&self) -> bool {
+        let n = self.tree.node_count();
+        self.queues.iter().all(|q| q.held_count() == n)
+    }
+
+    /// Plan the transmissions of one slot for the given transmitting class.
+    ///
+    /// Each transmitter pops its oldest entry and addresses every tree
+    /// neighbor except the entry's source. Entries are consumed here;
+    /// failed transmissions go back via [`GossipState::requeue`].
+    pub fn plan_slot(&mut self, transmitters: &[NodeId]) -> Vec<PlannedTx> {
+        let mut planned = Vec::new();
+        for &u in transmitters {
+            let Some(entry) = self.queues[u].pop_oldest() else {
+                continue; // nothing pending — node idles this slot
+            };
+            let recipients: Vec<NodeId> = self
+                .tree
+                .neighbor_ids(u)
+                .into_iter()
+                .filter(|&v| Some(v) != entry.received_from)
+                .collect();
+            debug_assert!(
+                !recipients.is_empty() || entry.received_from.is_some(),
+                "own model must always have a recipient"
+            );
+            planned.push(PlannedTx { from: u, entry, recipients });
+        }
+        planned
+    }
+
+    /// Apply a successful delivery. Returns `true` if the model was new to
+    /// the recipient (false = deduplicated retransmission). Degree-1
+    /// recipients hold but never re-forward (§III-D).
+    pub fn deliver(&mut self, send: Send) -> bool {
+        let enqueue = self.tree.degree(send.to) > 1;
+        self.queues[send.to].receive(send.key, send.from, enqueue)
+    }
+
+    /// Re-queue an entry whose transmission failed (network disruption),
+    /// at the front, so the node retries on its next turn.
+    pub fn requeue(&mut self, tx: &PlannedTx) {
+        self.queues[tx.from].push_front(tx.entry);
+    }
+
+    /// Deterministic delivery order within a slot: ascending sender id,
+    /// then recipient id — reproduces the paper's Table I strings.
+    pub fn sorted_sends(planned: &[PlannedTx]) -> Vec<Send> {
+        let mut sends: Vec<Send> = planned.iter().flat_map(|tx| tx.sends()).collect();
+        sends.sort_by_key(|s| (s.from, s.to));
+        sends
+    }
+
+    /// Render a node's queue like Table I: concatenated owner labels in
+    /// reception order (e.g. "FEGH" for node F).
+    pub fn held_string(&self, u: NodeId, label: impl Fn(NodeId) -> char) -> String {
+        self.queues[u].held_order().iter().map(|k| label(k.owner)).collect()
+    }
+}
+
+/// Outcome of one untimed slot.
+#[derive(Debug, Clone)]
+pub struct SlotTrace {
+    pub slot: usize,
+    pub color: usize,
+    pub sends: Vec<Send>,
+}
+
+/// Full untimed round trace (the paper's Table I).
+#[derive(Debug, Clone)]
+pub struct RoundTrace {
+    pub slots: Vec<SlotTrace>,
+    /// held-order strings per node after each slot (row-major: slot, node)
+    pub rows: Vec<Vec<String>>,
+}
+
+impl RoundTrace {
+    /// Render the trace as a Table-I-like text table.
+    pub fn render(&self, labels: &[String], color_names: &[&str]) -> String {
+        let mut out = String::new();
+        out.push_str("slot color ");
+        for l in labels {
+            out.push_str(&format!("{l:>12}"));
+        }
+        out.push('\n');
+        for (i, slot) in self.slots.iter().enumerate() {
+            out.push_str(&format!(
+                "{:>4} {:>5} ",
+                slot.slot + 1,
+                color_names.get(slot.color).copied().unwrap_or("?")
+            ));
+            for cell in &self.rows[i] {
+                out.push_str(&format!("{cell:>12}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run one communication round slot-by-slot with instant transfers,
+/// recording the queue-evolution rows of Table I. Panics if the round does
+/// not complete within `max_slots` (protocol bug guard).
+pub fn run_logical_round(
+    state: &mut GossipState,
+    schedule: &Schedule,
+    label: impl Fn(NodeId) -> char + Copy,
+    max_slots: usize,
+) -> RoundTrace {
+    let n = state.tree.node_count();
+    let mut trace = RoundTrace { slots: Vec::new(), rows: Vec::new() };
+    for slot in 0..max_slots {
+        if state.is_complete() {
+            return trace;
+        }
+        let color = schedule.color_of_slot(slot);
+        let transmitters = schedule.transmitters(slot);
+        let planned = state.plan_slot(&transmitters);
+        let sends = GossipState::sorted_sends(&planned);
+        for &s in &sends {
+            state.deliver(s);
+        }
+        trace.slots.push(SlotTrace { slot, color, sends });
+        trace.rows.push((0..n).map(|u| state.held_string(u, label)).collect());
+    }
+    assert!(
+        state.is_complete(),
+        "round did not complete in {max_slots} slots — protocol bug"
+    );
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::example;
+    use crate::coordinator::schedule::build_schedule;
+
+    fn example_state() -> GossipState {
+        GossipState::new(example::paper_example_mst(), 0)
+    }
+
+    fn example_schedule() -> Schedule {
+        build_schedule(
+            &example::paper_example_graph(),
+            example::paper_example_coloring(),
+            14.0,
+            56,
+            example::RED,
+        )
+    }
+
+    #[test]
+    fn seeding_gives_each_node_its_own_model() {
+        let st = example_state();
+        for u in 0..10 {
+            assert_eq!(st.queue(u).held_count(), 1);
+            assert!(st.queue(u).holds(&ModelKey::new(u, 0)));
+        }
+        assert!(!st.is_complete());
+    }
+
+    #[test]
+    fn first_red_slot_matches_table1_row1() {
+        let mut st = example_state();
+        let sched = example_schedule();
+        let tx = sched.transmitters(0);
+        // red class = {C, E, G, H, I}
+        let labels: Vec<char> = tx.iter().map(|&u| example::label(u)).collect();
+        assert_eq!(labels, vec!['C', 'E', 'G', 'H', 'I']);
+        let planned = st.plan_slot(&tx);
+        for s in GossipState::sorted_sends(&planned) {
+            st.deliver(s);
+        }
+        // Table I row 1: A=AH, B=BCI, D=DC, F=FEGH, K=KGI
+        let s = |u| st.held_string(u, example::label);
+        assert_eq!(s(example::A), "AH");
+        assert_eq!(s(example::B), "BCI");
+        assert_eq!(s(example::D), "DC");
+        assert_eq!(s(example::F), "FEGH");
+        assert_eq!(s(example::K), "KGI");
+    }
+
+    #[test]
+    fn own_model_goes_to_all_neighbors() {
+        let mut st = example_state();
+        let planned = st.plan_slot(&[example::F]);
+        // F's neighbors: E, G, H (own model — nobody to skip)
+        assert_eq!(planned.len(), 1);
+        let tos: Vec<char> = planned[0].recipients.iter().map(|&v| example::label(v)).collect();
+        assert_eq!(tos, vec!['E', 'G', 'H']);
+    }
+
+    #[test]
+    fn forwarded_model_skips_source() {
+        let mut st = example_state();
+        // H sends its model to A and F
+        for s in GossipState::sorted_sends(&st.plan_slot(&[example::H])) {
+            st.deliver(s);
+        }
+        // A sends its own model to H
+        for s in GossipState::sorted_sends(&st.plan_slot(&[example::A])) {
+            st.deliver(s);
+        }
+        // H forwards A's model: must go to F only (skip source A)
+        let planned = st.plan_slot(&[example::H]);
+        assert_eq!(planned.len(), 1);
+        assert_eq!(planned[0].entry.key.owner, example::A);
+        assert_eq!(planned[0].recipients, vec![example::F]);
+    }
+
+    #[test]
+    fn degree_one_never_forwards_received() {
+        let mut st = example_state();
+        // E is a leaf: deliver F's model to E, E's queue must stay own-only
+        for s in GossipState::sorted_sends(&st.plan_slot(&[example::F])) {
+            st.deliver(s);
+        }
+        // E pops own model first
+        let own = st.plan_slot(&[example::E]);
+        assert_eq!(own[0].entry.key.owner, example::E);
+        for s in GossipState::sorted_sends(&own) {
+            st.deliver(s);
+        }
+        // after that, E has nothing pending although it holds F's model
+        assert!(st.queue(example::E).holds(&ModelKey::new(example::F, 0)));
+        assert!(st.plan_slot(&[example::E]).is_empty());
+    }
+
+    #[test]
+    fn full_round_completes_and_matches_paper_final_row() {
+        let mut st = example_state();
+        let sched = example_schedule();
+        let trace = run_logical_round(&mut st, &sched, example::label, 64);
+        assert!(st.is_complete());
+        // Paper Table I final row (all models at all nodes, reception order):
+        let expect = [
+            (example::A, "AHFEGKIBCD"),
+            (example::B, "BCIDKGFEHA"),
+            (example::C, "CBDIKGFEHA"),
+            (example::D, "DCBIKGFEHA"),
+            (example::E, "EFGHAKIBCD"),
+            (example::F, "FEGHAKIBCD"),
+            (example::G, "GFKEIHABCD"),
+            (example::H, "HAFEGKIBCD"),
+            (example::I, "IBKCGDFEHA"),
+            (example::K, "KGIFBECHDA"),
+        ];
+        for (u, want) in expect {
+            assert_eq!(
+                st.held_string(u, example::label),
+                want,
+                "node {} order mismatch",
+                example::label(u)
+            );
+        }
+        // Table I has 23 rows (12 red, 11 blue)
+        assert_eq!(trace.slots.len(), 23, "paper's trace has 23 slots");
+    }
+
+    #[test]
+    fn failed_transmission_is_retried_and_deduplicated() {
+        let mut st = example_state();
+        // C transmits its model to B and D, but the network drops it
+        let planned = st.plan_slot(&[example::C]);
+        assert_eq!(planned.len(), 1);
+        // partial failure: B received, D did not
+        let sends: Vec<Send> = planned[0].sends().collect();
+        let to_b = sends.iter().find(|s| s.to == example::B).unwrap();
+        assert!(st.deliver(*to_b));
+        st.requeue(&planned[0]);
+        // next turn: C retries the same entry to both; B dedups
+        let retry = st.plan_slot(&[example::C]);
+        assert_eq!(retry[0].entry.key.owner, example::C);
+        let sends = GossipState::sorted_sends(&retry);
+        let mut fresh = 0;
+        for s in sends {
+            if st.deliver(s) {
+                fresh += 1;
+            }
+        }
+        assert_eq!(fresh, 1, "only D should be new on retry");
+        assert!(st.queue(example::D).holds(&ModelKey::new(example::C, 0)));
+    }
+
+    #[test]
+    fn line_graph_round_completes() {
+        // 4-node path: dissemination needs several alternating slots
+        let mut tree = Graph::new(4);
+        tree.add_edge(0, 1, 1.0);
+        tree.add_edge(1, 2, 1.0);
+        tree.add_edge(2, 3, 1.0);
+        let coloring = crate::coloring::bfs_coloring(&tree);
+        let sched = Schedule { coloring, slot_len_s: 1.0, first_color: 0 };
+        let mut st = GossipState::new(tree, 0);
+        let trace = run_logical_round(&mut st, &sched, |u| (b'a' + u as u8) as char, 32);
+        assert!(st.is_complete());
+        assert!(trace.slots.len() >= 4);
+    }
+
+    #[test]
+    fn trace_render_contains_rows() {
+        let mut st = example_state();
+        let sched = example_schedule();
+        let trace = run_logical_round(&mut st, &sched, example::label, 64);
+        let labels: Vec<String> = (0..10).map(|u| example::label(u).to_string()).collect();
+        let s = trace.render(&labels, &["blue", "red"]);
+        assert!(s.contains("red"));
+        assert!(s.contains("blue"));
+        assert!(s.contains("KGIFBECHDA"));
+    }
+}

@@ -1,0 +1,13 @@
+//! MOSGU coordination protocol (paper §III): **M**anage connectivity,
+//! **O**ptimize connectivity, **S**chedule communication, **G**ossip &
+//! **U**pdate — plus the flooding-broadcast baseline and the experiment
+//! session gluing protocol, moderator and network simulator together.
+
+pub mod broadcast;
+pub mod churn;
+pub mod example;
+pub mod gossip;
+pub mod moderator;
+pub mod queue;
+pub mod schedule;
+pub mod session;

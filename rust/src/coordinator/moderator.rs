@@ -1,0 +1,284 @@
+//! The moderator role (paper §III-A, "M — Manage connectivity").
+//!
+//! A designated node collects every participant's connectivity report
+//! (neighbor + measured cost, i.e. ping), averages the two directed
+//! estimates of each edge into the cost adjacency matrix, builds the MST,
+//! colors it, computes the slot length, and publishes each node's
+//! neighbor table + color. The role rotates every learning round via a
+//! vote aggregated by the current moderator; hand-over forwards the
+//! connectivity table, and graph computations re-run only when membership
+//! changed.
+
+use super::schedule::{build_schedule, Schedule};
+use crate::coloring::ColoringAlgorithm;
+use crate::graph::matrix::CostMatrix;
+use crate::graph::{Graph, NodeId};
+use crate::mst::{MstAlgorithm, MstError};
+
+/// One directed connectivity report: `reporter` measured `cost` to `peer`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConnectivityReport {
+    pub reporter: NodeId,
+    pub peer: NodeId,
+    pub cost: f64,
+}
+
+/// Everything the moderator publishes after its graph computations.
+#[derive(Debug, Clone)]
+pub struct ScheduleBundle {
+    /// The gossip tree (paper: Prim MST over the cost matrix).
+    pub tree: Graph,
+    /// Alternating slot schedule with the paper's slot-length formula.
+    pub schedule: Schedule,
+    /// Per-node gossip neighbor table derived from the tree.
+    pub neighbor_table: Vec<Vec<NodeId>>,
+}
+
+/// Moderator state machine. Owns the connectivity table; survives
+/// hand-over by forwarding that table to the next moderator.
+#[derive(Debug, Clone)]
+pub struct Moderator {
+    node: NodeId,
+    n: usize,
+    reports: Vec<ConnectivityReport>,
+    matrix: Option<CostMatrix>,
+    bundle: Option<ScheduleBundle>,
+    mst_alg: MstAlgorithm,
+    coloring_alg: ColoringAlgorithm,
+    /// membership epoch — bumped on join/leave, forces recomputation
+    epoch: u64,
+    computed_epoch: Option<u64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ModeratorError {
+    #[error("no connectivity reports received")]
+    NoReports,
+    #[error("MST failure: {0}")]
+    Mst(#[from] MstError),
+    #[error("schedule not computed yet")]
+    NotComputed,
+}
+
+impl Moderator {
+    pub fn new(node: NodeId, n: usize, mst: MstAlgorithm, coloring: ColoringAlgorithm) -> Self {
+        Moderator {
+            node,
+            n,
+            reports: Vec::new(),
+            matrix: None,
+            bundle: None,
+            mst_alg: mst,
+            coloring_alg: coloring,
+            epoch: 0,
+            computed_epoch: None,
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Ingest one node's connectivity report (possibly many edges).
+    pub fn submit_report(&mut self, reporter: NodeId, peers: &[(NodeId, f64)]) {
+        for &(peer, cost) in peers {
+            self.reports.push(ConnectivityReport { reporter, peer, cost });
+        }
+    }
+
+    /// Membership change (node joined/left): next `compute` must re-run.
+    pub fn membership_changed(&mut self, new_n: usize) {
+        self.n = new_n;
+        self.epoch += 1;
+        self.reports.clear();
+        self.matrix = None;
+    }
+
+    /// True if `compute_schedule` needs to run (first round or membership
+    /// changed since the last computation) — §III-A: "the moderator only
+    /// needs to recompute … when there are changes in the network".
+    pub fn needs_recompute(&self) -> bool {
+        self.computed_epoch != Some(self.epoch)
+    }
+
+    /// Run the graph computations and publish the bundle.
+    pub fn compute_schedule(
+        &mut self,
+        model_mb: f64,
+        ping_size_bytes: u64,
+        first_color: usize,
+    ) -> Result<&ScheduleBundle, ModeratorError> {
+        if !self.needs_recompute() {
+            return self.bundle.as_ref().ok_or(ModeratorError::NotComputed);
+        }
+        if self.reports.is_empty() {
+            return Err(ModeratorError::NoReports);
+        }
+        let triples: Vec<(NodeId, NodeId, f64)> =
+            self.reports.iter().map(|r| (r.reporter, r.peer, r.cost)).collect();
+        let matrix = CostMatrix::from_reports(self.n, &triples);
+        let costs = matrix.to_graph();
+        let tree = self.mst_alg.run(&costs)?;
+        let coloring = self.coloring_alg.run(&tree);
+        let schedule = build_schedule(&costs, coloring, model_mb, ping_size_bytes, first_color);
+        let neighbor_table = (0..self.n).map(|u| tree.neighbor_ids(u)).collect();
+        self.matrix = Some(matrix);
+        self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table });
+        self.computed_epoch = Some(self.epoch);
+        Ok(self.bundle.as_ref().unwrap())
+    }
+
+    /// The published bundle (after `compute_schedule`).
+    pub fn bundle(&self) -> Option<&ScheduleBundle> {
+        self.bundle.as_ref()
+    }
+
+    /// Cost matrix view (kept by the moderator between rounds).
+    pub fn matrix(&self) -> Option<&CostMatrix> {
+        self.matrix.as_ref()
+    }
+
+    /// Hand the moderator role to `next`, forwarding the connectivity
+    /// table and computed schedule (§III-A hand-over).
+    pub fn handover(self, next: NodeId) -> Moderator {
+        Moderator { node: next, ..self }
+    }
+}
+
+/// Moderator election (§III-A): every node casts a vote; the current
+/// moderator tallies and broadcasts the winner. Deterministic tie-break by
+/// lower node id. Returns the winner.
+pub fn tally_votes(votes: &[(NodeId, NodeId)], n: usize) -> Option<NodeId> {
+    let mut counts = vec![0usize; n];
+    for &(_, candidate) in votes {
+        if candidate < n {
+            counts[candidate] += 1;
+        }
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by(|(ia, a), (ib, b)| a.cmp(b).then(ib.cmp(ia)))
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, _)| i)
+}
+
+/// Round-robin moderator rotation (the paper leaves the policy open and
+/// cites reputation systems; rotation preserves the "distribute the
+/// responsibility" goal deterministically).
+pub fn next_moderator_round_robin(current: NodeId, n: usize) -> NodeId {
+    (current + 1) % n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::example;
+
+    fn submit_full_reports(m: &mut Moderator, g: &Graph, jitter: f64) {
+        // every node reports each incident edge; the two directed reports
+        // deliberately differ by ±jitter to exercise the averaging rule
+        for u in 0..g.node_count() {
+            let peers: Vec<(NodeId, f64)> =
+                g.neighbors(u).iter().map(|&(v, w)| (v, w + if u < v { jitter } else { -jitter })).collect();
+            m.submit_report(u, &peers);
+        }
+    }
+
+    fn example_moderator() -> Moderator {
+        let g = example::paper_example_graph();
+        let mut m = Moderator::new(0, 10, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut m, &g, 0.05);
+        m
+    }
+
+    #[test]
+    fn averaged_reports_reproduce_costs() {
+        let mut m = example_moderator();
+        m.compute_schedule(14.0, 56, example::RED).unwrap();
+        let g = example::paper_example_graph();
+        let matrix = m.matrix().unwrap();
+        for e in g.edges() {
+            let got = matrix.get(e.u, e.v).unwrap();
+            assert!((got - e.weight).abs() < 1e-9, "edge ({},{})", e.u, e.v);
+        }
+    }
+
+    #[test]
+    fn schedule_bundle_matches_paper_example() {
+        let mut m = example_moderator();
+        let bundle = m.compute_schedule(14.0, 56, example::RED).unwrap();
+        for (u, v) in example::paper_example_mst_edges() {
+            assert!(bundle.tree.has_edge(u, v));
+        }
+        let red: Vec<char> =
+            bundle.schedule.coloring.class(example::RED).into_iter().map(example::label).collect();
+        assert_eq!(red, vec!['C', 'E', 'G', 'H', 'I']);
+        // neighbor table mirrors the tree
+        assert_eq!(bundle.neighbor_table[example::F], vec![example::E, example::G, example::H]);
+    }
+
+    #[test]
+    fn no_reports_is_an_error() {
+        let mut m = Moderator::new(0, 4, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        assert!(matches!(
+            m.compute_schedule(10.0, 56, 0),
+            Err(ModeratorError::NoReports)
+        ));
+    }
+
+    #[test]
+    fn recompute_only_on_membership_change() {
+        let mut m = example_moderator();
+        assert!(m.needs_recompute());
+        m.compute_schedule(14.0, 56, example::RED).unwrap();
+        assert!(!m.needs_recompute(), "no change => cached bundle");
+        m.membership_changed(10);
+        assert!(m.needs_recompute());
+    }
+
+    #[test]
+    fn handover_preserves_table_and_schedule() {
+        let mut m = example_moderator();
+        m.compute_schedule(14.0, 56, example::RED).unwrap();
+        let m2 = m.handover(3);
+        assert_eq!(m2.node(), 3);
+        assert!(m2.bundle().is_some(), "schedule survives hand-over");
+        assert!(!m2.needs_recompute());
+        assert!(m2.matrix().is_some(), "connectivity table forwarded");
+    }
+
+    #[test]
+    fn vote_tally_majority_and_tiebreak() {
+        // 3 votes for node 2, 1 for node 0
+        let votes = [(0, 2), (1, 2), (3, 2), (2, 0)];
+        assert_eq!(tally_votes(&votes, 4), Some(2));
+        // tie between 1 and 2 -> lower id wins
+        let votes = [(0, 1), (3, 2)];
+        assert_eq!(tally_votes(&votes, 4), Some(1));
+        assert_eq!(tally_votes(&[], 4), None);
+        // out-of-range candidates ignored
+        assert_eq!(tally_votes(&[(0, 9)], 4), None);
+    }
+
+    #[test]
+    fn round_robin_rotation_wraps() {
+        assert_eq!(next_moderator_round_robin(8, 10), 9);
+        assert_eq!(next_moderator_round_robin(9, 10), 0);
+    }
+
+    #[test]
+    fn disconnected_reports_yield_mst_error() {
+        let mut m = Moderator::new(0, 4, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        m.submit_report(0, &[(1, 1.0)]);
+        m.submit_report(2, &[(3, 1.0)]);
+        assert!(matches!(
+            m.compute_schedule(10.0, 56, 0),
+            Err(ModeratorError::Mst(MstError::Disconnected))
+        ));
+    }
+}

@@ -1,0 +1,211 @@
+//! The per-node FIFO gossip queue `F` (paper §III-D, "GU — Gossip and
+//! Update recipient's queue").
+//!
+//! Each entry is a 3-tuple `(O, t, M)`: model owner, training-round index,
+//! and the model payload (held by reference/id here — the coordinator moves
+//! bytes, the queue moves bookkeeping). Entries are forwarded in arrival
+//! order; once transmitted they leave `F`; a transmission interrupted by a
+//! network failure stays queued for the node's next turn.
+
+use crate::graph::NodeId;
+use std::collections::{HashSet, VecDeque};
+
+/// Identity of a model instance circulating in one communication round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelKey {
+    /// The node that trained this model (the paper's `O`).
+    pub owner: NodeId,
+    /// Training round index (the paper's `t`).
+    pub round: u64,
+}
+
+impl ModelKey {
+    pub fn new(owner: NodeId, round: u64) -> Self {
+        ModelKey { owner, round }
+    }
+}
+
+/// A queued forwarding obligation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueEntry {
+    pub key: ModelKey,
+    /// Neighbor the entry arrived from (`None` for the locally trained
+    /// model) — receivers never get an entry echoed back to its source.
+    pub received_from: Option<NodeId>,
+}
+
+/// FIFO queue `F` plus the set (and order) of models this node holds.
+#[derive(Debug, Clone)]
+pub struct GossipQueue {
+    node: NodeId,
+    fifo: VecDeque<QueueEntry>,
+    /// reception order, starting with the local model — matches the
+    /// left-to-right strings of the paper's Table I
+    held_order: Vec<ModelKey>,
+    held: HashSet<ModelKey>,
+}
+
+impl GossipQueue {
+    pub fn new(node: NodeId) -> Self {
+        GossipQueue { node, fifo: VecDeque::new(), held_order: Vec::new(), held: HashSet::new() }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// Register the locally trained model for round `round` and queue it
+    /// for transmission.
+    pub fn seed_own(&mut self, round: u64) {
+        let key = ModelKey::new(self.node, round);
+        let fresh = self.held.insert(key);
+        assert!(fresh, "own model for round {round} seeded twice");
+        self.held_order.push(key);
+        self.fifo.push_back(QueueEntry { key, received_from: None });
+    }
+
+    /// Record an incoming model. Returns `true` if it is new to this node.
+    ///
+    /// `enqueue` controls whether the model joins `F` for onward
+    /// forwarding: a node of MST degree 1 receives everything from its only
+    /// neighbor and never forwards back (§III-D), so its received entries
+    /// are held but not enqueued.
+    pub fn receive(&mut self, key: ModelKey, from: NodeId, enqueue: bool) -> bool {
+        if !self.held.insert(key) {
+            return false; // duplicate — ignored (cannot happen on a tree)
+        }
+        self.held_order.push(key);
+        if enqueue {
+            self.fifo.push_back(QueueEntry { key, received_from: Some(from) });
+        }
+        true
+    }
+
+    /// Pop the oldest pending entry (the node's next transmission).
+    pub fn pop_oldest(&mut self) -> Option<QueueEntry> {
+        self.fifo.pop_front()
+    }
+
+    /// Re-queue an entry at the *front* after a failed transmission, so it
+    /// is retried on the node's next turn (§III-D network-disruption rule).
+    pub fn push_front(&mut self, entry: QueueEntry) {
+        self.fifo.push_front(entry);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    pub fn holds(&self, key: &ModelKey) -> bool {
+        self.held.contains(key)
+    }
+
+    pub fn held_count(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Reception order (Table I string for this node).
+    pub fn held_order(&self) -> &[ModelKey] {
+        &self.held_order
+    }
+
+    /// Pending keys oldest-first (the black entries of Table I).
+    pub fn pending_keys(&self) -> Vec<ModelKey> {
+        self.fifo.iter().map(|e| e.key).collect()
+    }
+
+    /// Clear state between communication rounds (held models are consumed
+    /// by aggregation; the queue must start a round empty).
+    pub fn reset(&mut self) {
+        self.fifo.clear();
+        self.held.clear();
+        self.held_order.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_then_pop_fifo_order() {
+        let mut q = GossipQueue::new(3);
+        q.seed_own(0);
+        q.receive(ModelKey::new(1, 0), 5, true);
+        q.receive(ModelKey::new(2, 0), 5, true);
+        assert_eq!(q.pending_len(), 3);
+        assert_eq!(q.pop_oldest().unwrap().key.owner, 3);
+        assert_eq!(q.pop_oldest().unwrap().key.owner, 1);
+        assert_eq!(q.pop_oldest().unwrap().key.owner, 2);
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn duplicate_reception_ignored() {
+        let mut q = GossipQueue::new(0);
+        let k = ModelKey::new(4, 7);
+        assert!(q.receive(k, 1, true));
+        assert!(!q.receive(k, 2, true));
+        assert_eq!(q.pending_len(), 1);
+        assert_eq!(q.held_count(), 1);
+    }
+
+    #[test]
+    fn degree_one_reception_not_enqueued() {
+        let mut q = GossipQueue::new(0);
+        assert!(q.receive(ModelKey::new(9, 0), 7, false));
+        assert!(q.holds(&ModelKey::new(9, 0)));
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn failed_send_retried_first() {
+        let mut q = GossipQueue::new(0);
+        q.seed_own(0);
+        q.receive(ModelKey::new(1, 0), 2, true);
+        let e = q.pop_oldest().unwrap();
+        q.push_front(e); // network disruption: retry next turn
+        assert_eq!(q.pop_oldest().unwrap().key.owner, 0);
+    }
+
+    #[test]
+    fn held_order_tracks_reception_sequence() {
+        let mut q = GossipQueue::new(2);
+        q.seed_own(0);
+        q.receive(ModelKey::new(0, 0), 1, true);
+        q.receive(ModelKey::new(4, 0), 1, true);
+        let owners: Vec<usize> = q.held_order().iter().map(|k| k.owner).collect();
+        assert_eq!(owners, vec![2, 0, 4]);
+    }
+
+    #[test]
+    fn rounds_are_distinct_keys() {
+        let mut q = GossipQueue::new(0);
+        assert!(q.receive(ModelKey::new(1, 0), 1, true));
+        assert!(q.receive(ModelKey::new(1, 1), 1, true), "new round = new model");
+        assert_eq!(q.held_count(), 2);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut q = GossipQueue::new(0);
+        q.seed_own(0);
+        q.receive(ModelKey::new(1, 0), 1, true);
+        q.reset();
+        assert_eq!(q.held_count(), 0);
+        assert!(q.is_drained());
+        assert!(q.held_order().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "seeded twice")]
+    fn double_seed_panics() {
+        let mut q = GossipQueue::new(0);
+        q.seed_own(0);
+        q.seed_own(0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Slot scheduling (paper §III-C, "S — Schedule communication").
+//!
+//! Nodes sharing a color transmit in the same timeslot; the two (tree)
+//! color classes alternate. The slot length is fixed per round from the
+//! paper's formula
+//!
+//! ```text
+//! slot = ping_max × M_size × 1000 / ping_size   [seconds]
+//! ```
+//!
+//! with `ping_max` the largest neighbor ping among nodes of the class
+//! (seconds — the paper prints "ms" but the formula is only dimensionally
+//! sensible with seconds; see DESIGN.md), `M_size` the transmitted model
+//! size in MB and `ping_size` the ping probe payload in bytes. Intuition:
+//! ping measures per-byte path cost at probe size; scaling to the model's
+//! byte count budgets a full transfer.
+
+use crate::coloring::Coloring;
+use crate::graph::Graph;
+
+/// The moderator's computed schedule for one communication round.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// 2-coloring (or k-coloring on non-tree schedules) of the gossip graph.
+    pub coloring: Coloring,
+    /// Seconds budgeted per slot, per the paper's formula.
+    pub slot_len_s: f64,
+    /// Color transmitting in slot 0 (the paper's Table I starts with red).
+    pub first_color: usize,
+}
+
+impl Schedule {
+    /// Color transmitting in slot `i` (alternating over all classes).
+    pub fn color_of_slot(&self, slot: usize) -> usize {
+        let k = self.coloring.num_colors().max(1);
+        (self.first_color + slot) % k
+    }
+
+    /// Transmitting nodes of slot `i`.
+    pub fn transmitters(&self, slot: usize) -> Vec<usize> {
+        self.coloring.class(self.color_of_slot(slot))
+    }
+}
+
+/// `ping_max` for a color class: the paper first takes each node's maximum
+/// ping to its (gossip-graph) neighbors, then the maximum of those values
+/// over the nodes of the class. Pings are edge weights in **ms**.
+pub fn class_ping_max_ms(costs: &Graph, coloring: &Coloring, color: usize) -> f64 {
+    let mut worst: f64 = 0.0;
+    for u in coloring.class(color) {
+        for &(_, w) in costs.neighbors(u) {
+            worst = worst.max(w);
+        }
+    }
+    worst
+}
+
+/// The paper's slot-length formula. `ping_max_ms` is converted to seconds.
+pub fn slot_length_s(ping_max_ms: f64, model_mb: f64, ping_size_bytes: u64) -> f64 {
+    assert!(ping_size_bytes > 0);
+    let ping_max_s = ping_max_ms / 1e3;
+    ping_max_s * model_mb * 1000.0 / ping_size_bytes as f64
+}
+
+/// Build the full schedule: worst `ping_max` across classes (both classes
+/// get the same fixed slot length), paper formula, red-first ordering.
+pub fn build_schedule(
+    costs: &Graph,
+    coloring: Coloring,
+    model_mb: f64,
+    ping_size_bytes: u64,
+    first_color: usize,
+) -> Schedule {
+    let ping_max_ms = (0..coloring.num_colors())
+        .map(|c| class_ping_max_ms(costs, &coloring, c))
+        .fold(0.0, f64::max);
+    let slot_len_s = slot_length_s(ping_max_ms, model_mb, ping_size_bytes);
+    Schedule { coloring, slot_len_s, first_color }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::bfs_coloring;
+
+    fn path3_costs() -> Graph {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 10.0);
+        g.add_edge(1, 2, 30.0);
+        g
+    }
+
+    #[test]
+    fn slot_formula_matches_paper_units() {
+        // ping_max 25 ms, model 11.6 MB, probe 56 B -> 0.025*11.6*1000/56 ≈ 5.18 s
+        let s = slot_length_s(25.0, 11.6, 56);
+        assert!((s - 5.178571).abs() < 1e-3, "s={s}");
+    }
+
+    #[test]
+    fn slot_scales_linearly_with_model_size() {
+        let small = slot_length_s(20.0, 10.0, 56);
+        let large = slot_length_s(20.0, 40.0, 56);
+        assert!((large / small - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_ping_max_takes_worst_neighbor_edge() {
+        let g = path3_costs();
+        let col = bfs_coloring(&g); // 0,1,0
+        // class 0 = {0,2}: node 0 worst 10, node 2 worst 30 -> 30
+        assert_eq!(class_ping_max_ms(&g, &col, 0), 30.0);
+        // class 1 = {1}: worst(10,30) = 30
+        assert_eq!(class_ping_max_ms(&g, &col, 1), 30.0);
+    }
+
+    #[test]
+    fn schedule_alternates_colors_from_first() {
+        let g = path3_costs();
+        let sched = build_schedule(&g, bfs_coloring(&g), 10.0, 56, 1);
+        assert_eq!(sched.color_of_slot(0), 1);
+        assert_eq!(sched.color_of_slot(1), 0);
+        assert_eq!(sched.color_of_slot(2), 1);
+        assert_eq!(sched.transmitters(0), vec![1]);
+        assert_eq!(sched.transmitters(1), vec![0, 2]);
+    }
+
+    #[test]
+    fn adjacent_nodes_never_share_a_slot() {
+        let g = path3_costs();
+        let sched = build_schedule(&g, bfs_coloring(&g), 10.0, 56, 0);
+        for slot in 0..4 {
+            let tx = sched.transmitters(slot);
+            for (i, &u) in tx.iter().enumerate() {
+                for &v in &tx[i + 1..] {
+                    assert!(!g.has_edge(u, v), "slot {slot} has adjacent {u},{v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_slot_len_uses_worst_class() {
+        let g = path3_costs();
+        let sched = build_schedule(&g, bfs_coloring(&g), 11.6, 56, 0);
+        let expect = slot_length_s(30.0, 11.6, 56);
+        assert!((sched.slot_len_s - expect).abs() < 1e-12);
+    }
+}

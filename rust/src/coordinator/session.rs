@@ -1,0 +1,281 @@
+//! End-to-end experiment session: topology → testbed → moderator →
+//! timed MOSGU round on the network simulator (and the broadcast
+//! baseline), producing the paper's Tables III–V metrics.
+
+use super::broadcast::{self, BroadcastMode};
+use super::gossip::GossipState;
+use super::moderator::{Moderator, ScheduleBundle};
+use super::schedule::Schedule;
+use crate::config::ExperimentConfig;
+use crate::graph::topology::{self, TopologyKind};
+use crate::graph::Graph;
+use crate::metrics::RoundMetrics;
+use crate::netsim::testbed::Testbed;
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+
+/// Tag for gossip flow records (owner id of the carried model).
+fn tag(owner: usize, from: usize) -> u64 {
+    ((from as u64) << 32) | owner as u64
+}
+
+/// A fully prepared experiment: structural overlay, simulated testbed, and
+/// the moderator's published schedule bundle.
+pub struct GossipSession {
+    cfg: ExperimentConfig,
+    testbed: Testbed,
+    structure: Graph,
+    costs: Graph,
+    bundle: ScheduleBundle,
+}
+
+impl GossipSession {
+    /// Build the session: generate the underlay topology, stand up the
+    /// testbed, run the paper's M-step (each node reports jittered pings to
+    /// its neighbors; the moderator averages, prunes to the MST, colors and
+    /// schedules).
+    pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        Self::with_model(cfg, 14.0)
+    }
+
+    /// As [`GossipSession::new`] with an explicit model size (MB) for the
+    /// slot-length computation.
+    pub fn with_model(cfg: &ExperimentConfig, model_mb: f64) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+        let mut rng = Pcg64::new(cfg.seed);
+        let structure = topology::generate(cfg.topology, cfg.nodes, &cfg.topology_params, &mut rng);
+        let testbed = Testbed::new(cfg);
+        let costs = testbed.overlay_costs(&structure);
+
+        // M-step: directed per-node reports with measurement noise; the
+        // moderator averages the two sides (§III-A).
+        let mut moderator = Moderator::new(0, cfg.nodes, cfg.mst, cfg.coloring);
+        let mut noise = rng.fork(0x4d0d);
+        for u in 0..cfg.nodes {
+            let peers: Vec<(usize, f64)> = costs
+                .neighbors(u)
+                .iter()
+                .map(|&(v, w)| (v, w * (1.0 + noise.gen_f64_range(-0.02, 0.02))))
+                .collect();
+            moderator.submit_report(u, &peers);
+        }
+        let bundle = moderator
+            .compute_schedule(model_mb, cfg.ping_size_bytes, 1)
+            .context("moderator schedule computation")?
+            .clone();
+        Ok(GossipSession { cfg: cfg.clone(), testbed, structure, costs, bundle })
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+
+    pub fn structure(&self) -> &Graph {
+        &self.structure
+    }
+
+    pub fn costs(&self) -> &Graph {
+        &self.costs
+    }
+
+    pub fn tree(&self) -> &Graph {
+        &self.bundle.tree
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.bundle.schedule
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Run one timed MOSGU communication round: alternate color slots; in
+    /// each slot every transmitting node pops its oldest queue entry and
+    /// ships a copy to each addressed neighbor through the simulator; the
+    /// next slot opens when the current slot's transfers complete (the
+    /// formula slot length is the budget, not a busy-wait — see DESIGN.md).
+    ///
+    /// `failure_prob` injects per-transmission network disruptions: the
+    /// flow's bytes are spent but nothing is delivered, and the entry is
+    /// re-queued for the node's next turn (§III-D).
+    pub fn run_mosgu_round(&self, model_mb: f64, seed: u64, failure_prob: f64) -> RoundMetrics {
+        let mut sim = self.testbed.netsim(seed);
+        let mut state = GossipState::new(self.bundle.tree.clone(), 0);
+        let mut rng = Pcg64::new(seed ^ 0xfa11);
+        let schedule = &self.bundle.schedule;
+        let n = state.node_count();
+        // generous guard: retransmissions can stretch the round
+        let max_slots = 8 * n + 64;
+        let mut slots_used = 0;
+
+        for slot in 0..max_slots {
+            if state.is_complete() {
+                break;
+            }
+            slots_used = slot + 1;
+            let transmitters = schedule.transmitters(slot);
+            let planned = state.plan_slot(&transmitters);
+            if planned.is_empty() {
+                // idle color this slot; burn no simulated time beyond zero
+                continue;
+            }
+            let slot_start = sim.now();
+            let mut flow_meta = Vec::new(); // (tx index, recipient, flow id)
+            for (i, tx) in planned.iter().enumerate() {
+                for &to in &tx.recipients {
+                    let f = sim.start_flow(
+                        tx.from,
+                        to,
+                        self.testbed.route(tx.from, to),
+                        model_mb,
+                        tag(tx.entry.key.owner, tx.from),
+                    );
+                    flow_meta.push((i, to, f));
+                }
+            }
+            sim.run_until_idle();
+            // deliveries in deterministic (from, to) order
+            let mut order: Vec<usize> = (0..flow_meta.len()).collect();
+            order.sort_by_key(|&j| (planned[flow_meta[j].0].from, flow_meta[j].1));
+            let mut failed = vec![false; planned.len()];
+            for j in order {
+                let (i, to, _) = flow_meta[j];
+                if failure_prob > 0.0 && rng.gen_bool(failure_prob) {
+                    failed[i] = true;
+                    continue;
+                }
+                let tx = &planned[i];
+                state.deliver(super::gossip::Send { from: tx.from, to, key: tx.entry.key });
+            }
+            for (i, tx) in planned.iter().enumerate() {
+                if failed[i] {
+                    state.requeue(tx);
+                }
+            }
+            let _ = slot_start;
+        }
+        assert!(
+            state.is_complete(),
+            "MOSGU round did not complete within {max_slots} slots (failure_prob={failure_prob})"
+        );
+        let total = sim.now();
+        let transfers = sim.take_completed();
+        // Exchange phase: the last delivery of a node's *own* round-t update
+        // (owner == sender). Forwarded copies pipeline with the next round.
+        let exchange = transfers
+            .iter()
+            .filter(|r| broadcast::tag_owner(r.tag) == broadcast::tag_sender(r.tag))
+            .map(|r| r.end)
+            .fold(0.0, f64::max);
+        RoundMetrics { transfers, total_time_s: total, exchange_time_s: exchange, slots: slots_used }
+    }
+
+    /// The paper's baseline on this testbed: all-to-all direct push on the
+    /// complete overlay (the broadcast columns of Tables III–V are one set
+    /// of values regardless of underlay rows).
+    pub fn run_broadcast_round(&self, model_mb: f64, seed: u64) -> RoundMetrics {
+        broadcast::paper_baseline(&self.testbed, model_mb, seed)
+    }
+
+    /// Flooding with relay on the session's structural overlay (ablation).
+    pub fn run_flood_round(&self, model_mb: f64, seed: u64) -> RoundMetrics {
+        broadcast::run_broadcast_round(
+            &self.testbed,
+            &self.structure,
+            model_mb,
+            BroadcastMode::Flood,
+            seed,
+        )
+    }
+}
+
+/// Build one session per topology kind with a shared config template.
+pub fn sessions_for_all_topologies(cfg: &ExperimentConfig) -> Result<Vec<(TopologyKind, GossipSession)>> {
+    TopologyKind::ALL
+        .iter()
+        .map(|&kind| {
+            let cfg = ExperimentConfig { topology: kind, ..cfg.clone() };
+            Ok((kind, GossipSession::new(&cfg)?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_cfg() -> ExperimentConfig {
+        ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn session_builds_for_every_topology() {
+        let sessions = sessions_for_all_topologies(&quiet_cfg()).unwrap();
+        assert_eq!(sessions.len(), 4);
+        for (kind, s) in sessions {
+            assert!(s.tree().is_tree(), "{kind:?}");
+            assert!(s.schedule().coloring.is_proper(s.tree()), "{kind:?}");
+            assert!(s.schedule().slot_len_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn mosgu_round_disseminates_everything() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        let m = s.run_mosgu_round(11.6, 1, 0.0);
+        // tree dissemination: each of the 10 models crosses each of the 9
+        // edges exactly once = 90 deliveries... but copies are per-edge
+        // directionally: total transfers = sum over slots of copies = 90.
+        assert_eq!(m.transfer_count(), 90);
+        assert!(m.slots >= 10, "needs many alternating slots, got {}", m.slots);
+        assert!(m.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn mosgu_beats_broadcast_on_bandwidth_and_total_time() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        for mb in [11.6, 48.0] {
+            let g = s.run_mosgu_round(mb, 1, 0.0);
+            let b = s.run_broadcast_round(mb, 1);
+            assert!(
+                g.bandwidth_mbps() > 2.0 * b.bandwidth_mbps(),
+                "mb={mb}: gossip {} vs broadcast {}",
+                g.bandwidth_mbps(),
+                b.bandwidth_mbps()
+            );
+            assert!(
+                g.avg_transfer_s() < b.avg_transfer_s(),
+                "mb={mb}: transfer {} vs {}",
+                g.avg_transfer_s(),
+                b.avg_transfer_s()
+            );
+        }
+    }
+
+    #[test]
+    fn failure_injection_still_completes_with_retransmission() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        let clean = s.run_mosgu_round(5.0, 2, 0.0);
+        let lossy = s.run_mosgu_round(5.0, 2, 0.15);
+        assert!(lossy.slots >= clean.slots, "failures must not shorten the round");
+        assert!(lossy.transfer_count() >= clean.transfer_count());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        let a = s.run_mosgu_round(14.0, 7, 0.0);
+        let b = s.run_mosgu_round(14.0, 7, 0.0);
+        assert!((a.total_time_s - b.total_time_s).abs() < 1e-12);
+        assert_eq!(a.transfer_count(), b.transfer_count());
+    }
+
+    #[test]
+    fn different_topologies_yield_different_trees() {
+        let sessions = sessions_for_all_topologies(&quiet_cfg()).unwrap();
+        let weights: Vec<f64> = sessions.iter().map(|(_, s)| s.tree().total_weight()).collect();
+        // not all identical (complete vs sparse graphs prune differently)
+        assert!(weights.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9), "{weights:?}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Decentralized federated learning layer: the Table II model registry,
+//! the artifact-driven per-node trainer, and DFL round orchestration
+//! (train → gossip → aggregate).
+
+pub mod models;
+pub mod round;
+pub mod trainer;

@@ -1,0 +1,139 @@
+//! The model registry — the paper's Table II: seven mobile-class model
+//! variants whose *capacity* (checkpoint MB) drives every communication
+//! experiment, with the paper's small/medium/large categorization.
+
+/// Size category (paper §IV-C: small 0–15 MB, medium 15.1–30, large >30).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeCategory {
+    Small,
+    Medium,
+    Large,
+}
+
+impl SizeCategory {
+    pub fn of_mb(mb: f64) -> SizeCategory {
+        if mb <= 15.0 {
+            SizeCategory::Small
+        } else if mb <= 30.0 {
+            SizeCategory::Medium
+        } else {
+            SizeCategory::Large
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SizeCategory::Small => "small",
+            SizeCategory::Medium => "medium",
+            SizeCategory::Large => "large",
+        }
+    }
+}
+
+/// One Table II row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelSpec {
+    /// Full name as printed in the paper.
+    pub name: &'static str,
+    /// Short code used in table headers (b0..b3, v2, v3s, v3l).
+    pub code: &'static str,
+    /// Trainable parameters, millions.
+    pub params_m: f64,
+    /// Checkpoint capacity, MB.
+    pub capacity_mb: f64,
+}
+
+impl ModelSpec {
+    pub fn category(&self) -> SizeCategory {
+        SizeCategory::of_mb(self.capacity_mb)
+    }
+}
+
+/// Table II, in the paper's column order of Tables III–V
+/// (v3s, v2, b0, v3l, b1, b2, b3).
+pub const MODELS: [ModelSpec; 7] = [
+    ModelSpec { name: "MobileNetV3 Small (1.0)", code: "v3s", params_m: 2.9, capacity_mb: 11.6 },
+    ModelSpec { name: "MobileNetV2", code: "v2", params_m: 3.5, capacity_mb: 14.0 },
+    ModelSpec { name: "EfficientNet-B0", code: "b0", params_m: 5.3, capacity_mb: 21.2 },
+    ModelSpec { name: "MobileNetV3 Large (1.0)", code: "v3l", params_m: 5.4, capacity_mb: 21.6 },
+    ModelSpec { name: "EfficientNet-B1", code: "b1", params_m: 7.8, capacity_mb: 31.2 },
+    ModelSpec { name: "EfficientNet-B2", code: "b2", params_m: 9.2, capacity_mb: 36.8 },
+    ModelSpec { name: "EfficientNet-B3", code: "b3", params_m: 12.0, capacity_mb: 48.0 },
+];
+
+/// Look up a model by its short code.
+pub fn by_code(code: &str) -> Option<&'static ModelSpec> {
+    MODELS.iter().find(|m| m.code == code)
+}
+
+/// Render Table II.
+pub fn render_table2() -> String {
+    let mut out = String::new();
+    out.push_str("== Table II: models ==\n");
+    out.push_str(&format!(
+        "{:<26}{:>6}{:>12}{:>12}{:>10}\n",
+        "model", "code", "params (M)", "capacity", "category"
+    ));
+    for m in MODELS {
+        out.push_str(&format!(
+            "{:<26}{:>6}{:>12.1}{:>10.1}MB{:>10}\n",
+            m.name,
+            m.code,
+            m.params_m,
+            m.capacity_mb,
+            m.category().name()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_match_paper() {
+        // paper: small = {v2, v3s}, medium = {b0, v3l}, large = {b1, b2, b3}
+        assert_eq!(by_code("v2").unwrap().category(), SizeCategory::Small);
+        assert_eq!(by_code("v3s").unwrap().category(), SizeCategory::Small);
+        assert_eq!(by_code("b0").unwrap().category(), SizeCategory::Medium);
+        assert_eq!(by_code("v3l").unwrap().category(), SizeCategory::Medium);
+        for c in ["b1", "b2", "b3"] {
+            assert_eq!(by_code(c).unwrap().category(), SizeCategory::Large);
+        }
+    }
+
+    #[test]
+    fn capacities_match_table2() {
+        assert_eq!(by_code("b0").unwrap().capacity_mb, 21.2);
+        assert_eq!(by_code("b3").unwrap().capacity_mb, 48.0);
+        assert_eq!(by_code("v3s").unwrap().capacity_mb, 11.6);
+    }
+
+    #[test]
+    fn column_order_matches_tables() {
+        let codes: Vec<&str> = MODELS.iter().map(|m| m.code).collect();
+        assert_eq!(codes, vec!["v3s", "v2", "b0", "v3l", "b1", "b2", "b3"]);
+    }
+
+    #[test]
+    fn category_boundaries() {
+        assert_eq!(SizeCategory::of_mb(15.0), SizeCategory::Small);
+        assert_eq!(SizeCategory::of_mb(15.1), SizeCategory::Medium);
+        assert_eq!(SizeCategory::of_mb(30.0), SizeCategory::Medium);
+        assert_eq!(SizeCategory::of_mb(30.1), SizeCategory::Large);
+    }
+
+    #[test]
+    fn unknown_code_is_none() {
+        assert!(by_code("b9").is_none());
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = render_table2();
+        for m in MODELS {
+            assert!(s.contains(m.code));
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! The per-node learner: local training and FedAvg aggregation executed
+//! through the AOT artifacts (Layer 2/1) — no Python on this path.
+
+use crate::runtime::{ArtifactSet, Runtime};
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+
+/// A synthetic next-token batch, mirroring `model.synth_batch`: per-node
+/// affine recurrences mod vocab (odd stride ⇒ full cycle), so the task is
+/// learnable and mildly non-IID across federated nodes.
+pub fn synth_batch(
+    seq_len: usize,
+    vocab: usize,
+    batch: usize,
+    seed: u64,
+    node: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Pcg64::new(seed.wrapping_mul(1_000_003).wrapping_add(node as u64));
+    let stride = (3 + 2 * (node % 5)) as i32;
+    let mut tokens = Vec::with_capacity(batch * seq_len);
+    let mut targets = Vec::with_capacity(batch * seq_len);
+    for _ in 0..batch {
+        let start = rng.gen_range(vocab) as i32;
+        for t in 0..seq_len {
+            tokens.push((start + stride * t as i32).rem_euclid(vocab as i32));
+            targets.push((start + stride * (t as i32 + 1)).rem_euclid(vocab as i32));
+        }
+    }
+    (tokens, targets)
+}
+
+/// One federated node's training state: its flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    pub node: usize,
+    pub params: Vec<f32>,
+    /// local sample weight carried into aggregation
+    pub weight: f32,
+}
+
+/// The trainer drives the artifacts for all nodes (single process, as in
+/// the simulated deployment; the live TCP mode shards nodes over threads).
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    artifacts: &'rt ArtifactSet,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, artifacts: &'rt ArtifactSet) -> Self {
+        Trainer { rt, artifacts }
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        self.artifacts
+    }
+
+    /// Initialize a node's model: shared exported init plus small per-node
+    /// perturbation so nodes genuinely differ (decentralized start).
+    pub fn init_node(&self, node: usize, noise: f32) -> NodeModel {
+        let mut params = self.artifacts.init_params.clone();
+        if noise > 0.0 {
+            let mut rng = Pcg64::new(0xd11 ^ node as u64);
+            let live = self.artifacts.manifest.param_count;
+            for p in params.iter_mut().take(live) {
+                *p += noise * (rng.gen_f64() as f32 - 0.5);
+            }
+        }
+        NodeModel { node, params, weight: 1.0 }
+    }
+
+    /// One local SGD step on a synthetic batch; returns the training loss.
+    pub fn train_step(&self, model: &mut NodeModel, seed: u64, lr: f32) -> Result<f32> {
+        let m = &self.artifacts.manifest;
+        let (tokens, targets) = synth_batch(m.seq_len, m.vocab, m.batch, seed, model.node);
+        let inputs = [
+            self.rt.literal_f32(&model.params),
+            self.rt.literal_i32_2d(&tokens, m.batch, m.seq_len)?,
+            self.rt.literal_i32_2d(&targets, m.batch, m.seq_len)?,
+            self.rt.literal_scalar_f32(lr),
+        ];
+        let out = self.artifacts.train_step.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "train_step must return (params, loss)");
+        model.params = out[0].to_vec::<f32>().context("fetching updated params")?;
+        let loss = out[1].to_vec::<f32>().context("fetching loss")?[0];
+        Ok(loss)
+    }
+
+    /// Evaluation loss on a held-out synthetic batch.
+    pub fn eval(&self, model: &NodeModel, seed: u64) -> Result<f32> {
+        let m = &self.artifacts.manifest;
+        let (tokens, targets) = synth_batch(m.seq_len, m.vocab, m.batch, seed, model.node);
+        let inputs = [
+            self.rt.literal_f32(&model.params),
+            self.rt.literal_i32_2d(&tokens, m.batch, m.seq_len)?,
+            self.rt.literal_i32_2d(&targets, m.batch, m.seq_len)?,
+        ];
+        let out = self.artifacts.eval_step.run(&inputs)?;
+        Ok(out[0].to_vec::<f32>()?[0])
+    }
+
+    /// Fold `other` into `acc` (running weighted average) via the Pallas
+    /// aggregation artifact. Folding all gossip-received models pairwise
+    /// yields exactly FedAvg regardless of arrival order.
+    pub fn aggregate_into(&self, acc: &mut NodeModel, other: &[f32], other_weight: f32) -> Result<()> {
+        let inputs = [
+            self.rt.literal_f32(&acc.params),
+            self.rt.literal_scalar_f32(acc.weight),
+            self.rt.literal_f32(other),
+            self.rt.literal_scalar_f32(other_weight),
+        ];
+        let out = self.artifacts.aggregate.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "aggregate must return (params, weight)");
+        acc.params = out[0].to_vec::<f32>()?;
+        acc.weight = out[1].to_vec::<f32>()?[0];
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_batch_shapes_and_determinism() {
+        let (x, y) = synth_batch(16, 256, 4, 7, 2);
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 64);
+        let (x2, _) = synth_batch(16, 256, 4, 7, 2);
+        assert_eq!(x, x2);
+        // next-token property: y[t] == x[t+1] within a row
+        for row in 0..4 {
+            for t in 0..15 {
+                assert_eq!(y[row * 16 + t], x[row * 16 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn synth_batch_tokens_in_vocab() {
+        let (x, y) = synth_batch(32, 100, 8, 1, 4);
+        assert!(x.iter().chain(y.iter()).all(|&t| (0..100).contains(&t)));
+    }
+
+    #[test]
+    fn nodes_have_different_data() {
+        let (a, _) = synth_batch(16, 256, 4, 7, 0);
+        let (b, _) = synth_batch(16, 256, 4, 7, 1);
+        assert_ne!(a, b);
+    }
+}

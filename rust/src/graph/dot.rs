@@ -1,0 +1,132 @@
+//! Graphviz DOT export for the paper's figures (Fig 1, 2, 4, 5, 6).
+//!
+//! The paper draws inter-subnet edges black and intra-subnet ("local")
+//! edges dashed blue; colored MSTs paint nodes red/blue. We reproduce that
+//! styling so `dot -Tpng` regenerates figures directly comparable to the
+//! paper's.
+
+use super::Graph;
+use crate::coloring::Coloring;
+
+/// Styling input: which subnet each node belongs to (for edge style) and an
+/// optional node coloring (for Fig 6-style output).
+#[derive(Debug, Clone, Default)]
+pub struct DotStyle {
+    /// node -> subnet id; edges within one subnet render dashed blue.
+    pub subnet: Option<Vec<usize>>,
+    /// 2-coloring (or k-coloring) to paint node fills.
+    pub coloring: Option<Coloring>,
+    /// Show edge weights as labels.
+    pub edge_labels: bool,
+}
+
+const FILL_PALETTE: [&str; 6] = ["#e06666", "#6fa8dc", "#93c47d", "#ffd966", "#b4a7d6", "#f6b26b"];
+
+/// Node label: A, B, C... for n <= 26 (matching the paper), else n0, n1...
+pub fn node_label(i: usize, n: usize) -> String {
+    if n <= 26 {
+        // The paper labels its 10-node example A..K skipping J.
+        let alphabet: Vec<char> = ('A'..='Z').filter(|&c| c != 'J').collect();
+        if i < alphabet.len() {
+            return alphabet[i].to_string();
+        }
+    }
+    format!("n{i}")
+}
+
+/// Render `g` as an undirected DOT graph.
+pub fn to_dot(name: &str, g: &Graph, style: &DotStyle) -> String {
+    let n = g.node_count();
+    let mut out = String::new();
+    out.push_str(&format!("graph \"{name}\" {{\n"));
+    out.push_str("  layout=neato;\n  overlap=false;\n  node [style=filled, fillcolor=white, shape=circle];\n");
+    for u in 0..n {
+        let label = node_label(u, n);
+        let mut attrs = vec![format!("label=\"{label}\"")];
+        if let Some(col) = &style.coloring {
+            let c = col.color_of(u);
+            attrs.push(format!("fillcolor=\"{}\"", FILL_PALETTE[c % FILL_PALETTE.len()]));
+        }
+        out.push_str(&format!("  {u} [{}];\n", attrs.join(", ")));
+    }
+    for e in g.sorted_edges() {
+        let mut attrs: Vec<String> = Vec::new();
+        if let Some(subnet) = &style.subnet {
+            if subnet[e.u] == subnet[e.v] {
+                // local connection: dashed blue, as in the paper's figures
+                attrs.push("style=dashed".into());
+                attrs.push("color=\"#3c78d8\"".into());
+            } else {
+                attrs.push("color=black".into());
+            }
+        }
+        if style.edge_labels {
+            attrs.push(format!("label=\"{:.1}\"", e.weight));
+        }
+        if attrs.is_empty() {
+            out.push_str(&format!("  {} -- {};\n", e.u, e.v));
+        } else {
+            out.push_str(&format!("  {} -- {} [{}];\n", e.u, e.v, attrs.join(", ")));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::Coloring;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 1.5);
+        g.add_edge(1, 2, 2.5);
+        g
+    }
+
+    #[test]
+    fn labels_match_paper_alphabet() {
+        // paper's 10-node example is A..K without J
+        let labels: Vec<String> = (0..10).map(|i| node_label(i, 10)).collect();
+        assert_eq!(labels, vec!["A", "B", "C", "D", "E", "F", "G", "H", "I", "K"]);
+    }
+
+    #[test]
+    fn big_graphs_use_numeric_labels() {
+        assert_eq!(node_label(30, 40), "n30");
+    }
+
+    #[test]
+    fn dot_contains_edges_and_name() {
+        let s = to_dot("fig", &tiny(), &DotStyle::default());
+        assert!(s.contains("graph \"fig\""));
+        assert!(s.contains("0 -- 1"));
+        assert!(s.contains("1 -- 2"));
+    }
+
+    #[test]
+    fn subnet_styles_local_edges() {
+        let style = DotStyle { subnet: Some(vec![0, 0, 1]), ..Default::default() };
+        let s = to_dot("fig", &tiny(), &style);
+        assert!(s.contains("style=dashed")); // 0-1 local
+        assert!(s.contains("color=black")); // 1-2 inter-subnet
+    }
+
+    #[test]
+    fn coloring_paints_nodes() {
+        let col = Coloring::new(vec![0, 1, 0]);
+        let style = DotStyle { coloring: Some(col), ..Default::default() };
+        let s = to_dot("fig", &tiny(), &style);
+        assert!(s.contains("#e06666"));
+        assert!(s.contains("#6fa8dc"));
+    }
+
+    #[test]
+    fn edge_labels_show_weights() {
+        let style = DotStyle { edge_labels: true, ..Default::default() };
+        let s = to_dot("fig", &tiny(), &style);
+        assert!(s.contains("label=\"1.5\""));
+        assert!(s.contains("label=\"2.5\""));
+    }
+}

@@ -1,0 +1,167 @@
+//! Cost adjacency matrix (paper §III-A, Fig 1).
+//!
+//! The moderator receives per-node connectivity reports where each node
+//! estimates its cost to every neighbor. The two directed estimates of one
+//! edge may disagree slightly; the paper specifies the moderator stores the
+//! *average* of the two. `CostMatrix` implements exactly that aggregation
+//! and converts to/from [`Graph`].
+
+use super::{Graph, NodeId};
+
+/// Symmetric cost matrix; `None` = no direct connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostMatrix {
+    n: usize,
+    cost: Vec<Option<f64>>, // row-major n×n
+}
+
+impl CostMatrix {
+    pub fn new(n: usize) -> Self {
+        CostMatrix { n, cost: vec![None; n * n] }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn idx(&self, u: NodeId, v: NodeId) -> usize {
+        assert!(u < self.n && v < self.n, "({u},{v}) out of range n={}", self.n);
+        u * self.n + v
+    }
+
+    /// Set the symmetric cost of edge (u,v).
+    pub fn set(&mut self, u: NodeId, v: NodeId, cost: f64) {
+        assert!(u != v, "no self-edges");
+        let (i, j) = (self.idx(u, v), self.idx(v, u));
+        self.cost[i] = Some(cost);
+        self.cost[j] = Some(cost);
+    }
+
+    pub fn get(&self, u: NodeId, v: NodeId) -> Option<f64> {
+        self.cost[self.idx(u, v)]
+    }
+
+    /// Build the matrix from directed per-node reports, averaging the two
+    /// estimates of each edge as the paper's moderator does (§III-A).
+    /// A one-sided report (only u measured v) is taken at face value.
+    pub fn from_reports(n: usize, reports: &[(NodeId, NodeId, f64)]) -> Self {
+        let mut first: Vec<Option<f64>> = vec![None; n * n];
+        for &(u, v, c) in reports {
+            assert!(u < n && v < n && u != v, "bad report ({u},{v})");
+            first[u * n + v] = Some(c);
+        }
+        let mut m = CostMatrix::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                match (first[u * n + v], first[v * n + u]) {
+                    (Some(a), Some(b)) => m.set(u, v, (a + b) / 2.0),
+                    (Some(a), None) | (None, Some(a)) => m.set(u, v, a),
+                    (None, None) => {}
+                }
+            }
+        }
+        m
+    }
+
+    /// Lower into the adjacency-list representation.
+    pub fn to_graph(&self) -> Graph {
+        let mut g = Graph::new(self.n);
+        for u in 0..self.n {
+            for v in (u + 1)..self.n {
+                if let Some(c) = self.get(u, v) {
+                    g.add_edge(u, v, c);
+                }
+            }
+        }
+        g
+    }
+
+    /// Lift a graph into matrix form.
+    pub fn from_graph(g: &Graph) -> Self {
+        let mut m = CostMatrix::new(g.node_count());
+        for e in g.edges() {
+            m.set(e.u, e.v, e.weight);
+        }
+        m
+    }
+
+    /// Render like the paper's Fig 1 (".": no edge, numbers: cost).
+    pub fn render(&self, labels: &[String]) -> String {
+        assert_eq!(labels.len(), self.n);
+        let mut out = String::new();
+        out.push_str("      ");
+        for l in labels {
+            out.push_str(&format!("{l:>6}"));
+        }
+        out.push('\n');
+        for u in 0..self.n {
+            out.push_str(&format!("{:>6}", labels[u]));
+            for v in 0..self.n {
+                match if u == v { None } else { self.get(u, v) } {
+                    Some(c) => out.push_str(&format!("{c:>6.1}")),
+                    None => out.push_str(&format!("{:>6}", ".")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_symmetric() {
+        let mut m = CostMatrix::new(3);
+        m.set(0, 2, 4.5);
+        assert_eq!(m.get(0, 2), Some(4.5));
+        assert_eq!(m.get(2, 0), Some(4.5));
+        assert_eq!(m.get(0, 1), None);
+    }
+
+    #[test]
+    fn reports_are_averaged() {
+        // u measures 10ms, v measures 12ms -> moderator stores 11ms (§III-A)
+        let m = CostMatrix::from_reports(2, &[(0, 1, 10.0), (1, 0, 12.0)]);
+        assert_eq!(m.get(0, 1), Some(11.0));
+    }
+
+    #[test]
+    fn one_sided_report_taken_as_is() {
+        let m = CostMatrix::from_reports(3, &[(0, 1, 7.0)]);
+        assert_eq!(m.get(0, 1), Some(7.0));
+        assert_eq!(m.get(1, 2), None);
+    }
+
+    #[test]
+    fn graph_roundtrip() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 3, 3.5);
+        let m = CostMatrix::from_graph(&g);
+        let g2 = m.to_graph();
+        assert_eq!(g2.edge_count(), 3);
+        assert_eq!(g2.weight(2, 3), Some(3.5));
+        assert_eq!(CostMatrix::from_graph(&g2), m);
+    }
+
+    #[test]
+    fn render_contains_costs_and_dots() {
+        let mut m = CostMatrix::new(2);
+        m.set(0, 1, 3.0);
+        let s = m.render(&["A".into(), "B".into()]);
+        assert!(s.contains("3.0"));
+        assert!(s.contains('.'));
+        assert!(s.contains('A') && s.contains('B'));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_get_panics() {
+        CostMatrix::new(2).get(0, 5);
+    }
+}

@@ -1,0 +1,367 @@
+//! Graph substrate: weighted undirected graphs, cost adjacency matrices
+//! (paper §III-A, Fig 1), topology generators for the four experimental
+//! underlays (paper §IV-B, Fig 4), and DOT export for the figures.
+
+pub mod dot;
+pub mod matrix;
+pub mod topology;
+
+use std::collections::{BTreeSet, VecDeque};
+
+/// Node identifier — dense indices `0..n`.
+pub type NodeId = usize;
+
+/// An undirected weighted edge. Canonical form keeps `u < v`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub u: NodeId,
+    pub v: NodeId,
+    /// Communication cost (the paper uses ping latency in ms; geographic
+    /// distance or hop count are equally valid — §III-A).
+    pub weight: f64,
+}
+
+impl Edge {
+    pub fn new(u: NodeId, v: NodeId, weight: f64) -> Self {
+        let (u, v) = if u <= v { (u, v) } else { (v, u) };
+        Edge { u, v, weight }
+    }
+
+    /// The endpoint that is not `node`; panics if `node` is not an endpoint.
+    pub fn other(&self, node: NodeId) -> NodeId {
+        if node == self.u {
+            self.v
+        } else if node == self.v {
+            self.u
+        } else {
+            panic!("node {node} is not an endpoint of {self:?}")
+        }
+    }
+}
+
+/// Undirected weighted graph in adjacency-list form.
+///
+/// Dense `0..n` node ids; parallel edges are rejected, self-loops are
+/// rejected (neither occurs in the paper's overlays).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    n: usize,
+    /// adj[u] = list of (neighbor, weight)
+    adj: Vec<Vec<(NodeId, f64)>>,
+    edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new(n: usize) -> Self {
+        Graph { n, adj: vec![Vec::new(); n], edges: Vec::new() }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.n
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Add an undirected edge. Panics on self-loop, out-of-range id, or
+    /// duplicate edge — programming errors in this codebase.
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, weight: f64) {
+        assert!(u != v, "self-loop {u}");
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range n={}", self.n);
+        assert!(!self.has_edge(u, v), "duplicate edge ({u},{v})");
+        assert!(weight.is_finite() && weight >= 0.0, "bad weight {weight}");
+        self.adj[u].push((v, weight));
+        self.adj[v].push((u, weight));
+        self.edges.push(Edge::new(u, v, weight));
+    }
+
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.adj.get(u).is_some_and(|l| l.iter().any(|&(w, _)| w == v))
+    }
+
+    pub fn weight(&self, u: NodeId, v: NodeId) -> Option<f64> {
+        self.adj.get(u)?.iter().find(|&&(w, _)| w == v).map(|&(_, wt)| wt)
+    }
+
+    /// Neighbors of `u` with weights.
+    pub fn neighbors(&self, u: NodeId) -> &[(NodeId, f64)] {
+        &self.adj[u]
+    }
+
+    /// Neighbor ids only (sorted, for deterministic iteration).
+    pub fn neighbor_ids(&self, u: NodeId) -> Vec<NodeId> {
+        let mut ids: Vec<NodeId> = self.adj[u].iter().map(|&(v, _)| v).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn degree(&self, u: NodeId) -> usize {
+        self.adj[u].len()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.weight).sum()
+    }
+
+    /// True iff every node is reachable from node 0 (or the graph is empty).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = VecDeque::from([0]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &(v, _) in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// True iff the graph is a tree: connected with exactly n-1 edges.
+    pub fn is_tree(&self) -> bool {
+        self.n > 0 && self.edges.len() == self.n - 1 && self.is_connected()
+    }
+
+    /// BFS hop distance from `src` to every node (`usize::MAX` = unreachable).
+    pub fn bfs_hops(&self, src: NodeId) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.n];
+        let mut queue = VecDeque::from([src]);
+        dist[src] = 0;
+        while let Some(u) = queue.pop_front() {
+            for &(v, _) in &self.adj[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Graph diameter in hops (`None` if disconnected or empty).
+    pub fn diameter_hops(&self) -> Option<usize> {
+        if self.n == 0 {
+            return None;
+        }
+        let mut best = 0;
+        for src in 0..self.n {
+            let d = self.bfs_hops(src);
+            let m = *d.iter().max().unwrap();
+            if m == usize::MAX {
+                return None;
+            }
+            best = best.max(m);
+        }
+        Some(best)
+    }
+
+    /// Dijkstra weighted shortest-path distances from `src`.
+    pub fn dijkstra(&self, src: NodeId) -> Vec<f64> {
+        let mut dist = vec![f64::INFINITY; self.n];
+        dist[src] = 0.0;
+        // (ordered) set keyed by (dist, node); f64 wrapped via total ordering
+        let mut frontier: BTreeSet<(u64, NodeId)> = BTreeSet::new();
+        frontier.insert((0, src));
+        while let Some(&(dk, u)) = frontier.iter().next() {
+            frontier.remove(&(dk, u));
+            let du = f64::from_bits(dk);
+            if du > dist[u] {
+                continue;
+            }
+            for &(v, w) in &self.adj[u] {
+                let cand = du + w;
+                if cand < dist[v] {
+                    if dist[v].is_finite() {
+                        frontier.remove(&(dist[v].to_bits(), v));
+                    }
+                    dist[v] = cand;
+                    frontier.insert((cand.to_bits(), v));
+                }
+            }
+        }
+        dist
+    }
+
+    /// Induced subgraph on `keep` (ascending, deduped), relabeling nodes
+    /// to dense `0..keep.len()`. Returns the subgraph and the mapping
+    /// `new_id -> old_id`. Used by the churn driver when members leave.
+    pub fn induced(&self, keep: &[NodeId]) -> (Graph, Vec<NodeId>) {
+        let mut ids: Vec<NodeId> = keep.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        assert!(ids.iter().all(|&u| u < self.n), "induced: id out of range");
+        let mut new_of = vec![usize::MAX; self.n];
+        for (new, &old) in ids.iter().enumerate() {
+            new_of[old] = new;
+        }
+        let mut g = Graph::new(ids.len());
+        for e in &self.edges {
+            let (u, v) = (new_of[e.u], new_of[e.v]);
+            if u != usize::MAX && v != usize::MAX {
+                g.add_edge(u, v, e.weight);
+            }
+        }
+        (g, ids)
+    }
+
+    /// Deterministic edge ordering (by weight then endpoints) — used by
+    /// Kruskal and by golden tests.
+    pub fn sorted_edges(&self) -> Vec<Edge> {
+        let mut es = self.edges.clone();
+        es.sort_by(|a, b| {
+            a.weight
+                .partial_cmp(&b.weight)
+                .unwrap()
+                .then(a.u.cmp(&b.u))
+                .then(a.v.cmp(&b.v))
+        });
+        es
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path4() -> Graph {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 3, 3.0);
+        g
+    }
+
+    #[test]
+    fn edge_canonical_order() {
+        let e = Edge::new(5, 2, 1.0);
+        assert_eq!((e.u, e.v), (2, 5));
+        assert_eq!(e.other(2), 5);
+        assert_eq!(e.other(5), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not an endpoint")]
+    fn edge_other_panics_for_non_endpoint() {
+        Edge::new(0, 1, 1.0).other(7);
+    }
+
+    #[test]
+    fn add_edge_updates_both_adjacencies() {
+        let g = path4();
+        assert_eq!(g.edge_count(), 3);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert_eq!(g.weight(1, 2), Some(2.0));
+        assert_eq!(g.weight(0, 3), None);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn duplicate_edge_rejected() {
+        let mut g = path4();
+        g.add_edge(1, 0, 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loop_rejected() {
+        let mut g = Graph::new(2);
+        g.add_edge(1, 1, 1.0);
+    }
+
+    #[test]
+    fn connectivity_and_tree() {
+        let g = path4();
+        assert!(g.is_connected());
+        assert!(g.is_tree());
+        let mut g2 = Graph::new(4);
+        g2.add_edge(0, 1, 1.0);
+        assert!(!g2.is_connected());
+        assert!(!g2.is_tree());
+        // cycle: connected but not a tree
+        let mut g3 = path4();
+        g3.add_edge(0, 3, 1.0);
+        assert!(g3.is_connected());
+        assert!(!g3.is_tree());
+    }
+
+    #[test]
+    fn bfs_hops_path() {
+        let g = path4();
+        assert_eq!(g.bfs_hops(0), vec![0, 1, 2, 3]);
+        assert_eq!(g.diameter_hops(), Some(3));
+    }
+
+    #[test]
+    fn diameter_none_when_disconnected() {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 1.0);
+        assert_eq!(g.diameter_hops(), None);
+    }
+
+    #[test]
+    fn dijkstra_prefers_lighter_path() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 3, 1.0);
+        g.add_edge(0, 2, 5.0);
+        g.add_edge(2, 3, 1.0);
+        let d = g.dijkstra(0);
+        assert_eq!(d[3], 2.0);
+        assert_eq!(d[2], 3.0); // via 0-1-3-2, not the direct 5.0 edge
+    }
+
+    #[test]
+    fn sorted_edges_deterministic() {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 2, 3.0);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        let es = g.sorted_edges();
+        assert_eq!((es[0].u, es[0].v), (0, 1));
+        assert_eq!((es[1].u, es[1].v), (1, 2));
+        assert_eq!((es[2].u, es[2].v), (0, 2));
+    }
+
+    #[test]
+    fn induced_subgraph_relabels_and_keeps_weights() {
+        let g = path4();
+        let (sub, map) = g.induced(&[1, 2, 3]);
+        assert_eq!(sub.node_count(), 3);
+        assert_eq!(map, vec![1, 2, 3]);
+        assert_eq!(sub.weight(0, 1), Some(2.0)); // old edge 1-2
+        assert_eq!(sub.weight(1, 2), Some(3.0)); // old edge 2-3
+        assert_eq!(sub.edge_count(), 2);
+    }
+
+    #[test]
+    fn induced_drops_cross_edges() {
+        let g = path4();
+        let (sub, _) = g.induced(&[0, 2]);
+        assert_eq!(sub.edge_count(), 0);
+        assert!(!sub.is_connected());
+    }
+
+    #[test]
+    fn neighbor_ids_sorted() {
+        let mut g = Graph::new(4);
+        g.add_edge(2, 3, 1.0);
+        g.add_edge(2, 0, 1.0);
+        g.add_edge(2, 1, 1.0);
+        assert_eq!(g.neighbor_ids(2), vec![0, 1, 3]);
+    }
+}

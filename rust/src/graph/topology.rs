@@ -1,0 +1,383 @@
+//! Topology generators for the paper's four experimental underlays
+//! (§IV-B, Fig 4): Erdős–Rényi, Watts–Strogatz, Barabási–Albert, Complete.
+//!
+//! Generators produce *structure only* (unit edge weights). The testbed
+//! model (`netsim::testbed`) then assigns each node to a subnet and replaces
+//! weights with simulated ping costs, mirroring how the paper measures edge
+//! costs on its physical three-router deployment.
+
+use super::Graph;
+use crate::util::rng::Pcg64;
+
+/// The four topology families evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// G(n, p) random graph (Erdős–Rényi 1959).
+    ErdosRenyi,
+    /// Small-world ring-rewire model (Watts–Strogatz 1998).
+    WattsStrogatz,
+    /// Scale-free preferential attachment (Barabási–Albert 1999).
+    BarabasiAlbert,
+    /// Every pair connected.
+    Complete,
+}
+
+impl TopologyKind {
+    pub const ALL: [TopologyKind; 4] = [
+        TopologyKind::ErdosRenyi,
+        TopologyKind::WattsStrogatz,
+        TopologyKind::BarabasiAlbert,
+        TopologyKind::Complete,
+    ];
+
+    /// Display name matching the paper's table rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::ErdosRenyi => "Erdos-Renyi",
+            TopologyKind::WattsStrogatz => "Watts-Strogatz",
+            TopologyKind::BarabasiAlbert => "Barabasi-Albert",
+            TopologyKind::Complete => "Complete",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s.to_ascii_lowercase().replace(['_', ' '], "-").as_str() {
+            "erdos-renyi" | "er" => Some(TopologyKind::ErdosRenyi),
+            "watts-strogatz" | "ws" | "watt" => Some(TopologyKind::WattsStrogatz),
+            "barabasi-albert" | "ba" | "barabasi" => Some(TopologyKind::BarabasiAlbert),
+            "complete" | "full" => Some(TopologyKind::Complete),
+            _ => None,
+        }
+    }
+}
+
+/// Generator parameters. Defaults follow the paper's N=10 setup: ER edge
+/// probability 0.35 (sparse but connectable), WS ring degree 4 with 0.3
+/// rewiring, BA attachment m=2.
+#[derive(Debug, Clone, Copy)]
+pub struct TopologyParams {
+    /// Erdős–Rényi edge probability.
+    pub er_p: f64,
+    /// Watts–Strogatz even ring degree k.
+    pub ws_k: usize,
+    /// Watts–Strogatz rewiring probability β.
+    pub ws_beta: f64,
+    /// Barabási–Albert edges added per new node.
+    pub ba_m: usize,
+}
+
+impl Default for TopologyParams {
+    fn default() -> Self {
+        TopologyParams { er_p: 0.35, ws_k: 4, ws_beta: 0.3, ba_m: 2 }
+    }
+}
+
+/// Generate a **connected** instance of the requested topology with unit
+/// weights. Randomized families retry with fresh randomness until connected
+/// (bounded), then fall back to augmenting the largest component — so the
+/// function always returns a connected graph.
+pub fn generate(kind: TopologyKind, n: usize, params: &TopologyParams, rng: &mut Pcg64) -> Graph {
+    assert!(n >= 2, "need at least 2 nodes, got {n}");
+    match kind {
+        TopologyKind::Complete => complete(n),
+        TopologyKind::ErdosRenyi => connected_or_augmented(rng, |rng| erdos_renyi(n, params.er_p, rng)),
+        TopologyKind::WattsStrogatz => {
+            connected_or_augmented(rng, |rng| watts_strogatz(n, params.ws_k, params.ws_beta, rng))
+        }
+        TopologyKind::BarabasiAlbert => barabasi_albert(n, params.ba_m, rng), // connected by construction
+    }
+}
+
+fn connected_or_augmented<F>(rng: &mut Pcg64, mut gen: F) -> Graph
+where
+    F: FnMut(&mut Pcg64) -> Graph,
+{
+    const MAX_TRIES: usize = 64;
+    let mut g = gen(rng);
+    for _ in 0..MAX_TRIES {
+        if g.is_connected() {
+            return g;
+        }
+        g = gen(rng);
+    }
+    augment_to_connected(g, rng)
+}
+
+/// Join components with random cross edges until connected.
+fn augment_to_connected(mut g: Graph, rng: &mut Pcg64) -> Graph {
+    loop {
+        let comp = components(&g);
+        let k = *comp.iter().max().unwrap() + 1;
+        if k == 1 {
+            return g;
+        }
+        // connect a random node of component 0 to a random node of another
+        let a: Vec<usize> = (0..g.node_count()).filter(|&u| comp[u] == 0).collect();
+        let b: Vec<usize> = (0..g.node_count()).filter(|&u| comp[u] != 0).collect();
+        let (u, v) = (*rng.choose(&a), *rng.choose(&b));
+        if !g.has_edge(u, v) {
+            g.add_edge(u, v, 1.0);
+        }
+    }
+}
+
+fn components(g: &Graph) -> Vec<usize> {
+    let n = g.node_count();
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    for start in 0..n {
+        if comp[start] != usize::MAX {
+            continue;
+        }
+        comp[start] = next;
+        let mut stack = vec![start];
+        while let Some(u) = stack.pop() {
+            for &(v, _) in g.neighbors(u) {
+                if comp[v] == usize::MAX {
+                    comp[v] = next;
+                    stack.push(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+/// Complete graph K_n.
+pub fn complete(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.add_edge(u, v, 1.0);
+        }
+    }
+    g
+}
+
+/// Erdős–Rényi G(n,p): each pair connected independently with probability p.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Pcg64) -> Graph {
+    assert!((0.0..=1.0).contains(&p), "p={p} out of [0,1]");
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.gen_bool(p) {
+                g.add_edge(u, v, 1.0);
+            }
+        }
+    }
+    g
+}
+
+/// Watts–Strogatz: ring lattice of even degree `k`, each lattice edge
+/// rewired with probability `beta` to a uniform random non-duplicate target.
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, rng: &mut Pcg64) -> Graph {
+    assert!(k % 2 == 0, "WS ring degree k must be even, got {k}");
+    assert!(k < n, "WS requires k < n (k={k}, n={n})");
+    assert!((0.0..=1.0).contains(&beta));
+    let mut g = Graph::new(n);
+    // ring lattice: node i connects to i+1 ..= i+k/2 (mod n)
+    for u in 0..n {
+        for d in 1..=(k / 2) {
+            let v = (u + d) % n;
+            if !g.has_edge(u, v) {
+                g.add_edge(u, v, 1.0);
+            }
+        }
+    }
+    // rewire: for each lattice edge (u, u+d), with prob beta replace by (u, w)
+    // Collect first to avoid mutating while iterating.
+    let originals: Vec<(usize, usize)> = g.edges().iter().map(|e| (e.u, e.v)).collect();
+    let mut edge_set: std::collections::BTreeSet<(usize, usize)> = originals.iter().copied().collect();
+    for (u, v) in originals {
+        if !rng.gen_bool(beta) {
+            continue;
+        }
+        // choose a new endpoint w != u, not already adjacent to u
+        let mut w = rng.gen_range(n);
+        let mut guard = 0;
+        while w == u || edge_set.contains(&ord(u, w)) {
+            w = rng.gen_range(n);
+            guard += 1;
+            if guard > 4 * n {
+                break; // node saturated; keep original edge
+            }
+        }
+        if guard > 4 * n {
+            continue;
+        }
+        edge_set.remove(&ord(u, v));
+        edge_set.insert(ord(u, w));
+    }
+    let mut out = Graph::new(n);
+    for (u, v) in edge_set {
+        out.add_edge(u, v, 1.0);
+    }
+    out
+}
+
+#[inline]
+fn ord(a: usize, b: usize) -> (usize, usize) {
+    if a < b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Barabási–Albert preferential attachment: start from an (m+1)-clique,
+/// each new node attaches to `m` distinct existing nodes with probability
+/// proportional to their degree.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Pcg64) -> Graph {
+    assert!(m >= 1 && m < n, "BA requires 1 <= m < n (m={m}, n={n})");
+    let seed = m + 1;
+    let mut g = Graph::new(n);
+    for u in 0..seed {
+        for v in (u + 1)..seed {
+            g.add_edge(u, v, 1.0);
+        }
+    }
+    // repeated-endpoints list implements degree-proportional sampling
+    let mut endpoints: Vec<usize> = Vec::new();
+    for e in g.edges() {
+        endpoints.push(e.u);
+        endpoints.push(e.v);
+    }
+    for u in seed..n {
+        let mut targets: Vec<usize> = Vec::with_capacity(m);
+        let mut guard = 0;
+        while targets.len() < m {
+            let t = *rng.choose(&endpoints);
+            if t != u && !targets.contains(&t) {
+                targets.push(t);
+            }
+            guard += 1;
+            if guard > 1000 * m {
+                // fallback: fill with lowest-id nodes not yet chosen
+                for t in 0..u {
+                    if targets.len() == m {
+                        break;
+                    }
+                    if !targets.contains(&t) {
+                        targets.push(t);
+                    }
+                }
+            }
+        }
+        for t in targets {
+            g.add_edge(u, t, 1.0);
+            endpoints.push(u);
+            endpoints.push(t);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_has_all_pairs() {
+        let g = complete(10);
+        assert_eq!(g.edge_count(), 45);
+        assert!(g.is_connected());
+        assert_eq!(g.degree(3), 9);
+    }
+
+    #[test]
+    fn er_density_tracks_p() {
+        let mut rng = Pcg64::new(1);
+        let n = 40;
+        let g = erdos_renyi(n, 0.3, &mut rng);
+        let max_edges = n * (n - 1) / 2;
+        let density = g.edge_count() as f64 / max_edges as f64;
+        assert!((density - 0.3).abs() < 0.08, "density {density}");
+    }
+
+    #[test]
+    fn er_extremes() {
+        let mut rng = Pcg64::new(2);
+        assert_eq!(erdos_renyi(8, 0.0, &mut rng).edge_count(), 0);
+        assert_eq!(erdos_renyi(8, 1.0, &mut rng).edge_count(), 28);
+    }
+
+    #[test]
+    fn ws_no_rewire_is_ring_lattice() {
+        let mut rng = Pcg64::new(3);
+        let g = watts_strogatz(10, 4, 0.0, &mut rng);
+        assert_eq!(g.edge_count(), 20); // n*k/2
+        for u in 0..10 {
+            assert_eq!(g.degree(u), 4);
+        }
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn ws_rewiring_preserves_edge_count() {
+        let mut rng = Pcg64::new(4);
+        let g = watts_strogatz(20, 4, 0.5, &mut rng);
+        assert_eq!(g.edge_count(), 40);
+    }
+
+    #[test]
+    fn ba_edge_count_and_connectivity() {
+        let mut rng = Pcg64::new(5);
+        let n = 30;
+        let m = 2;
+        let g = barabasi_albert(n, m, &mut rng);
+        let seed = m + 1;
+        assert_eq!(g.edge_count(), seed * (seed - 1) / 2 + (n - seed) * m);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn ba_has_hubs() {
+        // scale-free: max degree should far exceed m
+        let mut rng = Pcg64::new(6);
+        let g = barabasi_albert(100, 2, &mut rng);
+        let max_deg = (0..100).map(|u| g.degree(u)).max().unwrap();
+        assert!(max_deg >= 8, "expected a hub, max degree {max_deg}");
+    }
+
+    #[test]
+    fn generate_always_connected() {
+        let mut rng = Pcg64::new(7);
+        for kind in TopologyKind::ALL {
+            for _ in 0..10 {
+                let g = generate(kind, 10, &TopologyParams::default(), &mut rng);
+                assert!(g.is_connected(), "{kind:?} produced disconnected graph");
+                assert_eq!(g.node_count(), 10);
+            }
+        }
+    }
+
+    #[test]
+    fn generate_connected_even_with_sparse_er() {
+        // p low enough that raw draws are usually disconnected
+        let mut rng = Pcg64::new(8);
+        let params = TopologyParams { er_p: 0.02, ..Default::default() };
+        let g = generate(TopologyKind::ErdosRenyi, 12, &params, &mut rng);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn names_and_parse_roundtrip() {
+        for kind in TopologyKind::ALL {
+            assert_eq!(TopologyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(TopologyKind::parse("ws"), Some(TopologyKind::WattsStrogatz));
+        assert_eq!(TopologyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let params = TopologyParams::default();
+        let a = generate(TopologyKind::BarabasiAlbert, 15, &params, &mut Pcg64::new(99));
+        let b = generate(TopologyKind::BarabasiAlbert, 15, &params, &mut Pcg64::new(99));
+        assert_eq!(a.sorted_edges().len(), b.sorted_edges().len());
+        for (ea, eb) in a.sorted_edges().iter().zip(b.sorted_edges().iter()) {
+            assert_eq!((ea.u, ea.v), (eb.u, eb.v));
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! # MOSGU — graph-based gossiping for decentralized federated learning
+//!
+//! Production-grade reproduction of *"Graph-based Gossiping for
+//! Communication Efficiency in Decentralized Federated Learning"*
+//! (Nguyen et al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate):** the MOSGU coordination protocol — rotating
+//!   moderator, MST pruning, BFS-colored slot scheduling, FIFO gossip —
+//!   plus a discrete-event network simulator standing in for the paper's
+//!   physical three-router testbed, a flooding-broadcast baseline, and a
+//!   live TCP cluster mode.
+//! - **Layer 2 (build-time JAX):** the federated model's train/eval steps,
+//!   AOT-lowered to HLO text artifacts.
+//! - **Layer 1 (build-time Pallas):** aggregation / fused-linear / SGD
+//!   kernels called from Layer 2 (interpret mode → portable HLO).
+//!
+//! The `runtime` module loads the AOT artifacts through PJRT so the gossip
+//! request path never touches Python.
+//!
+//! Start with [`coordinator::session::GossipSession`] (one line to schedule
+//! and run a round) or `examples/quickstart.rs`.
+
+pub mod coloring;
+pub mod config;
+pub mod coordinator;
+pub mod dfl;
+pub mod graph;
+pub mod metrics;
+pub mod mst;
+pub mod netsim;
+pub mod runtime;
+pub mod transport;
+pub mod util;
+
+pub mod bench;

@@ -1,0 +1,197 @@
+//! Communication metrics — the paper's three evaluation indicators (§V):
+//! bandwidth (MB/s), average single-transfer time (s), and total time for
+//! one communication round (s) — plus table formatting for the CLI and
+//! benches.
+
+use crate::netsim::FlowRecord;
+use crate::util::stats::Summary;
+
+/// Metrics of one measured communication round.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    /// Every completed model transfer in the round.
+    pub transfers: Vec<FlowRecord>,
+    /// Wall-clock (simulated) duration until full dissemination (every
+    /// node holds every model).
+    pub total_time_s: f64,
+    /// Duration of the *exchange phase*: every node's own round-t update
+    /// delivered to its gossip neighbors — the blocking part of one FL
+    /// communication round (Table V's "total time"; dissemination of
+    /// forwarded copies pipelines with the next round). For broadcast the
+    /// two coincide.
+    pub exchange_time_s: f64,
+    /// Number of slots the schedule used (0 for broadcast).
+    pub slots: usize,
+}
+
+impl RoundMetrics {
+    /// Mean observed per-transfer goodput — the paper's "Bandwidth (MB/s)".
+    pub fn bandwidth_mbps(&self) -> f64 {
+        let mut s = Summary::new();
+        for t in &self.transfers {
+            s.push(t.bandwidth_mbps());
+        }
+        s.mean()
+    }
+
+    /// Mean single-transfer duration — the paper's Table IV indicator.
+    pub fn avg_transfer_s(&self) -> f64 {
+        let mut s = Summary::new();
+        for t in &self.transfers {
+            s.push(t.duration());
+        }
+        s.mean()
+    }
+
+    pub fn transfer_count(&self) -> usize {
+        self.transfers.len()
+    }
+
+    /// Total payload moved (MB), counting every copy.
+    pub fn total_payload_mb(&self) -> f64 {
+        self.transfers.iter().map(|t| t.payload_mb).sum()
+    }
+}
+
+/// Aggregate over repeated rounds (the paper reports averaged figures).
+#[derive(Debug, Clone, Default)]
+pub struct RepeatedMetrics {
+    pub bandwidth: Summary,
+    pub transfer: Summary,
+    /// full-dissemination time
+    pub total: Summary,
+    /// exchange-phase time (Table V's indicator)
+    pub exchange: Summary,
+}
+
+impl RepeatedMetrics {
+    pub fn push(&mut self, round: &RoundMetrics) {
+        self.bandwidth.push(round.bandwidth_mbps());
+        self.transfer.push(round.avg_transfer_s());
+        self.total.push(round.total_time_s);
+        self.exchange.push(round.exchange_time_s);
+    }
+}
+
+/// One cell of a paper table: broadcast vs proposed for a (topology,
+/// model) pair.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub topology: String,
+    pub model: String,
+    pub broadcast: RepeatedMetrics,
+    pub proposed: RepeatedMetrics,
+}
+
+/// Table renderer shared by the CLI and bench harnesses: rows = topologies,
+/// column groups = models, broadcast block then proposed block — mirroring
+/// the layout of Tables III–V.
+pub fn render_table(
+    title: &str,
+    topologies: &[String],
+    models: &[String],
+    value: impl Fn(&Cell) -> (f64, f64),
+    cells: &[Cell],
+) -> String {
+    let find = |t: &str, m: &str| cells.iter().find(|c| c.topology == t && c.model == m);
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let width = 9;
+    out.push_str(&format!("{:<17}", "topology"));
+    for side in ["B", "P"] {
+        for m in models {
+            out.push_str(&format!("{:>width$}", format!("{side}:{m}")));
+        }
+    }
+    out.push('\n');
+    for t in topologies {
+        out.push_str(&format!("{t:<17}"));
+        for pick_broadcast in [true, false] {
+            for m in models {
+                match find(t, m) {
+                    Some(cell) => {
+                        let (b, p) = value(cell);
+                        let v = if pick_broadcast { b } else { p };
+                        out.push_str(&format!("{v:>width$.3}"));
+                    }
+                    None => out.push_str(&format!("{:>width$}", "-")),
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::FlowRecord;
+
+    fn rec(mb: f64, start: f64, end: f64) -> FlowRecord {
+        FlowRecord { flow: 0, src: 0, dst: 1, payload_mb: mb, start, end, tag: 0 }
+    }
+
+    #[test]
+    fn round_metrics_aggregates() {
+        let m = RoundMetrics {
+            transfers: vec![rec(10.0, 0.0, 2.0), rec(10.0, 0.0, 5.0)],
+            total_time_s: 5.0,
+            exchange_time_s: 5.0,
+            slots: 2,
+        };
+        assert!((m.bandwidth_mbps() - (5.0 + 2.0) / 2.0).abs() < 1e-12);
+        assert!((m.avg_transfer_s() - 3.5).abs() < 1e-12);
+        assert_eq!(m.transfer_count(), 2);
+        assert!((m.total_payload_mb() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_metrics_average_rounds() {
+        let mut rep = RepeatedMetrics::default();
+        for total in [10.0, 20.0] {
+            rep.push(&RoundMetrics {
+                transfers: vec![rec(10.0, 0.0, 2.0)],
+                total_time_s: total,
+                exchange_time_s: total,
+                slots: 1,
+            });
+        }
+        assert_eq!(rep.total.count(), 2);
+        assert!((rep.total.mean() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_table_layout() {
+        let mut cell = Cell {
+            topology: "Complete".into(),
+            model: "v3s".into(),
+            broadcast: RepeatedMetrics::default(),
+            proposed: RepeatedMetrics::default(),
+        };
+        cell.broadcast.push(&RoundMetrics {
+            transfers: vec![rec(10.0, 0.0, 10.0)],
+            total_time_s: 10.0,
+            exchange_time_s: 10.0,
+            slots: 0,
+        });
+        cell.proposed.push(&RoundMetrics {
+            transfers: vec![rec(10.0, 0.0, 2.0)],
+            total_time_s: 3.0,
+            exchange_time_s: 2.0,
+            slots: 23,
+        });
+        let s = render_table(
+            "Table V",
+            &["Complete".into()],
+            &["v3s".into()],
+            |c| (c.broadcast.total.mean(), c.proposed.total.mean()),
+            &[cell],
+        );
+        assert!(s.contains("Table V"));
+        assert!(s.contains("Complete"));
+        assert!(s.contains("10.000"));
+        assert!(s.contains("3.000"));
+        assert!(s.contains("B:v3s") && s.contains("P:v3s"));
+    }
+}

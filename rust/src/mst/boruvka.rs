@@ -1,0 +1,94 @@
+//! Borůvka's algorithm, O(E log V) — the third §III-B candidate.
+//!
+//! Each phase every component selects its cheapest outgoing edge; all
+//! selected edges are added simultaneously and components merge. With
+//! distinct weights the result is the unique MST; for ties we order edges
+//! by (weight, u, v) like the other implementations so all three agree.
+
+use super::union_find::UnionFind;
+use super::MstError;
+use crate::graph::{Edge, Graph};
+
+/// Compute the MST of `g` by repeated cheapest-outgoing-edge contraction.
+pub fn boruvka(g: &Graph) -> Result<Graph, MstError> {
+    let n = g.node_count();
+    if n == 0 {
+        return Err(MstError::Empty);
+    }
+    let mut uf = UnionFind::new(n);
+    let mut tree = Graph::new(n);
+
+    // total ordering on edges for deterministic tie-breaks
+    let le = |a: &Edge, b: &Edge| {
+        (a.weight, a.u, a.v) < (b.weight, b.u, b.v)
+    };
+
+    while uf.components() > 1 {
+        // cheapest outgoing edge per component root
+        let mut best: Vec<Option<Edge>> = vec![None; n];
+        let mut any = false;
+        for e in g.edges() {
+            let (ru, rv) = (uf.find(e.u), uf.find(e.v));
+            if ru == rv {
+                continue;
+            }
+            any = true;
+            for r in [ru, rv] {
+                match &best[r] {
+                    Some(b) if !le(e, b) => {}
+                    _ => best[r] = Some(*e),
+                }
+            }
+        }
+        if !any {
+            return Err(MstError::Disconnected);
+        }
+        for e in best.into_iter().flatten() {
+            if uf.union(e.u, e.v) {
+                tree.add_edge(e.u, e.v, e.weight);
+            }
+        }
+    }
+    debug_assert_eq!(tree.edge_count(), n - 1);
+    Ok(tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merges_components_per_phase() {
+        // two "clusters" joined by one bridge: Borůvka should finish in 2 phases
+        let mut g = Graph::new(6);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(3, 4, 1.0);
+        g.add_edge(4, 5, 2.0);
+        g.add_edge(2, 3, 10.0); // bridge
+        let t = boruvka(&g).unwrap();
+        assert_eq!(t.edge_count(), 5);
+        assert!(t.has_edge(2, 3));
+        assert_eq!(t.total_weight(), 16.0);
+    }
+
+    #[test]
+    fn handles_equal_weights_without_cycles() {
+        let mut g = Graph::new(4);
+        for (u, v) in [(0, 1), (1, 2), (2, 3), (3, 0)] {
+            g.add_edge(u, v, 5.0);
+        }
+        let t = boruvka(&g).unwrap();
+        assert!(t.is_tree());
+        assert_eq!(t.total_weight(), 15.0);
+    }
+
+    #[test]
+    fn two_nodes() {
+        let mut g = Graph::new(2);
+        g.add_edge(0, 1, 3.0);
+        let t = boruvka(&g).unwrap();
+        assert_eq!(t.edge_count(), 1);
+        assert_eq!(t.weight(0, 1), Some(3.0));
+    }
+}

@@ -1,0 +1,68 @@
+//! Kruskal's algorithm, O(E log E) — the paper's §III-B sparse-graph
+//! alternative. Used in cross-checks and the MST ablation bench.
+
+use super::union_find::UnionFind;
+use super::MstError;
+use crate::graph::Graph;
+
+/// Compute the MST of `g` by sorting edges and joining components.
+pub fn kruskal(g: &Graph) -> Result<Graph, MstError> {
+    let n = g.node_count();
+    if n == 0 {
+        return Err(MstError::Empty);
+    }
+    let mut uf = UnionFind::new(n);
+    let mut tree = Graph::new(n);
+    for e in g.sorted_edges() {
+        if uf.union(e.u, e.v) {
+            tree.add_edge(e.u, e.v, e.weight);
+            if tree.edge_count() == n - 1 {
+                break;
+            }
+        }
+    }
+    if tree.edge_count() != n - 1 {
+        return Err(MstError::Disconnected);
+    }
+    Ok(tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skips_cycle_closing_edges() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(0, 2, 3.0); // closes a cycle, must be skipped
+        g.add_edge(2, 3, 4.0);
+        let t = kruskal(&g).unwrap();
+        assert!(!t.has_edge(0, 2));
+        assert_eq!(t.total_weight(), 7.0);
+    }
+
+    #[test]
+    fn stops_early_once_spanning() {
+        // heaviest edge irrelevant; result must still be correct
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(0, 2, 100.0);
+        let t = kruskal(&g).unwrap();
+        assert_eq!(t.edge_count(), 2);
+        assert_eq!(t.total_weight(), 3.0);
+    }
+
+    #[test]
+    fn deterministic_on_equal_weights() {
+        let mut g = Graph::new(4);
+        for (u, v) in [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)] {
+            g.add_edge(u, v, 1.0);
+        }
+        // sorted_edges tie-breaks by endpoints: picks (0,1),(0,2),(0,3)
+        let t = kruskal(&g).unwrap();
+        assert!(t.has_edge(0, 1) && t.has_edge(0, 2) && t.has_edge(0, 3));
+    }
+}

@@ -1,0 +1,187 @@
+//! Minimum spanning tree algorithms (paper §III-B, "O — Optimize
+//! connectivity").
+//!
+//! The paper selects **Prim's** algorithm for its experiments (complete
+//! overlay ⇒ dense graph); we also implement Kruskal's and Borůvka's so the
+//! complexity discussion in §III-B can be benchmarked (`benches/
+//! ablation_mst.rs`) and so property tests can cross-check total weights.
+
+pub mod boruvka;
+pub mod kruskal;
+pub mod prim;
+pub mod union_find;
+
+pub use boruvka::boruvka;
+pub use kruskal::kruskal;
+pub use prim::prim;
+
+use crate::graph::Graph;
+
+/// Which MST algorithm to run (CLI / config selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MstAlgorithm {
+    Prim,
+    Kruskal,
+    Boruvka,
+}
+
+impl MstAlgorithm {
+    pub const ALL: [MstAlgorithm; 3] =
+        [MstAlgorithm::Prim, MstAlgorithm::Kruskal, MstAlgorithm::Boruvka];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MstAlgorithm::Prim => "prim",
+            MstAlgorithm::Kruskal => "kruskal",
+            MstAlgorithm::Boruvka => "boruvka",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "prim" => Some(MstAlgorithm::Prim),
+            "kruskal" => Some(MstAlgorithm::Kruskal),
+            "boruvka" | "borůvka" => Some(MstAlgorithm::Boruvka),
+            _ => None,
+        }
+    }
+
+    /// Run this algorithm on `g`.
+    pub fn run(&self, g: &Graph) -> Result<Graph, MstError> {
+        match self {
+            MstAlgorithm::Prim => prim(g),
+            MstAlgorithm::Kruskal => kruskal(g),
+            MstAlgorithm::Boruvka => boruvka(g),
+        }
+    }
+}
+
+/// MST construction failures.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum MstError {
+    #[error("graph is disconnected; spanning tree does not exist")]
+    Disconnected,
+    #[error("graph is empty")]
+    Empty,
+}
+
+/// Shared validity check: `t` is a spanning tree of `g` with edges drawn
+/// from `g` (weights must match).
+pub fn is_spanning_tree_of(t: &Graph, g: &Graph) -> bool {
+    if t.node_count() != g.node_count() || !t.is_tree() {
+        return false;
+    }
+    t.edges().iter().all(|e| g.weight(e.u, e.v) == Some(e.weight))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::{complete, erdos_renyi};
+    use crate::util::rng::Pcg64;
+
+    /// Fig-2-style fixture: a weighted graph with a unique MST.
+    pub(crate) fn diamond() -> Graph {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 3, 3.0);
+        g.add_edge(3, 0, 4.0);
+        g.add_edge(0, 2, 5.0);
+        g
+    }
+
+    #[test]
+    fn all_algorithms_agree_on_diamond() {
+        for alg in MstAlgorithm::ALL {
+            let t = alg.run(&diamond()).unwrap();
+            assert!(is_spanning_tree_of(&t, &diamond()), "{alg:?}");
+            assert_eq!(t.total_weight(), 6.0, "{alg:?} total weight");
+            assert!(t.has_edge(0, 1) && t.has_edge(1, 2) && t.has_edge(2, 3));
+        }
+    }
+
+    #[test]
+    fn all_algorithms_agree_on_random_weights() {
+        let mut rng = Pcg64::new(42);
+        for trial in 0..20 {
+            let mut g = erdos_renyi(12, 0.5, &mut rng);
+            if !g.is_connected() {
+                continue;
+            }
+            // distinct random weights => unique MST => identical edge sets
+            let mut shuffled: Vec<f64> = (0..g.edge_count()).map(|i| i as f64 + 1.0).collect();
+            rng.shuffle(&mut shuffled);
+            let mut wg = Graph::new(g.node_count());
+            for (i, e) in g.sorted_edges().iter().enumerate() {
+                wg.add_edge(e.u, e.v, shuffled[i]);
+            }
+            g = wg;
+            let tp = prim(&g).unwrap();
+            let tk = kruskal(&g).unwrap();
+            let tb = boruvka(&g).unwrap();
+            assert_eq!(tp.total_weight(), tk.total_weight(), "trial {trial}");
+            assert_eq!(tk.total_weight(), tb.total_weight(), "trial {trial}");
+            assert!(is_spanning_tree_of(&tp, &g));
+            assert!(is_spanning_tree_of(&tk, &g));
+            assert!(is_spanning_tree_of(&tb, &g));
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_errors() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        for alg in MstAlgorithm::ALL {
+            assert_eq!(alg.run(&g).unwrap_err(), MstError::Disconnected, "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn empty_graph_errors() {
+        let g = Graph::new(0);
+        for alg in MstAlgorithm::ALL {
+            assert_eq!(alg.run(&g).unwrap_err(), MstError::Empty, "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn single_node_tree() {
+        let g = Graph::new(1);
+        for alg in MstAlgorithm::ALL {
+            let t = alg.run(&g).unwrap();
+            assert_eq!(t.node_count(), 1);
+            assert_eq!(t.edge_count(), 0);
+        }
+    }
+
+    #[test]
+    fn complete_graph_mst_has_n_minus_1_edges() {
+        let g = complete(10);
+        for alg in MstAlgorithm::ALL {
+            let t = alg.run(&g).unwrap();
+            assert_eq!(t.edge_count(), 9, "{alg:?}");
+            assert!(t.is_tree());
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        for alg in MstAlgorithm::ALL {
+            assert_eq!(MstAlgorithm::parse(alg.name()), Some(alg));
+        }
+        assert_eq!(MstAlgorithm::parse("PRIM"), Some(MstAlgorithm::Prim));
+        assert_eq!(MstAlgorithm::parse("dijkstra"), None);
+    }
+
+    #[test]
+    fn spanning_tree_validator_rejects_fake_edges() {
+        let g = diamond();
+        let mut fake = Graph::new(4);
+        fake.add_edge(0, 1, 1.0);
+        fake.add_edge(1, 2, 2.0);
+        fake.add_edge(1, 3, 99.0); // not an edge of g
+        assert!(!is_spanning_tree_of(&fake, &g));
+    }
+}

@@ -1,0 +1,123 @@
+//! Prim's algorithm — the paper's selected MST construction (§III-B):
+//! "due to its straightforward implementation as well as the advantages of
+//! dealing with a high number of nodes in a complete graph, we choose
+//! Prim's algorithm."
+//!
+//! Binary-heap implementation, O(E log V). Ties are broken by (weight,
+//! lower endpoint id) so the result is deterministic on equal-cost edges.
+
+use super::MstError;
+use crate::graph::Graph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: candidate edge reaching `to` from inside the tree.
+#[derive(Debug, PartialEq)]
+struct Candidate {
+    weight: f64,
+    from: usize,
+    to: usize,
+}
+
+impl Eq for Candidate {}
+
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on (weight, from, to) via reversed comparison
+        other
+            .weight
+            .partial_cmp(&self.weight)
+            .unwrap()
+            .then(other.from.cmp(&self.from))
+            .then(other.to.cmp(&self.to))
+    }
+}
+
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Compute the MST of `g` rooted at node 0.
+pub fn prim(g: &Graph) -> Result<Graph, MstError> {
+    let n = g.node_count();
+    if n == 0 {
+        return Err(MstError::Empty);
+    }
+    let mut in_tree = vec![false; n];
+    let mut tree = Graph::new(n);
+    let mut heap = BinaryHeap::new();
+
+    in_tree[0] = true;
+    for &(v, w) in g.neighbors(0) {
+        heap.push(Candidate { weight: w, from: 0, to: v });
+    }
+
+    let mut added = 0;
+    while let Some(Candidate { weight, from, to }) = heap.pop() {
+        if in_tree[to] {
+            continue;
+        }
+        in_tree[to] = true;
+        tree.add_edge(from, to, weight);
+        added += 1;
+        if added == n - 1 {
+            break;
+        }
+        for &(v, w) in g.neighbors(to) {
+            if !in_tree[v] {
+                heap.push(Candidate { weight: w, from: to, to: v });
+            }
+        }
+    }
+
+    if added != n - 1 {
+        return Err(MstError::Disconnected);
+    }
+    Ok(tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_lightest_edges() {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        g.add_edge(0, 2, 10.0);
+        let t = prim(&g).unwrap();
+        assert_eq!(t.total_weight(), 2.0);
+        assert!(!t.has_edge(0, 2));
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        // two equal-weight spanning trees; Prim must pick the same one every run
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 1.0);
+        g.add_edge(1, 2, 1.0);
+        let t1 = prim(&g).unwrap();
+        let t2 = prim(&g).unwrap();
+        let e1: Vec<_> = t1.sorted_edges().iter().map(|e| (e.u, e.v)).collect();
+        let e2: Vec<_> = t2.sorted_edges().iter().map(|e| (e.u, e.v)).collect();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn paper_example_mst() {
+        // Reconstruction of the paper's Fig 2 example: 10 nodes A..K (no J),
+        // complete-ish graph whose MST is the path/tree used by Table I:
+        // A-H, H-F, F-E, F-G, G-K, K-I, I-B, B-C, C-D.
+        let g = crate::coordinator::example::paper_example_graph();
+        let t = prim(&g).unwrap();
+        let expect = crate::coordinator::example::paper_example_mst_edges();
+        for (u, v) in expect {
+            assert!(t.has_edge(u, v), "missing MST edge ({u},{v})");
+        }
+        assert_eq!(t.edge_count(), 9);
+    }
+}

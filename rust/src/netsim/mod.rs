@@ -1,0 +1,534 @@
+//! Discrete-event fluid-flow network simulator.
+//!
+//! Stands in for the paper's physical testbed (ten Ubuntu devices behind
+//! three routers, §IV-A / Fig 3). Hosts exchange fixed-size payloads over
+//! directed channels with capacity and propagation latency; concurrent
+//! flows on a channel share bandwidth max-min fairly; sustained
+//! oversubscription inflates the bytes a flow must move (TCP-loss /
+//! retransmission model — the paper's "packet loss … necessitates
+//! retransmission, worsening congestion").
+//!
+//! The simulation is event-driven: rates are piecewise constant between
+//! flow arrivals/completions, so the engine jumps from completion to
+//! completion rather than ticking.
+
+pub mod fairshare;
+pub mod testbed;
+
+use crate::util::rng::Pcg64;
+use fairshare::max_min_rates;
+
+/// Identifier of a simulated host (device or router).
+pub type HostId = usize;
+/// Identifier of a directed channel.
+pub type ChannelId = usize;
+/// Identifier of a flow.
+pub type FlowId = usize;
+
+/// A directed channel with fixed capacity and propagation latency.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub capacity_mbps: f64,
+    pub latency_s: f64,
+    /// human-readable endpoint description for debugging
+    pub label: String,
+}
+
+/// Loss/retransmission model parameters (see DESIGN.md §2).
+///
+/// When a flow starts on a route whose bottleneck channel carries `k`
+/// concurrent flows, the bytes it must move are inflated by
+/// `1 + gain · ln(k) · (1 − exp(−size_mb / size_scale_mb))`:
+/// more sharing ⇒ more loss; longer saturation (bigger payload) ⇒ the
+/// loss compounds. Calibrated against the paper's broadcast column.
+#[derive(Debug, Clone, Copy)]
+pub struct LossModel {
+    pub gain: f64,
+    pub size_scale_mb: f64,
+}
+
+impl Default for LossModel {
+    fn default() -> Self {
+        // Calibrated against the paper's Table III broadcast column (see
+        // EXPERIMENTS.md §Calibration): bandwidth 1.79→0.77 MB/s as model
+        // size grows 11.6→48 MB under ~9-way uplink contention.
+        LossModel { gain: 1.8, size_scale_mb: 60.0 }
+    }
+}
+
+impl LossModel {
+    /// Byte inflation factor for a new flow.
+    pub fn inflation(&self, size_mb: f64, bottleneck_flows: usize) -> f64 {
+        if bottleneck_flows <= 1 || self.gain == 0.0 {
+            return 1.0;
+        }
+        1.0 + self.gain * (bottleneck_flows as f64).ln() * (1.0 - (-size_mb / self.size_scale_mb).exp())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FlowState {
+    Active,
+    Done,
+}
+
+/// One payload transfer in flight.
+#[derive(Debug, Clone)]
+struct Flow {
+    src: HostId,
+    dst: HostId,
+    route: Vec<ChannelId>,
+    /// payload size before loss inflation (MB)
+    payload_mb: f64,
+    /// bytes still to move, including inflation (MB)
+    remaining_mb: f64,
+    start: f64,
+    end: f64,
+    state: FlowState,
+    /// opaque tag the driver can use (model owner id, etc.)
+    tag: u64,
+}
+
+/// Completed-transfer record handed to metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowRecord {
+    pub flow: FlowId,
+    pub src: HostId,
+    pub dst: HostId,
+    pub payload_mb: f64,
+    pub start: f64,
+    pub end: f64,
+    pub tag: u64,
+}
+
+impl FlowRecord {
+    /// Transfer duration in seconds.
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// Observed goodput — the paper's "bandwidth (MB/s)" indicator is the
+    /// payload (not retransmitted bytes) over wall time.
+    pub fn bandwidth_mbps(&self) -> f64 {
+        self.payload_mb / self.duration()
+    }
+}
+
+/// The simulator.
+pub struct NetSim {
+    now: f64,
+    channels: Vec<Channel>,
+    /// cached channel capacities (hot: read once per event)
+    caps: Vec<f64>,
+    flows: Vec<Flow>,
+    loss: LossModel,
+    /// per-flow protocol overhead fraction (headers/acks)
+    protocol_overhead: f64,
+    rng: Pcg64,
+    /// relative jitter applied to each flow's effective size
+    transfer_jitter: f64,
+    completed: Vec<FlowRecord>,
+}
+
+impl NetSim {
+    pub fn new(channels: Vec<Channel>, loss: LossModel, protocol_overhead: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&protocol_overhead));
+        let caps = channels.iter().map(|c| c.capacity_mbps).collect();
+        NetSim {
+            now: 0.0,
+            channels,
+            caps,
+            flows: Vec::new(),
+            loss,
+            protocol_overhead,
+            rng: Pcg64::new(seed),
+            transfer_jitter: 0.0,
+            completed: Vec::new(),
+        }
+    }
+
+    /// Enable per-transfer size jitter (fraction, uniform ±).
+    pub fn set_transfer_jitter(&mut self, j: f64) {
+        assert!((0.0..0.5).contains(&j));
+        self.transfer_jitter = j;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn channel(&self, c: ChannelId) -> &Channel {
+        &self.channels[c]
+    }
+
+    pub fn active_flow_count(&self) -> usize {
+        self.flows.iter().filter(|f| f.state == FlowState::Active).count()
+    }
+
+    /// Records of all completed flows so far.
+    pub fn completed(&self) -> &[FlowRecord] {
+        &self.completed
+    }
+
+    pub fn take_completed(&mut self) -> Vec<FlowRecord> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Start a transfer of `payload_mb` along `route` at the current time.
+    ///
+    /// The effective bytes to move include protocol overhead and optional
+    /// jitter. Congestion loss is applied *dynamically* while the flow is
+    /// draining (see [`NetSim::active_rates`]): whenever its bottleneck
+    /// channel is shared by `k` flows, the goodput drops below the fair
+    /// share by the [`LossModel`] inflation factor — so loss reacts to
+    /// congestion arriving and leaving during the transfer, symmetric in
+    /// start order.
+    pub fn start_flow(
+        &mut self,
+        src: HostId,
+        dst: HostId,
+        route: Vec<ChannelId>,
+        payload_mb: f64,
+        tag: u64,
+    ) -> FlowId {
+        assert!(!route.is_empty(), "empty route {src}->{dst}");
+        assert!(payload_mb > 0.0, "payload must be positive");
+        for &c in &route {
+            assert!(c < self.channels.len(), "bad channel {c}");
+        }
+        let jitter = if self.transfer_jitter > 0.0 {
+            1.0 + self.rng.gen_f64_range(-self.transfer_jitter, self.transfer_jitter)
+        } else {
+            1.0
+        };
+        let effective = payload_mb * (1.0 + self.protocol_overhead) * jitter;
+        let id = self.flows.len();
+        self.flows.push(Flow {
+            src,
+            dst,
+            route,
+            payload_mb,
+            remaining_mb: effective,
+            start: self.now,
+            end: f64::NAN,
+            state: FlowState::Active,
+            tag,
+        });
+        id
+    }
+
+    /// Current goodput of active flows, as (flow, rate) pairs: max-min fair
+    /// share divided by the congestion-loss inflation for the flow's
+    /// current bottleneck occupancy.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf/L3): routes are borrowed, not
+    /// cloned, and channel capacities are cached — this function runs once
+    /// per simulation event and dominated the profile before that change.
+    fn active_rates(&self) -> Vec<(FlowId, f64)> {
+        let active: Vec<FlowId> = (0..self.flows.len())
+            .filter(|&f| self.flows[f].state == FlowState::Active)
+            .collect();
+        if active.is_empty() {
+            return Vec::new();
+        }
+        let routes: Vec<&[usize]> =
+            active.iter().map(|&f| self.flows[f].route.as_slice()).collect();
+        let rates = max_min_rates(&self.caps, &routes);
+        // current per-channel occupancy for the loss model
+        let mut occupancy = vec![0usize; self.channels.len()];
+        for route in &routes {
+            for &c in *route {
+                occupancy[c] += 1;
+            }
+        }
+        active
+            .into_iter()
+            .zip(rates)
+            .map(|(f, r)| {
+                let bottleneck = self.flows[f].route.iter().map(|&c| occupancy[c]).max().unwrap();
+                let infl = self.loss.inflation(self.flows[f].payload_mb, bottleneck);
+                (f, r / infl)
+            })
+            .collect()
+    }
+
+    /// Advance simulated time to `t`, draining flow bytes at current rates
+    /// and completing flows along the way. `t` must be ≥ `now`.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t >= self.now - 1e-12, "cannot rewind time {} -> {t}", self.now);
+        while self.now < t {
+            let rates = self.active_rates();
+            if rates.is_empty() {
+                self.now = t;
+                return;
+            }
+            // earliest completion under current rates
+            let mut next_done: Option<(f64, FlowId)> = None;
+            for &(f, r) in &rates {
+                if r <= 0.0 {
+                    continue;
+                }
+                let eta = self.now + self.flows[f].remaining_mb / r;
+                if next_done.is_none() || eta < next_done.unwrap().0 {
+                    next_done = Some((eta, f));
+                }
+            }
+            let expected = match next_done {
+                Some((eta, f)) if eta <= t => Some(f),
+                _ => None,
+            };
+            let horizon = match next_done {
+                Some((eta, _)) if eta <= t => eta,
+                _ => t,
+            };
+            let dt = horizon - self.now;
+            for &(f, r) in &rates {
+                self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
+            }
+            // Force-complete the flow whose ETA set the horizon: when `now`
+            // is large, `horizon - now` cancels catastrophically and can
+            // leave a ~1e-12 MB remainder that never crosses the threshold,
+            // livelocking the event loop (§Perf/L3 bugfix).
+            if let Some(f) = expected {
+                self.flows[f].remaining_mb = 0.0;
+            }
+            self.now = horizon;
+            // complete every drained flow (ties complete together);
+            // 1e-9 MB ≈ 1 byte — physically nothing left to send
+            let drained: Vec<FlowId> = rates
+                .iter()
+                .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
+                .map(|&(f, _)| f)
+                .collect();
+            for f in drained {
+                self.complete(f);
+            }
+        }
+    }
+
+    /// Run until every flow has completed; returns the completion time of
+    /// the last one (or `now` if nothing was active).
+    ///
+    /// Drains inline rather than delegating to [`NetSim::advance_to`], so
+    /// the max-min allocation runs exactly once per event (§Perf/L3).
+    pub fn run_until_idle(&mut self) -> f64 {
+        loop {
+            let rates = self.active_rates();
+            if rates.is_empty() {
+                return self.now;
+            }
+            let mut eta_min = f64::INFINITY;
+            let mut f_min = usize::MAX;
+            for &(f, r) in &rates {
+                if r > 0.0 {
+                    let eta = self.now + self.flows[f].remaining_mb / r;
+                    if eta < eta_min {
+                        eta_min = eta;
+                        f_min = f;
+                    }
+                }
+            }
+            assert!(eta_min.is_finite(), "active flows with zero rate — capacity exhausted");
+            let dt = eta_min - self.now;
+            for &(f, r) in &rates {
+                self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
+            }
+            // see advance_to: force the horizon-setting flow to complete so
+            // float cancellation cannot livelock the loop
+            self.flows[f_min].remaining_mb = 0.0;
+            self.now = eta_min;
+            let drained: Vec<FlowId> = rates
+                .iter()
+                .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
+                .map(|&(f, _)| f)
+                .collect();
+            for f in drained {
+                self.complete(f);
+            }
+        }
+    }
+
+    /// Next flow-completion time if the system runs undisturbed.
+    pub fn next_completion_eta(&self) -> Option<f64> {
+        let rates = self.active_rates();
+        let mut eta = f64::INFINITY;
+        for (f, r) in rates {
+            if r > 0.0 {
+                eta = eta.min(self.now + self.flows[f].remaining_mb / r);
+            }
+        }
+        eta.is_finite().then_some(eta)
+    }
+
+    fn complete(&mut self, f: FlowId) {
+        let latency: f64 = self.flows[f].route.iter().map(|&c| self.channels[c].latency_s).sum();
+        let flow = &mut self.flows[f];
+        flow.state = FlowState::Done;
+        // delivery = drain completion + propagation along the route
+        flow.end = self.now + latency;
+        self.completed.push(FlowRecord {
+            flow: f,
+            src: flow.src,
+            dst: flow.dst,
+            payload_mb: flow.payload_mb,
+            start: flow.start,
+            end: flow.end,
+            tag: flow.tag,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_host_net(cap: f64, lat: f64) -> NetSim {
+        // channel 0: h0 -> h1, channel 1: h1 -> h0
+        let ch = |label: &str| Channel { capacity_mbps: cap, latency_s: lat, label: label.into() };
+        NetSim::new(vec![ch("0->1"), ch("1->0")], LossModel { gain: 0.0, size_scale_mb: 1.0 }, 0.0, 1)
+    }
+
+    #[test]
+    fn single_transfer_time_is_size_over_rate_plus_latency() {
+        let mut sim = two_host_net(10.0, 0.05);
+        sim.start_flow(0, 1, vec![0], 20.0, 0);
+        let t = sim.run_until_idle();
+        assert!((t - 2.0).abs() < 1e-9, "drain time {t}");
+        let rec = &sim.completed()[0];
+        assert!((rec.end - 2.05).abs() < 1e-9, "delivery {}", rec.end);
+        assert!((rec.duration() - 2.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_flows_share_fairly_doubling_duration() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.start_flow(0, 1, vec![0], 10.0, 0);
+        sim.start_flow(0, 1, vec![0], 10.0, 1);
+        sim.run_until_idle();
+        for rec in sim.completed() {
+            assert!((rec.duration() - 2.0).abs() < 1e-9, "{rec:?}");
+            assert!((rec.bandwidth_mbps() - 5.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn staggered_flow_speeds_up_after_first_completes() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.start_flow(0, 1, vec![0], 5.0, 0); // alone: 0.5s; shared: longer
+        sim.advance_to(0.25);
+        sim.start_flow(0, 1, vec![0], 10.0, 1);
+        let t = sim.run_until_idle();
+        // flow0 has 2.5MB left at t=.25 shared at 5MB/s -> done t=0.75
+        // flow1 moves 2.5MB by 0.75, then 7.5MB alone at 10 -> done t=1.5
+        assert!((t - 1.5).abs() < 1e-9, "t={t}");
+        let d0 = sim.completed()[0].duration();
+        let d1 = sim.completed()[1].duration();
+        assert!((d0 - 0.75).abs() < 1e-9, "d0={d0}");
+        assert!((d1 - 1.25).abs() < 1e-9, "d1={d1}");
+    }
+
+    #[test]
+    fn byte_conservation_zero_loss() {
+        let mut sim = two_host_net(8.0, 0.0);
+        sim.start_flow(0, 1, vec![0], 4.0, 0);
+        sim.start_flow(1, 0, vec![1], 4.0, 1);
+        let t = sim.run_until_idle();
+        // duplex: opposite directions don't contend
+        assert!((t - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_inflation_slows_contended_big_transfers() {
+        let loss = LossModel { gain: 0.5, size_scale_mb: 10.0 };
+        let ch = Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "c".into() };
+        let mut sim = NetSim::new(vec![ch], loss, 0.0, 1);
+        sim.start_flow(0, 1, vec![0], 30.0, 0);
+        sim.start_flow(0, 1, vec![0], 30.0, 1);
+        sim.run_until_idle();
+        let bw = sim.completed()[0].bandwidth_mbps();
+        // fair share would be 5.0; inflation must push goodput below that
+        assert!(bw < 5.0, "bw={bw}");
+        // and small transfers should be inflated less
+        let ch = Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "c".into() };
+        let mut sim2 = NetSim::new(vec![ch], loss, 0.0, 1);
+        sim2.start_flow(0, 1, vec![0], 1.0, 0);
+        sim2.start_flow(0, 1, vec![0], 1.0, 1);
+        sim2.run_until_idle();
+        let bw_small = sim2.completed()[0].bandwidth_mbps();
+        // normalize by payload: compare goodput fractions of fair share
+        assert!(bw_small / 5.0 > bw / 5.0, "small {bw_small} should beat large {bw}");
+    }
+
+    #[test]
+    fn protocol_overhead_extends_duration() {
+        let ch = Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "c".into() };
+        let mut sim = NetSim::new(vec![ch], LossModel { gain: 0.0, size_scale_mb: 1.0 }, 0.10, 1);
+        sim.start_flow(0, 1, vec![0], 10.0, 0);
+        let t = sim.run_until_idle();
+        assert!((t - 1.1).abs() < 1e-9, "t={t}");
+        // but reported bandwidth uses payload only
+        assert!((sim.completed()[0].bandwidth_mbps() - 10.0 / 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_to_without_flows_just_moves_clock() {
+        let mut sim = two_host_net(1.0, 0.0);
+        sim.advance_to(5.0);
+        assert_eq!(sim.now(), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot rewind")]
+    fn advance_backwards_panics() {
+        let mut sim = two_host_net(1.0, 0.0);
+        sim.advance_to(1.0);
+        sim.advance_to(0.5);
+    }
+
+    #[test]
+    fn multihop_route_bottleneck() {
+        // h0 -> r (10), r -> h1 (2): end-to-end rate 2
+        let chans = vec![
+            Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "up".into() },
+            Channel { capacity_mbps: 2.0, latency_s: 0.0, label: "down".into() },
+        ];
+        let mut sim = NetSim::new(chans, LossModel { gain: 0.0, size_scale_mb: 1.0 }, 0.0, 1);
+        sim.start_flow(0, 1, vec![0, 1], 4.0, 0);
+        let t = sim.run_until_idle();
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ties_complete_together() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.start_flow(0, 1, vec![0], 5.0, 0);
+        sim.start_flow(0, 1, vec![0], 5.0, 1);
+        sim.run_until_idle();
+        assert_eq!(sim.completed().len(), 2);
+        let e0 = sim.completed()[0].end;
+        let e1 = sim.completed()[1].end;
+        assert!((e0 - e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tags_are_preserved() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.start_flow(0, 1, vec![0], 1.0, 77);
+        sim.run_until_idle();
+        assert_eq!(sim.completed()[0].tag, 77);
+    }
+
+    #[test]
+    fn jitter_varies_durations_but_stays_bounded() {
+        let ch = Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "c".into() };
+        let mut sim = NetSim::new(vec![ch], LossModel { gain: 0.0, size_scale_mb: 1.0 }, 0.0, 3);
+        sim.set_transfer_jitter(0.1);
+        for i in 0..10 {
+            sim.start_flow(0, 1, vec![0], 10.0, i);
+            sim.run_until_idle();
+        }
+        let durs: Vec<f64> = sim.completed().iter().map(|r| r.duration()).collect();
+        assert!(durs.iter().any(|&d| (d - 1.0).abs() > 1e-6), "jitter had no effect");
+        assert!(durs.iter().all(|&d| (0.9..=1.1).contains(&d)), "{durs:?}");
+    }
+}

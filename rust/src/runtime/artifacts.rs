@@ -1,0 +1,135 @@
+//! Artifact management: the manifest written by `python -m compile.aot`
+//! and the convenience loader bundling the three computations the DFL
+//! layer needs (train, eval, aggregate) plus the initial parameters.
+
+use super::{read_f32_file, LoadedComputation, Runtime};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `manifest.txt` (flat `key = value` integers).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactManifest {
+    pub param_dim: usize,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub pad_multiple: usize,
+}
+
+impl ArtifactManifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: BTreeMap<&str, usize> = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad manifest line {line:?}"))?;
+            kv.insert(k.trim(), v.trim().parse::<usize>()
+                .with_context(|| format!("bad manifest value {line:?}"))?);
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k).copied().with_context(|| format!("manifest missing {k:?}"))
+        };
+        Ok(ArtifactManifest {
+            param_dim: get("param_dim")?,
+            param_count: get("param_count")?,
+            batch: get("batch")?,
+            seq_len: get("seq_len")?,
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            d_ff: get("d_ff")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            pad_multiple: get("pad_multiple")?,
+        })
+    }
+}
+
+/// The full artifact bundle, compiled and ready to execute.
+pub struct ArtifactSet {
+    pub manifest: ArtifactManifest,
+    pub train_step: LoadedComputation,
+    pub eval_step: LoadedComputation,
+    pub aggregate: LoadedComputation,
+    pub init_params: Vec<f32>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Load and compile everything from an artifacts directory.
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Self> {
+        anyhow::ensure!(
+            dir.join("manifest.txt").exists(),
+            "no artifacts in {dir:?} — run `make artifacts` first"
+        );
+        let manifest = ArtifactManifest::load(&dir.join("manifest.txt"))?;
+        let train_step = rt.load_hlo_text(&dir.join("train_step.hlo.txt"))?;
+        let eval_step = rt.load_hlo_text(&dir.join("eval_step.hlo.txt"))?;
+        let aggregate = rt.load_hlo_text(&dir.join("aggregate.hlo.txt"))?;
+        let init_params = read_f32_file(&dir.join("init_params.f32"))?;
+        anyhow::ensure!(
+            init_params.len() == manifest.param_dim,
+            "init_params length {} != manifest param_dim {}",
+            init_params.len(),
+            manifest.param_dim
+        );
+        Ok(ArtifactSet {
+            manifest,
+            train_step,
+            eval_step,
+            aggregate,
+            init_params,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Serialized parameter size in MB — what one gossip transfer moves.
+    pub fn model_mb(&self) -> f64 {
+        (self.manifest.param_dim * 4) as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "param_dim = 524288\nparam_count = 469504\nbatch = 8\n\
+        seq_len = 64\nvocab = 256\nd_model = 128\nd_ff = 512\nn_layers = 2\n\
+        n_heads = 4\npad_multiple = 65536\n";
+
+    #[test]
+    fn parse_manifest() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.param_dim, 524288);
+        assert_eq!(m.param_count, 469504);
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.seq_len, 64);
+        assert_eq!(m.n_heads, 4);
+    }
+
+    #[test]
+    fn parse_rejects_missing_key() {
+        assert!(ArtifactManifest::parse("param_dim = 4\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ArtifactManifest::parse("param_dim four\n").is_err());
+        assert!(ArtifactManifest::parse(&SAMPLE.replace("8", "eight")).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them on the
+//! CPU client — the Rust side of the three-layer stack. Python is never on
+//! this path; it ran once at `make artifacts`.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. Adapted from /opt/xla-example/load_hlo/.
+
+pub mod artifacts;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use artifacts::{ArtifactManifest, ArtifactSet};
+
+/// A compiled PJRT executable plus its loading metadata.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The runtime: one CPU PJRT client, many compiled computations.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Stand up the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    ///
+    /// Text (not serialized proto) is the interchange format: jax ≥ 0.5
+    /// emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see /opt/xla-example/README.md).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedComputation> {
+        let path_str = path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path_str}"))?;
+        Ok(LoadedComputation {
+            exe,
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("?").to_string(),
+        })
+    }
+
+    /// Build an f32 vector literal.
+    pub fn literal_f32(&self, data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Build an i32 matrix literal of shape (rows, cols).
+    pub fn literal_i32_2d(&self, data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// Build an f32 scalar literal.
+    pub fn literal_scalar_f32(&self, v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+}
+
+impl LoadedComputation {
+    /// Execute with the given input literals; returns the elements of the
+    /// (always-tupled — `return_tuple=True` at lowering) result.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        Ok(parts)
+    }
+}
+
+/// Read a raw little-endian f32 file (the exported initial parameters).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "f32 file length not divisible by 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Locate the artifacts directory: `MOSGU_ARTIFACTS` env var, else
+/// `./artifacts` relative to the crate root / current dir.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MOSGU_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest_dir.exists() {
+        return manifest_dir;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution tests that require built artifacts live in
+    // rust/tests/runtime_integration.rs; here only pure helpers.
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("mosgu_f32_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f32");
+        let data = [1.5f32, -2.25, 0.0, 1e9];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn read_f32_rejects_ragged() {
+        let dir = std::env::temp_dir().join("mosgu_f32_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.f32");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_default_points_at_repo() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+}

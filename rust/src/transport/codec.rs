@@ -1,0 +1,191 @@
+//! Binary message codec for the live transport (no serde offline): a
+//! 1-byte tag, little-endian fixed-width fields, u32 length prefixes.
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol messages of the live MOSGU deployment (paper §III-A/D).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// RTT probe (the paper's ping measurement for edge costs).
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
+    /// A node's connectivity report to the moderator: (peer, cost_ms).
+    Report { edges: Vec<(u32, f64)> },
+    /// Moderator's published schedule: tree edges, node colors, slot secs.
+    Schedule { tree_edges: Vec<(u32, u32)>, colors: Vec<u8>, slot_len_s: f64, first_color: u8 },
+    /// A model payload moving through the gossip round.
+    Model { owner: u32, round: u32, payload: Vec<u8> },
+    /// Vote for the next moderator.
+    Vote { candidate: u32 },
+    /// Announcement of the elected moderator.
+    ModeratorIs { node: u32 },
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+impl Message {
+    pub fn tag(&self) -> u8 {
+        match self {
+            Message::Ping { .. } => 1,
+            Message::Pong { .. } => 2,
+            Message::Report { .. } => 3,
+            Message::Schedule { .. } => 4,
+            Message::Model { .. } => 5,
+            Message::Vote { .. } => 6,
+            Message::ModeratorIs { .. } => 7,
+            Message::Shutdown => 8,
+        }
+    }
+
+    /// Encode into a self-describing frame (without the outer length).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![self.tag()];
+        match self {
+            Message::Ping { nonce } | Message::Pong { nonce } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+            }
+            Message::Report { edges } => {
+                out.extend_from_slice(&(edges.len() as u32).to_le_bytes());
+                for &(peer, cost) in edges {
+                    out.extend_from_slice(&peer.to_le_bytes());
+                    out.extend_from_slice(&cost.to_le_bytes());
+                }
+            }
+            Message::Schedule { tree_edges, colors, slot_len_s, first_color } => {
+                out.extend_from_slice(&(tree_edges.len() as u32).to_le_bytes());
+                for &(u, v) in tree_edges {
+                    out.extend_from_slice(&u.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.extend_from_slice(&(colors.len() as u32).to_le_bytes());
+                out.extend_from_slice(colors);
+                out.extend_from_slice(&slot_len_s.to_le_bytes());
+                out.push(*first_color);
+            }
+            Message::Model { owner, round, payload } => {
+                out.extend_from_slice(&owner.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                out.extend_from_slice(payload);
+            }
+            Message::Vote { candidate } => out.extend_from_slice(&candidate.to_le_bytes()),
+            Message::ModeratorIs { node } => out.extend_from_slice(&node.to_le_bytes()),
+            Message::Shutdown => {}
+        }
+        out
+    }
+
+    /// Decode a frame produced by [`Message::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = Reader { buf, pos: 0 };
+        let tag = r.u8()?;
+        let msg = match tag {
+            1 => Message::Ping { nonce: r.u64()? },
+            2 => Message::Pong { nonce: r.u64()? },
+            3 => {
+                let n = r.u32()? as usize;
+                let mut edges = Vec::with_capacity(n);
+                for _ in 0..n {
+                    edges.push((r.u32()?, r.f64()?));
+                }
+                Message::Report { edges }
+            }
+            4 => {
+                let ne = r.u32()? as usize;
+                let mut tree_edges = Vec::with_capacity(ne);
+                for _ in 0..ne {
+                    tree_edges.push((r.u32()?, r.u32()?));
+                }
+                let nc = r.u32()? as usize;
+                let colors = r.bytes(nc)?.to_vec();
+                let slot_len_s = r.f64()?;
+                let first_color = r.u8()?;
+                Message::Schedule { tree_edges, colors, slot_len_s, first_color }
+            }
+            5 => {
+                let owner = r.u32()?;
+                let round = r.u32()?;
+                let len = r.u32()? as usize;
+                Message::Model { owner, round, payload: r.bytes(len)?.to_vec() }
+            }
+            6 => Message::Vote { candidate: r.u32()? },
+            7 => Message::ModeratorIs { node: r.u32()? },
+            8 => Message::Shutdown,
+            t => bail!("unknown message tag {t}"),
+        };
+        if r.pos != buf.len() {
+            bail!("trailing {} bytes after message", buf.len() - r.pos);
+        }
+        Ok(msg)
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos + n;
+        let s = self.buf.get(self.pos..end).context("truncated message")?;
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let enc = msg.encode();
+        let dec = Message::decode(&enc).unwrap();
+        assert_eq!(msg, dec);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Message::Ping { nonce: 42 });
+        roundtrip(Message::Pong { nonce: u64::MAX });
+        roundtrip(Message::Report { edges: vec![(1, 2.5), (7, 0.125)] });
+        roundtrip(Message::Report { edges: vec![] });
+        roundtrip(Message::Schedule {
+            tree_edges: vec![(0, 1), (1, 2)],
+            colors: vec![0, 1, 0],
+            slot_len_s: 5.25,
+            first_color: 1,
+        });
+        roundtrip(Message::Model { owner: 3, round: 9, payload: vec![1, 2, 3, 255] });
+        roundtrip(Message::Model { owner: 0, round: 0, payload: vec![0u8; 100_000] });
+        roundtrip(Message::Vote { candidate: 4 });
+        roundtrip(Message::ModeratorIs { node: 9 });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let enc = Message::Model { owner: 1, round: 2, payload: vec![9; 8] }.encode();
+        assert!(Message::decode(&enc[..enc.len() - 1]).is_err());
+        let mut extended = enc.clone();
+        extended.push(0);
+        assert!(Message::decode(&extended).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! In-memory transport mesh: every node an mpsc receiver, senders cloned
+//! across the mesh. Deterministic, instant — used by protocol unit tests
+//! and as the reference behavior for the TCP mesh.
+
+use super::{Message, Transport};
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+/// One endpoint of the in-memory mesh.
+pub struct MemoryEndpoint {
+    node: usize,
+    n: usize,
+    tx: Vec<Sender<(usize, Message)>>,
+    rx: Receiver<(usize, Message)>,
+}
+
+/// Build an n-node fully connected in-memory mesh.
+pub fn mesh(n: usize) -> Vec<MemoryEndpoint> {
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(node, rx)| MemoryEndpoint { node, n, tx: txs.clone(), rx })
+        .collect()
+}
+
+impl Transport for MemoryEndpoint {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, msg: Message) -> Result<()> {
+        anyhow::ensure!(to < self.n && to != self.node, "bad recipient {to}");
+        self.tx[to]
+            .send((self.node, msg))
+            .ok()
+            .context("peer endpoint dropped")
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Message)>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(pair) => Ok(Some(pair)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(e) => anyhow::bail!("mesh disconnected: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let mut eps = mesh(3);
+        let mut b = eps.remove(1);
+        let mut a = eps.remove(0);
+        a.send(1, Message::Vote { candidate: 2 }).unwrap();
+        let (from, msg) = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(msg, Message::Vote { candidate: 2 });
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone() {
+        let mut eps = mesh(4);
+        let mut rest: Vec<_> = eps.drain(1..).collect();
+        eps[0].broadcast(Message::ModeratorIs { node: 0 }).unwrap();
+        for ep in rest.iter_mut() {
+            let got = ep.recv_timeout(Duration::from_millis(100)).unwrap();
+            assert_eq!(got.unwrap().1, Message::ModeratorIs { node: 0 });
+        }
+    }
+
+    #[test]
+    fn recv_timeout_returns_none() {
+        let mut eps = mesh(2);
+        let got = eps[0].recv_timeout(Duration::from_millis(10)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn send_to_self_rejected() {
+        let mut eps = mesh(2);
+        assert!(eps[0].send(0, Message::Shutdown).is_err());
+    }
+
+    #[test]
+    fn fifo_order_per_sender() {
+        let mut eps = mesh(2);
+        let mut b = eps.remove(1);
+        let mut a = eps.remove(0);
+        for i in 0..10 {
+            a.send(1, Message::Vote { candidate: i }).unwrap();
+        }
+        for i in 0..10 {
+            let (_, msg) = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+            assert_eq!(msg, Message::Vote { candidate: i });
+        }
+    }
+}

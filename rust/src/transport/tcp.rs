@@ -1,0 +1,210 @@
+//! Loopback-TCP transport mesh with token-bucket bandwidth shaping.
+//!
+//! The live counterpart of the simulated testbed: N OS threads, each with
+//! a listener on 127.0.0.1, full mesh of connections, frames =
+//! `u32 len | u32 from | payload` with the payload shaped through a
+//! per-endpoint [`TokenBucket`] so loopback behaves like the paper's
+//! rate-limited routers. Writer threads fan incoming frames into one
+//! mpsc queue per endpoint, preserving per-sender FIFO order.
+
+use super::{Message, TokenBucket, Transport};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Maximum frame payload (64 MB — comfortably above the largest model).
+const MAX_FRAME: u32 = 64 * 1024 * 1024;
+/// Shaping chunk: tokens are charged per chunk for smoother pacing.
+const CHUNK: usize = 64 * 1024;
+
+/// One TCP endpoint of the mesh.
+pub struct TcpEndpoint {
+    node: usize,
+    n: usize,
+    /// outgoing connections (lazily shaped on write)
+    out: Vec<Option<TcpStream>>,
+    bucket: Arc<Mutex<TokenBucket>>,
+    rx: Receiver<(usize, Message)>,
+    /// keep listener thread handles alive
+    _readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Build an n-node loopback mesh with `rate_mbps` per-endpoint uplink
+/// shaping (MB/s). Returns the endpoints in node order.
+pub fn mesh(n: usize, rate_mbps: f64) -> Result<Vec<TcpEndpoint>> {
+    // bind listeners on ephemeral ports first
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").context("bind"))
+        .collect::<Result<_>>()?;
+    let ports: Vec<u16> = listeners.iter().map(|l| l.local_addr().unwrap().port()).collect();
+
+    // each endpoint's incoming queue
+    let mut queues: Vec<(Sender<(usize, Message)>, Receiver<(usize, Message)>)> =
+        (0..n).map(|_| channel()).collect();
+
+    // connect the full mesh: node i dials every j (i -> j stream carries
+    // i's frames to j); j's acceptor spawns a reader per connection
+    let mut endpoints: Vec<TcpEndpoint> = Vec::with_capacity(n);
+    let mut accept_threads = Vec::new();
+    for (node, listener) in listeners.into_iter().enumerate() {
+        let (tx, rx) = {
+            let (tx, rx) = std::mem::replace(&mut queues[node], channel());
+            (tx, rx)
+        };
+        let expected = n - 1;
+        let accept_handle = std::thread::spawn(move || {
+            let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            for _ in 0..expected {
+                let (stream, _) = listener.accept().expect("accept");
+                let tx = tx.clone();
+                handles.push(std::thread::spawn(move || reader_loop(stream, tx)));
+            }
+            handles
+        });
+        accept_threads.push(accept_handle);
+        endpoints.push(TcpEndpoint {
+            node,
+            n,
+            out: (0..n).map(|_| None).collect(),
+            bucket: Arc::new(Mutex::new(TokenBucket::new(
+                rate_mbps * 1024.0 * 1024.0,
+                (rate_mbps * 1024.0 * 1024.0 * 0.05).max(CHUNK as f64),
+            ))),
+            rx,
+            _readers: Vec::new(),
+        });
+    }
+    // dial
+    for i in 0..n {
+        for (j, &port) in ports.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let mut stream = TcpStream::connect(("127.0.0.1", port))
+                .with_context(|| format!("dial {i}->{j}"))?;
+            stream.set_nodelay(true).ok();
+            // identify ourselves: first 4 bytes of the connection
+            stream.write_all(&(i as u32).to_le_bytes())?;
+            endpoints[i].out[j] = Some(stream);
+        }
+    }
+    // park reader threads
+    for (ep, handle) in endpoints.iter_mut().zip(accept_threads) {
+        ep._readers = handle.join().expect("acceptor panicked");
+    }
+    Ok(endpoints)
+}
+
+fn reader_loop(mut stream: TcpStream, tx: Sender<(usize, Message)>) {
+    // connection preamble: sender id
+    let mut id_buf = [0u8; 4];
+    if stream.read_exact(&mut id_buf).is_err() {
+        return;
+    }
+    let from = u32::from_le_bytes(id_buf) as usize;
+    loop {
+        let mut len_buf = [0u8; 4];
+        if stream.read_exact(&mut len_buf).is_err() {
+            return; // peer closed
+        }
+        let len = u32::from_le_bytes(len_buf);
+        if len > MAX_FRAME {
+            return;
+        }
+        let mut payload = vec![0u8; len as usize];
+        if stream.read_exact(&mut payload).is_err() {
+            return;
+        }
+        let Ok(msg) = Message::decode(&payload) else { return };
+        if tx.send((from, msg)).is_err() {
+            return; // endpoint dropped
+        }
+    }
+}
+
+impl Transport for TcpEndpoint {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, msg: Message) -> Result<()> {
+        anyhow::ensure!(to < self.n && to != self.node, "bad recipient {to}");
+        let frame = msg.encode();
+        let stream = self.out[to].as_mut().context("no connection")?;
+        stream.write_all(&(frame.len() as u32).to_le_bytes())?;
+        // shape payload bytes through the uplink bucket, chunk by chunk
+        let mut off = 0;
+        while off < frame.len() {
+            let end = (off + CHUNK).min(frame.len());
+            self.bucket.lock().unwrap().consume(end - off);
+            stream.write_all(&frame[off..end])?;
+            off = end;
+        }
+        stream.flush()?;
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Message)>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(pair) => Ok(Some(pair)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(e) => anyhow::bail!("tcp mesh disconnected: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_mesh_roundtrip() {
+        let mut eps = mesh(3, 1000.0).unwrap();
+        let mut c = eps.remove(2);
+        let mut a = eps.remove(0);
+        a.send(2, Message::Vote { candidate: 7 }).unwrap();
+        let (from, msg) = c.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(msg, Message::Vote { candidate: 7 });
+    }
+
+    #[test]
+    fn tcp_large_payload_shaped() {
+        // 2 MB at 20 MB/s => >= ~0.08 s on the shaped path
+        let mut eps = mesh(2, 20.0).unwrap();
+        let mut b = eps.remove(1);
+        let mut a = eps.remove(0);
+        let payload = vec![0xabu8; 2 * 1024 * 1024];
+        let t0 = std::time::Instant::now();
+        a.send(1, Message::Model { owner: 0, round: 0, payload: payload.clone() }).unwrap();
+        let (_, msg) = b.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        match msg {
+            Message::Model { payload: got, .. } => assert_eq!(got.len(), payload.len()),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(dt >= 0.05, "shaping too loose: {dt}");
+    }
+
+    #[test]
+    fn tcp_ping_pong_rtt_measurable() {
+        let mut eps = mesh(2, 1000.0).unwrap();
+        let mut b = eps.remove(1);
+        let mut a = eps.remove(0);
+        let t0 = std::time::Instant::now();
+        a.send(1, Message::Ping { nonce: 1 }).unwrap();
+        let (_, msg) = b.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(msg, Message::Ping { nonce: 1 });
+        b.send(0, Message::Pong { nonce: 1 }).unwrap();
+        let (_, msg) = a.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(msg, Message::Pong { nonce: 1 });
+        assert!(t0.elapsed().as_secs_f64() < 1.0);
+    }
+}

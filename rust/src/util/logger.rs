@@ -1,0 +1,89 @@
+//! Minimal `log` facade backend (no `env_logger` offline).
+//!
+//! Writes `LEVEL target: message` lines to stderr, with the max level taken
+//! from `MOSGU_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::io::Write;
+use std::sync::Once;
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "{tag} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static INIT: Once = Once::new();
+
+/// Parse a level name; `None` on unknown input.
+fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" | "warning" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the logger once; later calls are no-ops. Safe to call from tests,
+/// examples and the CLI alike.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = std::env::var("MOSGU_LOG")
+            .ok()
+            .and_then(|s| parse_level(&s))
+            .unwrap_or(LevelFilter::Info);
+        let logger = Box::leak(Box::new(StderrLogger { level }));
+        if log::set_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_known_names() {
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("WARN"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("warning"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level(" trace "), Some(LevelFilter::Trace));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init(); // must not panic on double-install
+        log::info!("logger smoke line");
+    }
+}

@@ -1,0 +1,47 @@
+//! Utility substrates built in-repo because the offline environment carries
+//! no `rand`, `env_logger`, or `proptest` crates: a PCG PRNG, statistics,
+//! a `log` backend, and a seeded property-test driver.
+
+pub mod logger;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count as a human-readable string (MB with 1 decimal).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const MB: f64 = 1024.0 * 1024.0;
+    if bytes as f64 >= MB {
+        format!("{:.1} MB", bytes as f64 / MB)
+    } else if bytes >= 1024 {
+        format!("{:.1} KB", bytes as f64 / 1024.0)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format seconds with adaptive precision (matches the paper's tables).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 0.01 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(10), "10 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(21 * 1024 * 1024), "21.0 MB");
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(0.001), "1.00 ms");
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+    }
+}

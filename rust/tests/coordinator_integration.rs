@@ -1,0 +1,167 @@
+//! Integration tests across the coordinator stack: moderator lifecycle
+//! (rotation, voting, membership churn), timed sessions on every topology,
+//! and cross-checks between the logical and simulated gossip drivers.
+
+use mosgu::coloring::ColoringAlgorithm;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::moderator::{next_moderator_round_robin, tally_votes, Moderator};
+use mosgu::coordinator::session::{sessions_for_all_topologies, GossipSession};
+use mosgu::graph::topology::TopologyKind;
+use mosgu::mst::MstAlgorithm;
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+}
+
+#[test]
+fn all_topologies_end_to_end() {
+    for (kind, session) in sessions_for_all_topologies(&cfg()).unwrap() {
+        let g = session.run_mosgu_round(14.0, 1, 0.0);
+        let b = session.run_broadcast_round(14.0, 1);
+        assert_eq!(g.transfer_count(), 90, "{kind:?}");
+        assert!(g.bandwidth_mbps() > b.bandwidth_mbps(), "{kind:?}");
+        assert!(g.exchange_time_s < b.total_time_s, "{kind:?}");
+        assert!(g.total_time_s >= g.exchange_time_s, "{kind:?}");
+    }
+}
+
+#[test]
+fn moderator_rotation_over_learning_rounds() {
+    // simulate 5 learning rounds with round-robin rotation + voting
+    let session = GossipSession::new(&cfg()).unwrap();
+    let costs = session.costs().clone();
+    let n = 10;
+    let mut moderator = Moderator::new(0, n, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+    for u in 0..n {
+        let peers: Vec<(usize, f64)> = costs.neighbors(u).iter().map(|&(v, w)| (v, w)).collect();
+        moderator.submit_report(u, &peers);
+    }
+    let first_tree = moderator.compute_schedule(14.0, 56, 1).unwrap().tree.clone();
+
+    let mut current = 0;
+    for round in 0..5u64 {
+        // everyone votes round-robin; current moderator tallies
+        let votes: Vec<(usize, usize)> =
+            (0..n).map(|v| (v, next_moderator_round_robin(current, n))).collect();
+        let winner = tally_votes(&votes, n).unwrap();
+        assert_eq!(winner, (current + 1) % n, "round {round}");
+        moderator = moderator.handover(winner);
+        current = winner;
+        // stable membership: no recomputation needed, bundle preserved
+        assert!(!moderator.needs_recompute(), "round {round}");
+        let tree = &moderator.bundle().unwrap().tree;
+        assert_eq!(tree.edge_count(), first_tree.edge_count());
+        for e in first_tree.edges() {
+            assert!(tree.has_edge(e.u, e.v));
+        }
+    }
+}
+
+#[test]
+fn membership_change_triggers_recompute() {
+    let session = GossipSession::new(&cfg()).unwrap();
+    let costs = session.costs().clone();
+    let mut m = Moderator::new(0, 10, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+    for u in 0..10 {
+        let peers: Vec<(usize, f64)> = costs.neighbors(u).iter().map(|&(v, w)| (v, w)).collect();
+        m.submit_report(u, &peers);
+    }
+    m.compute_schedule(14.0, 56, 1).unwrap();
+    assert!(!m.needs_recompute());
+
+    // a node leaves: 9 nodes, fresh reports required
+    m.membership_changed(9);
+    assert!(m.needs_recompute());
+    assert!(m.compute_schedule(14.0, 56, 1).is_err(), "stale reports cleared");
+    for u in 0..9 {
+        let peers: Vec<(usize, f64)> = (0..9)
+            .filter(|&v| v != u)
+            .map(|v| (v, 1.0 + (u + v) as f64))
+            .collect();
+        m.submit_report(u, &peers);
+    }
+    let bundle = m.compute_schedule(14.0, 56, 1).unwrap();
+    assert_eq!(bundle.tree.node_count(), 9);
+    assert!(bundle.tree.is_tree());
+}
+
+#[test]
+fn mst_and_coloring_algorithm_choices_compose() {
+    // every MST algorithm x coloring algorithm combination yields a valid
+    // schedule and a complete gossip round
+    for mst in MstAlgorithm::ALL {
+        for coloring in ColoringAlgorithm::ALL {
+            let cfg = ExperimentConfig {
+                mst,
+                coloring,
+                latency_jitter: 0.0,
+                topology: TopologyKind::ErdosRenyi,
+                ..Default::default()
+            };
+            let session = GossipSession::new(&cfg).unwrap();
+            assert!(session.tree().is_tree(), "{mst:?}/{coloring:?}");
+            let ncolors = session.schedule().coloring.num_colors();
+            assert!(
+                session.schedule().coloring.is_proper(session.tree()),
+                "{mst:?}/{coloring:?} improper"
+            );
+            // NOTE: the paper claims (§III-C) every algorithm 2-colors an
+            // MST; that holds for BFS and DSatur (exact on bipartite
+            // graphs) but NOT for degree-greedy WP/LDF, which can need 3+
+            // colors on trees — see EXPERIMENTS.md §Deviations. The k-color
+            // schedule still rotates correctly.
+            if matches!(coloring, ColoringAlgorithm::Bfs | ColoringAlgorithm::DSatur) {
+                assert!(ncolors <= 2, "{mst:?}/{coloring:?} used {ncolors}");
+            }
+            let m = session.run_mosgu_round(11.6, 1, 0.0);
+            assert_eq!(m.transfer_count(), 90, "{mst:?}/{coloring:?}");
+        }
+    }
+}
+
+#[test]
+fn sim_round_transfer_counts_match_logical_protocol() {
+    // the timed driver must move exactly the copies the logical trace does
+    use mosgu::coordinator::gossip::{run_logical_round, GossipState};
+    let session = GossipSession::new(&cfg()).unwrap();
+    let mut st = GossipState::new(session.tree().clone(), 0);
+    let trace = run_logical_round(&mut st, session.schedule(), |_| 'x', 256);
+    let logical_sends: usize = trace.slots.iter().map(|s| s.sends.len()).sum();
+    let timed = session.run_mosgu_round(14.0, 1, 0.0);
+    assert_eq!(timed.transfer_count(), logical_sends);
+    assert_eq!(timed.slots, trace.slots.len());
+}
+
+#[test]
+fn exchange_time_is_reached_within_first_two_slot_phases() {
+    // every node sends its own model on its first active slot, so the
+    // exchange phase ends within the first red+blue pair (plus tail)
+    let session = GossipSession::new(&cfg()).unwrap();
+    let m = session.run_mosgu_round(14.0, 1, 0.0);
+    assert!(m.exchange_time_s > 0.0);
+    assert!(
+        m.exchange_time_s < m.total_time_s,
+        "exchange {} should precede dissemination end {}",
+        m.exchange_time_s,
+        m.total_time_s
+    );
+}
+
+#[test]
+fn larger_networks_still_complete() {
+    for n in [20usize, 50] {
+        let c = ExperimentConfig { nodes: n, latency_jitter: 0.0, ..Default::default() };
+        let session = GossipSession::new(&c).unwrap();
+        let m = session.run_mosgu_round(5.0, 1, 0.0);
+        assert_eq!(m.transfer_count(), n * (n - 1), "n={n}");
+    }
+}
+
+#[test]
+fn failure_probability_increases_transfers() {
+    let session = GossipSession::new(&cfg()).unwrap();
+    let clean = session.run_mosgu_round(5.0, 3, 0.0);
+    let lossy = session.run_mosgu_round(5.0, 3, 0.25);
+    assert!(lossy.transfer_count() > clean.transfer_count());
+    assert!(lossy.total_time_s > clean.total_time_s);
+}

@@ -1,0 +1,164 @@
+//! Property tests on the gossip protocol invariants (DESIGN.md §6), run
+//! over random trees and random failure schedules with the in-repo seeded
+//! property driver.
+
+use mosgu::coloring::bfs_coloring;
+use mosgu::coordinator::gossip::{run_logical_round, GossipState};
+use mosgu::coordinator::schedule::Schedule;
+use mosgu::graph::Graph;
+use mosgu::mst::prim;
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
+
+/// Random connected tree on n nodes (random Prüfer-like attachment).
+fn random_tree(n: usize, rng: &mut Pcg64) -> Graph {
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        let u = rng.gen_range(v);
+        g.add_edge(u, v, rng.gen_f64_range(1.0, 50.0));
+    }
+    g
+}
+
+fn schedule_for(tree: &Graph) -> Schedule {
+    Schedule { coloring: bfs_coloring(tree), slot_len_s: 1.0, first_color: 1 }
+}
+
+#[test]
+fn dissemination_completes_on_random_trees() {
+    check("gossip completes", 150, |rng| {
+        let n = 2 + rng.gen_range(30);
+        let tree = random_tree(n, rng);
+        let sched = schedule_for(&tree);
+        let mut st = GossipState::new(tree, 0);
+        run_logical_round(&mut st, &sched, |u| (b'a' + (u % 26) as u8) as char, 16 * n + 64);
+        prop_assert!(st.is_complete(), "n={n} did not complete");
+        for u in 0..n {
+            prop_assert_eq!(st.queue(u).held_count(), n);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_duplicate_deliveries_on_trees() {
+    check("no duplicates", 100, |rng| {
+        let n = 2 + rng.gen_range(20);
+        let tree = random_tree(n, rng);
+        let sched = schedule_for(&tree);
+        let mut st = GossipState::new(tree, 0);
+        let trace = run_logical_round(&mut st, &sched, |_| 'x', 16 * n + 64);
+        let mut seen = std::collections::HashSet::new();
+        for slot in &trace.slots {
+            for s in &slot.sends {
+                prop_assert!(
+                    seen.insert((s.to, s.key.owner)),
+                    "duplicate ({},{})",
+                    s.to,
+                    s.key.owner
+                );
+            }
+        }
+        prop_assert_eq!(seen.len(), n * (n - 1));
+        Ok(())
+    });
+}
+
+#[test]
+fn round_length_bounded_by_diameter() {
+    // dissemination needs at most ~2*(diameter + n) alternating slots
+    check("slots bounded", 100, |rng| {
+        let n = 2 + rng.gen_range(25);
+        let tree = random_tree(n, rng);
+        let diam = tree.diameter_hops().unwrap();
+        let sched = schedule_for(&tree);
+        let mut st = GossipState::new(tree, 0);
+        let trace = run_logical_round(&mut st, &sched, |_| 'x', 16 * n + 64);
+        let bound = 2 * (diam + n) + 4;
+        prop_assert!(
+            trace.slots.len() <= bound,
+            "n={n} diam={diam}: {} slots > bound {bound}",
+            trace.slots.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn adjacent_nodes_never_transmit_in_same_slot() {
+    check("proper slot classes", 100, |rng| {
+        let n = 2 + rng.gen_range(25);
+        let tree = random_tree(n, rng);
+        let sched = schedule_for(&tree);
+        let mut st = GossipState::new(tree.clone(), 0);
+        let trace = run_logical_round(&mut st, &sched, |_| 'x', 16 * n + 64);
+        for slot in &trace.slots {
+            let senders: Vec<usize> =
+                slot.sends.iter().map(|s| s.from).collect();
+            for (i, &a) in senders.iter().enumerate() {
+                for &b in &senders[i + 1..] {
+                    prop_assert!(a == b || !tree.has_edge(a, b), "adjacent {a},{b} same slot");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn failure_injection_preserves_exactly_once_holding() {
+    // with random transmission failures + retransmission, every node still
+    // ends with each model exactly once (dedup at receivers)
+    check("failures -> exactly once", 60, |rng| {
+        let n = 3 + rng.gen_range(12);
+        let tree = random_tree(n, rng);
+        let sched = schedule_for(&tree);
+        let mut st = GossipState::new(tree, 0);
+        let p_fail = rng.gen_f64_range(0.0, 0.3);
+        let max_slots = 64 * n + 200;
+        for slot in 0..max_slots {
+            if st.is_complete() {
+                break;
+            }
+            let planned = st.plan_slot(&sched.transmitters(slot));
+            for tx in &planned {
+                if rng.gen_bool(p_fail) {
+                    st.requeue(tx);
+                } else {
+                    for s in tx.sends() {
+                        st.deliver(s);
+                    }
+                }
+            }
+        }
+        prop_assert!(st.is_complete(), "n={n} p={p_fail:.2} incomplete");
+        for u in 0..n {
+            prop_assert_eq!(st.queue(u).held_count(), n);
+            // held_order has no duplicates
+            let mut owners: Vec<usize> =
+                st.queue(u).held_order().iter().map(|k| k.owner).collect();
+            owners.sort_unstable();
+            owners.dedup();
+            prop_assert_eq!(owners.len(), n);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn leaf_queues_drain_after_own_model() {
+    check("leaf queue drains", 80, |rng| {
+        let n = 3 + rng.gen_range(20);
+        let tree = random_tree(n, rng);
+        let sched = schedule_for(&tree);
+        let mut st = GossipState::new(tree.clone(), 0);
+        run_logical_round(&mut st, &sched, |_| 'x', 16 * n + 64);
+        for u in 0..n {
+            if tree.degree(u) == 1 {
+                prop_assert!(st.queue(u).is_drained(), "leaf {u} queue not drained");
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,170 @@
+//! Property tests over the graph substrates: MST cross-algorithm
+//! agreement, coloring properness, topology-generator guarantees.
+
+use mosgu::coloring::ColoringAlgorithm;
+use mosgu::graph::topology::{generate, TopologyKind, TopologyParams};
+use mosgu::graph::Graph;
+use mosgu::mst::{is_spanning_tree_of, MstAlgorithm};
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
+
+fn random_connected(rng: &mut Pcg64) -> Graph {
+    let n = 3 + rng.gen_range(25);
+    // random tree + random extra edges => connected with cycles
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        let u = rng.gen_range(v);
+        g.add_edge(u, v, rng.gen_f64_range(0.5, 99.5));
+    }
+    let extras = rng.gen_range(2 * n);
+    for _ in 0..extras {
+        let u = rng.gen_range(n);
+        let v = rng.gen_range(n);
+        if u != v && !g.has_edge(u, v) {
+            g.add_edge(u, v, rng.gen_f64_range(0.5, 99.5));
+        }
+    }
+    g
+}
+
+#[test]
+fn mst_algorithms_agree_on_total_weight() {
+    check("mst agreement", 200, |rng| {
+        let g = random_connected(rng);
+        let wp = MstAlgorithm::Prim.run(&g).unwrap().total_weight();
+        let wk = MstAlgorithm::Kruskal.run(&g).unwrap().total_weight();
+        let wb = MstAlgorithm::Boruvka.run(&g).unwrap().total_weight();
+        prop_assert!((wp - wk).abs() < 1e-9, "prim {wp} vs kruskal {wk}");
+        prop_assert!((wk - wb).abs() < 1e-9, "kruskal {wk} vs boruvka {wb}");
+        Ok(())
+    });
+}
+
+#[test]
+fn mst_is_valid_spanning_tree() {
+    check("mst validity", 200, |rng| {
+        let g = random_connected(rng);
+        for alg in MstAlgorithm::ALL {
+            let t = alg.run(&g).unwrap();
+            prop_assert!(is_spanning_tree_of(&t, &g), "{alg:?} invalid");
+            prop_assert_eq!(t.edge_count(), g.node_count() - 1);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mst_weight_not_above_any_spanning_subgraph_sample() {
+    // cut property spot-check: removing an MST edge and reconnecting via
+    // any other edge across the induced cut cannot reduce total weight
+    check("mst cut property", 80, |rng| {
+        let g = random_connected(rng);
+        let t = MstAlgorithm::Prim.run(&g).unwrap();
+        let base = t.total_weight();
+        for e in t.edges() {
+            // component split without edge e
+            let mut cut = Graph::new(t.node_count());
+            for e2 in t.edges() {
+                if (e2.u, e2.v) != (e.u, e.v) {
+                    cut.add_edge(e2.u, e2.v, e2.weight);
+                }
+            }
+            let side = cut.bfs_hops(e.u);
+            for cand in g.edges() {
+                let crosses =
+                    (side[cand.u] != usize::MAX) != (side[cand.v] != usize::MAX);
+                if crosses {
+                    let alt = base - e.weight + cand.weight;
+                    prop_assert!(
+                        alt >= base - 1e-9,
+                        "swap {:?} for {:?} improves MST",
+                        cand,
+                        e
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn colorings_are_proper_on_random_graphs() {
+    check("coloring properness", 200, |rng| {
+        let g = random_connected(rng);
+        for alg in ColoringAlgorithm::ALL {
+            let c = alg.run(&g);
+            prop_assert!(c.is_proper(&g), "{alg:?} improper");
+            prop_assert_eq!(c.len(), g.node_count());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trees_always_get_two_colors_under_exact_algorithms() {
+    // BFS and DSatur are exact on bipartite graphs (⇒ 2 colors on every
+    // tree); Welsh-Powell/LDF are proper but can exceed 2 — a correction
+    // to the paper's §III-C claim (EXPERIMENTS.md §Deviations).
+    check("tree 2-coloring", 150, |rng| {
+        let g = random_connected(rng);
+        let t = MstAlgorithm::Prim.run(&g).unwrap();
+        for alg in [ColoringAlgorithm::Bfs, ColoringAlgorithm::DSatur] {
+            let c = alg.run(&t);
+            prop_assert!(c.num_colors() <= 2, "{alg:?} used {}", c.num_colors());
+            prop_assert!(c.is_proper(&t));
+        }
+        for alg in [ColoringAlgorithm::WelshPowell, ColoringAlgorithm::LargestDegreeFirst] {
+            let c = alg.run(&t);
+            prop_assert!(c.is_proper(&t), "{alg:?} improper on tree");
+            // degree-greedy on trees is O(log n)-bounded; generous cap
+            prop_assert!(c.num_colors() <= 8, "{alg:?} used {}", c.num_colors());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn generators_produce_connected_graphs_of_requested_size() {
+    check("topology connectivity", 80, |rng| {
+        // n > ws_k (default ring degree 4) keeps Watts-Strogatz valid
+        let n = 6 + rng.gen_range(40);
+        let params = TopologyParams::default();
+        for kind in TopologyKind::ALL {
+            let g = generate(kind, n, &params, rng);
+            prop_assert_eq!(g.node_count(), n);
+            prop_assert!(g.is_connected(), "{kind:?} disconnected at n={n}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn complete_topology_has_exact_edge_count() {
+    check("complete edges", 40, |rng| {
+        let n = 2 + rng.gen_range(30);
+        let g = generate(TopologyKind::Complete, n, &TopologyParams::default(), rng);
+        prop_assert_eq!(g.edge_count(), n * (n - 1) / 2);
+        Ok(())
+    });
+}
+
+#[test]
+fn dijkstra_triangle_inequality() {
+    check("dijkstra triangle", 80, |rng| {
+        let g = random_connected(rng);
+        let n = g.node_count();
+        let src = rng.gen_range(n);
+        let d = g.dijkstra(src);
+        for e in g.edges() {
+            prop_assert!(
+                d[e.v] <= d[e.u] + e.weight + 1e-9,
+                "triangle violated at edge {:?}",
+                e
+            );
+            prop_assert!(d[e.u] <= d[e.v] + e.weight + 1e-9);
+        }
+        Ok(())
+    });
+}

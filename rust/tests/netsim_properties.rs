@@ -1,0 +1,163 @@
+//! Property tests on the network simulator: byte conservation, physical
+//! lower bounds, fair-share feasibility, and monotonicity under load.
+
+use mosgu::config::ExperimentConfig;
+use mosgu::netsim::fairshare::max_min_rates;
+use mosgu::netsim::testbed::Testbed;
+use mosgu::netsim::{Channel, LossModel, NetSim};
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
+
+fn random_caps_routes(rng: &mut Pcg64) -> (Vec<f64>, Vec<Vec<usize>>) {
+    let nc = 2 + rng.gen_range(20);
+    let nf = 1 + rng.gen_range(60);
+    let caps: Vec<f64> = (0..nc).map(|_| rng.gen_f64_range(1.0, 100.0)).collect();
+    let routes: Vec<Vec<usize>> = (0..nf)
+        .map(|_| {
+            let hops = 1 + rng.gen_range(4);
+            (0..hops).map(|_| rng.gen_range(nc)).collect()
+        })
+        .collect();
+    (caps, routes)
+}
+
+#[test]
+fn fair_share_never_oversubscribes() {
+    check("fair share feasible", 200, |rng| {
+        let (caps, routes) = random_caps_routes(rng);
+        let rates = max_min_rates(&caps, &routes);
+        for (c, &cap) in caps.iter().enumerate() {
+            let mut load = 0.0;
+            for (f, route) in routes.iter().enumerate() {
+                if route.contains(&c) {
+                    // a flow crossing a channel twice consumes twice
+                    let k = route.iter().filter(|&&x| x == c).count();
+                    load += rates[f] * k as f64;
+                }
+            }
+            prop_assert!(load <= cap * (1.0 + 1e-6), "channel {c}: {load} > {cap}");
+        }
+        prop_assert!(rates.iter().all(|&r| r > 0.0), "zero rate assigned");
+        Ok(())
+    });
+}
+
+#[test]
+fn fair_share_bottleneck_saturated() {
+    // at least one channel must be (nearly) fully used — max-min is Pareto
+    check("fair share pareto", 150, |rng| {
+        let (caps, routes) = random_caps_routes(rng);
+        let rates = max_min_rates(&caps, &routes);
+        let mut any_tight = false;
+        for (c, &cap) in caps.iter().enumerate() {
+            let load: f64 = routes
+                .iter()
+                .enumerate()
+                .map(|(f, r)| rates[f] * r.iter().filter(|&&x| x == c).count() as f64)
+                .sum();
+            if load >= cap - 1e-6 {
+                any_tight = true;
+            }
+        }
+        prop_assert!(any_tight, "no saturated bottleneck");
+        Ok(())
+    });
+}
+
+#[test]
+fn transfer_time_at_least_physical_lower_bound() {
+    check("physical lower bound", 100, |rng| {
+        let cap = rng.gen_f64_range(1.0, 50.0);
+        let size = rng.gen_f64_range(0.5, 64.0);
+        let lat = rng.gen_f64_range(0.0, 0.1);
+        let ch = Channel { capacity_mbps: cap, latency_s: lat, label: "c".into() };
+        let mut sim = NetSim::new(vec![ch], LossModel::default(), 0.0, rng.next_u64());
+        sim.start_flow(0, 1, vec![0], size, 0);
+        sim.run_until_idle();
+        let rec = &sim.completed()[0];
+        prop_assert!(
+            rec.duration() >= size / cap + lat - 1e-9,
+            "duration {} below physical bound {}",
+            rec.duration(),
+            size / cap + lat
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn more_contention_never_speeds_up_a_flow() {
+    check("contention monotone", 80, |rng| {
+        let size = rng.gen_f64_range(1.0, 32.0);
+        let k = 2 + rng.gen_range(8);
+        let run = |flows: usize| {
+            let ch = Channel { capacity_mbps: 20.0, latency_s: 0.0, label: "c".into() };
+            let mut sim = NetSim::new(vec![ch], LossModel::default(), 0.0, 1);
+            for i in 0..flows {
+                sim.start_flow(0, 1, vec![0], size, i as u64);
+            }
+            sim.run_until_idle();
+            sim.completed()[0].duration()
+        };
+        let alone = run(1);
+        let contended = run(k);
+        prop_assert!(
+            contended >= alone - 1e-9,
+            "flow got faster under contention: {alone} -> {contended} (k={k})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn completed_records_account_for_all_flows() {
+    check("flow conservation", 100, |rng| {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let mut sim = tb.netsim(rng.next_u64());
+        let n = cfg.nodes;
+        let mut started = 0;
+        for _ in 0..(1 + rng.gen_range(40)) {
+            let u = rng.gen_range(n);
+            let v = (u + 1 + rng.gen_range(n - 1)) % n;
+            sim.start_flow(u, v, tb.route(u, v), rng.gen_f64_range(0.5, 8.0), 0);
+            started += 1;
+        }
+        sim.run_until_idle();
+        prop_assert_eq!(sim.completed().len(), started);
+        prop_assert_eq!(sim.active_flow_count(), 0);
+        // end times are all >= start times and finite
+        for r in sim.completed() {
+            prop_assert!(r.end.is_finite() && r.end >= r.start);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn inter_subnet_ping_exceeds_local_ping() {
+    check("ping hierarchy", 40, |rng| {
+        let cfg = ExperimentConfig {
+            latency_jitter: rng.gen_f64_range(0.0, 0.2),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let tb = Testbed::new(&cfg);
+        for u in 0..cfg.nodes {
+            for v in 0..cfg.nodes {
+                if u == v {
+                    continue;
+                }
+                let p = tb.ping_ms(u, v);
+                prop_assert!(p > 0.0);
+                if tb.is_local(u, v) {
+                    prop_assert!(p < 5.0, "local ping {p} too large");
+                } else {
+                    prop_assert!(p > 5.0, "inter-subnet ping {p} too small");
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,126 @@
+//! Integration tests over the PJRT runtime + DFL layer. These require the
+//! AOT artifacts (`make artifacts`); they are skipped with a notice when
+//! artifacts are absent so `cargo test` works on a fresh checkout.
+
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::round::{models_agree, run_dfl};
+use mosgu::dfl::trainer::Trainer;
+use mosgu::runtime::{artifacts_dir, ArtifactSet, Runtime};
+
+fn load() -> Option<(Runtime, ArtifactSet)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts in {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let artifacts = ArtifactSet::load(&rt, &dir).expect("artifact load");
+    Some((rt, artifacts))
+}
+
+#[test]
+fn artifacts_load_and_manifest_consistent() {
+    let Some((_rt, artifacts)) = load() else { return };
+    let m = &artifacts.manifest;
+    assert!(m.param_dim >= m.param_count);
+    assert_eq!(m.param_dim % m.pad_multiple, 0);
+    assert_eq!(artifacts.init_params.len(), m.param_dim);
+    assert!(artifacts.model_mb() > 0.5);
+}
+
+#[test]
+fn train_step_reduces_loss_from_rust() {
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let mut model = trainer.init_node(0, 0.0);
+    let first = trainer.train_step(&mut model, 0, 0.1).unwrap();
+    let mut last = first;
+    for step in 1..10 {
+        last = trainer.train_step(&mut model, step % 3, 0.1).unwrap();
+    }
+    assert!(last.is_finite() && first.is_finite());
+    assert!(last < first, "loss did not fall: {first} -> {last}");
+}
+
+#[test]
+fn aggregate_artifact_matches_fedavg_semantics() {
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let a = trainer.init_node(0, 0.05);
+    let b = trainer.init_node(1, 0.05);
+    // fold b into a with equal weights => elementwise mean
+    let mut acc = a.clone();
+    trainer.aggregate_into(&mut acc, &b.params, 1.0).unwrap();
+    assert_eq!(acc.weight, 2.0);
+    for i in (0..acc.params.len()).step_by(10007) {
+        let want = (a.params[i] + b.params[i]) / 2.0;
+        assert!(
+            (acc.params[i] - want).abs() < 1e-5,
+            "idx {i}: {} vs {want}",
+            acc.params[i]
+        );
+    }
+}
+
+#[test]
+fn aggregating_identical_models_is_identity() {
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let a = trainer.init_node(0, 0.0);
+    let mut acc = a.clone();
+    trainer.aggregate_into(&mut acc, &a.params, 1.0).unwrap();
+    for i in (0..acc.params.len()).step_by(9973) {
+        assert!((acc.params[i] - a.params[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn eval_step_is_deterministic() {
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let model = trainer.init_node(2, 0.01);
+    let l1 = trainer.eval(&model, 42).unwrap();
+    let l2 = trainer.eval(&model, 42).unwrap();
+    assert_eq!(l1, l2);
+    assert!(l1.is_finite() && l1 > 0.0);
+}
+
+#[test]
+fn two_dfl_rounds_compose_and_reach_consensus_losses() {
+    let Some((rt, artifacts)) = load() else { return };
+    let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+    let session = GossipSession::with_model(&cfg, artifacts.model_mb()).unwrap();
+    let trainer = Trainer::new(&rt, &artifacts);
+    let reports = run_dfl(&session, &trainer, 2, 2, 0.1, |_| {}).unwrap();
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert!(r.train_loss.is_finite());
+        assert!(r.eval_loss.is_finite());
+        assert!(r.comm_time_s > 0.0);
+        assert!(r.slots > 10, "full dissemination takes many slots");
+    }
+}
+
+#[test]
+fn full_dissemination_plus_fedavg_reaches_identical_models() {
+    // after one round every node folded the same 10 models (possibly in a
+    // different order); pairwise weighted averaging is order-insensitive
+    // up to f32 rounding, so models must agree to small tolerance
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let n = 4;
+    let originals: Vec<_> = (0..n).map(|u| trainer.init_node(u, 0.05)).collect();
+    let mut folded = Vec::new();
+    for u in 0..n {
+        // node u folds everyone else's model in a rotated order
+        let mut acc = originals[u].clone();
+        acc.weight = 1.0;
+        for k in 1..n {
+            let peer = (u + k) % n;
+            trainer.aggregate_into(&mut acc, &originals[peer].params, 1.0).unwrap();
+        }
+        folded.push(acc);
+    }
+    assert!(models_agree(&folded, 1e-4), "fold order changed FedAvg result");
+}

@@ -1,0 +1,153 @@
+//! Golden test: the paper's Table I, replayed move for move.
+//!
+//! The fixture is the 10-node example (A..K skipping J); the assertions
+//! pin the MST, the red/blue classes, selected intermediate rows, the
+//! final reception-order strings of all ten nodes, and the 23-slot count.
+
+use mosgu::coordinator::example as ex;
+use mosgu::coordinator::gossip::{run_logical_round, GossipState};
+use mosgu::coordinator::schedule::build_schedule;
+
+fn run_paper_trace() -> (GossipState, mosgu::coordinator::gossip::RoundTrace) {
+    let sched = build_schedule(
+        &ex::paper_example_graph(),
+        ex::paper_example_coloring(),
+        14.0,
+        56,
+        ex::RED,
+    );
+    let mut state = GossipState::new(ex::paper_example_mst(), 0);
+    let trace = run_logical_round(&mut state, &sched, ex::label, 64);
+    (state, trace)
+}
+
+fn row(trace: &mosgu::coordinator::gossip::RoundTrace, slot_1idx: usize) -> &Vec<String> {
+    &trace.rows[slot_1idx - 1]
+}
+
+#[test]
+fn completes_in_exactly_23_slots() {
+    let (state, trace) = run_paper_trace();
+    assert!(state.is_complete());
+    assert_eq!(trace.slots.len(), 23);
+    // 12 red slots (odd 1-indexed), 11 blue
+    let reds = trace.slots.iter().filter(|s| s.color == ex::RED).count();
+    assert_eq!(reds, 12);
+}
+
+#[test]
+fn first_row_matches_paper() {
+    let (_, trace) = run_paper_trace();
+    // Table I row 1 (after the first red slot):
+    // A=AH B=BCI C=C D=DC E=E F=FEGH G=G H=H I=I K=KGI
+    assert_eq!(
+        row(&trace, 1),
+        &vec!["AH", "BCI", "C", "DC", "E", "FEGH", "G", "H", "I", "KGI"]
+            .into_iter()
+            .map(String::from)
+            .collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn second_row_matches_paper() {
+    let (_, trace) = run_paper_trace();
+    // Table I row 2 (after the first blue slot)
+    assert_eq!(
+        row(&trace, 2),
+        &vec!["AH", "BCI", "CBD", "DC", "EF", "FEGH", "GFK", "HAF", "IBK", "KGI"]
+            .into_iter()
+            .map(String::from)
+            .collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn mid_trace_rows_match_paper() {
+    let (_, trace) = run_paper_trace();
+    // row 5 (third red slot): A=AHF B=BCIDK F=FEGHAK K=KGIFB
+    let r5 = row(&trace, 5);
+    assert_eq!(r5[ex::A], "AHF");
+    assert_eq!(r5[ex::B], "BCIDK");
+    assert_eq!(r5[ex::F], "FEGHAK");
+    assert_eq!(r5[ex::K], "KGIFB");
+    // row 6 (third blue): C=CBDI E=EFG G=GFKEI H=HAFEG I=IBKCG
+    let r6 = row(&trace, 6);
+    assert_eq!(r6[ex::C], "CBDI");
+    assert_eq!(r6[ex::E], "EFG");
+    assert_eq!(r6[ex::G], "GFKEI");
+    assert_eq!(r6[ex::H], "HAFEG");
+    assert_eq!(r6[ex::I], "IBKCG");
+}
+
+#[test]
+fn final_row_matches_paper_exactly() {
+    let (state, _) = run_paper_trace();
+    let expect = [
+        "AHFEGKIBCD",
+        "BCIDKGFEHA",
+        "CBDIKGFEHA",
+        "DCBIKGFEHA",
+        "EFGHAKIBCD",
+        "FEGHAKIBCD",
+        "GFKEIHABCD",
+        "HAFEGKIBCD",
+        "IBKCGDFEHA",
+        "KGIFBECHDA",
+    ];
+    for (u, want) in expect.iter().enumerate() {
+        assert_eq!(&state.held_string(u, ex::label), want, "node {}", ex::label(u));
+    }
+}
+
+#[test]
+fn every_node_receives_each_model_exactly_once() {
+    let (_, trace) = run_paper_trace();
+    // on a tree with no failures, each (recipient, owner) pair appears once
+    let mut seen = std::collections::HashSet::new();
+    for slot in &trace.slots {
+        for s in &slot.sends {
+            assert!(
+                seen.insert((s.to, s.key.owner)),
+                "duplicate delivery of {} to {}",
+                ex::label(s.key.owner),
+                ex::label(s.to)
+            );
+        }
+    }
+    // 10 models x 9 recipients
+    assert_eq!(seen.len(), 90);
+}
+
+#[test]
+fn transmissions_respect_colors() {
+    let (_, trace) = run_paper_trace();
+    let coloring = ex::paper_example_coloring();
+    for slot in &trace.slots {
+        for s in &slot.sends {
+            assert_eq!(
+                coloring.color_of(s.from),
+                slot.color,
+                "node {} transmitted outside its slot",
+                ex::label(s.from)
+            );
+        }
+    }
+}
+
+#[test]
+fn degree_one_nodes_send_only_their_own_model() {
+    let (_, trace) = run_paper_trace();
+    let tree = ex::paper_example_mst();
+    for slot in &trace.slots {
+        for s in &slot.sends {
+            if tree.degree(s.from) == 1 {
+                assert_eq!(
+                    s.key.owner, s.from,
+                    "leaf {} forwarded a received model",
+                    ex::label(s.from)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Golden shape checks against the paper's evaluation (Tables III–V):
+//! not absolute numbers (our substrate is a simulator), but the *shape* —
+//! who wins, by roughly what factor, where trends point. See
+//! EXPERIMENTS.md for the full paper-vs-measured record.
+
+use mosgu::bench::tables::{headline, run_grid, PaperTable};
+use mosgu::config::ExperimentConfig;
+use mosgu::dfl::models::{by_code, MODELS};
+use mosgu::graph::topology::TopologyKind;
+use mosgu::metrics::Cell;
+
+fn grid() -> Vec<Cell> {
+    let cfg = ExperimentConfig { repeats: 2, ..Default::default() };
+    run_grid(
+        &cfg,
+        &TopologyKind::ALL,
+        &[by_code("v3s").unwrap(), by_code("b0").unwrap(), by_code("b3").unwrap()],
+        |_| {},
+    )
+    .unwrap()
+}
+
+fn cell<'a>(cells: &'a [Cell], topo: &str, model: &str) -> &'a Cell {
+    cells.iter().find(|c| c.topology == topo && c.model == model).unwrap()
+}
+
+#[test]
+fn proposed_wins_every_cell_on_every_indicator() {
+    let cells = grid();
+    for c in &cells {
+        assert!(
+            c.proposed.bandwidth.mean() > c.broadcast.bandwidth.mean(),
+            "{}:{} bandwidth",
+            c.topology,
+            c.model
+        );
+        assert!(
+            c.proposed.transfer.mean() < c.broadcast.transfer.mean(),
+            "{}:{} transfer",
+            c.topology,
+            c.model
+        );
+        assert!(
+            c.proposed.exchange.mean() < c.broadcast.total.mean(),
+            "{}:{} round time",
+            c.topology,
+            c.model
+        );
+    }
+}
+
+#[test]
+fn broadcast_bandwidth_falls_with_model_size() {
+    // paper Table III broadcast column: 1.785 (v3s) > 1.011 (b0) > 0.767 (b3)
+    let cells = grid();
+    let bw = |m: &str| cell(&cells, "Complete", m).broadcast.bandwidth.mean();
+    assert!(bw("v3s") > bw("b0"), "v3s {} vs b0 {}", bw("v3s"), bw("b0"));
+    assert!(bw("b0") > bw("b3"), "b0 {} vs b3 {}", bw("b0"), bw("b3"));
+    // and in the paper's absolute band (0.5-2.5 MB/s)
+    assert!((0.5..2.5).contains(&bw("v3s")), "v3s bw {}", bw("v3s"));
+    assert!((0.3..1.5).contains(&bw("b3")), "b3 bw {}", bw("b3"));
+}
+
+#[test]
+fn bandwidth_improvement_grows_with_model_size() {
+    // paper §V-A: "as the model size increases, the enhanced efficiency of
+    // our proposed method becomes more pronounced"
+    let cells = grid();
+    let gain = |m: &str| {
+        let c = cell(&cells, "Watts-Strogatz", m);
+        c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean()
+    };
+    assert!(gain("b3") > gain("v3s"), "b3 {} vs v3s {}", gain("b3"), gain("v3s"));
+}
+
+#[test]
+fn headline_factors_in_paper_band() {
+    let cells = grid();
+    let h = headline(&cells);
+    // paper claims up to ~8x bandwidth; accept 4x..16x on the simulator
+    assert!(
+        (4.0..16.0).contains(&h.bandwidth_improvement),
+        "bandwidth improvement {} out of band",
+        h.bandwidth_improvement
+    );
+    // paper claims up to 4.4x total-time reduction; accept 1.5x..8x
+    assert!(
+        (1.5..8.0).contains(&h.round_improvement),
+        "round improvement {} out of band",
+        h.round_improvement
+    );
+    // transfer-time improvement (paper Table IV spread 2.6-7.4x): 2x..12x
+    assert!(
+        (2.0..12.0).contains(&h.transfer_improvement),
+        "transfer improvement {} out of band",
+        h.transfer_improvement
+    );
+}
+
+#[test]
+fn broadcast_column_is_topology_independent() {
+    // the paper prints ONE broadcast column spanning all topology rows:
+    // the baseline pushes on the complete overlay regardless of underlay
+    let cells = grid();
+    for m in ["v3s", "b3"] {
+        let vals: Vec<f64> = TopologyKind::ALL
+            .iter()
+            .map(|k| cell(&cells, k.name(), m).broadcast.bandwidth.mean())
+            .collect();
+        for w in vals.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "{m}: broadcast differs by topology {vals:?}");
+        }
+    }
+}
+
+#[test]
+fn barabasi_is_slowest_proposed_topology() {
+    // paper §V-B: hubs make Barabási-Albert "second slowest after
+    // complete for large models"; in our simulator hub uplink contention
+    // makes BA the slowest per-transfer — assert BA > ER and WS.
+    let cells = grid();
+    let xfer = |t: &str| cell(&cells, t, "b3").proposed.transfer.mean();
+    assert!(xfer("Barabasi-Albert") > xfer("Erdos-Renyi"));
+    assert!(xfer("Barabasi-Albert") > xfer("Watts-Strogatz"));
+}
+
+#[test]
+fn transfer_times_scale_with_model_size() {
+    let cells = grid();
+    for kind in TopologyKind::ALL {
+        let t = kind.name();
+        let small = cell(&cells, t, "v3s").proposed.transfer.mean();
+        let large = cell(&cells, t, "b3").proposed.transfer.mean();
+        // 48/11.6 = 4.1x more bytes => at least 2x more time
+        assert!(large > 2.0 * small, "{t}: {small} -> {large}");
+    }
+}
+
+#[test]
+fn table2_registry_matches_paper() {
+    assert_eq!(MODELS.len(), 7);
+    let b3 = by_code("b3").unwrap();
+    assert_eq!(b3.params_m, 12.0);
+    assert_eq!(b3.capacity_mb, 48.0);
+}

@@ -1,0 +1,159 @@
+//! Integration tests of the live transports: the full M-step protocol
+//! (ping → report → schedule) over the in-memory mesh, and a mini gossip
+//! round over shaped loopback TCP.
+
+use mosgu::coloring::ColoringAlgorithm;
+use mosgu::coordinator::moderator::Moderator;
+use mosgu::coordinator::queue::{GossipQueue, ModelKey};
+use mosgu::graph::Graph;
+use mosgu::mst::MstAlgorithm;
+use mosgu::transport::{memory, tcp, Message, Transport};
+use std::time::Duration;
+
+/// Run the report->schedule phase over any transport mesh: node 0 is the
+/// moderator, costs are synthetic (|u-v| based), everyone gets a schedule.
+fn m_step<T: Transport + 'static>(mut eps: Vec<T>) -> Vec<Message> {
+    let n = eps.len();
+    let moderator_ep = eps.remove(0);
+    let workers: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            std::thread::spawn(move || {
+                let me = ep.node();
+                let edges: Vec<(u32, f64)> = (0..ep.len())
+                    .filter(|&p| p != me)
+                    .map(|p| (p as u32, 1.0 + (me as f64 - p as f64).abs()))
+                    .collect();
+                ep.send(0, Message::Report { edges }).unwrap();
+                loop {
+                    match ep.recv_timeout(Duration::from_secs(10)).unwrap() {
+                        Some((_, msg @ Message::Schedule { .. })) => return msg,
+                        Some(_) => {}
+                        None => panic!("node {me}: no schedule"),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let moderator_thread = std::thread::spawn(move || {
+        let mut ep = moderator_ep;
+        let mut m = Moderator::new(0, n, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        let own: Vec<(usize, f64)> = (1..n).map(|p| (p, 1.0 + p as f64)).collect();
+        m.submit_report(0, &own);
+        let mut pending = n - 1;
+        while pending > 0 {
+            if let Some((from, Message::Report { edges })) =
+                ep.recv_timeout(Duration::from_secs(10)).unwrap()
+            {
+                let peers: Vec<(usize, f64)> =
+                    edges.iter().map(|&(p, c)| (p as usize, c)).collect();
+                m.submit_report(from, &peers);
+                pending -= 1;
+            }
+        }
+        let bundle = m.compute_schedule(2.0, 56, 1).unwrap().clone();
+        let msg = Message::Schedule {
+            tree_edges: bundle.tree.edges().iter().map(|e| (e.u as u32, e.v as u32)).collect(),
+            colors: bundle.schedule.coloring.assignment().iter().map(|&c| c as u8).collect(),
+            slot_len_s: bundle.schedule.slot_len_s,
+            first_color: 1,
+        };
+        ep.broadcast(msg.clone()).unwrap();
+        msg
+    });
+
+    let mut results = vec![moderator_thread.join().unwrap()];
+    for w in workers {
+        results.push(w.join().unwrap());
+    }
+    results
+}
+
+#[test]
+fn m_step_over_memory_mesh() {
+    let schedules = m_step(memory::mesh(6));
+    // all nodes received the identical schedule
+    for s in &schedules[1..] {
+        assert_eq!(s, &schedules[0]);
+    }
+    let Message::Schedule { tree_edges, colors, .. } = &schedules[0] else {
+        panic!("not a schedule")
+    };
+    assert_eq!(tree_edges.len(), 5, "spanning tree of 6 nodes");
+    assert_eq!(colors.len(), 6);
+    // the schedule's tree must be proper under its coloring
+    let mut tree = Graph::new(6);
+    for &(u, v) in tree_edges {
+        tree.add_edge(u as usize, v as usize, 1.0);
+    }
+    assert!(tree.is_tree());
+    for &(u, v) in tree_edges {
+        assert_ne!(colors[u as usize], colors[v as usize], "improper edge ({u},{v})");
+    }
+}
+
+#[test]
+fn m_step_over_tcp_mesh() {
+    let schedules = m_step(tcp::mesh(4, 500.0).unwrap());
+    for s in &schedules[1..] {
+        assert_eq!(s, &schedules[0]);
+    }
+}
+
+#[test]
+fn model_payloads_survive_tcp_gossip_hop() {
+    // A -> B -> C relay of a model payload with queue bookkeeping
+    let mut eps = tcp::mesh(3, 200.0).unwrap();
+    let c = eps.remove(2);
+    let b = eps.remove(1);
+    let a = eps.remove(0);
+
+    let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+    let expected = payload.clone();
+
+    let ta = std::thread::spawn(move || {
+        let mut a = a;
+        a.send(1, Message::Model { owner: 0, round: 3, payload }).unwrap();
+        a // keep alive
+    });
+    let tb = std::thread::spawn(move || {
+        let mut b = b;
+        let mut q = GossipQueue::new(1);
+        let (from, msg) = b.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let Message::Model { owner, round, payload } = msg else { panic!() };
+        assert!(q.receive(ModelKey::new(owner as usize, round as u64), from, true));
+        let entry = q.pop_oldest().unwrap();
+        assert_eq!(entry.received_from, Some(0));
+        // forward to C, not back to A
+        b.send(2, Message::Model { owner, round, payload }).unwrap();
+        b
+    });
+    let tc = std::thread::spawn(move || {
+        let mut c = c;
+        let (from, msg) = c.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert_eq!(from, 1);
+        let Message::Model { owner, round, payload } = msg else { panic!() };
+        assert_eq!(owner, 0);
+        assert_eq!(round, 3);
+        payload
+    });
+    let got = tc.join().unwrap();
+    assert_eq!(got, expected);
+    ta.join().unwrap();
+    tb.join().unwrap();
+}
+
+#[test]
+fn memory_mesh_handles_many_messages() {
+    let mut eps = memory::mesh(3);
+    let mut b = eps.remove(1);
+    let mut a = eps.remove(0);
+    for i in 0..500u32 {
+        a.send(1, Message::Vote { candidate: i }).unwrap();
+    }
+    for i in 0..500u32 {
+        let (_, msg) = b.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(msg, Message::Vote { candidate: i });
+    }
+}
