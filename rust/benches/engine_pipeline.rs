@@ -1,0 +1,89 @@
+//! Sequential rounds vs multi-round pipelining through the event-driven
+//! engine: total simulated time for 3 communication rounds on ring, star,
+//! balanced-tree and the paper's complete topology.
+//!
+//! Sequential = the classic mode, a fresh simulator per round, totals
+//! summed. Pipelined = one long-lived simulator, round t+1 seeding as
+//! nodes finish round t (§III-D). Emits one `JSON {...}` line per cell
+//! for the bench trajectory.
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::graph::topology::TopologyKind;
+
+fn main() {
+    let rounds = 3u64;
+    let model_mb = 14.0;
+    section(&format!("engine pipelining: {rounds}-round total simulated time (model {model_mb} MB)"));
+    println!(
+        "{:<16} {:>4} {:>14} {:>14} {:>9} {:>12}",
+        "topology", "n", "sequential_s", "pipelined_s", "speedup", "slots(p)"
+    );
+    for kind in [
+        TopologyKind::Ring,
+        TopologyKind::Star,
+        TopologyKind::BalancedTree,
+        TopologyKind::Complete,
+    ] {
+        for n in [10usize, 16, 24] {
+            let cfg = ExperimentConfig {
+                topology: kind,
+                nodes: n,
+                latency_jitter: 0.0,
+                ..Default::default()
+            };
+            let session = GossipSession::new(&cfg).expect("session");
+            let sequential: f64 = (0..rounds)
+                .map(|_| session.run_mosgu_round(model_mb, 1, 0.0).total_time_s)
+                .sum();
+            let pipe = session.run_pipelined_rounds(model_mb, rounds, 1);
+            let speedup = sequential / pipe.total_time_s;
+            println!(
+                "{:<16} {:>4} {:>14.3} {:>14.3} {:>8.3}x {:>12}",
+                kind.name(),
+                n,
+                sequential,
+                pipe.total_time_s,
+                speedup,
+                pipe.slots
+            );
+            println!(
+                "JSON {{\"bench\":\"engine_pipeline\",\"topology\":\"{}\",\"n\":{},\"rounds\":{},\
+                 \"model_mb\":{},\"sequential_s\":{:.6},\"pipelined_s\":{:.6},\"speedup\":{:.4},\
+                 \"slots\":{},\"exchange_done_s\":{:.6}}}",
+                kind.name(),
+                n,
+                rounds,
+                model_mb,
+                sequential,
+                pipe.total_time_s,
+                speedup,
+                pipe.slots,
+                pipe.rounds.last().map(|p| p.exchange_done_s).unwrap_or(0.0),
+            );
+        }
+    }
+
+    section("per-round phase timeline (ring, n=16)");
+    let cfg = ExperimentConfig {
+        topology: TopologyKind::Ring,
+        nodes: 16,
+        latency_jitter: 0.0,
+        ..Default::default()
+    };
+    let session = GossipSession::new(&cfg).expect("session");
+    let pipe = session.run_pipelined_rounds(model_mb, rounds, 1);
+    for ph in &pipe.rounds {
+        println!(
+            "round {}: seeded {:>8.2}-{:>8.2} s, exchange {:>8.2} s, done {:>8.2} s (slots {}-{})",
+            ph.round, ph.first_seed_s, ph.all_seeded_s, ph.exchange_done_s, ph.done_s,
+            ph.first_slot, ph.last_slot
+        );
+    }
+    println!(
+        "overlap: {:.2} s summed round spans vs {:.2} s wall",
+        pipe.summed_round_spans_s(),
+        pipe.total_time_s
+    );
+}

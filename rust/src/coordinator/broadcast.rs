@@ -25,9 +25,10 @@ pub enum BroadcastMode {
 }
 
 /// Tag layout for flow records: owner in the low 32 bits, sender above —
-/// lets metrics recover which model a flow carried.
-fn tag(owner: NodeId, from: NodeId) -> u64 {
-    ((from as u64) << 32) | owner as u64
+/// lets metrics recover which model a flow carried. Shared by every
+/// driver (broadcast, the engine's sim/logical/live drivers).
+pub fn flow_tag(owner: NodeId, sender: NodeId) -> u64 {
+    ((sender as u64) << 32) | owner as u64
 }
 
 pub fn tag_owner(tag: u64) -> NodeId {
@@ -56,7 +57,7 @@ pub fn run_broadcast_round(
     // t=0: every node pushes its own model to every overlay neighbor
     for u in 0..n {
         for v in structure.neighbor_ids(u) {
-            sim.start_flow(u, v, testbed.route(u, v), model_mb, tag(u, u));
+            sim.start_flow(u, v, testbed.route(u, v), model_mb, flow_tag(u, u));
         }
     }
 
@@ -86,7 +87,7 @@ pub fn run_broadcast_round(
                     if holds[dst].insert(owner) {
                         for v in structure.neighbor_ids(dst) {
                             if v != src && v != owner {
-                                sim.start_flow(dst, v, testbed.route(dst, v), model_mb, tag(owner, dst));
+                                sim.start_flow(dst, v, testbed.route(dst, v), model_mb, flow_tag(owner, dst));
                             }
                         }
                     }
@@ -105,7 +106,13 @@ pub fn run_broadcast_round(
     }
 
     let total = sim.now();
-    RoundMetrics { transfers: sim.take_completed(), total_time_s: total, exchange_time_s: total, slots: 0 }
+    RoundMetrics {
+        transfers: sim.take_completed(),
+        total_time_s: total,
+        exchange_time_s: total,
+        slots: 0,
+        slot_timings: Vec::new(),
+    }
 }
 
 fn is_complete_graph(g: &Graph) -> bool {

@@ -10,6 +10,8 @@
 //! schedule are recomputed over the surviving overlay, and the round runs
 //! on the new tree; on quiet rounds the cached schedule is reused.
 
+use super::engine::driver::SimDriver;
+use super::engine::{RoundEngine, RoundOptions};
 use super::gossip::GossipState;
 use super::moderator::{Moderator, ScheduleBundle};
 use crate::config::ExperimentConfig;
@@ -104,7 +106,12 @@ pub fn run_churn_experiment(
 }
 
 /// One timed MOSGU round over an arbitrary relabeled tree (`map[new] =
-/// original device id` for testbed routing).
+/// original device id` for testbed routing), driven through the shared
+/// round engine with a device-mapped simulator driver.
+///
+/// Like every engine round (and the legacy session path), an incomplete
+/// round within the slot budget is a protocol bug and panics rather
+/// than returning `Err`.
 fn run_round_on_tree(
     testbed: &Testbed,
     tree: &Graph,
@@ -113,41 +120,12 @@ fn run_round_on_tree(
     model_mb: f64,
     seed: u64,
 ) -> Result<RoundMetrics> {
-    let mut sim = testbed.netsim(seed);
+    let mut driver = SimDriver::with_map(testbed, seed, map.to_vec());
+    let mut engine = RoundEngine::new(&mut driver, schedule);
     let mut state = GossipState::new(tree.clone(), 0);
     let n = tree.node_count();
-    let max_slots = 8 * n + 64;
-    let mut slots_used = 0;
-    for slot in 0..max_slots {
-        if state.is_complete() {
-            break;
-        }
-        slots_used = slot + 1;
-        let planned = state.plan_slot(&schedule.transmitters(slot));
-        if planned.is_empty() {
-            continue;
-        }
-        for tx in &planned {
-            for &to in &tx.recipients {
-                let (src, dst) = (map[tx.from], map[to]);
-                let tag = ((src as u64) << 32) | map[tx.entry.key.owner] as u64;
-                sim.start_flow(src, dst, testbed.route(src, dst), model_mb, tag);
-            }
-        }
-        sim.run_until_idle();
-        for s in GossipState::sorted_sends(&planned) {
-            state.deliver(s);
-        }
-    }
-    anyhow::ensure!(state.is_complete(), "churn round incomplete");
-    let total = sim.now();
-    let transfers = sim.take_completed();
-    let exchange = transfers
-        .iter()
-        .filter(|r| super::broadcast::tag_owner(r.tag) == super::broadcast::tag_sender(r.tag))
-        .map(|r| r.end)
-        .fold(0.0, f64::max);
-    Ok(RoundMetrics { transfers, total_time_s: total, exchange_time_s: exchange, slots: slots_used })
+    let opts = RoundOptions::reliable(model_mb, 8 * n + 64);
+    Ok(engine.run_round(&mut state, opts, |_, _| {}))
 }
 
 #[cfg(test)]

@@ -1,0 +1,362 @@
+//! Byte-movement drivers for the [`RoundEngine`](super::RoundEngine).
+//!
+//! The engine owns protocol state and slot structure; a [`Driver`] owns
+//! the substrate that actually carries model copies and tells the engine,
+//! **per flow**, when each copy has arrived:
+//!
+//! * [`SimDriver`] — the discrete-event network simulator (`netsim`),
+//!   stepping one completion event at a time via
+//!   [`NetSim::run_next_completion`](crate::netsim::NetSim::run_next_completion).
+//!   Supports relabeled node ids for churn's induced subgraphs.
+//! * [`LogicalDriver`] — untimed instant delivery; one clock tick per
+//!   slot. This is the substrate behind the paper's Table I queue trace.
+//! * [`LiveDriver`] — real byte payloads over a [`Transport`] mesh
+//!   (in-memory channels or shaped loopback TCP), timed on the wall
+//!   clock.
+
+use crate::coordinator::broadcast::flow_tag;
+use crate::coordinator::queue::ModelKey;
+use crate::graph::NodeId;
+use crate::netsim::testbed::Testbed;
+use crate::netsim::{FlowRecord, NetSim};
+use crate::transport::{Message, Transport};
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Opaque handle for one launched model copy.
+pub type CopyToken = u64;
+
+/// One copy has fully arrived at its recipient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub token: CopyToken,
+    /// Driver-clock delivery time (seconds).
+    pub at_s: f64,
+}
+
+/// A substrate that moves model copies and reports per-flow completion
+/// events. All engine modes (simulated, logical, live) implement this.
+pub trait Driver {
+    /// Begin transferring one `model_mb`-sized copy of `key`'s model from
+    /// `from` to `to`. Returns a token identifying the copy.
+    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken;
+
+    /// Advance the substrate until at least one in-flight copy completes
+    /// and return the newly completed copies. An empty vector means
+    /// nothing is in flight (or the substrate stalled — the engine treats
+    /// that as fatal while copies are outstanding).
+    fn wait_any(&mut self) -> Vec<Completion>;
+
+    /// Current driver clock in seconds.
+    fn now(&self) -> f64;
+
+    /// Drain the low-level transfer records accumulated so far.
+    fn take_transfers(&mut self) -> Vec<FlowRecord>;
+}
+
+/// Driver over the discrete-event fluid-flow simulator.
+///
+/// `map[protocol id] = device id` relabels flows onto testbed hosts; the
+/// identity map is the common case, churn passes the induced-subgraph
+/// relabeling so surviving members keep their original routes.
+pub struct SimDriver<'a> {
+    testbed: &'a Testbed,
+    sim: NetSim,
+    map: Vec<NodeId>,
+}
+
+impl<'a> SimDriver<'a> {
+    /// Fresh simulator over the testbed wiring, identity node map.
+    pub fn new(testbed: &'a Testbed, seed: u64) -> Self {
+        let map = (0..testbed.node_count()).collect();
+        SimDriver { testbed, sim: testbed.netsim(seed), map }
+    }
+
+    /// As [`SimDriver::new`] with an explicit protocol-id → device-id map
+    /// (churn's relabeled trees).
+    pub fn with_map(testbed: &'a Testbed, seed: u64, map: Vec<NodeId>) -> Self {
+        assert!(
+            map.iter().all(|&d| d < testbed.node_count()),
+            "map addresses a device outside the testbed"
+        );
+        SimDriver { testbed, sim: testbed.netsim(seed), map }
+    }
+
+    pub fn sim(&self) -> &NetSim {
+        &self.sim
+    }
+}
+
+impl Driver for SimDriver<'_> {
+    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken {
+        let (src, dst) = (self.map[from], self.map[to]);
+        self.sim.start_flow(
+            src,
+            dst,
+            self.testbed.route(src, dst),
+            model_mb,
+            flow_tag(self.map[key.owner], src),
+        ) as CopyToken
+    }
+
+    fn wait_any(&mut self) -> Vec<Completion> {
+        self.sim
+            .run_next_completion()
+            .into_iter()
+            .map(|r| Completion { token: r.flow as CopyToken, at_s: r.end })
+            .collect()
+    }
+
+    fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    fn take_transfers(&mut self) -> Vec<FlowRecord> {
+        self.sim.take_completed()
+    }
+}
+
+/// Untimed driver: every launched copy completes at the next `wait_any`,
+/// which advances the clock by one unit (≈ one slot). Produces the exact
+/// slot-by-slot semantics of the paper's Table I.
+#[derive(Debug, Default)]
+pub struct LogicalDriver {
+    clock: f64,
+    next_token: CopyToken,
+    inflight: Vec<(CopyToken, NodeId, NodeId, ModelKey, f64)>,
+    transfers: Vec<FlowRecord>,
+}
+
+impl LogicalDriver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Driver for LogicalDriver {
+    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken {
+        let token = self.next_token;
+        self.next_token += 1;
+        self.inflight.push((token, from, to, key, model_mb));
+        token
+    }
+
+    fn wait_any(&mut self) -> Vec<Completion> {
+        if self.inflight.is_empty() {
+            return Vec::new();
+        }
+        self.clock += 1.0;
+        let done = std::mem::take(&mut self.inflight);
+        done.into_iter()
+            .map(|(token, from, to, key, model_mb)| {
+                self.transfers.push(FlowRecord {
+                    flow: token as usize,
+                    src: from,
+                    dst: to,
+                    payload_mb: model_mb,
+                    start: self.clock - 1.0,
+                    end: self.clock,
+                    tag: flow_tag(key.owner, from),
+                });
+                Completion { token, at_s: self.clock }
+            })
+            .collect()
+    }
+
+    fn now(&self) -> f64 {
+        self.clock
+    }
+
+    fn take_transfers(&mut self) -> Vec<FlowRecord> {
+        std::mem::take(&mut self.transfers)
+    }
+}
+
+/// Driver over real transports: model copies are actual byte payloads
+/// pushed through a [`Transport`] mesh (in-memory channels for tests,
+/// token-bucket-shaped loopback TCP for the live cluster), timed on the
+/// wall clock.
+///
+/// The driver owns every endpoint of the mesh, so the engine remains the
+/// single protocol authority — the in-process counterpart of the paper's
+/// moderator-scheduled deployment. Endpoint `i` must carry node id `i`.
+pub struct LiveDriver<T: Transport> {
+    endpoints: Vec<T>,
+    epoch: Instant,
+    next_token: CopyToken,
+    /// (sender, recipient, model) → tokens awaiting that arrival, FIFO so
+    /// retransmissions of the same copy resolve in launch order.
+    inflight: HashMap<(NodeId, NodeId, ModelKey), VecDeque<CopyToken>>,
+    inflight_count: usize,
+    launched: HashMap<CopyToken, (NodeId, NodeId, ModelKey, f64, f64)>,
+    transfers: Vec<FlowRecord>,
+    poll: Duration,
+    stall_timeout: Duration,
+}
+
+impl<T: Transport> LiveDriver<T> {
+    pub fn new(endpoints: Vec<T>) -> Self {
+        assert!(!endpoints.is_empty(), "live driver needs at least one endpoint");
+        for (i, ep) in endpoints.iter().enumerate() {
+            assert_eq!(ep.node(), i, "endpoints must be ordered by node id");
+        }
+        LiveDriver {
+            endpoints,
+            epoch: Instant::now(),
+            next_token: 0,
+            inflight: HashMap::new(),
+            inflight_count: 0,
+            launched: HashMap::new(),
+            transfers: Vec::new(),
+            poll: Duration::from_millis(2),
+            stall_timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// How long `wait_any` keeps polling before declaring the mesh
+    /// stalled (the engine then aborts the round).
+    pub fn set_stall_timeout(&mut self, timeout: Duration) {
+        self.stall_timeout = timeout;
+    }
+}
+
+impl<T: Transport> Driver for LiveDriver<T> {
+    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken {
+        let bytes = ((model_mb * 1024.0 * 1024.0).ceil() as usize).max(1);
+        let token = self.next_token;
+        self.next_token += 1;
+        let start = self.epoch.elapsed().as_secs_f64();
+        self.endpoints[from]
+            .send(
+                to,
+                Message::Model {
+                    owner: key.owner as u32,
+                    round: key.round as u32,
+                    payload: vec![key.owner as u8; bytes],
+                },
+            )
+            .expect("live transport send failed");
+        self.inflight.entry((from, to, key)).or_default().push_back(token);
+        self.inflight_count += 1;
+        self.launched.insert(token, (from, to, key, model_mb, start));
+        token
+    }
+
+    fn wait_any(&mut self) -> Vec<Completion> {
+        if self.inflight_count == 0 {
+            return Vec::new();
+        }
+        let deadline = Instant::now() + self.stall_timeout;
+        let mut out = Vec::new();
+        while out.is_empty() {
+            if Instant::now() > deadline {
+                return out; // stalled: engine asserts with copies in flight
+            }
+            for (d, endpoint) in self.endpoints.iter_mut().enumerate() {
+                loop {
+                    let msg = endpoint.try_recv().expect("live transport recv failed");
+                    let Some((src, msg)) = msg else { break };
+                    let Message::Model { owner, round, .. } = msg else { continue };
+                    let key = ModelKey::new(owner as usize, round as u64);
+                    let Some(queue) = self.inflight.get_mut(&(src, d, key)) else { continue };
+                    let Some(token) = queue.pop_front() else { continue };
+                    self.inflight_count -= 1;
+                    let at = self.epoch.elapsed().as_secs_f64();
+                    let (from, to, key, model_mb, start) =
+                        self.launched.remove(&token).expect("completion for unknown token");
+                    self.transfers.push(FlowRecord {
+                        flow: token as usize,
+                        src: from,
+                        dst: to,
+                        payload_mb: model_mb,
+                        start,
+                        end: at,
+                        tag: flow_tag(key.owner, from),
+                    });
+                    out.push(Completion { token, at_s: at });
+                }
+            }
+            if out.is_empty() {
+                std::thread::sleep(self.poll);
+            }
+        }
+        out
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn take_transfers(&mut self) -> Vec<FlowRecord> {
+        std::mem::take(&mut self.transfers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::transport::memory;
+
+    fn testbed() -> Testbed {
+        Testbed::new(&ExperimentConfig { latency_jitter: 0.0, ..Default::default() })
+    }
+
+    #[test]
+    fn sim_driver_reports_per_flow_completions() {
+        let tb = testbed();
+        let mut d = SimDriver::new(&tb, 1);
+        let t0 = d.launch(0, 1, ModelKey::new(0, 0), 2.0);
+        let t1 = d.launch(2, 5, ModelKey::new(2, 0), 14.0);
+        let first = d.wait_any();
+        assert_eq!(first.len(), 1, "unequal sizes must complete separately");
+        assert_eq!(first[0].token, t0);
+        let second = d.wait_any();
+        assert_eq!(second[0].token, t1);
+        assert!(second[0].at_s > first[0].at_s);
+        assert!(d.wait_any().is_empty());
+        assert_eq!(d.take_transfers().len(), 2);
+    }
+
+    #[test]
+    fn sim_driver_map_relabels_devices() {
+        let tb = testbed();
+        // protocol node 0 -> device 7, protocol node 1 -> device 2
+        let map = vec![7, 2, 0, 1, 3, 4, 5, 6, 8, 9];
+        let mut d = SimDriver::with_map(&tb, 1, map);
+        d.launch(0, 1, ModelKey::new(0, 0), 1.0);
+        d.wait_any();
+        let rec = &d.take_transfers()[0];
+        assert_eq!((rec.src, rec.dst), (7, 2));
+        assert_eq!(crate::coordinator::broadcast::tag_owner(rec.tag), 7);
+    }
+
+    #[test]
+    fn logical_driver_ticks_one_unit_per_batch() {
+        let mut d = LogicalDriver::new();
+        assert!(d.wait_any().is_empty());
+        d.launch(0, 1, ModelKey::new(0, 0), 1.0);
+        d.launch(1, 0, ModelKey::new(1, 0), 1.0);
+        let done = d.wait_any();
+        assert_eq!(done.len(), 2);
+        assert_eq!(d.now(), 1.0);
+        d.launch(0, 1, ModelKey::new(1, 0), 1.0);
+        d.wait_any();
+        assert_eq!(d.now(), 2.0);
+        assert_eq!(d.take_transfers().len(), 3);
+    }
+
+    #[test]
+    fn live_driver_moves_bytes_over_memory_mesh() {
+        let mut d = LiveDriver::new(memory::mesh(4));
+        let key = ModelKey::new(2, 0);
+        let token = d.launch(2, 3, key, 0.0001);
+        let done = d.wait_any();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].token, token);
+        let recs = d.take_transfers();
+        assert_eq!((recs[0].src, recs[0].dst), (2, 3));
+        assert!(recs[0].end >= recs[0].start);
+        assert!(d.wait_any().is_empty());
+    }
+}

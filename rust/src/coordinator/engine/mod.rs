@@ -1,0 +1,672 @@
+//! The unified event-driven round engine (paper §III-C/D).
+//!
+//! One protocol driver for every execution mode. [`RoundEngine`] owns the
+//! slot structure — which color class transmits, what each transmitter
+//! pops, how deliveries update queues — and keys slot state on **per-flow
+//! completion events** from a [`Driver`] instead of a global per-slot
+//! barrier. The same code path serves:
+//!
+//! * the simulated timing experiments (`SimDriver` over `netsim`) that
+//!   reproduce Tables III–V,
+//! * the untimed Table I queue trace (`LogicalDriver`),
+//! * churn's relabeled subgraph rounds (`SimDriver::with_map`),
+//! * real sockets (`LiveDriver` over `transport`).
+//!
+//! On top of single rounds, [`RoundEngine::run_pipelined`] implements the
+//! paper's §III-D observation that *"forwarded copies pipeline with the
+//! next round"*: rounds share one long-lived driver, and each node seeds
+//! round `t+1` the moment it holds all round-`t` models — so round
+//! `t+1`'s seeds start gossiping in the slots round `t` has vacated while
+//! round `t`'s forwarding tail is still draining. [`PipelineMetrics`]
+//! records per-round phases and per-slot timing so the overlap is
+//! directly measurable against sequential execution.
+
+pub mod driver;
+
+use self::driver::{CopyToken, Driver};
+use super::broadcast;
+use super::gossip::{GossipState, PlannedTx, Send};
+use super::schedule::Schedule;
+use crate::graph::{Graph, NodeId};
+use crate::metrics::{RoundMetrics, SlotTiming};
+use crate::netsim::FlowRecord;
+use crate::util::rng::Pcg64;
+
+/// Knobs of one engine-driven communication round.
+#[derive(Debug, Clone)]
+pub struct RoundOptions {
+    /// Size of one model copy in MB.
+    pub model_mb: f64,
+    /// Per-delivery network-disruption probability (§III-D): the copy's
+    /// bytes are spent but nothing arrives, and the popped entry is
+    /// re-queued for the sender's next turn.
+    pub failure_prob: f64,
+    /// Hard slot budget (protocol-bug guard).
+    pub max_slots: usize,
+    /// RNG that draws the failure coin per delivery, in deterministic
+    /// (sender, recipient) order.
+    pub failure_rng: Pcg64,
+}
+
+impl RoundOptions {
+    /// A failure-free round — the common case.
+    pub fn reliable(model_mb: f64, max_slots: usize) -> Self {
+        RoundOptions { model_mb, failure_prob: 0.0, max_slots, failure_rng: Pcg64::new(0) }
+    }
+}
+
+/// What one slot did, reported to the observer after its deliveries are
+/// applied.
+#[derive(Debug, Clone)]
+pub struct SlotOutcome {
+    pub slot: usize,
+    /// Transmitting color class.
+    pub color: usize,
+    /// Successful deliveries, in deterministic (sender, recipient) order.
+    pub sends: Vec<Send>,
+    /// Driver clock when the slot's copies were launched.
+    pub start_s: f64,
+    /// Driver clock when the last copy finished draining.
+    pub end_s: f64,
+    /// Copies launched (0 = idle color; failed copies are counted).
+    pub launched: usize,
+}
+
+/// Knobs of a pipelined multi-round run.
+#[derive(Debug, Clone)]
+pub struct PipelineOptions {
+    /// Communication rounds to push through the shared driver.
+    pub rounds: u64,
+    pub model_mb: f64,
+    /// Hard slot budget across *all* rounds.
+    pub max_slots: usize,
+    pub failure_prob: f64,
+    pub failure_rng: Pcg64,
+}
+
+impl PipelineOptions {
+    /// Failure-free pipeline with a generous slot budget.
+    pub fn reliable(rounds: u64, model_mb: f64, nodes: usize) -> Self {
+        PipelineOptions {
+            rounds,
+            model_mb,
+            max_slots: (rounds as usize + 1) * (8 * nodes + 64),
+            failure_prob: 0.0,
+            failure_rng: Pcg64::new(0),
+        }
+    }
+}
+
+/// Timeline of one round inside a pipelined run (all times on the shared
+/// driver clock, all slots on the shared slot counter).
+#[derive(Debug, Clone)]
+pub struct RoundPhase {
+    pub round: u64,
+    /// When the first node seeded this round (it had aggregated the
+    /// previous one).
+    pub first_seed_s: f64,
+    /// When the last node seeded this round.
+    pub all_seeded_s: f64,
+    /// When every node's own model had reached all its tree neighbors —
+    /// the exchange phase of this round (Table V's blocking part). Unlike
+    /// the single-round `RoundMetrics::exchange_time_s` (which uses
+    /// latency-inclusive delivery times), all `RoundPhase` times sit on
+    /// the driver's drain clock so the phases are directly comparable.
+    pub exchange_done_s: f64,
+    /// When every node held every model of this round.
+    pub done_s: f64,
+    pub first_slot: usize,
+    pub last_slot: usize,
+}
+
+impl RoundPhase {
+    /// Simulated span from first seed to full dissemination.
+    pub fn span_s(&self) -> f64 {
+        self.done_s - self.first_seed_s
+    }
+
+    /// Slots this round's traffic was active in.
+    pub fn slot_span(&self) -> usize {
+        self.last_slot - self.first_slot + 1
+    }
+}
+
+/// Result of a pipelined multi-round run.
+#[derive(Debug, Clone)]
+pub struct PipelineMetrics {
+    /// Every completed transfer across all rounds, in completion order.
+    pub transfers: Vec<FlowRecord>,
+    /// Driver clock when the last round fully disseminated.
+    pub total_time_s: f64,
+    /// Slots consumed across all rounds.
+    pub slots: usize,
+    pub slot_timings: Vec<SlotTiming>,
+    /// Per-round phase timeline, indexed by round.
+    pub rounds: Vec<RoundPhase>,
+    /// `received[round][node]` = model owners in reception order
+    /// (excluding the node's own model) — the aggregation order the DFL
+    /// layer folds with.
+    pub received: Vec<Vec<Vec<NodeId>>>,
+}
+
+impl PipelineMetrics {
+    /// Sum of per-round spans — what sequential execution would cost if
+    /// every round took its pipelined span. Comparing against
+    /// `total_time_s` quantifies the overlap the pipeline bought.
+    pub fn summed_round_spans_s(&self) -> f64 {
+        self.rounds.iter().map(|p| p.span_s()).sum()
+    }
+}
+
+/// One round of a pipelined run that is still in flight.
+struct ActiveRound {
+    state: GossipState,
+    seeded: Vec<bool>,
+    seeded_count: usize,
+    /// Own-model copies not yet (freshly) delivered; 0 = exchange done.
+    own_left: usize,
+    phase: RoundPhase,
+}
+
+/// The unified protocol driver: plans slots over [`GossipState`], moves
+/// copies through a [`Driver`], and applies deliveries in deterministic
+/// order as completion events arrive.
+pub struct RoundEngine<'a, D: Driver> {
+    driver: &'a mut D,
+    schedule: &'a Schedule,
+}
+
+impl<'a, D: Driver> RoundEngine<'a, D> {
+    pub fn new(driver: &'a mut D, schedule: &'a Schedule) -> Self {
+        RoundEngine { driver, schedule }
+    }
+
+    /// Launch every copy of the slot's planned transmissions; returns
+    /// `(planned index, recipient, token)` per copy.
+    fn launch_slot(
+        &mut self,
+        planned: &[PlannedTx],
+        model_mb: f64,
+    ) -> Vec<(usize, NodeId, CopyToken)> {
+        let mut meta = Vec::new();
+        for (i, tx) in planned.iter().enumerate() {
+            for &to in &tx.recipients {
+                let token = self.driver.launch(tx.from, to, tx.entry.key, model_mb);
+                meta.push((i, to, token));
+            }
+        }
+        meta
+    }
+
+    /// Consume per-flow completion events until every one of the slot's
+    /// `copies` launched copies has arrived.
+    fn drain_slot(&mut self, copies: usize) {
+        let mut done = 0;
+        while done < copies {
+            let events = self.driver.wait_any();
+            assert!(
+                !events.is_empty(),
+                "driver made no progress with {} copies in flight",
+                copies - done
+            );
+            done += events.len();
+        }
+    }
+
+    /// Deterministic delivery order: ascending sender id, then recipient
+    /// id — the order that reproduces the paper's Table I strings and the
+    /// legacy slot loop's failure-coin sequence.
+    fn delivery_order(planned: &[PlannedTx], meta: &[(usize, NodeId, CopyToken)]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..meta.len()).collect();
+        order.sort_by_key(|&j| (planned[meta[j].0].from, meta[j].1));
+        order
+    }
+
+    /// Run one communication round to full dissemination.
+    ///
+    /// `on_slot` observes every slot entered (including idle colors, which
+    /// burn no driver time) after its deliveries are applied — the hook
+    /// the Table I trace and experiment logging build on.
+    pub fn run_round(
+        &mut self,
+        state: &mut GossipState,
+        mut opts: RoundOptions,
+        mut on_slot: impl FnMut(&SlotOutcome, &GossipState),
+    ) -> RoundMetrics {
+        let mut slots_used = 0;
+        let mut slot_timings = Vec::new();
+        for slot in 0..opts.max_slots {
+            if state.is_complete() {
+                break;
+            }
+            slots_used = slot + 1;
+            let color = self.schedule.color_of_slot(slot);
+            let transmitters = self.schedule.transmitters(slot);
+            let planned = state.plan_slot(&transmitters);
+            let start_s = self.driver.now();
+            if planned.is_empty() {
+                // idle color: burns no simulated time
+                slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+                on_slot(
+                    &SlotOutcome { slot, color, sends: Vec::new(), start_s, end_s: start_s, launched: 0 },
+                    state,
+                );
+                continue;
+            }
+            let meta = self.launch_slot(&planned, opts.model_mb);
+            self.drain_slot(meta.len());
+            let end_s = self.driver.now();
+
+            let mut failed = vec![false; planned.len()];
+            let mut sends = Vec::with_capacity(meta.len());
+            for j in Self::delivery_order(&planned, &meta) {
+                let (i, to, _) = meta[j];
+                if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
+                    failed[i] = true;
+                    continue;
+                }
+                let tx = &planned[i];
+                let send = Send { from: tx.from, to, key: tx.entry.key };
+                state.deliver(send);
+                sends.push(send);
+            }
+            for (i, tx) in planned.iter().enumerate() {
+                if failed[i] {
+                    state.requeue(tx);
+                }
+            }
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: meta.len() });
+            on_slot(
+                &SlotOutcome { slot, color, sends, start_s, end_s, launched: meta.len() },
+                state,
+            );
+        }
+        assert!(
+            state.is_complete(),
+            "round did not complete within {} slots (failure_prob={})",
+            opts.max_slots,
+            opts.failure_prob
+        );
+        let total_time_s = self.driver.now();
+        let transfers = self.driver.take_transfers();
+        let exchange_time_s = exchange_time(&transfers);
+        RoundMetrics { transfers, total_time_s, exchange_time_s, slots: slots_used, slot_timings }
+    }
+
+    /// Run `opts.rounds` communication rounds through one long-lived
+    /// driver with multi-round pipelining.
+    ///
+    /// Round 0 seeds every node up front (everyone trained before the
+    /// protocol starts). From then on, a node seeds round `t+1` the
+    /// moment a delivery completes its round-`t` model set — its
+    /// remaining round-`t` forwards stay queued ahead of the new seed, so
+    /// per-node FIFO order is preserved while round `t+1` traffic fills
+    /// slots round `t` no longer needs. Within a slot every transmitter
+    /// services its oldest round with pending work; color classes are
+    /// fixed per node, so the proper-coloring guarantee (no adjacent
+    /// transmitters) holds across mixed-round slots too.
+    pub fn run_pipelined(&mut self, tree: &Graph, mut opts: PipelineOptions) -> PipelineMetrics {
+        let n = tree.node_count();
+        assert!(tree.is_tree(), "pipelined gossip runs on the moderator's MST");
+        // every node's own model crosses each incident tree edge once
+        let own_copies: usize = (0..n).map(|u| tree.degree(u)).sum();
+
+        let fresh_round = |round: u64, now: f64, slot: usize| ActiveRound {
+            state: GossipState::unseeded(tree.clone(), round),
+            seeded: vec![false; n],
+            seeded_count: 0,
+            own_left: own_copies,
+            phase: RoundPhase {
+                round,
+                first_seed_s: now,
+                all_seeded_s: now,
+                exchange_done_s: f64::NAN,
+                done_s: f64::NAN,
+                first_slot: slot,
+                last_slot: slot,
+            },
+        };
+
+        let mut active: Vec<ActiveRound> = Vec::new();
+        let mut finished: Vec<Option<(RoundPhase, Vec<Vec<NodeId>>)>> =
+            (0..opts.rounds).map(|_| None).collect();
+        let mut slot_timings = Vec::new();
+        let mut slots_used = 0;
+
+        if opts.rounds > 0 {
+            let mut first = fresh_round(0, self.driver.now(), 0);
+            for u in 0..n {
+                first.state.seed_node(u);
+                first.seeded[u] = true;
+            }
+            first.seeded_count = n;
+            active.push(first);
+        }
+
+        let mut slot = 0usize;
+        while !active.is_empty() {
+            assert!(
+                slot < opts.max_slots,
+                "pipeline did not complete within {} slots",
+                opts.max_slots
+            );
+            slots_used = slot + 1;
+            let color = self.schedule.color_of_slot(slot);
+            let transmitters = self.schedule.transmitters(slot);
+
+            // plan: each transmitter services its oldest round with work
+            let mut planned_rounds: Vec<usize> = Vec::new(); // active index per tx
+            let mut planned: Vec<PlannedTx> = Vec::new();
+            for &u in &transmitters {
+                for (ai, ar) in active.iter_mut().enumerate() {
+                    if let Some(tx) = ar.state.plan_node(u) {
+                        planned_rounds.push(ai);
+                        planned.push(tx);
+                        break;
+                    }
+                }
+            }
+            let start_s = self.driver.now();
+            if planned.is_empty() {
+                slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+                slot += 1;
+                continue;
+            }
+
+            let meta = self.launch_slot(&planned, opts.model_mb);
+            self.drain_slot(meta.len());
+            let end_s = self.driver.now();
+
+            // deliveries in deterministic order, routed to their round
+            let mut failed = vec![false; planned.len()];
+            let mut completed_nodes: Vec<(usize, NodeId)> = Vec::new(); // (active idx, node)
+            for j in Self::delivery_order(&planned, &meta) {
+                let (i, to, _) = meta[j];
+                if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
+                    failed[i] = true;
+                    continue;
+                }
+                let tx = &planned[i];
+                let ai = planned_rounds[i];
+                let send = Send { from: tx.from, to, key: tx.entry.key };
+                let ar = &mut active[ai];
+                let fresh = ar.state.deliver(send);
+                ar.phase.last_slot = slot;
+                if !fresh {
+                    continue; // deduplicated retransmission
+                }
+                if send.from == send.key.owner {
+                    // an own-model copy landed: exchange-phase accounting
+                    // (drain clock, so exchange_done_s <= done_s always)
+                    ar.own_left -= 1;
+                    if ar.own_left == 0 {
+                        ar.phase.exchange_done_s = end_s;
+                    }
+                }
+                if ar.state.queue(to).held_count() == n {
+                    completed_nodes.push((ai, to));
+                }
+            }
+            for (i, tx) in planned.iter().enumerate() {
+                if failed[i] {
+                    active[planned_rounds[i]].state.requeue(tx);
+                }
+            }
+
+            // nodes that finished a round seed the next one: its traffic
+            // becomes eligible from the next slot of its color
+            for (ai, u) in completed_nodes {
+                let next = active[ai].state.round() + 1;
+                if next >= opts.rounds {
+                    continue;
+                }
+                let ni = match active.iter().position(|ar| ar.state.round() == next) {
+                    Some(i) => i,
+                    None => {
+                        active.push(fresh_round(next, end_s, slot + 1));
+                        active.len() - 1
+                    }
+                };
+                let ar = &mut active[ni];
+                if !ar.seeded[u] {
+                    ar.state.seed_node(u);
+                    ar.seeded[u] = true;
+                    if ar.seeded_count == 0 {
+                        ar.phase.first_seed_s = end_s;
+                        ar.phase.first_slot = slot + 1;
+                    }
+                    ar.seeded_count += 1;
+                    if ar.seeded_count == n {
+                        ar.phase.all_seeded_s = end_s;
+                    }
+                }
+            }
+
+            // retire fully disseminated rounds
+            active.retain_mut(|ar| {
+                if !ar.state.is_complete() {
+                    return true;
+                }
+                ar.phase.done_s = end_s;
+                ar.phase.last_slot = slot;
+                let orders: Vec<Vec<NodeId>> = (0..n)
+                    .map(|u| {
+                        ar.state
+                            .queue(u)
+                            .held_order()
+                            .iter()
+                            .map(|k| k.owner)
+                            .filter(|&o| o != u)
+                            .collect()
+                    })
+                    .collect();
+                finished[ar.phase.round as usize] = Some((ar.phase.clone(), orders));
+                false
+            });
+
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: meta.len() });
+            slot += 1;
+        }
+
+        let total_time_s = self.driver.now();
+        let transfers = self.driver.take_transfers();
+        let mut rounds = Vec::with_capacity(finished.len());
+        let mut received = Vec::with_capacity(finished.len());
+        for entry in finished {
+            let (phase, orders) = entry.expect("every pipelined round completed");
+            rounds.push(phase);
+            received.push(orders);
+        }
+        PipelineMetrics { transfers, total_time_s, slots: slots_used, slot_timings, rounds, received }
+    }
+}
+
+/// Exchange-phase end: the latest delivery among own-model copies (owner
+/// == sender in the flow tag) — the blocking part of one FL round.
+fn exchange_time(transfers: &[FlowRecord]) -> f64 {
+    transfers
+        .iter()
+        .filter(|r| broadcast::tag_owner(r.tag) == broadcast::tag_sender(r.tag))
+        .map(|r| r.end)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::driver::{LogicalDriver, SimDriver};
+    use super::*;
+    use crate::coloring::bfs_coloring;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::example;
+    use crate::coordinator::schedule::build_schedule;
+    use crate::netsim::testbed::Testbed;
+
+    fn quiet_testbed() -> Testbed {
+        Testbed::new(&ExperimentConfig { latency_jitter: 0.0, ..Default::default() })
+    }
+
+    fn paper_schedule() -> Schedule {
+        build_schedule(
+            &example::paper_example_graph(),
+            example::paper_example_coloring(),
+            14.0,
+            56,
+            example::RED,
+        )
+    }
+
+    #[test]
+    fn logical_engine_round_completes_in_23_slots() {
+        let mut driver = LogicalDriver::new();
+        let schedule = paper_schedule();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let mut state = GossipState::new(example::paper_example_mst(), 0);
+        let m = engine.run_round(&mut state, RoundOptions::reliable(14.0, 64), |_, _| {});
+        assert!(state.is_complete());
+        assert_eq!(m.slots, 23);
+        assert_eq!(m.transfer_count(), 90);
+        assert_eq!(m.slot_timings.len(), 23);
+    }
+
+    #[test]
+    fn observer_sees_every_slot_in_order() {
+        let mut driver = LogicalDriver::new();
+        let schedule = paper_schedule();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let mut state = GossipState::new(example::paper_example_mst(), 0);
+        let mut seen = Vec::new();
+        engine.run_round(&mut state, RoundOptions::reliable(14.0, 64), |out, _| {
+            seen.push((out.slot, out.color));
+        });
+        assert_eq!(seen.len(), 23);
+        for (i, &(slot, color)) in seen.iter().enumerate() {
+            assert_eq!(slot, i);
+            assert_eq!(color, schedule.color_of_slot(i));
+        }
+    }
+
+    #[test]
+    fn sim_engine_round_with_failures_completes() {
+        let tb = quiet_testbed();
+        let mut driver = SimDriver::new(&tb, 5);
+        let schedule = paper_schedule();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let mut state = GossipState::new(example::paper_example_mst(), 0);
+        let opts = RoundOptions {
+            model_mb: 5.0,
+            failure_prob: 0.2,
+            max_slots: 144,
+            failure_rng: Pcg64::new(42),
+        };
+        let m = engine.run_round(&mut state, opts, |_, _| {});
+        assert!(state.is_complete());
+        assert!(m.transfer_count() > 90, "failures force retransmissions");
+        // every launched copy is accounted for in the slot timings
+        let copies: usize = m.slot_timings.iter().map(|s| s.copies).sum();
+        assert_eq!(copies, m.transfer_count());
+    }
+
+    #[test]
+    fn pipelined_rounds_all_complete_with_full_reception_orders() {
+        let tb = quiet_testbed();
+        let mut driver = SimDriver::new(&tb, 1);
+        let schedule = paper_schedule();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let tree = example::paper_example_mst();
+        let p = engine.run_pipelined(&tree, PipelineOptions::reliable(3, 5.0, 10));
+        assert_eq!(p.rounds.len(), 3);
+        assert_eq!(p.received.len(), 3);
+        assert_eq!(p.transfers.len(), 3 * 90);
+        for (r, phase) in p.rounds.iter().enumerate() {
+            assert_eq!(phase.round, r as u64);
+            assert!(phase.exchange_done_s <= phase.done_s + 1e-9);
+            assert!(phase.first_seed_s <= phase.all_seeded_s);
+            assert!(phase.span_s() > 0.0);
+            for (u, order) in p.received[r].iter().enumerate() {
+                assert_eq!(order.len(), 9, "round {r} node {u} missed models");
+            }
+        }
+        // rounds progress through the shared clock in order
+        assert!(p.rounds[0].done_s <= p.rounds[1].done_s);
+        assert!(p.rounds[1].done_s <= p.rounds[2].done_s);
+        assert!((p.total_time_s - p.rounds[2].done_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_overlaps_rounds() {
+        let tb = quiet_testbed();
+        let schedule = paper_schedule();
+        let tree = example::paper_example_mst();
+        let mut driver = SimDriver::new(&tb, 1);
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let p = engine.run_pipelined(&tree, PipelineOptions::reliable(3, 14.0, 10));
+        // round 1 must start seeding strictly before round 0 finishes
+        assert!(
+            p.rounds[1].first_seed_s < p.rounds[0].done_s,
+            "no overlap: round 1 seeded at {} but round 0 ended at {}",
+            p.rounds[1].first_seed_s,
+            p.rounds[0].done_s
+        );
+        assert!(p.total_time_s < p.summed_round_spans_s());
+    }
+
+    #[test]
+    fn pipelined_single_round_matches_run_round_protocol() {
+        // with rounds=1 the pipeline is just an engine round: same copies,
+        // same slot count
+        let tb = quiet_testbed();
+        let schedule = paper_schedule();
+        let tree = example::paper_example_mst();
+
+        let mut d1 = SimDriver::new(&tb, 9);
+        let mut e1 = RoundEngine::new(&mut d1, &schedule);
+        let mut state = GossipState::new(tree.clone(), 0);
+        let single = e1.run_round(&mut state, RoundOptions::reliable(11.6, 144), |_, _| {});
+
+        let mut d2 = SimDriver::new(&tb, 9);
+        let mut e2 = RoundEngine::new(&mut d2, &schedule);
+        let p = e2.run_pipelined(&tree, PipelineOptions::reliable(1, 11.6, 10));
+        assert_eq!(p.transfers.len(), single.transfer_count());
+        assert_eq!(p.slots, single.slots);
+        assert_eq!(p.total_time_s.to_bits(), single.total_time_s.to_bits());
+    }
+
+    #[test]
+    fn pipelined_zero_rounds_is_empty() {
+        let tb = quiet_testbed();
+        let schedule = paper_schedule();
+        let mut driver = SimDriver::new(&tb, 1);
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let p = engine.run_pipelined(
+            &example::paper_example_mst(),
+            PipelineOptions::reliable(0, 14.0, 10),
+        );
+        assert!(p.rounds.is_empty());
+        assert!(p.transfers.is_empty());
+        assert_eq!(p.slots, 0);
+    }
+
+    #[test]
+    fn pipelined_respects_coloring_in_mixed_slots() {
+        // no two adjacent nodes may transmit in the same slot, even when
+        // servicing different rounds
+        let mut tree = Graph::new(6);
+        for v in 1..6 {
+            tree.add_edge(v - 1, v, 1.0); // path
+        }
+        let coloring = bfs_coloring(&tree);
+        let schedule = Schedule { coloring, slot_len_s: 1.0, first_color: 0 };
+        let mut driver = LogicalDriver::new();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let p = engine.run_pipelined(&tree, PipelineOptions::reliable(2, 1.0, 6));
+        assert_eq!(p.rounds.len(), 2);
+        for st in &p.slot_timings {
+            let class = schedule.transmitters(st.slot);
+            for (i, &u) in class.iter().enumerate() {
+                for &v in &class[i + 1..] {
+                    assert!(!tree.has_edge(u, v), "adjacent {u},{v} share slot {}", st.slot);
+                }
+            }
+        }
+    }
+}

@@ -1,14 +1,19 @@
-//! The MOSGU gossip engine (paper §III-D).
+//! The MOSGU gossip protocol state (paper §III-D).
 //!
 //! [`GossipState`] holds the protocol logic — who sends which queue entry
 //! to whom in a slot, and how deliveries update the recipients' queues.
-//! Two drivers share it:
+//! It does not move bytes or advance clocks itself: every execution mode
+//! drives it through `coordinator::engine::RoundEngine` over a `Driver`
+//! ([`run_logical_round`] uses the untimed `LogicalDriver` to produce the
+//! paper's Table I trace; `session::run_mosgu_round` the simulator-backed
+//! `SimDriver` for the timing metrics of Tables III–V; `LiveDriver` the
+//! real-socket transports).
 //!
-//! * [`run_logical_round`] — untimed slot-by-slot execution producing the
-//!   exact queue trace of the paper's Table I;
-//! * `session::run_mosgu_round` — the same protocol driven through the
-//!   discrete-event network simulator, yielding the timing metrics of
-//!   Tables III–V.
+//! For multi-round pipelining (§III-D, "forwarded copies pipeline with
+//! the next round") the state supports *per-node* seeding: a node joins
+//! round `t+1` as soon as it has aggregated round `t`, while its
+//! remaining round-`t` forwarding obligations stay queued ahead of the
+//! new seed.
 
 use super::queue::{GossipQueue, ModelKey, QueueEntry};
 use super::schedule::Schedule;
@@ -50,13 +55,27 @@ pub struct GossipState {
 impl GossipState {
     /// Start a round: every node seeds its locally trained model.
     pub fn new(tree: Graph, round: u64) -> Self {
+        let mut state = Self::unseeded(tree, round);
+        for u in 0..state.node_count() {
+            state.seed_node(u);
+        }
+        state
+    }
+
+    /// Start a round with **no** node seeded yet. The pipelined engine
+    /// seeds nodes individually (via [`GossipState::seed_node`]) as each
+    /// finishes the previous round.
+    pub fn unseeded(tree: Graph, round: u64) -> Self {
         assert!(tree.is_tree(), "gossip graph must be the moderator's MST");
         let n = tree.node_count();
-        let mut queues: Vec<GossipQueue> = (0..n).map(GossipQueue::new).collect();
-        for q in queues.iter_mut() {
-            q.seed_own(round);
-        }
+        let queues: Vec<GossipQueue> = (0..n).map(GossipQueue::new).collect();
         GossipState { tree, queues, round }
+    }
+
+    /// Seed node `u`'s locally trained model for this round (panics if
+    /// seeded twice).
+    pub fn seed_node(&mut self, u: NodeId) {
+        self.queues[u].seed_own(self.round);
     }
 
     pub fn tree(&self) -> &Graph {
@@ -87,24 +106,26 @@ impl GossipState {
     /// neighbor except the entry's source. Entries are consumed here;
     /// failed transmissions go back via [`GossipState::requeue`].
     pub fn plan_slot(&mut self, transmitters: &[NodeId]) -> Vec<PlannedTx> {
-        let mut planned = Vec::new();
-        for &u in transmitters {
-            let Some(entry) = self.queues[u].pop_oldest() else {
-                continue; // nothing pending — node idles this slot
-            };
-            let recipients: Vec<NodeId> = self
-                .tree
-                .neighbor_ids(u)
-                .into_iter()
-                .filter(|&v| Some(v) != entry.received_from)
-                .collect();
-            debug_assert!(
-                !recipients.is_empty() || entry.received_from.is_some(),
-                "own model must always have a recipient"
-            );
-            planned.push(PlannedTx { from: u, entry, recipients });
-        }
-        planned
+        transmitters.iter().filter_map(|&u| self.plan_node(u)).collect()
+    }
+
+    /// Plan at most one transmission for node `u`: pop its oldest pending
+    /// entry and address every tree neighbor except the entry's source.
+    /// `None` when the node has nothing queued (it idles — or, in the
+    /// pipelined engine, services the next round instead).
+    pub fn plan_node(&mut self, u: NodeId) -> Option<PlannedTx> {
+        let entry = self.queues[u].pop_oldest()?;
+        let recipients: Vec<NodeId> = self
+            .tree
+            .neighbor_ids(u)
+            .into_iter()
+            .filter(|&v| Some(v) != entry.received_from)
+            .collect();
+        debug_assert!(
+            !recipients.is_empty() || entry.received_from.is_some(),
+            "own model must always have a recipient"
+        );
+        Some(PlannedTx { from: u, entry, recipients })
     }
 
     /// Apply a successful delivery. Returns `true` if the model was new to
@@ -179,32 +200,29 @@ impl RoundTrace {
 /// Run one communication round slot-by-slot with instant transfers,
 /// recording the queue-evolution rows of Table I. Panics if the round does
 /// not complete within `max_slots` (protocol bug guard).
+///
+/// This is the engine's untimed mode: [`RoundEngine`] over a
+/// [`LogicalDriver`], with an observer capturing the per-slot rows. The
+/// delivery order (ascending sender, then recipient) is the engine's
+/// deterministic order, so the trace reproduces the paper's Table I
+/// strings move for move.
 pub fn run_logical_round(
     state: &mut GossipState,
     schedule: &Schedule,
     label: impl Fn(NodeId) -> char + Copy,
     max_slots: usize,
 ) -> RoundTrace {
+    use super::engine::driver::LogicalDriver;
+    use super::engine::{RoundEngine, RoundOptions};
+
     let n = state.tree.node_count();
+    let mut driver = LogicalDriver::new();
+    let mut engine = RoundEngine::new(&mut driver, schedule);
     let mut trace = RoundTrace { slots: Vec::new(), rows: Vec::new() };
-    for slot in 0..max_slots {
-        if state.is_complete() {
-            return trace;
-        }
-        let color = schedule.color_of_slot(slot);
-        let transmitters = schedule.transmitters(slot);
-        let planned = state.plan_slot(&transmitters);
-        let sends = GossipState::sorted_sends(&planned);
-        for &s in &sends {
-            state.deliver(s);
-        }
-        trace.slots.push(SlotTrace { slot, color, sends });
-        trace.rows.push((0..n).map(|u| state.held_string(u, label)).collect());
-    }
-    assert!(
-        state.is_complete(),
-        "round did not complete in {max_slots} slots — protocol bug"
-    );
+    let _ = engine.run_round(state, RoundOptions::reliable(1.0, max_slots), |out, st| {
+        trace.slots.push(SlotTrace { slot: out.slot, color: out.color, sends: out.sends.clone() });
+        trace.rows.push((0..n).map(|u| st.held_string(u, label)).collect());
+    });
     trace
 }
 

@@ -2,9 +2,35 @@
 //! **O**ptimize connectivity, **S**chedule communication, **G**ossip &
 //! **U**pdate — plus the flooding-broadcast baseline and the experiment
 //! session gluing protocol, moderator and network simulator together.
+//!
+//! # Architecture: one engine, many drivers
+//!
+//! All round execution flows through [`engine::RoundEngine`], the single
+//! protocol driver. The engine owns slot structure and protocol state
+//! ([`gossip::GossipState`]) and keys each slot on per-flow completion
+//! events supplied by an [`engine::driver::Driver`] implementation:
+//!
+//! | driver | substrate | used by |
+//! |---|---|---|
+//! | `SimDriver` | discrete-event network simulator | [`session`] (Tables III–V), [`churn`] (relabeled trees) |
+//! | `LogicalDriver` | instant untimed delivery | [`gossip::run_logical_round`] (Table I trace) |
+//! | `LiveDriver` | real transports (memory / shaped TCP) | in-process live mode (engine owns every endpoint) |
+//!
+//! (`examples/live_cluster.rs` remains the *distributed* live
+//! deployment — one OS thread per node running its own loop; the
+//! engine-backed `LiveDriver` is its centralized in-process
+//! counterpart.)
+//!
+//! The engine also implements multi-round pipelining
+//! ([`engine::RoundEngine::run_pipelined`]): rounds share one long-lived
+//! driver and each node seeds round `t+1` as soon as it has aggregated
+//! round `t`, so next-round seeds gossip in slots the previous round has
+//! vacated (§III-D). The DFL layer (`dfl::round::run_dfl`) trains through
+//! this path.
 
 pub mod broadcast;
 pub mod churn;
+pub mod engine;
 pub mod example;
 pub mod gossip;
 pub mod moderator;

@@ -1,8 +1,10 @@
 //! End-to-end experiment session: topology → testbed → moderator →
-//! timed MOSGU round on the network simulator (and the broadcast
-//! baseline), producing the paper's Tables III–V metrics.
+//! timed MOSGU rounds through the event-driven round engine (and the
+//! broadcast baseline), producing the paper's Tables III–V metrics.
 
 use super::broadcast::{self, BroadcastMode};
+use super::engine::driver::SimDriver;
+use super::engine::{PipelineMetrics, PipelineOptions, RoundEngine, RoundOptions};
 use super::gossip::GossipState;
 use super::moderator::{Moderator, ScheduleBundle};
 use super::schedule::Schedule;
@@ -13,11 +15,6 @@ use crate::metrics::RoundMetrics;
 use crate::netsim::testbed::Testbed;
 use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
-
-/// Tag for gossip flow records (owner id of the carried model).
-fn tag(owner: usize, from: usize) -> u64 {
-    ((from as u64) << 32) | owner as u64
-}
 
 /// A fully prepared experiment: structural overlay, simulated testbed, and
 /// the moderator's published schedule bundle.
@@ -90,85 +87,43 @@ impl GossipSession {
         &self.cfg
     }
 
-    /// Run one timed MOSGU communication round: alternate color slots; in
-    /// each slot every transmitting node pops its oldest queue entry and
-    /// ships a copy to each addressed neighbor through the simulator; the
-    /// next slot opens when the current slot's transfers complete (the
-    /// formula slot length is the budget, not a busy-wait — see DESIGN.md).
+    /// Run one timed MOSGU communication round through the event-driven
+    /// engine: alternate color slots; in each slot every transmitting
+    /// node pops its oldest queue entry and ships a copy to each
+    /// addressed neighbor through the simulator; the next slot opens when
+    /// the current slot's per-flow completion events have all fired (the
+    /// formula slot length is the budget, not a busy-wait — see
+    /// DESIGN.md). Per-slot durations land in
+    /// [`RoundMetrics::slot_timings`].
     ///
     /// `failure_prob` injects per-transmission network disruptions: the
     /// flow's bytes are spent but nothing is delivered, and the entry is
     /// re-queued for the node's next turn (§III-D).
     pub fn run_mosgu_round(&self, model_mb: f64, seed: u64, failure_prob: f64) -> RoundMetrics {
-        let mut sim = self.testbed.netsim(seed);
+        let mut driver = SimDriver::new(&self.testbed, seed);
+        let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
         let mut state = GossipState::new(self.bundle.tree.clone(), 0);
-        let mut rng = Pcg64::new(seed ^ 0xfa11);
-        let schedule = &self.bundle.schedule;
         let n = state.node_count();
-        // generous guard: retransmissions can stretch the round
-        let max_slots = 8 * n + 64;
-        let mut slots_used = 0;
+        let opts = RoundOptions {
+            model_mb,
+            failure_prob,
+            // generous guard: retransmissions can stretch the round
+            max_slots: 8 * n + 64,
+            failure_rng: Pcg64::new(seed ^ 0xfa11),
+        };
+        engine.run_round(&mut state, opts, |_, _| {})
+    }
 
-        for slot in 0..max_slots {
-            if state.is_complete() {
-                break;
-            }
-            slots_used = slot + 1;
-            let transmitters = schedule.transmitters(slot);
-            let planned = state.plan_slot(&transmitters);
-            if planned.is_empty() {
-                // idle color this slot; burn no simulated time beyond zero
-                continue;
-            }
-            let slot_start = sim.now();
-            let mut flow_meta = Vec::new(); // (tx index, recipient, flow id)
-            for (i, tx) in planned.iter().enumerate() {
-                for &to in &tx.recipients {
-                    let f = sim.start_flow(
-                        tx.from,
-                        to,
-                        self.testbed.route(tx.from, to),
-                        model_mb,
-                        tag(tx.entry.key.owner, tx.from),
-                    );
-                    flow_meta.push((i, to, f));
-                }
-            }
-            sim.run_until_idle();
-            // deliveries in deterministic (from, to) order
-            let mut order: Vec<usize> = (0..flow_meta.len()).collect();
-            order.sort_by_key(|&j| (planned[flow_meta[j].0].from, flow_meta[j].1));
-            let mut failed = vec![false; planned.len()];
-            for j in order {
-                let (i, to, _) = flow_meta[j];
-                if failure_prob > 0.0 && rng.gen_bool(failure_prob) {
-                    failed[i] = true;
-                    continue;
-                }
-                let tx = &planned[i];
-                state.deliver(super::gossip::Send { from: tx.from, to, key: tx.entry.key });
-            }
-            for (i, tx) in planned.iter().enumerate() {
-                if failed[i] {
-                    state.requeue(tx);
-                }
-            }
-            let _ = slot_start;
-        }
-        assert!(
-            state.is_complete(),
-            "MOSGU round did not complete within {max_slots} slots (failure_prob={failure_prob})"
-        );
-        let total = sim.now();
-        let transfers = sim.take_completed();
-        // Exchange phase: the last delivery of a node's *own* round-t update
-        // (owner == sender). Forwarded copies pipeline with the next round.
-        let exchange = transfers
-            .iter()
-            .filter(|r| broadcast::tag_owner(r.tag) == broadcast::tag_sender(r.tag))
-            .map(|r| r.end)
-            .fold(0.0, f64::max);
-        RoundMetrics { transfers, total_time_s: total, exchange_time_s: exchange, slots: slots_used }
+    /// Run `rounds` MOSGU communication rounds through **one long-lived
+    /// simulator** with multi-round pipelining: each node seeds round
+    /// `t+1` the moment it holds every round-`t` model, so next-round
+    /// seeds gossip in slots round `t` has vacated (§III-D, "forwarded
+    /// copies pipeline with the next round").
+    pub fn run_pipelined_rounds(&self, model_mb: f64, rounds: u64, seed: u64) -> PipelineMetrics {
+        let mut driver = SimDriver::new(&self.testbed, seed);
+        let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
+        let n = self.bundle.tree.node_count();
+        engine.run_pipelined(&self.bundle.tree, PipelineOptions::reliable(rounds, model_mb, n))
     }
 
     /// The paper's baseline on this testbed: all-to-all direct push on the
@@ -269,6 +224,39 @@ mod tests {
         let b = s.run_mosgu_round(14.0, 7, 0.0);
         assert!((a.total_time_s - b.total_time_s).abs() < 1e-12);
         assert_eq!(a.transfer_count(), b.transfer_count());
+    }
+
+    #[test]
+    fn slot_timings_cover_the_round() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        let m = s.run_mosgu_round(14.0, 1, 0.0);
+        // the engine records one timing entry per slot entered
+        assert_eq!(m.slot_timings.len(), m.slots);
+        let copies: usize = m.slot_timings.iter().map(|t| t.copies).sum();
+        assert_eq!(copies, m.transfer_count());
+        for pair in m.slot_timings.windows(2) {
+            assert!(pair[0].end_s <= pair[1].start_s + 1e-12, "slots overlap");
+        }
+        let last_active = m.slot_timings.iter().rev().find(|t| t.copies > 0).unwrap();
+        assert!((last_active.end_s - m.total_time_s).abs() < 1e-12);
+        assert!(m.busy_time_s() > 0.0);
+        assert!(m.busy_time_s() <= m.total_time_s + 1e-12);
+    }
+
+    #[test]
+    fn pipelined_rounds_beat_sequential_on_total_time() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        let rounds = 3u64;
+        let sequential: f64 =
+            (0..rounds).map(|_| s.run_mosgu_round(14.0, 1, 0.0).total_time_s).sum();
+        let pipelined = s.run_pipelined_rounds(14.0, rounds, 1);
+        assert_eq!(pipelined.rounds.len(), 3);
+        assert!(
+            pipelined.total_time_s < sequential,
+            "pipelining must overlap rounds: {} vs {}",
+            pipelined.total_time_s,
+            sequential
+        );
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Topology generators for the paper's four experimental underlays
-//! (§IV-B, Fig 4): Erdős–Rényi, Watts–Strogatz, Barabási–Albert, Complete.
+//! (§IV-B, Fig 4) — Erdős–Rényi, Watts–Strogatz, Barabási–Albert,
+//! Complete — plus three deterministic shapes (ring, star, balanced
+//! binary tree) used by the pipelining benches and scenario sweeps.
 //!
 //! Generators produce *structure only* (unit edge weights). The testbed
 //! model (`netsim::testbed`) then assigns each node to a subnet and replaces
@@ -9,7 +11,9 @@
 use super::Graph;
 use crate::util::rng::Pcg64;
 
-/// The four topology families evaluated in the paper.
+/// Topology families: the paper's four experimental underlays (in
+/// [`TopologyKind::ALL`], the grid the tables run over) plus
+/// deterministic extras for benches and scenario sweeps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TopologyKind {
     /// G(n, p) random graph (Erdős–Rényi 1959).
@@ -20,14 +24,33 @@ pub enum TopologyKind {
     BarabasiAlbert,
     /// Every pair connected.
     Complete,
+    /// Cycle over all nodes (its MST is a path — the worst-case gossip
+    /// diameter, where pipelining gains most).
+    Ring,
+    /// Node 0 connected to everyone else (maximal forwarding hot-spot).
+    Star,
+    /// Balanced binary tree rooted at node 0.
+    BalancedTree,
 }
 
 impl TopologyKind {
+    /// The paper's evaluation grid (Tables III–V rows).
     pub const ALL: [TopologyKind; 4] = [
         TopologyKind::ErdosRenyi,
         TopologyKind::WattsStrogatz,
         TopologyKind::BarabasiAlbert,
         TopologyKind::Complete,
+    ];
+
+    /// Every supported family, including the deterministic bench shapes.
+    pub const EXTENDED: [TopologyKind; 7] = [
+        TopologyKind::ErdosRenyi,
+        TopologyKind::WattsStrogatz,
+        TopologyKind::BarabasiAlbert,
+        TopologyKind::Complete,
+        TopologyKind::Ring,
+        TopologyKind::Star,
+        TopologyKind::BalancedTree,
     ];
 
     /// Display name matching the paper's table rows.
@@ -37,6 +60,9 @@ impl TopologyKind {
             TopologyKind::WattsStrogatz => "Watts-Strogatz",
             TopologyKind::BarabasiAlbert => "Barabasi-Albert",
             TopologyKind::Complete => "Complete",
+            TopologyKind::Ring => "Ring",
+            TopologyKind::Star => "Star",
+            TopologyKind::BalancedTree => "Balanced-Tree",
         }
     }
 
@@ -46,6 +72,9 @@ impl TopologyKind {
             "watts-strogatz" | "ws" | "watt" => Some(TopologyKind::WattsStrogatz),
             "barabasi-albert" | "ba" | "barabasi" => Some(TopologyKind::BarabasiAlbert),
             "complete" | "full" => Some(TopologyKind::Complete),
+            "ring" | "cycle" => Some(TopologyKind::Ring),
+            "star" => Some(TopologyKind::Star),
+            "balanced-tree" | "tree" | "bt" => Some(TopologyKind::BalancedTree),
             _ => None,
         }
     }
@@ -85,6 +114,9 @@ pub fn generate(kind: TopologyKind, n: usize, params: &TopologyParams, rng: &mut
             connected_or_augmented(rng, |rng| watts_strogatz(n, params.ws_k, params.ws_beta, rng))
         }
         TopologyKind::BarabasiAlbert => barabasi_albert(n, params.ba_m, rng), // connected by construction
+        TopologyKind::Ring => ring(n),
+        TopologyKind::Star => star(n),
+        TopologyKind::BalancedTree => balanced_tree(n),
     }
 }
 
@@ -142,6 +174,37 @@ fn components(g: &Graph) -> Vec<usize> {
         next += 1;
     }
     comp
+}
+
+/// Cycle graph C_n (a single edge for n = 2).
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        let v = (u + 1) % n;
+        if u != v && !g.has_edge(u, v) {
+            g.add_edge(u, v, 1.0);
+        }
+    }
+    g
+}
+
+/// Star graph: node 0 adjacent to every other node.
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        g.add_edge(0, v, 1.0);
+    }
+    g
+}
+
+/// Balanced binary tree rooted at node 0 (heap indexing: node v's parent
+/// is (v − 1) / 2).
+pub fn balanced_tree(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        g.add_edge((v - 1) / 2, v, 1.0);
+    }
+    g
 }
 
 /// Complete graph K_n.
@@ -363,11 +426,47 @@ mod tests {
 
     #[test]
     fn names_and_parse_roundtrip() {
-        for kind in TopologyKind::ALL {
+        for kind in TopologyKind::EXTENDED {
             assert_eq!(TopologyKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(TopologyKind::parse("ws"), Some(TopologyKind::WattsStrogatz));
+        assert_eq!(TopologyKind::parse("ring"), Some(TopologyKind::Ring));
+        assert_eq!(TopologyKind::parse("tree"), Some(TopologyKind::BalancedTree));
         assert_eq!(TopologyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn deterministic_shapes_have_expected_structure() {
+        let r = ring(10);
+        assert_eq!(r.edge_count(), 10);
+        assert!(r.is_connected());
+        assert!((0..10).all(|u| r.degree(u) == 2));
+
+        let s = star(10);
+        assert_eq!(s.edge_count(), 9);
+        assert!(s.is_tree());
+        assert_eq!(s.degree(0), 9);
+
+        let t = balanced_tree(10);
+        assert_eq!(t.edge_count(), 9);
+        assert!(t.is_tree());
+        assert_eq!(t.degree(0), 2);
+        assert!(t.has_edge(0, 1) && t.has_edge(0, 2) && t.has_edge(1, 3));
+
+        // degenerate sizes stay connected
+        assert!(ring(2).is_connected());
+        assert_eq!(ring(2).edge_count(), 1);
+        assert!(star(2).is_tree());
+    }
+
+    #[test]
+    fn extended_generate_always_connected() {
+        let mut rng = Pcg64::new(11);
+        for kind in [TopologyKind::Ring, TopologyKind::Star, TopologyKind::BalancedTree] {
+            let g = generate(kind, 12, &TopologyParams::default(), &mut rng);
+            assert!(g.is_connected(), "{kind:?}");
+            assert_eq!(g.node_count(), 12);
+        }
     }
 
     #[test]

@@ -14,6 +14,29 @@
 //! - **Layer 1 (build-time Pallas):** aggregation / fused-linear / SGD
 //!   kernels called from Layer 2 (interpret mode → portable HLO).
 //!
+//! ## The engine/driver architecture
+//!
+//! Every execution mode drives the protocol through **one** code path:
+//! [`coordinator::engine::RoundEngine`], an event-driven round engine
+//! that keys per-color slot state on per-flow completion events rather
+//! than a global slot barrier. The substrate behind those events is a
+//! pluggable [`coordinator::engine::driver::Driver`]:
+//!
+//! - `SimDriver` — the discrete-event simulator (timing experiments,
+//!   Tables III–V; also churn's relabeled subgraph rounds),
+//! - `LogicalDriver` — untimed instant delivery (the Table I trace),
+//! - `LiveDriver` — real byte payloads over `transport` meshes
+//!   (in-memory channels or shaped loopback TCP).
+//!
+//! On top of single rounds the engine pipelines **multiple rounds over
+//! one long-lived simulator** ([`coordinator::engine::RoundEngine::run_pipelined`]):
+//! each node seeds round *t+1* the moment it has aggregated round *t*,
+//! so next-round seeds gossip in slots round *t* has vacated — the
+//! paper's §III-D observation that forwarded copies pipeline with the
+//! next round. `dfl::round::run_dfl` trains through this path, and
+//! [`metrics::RoundMetrics`] carries per-slot timing so the overlap is
+//! measurable (see `benches/engine_pipeline.rs`).
+//!
 //! The `runtime` module loads the AOT artifacts through PJRT so the gossip
 //! request path never touches Python.
 //!

@@ -10,6 +10,9 @@
 //! mosgu train  [--rounds N] [--local-steps K] [--lr F] [--artifacts DIR]
 //! mosgu headline [--config f.toml]   # abstract's improvement factors
 //! ```
+//!
+//! Common flags on every subcommand: `--config F`, `--seed N`,
+//! `--topology NAME`. Boolean flags take no value.
 
 use anyhow::{bail, Context, Result};
 use mosgu::bench::tables::{self, PaperTable};
@@ -35,17 +38,33 @@ fn main() {
     }
 }
 
-/// Parse `--key value` flags after the subcommand.
+/// Flags that take no value and parse as `"true"`. Everything else
+/// requires a value and fails fast when one is missing.
+const BOOLEAN_FLAGS: &[&str] = &["describe"];
+
+/// Parse `--key value` / `--flag` arguments after the subcommand.
+///
+/// Boolean flags are declared in [`BOOLEAN_FLAGS`] rather than
+/// special-cased in the parser; a value flag followed by another
+/// `--flag` (or by nothing) is a hard error, so forgotten values cannot
+/// silently become the string `"true"`.
 fn flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
-    let mut it = args.iter();
+    let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         let Some(key) = a.strip_prefix("--") else {
-            bail!("unexpected argument {a:?} (flags are --key value)");
+            bail!("unexpected argument {a:?} (flags are --key [value])");
         };
-        let value = match key {
-            "describe" => "true".to_string(), // boolean flag
-            _ => it.next().with_context(|| format!("--{key} needs a value"))?.clone(),
+        if key.is_empty() {
+            bail!("empty flag name");
+        }
+        let value = if BOOLEAN_FLAGS.contains(&key) {
+            "true".to_string()
+        } else {
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().unwrap().clone(),
+                _ => bail!("--{key} needs a value"),
+            }
         };
         out.insert(key.to_string(), value);
     }
@@ -99,7 +118,11 @@ fn print_usage() {
          \x20 graphviz  emit Figs 1/2/4/5/6 as DOT      [--fig N|all] [--out DIR]\n\
          \x20 sim       testbed description (Fig 3)     --describe\n\
          \x20 train     end-to-end DFL training         [--rounds N] [--local-steps K] [--lr F]\n\
-         \x20 headline  abstract's improvement factors  [--config F]"
+         \x20 headline  abstract's improvement factors  [--config F]\n\n\
+         common flags (all subcommands):\n\
+         \x20 --config F     load a TOML experiment config\n\
+         \x20 --seed N       RNG seed for topology + simulator jitter\n\
+         \x20 --topology T   underlay family (er|ws|ba|complete|ring|star|tree)"
     );
 }
 
@@ -238,9 +261,11 @@ fn cmd_sim(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
     let cfg = load_config(f)?;
-    let rounds: u64 = f.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(20);
-    let local_steps: u32 = f.get("local-steps").map(|s| s.parse()).transpose()?.unwrap_or(5);
-    let lr: f32 = f.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(0.1);
+    let rounds: u64 =
+        f.get("rounds").map(|s| s.parse()).transpose().context("--rounds")?.unwrap_or(20);
+    let local_steps: u32 =
+        f.get("local-steps").map(|s| s.parse()).transpose().context("--local-steps")?.unwrap_or(5);
+    let lr: f32 = f.get("lr").map(|s| s.parse()).transpose().context("--lr")?.unwrap_or(0.1);
     let dir = f
         .get("artifacts")
         .map(std::path::PathBuf::from)
@@ -257,12 +282,23 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
     let session = GossipSession::with_model(&cfg, artifacts.model_mb())?;
     let trainer = Trainer::new(&rt, &artifacts);
     println!("round  train_loss  eval_loss  comm_s  slots");
-    run_dfl(&session, &trainer, rounds, local_steps, lr, |r| {
+    let reports = run_dfl(&session, &trainer, rounds, local_steps, lr, |r| {
         println!(
             "{:>5}  {:>10.4}  {:>9.4}  {:>6.2}  {:>5}",
             r.round, r.train_loss, r.eval_loss, r.comm_time_s, r.slots
         );
     })?;
+    if let Some(last) = reports.last() {
+        // pipelining summary: rounds overlap on the shared simulator, so
+        // the pipeline finishes sooner than the per-round spans add up to
+        let summed: f64 = reports.iter().map(|r| r.done_s - r.start_s).sum();
+        println!(
+            "\npipelined communication: {:.2} s total vs {:.2} s summed round spans ({:.1}% overlap)",
+            last.done_s,
+            summed,
+            100.0 * (1.0 - last.done_s / summed).max(0.0)
+        );
+    }
     Ok(())
 }
 

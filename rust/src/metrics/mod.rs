@@ -6,6 +6,32 @@
 use crate::netsim::FlowRecord;
 use crate::util::stats::Summary;
 
+/// Timing of one schedule slot as the round engine drove it: when the
+/// slot's transfers started and when the last of them drained. Idle slots
+/// (a color class with nothing pending) carry `copies == 0` and zero
+/// duration — the engine burns no simulated time on them. This is the
+/// overlap accounting the multi-round pipeline is measured with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlotTiming {
+    /// Slot index within the round (or pipeline).
+    pub slot: usize,
+    /// Transmitting color class of the slot.
+    pub color: usize,
+    /// Simulated time the slot's transfers were launched.
+    pub start_s: f64,
+    /// Simulated time the slot's last transfer finished draining.
+    pub end_s: f64,
+    /// Model copies launched in the slot (0 = idle color).
+    pub copies: usize,
+}
+
+impl SlotTiming {
+    /// Simulated seconds the slot occupied.
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
 /// Metrics of one measured communication round.
 #[derive(Debug, Clone)]
 pub struct RoundMetrics {
@@ -22,6 +48,9 @@ pub struct RoundMetrics {
     pub exchange_time_s: f64,
     /// Number of slots the schedule used (0 for broadcast).
     pub slots: usize,
+    /// Per-slot timing as recorded by the round engine (empty for
+    /// broadcast, which has no slot structure).
+    pub slot_timings: Vec<SlotTiming>,
 }
 
 impl RoundMetrics {
@@ -50,6 +79,16 @@ impl RoundMetrics {
     /// Total payload moved (MB), counting every copy.
     pub fn total_payload_mb(&self) -> f64 {
         self.transfers.iter().map(|t| t.payload_mb).sum()
+    }
+
+    /// Simulated seconds spent in slots that actually carried transfers.
+    pub fn busy_time_s(&self) -> f64 {
+        self.slot_timings.iter().map(|s| s.duration_s()).sum()
+    }
+
+    /// Slots that launched at least one copy (idle colors excluded).
+    pub fn active_slots(&self) -> usize {
+        self.slot_timings.iter().filter(|s| s.copies > 0).count()
     }
 }
 
@@ -139,11 +178,34 @@ mod tests {
             total_time_s: 5.0,
             exchange_time_s: 5.0,
             slots: 2,
+            slot_timings: vec![
+                SlotTiming { slot: 0, color: 0, start_s: 0.0, end_s: 2.0, copies: 1 },
+                SlotTiming { slot: 1, color: 1, start_s: 2.0, end_s: 5.0, copies: 1 },
+            ],
         };
         assert!((m.bandwidth_mbps() - (5.0 + 2.0) / 2.0).abs() < 1e-12);
         assert!((m.avg_transfer_s() - 3.5).abs() < 1e-12);
         assert_eq!(m.transfer_count(), 2);
         assert!((m.total_payload_mb() - 20.0).abs() < 1e-12);
+        assert!((m.busy_time_s() - 5.0).abs() < 1e-12);
+        assert_eq!(m.active_slots(), 2);
+    }
+
+    #[test]
+    fn slot_timing_duration_and_idle_slots() {
+        let busy = SlotTiming { slot: 0, color: 1, start_s: 1.0, end_s: 3.5, copies: 4 };
+        let idle = SlotTiming { slot: 1, color: 0, start_s: 3.5, end_s: 3.5, copies: 0 };
+        assert!((busy.duration_s() - 2.5).abs() < 1e-12);
+        assert_eq!(idle.duration_s(), 0.0);
+        let m = RoundMetrics {
+            transfers: vec![rec(10.0, 1.0, 3.5)],
+            total_time_s: 3.5,
+            exchange_time_s: 3.5,
+            slots: 2,
+            slot_timings: vec![busy, idle],
+        };
+        assert_eq!(m.active_slots(), 1);
+        assert!((m.busy_time_s() - 2.5).abs() < 1e-12);
     }
 
     #[test]
@@ -155,6 +217,7 @@ mod tests {
                 total_time_s: total,
                 exchange_time_s: total,
                 slots: 1,
+                slot_timings: Vec::new(),
             });
         }
         assert_eq!(rep.total.count(), 2);
@@ -174,12 +237,14 @@ mod tests {
             total_time_s: 10.0,
             exchange_time_s: 10.0,
             slots: 0,
+            slot_timings: Vec::new(),
         });
         cell.proposed.push(&RoundMetrics {
             transfers: vec![rec(10.0, 0.0, 2.0)],
             total_time_s: 3.0,
             exchange_time_s: 2.0,
             slots: 23,
+            slot_timings: Vec::new(),
         });
         let s = render_table(
             "Table V",

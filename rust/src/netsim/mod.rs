@@ -309,43 +309,61 @@ impl NetSim {
     /// Run until every flow has completed; returns the completion time of
     /// the last one (or `now` if nothing was active).
     ///
-    /// Drains inline rather than delegating to [`NetSim::advance_to`], so
-    /// the max-min allocation runs exactly once per event (§Perf/L3).
+    /// Loops over [`NetSim::run_next_completion`] — the single-allocation
+    /// event step (§Perf/L3) — so the barrier drive and the engine's
+    /// per-event drive share one trajectory by construction.
     pub fn run_until_idle(&mut self) -> f64 {
         loop {
-            let rates = self.active_rates();
-            if rates.is_empty() {
+            if self.run_next_completion().is_empty() {
                 return self.now;
             }
-            let mut eta_min = f64::INFINITY;
-            let mut f_min = usize::MAX;
-            for &(f, r) in &rates {
-                if r > 0.0 {
-                    let eta = self.now + self.flows[f].remaining_mb / r;
-                    if eta < eta_min {
-                        eta_min = eta;
-                        f_min = f;
-                    }
+        }
+    }
+
+    /// Advance to the next flow-completion event and return the records
+    /// that completed at it (rate ties complete together). Returns an
+    /// empty vector when nothing is in flight.
+    ///
+    /// This is the per-flow completion-event API the round engine keys
+    /// its slot state on. One call is exactly one iteration of
+    /// [`NetSim::run_until_idle`] — a single max-min allocation per event
+    /// (§Perf/L3), identical float trajectory — so engine-driven rounds
+    /// stay bit-identical to the legacy global-barrier loop.
+    pub fn run_next_completion(&mut self) -> Vec<FlowRecord> {
+        let before = self.completed.len();
+        let rates = self.active_rates();
+        if rates.is_empty() {
+            return Vec::new();
+        }
+        let mut eta_min = f64::INFINITY;
+        let mut f_min = usize::MAX;
+        for &(f, r) in &rates {
+            if r > 0.0 {
+                let eta = self.now + self.flows[f].remaining_mb / r;
+                if eta < eta_min {
+                    eta_min = eta;
+                    f_min = f;
                 }
             }
-            assert!(eta_min.is_finite(), "active flows with zero rate — capacity exhausted");
-            let dt = eta_min - self.now;
-            for &(f, r) in &rates {
-                self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
-            }
-            // see advance_to: force the horizon-setting flow to complete so
-            // float cancellation cannot livelock the loop
-            self.flows[f_min].remaining_mb = 0.0;
-            self.now = eta_min;
-            let drained: Vec<FlowId> = rates
-                .iter()
-                .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
-                .map(|&(f, _)| f)
-                .collect();
-            for f in drained {
-                self.complete(f);
-            }
         }
+        assert!(eta_min.is_finite(), "active flows with zero rate — capacity exhausted");
+        let dt = eta_min - self.now;
+        for &(f, r) in &rates {
+            self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
+        }
+        // see run_until_idle: force the horizon-setting flow to complete
+        // so float cancellation cannot livelock the event loop
+        self.flows[f_min].remaining_mb = 0.0;
+        self.now = eta_min;
+        let drained: Vec<FlowId> = rates
+            .iter()
+            .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
+            .map(|&(f, _)| f)
+            .collect();
+        for f in drained {
+            self.complete(f);
+        }
+        self.completed[before..].to_vec()
     }
 
     /// Next flow-completion time if the system runs undisturbed.
@@ -508,6 +526,43 @@ mod tests {
         let e0 = sim.completed()[0].end;
         let e1 = sim.completed()[1].end;
         assert!((e0 - e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_event_stepping_matches_run_until_idle() {
+        // identical flow sets through both drive styles must produce
+        // bit-identical clocks and completion records
+        let build = || {
+            let mut sim = two_host_net(10.0, 0.01);
+            sim.start_flow(0, 1, vec![0], 5.0, 0);
+            sim.start_flow(0, 1, vec![0], 9.0, 1);
+            sim.start_flow(1, 0, vec![1], 3.0, 2);
+            sim
+        };
+        let mut barrier = build();
+        barrier.run_until_idle();
+        let mut stepped = build();
+        let mut seen = 0;
+        loop {
+            let events = stepped.run_next_completion();
+            if events.is_empty() {
+                break;
+            }
+            seen += events.len();
+        }
+        assert_eq!(seen, 3);
+        assert_eq!(stepped.now().to_bits(), barrier.now().to_bits());
+        assert_eq!(stepped.completed().len(), barrier.completed().len());
+        for (a, b) in stepped.completed().iter().zip(barrier.completed()) {
+            assert_eq!(a, b);
+            assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn run_next_completion_empty_when_idle() {
+        let mut sim = two_host_net(10.0, 0.0);
+        assert!(sim.run_next_completion().is_empty());
     }
 
     #[test]

@@ -24,6 +24,13 @@ pub trait Transport: Send {
     /// Receive the next message, with a timeout. `Ok(None)` = timed out.
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Message)>>;
 
+    /// Non-blocking receive: drain one already-delivered message if any.
+    /// `Ok(None)` = nothing pending. The engine's `LiveDriver` polls the
+    /// whole mesh through this.
+    fn try_recv(&mut self) -> Result<Option<(usize, Message)>> {
+        self.recv_timeout(Duration::ZERO)
+    }
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -96,6 +103,21 @@ mod tests {
         }
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt >= 0.10, "elapsed {dt}");
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking() {
+        use crate::transport::memory;
+        let mut eps = memory::mesh(2);
+        let mut b = eps.remove(1);
+        let mut a = eps.remove(0);
+        let t0 = Instant::now();
+        assert!(b.try_recv().unwrap().is_none());
+        assert!(t0.elapsed().as_secs_f64() < 0.05, "try_recv must not block");
+        a.send(1, Message::Vote { candidate: 4 }).unwrap();
+        let (from, msg) = b.try_recv().unwrap().expect("message pending");
+        assert_eq!(from, 0);
+        assert_eq!(msg, Message::Vote { candidate: 4 });
     }
 
     #[test]

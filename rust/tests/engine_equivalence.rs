@@ -1,0 +1,347 @@
+//! The engine refactor's contract tests:
+//!
+//! 1. the event-driven `RoundEngine` + `SimDriver` reproduces the legacy
+//!    global-barrier slot loop **bit for bit** (same `total_time_s`,
+//!    `slots`, transfer set) across every paper topology and under
+//!    failure injection;
+//! 2. `SimDriver` rounds are byte-identical across runs for a fixed seed;
+//! 3. `LogicalDriver` through the engine replays the seed's untimed
+//!    queue-trace semantics exactly (property-tested over random trees);
+//! 4. multi-round pipelining strictly beats sequential execution on
+//!    ring, star and balanced-tree topologies at n ≥ 10;
+//! 5. `LiveDriver` runs the same protocol over a real in-memory
+//!    transport mesh.
+
+use mosgu::coloring::bfs_coloring;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::broadcast::{tag_owner, tag_sender};
+use mosgu::coordinator::engine::driver::{LiveDriver, LogicalDriver, SimDriver};
+use mosgu::coordinator::engine::{RoundEngine, RoundOptions};
+use mosgu::coordinator::example;
+use mosgu::coordinator::gossip::{run_logical_round, GossipState, Send};
+use mosgu::coordinator::schedule::{build_schedule, Schedule};
+use mosgu::coordinator::session::GossipSession;
+use mosgu::graph::topology::TopologyKind;
+use mosgu::graph::Graph;
+use mosgu::metrics::RoundMetrics;
+use mosgu::netsim::FlowRecord;
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+
+fn quiet_cfg(kind: TopologyKind) -> ExperimentConfig {
+    ExperimentConfig { topology: kind, latency_jitter: 0.0, ..Default::default() }
+}
+
+/// The seed's original `run_mosgu_round`: global `run_until_idle` barrier
+/// per slot, kept verbatim as the reference the engine must match.
+fn legacy_mosgu_round(
+    session: &GossipSession,
+    model_mb: f64,
+    seed: u64,
+    failure_prob: f64,
+) -> (Vec<FlowRecord>, f64, f64, usize) {
+    let mut sim = session.testbed().netsim(seed);
+    let mut state = GossipState::new(session.tree().clone(), 0);
+    let mut rng = Pcg64::new(seed ^ 0xfa11);
+    let schedule = session.schedule();
+    let n = state.node_count();
+    let max_slots = 8 * n + 64;
+    let mut slots_used = 0;
+    for slot in 0..max_slots {
+        if state.is_complete() {
+            break;
+        }
+        slots_used = slot + 1;
+        let transmitters = schedule.transmitters(slot);
+        let planned = state.plan_slot(&transmitters);
+        if planned.is_empty() {
+            continue;
+        }
+        let mut flow_meta = Vec::new();
+        for (i, tx) in planned.iter().enumerate() {
+            for &to in &tx.recipients {
+                sim.start_flow(
+                    tx.from,
+                    to,
+                    session.testbed().route(tx.from, to),
+                    model_mb,
+                    ((tx.from as u64) << 32) | tx.entry.key.owner as u64,
+                );
+                flow_meta.push((i, to));
+            }
+        }
+        sim.run_until_idle();
+        let mut order: Vec<usize> = (0..flow_meta.len()).collect();
+        order.sort_by_key(|&j| (planned[flow_meta[j].0].from, flow_meta[j].1));
+        let mut failed = vec![false; planned.len()];
+        for j in order {
+            let (i, to) = flow_meta[j];
+            if failure_prob > 0.0 && rng.gen_bool(failure_prob) {
+                failed[i] = true;
+                continue;
+            }
+            let tx = &planned[i];
+            state.deliver(Send { from: tx.from, to, key: tx.entry.key });
+        }
+        for (i, tx) in planned.iter().enumerate() {
+            if failed[i] {
+                state.requeue(tx);
+            }
+        }
+    }
+    assert!(state.is_complete(), "legacy reference round incomplete");
+    let total = sim.now();
+    let transfers = sim.take_completed();
+    let exchange = transfers
+        .iter()
+        .filter(|r| tag_owner(r.tag) == tag_sender(r.tag))
+        .map(|r| r.end)
+        .fold(0.0, f64::max);
+    (transfers, total, exchange, slots_used)
+}
+
+fn assert_metrics_match_legacy(m: &RoundMetrics, legacy: &(Vec<FlowRecord>, f64, f64, usize)) {
+    let (transfers, total, exchange, slots) = legacy;
+    assert_eq!(m.slots, *slots, "slot count diverged");
+    assert_eq!(
+        m.total_time_s.to_bits(),
+        total.to_bits(),
+        "total time diverged: {} vs {total}",
+        m.total_time_s
+    );
+    assert_eq!(
+        m.exchange_time_s.to_bits(),
+        exchange.to_bits(),
+        "exchange time diverged: {} vs {exchange}",
+        m.exchange_time_s
+    );
+    assert_eq!(m.transfers.len(), transfers.len(), "transfer count diverged");
+    for (a, b) in m.transfers.iter().zip(transfers) {
+        assert_eq!(a, b, "transfer record diverged");
+        assert_eq!(a.start.to_bits(), b.start.to_bits());
+        assert_eq!(a.end.to_bits(), b.end.to_bits());
+    }
+}
+
+#[test]
+fn engine_matches_legacy_slot_loop_on_all_topologies() {
+    for kind in TopologyKind::ALL {
+        let session = GossipSession::new(&quiet_cfg(kind)).unwrap();
+        for (model_mb, seed) in [(11.6, 1u64), (48.0, 7u64)] {
+            let legacy = legacy_mosgu_round(&session, model_mb, seed, 0.0);
+            let engine = session.run_mosgu_round(model_mb, seed, 0.0);
+            assert_metrics_match_legacy(&engine, &legacy);
+        }
+    }
+}
+
+#[test]
+fn engine_matches_legacy_slot_loop_with_jitter_and_failures() {
+    // jittered testbed + failure injection: the rng draw sequence and the
+    // retransmission schedule must replay identically
+    let cfg = ExperimentConfig::default(); // latency_jitter = 0.08
+    let session = GossipSession::new(&cfg).unwrap();
+    for failure_prob in [0.0, 0.15] {
+        let legacy = legacy_mosgu_round(&session, 14.0, 3, failure_prob);
+        let engine = session.run_mosgu_round(14.0, 3, failure_prob);
+        assert_metrics_match_legacy(&engine, &legacy);
+    }
+}
+
+#[test]
+fn sim_rounds_are_byte_identical_for_fixed_seed() {
+    let session = GossipSession::new(&quiet_cfg(TopologyKind::WattsStrogatz)).unwrap();
+    let a = session.run_mosgu_round(14.0, 42, 0.1);
+    let b = session.run_mosgu_round(14.0, 42, 0.1);
+    assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+    assert_eq!(a.exchange_time_s.to_bits(), b.exchange_time_s.to_bits());
+    assert_eq!(a.slots, b.slots);
+    assert_eq!(a.transfers, b.transfers);
+    assert_eq!(a.slot_timings.len(), b.slot_timings.len());
+    for (x, y) in a.slot_timings.iter().zip(&b.slot_timings) {
+        assert_eq!(x, y);
+        assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+        assert_eq!(x.end_s.to_bits(), y.end_s.to_bits());
+    }
+}
+
+/// The seed's original untimed slot loop, kept as the reference for the
+/// engine's `LogicalDriver` mode.
+fn reference_logical_trace(
+    state: &mut GossipState,
+    schedule: &Schedule,
+    max_slots: usize,
+) -> (Vec<(usize, Vec<Send>)>, Vec<Vec<usize>>) {
+    let n = state.node_count();
+    let mut slots = Vec::new();
+    let mut held_counts = Vec::new();
+    for slot in 0..max_slots {
+        if state.is_complete() {
+            break;
+        }
+        let color = schedule.color_of_slot(slot);
+        let transmitters = schedule.transmitters(slot);
+        let planned = state.plan_slot(&transmitters);
+        let sends = GossipState::sorted_sends(&planned);
+        for &s in &sends {
+            state.deliver(s);
+        }
+        slots.push((color, sends));
+        held_counts.push((0..n).map(|u| state.queue(u).held_count()).collect());
+    }
+    assert!(state.is_complete(), "reference trace incomplete");
+    (slots, held_counts)
+}
+
+fn random_tree(n: usize, rng: &mut Pcg64) -> Graph {
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        let u = rng.gen_range(v);
+        g.add_edge(u, v, rng.gen_f64_range(1.0, 50.0));
+    }
+    g
+}
+
+#[test]
+fn logical_engine_replays_reference_trace_on_random_trees() {
+    check("engine replays untimed trace", 120, |rng| {
+        let n = 2 + rng.gen_range(24);
+        let tree = random_tree(n, rng);
+        let schedule =
+            Schedule { coloring: bfs_coloring(&tree), slot_len_s: 1.0, first_color: 1 };
+        let max_slots = 16 * n + 64;
+
+        let mut ref_state = GossipState::new(tree.clone(), 0);
+        let (ref_slots, ref_held) = reference_logical_trace(&mut ref_state, &schedule, max_slots);
+
+        let mut eng_state = GossipState::new(tree, 0);
+        let trace = run_logical_round(&mut eng_state, &schedule, |_| 'x', max_slots);
+
+        if trace.slots.len() != ref_slots.len() {
+            return Err(format!(
+                "slot count {} vs reference {}",
+                trace.slots.len(),
+                ref_slots.len()
+            ));
+        }
+        for (i, slot) in trace.slots.iter().enumerate() {
+            let (ref_color, ref_sends) = &ref_slots[i];
+            if slot.color != *ref_color {
+                return Err(format!("slot {i} color {} vs {ref_color}", slot.color));
+            }
+            if &slot.sends != ref_sends {
+                return Err(format!("slot {i} sends diverged"));
+            }
+            // every label is one char, so row string length == held count
+            for (u, row) in trace.rows[i].iter().enumerate() {
+                if row.len() != ref_held[i][u] {
+                    return Err(format!(
+                        "slot {i} node {u}: holds {} vs reference {}",
+                        row.len(),
+                        ref_held[i][u]
+                    ));
+                }
+            }
+        }
+        for u in 0..eng_state.node_count() {
+            if eng_state.held_string(u, |_| 'x') != ref_state.held_string(u, |_| 'x') {
+                return Err(format!("node {u} final holdings diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn table1_trace_still_exact_through_engine() {
+    // belt and braces beside tests/table1_trace.rs: the engine-backed
+    // logical round still lands the paper's final row and slot count
+    let schedule = build_schedule(
+        &example::paper_example_graph(),
+        example::paper_example_coloring(),
+        14.0,
+        56,
+        example::RED,
+    );
+    let mut state = GossipState::new(example::paper_example_mst(), 0);
+    let trace = run_logical_round(&mut state, &schedule, example::label, 64);
+    assert_eq!(trace.slots.len(), 23);
+    assert_eq!(state.held_string(example::K, example::label), "KGIFBECHDA");
+}
+
+#[test]
+fn pipelining_strictly_beats_sequential_on_ring_star_tree() {
+    let rounds = 3u64;
+    for kind in [TopologyKind::Ring, TopologyKind::Star, TopologyKind::BalancedTree] {
+        for n in [10usize, 12] {
+            let cfg = ExperimentConfig { nodes: n, ..quiet_cfg(kind) };
+            let session = GossipSession::new(&cfg).unwrap();
+            let sequential: f64 =
+                (0..rounds).map(|_| session.run_mosgu_round(14.0, 1, 0.0).total_time_s).sum();
+            let pipelined = session.run_pipelined_rounds(14.0, rounds, 1);
+            assert_eq!(pipelined.rounds.len(), rounds as usize, "{kind:?} n={n}");
+            assert!(
+                pipelined.total_time_s < sequential,
+                "{kind:?} n={n}: pipelined {} must beat sequential {}",
+                pipelined.total_time_s,
+                sequential
+            );
+            // every round still disseminates completely
+            for (r, orders) in pipelined.received.iter().enumerate() {
+                for (u, order) in orders.iter().enumerate() {
+                    assert_eq!(order.len(), n - 1, "{kind:?} round {r} node {u}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn live_driver_runs_the_same_protocol_over_a_memory_mesh() {
+    let schedule = build_schedule(
+        &example::paper_example_graph(),
+        example::paper_example_coloring(),
+        14.0,
+        56,
+        example::RED,
+    );
+    let mut driver = LiveDriver::new(mosgu::transport::memory::mesh(10));
+    let mut engine = RoundEngine::new(&mut driver, &schedule);
+    let mut state = GossipState::new(example::paper_example_mst(), 0);
+    // tiny payloads: the protocol structure, not the byte rate, is under test
+    let m = engine.run_round(&mut state, RoundOptions::reliable(0.0005, 64), |_, _| {});
+    assert!(state.is_complete());
+    assert_eq!(m.transfer_count(), 90, "live mesh must move the same copies");
+    assert_eq!(m.slots, 23, "live protocol structure matches the logical trace");
+    assert_eq!(state.held_string(example::K, example::label), "KGIFBECHDA");
+}
+
+#[test]
+fn logical_driver_and_sim_driver_agree_on_protocol_structure() {
+    // same schedule, different substrates: slots and copy counts match
+    let session = GossipSession::new(&quiet_cfg(TopologyKind::Complete)).unwrap();
+    let mut state = GossipState::new(session.tree().clone(), 0);
+    let mut driver = LogicalDriver::new();
+    let mut engine = RoundEngine::new(&mut driver, session.schedule());
+    let logical = engine.run_round(&mut state, RoundOptions::reliable(14.0, 144), |_, _| {});
+    let timed = session.run_mosgu_round(14.0, 1, 0.0);
+    assert_eq!(logical.slots, timed.slots);
+    assert_eq!(logical.transfer_count(), timed.transfer_count());
+}
+
+#[test]
+fn sim_driver_with_map_preserves_round_structure() {
+    // running the paper round relabeled onto different devices moves the
+    // same copies through the same slots
+    let session = GossipSession::new(&quiet_cfg(TopologyKind::Complete)).unwrap();
+    let tb = session.testbed();
+    let n = 10;
+    let map: Vec<usize> = (0..n).map(|u| (u + 3) % n).collect();
+    let mut driver = SimDriver::with_map(tb, 1, map);
+    let mut engine = RoundEngine::new(&mut driver, session.schedule());
+    let mut state = GossipState::new(session.tree().clone(), 0);
+    let m = engine.run_round(&mut state, RoundOptions::reliable(14.0, 144), |_, _| {});
+    let identity = session.run_mosgu_round(14.0, 1, 0.0);
+    assert_eq!(m.slots, identity.slots);
+    assert_eq!(m.transfer_count(), identity.transfer_count());
+}
