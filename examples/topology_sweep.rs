@@ -1,26 +1,54 @@
 //! Topology sweep: the paper's §V-B analysis — how the four underlay
 //! families affect bandwidth, transfer time and round time, including the
 //! qualitative claims (Erdős–Rényi best for large models, Barabási–Albert
-//! second slowest, Complete best bandwidth for small/medium).
+//! second slowest, Complete best bandwidth for small/medium) — plus a
+//! `--segments` dimension sweeping the segment-granular transfer plane
+//! (cut-through forwarding) against whole-model transfers.
 //!
 //! ```bash
 //! cargo run --release --example topology_sweep [-- --models v3s,b0,b3]
+//! cargo run --release --example topology_sweep -- --segments 1,4,8
 //! ```
 
 use mosgu::bench::tables::{all_models, run_grid};
 use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
 use mosgu::dfl::models::by_code;
+use mosgu::dfl::transfer::TransferPlan;
 use mosgu::graph::topology::TopologyKind;
 
 fn main() -> anyhow::Result<()> {
     mosgu::util::logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let models = match args.iter().position(|a| a == "--models") {
-        Some(i) => args[i + 1]
+    let flag_value = |flag: &str| -> anyhow::Result<Option<String>> {
+        match args.iter().position(|a| a == flag) {
+            Some(i) => args
+                .get(i + 1)
+                .cloned()
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("{flag} needs a value")),
+            None => Ok(None),
+        }
+    };
+    let models = match flag_value("--models")? {
+        Some(list) => list
             .split(',')
             .map(|c| by_code(c.trim()).ok_or_else(|| anyhow::anyhow!("unknown model {c}")))
             .collect::<Result<Vec<_>, _>>()?,
         None => all_models(),
+    };
+    let segment_counts: Vec<usize> = match flag_value("--segments")? {
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                let k: usize =
+                    s.trim().parse().map_err(|e| anyhow::anyhow!("bad --segments {s}: {e}"))?;
+                let max = u16::MAX as usize;
+                anyhow::ensure!((1..=max).contains(&k), "--segments {k} out of 1..=65535");
+                Ok(k)
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+        None => Vec::new(),
     };
 
     let cfg = ExperimentConfig { repeats: 3, ..Default::default() };
@@ -56,5 +84,44 @@ fn main() -> anyhow::Result<()> {
         "  BA mean transfer {ba:.2} s vs ER {er:.2} s -> hubs slow BA down: {}",
         if ba > er { "yes (matches paper)" } else { "no" }
     );
+
+    // segment-granularity dimension: cut-through forwarding vs whole-model
+    // transfers, on the paper grid plus the deep-relay shapes where
+    // pipelining matters most (chain, balanced tree)
+    if !segment_counts.is_empty() {
+        println!("\n== segment sweep (full-dissemination time, seconds) ==");
+        let mut header = format!("{:<17}{:>6}{:>10}", "topology", "model", "whole");
+        for &k in &segment_counts {
+            header.push_str(&format!("{:>10}", format!("k={k}")));
+        }
+        // best segmented time relative to the whole-model baseline
+        header.push_str(&format!("{:>10}", "vs-whole"));
+        println!("{header}");
+        let sweep_kinds = [
+            TopologyKind::Complete,
+            TopologyKind::ErdosRenyi,
+            TopologyKind::BalancedTree,
+            TopologyKind::Chain,
+        ];
+        for kind in sweep_kinds {
+            let tcfg = ExperimentConfig { topology: kind, ..cfg.clone() };
+            let session = GossipSession::new(&tcfg)?;
+            for spec in &models {
+                let whole = session
+                    .run_mosgu_round_planned(TransferPlan::whole(spec.capacity_mb), cfg.seed, 0.0)
+                    .total_time_s;
+                let mut row = format!("{:<17}{:>6}{:>10.2}", kind.name(), spec.code, whole);
+                let mut best = f64::INFINITY;
+                for &k in &segment_counts {
+                    let plan = TransferPlan::segmented(spec.capacity_mb, k);
+                    let m = session.run_mosgu_round_planned(plan, cfg.seed, 0.0);
+                    best = best.min(m.total_time_s);
+                    row.push_str(&format!("{:>10.2}", m.total_time_s));
+                }
+                row.push_str(&format!("{:>9.2}x", whole / best));
+                println!("{row}");
+            }
+        }
+    }
     Ok(())
 }

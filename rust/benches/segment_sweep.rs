@@ -1,0 +1,131 @@
+//! Whole-model vs segment-granular transfer time through the cut-through
+//! engine: full-dissemination time for one MOSGU round across the Table II
+//! model sizes on ring, star, balanced-tree and chain underlays.
+//!
+//! Whole = the legacy single-flow transfer plane (`segments = 1`).
+//! Segmented = `k` serial segment flows per hop with cut-through relay
+//! forwarding (segment `i` moves downstream while `i+1` is still in
+//! flight upstream — see `coordinator::engine`). Emits one `JSON {...}`
+//! line per cell for the bench trajectory; CI uploads them as the
+//! `segment-sweep` artifact.
+//!
+//! ```bash
+//! cargo bench --bench segment_sweep             # full Table II grid
+//! cargo bench --bench segment_sweep -- --smoke  # CI smoke subset
+//! ```
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::models::{by_code, MODELS};
+use mosgu::dfl::transfer::TransferPlan;
+use mosgu::graph::topology::TopologyKind;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let models: Vec<_> = if smoke {
+        // CI smoke: one small, the two large models the acceptance bar names
+        ["v3s", "b2", "b3"].iter().map(|c| by_code(c).unwrap()).collect()
+    } else {
+        MODELS.iter().collect()
+    };
+    let node_counts: &[usize] = if smoke { &[10] } else { &[10, 16] };
+    let segment_counts: &[usize] = if smoke { &[4] } else { &[2, 4, 8] };
+
+    section(&format!(
+        "segment sweep: whole-model vs cut-through segmented dissemination ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:<16} {:>4} {:>6} {:>4} {:>12} {:>12} {:>9} {:>9}",
+        "topology", "n", "model", "k", "whole_s", "segment_s", "speedup", "relays"
+    );
+    for kind in [
+        TopologyKind::Ring,
+        TopologyKind::Star,
+        TopologyKind::BalancedTree,
+        TopologyKind::Chain,
+    ] {
+        for &n in node_counts {
+            let cfg = ExperimentConfig {
+                topology: kind,
+                nodes: n,
+                latency_jitter: 0.0,
+                ..Default::default()
+            };
+            let session = GossipSession::new(&cfg).expect("session");
+            for spec in &models {
+                let whole = session
+                    .run_mosgu_round_planned(TransferPlan::whole(spec.capacity_mb), 1, 0.0);
+                for &k in segment_counts {
+                    let seg = session.run_mosgu_round_planned(
+                        TransferPlan::segmented(spec.capacity_mb, k),
+                        1,
+                        0.0,
+                    );
+                    let speedup = whole.total_time_s / seg.total_time_s;
+                    println!(
+                        "{:<16} {:>4} {:>6} {:>4} {:>12.3} {:>12.3} {:>8.3}x {:>9}",
+                        kind.name(),
+                        n,
+                        spec.code,
+                        k,
+                        whole.total_time_s,
+                        seg.total_time_s,
+                        speedup,
+                        seg.relay_copies
+                    );
+                    println!(
+                        "JSON {{\"bench\":\"segment_sweep\",\"topology\":\"{}\",\"n\":{},\
+                         \"model\":\"{}\",\"model_mb\":{},\"segments\":{},\
+                         \"whole_s\":{:.6},\"segmented_s\":{:.6},\"speedup\":{:.4},\
+                         \"relay_copies\":{},\"whole_bw_mbps\":{:.4},\"seg_bw_mbps\":{:.4},\
+                         \"seg_unit_bw_mbps\":{:.4}}}",
+                        kind.name(),
+                        n,
+                        spec.code,
+                        spec.capacity_mb,
+                        k,
+                        whole.total_time_s,
+                        seg.total_time_s,
+                        speedup,
+                        seg.relay_copies,
+                        whole.bandwidth_mbps(),
+                        seg.bandwidth_mbps(),
+                        seg.per_segment_bandwidth_mbps(),
+                    );
+                }
+            }
+        }
+    }
+
+    section("acceptance check: b2/b3 on chain + balanced-tree, k=4, n=10");
+    let mut ok = true;
+    for kind in [TopologyKind::Chain, TopologyKind::BalancedTree] {
+        let cfg = ExperimentConfig {
+            topology: kind,
+            nodes: 10,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let session = GossipSession::new(&cfg).expect("session");
+        for code in ["b2", "b3"] {
+            let mb = by_code(code).unwrap().capacity_mb;
+            let whole = session.run_mosgu_round_planned(TransferPlan::whole(mb), 1, 0.0);
+            let seg = session.run_mosgu_round_planned(TransferPlan::segmented(mb, 4), 1, 0.0);
+            let pass = seg.total_time_s < whole.total_time_s;
+            ok &= pass;
+            println!(
+                "  {:<14} {code}: whole {:>9.3} s vs segmented {:>9.3} s -> {}",
+                kind.name(),
+                whole.total_time_s,
+                seg.total_time_s,
+                if pass { "faster (pass)" } else { "SLOWER (fail)" }
+            );
+        }
+    }
+    println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+    if !ok {
+        std::process::exit(1);
+    }
+}

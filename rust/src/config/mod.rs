@@ -7,6 +7,7 @@ pub mod parser;
 pub use parser::{ParseError, TomlValue, parse_toml};
 
 use crate::coloring::ColoringAlgorithm;
+use crate::dfl::transfer::TransferPlan;
 use crate::graph::topology::{TopologyKind, TopologyParams};
 use crate::mst::MstAlgorithm;
 
@@ -43,6 +44,14 @@ pub struct ExperimentConfig {
     pub repeats: usize,
     /// Per-transfer protocol overhead fraction (FTP/TCP headers, acks).
     pub protocol_overhead: f64,
+    /// Segments each model copy is sliced into (1 = whole-model
+    /// transfers, the legacy engine; ≥ 2 enables cut-through
+    /// forwarding). CLI: `--segments`.
+    pub segments: usize,
+    /// Target segment size in MB (0 = disabled); when set, the segment
+    /// count is derived per model as `ceil(model_mb / segment_mb)`.
+    /// Mutually exclusive with `segments > 1`. CLI: `--segment-mb`.
+    pub segment_mb: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -67,6 +76,8 @@ impl Default for ExperimentConfig {
             ping_size_bytes: 56,
             repeats: 5,
             protocol_overhead: 0.04,
+            segments: 1,
+            segment_mb: 0.0,
         }
     }
 }
@@ -141,6 +152,8 @@ impl ExperimentConfig {
             "protocol_overhead" => {
                 self.protocol_overhead = value.as_float().ok_or_else(|| bad("float"))?
             }
+            "segments" => self.segments = value.as_int().ok_or_else(|| bad("integer"))? as usize,
+            "segment_mb" => self.segment_mb = value.as_float().ok_or_else(|| bad("float"))?,
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -150,6 +163,10 @@ impl ExperimentConfig {
         let reject = |key: &str, why: &str| Err(ConfigError::Value(key.into(), why.into()));
         if self.nodes < 2 {
             return reject("nodes", "need >= 2");
+        }
+        // node ids live in a 16-bit flow-tag field (broadcast::flow_tag_segment)
+        if self.nodes > u16::MAX as usize {
+            return reject("nodes", "need <= 65535");
         }
         if self.subnets == 0 || self.subnets > self.nodes {
             return reject("subnets", "need 1 <= subnets <= nodes");
@@ -169,7 +186,34 @@ impl ExperimentConfig {
         if self.repeats == 0 {
             return reject("repeats", "must be positive");
         }
+        if self.segments == 0 || self.segments > u16::MAX as usize {
+            return reject("segments", "need 1 <= segments <= 65535");
+        }
+        if self.segment_mb < 0.0 {
+            return reject("segment_mb", "must be >= 0 (0 disables)");
+        }
+        // floor keeps the derived per-model segment count inside the u16
+        // wire field for checkpoints up to ~655 MB; beyond that the plan
+        // saturates at u16::MAX segments (TransferPlan::by_segment_mb)
+        if self.segment_mb > 0.0 && self.segment_mb < 0.01 {
+            return reject("segment_mb", "must be >= 0.01 MB (or 0 to disable)");
+        }
+        if self.segments > 1 && self.segment_mb > 0.0 {
+            return reject("segment_mb", "set either segments or segment_mb, not both");
+        }
         Ok(())
+    }
+
+    /// The transfer plan this config prescribes for a `model_mb`-sized
+    /// checkpoint: `segment_mb` (per-model segment count) wins when set,
+    /// then the fixed `segments` count; the default is the whole-model
+    /// legacy plan.
+    pub fn transfer_plan(&self, model_mb: f64) -> TransferPlan {
+        if self.segment_mb > 0.0 {
+            TransferPlan::by_segment_mb(model_mb, self.segment_mb)
+        } else {
+            TransferPlan::segmented(model_mb, self.segments)
+        }
     }
 }
 
@@ -249,6 +293,7 @@ backbone_latency_ms = 8.5
     #[test]
     fn semantic_validation_fires() {
         assert!(ExperimentConfig::from_toml_str("nodes = 1").is_err());
+        assert!(ExperimentConfig::from_toml_str("nodes = 70000").is_err(), "16-bit tag field");
         assert!(ExperimentConfig::from_toml_str("subnets = 99").is_err());
         assert!(ExperimentConfig::from_toml_str("latency_jitter = 1.5").is_err());
     }
@@ -257,5 +302,31 @@ backbone_latency_ms = 8.5
     fn int_accepted_for_float_keys() {
         let cfg = ExperimentConfig::from_toml_str("local_link_mbps = 100").unwrap();
         assert_eq!(cfg.local_link_mbps, 100.0);
+    }
+
+    #[test]
+    fn segment_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str("segments = 4").unwrap();
+        assert_eq!(cfg.segments, 4);
+        assert_eq!(cfg.transfer_plan(48.0).segments(), 4);
+
+        let cfg = ExperimentConfig::from_toml_str("segment_mb = 8.0").unwrap();
+        assert_eq!(cfg.transfer_plan(48.0).segments(), 6);
+        assert_eq!(cfg.transfer_plan(5.0).segments(), 1);
+
+        assert!(ExperimentConfig::from_toml_str("segments = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("segment_mb = -1.0").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("segment_mb = 0.0001").is_err(),
+            "tiny segment_mb must fail validation, not panic in TransferPlan"
+        );
+        assert!(ExperimentConfig::from_toml_str("segments = 4\nsegment_mb = 8.0").is_err());
+    }
+
+    #[test]
+    fn default_transfer_plan_is_whole_model() {
+        let plan = ExperimentConfig::default().transfer_plan(21.6);
+        assert_eq!(plan.segments(), 1);
+        assert_eq!(plan.model_mb().to_bits(), 21.6f64.to_bits());
     }
 }

@@ -24,15 +24,32 @@ pub enum BroadcastMode {
     Flood,
 }
 
-/// Tag layout for flow records: owner in the low 32 bits, sender above —
-/// lets metrics recover which model a flow carried. Shared by every
-/// driver (broadcast, the engine's sim/logical/live drivers).
+/// Tag layout for flow records: model owner in bits 0..16, segment index
+/// in bits 16..32, sender in bits 32..64 — lets metrics recover which
+/// model (and which slice of it) a flow carried. Shared by every driver
+/// (broadcast, the engine's sim/logical/live drivers).
+///
+/// Whole-model transfers carry segment index 0, so their tags are
+/// bit-identical to the pre-segmentation layout (owner in the low word,
+/// sender above) for every node count the testbed supports (< 2^16).
+pub fn flow_tag_segment(owner: NodeId, sender: NodeId, segment: u16) -> u64 {
+    debug_assert!(owner < 1 << 16, "node id {owner} exceeds the 16-bit tag field");
+    ((sender as u64) << 32) | ((segment as u64) << 16) | owner as u64
+}
+
+/// Whole-model (segment 0) tag — the legacy layout.
 pub fn flow_tag(owner: NodeId, sender: NodeId) -> u64 {
-    ((sender as u64) << 32) | owner as u64
+    flow_tag_segment(owner, sender, 0)
 }
 
 pub fn tag_owner(tag: u64) -> NodeId {
-    (tag & 0xffff_ffff) as NodeId
+    (tag & 0xffff) as NodeId
+}
+
+/// Segment index of the transfer unit this flow carried (0 for
+/// whole-model transfers).
+pub fn tag_segment(tag: u64) -> u16 {
+    ((tag >> 16) & 0xffff) as u16
 }
 
 pub fn tag_sender(tag: u64) -> NodeId {
@@ -112,6 +129,8 @@ pub fn run_broadcast_round(
         exchange_time_s: total,
         slots: 0,
         slot_timings: Vec::new(),
+        segments: 1,
+        relay_copies: 0,
     }
 }
 
@@ -190,5 +209,16 @@ mod tests {
         let b = paper_baseline(&tb(), 14.0, 9);
         assert_eq!(a.transfer_count(), b.transfer_count());
         assert!((a.total_time_s - b.total_time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn segment_tags_roundtrip_and_anchor_legacy_layout() {
+        let t = flow_tag_segment(7, 3, 5);
+        assert_eq!(tag_owner(t), 7);
+        assert_eq!(tag_sender(t), 3);
+        assert_eq!(tag_segment(t), 5);
+        // segment 0 reproduces the pre-segmentation tag bits exactly
+        assert_eq!(flow_tag(9, 4), ((4u64) << 32) | 9);
+        assert_eq!(tag_segment(flow_tag(9, 4)), 0);
     }
 }

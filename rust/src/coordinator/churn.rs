@@ -15,6 +15,7 @@ use super::engine::{RoundEngine, RoundOptions};
 use super::gossip::GossipState;
 use super::moderator::{Moderator, ScheduleBundle};
 use crate::config::ExperimentConfig;
+use crate::dfl::transfer::TransferPlan;
 use crate::graph::{Graph, NodeId};
 use crate::metrics::RoundMetrics;
 use crate::netsim::testbed::Testbed;
@@ -54,6 +55,9 @@ pub fn run_churn_experiment(
     let testbed = Testbed::new(cfg);
     let full_overlay = crate::graph::topology::complete(cfg.nodes);
     let full_costs = testbed.overlay_costs(&full_overlay);
+    // same transfer plane as every other execution path: the config's
+    // segments / segment_mb settings slice churn rounds too
+    let plan = cfg.transfer_plan(model_mb);
 
     let mut active: Vec<bool> = vec![true; cfg.nodes];
     let mut moderator = Moderator::new(0, cfg.nodes, cfg.mst, cfg.coloring);
@@ -91,7 +95,7 @@ pub fn run_churn_experiment(
                     sub_costs.neighbors(u).iter().map(|&(v, w)| (v, w)).collect();
                 moderator.submit_report(u, &peers);
             }
-            let b = moderator.compute_schedule(model_mb, cfg.ping_size_bytes, 1)?.clone();
+            let b = moderator.compute_schedule(plan.segment_mb(), cfg.ping_size_bytes, 1)?.clone();
             bundle = Some((b, map));
         }
         let recomputed = changed;
@@ -99,7 +103,8 @@ pub fn run_churn_experiment(
         let (b, map) = bundle.as_ref().unwrap();
 
         // run a timed round over the (relabeled) tree; routes use original ids
-        let metrics = run_round_on_tree(&testbed, &b.tree, &b.schedule, map, model_mb, cfg.seed ^ round)?;
+        let metrics =
+            run_round_on_tree(&testbed, &b.tree, &b.schedule, map, plan, cfg.seed ^ round)?;
         reports.push(ChurnRoundReport { round, active: map.clone(), recomputed, metrics });
     }
     Ok(reports)
@@ -117,14 +122,14 @@ fn run_round_on_tree(
     tree: &Graph,
     schedule: &super::schedule::Schedule,
     map: &[NodeId],
-    model_mb: f64,
+    plan: TransferPlan,
     seed: u64,
 ) -> Result<RoundMetrics> {
     let mut driver = SimDriver::with_map(testbed, seed, map.to_vec());
     let mut engine = RoundEngine::new(&mut driver, schedule);
     let mut state = GossipState::new(tree.clone(), 0);
     let n = tree.node_count();
-    let opts = RoundOptions::reliable(model_mb, 8 * n + 64);
+    let opts = RoundOptions::reliable_plan(plan, 8 * n + 64);
     Ok(engine.run_round(&mut state, opts, |_, _| {}))
 }
 
@@ -202,5 +207,19 @@ mod tests {
             crate::coordinator::session::GossipSession::new(&cfg()).unwrap();
         let b = session.run_broadcast_round(14.0, 1);
         assert!(reports[1].metrics.bandwidth_mbps() > 2.0 * b.bandwidth_mbps());
+    }
+
+    #[test]
+    fn churn_rounds_honor_the_config_transfer_plan() {
+        // a segmented config slices churn rounds like every other path
+        let cfg = ExperimentConfig { segments: 4, ..cfg() };
+        let events = [ChurnEvent::Leave { round: 1, node: 6 }];
+        let reports = run_churn_experiment(&cfg, 21.6, 2, &events).unwrap();
+        for (round, copies) in [(0usize, 90usize), (1, 72)] {
+            let m = &reports[round].metrics;
+            assert_eq!(m.segments, 4, "round {round}");
+            assert_eq!(m.transfer_count(), copies * 4, "round {round}");
+            assert_eq!(m.model_copy_count(), copies, "round {round}");
+        }
     }
 }

@@ -1,21 +1,30 @@
 //! Byte-movement drivers for the [`RoundEngine`](super::RoundEngine).
 //!
 //! The engine owns protocol state and slot structure; a [`Driver`] owns
-//! the substrate that actually carries model copies and tells the engine,
-//! **per flow**, when each copy has arrived:
+//! the substrate that actually carries transfer units and tells the
+//! engine, **per flow**, when each unit has arrived. Since the
+//! segment-granular refactor the transfer unit is a
+//! [`SegmentKey`] — one slice of a model copy under the active
+//! [`TransferPlan`](crate::dfl::transfer::TransferPlan); whole-model
+//! transfers are the `total == 1` special case and preserve the legacy
+//! behavior bit for bit.
 //!
 //! * [`SimDriver`] — the discrete-event network simulator (`netsim`),
 //!   stepping one completion event at a time via
 //!   [`NetSim::run_next_completion`](crate::netsim::NetSim::run_next_completion).
-//!   Supports relabeled node ids for churn's induced subgraphs.
+//!   Supports relabeled node ids for churn's induced subgraphs. The loss
+//!   model sees segment-sized payloads, so congestion inflation applies
+//!   per transfer unit.
 //! * [`LogicalDriver`] — untimed instant delivery; one clock tick per
-//!   slot. This is the substrate behind the paper's Table I queue trace.
+//!   batch. This is the substrate behind the paper's Table I queue trace.
 //! * [`LiveDriver`] — real byte payloads over a [`Transport`] mesh
 //!   (in-memory channels or shaped loopback TCP), timed on the wall
-//!   clock.
+//!   clock. Segments travel as [`Message::ModelSegment`] frames and are
+//!   reassembled per `(src, dst, model)` in the driver's reassembly
+//!   buffer.
 
-use crate::coordinator::broadcast::flow_tag;
-use crate::coordinator::queue::ModelKey;
+use crate::coordinator::broadcast::flow_tag_segment;
+use crate::coordinator::queue::{ModelKey, SegmentKey};
 use crate::graph::NodeId;
 use crate::netsim::testbed::Testbed;
 use crate::netsim::{FlowRecord, NetSim};
@@ -23,10 +32,10 @@ use crate::transport::{Message, Transport};
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
-/// Opaque handle for one launched model copy.
+/// Opaque handle for one launched transfer unit.
 pub type CopyToken = u64;
 
-/// One copy has fully arrived at its recipient.
+/// One transfer unit has fully arrived at its recipient.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Completion {
     pub token: CopyToken,
@@ -34,17 +43,18 @@ pub struct Completion {
     pub at_s: f64,
 }
 
-/// A substrate that moves model copies and reports per-flow completion
+/// A substrate that moves transfer units and reports per-flow completion
 /// events. All engine modes (simulated, logical, live) implement this.
 pub trait Driver {
-    /// Begin transferring one `model_mb`-sized copy of `key`'s model from
-    /// `from` to `to`. Returns a token identifying the copy.
-    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken;
+    /// Begin transferring one `payload_mb`-sized unit — segment
+    /// `seg.index` of `seg.total` of `seg.model` — from `from` to `to`.
+    /// Returns a token identifying the unit.
+    fn launch(&mut self, from: NodeId, to: NodeId, seg: SegmentKey, payload_mb: f64) -> CopyToken;
 
-    /// Advance the substrate until at least one in-flight copy completes
-    /// and return the newly completed copies. An empty vector means
+    /// Advance the substrate until at least one in-flight unit completes
+    /// and return the newly completed units. An empty vector means
     /// nothing is in flight (or the substrate stalled — the engine treats
-    /// that as fatal while copies are outstanding).
+    /// that as fatal while units are outstanding).
     fn wait_any(&mut self) -> Vec<Completion>;
 
     /// Current driver clock in seconds.
@@ -88,14 +98,14 @@ impl<'a> SimDriver<'a> {
 }
 
 impl Driver for SimDriver<'_> {
-    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken {
+    fn launch(&mut self, from: NodeId, to: NodeId, seg: SegmentKey, payload_mb: f64) -> CopyToken {
         let (src, dst) = (self.map[from], self.map[to]);
         self.sim.start_flow(
             src,
             dst,
             self.testbed.route(src, dst),
-            model_mb,
-            flow_tag(self.map[key.owner], src),
+            payload_mb,
+            flow_tag_segment(self.map[seg.model.owner], src, seg.index),
         ) as CopyToken
     }
 
@@ -116,14 +126,15 @@ impl Driver for SimDriver<'_> {
     }
 }
 
-/// Untimed driver: every launched copy completes at the next `wait_any`,
-/// which advances the clock by one unit (≈ one slot). Produces the exact
-/// slot-by-slot semantics of the paper's Table I.
+/// Untimed driver: every launched unit completes at the next `wait_any`,
+/// which advances the clock by one tick. Produces the exact slot-by-slot
+/// semantics of the paper's Table I (whole-model plans tick once per
+/// slot; segmented plans tick once per pipeline wave).
 #[derive(Debug, Default)]
 pub struct LogicalDriver {
     clock: f64,
     next_token: CopyToken,
-    inflight: Vec<(CopyToken, NodeId, NodeId, ModelKey, f64)>,
+    inflight: Vec<(CopyToken, NodeId, NodeId, SegmentKey, f64)>,
     transfers: Vec<FlowRecord>,
 }
 
@@ -134,10 +145,10 @@ impl LogicalDriver {
 }
 
 impl Driver for LogicalDriver {
-    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken {
+    fn launch(&mut self, from: NodeId, to: NodeId, seg: SegmentKey, payload_mb: f64) -> CopyToken {
         let token = self.next_token;
         self.next_token += 1;
-        self.inflight.push((token, from, to, key, model_mb));
+        self.inflight.push((token, from, to, seg, payload_mb));
         token
     }
 
@@ -148,15 +159,15 @@ impl Driver for LogicalDriver {
         self.clock += 1.0;
         let done = std::mem::take(&mut self.inflight);
         done.into_iter()
-            .map(|(token, from, to, key, model_mb)| {
+            .map(|(token, from, to, seg, payload_mb)| {
                 self.transfers.push(FlowRecord {
                     flow: token as usize,
                     src: from,
                     dst: to,
-                    payload_mb: model_mb,
+                    payload_mb,
                     start: self.clock - 1.0,
                     end: self.clock,
-                    tag: flow_tag(key.owner, from),
+                    tag: flow_tag_segment(seg.model.owner, from, seg.index),
                 });
                 Completion { token, at_s: self.clock }
             })
@@ -172,7 +183,16 @@ impl Driver for LogicalDriver {
     }
 }
 
-/// Driver over real transports: model copies are actual byte payloads
+/// Per-model reassembly progress at one live receiver.
+#[derive(Debug)]
+struct Reassembly {
+    total: u16,
+    seen: Vec<bool>,
+    received: u16,
+    bytes: usize,
+}
+
+/// Driver over real transports: transfer units are actual byte payloads
 /// pushed through a [`Transport`] mesh (in-memory channels for tests,
 /// token-bucket-shaped loopback TCP for the live cluster), timed on the
 /// wall clock.
@@ -180,16 +200,26 @@ impl Driver for LogicalDriver {
 /// The driver owns every endpoint of the mesh, so the engine remains the
 /// single protocol authority — the in-process counterpart of the paper's
 /// moderator-scheduled deployment. Endpoint `i` must carry node id `i`.
+///
+/// Segmented plans frame each unit as [`Message::ModelSegment`]; the
+/// driver keeps a per-`(dst, src, model)` reassembly buffer so "node
+/// holds model" can be asserted at the byte level
+/// ([`LiveDriver::reassembled_models`]).
 pub struct LiveDriver<T: Transport> {
     endpoints: Vec<T>,
     epoch: Instant,
     next_token: CopyToken,
-    /// (sender, recipient, model) → tokens awaiting that arrival, FIFO so
-    /// retransmissions of the same copy resolve in launch order.
-    inflight: HashMap<(NodeId, NodeId, ModelKey), VecDeque<CopyToken>>,
+    /// (sender, recipient, segment) → tokens awaiting that arrival, FIFO
+    /// so retransmissions of the same unit resolve in launch order.
+    inflight: HashMap<(NodeId, NodeId, SegmentKey), VecDeque<CopyToken>>,
     inflight_count: usize,
-    launched: HashMap<CopyToken, (NodeId, NodeId, ModelKey, f64, f64)>,
+    launched: HashMap<CopyToken, (NodeId, NodeId, SegmentKey, f64, f64)>,
     transfers: Vec<FlowRecord>,
+    /// (dst, src, model) → segments collected so far.
+    reassembly: HashMap<(NodeId, NodeId, ModelKey), Reassembly>,
+    reassembled: usize,
+    /// Payload bytes of fully reassembled models (byte-level goodput).
+    reassembled_bytes: usize,
     poll: Duration,
     stall_timeout: Duration,
 }
@@ -208,6 +238,9 @@ impl<T: Transport> LiveDriver<T> {
             inflight_count: 0,
             launched: HashMap::new(),
             transfers: Vec::new(),
+            reassembly: HashMap::new(),
+            reassembled: 0,
+            reassembled_bytes: 0,
             poll: Duration::from_millis(2),
             stall_timeout: Duration::from_secs(30),
         }
@@ -218,27 +251,76 @@ impl<T: Transport> LiveDriver<T> {
     pub fn set_stall_timeout(&mut self, timeout: Duration) {
         self.stall_timeout = timeout;
     }
+
+    /// Model copies whose segments have all arrived and been reassembled
+    /// at their recipients (byte-level completeness; whole-model frames
+    /// count as single-segment reassemblies).
+    pub fn reassembled_models(&self) -> usize {
+        self.reassembled
+    }
+
+    /// Copies with at least one segment received but not yet complete.
+    pub fn pending_reassemblies(&self) -> usize {
+        self.reassembly.len()
+    }
+
+    /// Payload bytes of fully reassembled model copies — the byte-level
+    /// goodput counterpart of [`LiveDriver::reassembled_models`].
+    pub fn reassembled_bytes(&self) -> usize {
+        self.reassembled_bytes
+    }
+
+    /// Record one arrived segment in the reassembly buffer; counts the
+    /// model (and its payload bytes) once its full segment set is present.
+    fn reassemble(&mut self, dst: NodeId, src: NodeId, seg: SegmentKey, bytes: usize) {
+        if seg.total == 1 {
+            self.reassembled += 1;
+            self.reassembled_bytes += bytes;
+            return;
+        }
+        let entry = self.reassembly.entry((dst, src, seg.model)).or_insert_with(|| Reassembly {
+            total: seg.total,
+            seen: vec![false; seg.total as usize],
+            received: 0,
+            bytes: 0,
+        });
+        assert_eq!(entry.total, seg.total, "segment total changed mid-reassembly");
+        if !entry.seen[seg.index as usize] {
+            entry.seen[seg.index as usize] = true;
+            entry.received += 1;
+            entry.bytes += bytes;
+        }
+        if entry.received == entry.total {
+            let done = self.reassembly.remove(&(dst, src, seg.model)).expect("entry exists");
+            self.reassembled += 1;
+            self.reassembled_bytes += done.bytes;
+        }
+    }
 }
 
 impl<T: Transport> Driver for LiveDriver<T> {
-    fn launch(&mut self, from: NodeId, to: NodeId, key: ModelKey, model_mb: f64) -> CopyToken {
-        let bytes = ((model_mb * 1024.0 * 1024.0).ceil() as usize).max(1);
+    fn launch(&mut self, from: NodeId, to: NodeId, seg: SegmentKey, payload_mb: f64) -> CopyToken {
+        let bytes = ((payload_mb * 1024.0 * 1024.0).ceil() as usize).max(1);
         let token = self.next_token;
         self.next_token += 1;
         let start = self.epoch.elapsed().as_secs_f64();
-        self.endpoints[from]
-            .send(
-                to,
-                Message::Model {
-                    owner: key.owner as u32,
-                    round: key.round as u32,
-                    payload: vec![key.owner as u8; bytes],
-                },
-            )
-            .expect("live transport send failed");
-        self.inflight.entry((from, to, key)).or_default().push_back(token);
+        let owner = seg.model.owner as u32;
+        let round = seg.model.round as u32;
+        let msg = if seg.total == 1 {
+            Message::Model { owner, round, payload: vec![owner as u8; bytes] }
+        } else {
+            Message::ModelSegment {
+                owner,
+                round,
+                index: seg.index,
+                total: seg.total,
+                payload: vec![owner as u8; bytes],
+            }
+        };
+        self.endpoints[from].send(to, msg).expect("live transport send failed");
+        self.inflight.entry((from, to, seg)).or_default().push_back(token);
         self.inflight_count += 1;
-        self.launched.insert(token, (from, to, key, model_mb, start));
+        self.launched.insert(token, (from, to, seg, payload_mb, start));
         token
     }
 
@@ -250,28 +332,42 @@ impl<T: Transport> Driver for LiveDriver<T> {
         let mut out = Vec::new();
         while out.is_empty() {
             if Instant::now() > deadline {
-                return out; // stalled: engine asserts with copies in flight
+                return out; // stalled: engine asserts with units in flight
             }
-            for (d, endpoint) in self.endpoints.iter_mut().enumerate() {
+            for d in 0..self.endpoints.len() {
                 loop {
-                    let msg = endpoint.try_recv().expect("live transport recv failed");
+                    let msg = self.endpoints[d].try_recv().expect("live transport recv failed");
                     let Some((src, msg)) = msg else { break };
-                    let Message::Model { owner, round, .. } = msg else { continue };
-                    let key = ModelKey::new(owner as usize, round as u64);
-                    let Some(queue) = self.inflight.get_mut(&(src, d, key)) else { continue };
+                    let (seg, bytes) = match msg {
+                        Message::Model { owner, round, payload } => (
+                            SegmentKey::whole(ModelKey::new(owner as usize, round as u64)),
+                            payload.len(),
+                        ),
+                        Message::ModelSegment { owner, round, index, total, payload } => (
+                            SegmentKey::new(
+                                ModelKey::new(owner as usize, round as u64),
+                                index,
+                                total,
+                            ),
+                            payload.len(),
+                        ),
+                        _ => continue,
+                    };
+                    self.reassemble(d, src, seg, bytes);
+                    let Some(queue) = self.inflight.get_mut(&(src, d, seg)) else { continue };
                     let Some(token) = queue.pop_front() else { continue };
                     self.inflight_count -= 1;
                     let at = self.epoch.elapsed().as_secs_f64();
-                    let (from, to, key, model_mb, start) =
+                    let (from, to, seg, payload_mb, start) =
                         self.launched.remove(&token).expect("completion for unknown token");
                     self.transfers.push(FlowRecord {
                         flow: token as usize,
                         src: from,
                         dst: to,
-                        payload_mb: model_mb,
+                        payload_mb,
                         start,
                         end: at,
-                        tag: flow_tag(key.owner, from),
+                        tag: flow_tag_segment(seg.model.owner, from, seg.index),
                     });
                     out.push(Completion { token, at_s: at });
                 }
@@ -302,12 +398,16 @@ mod tests {
         Testbed::new(&ExperimentConfig { latency_jitter: 0.0, ..Default::default() })
     }
 
+    fn whole(owner: NodeId) -> SegmentKey {
+        SegmentKey::whole(ModelKey::new(owner, 0))
+    }
+
     #[test]
     fn sim_driver_reports_per_flow_completions() {
         let tb = testbed();
         let mut d = SimDriver::new(&tb, 1);
-        let t0 = d.launch(0, 1, ModelKey::new(0, 0), 2.0);
-        let t1 = d.launch(2, 5, ModelKey::new(2, 0), 14.0);
+        let t0 = d.launch(0, 1, whole(0), 2.0);
+        let t1 = d.launch(2, 5, whole(2), 14.0);
         let first = d.wait_any();
         assert_eq!(first.len(), 1, "unequal sizes must complete separately");
         assert_eq!(first[0].token, t0);
@@ -324,7 +424,7 @@ mod tests {
         // protocol node 0 -> device 7, protocol node 1 -> device 2
         let map = vec![7, 2, 0, 1, 3, 4, 5, 6, 8, 9];
         let mut d = SimDriver::with_map(&tb, 1, map);
-        d.launch(0, 1, ModelKey::new(0, 0), 1.0);
+        d.launch(0, 1, whole(0), 1.0);
         d.wait_any();
         let rec = &d.take_transfers()[0];
         assert_eq!((rec.src, rec.dst), (7, 2));
@@ -332,15 +432,28 @@ mod tests {
     }
 
     #[test]
+    fn sim_driver_tags_carry_segment_index() {
+        let tb = testbed();
+        let mut d = SimDriver::new(&tb, 1);
+        let key = ModelKey::new(3, 0);
+        d.launch(3, 4, SegmentKey::new(key, 2, 4), 3.5);
+        d.wait_any();
+        let rec = &d.take_transfers()[0];
+        assert_eq!(crate::coordinator::broadcast::tag_owner(rec.tag), 3);
+        assert_eq!(crate::coordinator::broadcast::tag_segment(rec.tag), 2);
+        assert!((rec.payload_mb - 3.5).abs() < 1e-12, "loss model sees segment payloads");
+    }
+
+    #[test]
     fn logical_driver_ticks_one_unit_per_batch() {
         let mut d = LogicalDriver::new();
         assert!(d.wait_any().is_empty());
-        d.launch(0, 1, ModelKey::new(0, 0), 1.0);
-        d.launch(1, 0, ModelKey::new(1, 0), 1.0);
+        d.launch(0, 1, whole(0), 1.0);
+        d.launch(1, 0, whole(1), 1.0);
         let done = d.wait_any();
         assert_eq!(done.len(), 2);
         assert_eq!(d.now(), 1.0);
-        d.launch(0, 1, ModelKey::new(1, 0), 1.0);
+        d.launch(0, 1, whole(1), 1.0);
         d.wait_any();
         assert_eq!(d.now(), 2.0);
         assert_eq!(d.take_transfers().len(), 3);
@@ -349,8 +462,7 @@ mod tests {
     #[test]
     fn live_driver_moves_bytes_over_memory_mesh() {
         let mut d = LiveDriver::new(memory::mesh(4));
-        let key = ModelKey::new(2, 0);
-        let token = d.launch(2, 3, key, 0.0001);
+        let token = d.launch(2, 3, whole(2), 0.0001);
         let done = d.wait_any();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].token, token);
@@ -358,5 +470,32 @@ mod tests {
         assert_eq!((recs[0].src, recs[0].dst), (2, 3));
         assert!(recs[0].end >= recs[0].start);
         assert!(d.wait_any().is_empty());
+        assert_eq!(d.reassembled_models(), 1);
+    }
+
+    #[test]
+    fn live_driver_reassembles_segmented_copies() {
+        let mut d = LiveDriver::new(memory::mesh(3));
+        let key = ModelKey::new(0, 1);
+        // three segments of one copy, launched serially as the engine does
+        for i in 0..3u16 {
+            d.launch(0, 1, SegmentKey::new(key, i, 3), 0.0001);
+            let done = d.wait_any();
+            assert_eq!(done.len(), 1);
+            if i < 2 {
+                assert_eq!(d.reassembled_models(), 0, "incomplete after segment {i}");
+                assert_eq!(d.pending_reassemblies(), 1);
+            }
+        }
+        assert_eq!(d.reassembled_models(), 1);
+        assert_eq!(d.pending_reassemblies(), 0);
+        // 3 segments × ceil(0.0001 MB) = 3 × 105 payload bytes reassembled
+        let seg_bytes = ((0.0001f64 * 1024.0 * 1024.0).ceil() as usize).max(1);
+        assert_eq!(d.reassembled_bytes(), 3 * seg_bytes);
+        let recs = d.take_transfers();
+        assert_eq!(recs.len(), 3);
+        for (i, rec) in recs.iter().enumerate() {
+            assert_eq!(crate::coordinator::broadcast::tag_segment(rec.tag), i as u16);
+        }
     }
 }

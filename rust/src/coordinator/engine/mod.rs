@@ -12,6 +12,30 @@
 //! * churn's relabeled subgraph rounds (`SimDriver::with_map`),
 //! * real sockets (`LiveDriver` over `transport`).
 //!
+//! ## Segment-granular transfers and cut-through forwarding
+//!
+//! The transfer unit is set by a [`TransferPlan`]: with `segments = 1`
+//! each queue entry moves as one whole-model flow — bit-identical to the
+//! pre-segmentation engine, the compatibility anchor every equivalence
+//! test pins. With `segments = k ≥ 2` the engine launches a copy's `k`
+//! segments **serially** on each hop and adds *cut-through forwarding*
+//! (after Hu et al., arXiv:1908.07782): a relay re-launches segment `i`
+//! toward its downstream tree neighbors the moment `i` arrives, while
+//! segment `i+1` is still in flight upstream. A deep relay chain thus
+//! pipelines — per extra hop the model costs one segment time, not one
+//! model time. "Node holds model" means *all* segments present
+//! (reassembly tracking); relays deliver via
+//! [`GossipState::deliver_reassembled`] and queue nothing, because their
+//! forwarding obligation was discharged inline. A §III-D network
+//! disruption (drawn per copy at its first segment's arrival) spends the
+//! copy's bytes, delivers nothing, and re-queues the entry — at the
+//! planned sender for first-hop copies, at the relay
+//! ([`GossipState::enqueue_forward`]) for disrupted inline forwards.
+//! Cut-through deliberately relaxes the coloring's
+//! no-adjacent-transmitter guarantee *within* a slot (relays answer out
+//! of turn); the slot structure still sequences whose queue entries open
+//! each wave, and `segments = 1` restores the strict schedule.
+//!
 //! On top of single rounds, [`RoundEngine::run_pipelined`] implements the
 //! paper's §III-D observation that *"forwarded copies pipeline with the
 //! next round"*: rounds share one long-lived driver, and each node seeds
@@ -26,17 +50,21 @@ pub mod driver;
 use self::driver::{CopyToken, Driver};
 use super::broadcast;
 use super::gossip::{GossipState, PlannedTx, Send};
+use super::queue::{ModelKey, SegmentKey};
 use super::schedule::Schedule;
+use crate::dfl::transfer::TransferPlan;
 use crate::graph::{Graph, NodeId};
 use crate::metrics::{RoundMetrics, SlotTiming};
 use crate::netsim::FlowRecord;
 use crate::util::rng::Pcg64;
+use std::collections::HashMap;
 
 /// Knobs of one engine-driven communication round.
 #[derive(Debug, Clone)]
 pub struct RoundOptions {
-    /// Size of one model copy in MB.
-    pub model_mb: f64,
+    /// How each model copy is sliced into wire-level transfer units
+    /// (`TransferPlan::whole` = the legacy single-flow behavior).
+    pub plan: TransferPlan,
     /// Per-delivery network-disruption probability (§III-D): the copy's
     /// bytes are spent but nothing arrives, and the popped entry is
     /// re-queued for the sender's next turn.
@@ -44,14 +72,20 @@ pub struct RoundOptions {
     /// Hard slot budget (protocol-bug guard).
     pub max_slots: usize,
     /// RNG that draws the failure coin per delivery, in deterministic
-    /// (sender, recipient) order.
+    /// (sender, recipient) order for whole-model plans and in completion
+    /// order for segmented plans.
     pub failure_rng: Pcg64,
 }
 
 impl RoundOptions {
-    /// A failure-free round — the common case.
+    /// A failure-free whole-model round — the common case.
     pub fn reliable(model_mb: f64, max_slots: usize) -> Self {
-        RoundOptions { model_mb, failure_prob: 0.0, max_slots, failure_rng: Pcg64::new(0) }
+        Self::reliable_plan(TransferPlan::whole(model_mb), max_slots)
+    }
+
+    /// A failure-free round under an explicit transfer plan.
+    pub fn reliable_plan(plan: TransferPlan, max_slots: usize) -> Self {
+        RoundOptions { plan, failure_prob: 0.0, max_slots, failure_rng: Pcg64::new(0) }
     }
 }
 
@@ -62,13 +96,16 @@ pub struct SlotOutcome {
     pub slot: usize,
     /// Transmitting color class.
     pub color: usize,
-    /// Successful deliveries, in deterministic (sender, recipient) order.
+    /// Successful deliveries — in deterministic (sender, recipient) order
+    /// for whole-model plans; in completion order (cut-through cascades
+    /// included) for segmented plans.
     pub sends: Vec<Send>,
-    /// Driver clock when the slot's copies were launched.
+    /// Driver clock when the slot's transfers were launched.
     pub start_s: f64,
-    /// Driver clock when the last copy finished draining.
+    /// Driver clock when the slot's last transfer finished draining.
     pub end_s: f64,
-    /// Copies launched (0 = idle color; failed copies are counted).
+    /// Transfer-unit flows launched (0 = idle color; failed copies are
+    /// counted; one flow per segment under segmented plans).
     pub launched: usize,
 }
 
@@ -77,7 +114,8 @@ pub struct SlotOutcome {
 pub struct PipelineOptions {
     /// Communication rounds to push through the shared driver.
     pub rounds: u64,
-    pub model_mb: f64,
+    /// How each model copy is sliced into wire-level transfer units.
+    pub plan: TransferPlan,
     /// Hard slot budget across *all* rounds.
     pub max_slots: usize,
     pub failure_prob: f64,
@@ -85,11 +123,16 @@ pub struct PipelineOptions {
 }
 
 impl PipelineOptions {
-    /// Failure-free pipeline with a generous slot budget.
+    /// Failure-free whole-model pipeline with a generous slot budget.
     pub fn reliable(rounds: u64, model_mb: f64, nodes: usize) -> Self {
+        Self::reliable_plan(rounds, TransferPlan::whole(model_mb), nodes)
+    }
+
+    /// Failure-free pipeline under an explicit transfer plan.
+    pub fn reliable_plan(rounds: u64, plan: TransferPlan, nodes: usize) -> Self {
         PipelineOptions {
             rounds,
-            model_mb,
+            plan,
             max_slots: (rounds as usize + 1) * (8 * nodes + 64),
             failure_prob: 0.0,
             failure_rng: Pcg64::new(0),
@@ -134,7 +177,8 @@ impl RoundPhase {
 /// Result of a pipelined multi-round run.
 #[derive(Debug, Clone)]
 pub struct PipelineMetrics {
-    /// Every completed transfer across all rounds, in completion order.
+    /// Every completed transfer across all rounds, in completion order
+    /// (one record per segment under segmented plans).
     pub transfers: Vec<FlowRecord>,
     /// Driver clock when the last round fully disseminated.
     pub total_time_s: f64,
@@ -147,6 +191,11 @@ pub struct PipelineMetrics {
     /// (excluding the node's own model) — the aggregation order the DFL
     /// layer folds with.
     pub received: Vec<Vec<Vec<NodeId>>>,
+    /// Segments per model copy under the run's transfer plan.
+    pub segments: usize,
+    /// Copies launched out-of-turn by cut-through relays (0 for
+    /// whole-model plans).
+    pub relay_copies: usize,
 }
 
 impl PipelineMetrics {
@@ -168,6 +217,75 @@ struct ActiveRound {
     phase: RoundPhase,
 }
 
+/// State consultation/update requests the cut-through slot executor
+/// raises while copies complete mid-slot. `round_idx` addresses the
+/// caller's in-flight round (always 0 for single-round execution).
+enum StateOp {
+    /// Does `node` already hold `key`? (→ the returned bool)
+    Holds { round_idx: usize, node: NodeId, key: ModelKey },
+    /// A full copy reassembled fresh at `send.to`; mark it held (no
+    /// forwarding obligation — the cascade forwarded inline). Returns
+    /// whether the model was new to the recipient.
+    Deliver { round_idx: usize, send: Send },
+    /// A relay's inline forward was disrupted; queue a normal-path
+    /// retransmission at `node`. Returned bool is ignored.
+    RelayDisrupted { round_idx: usize, node: NodeId, key: ModelKey, received_from: NodeId },
+}
+
+/// Copy fate, decided once per copy when its first segment arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fate {
+    Undecided,
+    /// New to the recipient: cascade downstream, deliver on reassembly.
+    Fresh,
+    /// Recipient already holds the model (retransmission): bytes are
+    /// spent, nothing delivered, no cascade.
+    Duplicate,
+    /// §III-D network disruption: bytes spent, nothing delivered, entry
+    /// re-queued at the sender.
+    Failed,
+}
+
+/// One model copy traversing one tree edge under a segmented plan.
+struct CopyFlight {
+    from: NodeId,
+    to: NodeId,
+    key: ModelKey,
+    round_idx: usize,
+    /// `Some(i)`: copy of `planned[i]` (queue-driven); `None`: launched
+    /// by a cut-through relay.
+    planned_idx: Option<usize>,
+    /// For relay copies: the neighbor the sender received the model from
+    /// (the retransmission entry's source if this forward is disrupted).
+    /// For planned copies: the sender itself (unused).
+    upstream: NodeId,
+    /// Segments present at the sender (planned copies start complete;
+    /// relay copies fill as upstream segments arrive).
+    available: u16,
+    /// Segments launched so far (the serial send cursor).
+    sent: u16,
+    /// Segments arrived at the recipient.
+    arrived: u16,
+    in_flight: bool,
+    total: u16,
+    fate: Fate,
+    /// Relay copies fed by this copy's arrivals.
+    children: Vec<usize>,
+}
+
+/// What a cut-through slot did.
+struct CutThroughStats {
+    /// Segment flows launched (planned + relay cascades).
+    seg_launches: usize,
+    /// Relay copies launched out of turn.
+    relay_copies: usize,
+    /// Per-planned-entry failure flag (any copy of the entry disrupted
+    /// ⇒ the entry is re-queued at its sender).
+    failed: Vec<bool>,
+    /// Fresh deliveries in completion order.
+    sends: Vec<Send>,
+}
+
 /// The unified protocol driver: plans slots over [`GossipState`], moves
 /// copies through a [`Driver`], and applies deliveries in deterministic
 /// order as completion events arrive.
@@ -181,8 +299,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         RoundEngine { driver, schedule }
     }
 
-    /// Launch every copy of the slot's planned transmissions; returns
-    /// `(planned index, recipient, token)` per copy.
+    /// Launch every copy of the slot's planned transmissions as single
+    /// whole-model flows; returns `(planned index, recipient, token)` per
+    /// copy. The `segments = 1` transfer path.
     fn launch_slot(
         &mut self,
         planned: &[PlannedTx],
@@ -191,7 +310,8 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let mut meta = Vec::new();
         for (i, tx) in planned.iter().enumerate() {
             for &to in &tx.recipients {
-                let token = self.driver.launch(tx.from, to, tx.entry.key, model_mb);
+                let token =
+                    self.driver.launch(tx.from, to, SegmentKey::whole(tx.entry.key), model_mb);
                 meta.push((i, to, token));
             }
         }
@@ -222,6 +342,214 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         order
     }
 
+    /// Launch the next pending segment of copy `ci` if its sender has one
+    /// available and is not already transmitting (serial per-copy sends —
+    /// the stream semantics that make cut-through pipelining real).
+    #[allow(clippy::too_many_arguments)]
+    fn try_launch_segment(
+        &mut self,
+        copies: &mut [CopyFlight],
+        tokens: &mut HashMap<CopyToken, (usize, u16)>,
+        outstanding: &mut usize,
+        seg_launches: &mut usize,
+        seg_mb: f64,
+        ci: usize,
+    ) {
+        let c = &copies[ci];
+        if c.in_flight || c.sent >= c.total || c.sent >= c.available {
+            return;
+        }
+        let seg = SegmentKey::new(c.key, c.sent, c.total);
+        let token = self.driver.launch(c.from, c.to, seg, seg_mb);
+        let c = &mut copies[ci];
+        tokens.insert(token, (ci, c.sent));
+        c.sent += 1;
+        c.in_flight = true;
+        *outstanding += 1;
+        *seg_launches += 1;
+    }
+
+    /// Run one slot of a segmented plan to quiescence: launch the planned
+    /// entries' copies segment by segment, and as each segment arrives at
+    /// a relay, cut-through forward it downstream immediately. Returns
+    /// when every cascade has drained.
+    ///
+    /// `apply` is the caller's protocol-state surface (single state or
+    /// per-round states); see [`StateOp`].
+    #[allow(clippy::too_many_arguments)]
+    fn run_cut_through_slot(
+        &mut self,
+        tree: &Graph,
+        planned: &[PlannedTx],
+        planned_rounds: &[usize],
+        plan: &TransferPlan,
+        failure_prob: f64,
+        failure_rng: &mut Pcg64,
+        apply: &mut dyn FnMut(StateOp) -> bool,
+    ) -> CutThroughStats {
+        let total = plan.segments() as u16;
+        let seg_mb = plan.segment_mb();
+        let mut copies: Vec<CopyFlight> = Vec::new();
+        let mut tokens: HashMap<CopyToken, (usize, u16)> = HashMap::new();
+        let mut outstanding = 0usize;
+        let mut stats = CutThroughStats {
+            seg_launches: 0,
+            relay_copies: 0,
+            failed: vec![false; planned.len()],
+            sends: Vec::new(),
+        };
+
+        for (i, tx) in planned.iter().enumerate() {
+            for &to in &tx.recipients {
+                copies.push(CopyFlight {
+                    from: tx.from,
+                    to,
+                    key: tx.entry.key,
+                    round_idx: planned_rounds[i],
+                    planned_idx: Some(i),
+                    upstream: tx.from,
+                    available: total,
+                    sent: 0,
+                    arrived: 0,
+                    in_flight: false,
+                    total,
+                    fate: Fate::Undecided,
+                    children: Vec::new(),
+                });
+            }
+        }
+        for ci in 0..copies.len() {
+            self.try_launch_segment(
+                &mut copies,
+                &mut tokens,
+                &mut outstanding,
+                &mut stats.seg_launches,
+                seg_mb,
+                ci,
+            );
+        }
+
+        while outstanding > 0 {
+            let events = self.driver.wait_any();
+            assert!(
+                !events.is_empty(),
+                "driver made no progress with {outstanding} segments in flight"
+            );
+            for ev in events {
+                let (ci, seg_idx) = tokens
+                    .remove(&ev.token)
+                    .expect("completion for a segment this slot never launched");
+                outstanding -= 1;
+                {
+                    let c = &mut copies[ci];
+                    c.in_flight = false;
+                    c.arrived += 1;
+                    debug_assert_eq!(c.arrived, seg_idx + 1, "segments arrive in serial order");
+                }
+
+                if copies[ci].arrived == 1 {
+                    // fate decided once, at the copy's first segment
+                    let (round_idx, from, to, key) = {
+                        let c = &copies[ci];
+                        (c.round_idx, c.from, c.to, c.key)
+                    };
+                    let dup = apply(StateOp::Holds { round_idx, node: to, key });
+                    let fate = if dup {
+                        Fate::Duplicate
+                    } else if failure_prob > 0.0 && failure_rng.gen_bool(failure_prob) {
+                        Fate::Failed
+                    } else {
+                        Fate::Fresh
+                    };
+                    copies[ci].fate = fate;
+                    if fate == Fate::Fresh {
+                        // spawn the downstream relay copies this cascade feeds
+                        for v in tree.neighbor_ids(to) {
+                            if v == from {
+                                continue;
+                            }
+                            let child_idx = copies.len();
+                            copies.push(CopyFlight {
+                                from: to,
+                                to: v,
+                                key,
+                                round_idx,
+                                planned_idx: None,
+                                upstream: from,
+                                available: 0,
+                                sent: 0,
+                                arrived: 0,
+                                in_flight: false,
+                                total,
+                                fate: Fate::Undecided,
+                                children: Vec::new(),
+                            });
+                            copies[ci].children.push(child_idx);
+                            stats.relay_copies += 1;
+                        }
+                    }
+                }
+
+                if copies[ci].fate == Fate::Fresh {
+                    // this segment is now present at the relay: forward it
+                    let children = copies[ci].children.clone();
+                    for ch in children {
+                        copies[ch].available += 1;
+                        self.try_launch_segment(
+                            &mut copies,
+                            &mut tokens,
+                            &mut outstanding,
+                            &mut stats.seg_launches,
+                            seg_mb,
+                            ch,
+                        );
+                    }
+                }
+
+                if copies[ci].arrived == copies[ci].total {
+                    // full copy reassembled at its recipient
+                    let (round_idx, from, to, key, fate, planned_idx, upstream) = {
+                        let c = &copies[ci];
+                        (c.round_idx, c.from, c.to, c.key, c.fate, c.planned_idx, c.upstream)
+                    };
+                    match fate {
+                        Fate::Fresh => {
+                            let send = Send { from, to, key };
+                            if apply(StateOp::Deliver { round_idx, send }) {
+                                stats.sends.push(send);
+                            }
+                        }
+                        Fate::Failed => match planned_idx {
+                            Some(i) => stats.failed[i] = true,
+                            None => {
+                                apply(StateOp::RelayDisrupted {
+                                    round_idx,
+                                    node: from,
+                                    key,
+                                    received_from: upstream,
+                                });
+                            }
+                        },
+                        Fate::Duplicate => {}
+                        Fate::Undecided => unreachable!("fate decided at first arrival"),
+                    }
+                } else {
+                    // sender continues its serial stream (bytes are spent
+                    // even for duplicate/disrupted copies)
+                    self.try_launch_segment(
+                        &mut copies,
+                        &mut tokens,
+                        &mut outstanding,
+                        &mut stats.seg_launches,
+                        seg_mb,
+                        ci,
+                    );
+                }
+            }
+        }
+        stats
+    }
+
     /// Run one communication round to full dissemination.
     ///
     /// `on_slot` observes every slot entered (including idle colors, which
@@ -233,6 +561,12 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         mut opts: RoundOptions,
         mut on_slot: impl FnMut(&SlotOutcome, &GossipState),
     ) -> RoundMetrics {
+        let plan = opts.plan;
+        let segmented = plan.is_segmented();
+        // cut-through relays need the tree while the state is mutably
+        // borrowed by delivery callbacks — snapshot it once per round
+        let tree = if segmented { Some(state.tree().clone()) } else { None };
+        let mut relay_copies_total = 0usize;
         let mut slots_used = 0;
         let mut slot_timings = Vec::new();
         for slot in 0..opts.max_slots {
@@ -253,33 +587,63 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 );
                 continue;
             }
-            let meta = self.launch_slot(&planned, opts.model_mb);
-            self.drain_slot(meta.len());
-            let end_s = self.driver.now();
 
-            let mut failed = vec![false; planned.len()];
-            let mut sends = Vec::with_capacity(meta.len());
-            for j in Self::delivery_order(&planned, &meta) {
-                let (i, to, _) = meta[j];
-                if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
-                    failed[i] = true;
-                    continue;
+            let (sends, end_s, launched) = if !segmented {
+                // whole-model path: the pre-segmentation engine, verbatim
+                let meta = self.launch_slot(&planned, plan.model_mb());
+                self.drain_slot(meta.len());
+                let end_s = self.driver.now();
+
+                let mut failed = vec![false; planned.len()];
+                let mut sends = Vec::with_capacity(meta.len());
+                for j in Self::delivery_order(&planned, &meta) {
+                    let (i, to, _) = meta[j];
+                    if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
+                        failed[i] = true;
+                        continue;
+                    }
+                    let tx = &planned[i];
+                    let send = Send { from: tx.from, to, key: tx.entry.key };
+                    state.deliver(send);
+                    sends.push(send);
                 }
-                let tx = &planned[i];
-                let send = Send { from: tx.from, to, key: tx.entry.key };
-                state.deliver(send);
-                sends.push(send);
-            }
-            for (i, tx) in planned.iter().enumerate() {
-                if failed[i] {
-                    state.requeue(tx);
+                for (i, tx) in planned.iter().enumerate() {
+                    if failed[i] {
+                        state.requeue(tx);
+                    }
                 }
-            }
-            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: meta.len() });
-            on_slot(
-                &SlotOutcome { slot, color, sends, start_s, end_s, launched: meta.len() },
-                state,
-            );
+                (sends, end_s, meta.len())
+            } else {
+                // segmented path: serial segments + cut-through cascades
+                let planned_rounds = vec![0usize; planned.len()];
+                let stats = self.run_cut_through_slot(
+                    tree.as_ref().expect("tree snapshot exists for segmented plans"),
+                    &planned,
+                    &planned_rounds,
+                    &plan,
+                    opts.failure_prob,
+                    &mut opts.failure_rng,
+                    &mut |op| match op {
+                        StateOp::Holds { node, key, .. } => state.queue(node).holds(&key),
+                        StateOp::Deliver { send, .. } => state.deliver_reassembled(send),
+                        StateOp::RelayDisrupted { node, key, received_from, .. } => {
+                            state.enqueue_forward(node, key, received_from);
+                            false
+                        }
+                    },
+                );
+                let end_s = self.driver.now();
+                for (i, tx) in planned.iter().enumerate() {
+                    if stats.failed[i] {
+                        state.requeue(tx);
+                    }
+                }
+                relay_copies_total += stats.relay_copies;
+                (stats.sends, end_s, stats.seg_launches)
+            };
+
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: launched });
+            on_slot(&SlotOutcome { slot, color, sends, start_s, end_s, launched }, state);
         }
         assert!(
             state.is_complete(),
@@ -290,7 +654,15 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let total_time_s = self.driver.now();
         let transfers = self.driver.take_transfers();
         let exchange_time_s = exchange_time(&transfers);
-        RoundMetrics { transfers, total_time_s, exchange_time_s, slots: slots_used, slot_timings }
+        RoundMetrics {
+            transfers,
+            total_time_s,
+            exchange_time_s,
+            slots: slots_used,
+            slot_timings,
+            segments: plan.segments(),
+            relay_copies: relay_copies_total,
+        }
     }
 
     /// Run `opts.rounds` communication rounds through one long-lived
@@ -304,10 +676,15 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
     /// slots round `t` no longer needs. Within a slot every transmitter
     /// services its oldest round with pending work; color classes are
     /// fixed per node, so the proper-coloring guarantee (no adjacent
-    /// transmitters) holds across mixed-round slots too.
+    /// transmitters) holds across mixed-round slots too — except inside
+    /// segmented slots, whose cut-through relays deliberately answer out
+    /// of turn (see the module docs).
     pub fn run_pipelined(&mut self, tree: &Graph, mut opts: PipelineOptions) -> PipelineMetrics {
         let n = tree.node_count();
         assert!(tree.is_tree(), "pipelined gossip runs on the moderator's MST");
+        let plan = opts.plan;
+        let segmented = plan.is_segmented();
+        let mut relay_copies_total = 0usize;
         // every node's own model crosses each incident tree edge once
         let own_copies: usize = (0..n).map(|u| tree.degree(u)).sum();
 
@@ -373,45 +750,97 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 continue;
             }
 
-            let meta = self.launch_slot(&planned, opts.model_mb);
-            self.drain_slot(meta.len());
-            let end_s = self.driver.now();
-
-            // deliveries in deterministic order, routed to their round
-            let mut failed = vec![false; planned.len()];
             let mut completed_nodes: Vec<(usize, NodeId)> = Vec::new(); // (active idx, node)
-            for j in Self::delivery_order(&planned, &meta) {
-                let (i, to, _) = meta[j];
-                if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
-                    failed[i] = true;
-                    continue;
-                }
-                let tx = &planned[i];
-                let ai = planned_rounds[i];
-                let send = Send { from: tx.from, to, key: tx.entry.key };
-                let ar = &mut active[ai];
-                let fresh = ar.state.deliver(send);
-                ar.phase.last_slot = slot;
-                if !fresh {
-                    continue; // deduplicated retransmission
-                }
-                if send.from == send.key.owner {
-                    // an own-model copy landed: exchange-phase accounting
-                    // (drain clock, so exchange_done_s <= done_s always)
-                    ar.own_left -= 1;
-                    if ar.own_left == 0 {
-                        ar.phase.exchange_done_s = end_s;
+            let (end_s, launched) = if !segmented {
+                // whole-model path: the pre-segmentation pipeline, verbatim
+                let meta = self.launch_slot(&planned, plan.model_mb());
+                self.drain_slot(meta.len());
+                let end_s = self.driver.now();
+
+                // deliveries in deterministic order, routed to their round
+                let mut failed = vec![false; planned.len()];
+                for j in Self::delivery_order(&planned, &meta) {
+                    let (i, to, _) = meta[j];
+                    if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
+                        failed[i] = true;
+                        continue;
+                    }
+                    let tx = &planned[i];
+                    let ai = planned_rounds[i];
+                    let send = Send { from: tx.from, to, key: tx.entry.key };
+                    let ar = &mut active[ai];
+                    let fresh = ar.state.deliver(send);
+                    ar.phase.last_slot = slot;
+                    if !fresh {
+                        continue; // deduplicated retransmission
+                    }
+                    if send.from == send.key.owner {
+                        // an own-model copy landed: exchange-phase accounting
+                        // (drain clock, so exchange_done_s <= done_s always)
+                        ar.own_left -= 1;
+                        if ar.own_left == 0 {
+                            ar.phase.exchange_done_s = end_s;
+                        }
+                    }
+                    if ar.state.queue(to).held_count() == n {
+                        completed_nodes.push((ai, to));
                     }
                 }
-                if ar.state.queue(to).held_count() == n {
-                    completed_nodes.push((ai, to));
+                for (i, tx) in planned.iter().enumerate() {
+                    if failed[i] {
+                        active[planned_rounds[i]].state.requeue(tx);
+                    }
                 }
-            }
-            for (i, tx) in planned.iter().enumerate() {
-                if failed[i] {
-                    active[planned_rounds[i]].state.requeue(tx);
+                (end_s, meta.len())
+            } else {
+                // segmented path: cut-through cascades routed per round
+                let mut exchange_done_rounds: Vec<usize> = Vec::new();
+                let stats = self.run_cut_through_slot(
+                    tree,
+                    &planned,
+                    &planned_rounds,
+                    &plan,
+                    opts.failure_prob,
+                    &mut opts.failure_rng,
+                    &mut |op| match op {
+                        StateOp::Holds { round_idx, node, key } => {
+                            active[round_idx].state.queue(node).holds(&key)
+                        }
+                        StateOp::Deliver { round_idx, send } => {
+                            let ar = &mut active[round_idx];
+                            let fresh = ar.state.deliver_reassembled(send);
+                            ar.phase.last_slot = slot;
+                            if fresh {
+                                if send.from == send.key.owner {
+                                    ar.own_left -= 1;
+                                    if ar.own_left == 0 {
+                                        exchange_done_rounds.push(round_idx);
+                                    }
+                                }
+                                if ar.state.queue(send.to).held_count() == n {
+                                    completed_nodes.push((round_idx, send.to));
+                                }
+                            }
+                            fresh
+                        }
+                        StateOp::RelayDisrupted { round_idx, node, key, received_from } => {
+                            active[round_idx].state.enqueue_forward(node, key, received_from);
+                            false
+                        }
+                    },
+                );
+                let end_s = self.driver.now();
+                for ai in exchange_done_rounds {
+                    active[ai].phase.exchange_done_s = end_s;
                 }
-            }
+                for (i, tx) in planned.iter().enumerate() {
+                    if stats.failed[i] {
+                        active[planned_rounds[i]].state.requeue(tx);
+                    }
+                }
+                relay_copies_total += stats.relay_copies;
+                (end_s, stats.seg_launches)
+            };
 
             // nodes that finished a round seed the next one: its traffic
             // becomes eligible from the next slot of its color
@@ -464,7 +893,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 false
             });
 
-            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: meta.len() });
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: launched });
             slot += 1;
         }
 
@@ -477,7 +906,16 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             rounds.push(phase);
             received.push(orders);
         }
-        PipelineMetrics { transfers, total_time_s, slots: slots_used, slot_timings, rounds, received }
+        PipelineMetrics {
+            transfers,
+            total_time_s,
+            slots: slots_used,
+            slot_timings,
+            rounds,
+            received,
+            segments: plan.segments(),
+            relay_copies: relay_copies_total,
+        }
     }
 }
 
@@ -499,6 +937,7 @@ mod tests {
     use crate::config::ExperimentConfig;
     use crate::coordinator::example;
     use crate::coordinator::schedule::build_schedule;
+    use crate::graph::topology;
     use crate::netsim::testbed::Testbed;
 
     fn quiet_testbed() -> Testbed {
@@ -526,6 +965,8 @@ mod tests {
         assert_eq!(m.slots, 23);
         assert_eq!(m.transfer_count(), 90);
         assert_eq!(m.slot_timings.len(), 23);
+        assert_eq!(m.segments, 1);
+        assert_eq!(m.relay_copies, 0);
     }
 
     #[test]
@@ -553,7 +994,7 @@ mod tests {
         let mut engine = RoundEngine::new(&mut driver, &schedule);
         let mut state = GossipState::new(example::paper_example_mst(), 0);
         let opts = RoundOptions {
-            model_mb: 5.0,
+            plan: TransferPlan::whole(5.0),
             failure_prob: 0.2,
             max_slots: 144,
             failure_rng: Pcg64::new(42),
@@ -564,6 +1005,111 @@ mod tests {
         // every launched copy is accounted for in the slot timings
         let copies: usize = m.slot_timings.iter().map(|s| s.copies).sum();
         assert_eq!(copies, m.transfer_count());
+    }
+
+    /// A path tree with its 2-coloring schedule — the deep-relay shape
+    /// where cut-through forwarding matters most.
+    fn chain_setup(n: usize) -> (Graph, Schedule) {
+        let tree = topology::chain(n);
+        let coloring = bfs_coloring(&tree);
+        let schedule = Schedule { coloring, slot_len_s: 1.0, first_color: 0 };
+        (tree, schedule)
+    }
+
+    #[test]
+    fn cut_through_round_completes_with_inline_forwarding() {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_setup(10);
+        let mut driver = SimDriver::new(&tb, 3);
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let mut state = GossipState::new(tree.clone(), 0);
+        let k = 4;
+        let m = engine.run_round(
+            &mut state,
+            RoundOptions::reliable_plan(TransferPlan::segmented(48.0, k), 64),
+            |_, _| {},
+        );
+        assert!(state.is_complete());
+        // each of the 10 models crosses each of the 9 edges once, as k
+        // segment flows per copy
+        assert_eq!(m.transfer_count(), 90 * k);
+        assert_eq!(m.segments, k);
+        // every copy not sent by a slot transmitter came from a relay:
+        // 90 copies total, sum of degrees = 18 planned copies
+        assert_eq!(m.relay_copies, 90 - 18);
+        // cut-through collapses the chain's 2(n-1)-ish slot count: every
+        // queue drains within one turn per color class
+        assert_eq!(m.slots, 2, "one slot per color class suffices");
+        let launched: usize = m.slot_timings.iter().map(|s| s.copies).sum();
+        assert_eq!(launched, m.transfer_count());
+    }
+
+    #[test]
+    fn cut_through_pipelines_large_models_faster_than_whole_transfers() {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let n = 10usize;
+        let (tree, schedule) = chain_setup(n);
+        for model_mb in [36.8, 48.0] {
+            let run = |plan: TransferPlan| {
+                let mut driver = SimDriver::new(&tb, 7);
+                let mut engine = RoundEngine::new(&mut driver, &schedule);
+                let mut state = GossipState::new(tree.clone(), 0);
+                engine.run_round(&mut state, RoundOptions::reliable_plan(plan, 128), |_, _| {})
+            };
+            let whole = run(TransferPlan::whole(model_mb));
+            let seg = run(TransferPlan::segmented(model_mb, 4));
+            assert!(
+                seg.total_time_s < whole.total_time_s,
+                "chain n={n} model={model_mb}: segmented {} vs whole {}",
+                seg.total_time_s,
+                whole.total_time_s
+            );
+        }
+    }
+
+    #[test]
+    fn cut_through_round_with_failures_still_disseminates() {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_setup(8);
+        let mut driver = SimDriver::new(&tb, 11);
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let mut state = GossipState::new(tree.clone(), 0);
+        let opts = RoundOptions {
+            plan: TransferPlan::segmented(14.0, 4),
+            failure_prob: 0.2,
+            max_slots: 256,
+            failure_rng: Pcg64::new(9),
+        };
+        let m = engine.run_round(&mut state, opts, |_, _| {});
+        assert!(state.is_complete());
+        for u in 0..8 {
+            assert_eq!(state.queue(u).held_count(), 8, "node {u} missing models");
+        }
+        // disrupted copies spend bytes: strictly more segment flows than
+        // the loss-free minimum of 7 edges × 8 models × 4 segments
+        assert!(m.transfer_count() > 7 * 8 * 4);
+    }
+
+    #[test]
+    fn cut_through_logical_driver_waves_advance_per_tick() {
+        // untimed check of the cascade structure itself: on a 4-chain with
+        // k=2, node 0's model reaches node 3 within one slot
+        let (tree, schedule) = chain_setup(4);
+        let mut driver = LogicalDriver::new();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let mut state = GossipState::new(tree, 0);
+        let m = engine.run_round(
+            &mut state,
+            RoundOptions::reliable_plan(TransferPlan::segmented(4.0, 2), 32),
+            |_, _| {},
+        );
+        assert!(state.is_complete());
+        assert_eq!(m.slots, 2);
+        // 4 models × 3 edges × 2 segments
+        assert_eq!(m.transfer_count(), 24);
     }
 
     #[test]
@@ -629,6 +1175,30 @@ mod tests {
         assert_eq!(p.transfers.len(), single.transfer_count());
         assert_eq!(p.slots, single.slots);
         assert_eq!(p.total_time_s.to_bits(), single.total_time_s.to_bits());
+    }
+
+    #[test]
+    fn pipelined_segmented_rounds_complete_and_overlap() {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_setup(10);
+        let mut driver = SimDriver::new(&tb, 4);
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let p = engine.run_pipelined(
+            &tree,
+            PipelineOptions::reliable_plan(3, TransferPlan::segmented(36.8, 4), 10),
+        );
+        assert_eq!(p.rounds.len(), 3);
+        assert_eq!(p.segments, 4);
+        assert!(p.relay_copies > 0, "deep chain must relay via cut-through");
+        for (r, orders) in p.received.iter().enumerate() {
+            for (u, order) in orders.iter().enumerate() {
+                assert_eq!(order.len(), 9, "round {r} node {u} missed models");
+            }
+        }
+        for phase in &p.rounds {
+            assert!(phase.exchange_done_s <= phase.done_s + 1e-9);
+        }
     }
 
     #[test]

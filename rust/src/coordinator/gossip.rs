@@ -136,6 +136,25 @@ impl GossipState {
         self.queues[send.to].receive(send.key, send.from, enqueue)
     }
 
+    /// Apply a cut-through delivery: the recipient holds the reassembled
+    /// model but queues **no** forwarding obligation — the engine's relay
+    /// cascade already forwarded every segment inline as it arrived (see
+    /// `coordinator::engine`). Returns `true` if the model was new.
+    pub fn deliver_reassembled(&mut self, send: Send) -> bool {
+        self.queues[send.to].receive(send.key, send.from, false)
+    }
+
+    /// Queue a normal-path retransmission at `node` after one of its
+    /// inline cut-through forwards was disrupted: the relay holds the
+    /// model (so [`GossipState::deliver`] would deduplicate it) but must
+    /// re-offer it to its neighbors on its next turn. No-op when the key
+    /// is already pending at the node.
+    pub fn enqueue_forward(&mut self, node: NodeId, key: ModelKey, received_from: NodeId) {
+        if !self.queues[node].has_pending(&key) {
+            self.queues[node].push_back(QueueEntry { key, received_from: Some(received_from) });
+        }
+    }
+
     /// Re-queue an entry whose transmission failed (network disruption),
     /// at the front, so the node retries on its next turn.
     pub fn requeue(&mut self, tx: &PlannedTx) {
@@ -377,6 +396,28 @@ mod tests {
         }
         assert_eq!(fresh, 1, "only D should be new on retry");
         assert!(st.queue(example::D).holds(&ModelKey::new(example::C, 0)));
+    }
+
+    #[test]
+    fn reassembled_delivery_holds_without_forward_obligation() {
+        let mut st = example_state();
+        // F (degree 3) receives H's model via cut-through: held, not queued
+        let send = Send { from: example::H, to: example::F, key: ModelKey::new(example::H, 0) };
+        assert!(st.deliver_reassembled(send));
+        assert!(st.queue(example::F).holds(&ModelKey::new(example::H, 0)));
+        assert!(!st.queue(example::F).has_pending(&ModelKey::new(example::H, 0)));
+        // duplicate reassembly is deduplicated
+        assert!(!st.deliver_reassembled(send));
+        // a disrupted inline forward re-queues exactly once
+        st.enqueue_forward(example::F, ModelKey::new(example::H, 0), example::H);
+        st.enqueue_forward(example::F, ModelKey::new(example::H, 0), example::H);
+        let pending: Vec<_> = st
+            .queue(example::F)
+            .pending_keys()
+            .into_iter()
+            .filter(|k| k.owner == example::H)
+            .collect();
+        assert_eq!(pending.len(), 1);
     }
 
     #[test]

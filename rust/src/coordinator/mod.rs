@@ -27,6 +27,13 @@
 //! round `t`, so next-round seeds gossip in slots the previous round has
 //! vacated (§III-D). The DFL layer (`dfl::round::run_dfl`) trains through
 //! this path.
+//!
+//! The wire-level transfer unit is a [`queue::SegmentKey`] under a
+//! segment-granular `dfl::transfer::TransferPlan`: `segments = 1` moves
+//! whole checkpoints exactly as the pre-segmentation engine did, while
+//! `segments ≥ 2` enables the engine's cut-through relay forwarding
+//! (segment `i` re-launched downstream the moment it arrives — see
+//! [`engine`]).
 
 pub mod broadcast;
 pub mod churn;

@@ -106,6 +106,11 @@ impl Moderator {
     }
 
     /// Run the graph computations and publish the bundle.
+    ///
+    /// `model_mb` is the size of one **transfer unit** — the whole
+    /// checkpoint under a whole-model plan, or one segment under a
+    /// segmented plan (the slot-length formula budgets whatever unit the
+    /// schedule actually moves per turn; see `schedule::slot_length_s`).
     pub fn compute_schedule(
         &mut self,
         model_mb: f64,

@@ -25,6 +25,31 @@ impl ModelKey {
     }
 }
 
+/// Identity of one wire-level transfer unit: segment `index` of `total`
+/// of a circulating model copy (see
+/// [`TransferPlan`](crate::dfl::transfer::TransferPlan)). `total == 1`
+/// is the whole-model unit of the legacy transfer plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SegmentKey {
+    pub model: ModelKey,
+    /// Segment index, `0..total`.
+    pub index: u16,
+    /// Segments per model copy under the active transfer plan.
+    pub total: u16,
+}
+
+impl SegmentKey {
+    pub fn new(model: ModelKey, index: u16, total: u16) -> Self {
+        debug_assert!(total >= 1 && index < total, "segment {index}/{total} out of range");
+        SegmentKey { model, index, total }
+    }
+
+    /// The single whole-model unit (legacy transfers).
+    pub fn whole(model: ModelKey) -> Self {
+        SegmentKey { model, index: 0, total: 1 }
+    }
+}
+
 /// A queued forwarding obligation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct QueueEntry {
@@ -90,6 +115,20 @@ impl GossipQueue {
     /// is retried on the node's next turn (§III-D network-disruption rule).
     pub fn push_front(&mut self, entry: QueueEntry) {
         self.fifo.push_front(entry);
+    }
+
+    /// Append a forwarding obligation at the back of `F`. Used by the
+    /// cut-through engine when a relay's inline forward was disrupted:
+    /// the relay already holds the model (so [`GossipQueue::receive`]
+    /// would deduplicate it) but must now retransmit through the normal
+    /// queued path on its next turn.
+    pub fn push_back(&mut self, entry: QueueEntry) {
+        self.fifo.push_back(entry);
+    }
+
+    /// Whether `key` is already queued for (re)transmission.
+    pub fn has_pending(&self, key: &ModelKey) -> bool {
+        self.fifo.iter().any(|e| e.key == *key)
     }
 
     pub fn pending_len(&self) -> usize {
@@ -207,5 +246,29 @@ mod tests {
         let mut q = GossipQueue::new(0);
         q.seed_own(0);
         q.seed_own(0);
+    }
+
+    #[test]
+    fn push_back_requeues_for_held_model() {
+        // cut-through relay failure: model is held, obligation re-enters F
+        let mut q = GossipQueue::new(0);
+        q.receive(ModelKey::new(3, 0), 1, false); // held, nothing queued
+        assert!(q.is_drained());
+        assert!(!q.has_pending(&ModelKey::new(3, 0)));
+        q.push_back(QueueEntry { key: ModelKey::new(3, 0), received_from: Some(1) });
+        assert!(q.has_pending(&ModelKey::new(3, 0)));
+        assert_eq!(q.pop_oldest().unwrap().key.owner, 3);
+    }
+
+    #[test]
+    fn segment_keys_order_and_identify() {
+        let m = ModelKey::new(2, 5);
+        let whole = SegmentKey::whole(m);
+        assert_eq!((whole.index, whole.total), (0, 1));
+        let s0 = SegmentKey::new(m, 0, 4);
+        let s3 = SegmentKey::new(m, 3, 4);
+        assert!(s0 < s3);
+        assert_ne!(s0, whole);
+        assert_ne!(s0, s3);
     }
 }

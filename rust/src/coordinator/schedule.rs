@@ -14,6 +14,14 @@
 //! size in MB and `ping_size` the ping probe payload in bytes. Intuition:
 //! ping measures per-byte path cost at probe size; scaling to the model's
 //! byte count budgets a full transfer.
+//!
+//! Under a segment-granular transfer plan the unit a transmitter moves
+//! per turn is one *segment*, so `M_size` becomes the segment size: the
+//! session feeds `TransferPlan::segment_mb()` into the moderator's
+//! [`build_schedule`] call (see `GossipSession::with_model`), shrinking
+//! the budget by the segment count while cut-through relays overlap the
+//! per-hop transfers the old whole-model slots serialized. With
+//! `segments = 1` the fed unit is the checkpoint itself, bit for bit.
 
 use crate::coloring::Coloring;
 use crate::graph::Graph;
@@ -55,7 +63,10 @@ pub fn class_ping_max_ms(costs: &Graph, coloring: &Coloring, color: usize) -> f6
     worst
 }
 
-/// The paper's slot-length formula. `ping_max_ms` is converted to seconds.
+/// The paper's slot-length formula. `ping_max_ms` is converted to
+/// seconds; `model_mb` is the size of one transfer unit — the checkpoint
+/// under a whole-model plan, one segment (`TransferPlan::segment_mb`)
+/// under a segmented one.
 pub fn slot_length_s(ping_max_ms: f64, model_mb: f64, ping_size_bytes: u64) -> f64 {
     assert!(ping_size_bytes > 0);
     let ping_max_s = ping_max_ms / 1e3;
@@ -82,6 +93,7 @@ pub fn build_schedule(
 mod tests {
     use super::*;
     use crate::coloring::bfs_coloring;
+    use crate::dfl::transfer::TransferPlan;
 
     fn path3_costs() -> Graph {
         let mut g = Graph::new(3);
@@ -137,6 +149,16 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn segment_slot_budget_scales_with_plan() {
+        // the formula fed a plan's transfer unit: whole plan = checkpoint
+        // bits exactly, k-segment plan = budget divided by k
+        let whole = slot_length_s(25.0, TransferPlan::whole(48.0).segment_mb(), 56);
+        assert_eq!(whole.to_bits(), slot_length_s(25.0, 48.0, 56).to_bits());
+        let quartered = slot_length_s(25.0, TransferPlan::segmented(48.0, 4).segment_mb(), 56);
+        assert!((whole / quartered - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::gossip::GossipState;
 use super::moderator::{Moderator, ScheduleBundle};
 use super::schedule::Schedule;
 use crate::config::ExperimentConfig;
+use crate::dfl::transfer::TransferPlan;
 use crate::graph::topology::{self, TopologyKind};
 use crate::graph::Graph;
 use crate::metrics::RoundMetrics;
@@ -36,7 +37,9 @@ impl GossipSession {
     }
 
     /// As [`GossipSession::new`] with an explicit model size (MB) for the
-    /// slot-length computation.
+    /// slot-length computation. The published slot budget covers one
+    /// **transfer unit** of the config's plan (the whole checkpoint at
+    /// `segments = 1`, one segment otherwise — see `schedule`).
     pub fn with_model(cfg: &ExperimentConfig, model_mb: f64) -> Result<Self> {
         cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
         let mut rng = Pcg64::new(cfg.seed);
@@ -56,8 +59,9 @@ impl GossipSession {
                 .collect();
             moderator.submit_report(u, &peers);
         }
+        let unit_mb = cfg.transfer_plan(model_mb).segment_mb();
         let bundle = moderator
-            .compute_schedule(model_mb, cfg.ping_size_bytes, 1)
+            .compute_schedule(unit_mb, cfg.ping_size_bytes, 1)
             .context("moderator schedule computation")?
             .clone();
         Ok(GossipSession { cfg: cfg.clone(), testbed, structure, costs, bundle })
@@ -87,6 +91,12 @@ impl GossipSession {
         &self.cfg
     }
 
+    /// The config's transfer plan for a `model_mb`-sized checkpoint
+    /// (whole-model by default; `--segments` / `--segment-mb` slice it).
+    pub fn transfer_plan(&self, model_mb: f64) -> TransferPlan {
+        self.cfg.transfer_plan(model_mb)
+    }
+
     /// Run one timed MOSGU communication round through the event-driven
     /// engine: alternate color slots; in each slot every transmitting
     /// node pops its oldest queue entry and ships a copy to each
@@ -96,16 +106,31 @@ impl GossipSession {
     /// DESIGN.md). Per-slot durations land in
     /// [`RoundMetrics::slot_timings`].
     ///
+    /// The transfer unit comes from the config's plan: with `segments ≥
+    /// 2` each copy moves as serial segment flows with cut-through relay
+    /// forwarding (see `coordinator::engine`).
+    ///
     /// `failure_prob` injects per-transmission network disruptions: the
     /// flow's bytes are spent but nothing is delivered, and the entry is
     /// re-queued for the node's next turn (§III-D).
     pub fn run_mosgu_round(&self, model_mb: f64, seed: u64, failure_prob: f64) -> RoundMetrics {
+        self.run_mosgu_round_planned(self.transfer_plan(model_mb), seed, failure_prob)
+    }
+
+    /// As [`GossipSession::run_mosgu_round`] under an explicit transfer
+    /// plan (ignoring the config's `segments` / `segment_mb`).
+    pub fn run_mosgu_round_planned(
+        &self,
+        plan: TransferPlan,
+        seed: u64,
+        failure_prob: f64,
+    ) -> RoundMetrics {
         let mut driver = SimDriver::new(&self.testbed, seed);
         let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
         let mut state = GossipState::new(self.bundle.tree.clone(), 0);
         let n = state.node_count();
         let opts = RoundOptions {
-            model_mb,
+            plan,
             failure_prob,
             // generous guard: retransmissions can stretch the round
             max_slots: 8 * n + 64,
@@ -118,12 +143,24 @@ impl GossipSession {
     /// simulator** with multi-round pipelining: each node seeds round
     /// `t+1` the moment it holds every round-`t` model, so next-round
     /// seeds gossip in slots round `t` has vacated (§III-D, "forwarded
-    /// copies pipeline with the next round").
+    /// copies pipeline with the next round"). The transfer unit comes
+    /// from the config's plan.
     pub fn run_pipelined_rounds(&self, model_mb: f64, rounds: u64, seed: u64) -> PipelineMetrics {
+        self.run_pipelined_rounds_planned(self.transfer_plan(model_mb), rounds, seed)
+    }
+
+    /// As [`GossipSession::run_pipelined_rounds`] under an explicit
+    /// transfer plan.
+    pub fn run_pipelined_rounds_planned(
+        &self,
+        plan: TransferPlan,
+        rounds: u64,
+        seed: u64,
+    ) -> PipelineMetrics {
         let mut driver = SimDriver::new(&self.testbed, seed);
         let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
         let n = self.bundle.tree.node_count();
-        engine.run_pipelined(&self.bundle.tree, PipelineOptions::reliable(rounds, model_mb, n))
+        engine.run_pipelined(&self.bundle.tree, PipelineOptions::reliable_plan(rounds, plan, n))
     }
 
     /// The paper's baseline on this testbed: all-to-all direct push on the
@@ -256,6 +293,46 @@ mod tests {
             "pipelining must overlap rounds: {} vs {}",
             pipelined.total_time_s,
             sequential
+        );
+    }
+
+    #[test]
+    fn segmented_config_threads_through_session_rounds() {
+        let cfg = ExperimentConfig {
+            topology: TopologyKind::Chain,
+            segments: 4,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let s = GossipSession::new(&cfg).unwrap();
+        let m = s.run_mosgu_round(48.0, 1, 0.0);
+        assert_eq!(m.segments, 4);
+        // 10 models × 9 chain edges, 4 segment flows per copy
+        assert_eq!(m.transfer_count(), 90 * 4);
+        assert_eq!(m.model_copy_count(), 90);
+        assert!(m.relay_copies > 0, "chain dissemination must use cut-through relays");
+
+        // explicit plan overrides the config
+        let whole = s.run_mosgu_round_planned(TransferPlan::whole(48.0), 1, 0.0);
+        assert_eq!(whole.segments, 1);
+        assert_eq!(whole.transfer_count(), 90);
+    }
+
+    #[test]
+    fn segmented_plan_beats_whole_model_on_chain_session() {
+        let cfg = ExperimentConfig {
+            topology: TopologyKind::Chain,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let s = GossipSession::new(&cfg).unwrap();
+        let whole = s.run_mosgu_round_planned(TransferPlan::whole(48.0), 1, 0.0);
+        let seg = s.run_mosgu_round_planned(TransferPlan::segmented(48.0, 4), 1, 0.0);
+        assert!(
+            seg.total_time_s < whole.total_time_s,
+            "cut-through must pipeline the chain: {} vs {}",
+            seg.total_time_s,
+            whole.total_time_s
         );
     }
 

@@ -1,7 +1,8 @@
 //! Decentralized federated learning layer: the Table II model registry,
-//! the artifact-driven per-node trainer, and DFL round orchestration
-//! (train → gossip → aggregate).
+//! the artifact-driven per-node trainer, segment-granular transfer
+//! planning, and DFL round orchestration (train → gossip → aggregate).
 
 pub mod models;
 pub mod round;
 pub mod trainer;
+pub mod transfer;

@@ -36,6 +36,8 @@ pub struct DflRoundReport {
     pub slots: usize,
     /// parameter MB a single model transfer moved
     pub model_mb: f64,
+    /// wire segments each model copy traveled as (1 = whole-model)
+    pub segments: usize,
     /// absolute pipeline time the round's first seed entered the engine
     pub start_s: f64,
     /// absolute pipeline time the round fully disseminated
@@ -60,7 +62,9 @@ pub fn run_dfl(
     let model_mb = trainer.artifacts().model_mb();
 
     // one long-lived simulator for every round's gossip, with
-    // multi-round pipelining; content-free, so it can run up front
+    // multi-round pipelining; content-free, so it can run up front. The
+    // session's transfer plan decides whether checkpoints move whole or
+    // as cut-through-forwarded segments (--segments / --segment-mb).
     let pipeline = session.run_pipelined_rounds(model_mb, rounds, 0x90551b);
     anyhow::ensure!(
         pipeline.rounds.len() == rounds as usize,
@@ -112,6 +116,7 @@ pub fn run_dfl(
             comm_time_s: phase.exchange_done_s - phase.first_seed_s,
             slots: phase.slot_span(),
             model_mb,
+            segments: pipeline.segments,
             start_s: phase.first_seed_s,
             done_s: phase.done_s,
         };
@@ -166,6 +171,27 @@ mod tests {
         for phase in &p.rounds {
             assert!(phase.exchange_done_s > phase.first_seed_s);
             assert!(phase.slot_span() > 10);
+        }
+    }
+
+    #[test]
+    fn segmented_pipeline_hands_dfl_full_fold_inputs() {
+        // a segmented transfer plan must not change what the aggregation
+        // layer sees: complete per-round reception orders for every node
+        let cfg = crate::config::ExperimentConfig {
+            segments: 4,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let session = GossipSession::new(&cfg).unwrap();
+        let p = session.run_pipelined_rounds(21.6, 2, 0x90551b);
+        assert_eq!(p.segments, 4);
+        assert_eq!(p.received.len(), 2);
+        for round in &p.received {
+            for (u, order) in round.iter().enumerate() {
+                assert_eq!(order.len(), 9, "node {u} must fold all peers");
+                assert!(!order.contains(&u), "own model is not re-folded");
+            }
         }
     }
 }

@@ -31,6 +31,9 @@ pub enum TopologyKind {
     Star,
     /// Balanced binary tree rooted at node 0.
     BalancedTree,
+    /// Path 0–1–…–(n−1): the deepest possible relay chain, where
+    /// segment-granular cut-through forwarding gains most.
+    Chain,
 }
 
 impl TopologyKind {
@@ -43,7 +46,7 @@ impl TopologyKind {
     ];
 
     /// Every supported family, including the deterministic bench shapes.
-    pub const EXTENDED: [TopologyKind; 7] = [
+    pub const EXTENDED: [TopologyKind; 8] = [
         TopologyKind::ErdosRenyi,
         TopologyKind::WattsStrogatz,
         TopologyKind::BarabasiAlbert,
@@ -51,6 +54,7 @@ impl TopologyKind {
         TopologyKind::Ring,
         TopologyKind::Star,
         TopologyKind::BalancedTree,
+        TopologyKind::Chain,
     ];
 
     /// Display name matching the paper's table rows.
@@ -63,6 +67,7 @@ impl TopologyKind {
             TopologyKind::Ring => "Ring",
             TopologyKind::Star => "Star",
             TopologyKind::BalancedTree => "Balanced-Tree",
+            TopologyKind::Chain => "Chain",
         }
     }
 
@@ -75,6 +80,7 @@ impl TopologyKind {
             "ring" | "cycle" => Some(TopologyKind::Ring),
             "star" => Some(TopologyKind::Star),
             "balanced-tree" | "tree" | "bt" => Some(TopologyKind::BalancedTree),
+            "chain" | "path" | "line" => Some(TopologyKind::Chain),
             _ => None,
         }
     }
@@ -117,6 +123,7 @@ pub fn generate(kind: TopologyKind, n: usize, params: &TopologyParams, rng: &mut
         TopologyKind::Ring => ring(n),
         TopologyKind::Star => star(n),
         TopologyKind::BalancedTree => balanced_tree(n),
+        TopologyKind::Chain => chain(n),
     }
 }
 
@@ -203,6 +210,15 @@ pub fn balanced_tree(n: usize) -> Graph {
     let mut g = Graph::new(n);
     for v in 1..n {
         g.add_edge((v - 1) / 2, v, 1.0);
+    }
+    g
+}
+
+/// Path graph P_n: node v adjacent to v+1.
+pub fn chain(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        g.add_edge(v - 1, v, 1.0);
     }
     g
 }
@@ -453,16 +469,26 @@ mod tests {
         assert_eq!(t.degree(0), 2);
         assert!(t.has_edge(0, 1) && t.has_edge(0, 2) && t.has_edge(1, 3));
 
+        let c = chain(10);
+        assert_eq!(c.edge_count(), 9);
+        assert!(c.is_tree());
+        assert_eq!(c.degree(0), 1);
+        assert_eq!(c.degree(5), 2);
+        assert!(c.has_edge(4, 5) && !c.has_edge(0, 9));
+
         // degenerate sizes stay connected
         assert!(ring(2).is_connected());
         assert_eq!(ring(2).edge_count(), 1);
         assert!(star(2).is_tree());
+        assert!(chain(2).is_tree());
     }
 
     #[test]
     fn extended_generate_always_connected() {
         let mut rng = Pcg64::new(11);
-        for kind in [TopologyKind::Ring, TopologyKind::Star, TopologyKind::BalancedTree] {
+        for kind in
+            [TopologyKind::Ring, TopologyKind::Star, TopologyKind::BalancedTree, TopologyKind::Chain]
+        {
             let g = generate(kind, 12, &TopologyParams::default(), &mut rng);
             assert!(g.is_connected(), "{kind:?}");
             assert_eq!(g.node_count(), 12);

@@ -28,6 +28,17 @@
 //! - `LiveDriver` — real byte payloads over `transport` meshes
 //!   (in-memory channels or shaped loopback TCP).
 //!
+//! The transfer unit the drivers move is set by a segment-granular
+//! [`dfl::transfer::TransferPlan`]: `segments = 1` ships whole
+//! checkpoints (bit-identical to the pre-segmentation engine), while
+//! `segments ≥ 2` slices each copy into serial segment flows with
+//! **cut-through forwarding** — a relay re-launches segment *i*
+//! downstream the moment it arrives, while *i+1* is still in flight
+//! upstream (after Hu et al., arXiv:1908.07782; see
+//! `coordinator::engine`). [`metrics::RoundMetrics`] rolls per-segment
+//! flows back up into reassembled model copies so the paper's Table III
+//! bandwidth column stays comparable.
+//!
 //! On top of single rounds the engine pipelines **multiple rounds over
 //! one long-lived simulator** ([`coordinator::engine::RoundEngine::run_pipelined`]):
 //! each node seeds round *t+1* the moment it has aggregated round *t*,
@@ -35,7 +46,8 @@
 //! paper's §III-D observation that forwarded copies pipeline with the
 //! next round. `dfl::round::run_dfl` trains through this path, and
 //! [`metrics::RoundMetrics`] carries per-slot timing so the overlap is
-//! measurable (see `benches/engine_pipeline.rs`).
+//! measurable (see `benches/engine_pipeline.rs` and
+//! `benches/segment_sweep.rs`).
 //!
 //! The `runtime` module loads the AOT artifacts through PJRT so the gossip
 //! request path never touches Python.

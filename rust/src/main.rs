@@ -85,6 +85,13 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(t) = f.get("topology") {
         cfg.topology = TopologyKind::parse(t).with_context(|| format!("bad topology {t}"))?;
     }
+    if let Some(s) = f.get("segments") {
+        cfg.segments = s.parse().context("--segments")?;
+    }
+    if let Some(s) = f.get("segment-mb") {
+        cfg.segment_mb = s.parse().context("--segment-mb")?;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!("invalid flags: {e}"))?;
     Ok(cfg)
 }
 
@@ -122,7 +129,11 @@ fn print_usage() {
          common flags (all subcommands):\n\
          \x20 --config F     load a TOML experiment config\n\
          \x20 --seed N       RNG seed for topology + simulator jitter\n\
-         \x20 --topology T   underlay family (er|ws|ba|complete|ring|star|tree)"
+         \x20 --topology T   underlay family (er|ws|ba|complete|ring|star|tree|chain)\n\
+         \x20 --segments K   slice each model copy into K segments with\n\
+         \x20                cut-through relay forwarding (default 1 = whole model)\n\
+         \x20 --segment-mb F derive the segment count per model from a target\n\
+         \x20                segment size in MB (mutually exclusive with --segments)"
     );
 }
 
@@ -279,6 +290,14 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
         artifacts.manifest.param_dim,
         artifacts.model_mb()
     );
+    let plan = cfg.transfer_plan(artifacts.model_mb());
+    if plan.is_segmented() {
+        println!(
+            "transfer plan: {} segments of {:.2} MB each, cut-through relay forwarding",
+            plan.segments(),
+            plan.segment_mb()
+        );
+    }
     let session = GossipSession::with_model(&cfg, artifacts.model_mb())?;
     let trainer = Trainer::new(&rt, &artifacts);
     println!("round  train_loss  eval_loss  comm_s  slots");

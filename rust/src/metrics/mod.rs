@@ -2,7 +2,16 @@
 //! bandwidth (MB/s), average single-transfer time (s), and total time for
 //! one communication round (s) — plus table formatting for the CLI and
 //! benches.
+//!
+//! Under a segmented [`TransferPlan`](crate::dfl::transfer::TransferPlan)
+//! the raw [`FlowRecord`]s are per *segment*; the paper's indicators stay
+//! comparable because [`RoundMetrics`] first rolls segments back up into
+//! **reassembled model copies** ([`RoundMetrics::model_copies`]) and
+//! computes bandwidth/transfer time over those — averaging per-segment
+//! bandwidths into Table III would overstate goodput, since a copy is
+//! only usable once its last segment lands.
 
+use crate::coordinator::broadcast::{tag_owner, tag_segment, tag_sender};
 use crate::netsim::FlowRecord;
 use crate::util::stats::Summary;
 
@@ -21,7 +30,8 @@ pub struct SlotTiming {
     pub start_s: f64,
     /// Simulated time the slot's last transfer finished draining.
     pub end_s: f64,
-    /// Model copies launched in the slot (0 = idle color).
+    /// Transfer-unit flows launched in the slot (0 = idle color; one per
+    /// segment under segmented plans, cut-through cascades included).
     pub copies: usize,
 }
 
@@ -35,7 +45,8 @@ impl SlotTiming {
 /// Metrics of one measured communication round.
 #[derive(Debug, Clone)]
 pub struct RoundMetrics {
-    /// Every completed model transfer in the round.
+    /// Every completed transfer-unit flow in the round (one record per
+    /// segment under segmented plans).
     pub transfers: Vec<FlowRecord>,
     /// Wall-clock (simulated) duration until full dissemination (every
     /// node holds every model).
@@ -51,11 +62,100 @@ pub struct RoundMetrics {
     /// Per-slot timing as recorded by the round engine (empty for
     /// broadcast, which has no slot structure).
     pub slot_timings: Vec<SlotTiming>,
+    /// Segments per model copy under the round's transfer plan (1 =
+    /// whole-model transfers; the rollup key for
+    /// [`RoundMetrics::model_copies`]).
+    pub segments: usize,
+    /// Model copies launched out-of-turn by cut-through relays (0 under
+    /// whole-model plans) — the cut-through activity indicator.
+    pub relay_copies: usize,
 }
 
 impl RoundMetrics {
-    /// Mean observed per-transfer goodput — the paper's "Bandwidth (MB/s)".
+    /// Reassembled model copies: per-segment flow records grouped back
+    /// into one synthetic record per copy — payload summed over the
+    /// copy's segments, `start` = first segment launched, `end` = last
+    /// segment delivered (a copy is only usable once reassembly
+    /// completes). With `segments == 1` this is the transfer list itself.
+    ///
+    /// Grouping key: `(src, dst, owner, sender)` from the flow tags; the
+    /// engine launches a copy's segments serially and never interleaves
+    /// two copies of the same model on the same edge within a slot, so
+    /// accumulating until `segments` units are seen reconstructs copies
+    /// exactly, retransmissions included.
+    pub fn model_copies(&self) -> Vec<FlowRecord> {
+        if self.segments <= 1 {
+            return self.transfers.clone();
+        }
+        let mut open: std::collections::HashMap<(usize, usize, usize), FlowRecord> =
+            std::collections::HashMap::new();
+        let mut counts: std::collections::HashMap<(usize, usize, usize), usize> =
+            std::collections::HashMap::new();
+        let mut out = Vec::new();
+        for rec in &self.transfers {
+            let key = (rec.src, rec.dst, tag_owner(rec.tag));
+            debug_assert_eq!(tag_sender(rec.tag), rec.src, "sender tag matches flow source");
+            let entry = open.entry(key).or_insert_with(|| {
+                let mut first = rec.clone();
+                // the copy's record reports reassembled goodput: strip the
+                // per-segment index from the tag so owner/sender remain
+                first.tag = rec.tag & !0xffff_0000;
+                first.payload_mb = 0.0;
+                first
+            });
+            entry.payload_mb += rec.payload_mb;
+            entry.start = entry.start.min(rec.start);
+            entry.end = entry.end.max(rec.end);
+            let seen = counts.entry(key).or_insert(0);
+            *seen += 1;
+            debug_assert!(
+                tag_segment(rec.tag) as usize == *seen - 1,
+                "copy segments accumulate in serial order"
+            );
+            if *seen == self.segments {
+                out.push(open.remove(&key).unwrap());
+                counts.remove(&key);
+            }
+        }
+        // defensively flush partial groups (a protocol bug upstream, but
+        // metrics must not silently drop bytes)
+        debug_assert!(open.is_empty(), "incomplete segment groups in transfer log");
+        out.extend(open.into_values());
+        out
+    }
+
+    /// Reassembled copies as a borrow when no rollup is needed
+    /// (`segments == 1`) — keeps the indicator methods allocation-free on
+    /// the whole-model hot path.
+    fn copy_records(&self) -> std::borrow::Cow<'_, [FlowRecord]> {
+        if self.segments <= 1 {
+            std::borrow::Cow::Borrowed(&self.transfers)
+        } else {
+            std::borrow::Cow::Owned(self.model_copies())
+        }
+    }
+
+    /// Reassembled copies moved (equals `transfer_count()` when
+    /// `segments == 1`).
+    pub fn model_copy_count(&self) -> usize {
+        self.copy_records().len()
+    }
+
+    /// Mean observed goodput per **reassembled model copy** — the paper's
+    /// "Bandwidth (MB/s)". Per-segment bandwidths are deliberately not
+    /// averaged (see the module docs).
     pub fn bandwidth_mbps(&self) -> f64 {
+        let mut s = Summary::new();
+        for t in self.copy_records().iter() {
+            s.push(t.bandwidth_mbps());
+        }
+        s.mean()
+    }
+
+    /// Mean per-segment goodput — the raw wire-level figure, for
+    /// comparing against [`RoundMetrics::bandwidth_mbps`] when studying
+    /// cut-through pipelining (the segment-sweep bench reports both).
+    pub fn per_segment_bandwidth_mbps(&self) -> f64 {
         let mut s = Summary::new();
         for t in &self.transfers {
             s.push(t.bandwidth_mbps());
@@ -63,15 +163,18 @@ impl RoundMetrics {
         s.mean()
     }
 
-    /// Mean single-transfer duration — the paper's Table IV indicator.
+    /// Mean single-transfer duration of a reassembled copy (first segment
+    /// launched → last segment delivered) — the paper's Table IV
+    /// indicator.
     pub fn avg_transfer_s(&self) -> f64 {
         let mut s = Summary::new();
-        for t in &self.transfers {
+        for t in self.copy_records().iter() {
             s.push(t.duration());
         }
         s.mean()
     }
 
+    /// Transfer-unit flows completed (segments under segmented plans).
     pub fn transfer_count(&self) -> usize {
         self.transfers.len()
     }
@@ -105,8 +208,16 @@ pub struct RepeatedMetrics {
 
 impl RepeatedMetrics {
     pub fn push(&mut self, round: &RoundMetrics) {
-        self.bandwidth.push(round.bandwidth_mbps());
-        self.transfer.push(round.avg_transfer_s());
+        // one rollup pass feeds both per-copy indicators
+        let copies = round.copy_records();
+        let mut bw = Summary::new();
+        let mut xfer = Summary::new();
+        for c in copies.iter() {
+            bw.push(c.bandwidth_mbps());
+            xfer.push(c.duration());
+        }
+        self.bandwidth.push(bw.mean());
+        self.transfer.push(xfer.mean());
         self.total.push(round.total_time_s);
         self.exchange.push(round.exchange_time_s);
     }
@@ -165,10 +276,23 @@ pub fn render_table(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::broadcast::{flow_tag, flow_tag_segment};
     use crate::netsim::FlowRecord;
 
     fn rec(mb: f64, start: f64, end: f64) -> FlowRecord {
-        FlowRecord { flow: 0, src: 0, dst: 1, payload_mb: mb, start, end, tag: 0 }
+        FlowRecord { flow: 0, src: 0, dst: 1, payload_mb: mb, start, end, tag: flow_tag(0, 0) }
+    }
+
+    fn whole_metrics(transfers: Vec<FlowRecord>, total: f64, slots: usize) -> RoundMetrics {
+        RoundMetrics {
+            transfers,
+            total_time_s: total,
+            exchange_time_s: total,
+            slots,
+            slot_timings: Vec::new(),
+            segments: 1,
+            relay_copies: 0,
+        }
     }
 
     #[test]
@@ -182,13 +306,105 @@ mod tests {
                 SlotTiming { slot: 0, color: 0, start_s: 0.0, end_s: 2.0, copies: 1 },
                 SlotTiming { slot: 1, color: 1, start_s: 2.0, end_s: 5.0, copies: 1 },
             ],
+            segments: 1,
+            relay_copies: 0,
         };
         assert!((m.bandwidth_mbps() - (5.0 + 2.0) / 2.0).abs() < 1e-12);
         assert!((m.avg_transfer_s() - 3.5).abs() < 1e-12);
         assert_eq!(m.transfer_count(), 2);
+        assert_eq!(m.model_copy_count(), 2);
         assert!((m.total_payload_mb() - 20.0).abs() < 1e-12);
         assert!((m.busy_time_s() - 5.0).abs() < 1e-12);
         assert_eq!(m.active_slots(), 2);
+    }
+
+    #[test]
+    fn reassembled_goodput_rolls_segments_into_copies() {
+        // one copy of a 10 MB model as two 5 MB segments on edge 3→4:
+        // segment 0 in [0, 1], segment 1 in [1, 2]
+        let seg = |index: u16, start: f64, end: f64| FlowRecord {
+            flow: index as usize,
+            src: 3,
+            dst: 4,
+            payload_mb: 5.0,
+            start,
+            end,
+            tag: flow_tag_segment(7, 3, index),
+        };
+        let m = RoundMetrics {
+            transfers: vec![seg(0, 0.0, 1.0), seg(1, 1.0, 2.0)],
+            total_time_s: 2.0,
+            exchange_time_s: 2.0,
+            slots: 1,
+            slot_timings: Vec::new(),
+            segments: 2,
+            relay_copies: 0,
+        };
+        let copies = m.model_copies();
+        assert_eq!(copies.len(), 1);
+        assert_eq!(m.model_copy_count(), 1);
+        let c = &copies[0];
+        assert_eq!((c.src, c.dst), (3, 4));
+        assert!((c.payload_mb - 10.0).abs() < 1e-12);
+        assert!((c.start - 0.0).abs() < 1e-12);
+        assert!((c.end - 2.0).abs() < 1e-12);
+        // reassembled goodput: 10 MB over 2 s = 5 MB/s — NOT the 5 MB/s
+        // per-segment mean that would double-count pipelining
+        assert!((m.bandwidth_mbps() - 5.0).abs() < 1e-12);
+        assert!((m.avg_transfer_s() - 2.0).abs() < 1e-12);
+        // per-segment view stays available for pipelining analysis
+        assert!((m.per_segment_bandwidth_mbps() - 5.0).abs() < 1e-12);
+        // rolled-up tags keep owner/sender, drop the segment index
+        assert_eq!(tag_owner(c.tag), 7);
+        assert_eq!(tag_sender(c.tag), 3);
+        assert_eq!(tag_segment(c.tag), 0);
+    }
+
+    #[test]
+    fn rollup_separates_copies_and_retransmissions() {
+        let seg = |src: usize, dst: usize, owner: usize, index: u16, t0: f64| FlowRecord {
+            flow: 0,
+            src,
+            dst,
+            payload_mb: 2.0,
+            start: t0,
+            end: t0 + 1.0,
+            tag: flow_tag_segment(owner, src, index),
+        };
+        let m = RoundMetrics {
+            transfers: vec![
+                // copy A: model 0 over 0→1
+                seg(0, 1, 0, 0, 0.0),
+                seg(0, 1, 0, 1, 1.0),
+                // copy B: model 0 over 1→2 (cut-through relay hop)
+                seg(1, 2, 0, 0, 1.0),
+                seg(1, 2, 0, 1, 2.0),
+                // copy C: retransmission of model 0 over 0→1, later slot
+                seg(0, 1, 0, 0, 5.0),
+                seg(0, 1, 0, 1, 6.0),
+            ],
+            total_time_s: 7.0,
+            exchange_time_s: 7.0,
+            slots: 2,
+            slot_timings: Vec::new(),
+            segments: 2,
+            relay_copies: 1,
+        };
+        let copies = m.model_copies();
+        assert_eq!(copies.len(), 3, "two edges + one retransmission = 3 copies");
+        let on_edge01: Vec<_> = copies.iter().filter(|c| c.src == 0).collect();
+        assert_eq!(on_edge01.len(), 2);
+        assert!((on_edge01[0].end - 2.0).abs() < 1e-12);
+        assert!((on_edge01[1].end - 7.0).abs() < 1e-12);
+        for c in &copies {
+            assert!((c.payload_mb - 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn whole_model_rollup_is_identity() {
+        let m = whole_metrics(vec![rec(10.0, 0.0, 2.0), rec(10.0, 1.0, 4.0)], 4.0, 2);
+        assert_eq!(m.model_copies(), m.transfers);
     }
 
     #[test]
@@ -203,6 +419,8 @@ mod tests {
             exchange_time_s: 3.5,
             slots: 2,
             slot_timings: vec![busy, idle],
+            segments: 1,
+            relay_copies: 0,
         };
         assert_eq!(m.active_slots(), 1);
         assert!((m.busy_time_s() - 2.5).abs() < 1e-12);
@@ -212,13 +430,7 @@ mod tests {
     fn repeated_metrics_average_rounds() {
         let mut rep = RepeatedMetrics::default();
         for total in [10.0, 20.0] {
-            rep.push(&RoundMetrics {
-                transfers: vec![rec(10.0, 0.0, 2.0)],
-                total_time_s: total,
-                exchange_time_s: total,
-                slots: 1,
-                slot_timings: Vec::new(),
-            });
+            rep.push(&whole_metrics(vec![rec(10.0, 0.0, 2.0)], total, 1));
         }
         assert_eq!(rep.total.count(), 2);
         assert!((rep.total.mean() - 15.0).abs() < 1e-12);
@@ -232,20 +444,10 @@ mod tests {
             broadcast: RepeatedMetrics::default(),
             proposed: RepeatedMetrics::default(),
         };
-        cell.broadcast.push(&RoundMetrics {
-            transfers: vec![rec(10.0, 0.0, 10.0)],
-            total_time_s: 10.0,
-            exchange_time_s: 10.0,
-            slots: 0,
-            slot_timings: Vec::new(),
-        });
-        cell.proposed.push(&RoundMetrics {
-            transfers: vec![rec(10.0, 0.0, 2.0)],
-            total_time_s: 3.0,
-            exchange_time_s: 2.0,
-            slots: 23,
-            slot_timings: Vec::new(),
-        });
+        cell.broadcast.push(&whole_metrics(vec![rec(10.0, 0.0, 10.0)], 10.0, 0));
+        let mut proposed = whole_metrics(vec![rec(10.0, 0.0, 2.0)], 3.0, 23);
+        proposed.exchange_time_s = 2.0;
+        cell.proposed.push(&proposed);
         let s = render_table(
             "Table V",
             &["Complete".into()],

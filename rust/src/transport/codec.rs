@@ -1,5 +1,10 @@
 //! Binary message codec for the live transport (no serde offline): a
 //! 1-byte tag, little-endian fixed-width fields, u32 length prefixes.
+//!
+//! Every length prefix is bounds-checked against the bytes actually
+//! present in the frame *before* any allocation, so truncated or
+//! corrupted frames (e.g. a `Report` claiming `u32::MAX` edges) decode
+//! to an error instead of attempting a multi-gigabyte allocation.
 
 use anyhow::{bail, Context, Result};
 
@@ -13,7 +18,8 @@ pub enum Message {
     Report { edges: Vec<(u32, f64)> },
     /// Moderator's published schedule: tree edges, node colors, slot secs.
     Schedule { tree_edges: Vec<(u32, u32)>, colors: Vec<u8>, slot_len_s: f64, first_color: u8 },
-    /// A model payload moving through the gossip round.
+    /// A whole-model payload moving through the gossip round (the
+    /// `segments = 1` transfer plan).
     Model { owner: u32, round: u32, payload: Vec<u8> },
     /// Vote for the next moderator.
     Vote { candidate: u32 },
@@ -21,6 +27,12 @@ pub enum Message {
     ModeratorIs { node: u32 },
     /// Orderly shutdown.
     Shutdown,
+    /// One transfer unit of a segmented model copy: slice `index` of
+    /// `total` (see `dfl::transfer::TransferPlan`). Receivers reassemble
+    /// `total` segments of matching `(owner, round)` into one model; the
+    /// engine's cut-through relays re-frame and forward each segment the
+    /// moment it arrives.
+    ModelSegment { owner: u32, round: u32, index: u16, total: u16, payload: Vec<u8> },
 }
 
 impl Message {
@@ -34,6 +46,7 @@ impl Message {
             Message::Vote { .. } => 6,
             Message::ModeratorIs { .. } => 7,
             Message::Shutdown => 8,
+            Message::ModelSegment { .. } => 9,
         }
     }
 
@@ -68,6 +81,14 @@ impl Message {
                 out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 out.extend_from_slice(payload);
             }
+            Message::ModelSegment { owner, round, index, total, payload } => {
+                out.extend_from_slice(&owner.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&index.to_le_bytes());
+                out.extend_from_slice(&total.to_le_bytes());
+                out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                out.extend_from_slice(payload);
+            }
             Message::Vote { candidate } => out.extend_from_slice(&candidate.to_le_bytes()),
             Message::ModeratorIs { node } => out.extend_from_slice(&node.to_le_bytes()),
             Message::Shutdown => {}
@@ -75,7 +96,9 @@ impl Message {
         out
     }
 
-    /// Decode a frame produced by [`Message::encode`].
+    /// Decode a frame produced by [`Message::encode`]. Malformed frames —
+    /// unknown tags, truncation, trailing bytes, or length prefixes that
+    /// exceed the frame — return an error without large allocations.
     pub fn decode(buf: &[u8]) -> Result<Message> {
         let mut r = Reader { buf, pos: 0 };
         let tag = r.u8()?;
@@ -83,7 +106,7 @@ impl Message {
             1 => Message::Ping { nonce: r.u64()? },
             2 => Message::Pong { nonce: r.u64()? },
             3 => {
-                let n = r.u32()? as usize;
+                let n = r.counted(12, "report edges")?;
                 let mut edges = Vec::with_capacity(n);
                 for _ in 0..n {
                     edges.push((r.u32()?, r.f64()?));
@@ -91,12 +114,12 @@ impl Message {
                 Message::Report { edges }
             }
             4 => {
-                let ne = r.u32()? as usize;
+                let ne = r.counted(8, "schedule tree edges")?;
                 let mut tree_edges = Vec::with_capacity(ne);
                 for _ in 0..ne {
                     tree_edges.push((r.u32()?, r.u32()?));
                 }
-                let nc = r.u32()? as usize;
+                let nc = r.counted(1, "schedule colors")?;
                 let colors = r.bytes(nc)?.to_vec();
                 let slot_len_s = r.f64()?;
                 let first_color = r.u8()?;
@@ -105,12 +128,24 @@ impl Message {
             5 => {
                 let owner = r.u32()?;
                 let round = r.u32()?;
-                let len = r.u32()? as usize;
+                let len = r.counted(1, "model payload")?;
                 Message::Model { owner, round, payload: r.bytes(len)?.to_vec() }
             }
             6 => Message::Vote { candidate: r.u32()? },
             7 => Message::ModeratorIs { node: r.u32()? },
             8 => Message::Shutdown,
+            9 => {
+                let owner = r.u32()?;
+                let round = r.u32()?;
+                let index = r.u16()?;
+                let total = r.u16()?;
+                if total == 0 || index >= total {
+                    bail!("model segment {index}/{total} out of range");
+                }
+                let len = r.counted(1, "model segment payload")?;
+                let payload = r.bytes(len)?.to_vec();
+                Message::ModelSegment { owner, round, index, total, payload }
+            }
             t => bail!("unknown message tag {t}"),
         };
         if r.pos != buf.len() {
@@ -126,14 +161,37 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Read a u32 element count whose elements occupy at least
+    /// `min_elem_bytes` each, rejecting counts the remaining frame cannot
+    /// possibly hold — the guard that keeps hostile length prefixes from
+    /// turning into huge `Vec` allocations.
+    fn counted(&mut self, min_elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(min_elem_bytes).context("length overflow")?;
+        if need > self.remaining() {
+            bail!(
+                "{what}: length prefix {n} needs {need} bytes but only {} remain",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        let end = self.pos + n;
+        let end = self.pos.checked_add(n).context("length overflow")?;
         let s = self.buf.get(self.pos..end).context("truncated message")?;
         self.pos = end;
         Ok(s)
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.bytes(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
     }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
@@ -149,6 +207,7 @@ impl<'a> Reader<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
 
     fn roundtrip(msg: Message) {
         let enc = msg.encode();
@@ -173,6 +232,33 @@ mod tests {
         roundtrip(Message::Vote { candidate: 4 });
         roundtrip(Message::ModeratorIs { node: 9 });
         roundtrip(Message::Shutdown);
+        let payload = vec![9; 64];
+        roundtrip(Message::ModelSegment { owner: 2, round: 7, index: 0, total: 4, payload });
+        roundtrip(Message::ModelSegment { owner: 0, round: 0, index: 3, total: 4, payload: vec![] });
+    }
+
+    #[test]
+    fn model_segment_roundtrips_over_random_plans() {
+        // property: any (owner, round, index < total, payload) roundtrips
+        check("model segment roundtrip", 128, |rng| {
+            let total = 1 + rng.gen_range(16) as u16;
+            let index = rng.gen_range(total as usize) as u16;
+            let payload: Vec<u8> =
+                (0..rng.gen_range(2048)).map(|_| rng.gen_range(256) as u8).collect();
+            let msg = Message::ModelSegment {
+                owner: rng.gen_range(1024) as u32,
+                round: rng.gen_range(1 << 20) as u32,
+                index,
+                total,
+                payload,
+            };
+            let dec = Message::decode(&msg.encode())
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if dec != msg {
+                return Err("segment frame did not roundtrip".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -187,5 +273,77 @@ mod tests {
         let mut extended = enc.clone();
         extended.push(0);
         assert!(Message::decode(&extended).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_length_prefixes_without_allocating() {
+        // a Report frame claiming u32::MAX edges in a 5-byte body
+        let mut frame = vec![3u8];
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Message::decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("length prefix"), "{err}");
+
+        // a Model frame whose payload length exceeds the frame
+        let mut frame = vec![5u8];
+        frame.extend_from_slice(&1u32.to_le_bytes()); // owner
+        frame.extend_from_slice(&0u32.to_le_bytes()); // round
+        frame.extend_from_slice(&(1 << 30u32).to_le_bytes()); // bogus len
+        assert!(Message::decode(&frame).is_err());
+
+        // Schedule with a huge tree-edge count
+        let mut frame = vec![4u8];
+        frame.extend_from_slice(&0x1000_0000u32.to_le_bytes());
+        assert!(Message::decode(&frame).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_segment_index() {
+        // index >= total and total == 0 are both protocol violations
+        for (index, total) in [(4u16, 4u16), (0, 0)] {
+            let mut frame = vec![9u8];
+            frame.extend_from_slice(&1u32.to_le_bytes());
+            frame.extend_from_slice(&0u32.to_le_bytes());
+            frame.extend_from_slice(&index.to_le_bytes());
+            frame.extend_from_slice(&total.to_le_bytes());
+            frame.extend_from_slice(&0u32.to_le_bytes());
+            assert!(Message::decode(&frame).is_err(), "index {index}/{total} must be rejected");
+        }
+    }
+
+    #[test]
+    fn truncations_of_any_valid_frame_never_roundtrip() {
+        // property: every strict prefix of a valid frame is rejected, and
+        // decode never panics on it (use a payload-bearing variant so the
+        // length prefix lands mid-frame)
+        check("prefix truncation rejected", 64, |rng| {
+            let payload: Vec<u8> = (0..1 + rng.gen_range(128)).map(|_| 7u8).collect();
+            let msg = Message::ModelSegment {
+                owner: rng.gen_range(64) as u32,
+                round: 1,
+                index: 0,
+                total: 2,
+                payload,
+            };
+            let enc = msg.encode();
+            let cut = rng.gen_range(enc.len());
+            if Message::decode(&enc[..cut]).is_ok() {
+                return Err(format!("truncated frame of {cut}/{} bytes decoded", enc.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_byte_corruption_never_panics() {
+        // property: flipping bytes anywhere in a valid frame either decodes
+        // to some message or errors — never panics, never huge-allocates
+        check("corruption is non-fatal", 128, |rng| {
+            let msg = Message::Report { edges: vec![(1, 2.0), (2, 3.0), (3, 4.0)] };
+            let mut enc = msg.encode();
+            let idx = rng.gen_range(enc.len());
+            enc[idx] = rng.gen_range(256) as u8;
+            let _ = Message::decode(&enc); // must return, Ok or Err
+            Ok(())
+        });
     }
 }

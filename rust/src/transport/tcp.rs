@@ -194,6 +194,31 @@ mod tests {
     }
 
     #[test]
+    fn tcp_model_segments_frame_and_reassemble_in_order() {
+        // the segment-granular transfer plane over real sockets: four
+        // shaped ModelSegment frames arrive intact and in send order
+        let mut eps = mesh(2, 1000.0).unwrap();
+        let mut b = eps.remove(1);
+        let mut a = eps.remove(0);
+        let total = 4u16;
+        for index in 0..total {
+            let payload = vec![index as u8; 32 * 1024];
+            a.send(1, Message::ModelSegment { owner: 0, round: 3, index, total, payload })
+                .unwrap();
+        }
+        for want in 0..total {
+            let (_, msg) = b.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            match msg {
+                Message::ModelSegment { owner: 0, round: 3, index, total: 4, payload } => {
+                    assert_eq!(index, want, "segments must keep FIFO order");
+                    assert!(payload.iter().all(|&x| x == want as u8));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn tcp_ping_pong_rtt_measurable() {
         let mut eps = mesh(2, 1000.0).unwrap();
         let mut b = eps.remove(1);

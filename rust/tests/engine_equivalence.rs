@@ -10,7 +10,13 @@
 //! 4. multi-round pipelining strictly beats sequential execution on
 //!    ring, star and balanced-tree topologies at n ≥ 10;
 //! 5. `LiveDriver` runs the same protocol over a real in-memory
-//!    transport mesh.
+//!    transport mesh;
+//! 6. the segment-granular transfer plane anchors to the whole-model
+//!    engine: a `segments = 1` plan is **bit-identical** to the legacy
+//!    path across all paper topologies, jitter, and failure injection,
+//!    while `segments ≥ 4` cut-through forwarding strictly beats
+//!    whole-model transfers for large models on deep trees (chain,
+//!    balanced tree) at n ≥ 10.
 
 use mosgu::coloring::bfs_coloring;
 use mosgu::config::ExperimentConfig;
@@ -21,6 +27,7 @@ use mosgu::coordinator::example;
 use mosgu::coordinator::gossip::{run_logical_round, GossipState, Send};
 use mosgu::coordinator::schedule::{build_schedule, Schedule};
 use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::transfer::TransferPlan;
 use mosgu::graph::topology::TopologyKind;
 use mosgu::graph::Graph;
 use mosgu::metrics::RoundMetrics;
@@ -146,6 +153,83 @@ fn engine_matches_legacy_slot_loop_with_jitter_and_failures() {
         let engine = session.run_mosgu_round(14.0, 3, failure_prob);
         assert_metrics_match_legacy(&engine, &legacy);
     }
+}
+
+#[test]
+fn segments_one_plan_is_bit_identical_to_legacy_on_all_topologies() {
+    // the segment plane's compatibility anchor: an explicit one-segment
+    // TransferPlan must replay the pre-segmentation engine bit for bit on
+    // every paper topology
+    for kind in TopologyKind::ALL {
+        let session = GossipSession::new(&quiet_cfg(kind)).unwrap();
+        for (model_mb, seed) in [(11.6, 1u64), (48.0, 7u64)] {
+            let legacy = legacy_mosgu_round(&session, model_mb, seed, 0.0);
+            let planned =
+                session.run_mosgu_round_planned(TransferPlan::segmented(model_mb, 1), seed, 0.0);
+            assert_metrics_match_legacy(&planned, &legacy);
+            assert_eq!(planned.segments, 1);
+            assert_eq!(planned.relay_copies, 0, "no cut-through under whole-model plans");
+        }
+    }
+}
+
+#[test]
+fn segments_one_plan_is_bit_identical_under_jitter_and_failures() {
+    // jittered testbed + failure injection through the segment-plan API:
+    // rng draw sequence and retransmission schedule must replay exactly
+    let cfg = ExperimentConfig::default(); // latency_jitter = 0.08
+    let session = GossipSession::new(&cfg).unwrap();
+    for failure_prob in [0.0, 0.15] {
+        let legacy = legacy_mosgu_round(&session, 14.0, 3, failure_prob);
+        let planned =
+            session.run_mosgu_round_planned(TransferPlan::segmented(14.0, 1), 3, failure_prob);
+        assert_metrics_match_legacy(&planned, &legacy);
+    }
+}
+
+#[test]
+fn segmented_cut_through_beats_whole_model_on_deep_trees() {
+    // the refactor's payoff (and this PR's acceptance bar): pipelined
+    // dissemination of large models (b2 = 36.8 MB, b3 = 48 MB) on chain
+    // and balanced-tree underlays at n >= 10 is strictly faster with
+    // segments >= 4 than with whole-model transfers
+    for kind in [TopologyKind::Chain, TopologyKind::BalancedTree] {
+        for n in [10usize, 12] {
+            let cfg = ExperimentConfig { nodes: n, ..quiet_cfg(kind) };
+            let session = GossipSession::new(&cfg).unwrap();
+            for model_mb in [36.8, 48.0] {
+                let whole =
+                    session.run_mosgu_round_planned(TransferPlan::whole(model_mb), 1, 0.0);
+                let seg = session.run_mosgu_round_planned(
+                    TransferPlan::segmented(model_mb, 4),
+                    1,
+                    0.0,
+                );
+                assert!(
+                    seg.total_time_s < whole.total_time_s,
+                    "{kind:?} n={n} model={model_mb}: segmented {} vs whole {}",
+                    seg.total_time_s,
+                    whole.total_time_s
+                );
+                // same bytes delivered: every model crosses every edge once
+                assert_eq!(seg.model_copy_count(), whole.transfer_count());
+                assert_eq!(seg.transfer_count(), 4 * whole.transfer_count());
+            }
+        }
+    }
+}
+
+#[test]
+fn segmented_rounds_disseminate_completely_under_failures() {
+    let session = GossipSession::new(&quiet_cfg(TopologyKind::Chain)).unwrap();
+    let clean = session.run_mosgu_round_planned(TransferPlan::segmented(14.0, 4), 2, 0.0);
+    let lossy = session.run_mosgu_round_planned(TransferPlan::segmented(14.0, 4), 2, 0.15);
+    assert!(lossy.slots >= clean.slots, "failures must not shorten the round");
+    assert!(lossy.transfer_count() >= clean.transfer_count());
+    // deterministic replay with the same seed
+    let again = session.run_mosgu_round_planned(TransferPlan::segmented(14.0, 4), 2, 0.15);
+    assert_eq!(lossy.total_time_s.to_bits(), again.total_time_s.to_bits());
+    assert_eq!(lossy.transfers, again.transfers);
 }
 
 #[test]
