@@ -8,7 +8,12 @@
 //! ```bash
 //! cargo run --release --example topology_sweep [-- --models v3s,b0,b3]
 //! cargo run --release --example topology_sweep -- --segments 1,4,8
+//! cargo run --release --example topology_sweep -- --drift 0.3
 //! ```
+//!
+//! `--drift A` adds the dynamic-plane dimension: pipelined rounds over
+//! drifting links (amplitude `A`), with the frozen session-start plan
+//! vs online probing + re-planning (`--probe-every`, default 1).
 
 use mosgu::bench::tables::{all_models, run_grid};
 use mosgu::config::ExperimentConfig;
@@ -49,6 +54,19 @@ fn main() -> anyhow::Result<()> {
             })
             .collect::<Result<Vec<_>, _>>()?,
         None => Vec::new(),
+    };
+
+    let drift: f64 = match flag_value("--drift")? {
+        Some(a) => {
+            let a: f64 = a.parse().map_err(|e| anyhow::anyhow!("bad --drift {a}: {e}"))?;
+            anyhow::ensure!((0.0..1.0).contains(&a), "--drift {a} out of [0,1)");
+            a
+        }
+        None => 0.0,
+    };
+    let probe_every: u64 = match flag_value("--probe-every")? {
+        Some(r) => r.parse().map_err(|e| anyhow::anyhow!("bad --probe-every {r}: {e}"))?,
+        None => 1,
     };
 
     let cfg = ExperimentConfig { repeats: 3, ..Default::default() };
@@ -120,6 +138,44 @@ fn main() -> anyhow::Result<()> {
                 }
                 row.push_str(&format!("{:>9.2}x", whole / best));
                 println!("{row}");
+            }
+        }
+    }
+
+    // dynamic-plane dimension: pipelined rounds over drifting links,
+    // frozen session-start plan vs online probing + re-planning
+    if drift > 0.0 {
+        println!("\n== drift sweep (amplitude {drift}, total pipeline time for 4 rounds, s) ==");
+        println!(
+            "{:<17}{:>6}{:>10}{:>10}{:>10}{:>9}",
+            "topology", "model", "frozen", "adaptive", "gain", "replans"
+        );
+        for kind in TopologyKind::ALL {
+            let frozen_cfg = ExperimentConfig {
+                topology: kind,
+                drift,
+                probe_every: 0,
+                ..cfg.clone()
+            };
+            let adaptive_cfg = ExperimentConfig {
+                probe_every,
+                replan_threshold: 0.15,
+                ..frozen_cfg.clone()
+            };
+            let frozen_session = GossipSession::new(&frozen_cfg)?;
+            let adaptive_session = GossipSession::new(&adaptive_cfg)?;
+            for spec in &models {
+                let frozen = frozen_session.run_adaptive_rounds(spec.capacity_mb, 4, cfg.seed);
+                let adaptive = adaptive_session.run_adaptive_rounds(spec.capacity_mb, 4, cfg.seed);
+                println!(
+                    "{:<17}{:>6}{:>10.2}{:>10.2}{:>9.2}x{:>9}",
+                    kind.name(),
+                    spec.code,
+                    frozen.total_time_s,
+                    adaptive.total_time_s,
+                    frozen.total_time_s / adaptive.total_time_s,
+                    adaptive.replans.len()
+                );
             }
         }
     }

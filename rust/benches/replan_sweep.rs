@@ -1,0 +1,118 @@
+//! Stale-tree baseline vs online re-planning when a backbone link
+//! degrades 4× mid-session (latency ×4, capacity ÷4): steady-state
+//! round span over the `LinkDriftScenario` per-edge mesh, across chain
+//! and balanced-tree shapes and the Table II model sizes. Emits one
+//! `JSON {...}` line per cell for the bench trajectory; CI uploads them
+//! as the `replan-sweep` artifact and fails if re-planning stops beating
+//! the frozen tree by ≥ 1.5× on the acceptance cells.
+//!
+//! ```bash
+//! cargo bench --bench replan_sweep             # full grid
+//! cargo bench --bench replan_sweep -- --smoke  # CI subset
+//! ```
+
+use mosgu::bench::section;
+use mosgu::coordinator::probe::{mean_tail_span_s, LinkDriftScenario, ReplanPolicy};
+use mosgu::dfl::models::by_code;
+use mosgu::graph::topology;
+use mosgu::graph::Graph;
+
+const ROUNDS: u64 = 8;
+const TAIL: usize = 3;
+
+fn shape(kind: &str, n: usize) -> Graph {
+    match kind {
+        "chain" => topology::chain(n),
+        "balanced-tree" => topology::balanced_tree(n),
+        other => panic!("unknown shape {other}"),
+    }
+}
+
+/// A mid-tree edge to degrade: chain midpoint, or the first depth-1
+/// heap edge for the balanced tree.
+fn degraded_edge(kind: &str, n: usize) -> (usize, usize) {
+    match kind {
+        "chain" => (n / 2 - 1, n / 2),
+        _ => (1, 3),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let models: Vec<_> = if smoke {
+        ["v3s", "b3"].iter().map(|c| by_code(c).unwrap()).collect()
+    } else {
+        ["v3s", "v3l", "b2", "b3"].iter().map(|c| by_code(c).unwrap()).collect()
+    };
+    let node_counts: &[usize] = if smoke { &[10] } else { &[10, 16] };
+    let policy = ReplanPolicy { probe_every: 1, replan_threshold: 0.5, alpha: 1.0 };
+
+    section(&format!(
+        "replan sweep: frozen tree vs online re-planning under a 4x mid-session \
+         link degradation ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:<14} {:>4} {:>6} {:>12} {:>12} {:>8} {:>8}",
+        "shape", "n", "model", "frozen_s", "adaptive_s", "gain", "replans"
+    );
+    let mut ok = true;
+    for kind in ["chain", "balanced-tree"] {
+        for &n in node_counts {
+            let sc = LinkDriftScenario::over_tree(
+                &shape(kind, n),
+                10.0,
+                25.0,
+                degraded_edge(kind, n),
+                20.0,
+                4.0,
+                20.0,
+            );
+            for spec in &models {
+                let frozen = sc.run_frozen(spec.capacity_mb, ROUNDS, 1);
+                let adaptive = sc.run_adaptive(spec.capacity_mb, ROUNDS, 1, policy);
+                let f = mean_tail_span_s(&frozen, TAIL);
+                let a = mean_tail_span_s(&adaptive, TAIL);
+                let gain = f / a;
+                println!(
+                    "{:<14} {:>4} {:>6} {:>12.3} {:>12.3} {:>7.3}x {:>8}",
+                    kind,
+                    n,
+                    spec.code,
+                    f,
+                    a,
+                    gain,
+                    adaptive.replans.len()
+                );
+                println!(
+                    "JSON {{\"bench\":\"replan_sweep\",\"shape\":\"{}\",\"n\":{},\
+                     \"model\":\"{}\",\"model_mb\":{},\"degrade_factor\":4.0,\
+                     \"frozen_tail_span_s\":{:.6},\"adaptive_tail_span_s\":{:.6},\
+                     \"gain\":{:.4},\"replans\":{},\"tree_changed\":{},\
+                     \"frozen_total_s\":{:.6},\"adaptive_total_s\":{:.6}}}",
+                    kind,
+                    n,
+                    spec.code,
+                    spec.capacity_mb,
+                    f,
+                    a,
+                    gain,
+                    adaptive.replans.len(),
+                    adaptive.replans.iter().any(|e| e.tree_changed),
+                    frozen.total_time_s,
+                    adaptive.total_time_s,
+                );
+                // acceptance bar on the n=10 cells: re-planning must beat
+                // the stale tree by >= 1.5x in steady state
+                if n == 10 && gain < 1.5 {
+                    ok = false;
+                    println!("  ^ FAIL: gain {gain:.2}x < 1.5x");
+                }
+            }
+        }
+    }
+    println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -52,6 +52,20 @@ pub struct ExperimentConfig {
     /// count is derived per model as `ceil(model_mb / segment_mb)`.
     /// Mutually exclusive with `segments > 1`. CLI: `--segment-mb`.
     pub segment_mb: f64,
+    /// Link-quality drift amplitude in [0, 1) (0 = static links, the
+    /// legacy behavior). Every `drift_interval_s` of simulated time each
+    /// channel draws a factor `q ∈ [1 − drift, 1 + drift]` and runs at
+    /// `capacity · q` with latency `latency / q`. CLI: `--drift`.
+    pub drift: f64,
+    /// Simulated seconds between drift re-draws. CLI: `--drift-interval-s`.
+    pub drift_interval_s: f64,
+    /// Rounds between moderator ping sweeps in adaptive runs (0 = no
+    /// online probing / re-planning). CLI: `--probe-every`.
+    pub probe_every: u64,
+    /// Relative smoothed-ping deviation from the planning baseline that
+    /// triggers a mid-session replan (0 = replan after every sweep).
+    /// CLI: `--replan-threshold`.
+    pub replan_threshold: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -78,6 +92,10 @@ impl Default for ExperimentConfig {
             protocol_overhead: 0.04,
             segments: 1,
             segment_mb: 0.0,
+            drift: 0.0,
+            drift_interval_s: 20.0,
+            probe_every: 0,
+            replan_threshold: 0.25,
         }
     }
 }
@@ -154,6 +172,16 @@ impl ExperimentConfig {
             }
             "segments" => self.segments = value.as_int().ok_or_else(|| bad("integer"))? as usize,
             "segment_mb" => self.segment_mb = value.as_float().ok_or_else(|| bad("float"))?,
+            "drift" => self.drift = value.as_float().ok_or_else(|| bad("float"))?,
+            "drift_interval_s" => {
+                self.drift_interval_s = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "probe_every" => {
+                self.probe_every = value.as_int().ok_or_else(|| bad("integer"))? as u64
+            }
+            "replan_threshold" => {
+                self.replan_threshold = value.as_float().ok_or_else(|| bad("float"))?
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -200,6 +228,15 @@ impl ExperimentConfig {
         }
         if self.segments > 1 && self.segment_mb > 0.0 {
             return reject("segment_mb", "set either segments or segment_mb, not both");
+        }
+        if !(0.0..1.0).contains(&self.drift) {
+            return reject("drift", "must be in [0,1)");
+        }
+        if self.drift_interval_s <= 0.0 {
+            return reject("drift_interval_s", "must be positive");
+        }
+        if self.replan_threshold < 0.0 || !self.replan_threshold.is_finite() {
+            return reject("replan_threshold", "must be a finite value >= 0");
         }
         Ok(())
     }
@@ -321,6 +358,26 @@ backbone_latency_ms = 8.5
             "tiny segment_mb must fail validation, not panic in TransferPlan"
         );
         assert!(ExperimentConfig::from_toml_str("segments = 4\nsegment_mb = 8.0").is_err());
+    }
+
+    #[test]
+    fn drift_and_replan_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "drift = 0.2\ndrift_interval_s = 5.0\nprobe_every = 2\nreplan_threshold = 0.4",
+        )
+        .unwrap();
+        assert_eq!(cfg.drift, 0.2);
+        assert_eq!(cfg.drift_interval_s, 5.0);
+        assert_eq!(cfg.probe_every, 2);
+        assert_eq!(cfg.replan_threshold, 0.4);
+        // defaults keep the static plane
+        let d = ExperimentConfig::default();
+        assert_eq!(d.drift, 0.0);
+        assert_eq!(d.probe_every, 0);
+        assert!(ExperimentConfig::from_toml_str("drift = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("drift = -0.1").is_err());
+        assert!(ExperimentConfig::from_toml_str("drift_interval_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("replan_threshold = -1.0").is_err());
     }
 
     #[test]

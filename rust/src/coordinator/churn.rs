@@ -19,6 +19,7 @@ use crate::dfl::transfer::TransferPlan;
 use crate::graph::{Graph, NodeId};
 use crate::metrics::RoundMetrics;
 use crate::netsim::testbed::Testbed;
+use crate::netsim::DriftProcess;
 use anyhow::Result;
 
 /// A scripted membership change applied before round `round`.
@@ -102,9 +103,11 @@ pub fn run_churn_experiment(
         debug_assert!(!moderator.needs_recompute());
         let (b, map) = bundle.as_ref().unwrap();
 
-        // run a timed round over the (relabeled) tree; routes use original ids
+        // run a timed round over the (relabeled) tree; routes use original
+        // ids, links drift per the config (amplitude 0 = static legacy)
+        let drift = DriftProcess { amplitude: cfg.drift, interval_s: cfg.drift_interval_s };
         let metrics =
-            run_round_on_tree(&testbed, &b.tree, &b.schedule, map, plan, cfg.seed ^ round)?;
+            run_round_on_tree(&testbed, &b.tree, &b.schedule, map, plan, cfg.seed ^ round, drift)?;
         reports.push(ChurnRoundReport { round, active: map.clone(), recomputed, metrics });
     }
     Ok(reports)
@@ -117,6 +120,7 @@ pub fn run_churn_experiment(
 /// Like every engine round (and the legacy session path), an incomplete
 /// round within the slot budget is a protocol bug and panics rather
 /// than returning `Err`.
+#[allow(clippy::too_many_arguments)]
 fn run_round_on_tree(
     testbed: &Testbed,
     tree: &Graph,
@@ -124,8 +128,9 @@ fn run_round_on_tree(
     map: &[NodeId],
     plan: TransferPlan,
     seed: u64,
+    drift: DriftProcess,
 ) -> Result<RoundMetrics> {
-    let mut driver = SimDriver::with_map(testbed, seed, map.to_vec());
+    let mut driver = SimDriver::with_map_drift(testbed, seed, map.to_vec(), drift);
     let mut engine = RoundEngine::new(&mut driver, schedule);
     let mut state = GossipState::new(tree.clone(), 0);
     let n = tree.node_count();
@@ -207,6 +212,26 @@ mod tests {
             crate::coordinator::session::GossipSession::new(&cfg()).unwrap();
         let b = session.run_broadcast_round(14.0, 1);
         assert!(reports[1].metrics.bandwidth_mbps() > 2.0 * b.bandwidth_mbps());
+    }
+
+    #[test]
+    fn churn_rounds_survive_link_drift() {
+        // drifting links perturb timing but never correctness: every
+        // round still moves the full copy set, deterministically per seed
+        let cfg = ExperimentConfig { drift: 0.3, drift_interval_s: 0.5, ..cfg() };
+        let events = [ChurnEvent::Leave { round: 1, node: 3 }];
+        let a = run_churn_experiment(&cfg, 5.0, 2, &events).unwrap();
+        assert_eq!(a[0].metrics.transfer_count(), 90);
+        assert_eq!(a[1].metrics.transfer_count(), 72);
+        let b = run_churn_experiment(&cfg, 5.0, 2, &events).unwrap();
+        assert_eq!(
+            a[1].metrics.total_time_s.to_bits(),
+            b[1].metrics.total_time_s.to_bits(),
+            "drift must replay deterministically"
+        );
+        // static config stays the legacy trajectory
+        let static_runs = run_churn_experiment(&self::cfg(), 5.0, 1, &[]).unwrap();
+        assert_eq!(static_runs[0].metrics.transfer_count(), 90);
     }
 
     #[test]

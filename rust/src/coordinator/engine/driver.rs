@@ -27,7 +27,7 @@ use crate::coordinator::broadcast::flow_tag_segment;
 use crate::coordinator::queue::{ModelKey, SegmentKey};
 use crate::graph::NodeId;
 use crate::netsim::testbed::Testbed;
-use crate::netsim::{FlowRecord, NetSim};
+use crate::netsim::{DriftProcess, FlowRecord, NetSim};
 use crate::transport::{Message, Transport};
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -62,6 +62,17 @@ pub trait Driver {
 
     /// Drain the low-level transfer records accumulated so far.
     fn take_transfers(&mut self) -> Vec<FlowRecord>;
+
+    /// Measure the substrate's **current** round-trip ping between two
+    /// nodes in milliseconds, for a probe of `probe_bytes` — the paper's
+    /// §III-A edge cost, re-observed online by `coordinator::probe`.
+    /// Probes are passive reads of link state: no flow is launched and
+    /// the clock does not advance, so probing never perturbs the byte
+    /// trajectory. Substrates without measurable link state return
+    /// `None` (the prober then keeps its last estimate).
+    fn probe_ping_ms(&self, _from: NodeId, _to: NodeId, _probe_bytes: u64) -> Option<f64> {
+        None
+    }
 }
 
 /// Driver over the discrete-event fluid-flow simulator.
@@ -92,8 +103,36 @@ impl<'a> SimDriver<'a> {
         SimDriver { testbed, sim: testbed.netsim(seed), map }
     }
 
+    /// As [`SimDriver::new`] with seeded link-quality drift installed on
+    /// the simulator (`drift.amplitude == 0` is bit-identical to
+    /// [`SimDriver::new`]).
+    pub fn with_drift(testbed: &'a Testbed, seed: u64, drift: DriftProcess) -> Self {
+        let map = (0..testbed.node_count()).collect();
+        Self::with_map_drift(testbed, seed, map, drift)
+    }
+
+    /// Explicit node map **and** link drift (churn under drifting links).
+    pub fn with_map_drift(
+        testbed: &'a Testbed,
+        seed: u64,
+        map: Vec<NodeId>,
+        drift: DriftProcess,
+    ) -> Self {
+        assert!(
+            map.iter().all(|&d| d < testbed.node_count()),
+            "map addresses a device outside the testbed"
+        );
+        SimDriver { testbed, sim: testbed.netsim_with_drift(seed, drift), map }
+    }
+
     pub fn sim(&self) -> &NetSim {
         &self.sim
+    }
+
+    /// Direct access for scripting [`crate::netsim::ChannelShift`]s onto
+    /// the simulator (tests and benches of the adaptive plane).
+    pub fn sim_mut(&mut self) -> &mut NetSim {
+        &mut self.sim
     }
 }
 
@@ -123,6 +162,100 @@ impl Driver for SimDriver<'_> {
 
     fn take_transfers(&mut self) -> Vec<FlowRecord> {
         self.sim.take_completed()
+    }
+
+    fn probe_ping_ms(&self, from: NodeId, to: NodeId, probe_bytes: u64) -> Option<f64> {
+        let (src, dst) = (self.map[from], self.map[to]);
+        if src == dst {
+            return None;
+        }
+        Some(self.sim.route_ping_ms(&self.testbed.route(src, dst), probe_bytes))
+    }
+}
+
+/// Driver over a synthetic **per-edge** channel mesh: every directed
+/// overlay edge (u, v) gets its own simulator channel (one-way latency =
+/// half the edge's RTT cost, uniform capacity), so link quality can be
+/// scripted or drifted per overlay edge — the substrate of the
+/// re-planning scenarios in `coordinator::probe`. Routes are single
+/// channels and node ids map to themselves.
+pub struct MeshSimDriver {
+    sim: NetSim,
+    /// (src, dst) → its dedicated channel
+    route_of: HashMap<(NodeId, NodeId), crate::netsim::ChannelId>,
+}
+
+impl MeshSimDriver {
+    /// Build from an overlay cost graph whose edge weights are RTT pings
+    /// in milliseconds. The loss model is disabled (per-edge channels
+    /// never share a bottleneck with foreign traffic).
+    pub fn from_costs(costs: &crate::graph::Graph, capacity_mbps: f64, seed: u64) -> Self {
+        assert!(capacity_mbps > 0.0);
+        let mut channels = Vec::new();
+        let mut route_of = HashMap::new();
+        for e in costs.edges() {
+            for (a, b) in [(e.u, e.v), (e.v, e.u)] {
+                route_of.insert((a, b), channels.len());
+                channels.push(crate::netsim::Channel {
+                    capacity_mbps,
+                    latency_s: e.weight / 2.0 / 1e3,
+                    label: format!("{a}->{b}"),
+                });
+            }
+        }
+        let loss = crate::netsim::LossModel { gain: 0.0, size_scale_mb: 1.0 };
+        MeshSimDriver { sim: NetSim::new(channels, loss, 0.0, seed), route_of }
+    }
+
+    /// The channel carrying traffic from `u` to `v`, if the overlay has
+    /// that edge.
+    pub fn channel_of(&self, u: NodeId, v: NodeId) -> Option<crate::netsim::ChannelId> {
+        self.route_of.get(&(u, v)).copied()
+    }
+
+    pub fn sim(&self) -> &NetSim {
+        &self.sim
+    }
+
+    /// Direct simulator access for scripting shifts/drift.
+    pub fn sim_mut(&mut self) -> &mut NetSim {
+        &mut self.sim
+    }
+}
+
+impl Driver for MeshSimDriver {
+    fn launch(&mut self, from: NodeId, to: NodeId, seg: SegmentKey, payload_mb: f64) -> CopyToken {
+        let c = *self
+            .route_of
+            .get(&(from, to))
+            .unwrap_or_else(|| panic!("mesh has no edge {from}->{to}"));
+        self.sim.start_flow(
+            from,
+            to,
+            vec![c],
+            payload_mb,
+            flow_tag_segment(seg.model.owner, from, seg.index),
+        ) as CopyToken
+    }
+
+    fn wait_any(&mut self) -> Vec<Completion> {
+        self.sim
+            .run_next_completion()
+            .into_iter()
+            .map(|r| Completion { token: r.flow as CopyToken, at_s: r.end })
+            .collect()
+    }
+
+    fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    fn take_transfers(&mut self) -> Vec<FlowRecord> {
+        self.sim.take_completed()
+    }
+
+    fn probe_ping_ms(&self, from: NodeId, to: NodeId, probe_bytes: u64) -> Option<f64> {
+        self.route_of.get(&(from, to)).map(|&c| self.sim.route_ping_ms(&[c], probe_bytes))
     }
 }
 
@@ -442,6 +575,72 @@ mod tests {
         assert_eq!(crate::coordinator::broadcast::tag_owner(rec.tag), 3);
         assert_eq!(crate::coordinator::broadcast::tag_segment(rec.tag), 2);
         assert!((rec.payload_mb - 3.5).abs() < 1e-12, "loss model sees segment payloads");
+    }
+
+    #[test]
+    fn sim_driver_probe_matches_testbed_ping_until_links_shift() {
+        let tb = testbed();
+        let mut d = SimDriver::new(&tb, 1);
+        let before = d.probe_ping_ms(0, 1, 56).unwrap();
+        assert!((before - tb.ping_ms(0, 1)).abs() < 1e-9);
+        assert!(d.probe_ping_ms(3, 3, 56).is_none(), "self-probe is meaningless");
+        // degrade every channel on the 0->1 route 4x: probe sees it
+        let route = tb.route(0, 1);
+        let shifts: Vec<crate::netsim::ChannelShift> = route
+            .iter()
+            .map(|&c| {
+                let ch = d.sim().channel(c);
+                crate::netsim::ChannelShift {
+                    at_s: 0.0,
+                    channel: c,
+                    capacity_mbps: ch.capacity_mbps / 4.0,
+                    latency_s: ch.latency_s * 4.0,
+                }
+            })
+            .collect();
+        d.sim_mut().schedule_shifts(shifts);
+        // shifts apply at the next event; drive one through
+        d.launch(0, 1, whole(0), 0.5);
+        d.wait_any();
+        let after = d.probe_ping_ms(0, 1, 56).unwrap();
+        assert!(after > 3.0 * before, "degradation invisible to probe: {before} -> {after}");
+    }
+
+    #[test]
+    fn logical_driver_has_no_probe() {
+        let d = LogicalDriver::new();
+        assert!(d.probe_ping_ms(0, 1, 56).is_none());
+    }
+
+    #[test]
+    fn mesh_driver_moves_copies_over_dedicated_channels() {
+        // triangle overlay, 10 ms RTT edges, 10 MB/s
+        let mut costs = crate::graph::Graph::new(3);
+        costs.add_edge(0, 1, 10.0);
+        costs.add_edge(1, 2, 10.0);
+        costs.add_edge(0, 2, 30.0);
+        let mut d = MeshSimDriver::from_costs(&costs, 10.0, 1);
+        assert!((d.probe_ping_ms(0, 1, 56).unwrap() - 10.0).abs() < 0.1);
+        assert!((d.probe_ping_ms(2, 0, 56).unwrap() - 30.0).abs() < 0.1);
+        assert!(d.probe_ping_ms(0, 0, 56).is_none());
+        let t = d.launch(0, 1, whole(0), 5.0);
+        let done = d.wait_any();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].token, t);
+        // 5 MB at 10 MB/s + 5 ms one-way propagation
+        assert!((done[0].at_s - 0.505).abs() < 1e-9, "at {}", done[0].at_s);
+        let rec = &d.take_transfers()[0];
+        assert_eq!((rec.src, rec.dst), (0, 1));
+        // independent edges do not contend
+        d.launch(0, 1, whole(0), 5.0);
+        d.launch(1, 2, whole(1), 5.0);
+        let mut seen = 0;
+        while seen < 2 {
+            seen += d.wait_any().len();
+        }
+        for rec in d.take_transfers() {
+            assert!((rec.duration() - 0.505).abs() < 1e-9, "{rec:?}");
+        }
     }
 
     #[test]

@@ -44,6 +44,24 @@
 //! round `t`'s forwarding tail is still draining. [`PipelineMetrics`]
 //! records per-round phases and per-slot timing so the overlap is
 //! directly measurable against sequential execution.
+//!
+//! ## Mid-session re-planning (the adaptive plane)
+//!
+//! Links drift; the measured pings the whole §III pipeline hangs off go
+//! stale. [`RoundEngine::run_pipelined_adaptive`] therefore consults a
+//! moderator-side hook each time a round retires: the hook (typically
+//! `coordinator::probe::Replanner`) probes the driver's current link
+//! state and may hand back a fresh [`PlanEpoch`] — a new MST plus its
+//! recolored slot schedule. Migration happens at the **next round
+//! boundary**: rounds already in flight finish on the epoch they were
+//! planned with (their queues and relay obligations reference the old
+//! tree), while every round created afterwards gossips on the new one.
+//! While epochs coexist, each transmitter services the oldest round in
+//! which *that round's* schedule classes it for the slot, so the
+//! per-epoch proper-coloring guarantee is preserved within each round's
+//! traffic. Applied migrations are recorded as [`ReplanEvent`]s in
+//! [`PipelineMetrics::replans`]. With a hook that never replans the code
+//! path (and float trajectory) is identical to [`RoundEngine::run_pipelined`].
 
 pub mod driver;
 
@@ -58,6 +76,43 @@ use crate::metrics::{RoundMetrics, SlotTiming};
 use crate::netsim::FlowRecord;
 use crate::util::rng::Pcg64;
 use std::collections::HashMap;
+use std::rc::Rc;
+
+/// The tree + schedule a set of rounds is planned on — the unit of
+/// mid-session migration. Re-planning swaps in a new epoch at the next
+/// round boundary; rounds already in flight finish on their own epoch.
+#[derive(Debug, Clone)]
+pub struct PlanEpoch {
+    /// The gossip tree (the moderator's — possibly incrementally
+    /// updated — MST).
+    pub tree: Graph,
+    /// The recolored slot schedule for that tree.
+    pub schedule: Schedule,
+}
+
+/// One applied mid-session re-planning decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanEvent {
+    /// The completed round whose retirement triggered the replan.
+    pub after_round: u64,
+    /// Driver clock when the new epoch was adopted.
+    pub at_s: f64,
+    /// Slot index at adoption; rounds created from later slots use the
+    /// new epoch.
+    pub slot: usize,
+    /// Whether the tree's edge set changed (false = schedule-only
+    /// refresh, e.g. the §III-C slot budget recomputed from drifted
+    /// pings).
+    pub tree_changed: bool,
+}
+
+/// Same undirected edge set (weights ignored) — detects whether a replan
+/// actually moved the tree.
+fn same_edge_set(a: &Graph, b: &Graph) -> bool {
+    a.node_count() == b.node_count()
+        && a.edge_count() == b.edge_count()
+        && a.edges().iter().all(|e| b.has_edge(e.u, e.v))
+}
 
 /// Knobs of one engine-driven communication round.
 #[derive(Debug, Clone)]
@@ -196,6 +251,10 @@ pub struct PipelineMetrics {
     /// Copies launched out-of-turn by cut-through relays (0 for
     /// whole-model plans).
     pub relay_copies: usize,
+    /// Mid-session re-planning decisions applied by
+    /// [`RoundEngine::run_pipelined_adaptive`] (empty for plain
+    /// pipelined runs).
+    pub replans: Vec<ReplanEvent>,
 }
 
 impl PipelineMetrics {
@@ -210,6 +269,9 @@ impl PipelineMetrics {
 /// One round of a pipelined run that is still in flight.
 struct ActiveRound {
     state: GossipState,
+    /// The epoch this round was planned on (tree + schedule); fixed for
+    /// the round's lifetime even if the pipeline migrates.
+    plan: Rc<PlanEpoch>,
     seeded: Vec<bool>,
     seeded_count: usize,
     /// Own-model copies not yet (freshly) delivered; 0 = exchange done.
@@ -374,12 +436,15 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
     /// a relay, cut-through forward it downstream immediately. Returns
     /// when every cascade has drained.
     ///
-    /// `apply` is the caller's protocol-state surface (single state or
-    /// per-round states); see [`StateOp`].
+    /// `trees[i]` is the gossip tree of the round at in-flight index `i`
+    /// (one entry for single-round execution): relay cascades follow
+    /// *that round's* tree, so mixed-epoch slots forward correctly after
+    /// a mid-session replan. `apply` is the caller's protocol-state
+    /// surface (single state or per-round states); see [`StateOp`].
     #[allow(clippy::too_many_arguments)]
     fn run_cut_through_slot(
         &mut self,
-        tree: &Graph,
+        trees: &[&Graph],
         planned: &[PlannedTx],
         planned_rounds: &[usize],
         plan: &TransferPlan,
@@ -464,7 +529,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                     copies[ci].fate = fate;
                     if fate == Fate::Fresh {
                         // spawn the downstream relay copies this cascade feeds
-                        for v in tree.neighbor_ids(to) {
+                        for v in trees[round_idx].neighbor_ids(to) {
                             if v == from {
                                 continue;
                             }
@@ -616,8 +681,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             } else {
                 // segmented path: serial segments + cut-through cascades
                 let planned_rounds = vec![0usize; planned.len()];
+                let trees = [tree.as_ref().expect("tree snapshot exists for segmented plans")];
                 let stats = self.run_cut_through_slot(
-                    tree.as_ref().expect("tree snapshot exists for segmented plans"),
+                    &trees,
                     &planned,
                     &planned_rounds,
                     &plan,
@@ -679,17 +745,39 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
     /// transmitters) holds across mixed-round slots too — except inside
     /// segmented slots, whose cut-through relays deliberately answer out
     /// of turn (see the module docs).
-    pub fn run_pipelined(&mut self, tree: &Graph, mut opts: PipelineOptions) -> PipelineMetrics {
+    pub fn run_pipelined(&mut self, tree: &Graph, opts: PipelineOptions) -> PipelineMetrics {
+        self.run_pipelined_adaptive(tree, opts, |_, _, _| None)
+    }
+
+    /// As [`RoundEngine::run_pipelined`], consulting `replan` each time a
+    /// round retires: `replan(driver, round, now_s)` may probe the
+    /// driver's current link state and return a fresh [`PlanEpoch`]; if it
+    /// does, rounds created from then on gossip on the new tree/schedule
+    /// while in-flight rounds drain on their own epoch (see the module
+    /// docs). A hook that always returns `None` leaves the run
+    /// bit-identical to the plain pipeline.
+    pub fn run_pipelined_adaptive(
+        &mut self,
+        tree: &Graph,
+        mut opts: PipelineOptions,
+        mut replan: impl FnMut(&D, u64, f64) -> Option<PlanEpoch>,
+    ) -> PipelineMetrics {
         let n = tree.node_count();
         assert!(tree.is_tree(), "pipelined gossip runs on the moderator's MST");
         let plan = opts.plan;
         let segmented = plan.is_segmented();
         let mut relay_copies_total = 0usize;
-        // every node's own model crosses each incident tree edge once
+        // every node's own model crosses each incident tree edge once;
+        // any spanning tree has n-1 edges, so this is epoch-invariant
         let own_copies: usize = (0..n).map(|u| tree.degree(u)).sum();
 
-        let fresh_round = |round: u64, now: f64, slot: usize| ActiveRound {
-            state: GossipState::unseeded(tree.clone(), round),
+        let mut current: Rc<PlanEpoch> =
+            Rc::new(PlanEpoch { tree: tree.clone(), schedule: self.schedule.clone() });
+        let mut replans: Vec<ReplanEvent> = Vec::new();
+
+        let fresh_round = |epoch: &Rc<PlanEpoch>, round: u64, now: f64, slot: usize| ActiveRound {
+            state: GossipState::unseeded(epoch.tree.clone(), round),
+            plan: Rc::clone(epoch),
             seeded: vec![false; n],
             seeded_count: 0,
             own_left: own_copies,
@@ -711,7 +799,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let mut slots_used = 0;
 
         if opts.rounds > 0 {
-            let mut first = fresh_round(0, self.driver.now(), 0);
+            let mut first = fresh_round(&current, 0, self.driver.now(), 0);
             for u in 0..n {
                 first.state.seed_node(u);
                 first.seeded[u] = true;
@@ -728,14 +816,19 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 opts.max_slots
             );
             slots_used = slot + 1;
-            let color = self.schedule.color_of_slot(slot);
-            let transmitters = self.schedule.transmitters(slot);
+            let color = current.schedule.color_of_slot(slot);
 
-            // plan: each transmitter services its oldest round with work
+            // plan: each node services its oldest round with pending work
+            // among the rounds whose (epoch) schedule classes it for this
+            // slot — identical to the fixed-transmitter-class loop while a
+            // single epoch is active
             let mut planned_rounds: Vec<usize> = Vec::new(); // active index per tx
             let mut planned: Vec<PlannedTx> = Vec::new();
-            for &u in &transmitters {
+            for u in 0..n {
                 for (ai, ar) in active.iter_mut().enumerate() {
+                    if !ar.plan.schedule.transmits_in_slot(u, slot) {
+                        continue;
+                    }
                     if let Some(tx) = ar.state.plan_node(u) {
                         planned_rounds.push(ai);
                         planned.push(tx);
@@ -793,10 +886,15 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 }
                 (end_s, meta.len())
             } else {
-                // segmented path: cut-through cascades routed per round
+                // segmented path: cut-through cascades routed per round,
+                // each following its own epoch's tree (cheap Rc handles,
+                // owned so the apply closure may borrow `active` mutably)
+                let slot_epochs: Vec<Rc<PlanEpoch>> =
+                    active.iter().map(|ar| Rc::clone(&ar.plan)).collect();
+                let slot_trees: Vec<&Graph> = slot_epochs.iter().map(|e| &e.tree).collect();
                 let mut exchange_done_rounds: Vec<usize> = Vec::new();
                 let stats = self.run_cut_through_slot(
-                    tree,
+                    &slot_trees,
                     &planned,
                     &planned_rounds,
                     &plan,
@@ -843,7 +941,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             };
 
             // nodes that finished a round seed the next one: its traffic
-            // becomes eligible from the next slot of its color
+            // becomes eligible from the next slot of its color. New
+            // rounds are planned on the *current* epoch — the
+            // round-boundary migration point after a replan.
             for (ai, u) in completed_nodes {
                 let next = active[ai].state.round() + 1;
                 if next >= opts.rounds {
@@ -852,7 +952,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 let ni = match active.iter().position(|ar| ar.state.round() == next) {
                     Some(i) => i,
                     None => {
-                        active.push(fresh_round(next, end_s, slot + 1));
+                        active.push(fresh_round(&current, next, end_s, slot + 1));
                         active.len() - 1
                     }
                 };
@@ -872,6 +972,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             }
 
             // retire fully disseminated rounds
+            let mut retired: Vec<u64> = Vec::new();
             active.retain_mut(|ar| {
                 if !ar.state.is_complete() {
                     return true;
@@ -890,8 +991,25 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                     })
                     .collect();
                 finished[ar.phase.round as usize] = Some((ar.phase.clone(), orders));
+                retired.push(ar.phase.round);
                 false
             });
+
+            // the moderator's re-planning hook fires as rounds retire; a
+            // new epoch governs every round created from here on
+            for r in retired {
+                if let Some(epoch) = replan(&*self.driver, r, end_s) {
+                    assert_eq!(
+                        epoch.tree.node_count(),
+                        n,
+                        "replan cannot change membership mid-session"
+                    );
+                    assert!(epoch.tree.is_tree(), "replanned gossip graph must be a tree");
+                    let tree_changed = !same_edge_set(&epoch.tree, &current.tree);
+                    current = Rc::new(epoch);
+                    replans.push(ReplanEvent { after_round: r, at_s: end_s, slot, tree_changed });
+                }
+            }
 
             slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: launched });
             slot += 1;
@@ -915,6 +1033,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             received,
             segments: plan.segments(),
             relay_copies: relay_copies_total,
+            replans,
         }
     }
 }
@@ -1199,6 +1318,71 @@ mod tests {
         for phase in &p.rounds {
             assert!(phase.exchange_done_s <= phase.done_s + 1e-9);
         }
+    }
+
+    #[test]
+    fn adaptive_pipeline_migrates_to_new_epoch_at_round_boundary() {
+        // paper tree until round 1; a forced replan after round 0 moves
+        // rounds created later (round 2 on) onto a chain tree
+        let schedule = paper_schedule();
+        let mut driver = LogicalDriver::new();
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        let tree = example::paper_example_mst();
+        let (chain, chain_sched) = chain_setup(10);
+        let p = engine.run_pipelined_adaptive(
+            &tree,
+            PipelineOptions::reliable(3, 1.0, 10),
+            |_d, round, _now| {
+                (round == 0)
+                    .then(|| PlanEpoch { tree: chain.clone(), schedule: chain_sched.clone() })
+            },
+        );
+        assert_eq!(p.replans.len(), 1);
+        assert_eq!(p.replans[0].after_round, 0);
+        assert!(p.replans[0].tree_changed);
+        assert_eq!(p.rounds.len(), 3);
+        for (r, orders) in p.received.iter().enumerate() {
+            for (u, order) in orders.iter().enumerate() {
+                assert_eq!(order.len(), 9, "round {r} node {u} missed models");
+            }
+        }
+        // edges only the chain has carry traffic strictly after adoption
+        let chain_only =
+            |src: usize, dst: usize| chain.has_edge(src, dst) && !tree.has_edge(src, dst);
+        let migrated: Vec<_> = p.transfers.iter().filter(|r| chain_only(r.src, r.dst)).collect();
+        assert!(!migrated.is_empty(), "post-replan rounds must gossip on the new tree");
+        for r in &migrated {
+            assert!(r.start >= p.replans[0].at_s - 1e-9, "new-tree flow before the replan");
+        }
+        // every flow rides an edge of one of the two epochs' trees
+        for r in &p.transfers {
+            assert!(
+                tree.has_edge(r.src, r.dst) || chain.has_edge(r.src, r.dst),
+                "flow {}->{} on neither tree",
+                r.src,
+                r.dst
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_noop_hook_matches_plain_pipeline() {
+        let tb = quiet_testbed();
+        let schedule = paper_schedule();
+        let tree = example::paper_example_mst();
+        let mut d1 = SimDriver::new(&tb, 6);
+        let mut e1 = RoundEngine::new(&mut d1, &schedule);
+        let plain = e1.run_pipelined(&tree, PipelineOptions::reliable(3, 14.0, 10));
+        let mut d2 = SimDriver::new(&tb, 6);
+        let mut e2 = RoundEngine::new(&mut d2, &schedule);
+        let adaptive =
+            e2.run_pipelined_adaptive(&tree, PipelineOptions::reliable(3, 14.0, 10), |_, _, _| {
+                None
+            });
+        assert_eq!(plain.total_time_s.to_bits(), adaptive.total_time_s.to_bits());
+        assert_eq!(plain.slots, adaptive.slots);
+        assert_eq!(plain.transfers, adaptive.transfers);
+        assert!(adaptive.replans.is_empty());
     }
 
     #[test]

@@ -13,8 +13,15 @@
 //! | driver | substrate | used by |
 //! |---|---|---|
 //! | `SimDriver` | discrete-event network simulator | [`session`] (Tables III–V), [`churn`] (relabeled trees) |
+//! | `MeshSimDriver` | per-edge channel mesh (scriptable link quality) | [`probe`]'s re-planning scenarios |
 //! | `LogicalDriver` | instant untimed delivery | [`gossip::run_logical_round`] (Table I trace) |
 //! | `LiveDriver` | real transports (memory / shaped TCP) | in-process live mode (engine owns every endpoint) |
+//!
+//! Links are no longer frozen at session start: `netsim` channels drift
+//! or take scripted [`crate::netsim::ChannelShift`]s, the [`probe`]
+//! module re-measures pings online through the drivers, and
+//! `engine::RoundEngine::run_pipelined_adaptive` migrates the pipeline
+//! to re-planned trees/schedules at round boundaries.
 //!
 //! (`examples/live_cluster.rs` remains the *distributed* live
 //! deployment — one OS thread per node running its own loop; the
@@ -41,6 +48,7 @@ pub mod engine;
 pub mod example;
 pub mod gossip;
 pub mod moderator;
+pub mod probe;
 pub mod queue;
 pub mod schedule;
 pub mod session;

@@ -137,6 +137,38 @@ impl Moderator {
         Ok(self.bundle.as_ref().unwrap())
     }
 
+    /// Re-plan from refreshed per-edge estimates **without** a
+    /// membership change — §III-A extended to weight drift (see
+    /// `coordinator::probe`). The MST is updated incrementally
+    /// (`mst::incremental`: union-find edge swap for a single changed
+    /// weight, Kruskal fallback otherwise), recolored, and rescheduled
+    /// with the §III-C slot formula over the *new* `ping_max`. The
+    /// membership epoch is untouched; the connectivity table and bundle
+    /// are replaced.
+    pub fn replan_with_costs(
+        &mut self,
+        estimates: &Graph,
+        model_mb: f64,
+        ping_size_bytes: u64,
+        first_color: usize,
+    ) -> Result<&ScheduleBundle, ModeratorError> {
+        let old = self.bundle.as_ref().ok_or(ModeratorError::NotComputed)?;
+        let old_costs = self.matrix.as_ref().ok_or(ModeratorError::NotComputed)?.to_graph();
+        let (tree, schedule) = super::probe::replan_products(
+            &old.tree,
+            &old_costs,
+            estimates,
+            self.coloring_alg,
+            model_mb,
+            ping_size_bytes,
+            first_color,
+        )?;
+        let neighbor_table = (0..self.n).map(|u| tree.neighbor_ids(u)).collect();
+        self.matrix = Some(CostMatrix::from_graph(estimates));
+        self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table });
+        Ok(self.bundle.as_ref().unwrap())
+    }
+
     /// The published bundle (after `compute_schedule`).
     pub fn bundle(&self) -> Option<&ScheduleBundle> {
         self.bundle.as_ref()
@@ -255,6 +287,46 @@ mod tests {
         assert!(m2.bundle().is_some(), "schedule survives hand-over");
         assert!(!m2.needs_recompute());
         assert!(m2.matrix().is_some(), "connectivity table forwarded");
+    }
+
+    #[test]
+    fn replan_with_costs_swaps_degraded_tree_edge() {
+        let mut m = example_moderator();
+        m.compute_schedule(14.0, 56, example::RED).unwrap();
+        let before = m.bundle().unwrap().clone();
+        // degrade one tree edge's ping 4x; everything else unchanged
+        let e = before.tree.edges()[0];
+        let mut estimates = Graph::new(10);
+        for edge in m.matrix().unwrap().to_graph().edges() {
+            let w = if (edge.u, edge.v) == (e.u, e.v) { edge.weight * 4.0 } else { edge.weight };
+            estimates.add_edge(edge.u, edge.v, w);
+        }
+        let after = m.replan_with_costs(&estimates, 14.0, 56, example::RED).unwrap().clone();
+        assert!(after.tree.is_tree());
+        assert_eq!(
+            after.tree.total_weight(),
+            crate::mst::kruskal(&estimates).unwrap().total_weight(),
+            "incremental replan must land on an MST of the new costs"
+        );
+        assert!(after.schedule.coloring.is_proper(&after.tree));
+        // epoch untouched: replan is not a membership change
+        assert_eq!(m.epoch(), 0);
+        assert!(!m.needs_recompute());
+        // neighbor table mirrors the replanned tree
+        let bundle = m.bundle().unwrap();
+        for u in 0..10 {
+            assert_eq!(bundle.neighbor_table[u], bundle.tree.neighbor_ids(u));
+        }
+    }
+
+    #[test]
+    fn replan_before_compute_is_an_error() {
+        let mut m = Moderator::new(0, 4, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        let g = Graph::new(4);
+        assert!(matches!(
+            m.replan_with_costs(&g, 10.0, 56, 0),
+            Err(ModeratorError::NotComputed)
+        ));
     }
 
     #[test]

@@ -1,0 +1,571 @@
+//! Online link probing and mid-session re-planning (paper §III-A,
+//! extended to *weight* change).
+//!
+//! The paper's moderator recomputes its graph products only "when there
+//! are changes in the network, such as nodes joining or leaving" — but
+//! the pings its MST, 2-coloring and §III-C slot budget all consume
+//! drift too (DeceFL, arXiv:2107.07171, motivates time-varying
+//! topologies). This module closes that loop:
+//!
+//! * [`Prober`] runs periodic ping sweeps through the engine's
+//!   [`Driver`] (`probe_ping_ms`, a passive read of current link state)
+//!   and maintains an exponentially-smoothed weight estimate per overlay
+//!   edge.
+//! * [`Replanner`] is the moderator-side policy: on a configurable
+//!   trigger ([`ReplanPolicy`] — smoothed-estimate delta past a
+//!   threshold, or every sweep when the threshold is zero) it
+//!   incrementally updates the MST (`mst::incremental` — union-find edge
+//!   swap, Kruskal fallback), recolors it, recomputes the §III-C slot
+//!   length from the *new* `ping_max`, and hands the engine a fresh
+//!   [`PlanEpoch`]. `RoundEngine::run_pipelined_adaptive` migrates at
+//!   the next round boundary.
+//! * [`LinkDriftScenario`] is a self-contained degrading-link experiment
+//!   (per-edge channel mesh over an explicit tree shape, one scripted
+//!   mid-session degradation) used by `tests/adaptive_replan.rs` and
+//!   `benches/replan_sweep.rs` to show re-planning beating a frozen
+//!   tree.
+//!
+//! §III-C interaction: the slot-length formula
+//! `slot = ping_max × M_size × 1000 / ping_size` is re-evaluated at
+//! every replan, so a degraded link inflates (and a recovered link
+//! shrinks) the published slot budget mid-session instead of going
+//! stale with the session-start pings.
+
+use super::engine::driver::{Driver, MeshSimDriver};
+use super::engine::{PipelineMetrics, PipelineOptions, PlanEpoch, RoundEngine};
+use super::schedule::{build_schedule, Schedule};
+use crate::coloring::{bfs_coloring, ColoringAlgorithm};
+use crate::graph::{Graph, NodeId};
+use crate::mst::incremental::update_mst;
+use crate::mst::MstError;
+use crate::netsim::ChannelShift;
+
+/// The moderator's re-planning products for refreshed edge estimates:
+/// the incrementally updated MST (`mst::incremental` — edge swap for a
+/// single changed weight, Kruskal fallback) plus its recolored schedule
+/// with the §III-C slot budget recomputed over the **new** `ping_max`.
+/// The single implementation behind both [`Replanner::on_round_complete`]
+/// and `Moderator::replan_with_costs`.
+#[allow(clippy::too_many_arguments)]
+pub fn replan_products(
+    tree: &Graph,
+    old_costs: &Graph,
+    estimates: &Graph,
+    coloring_alg: ColoringAlgorithm,
+    unit_mb: f64,
+    ping_size_bytes: u64,
+    first_color: usize,
+) -> Result<(Graph, Schedule), MstError> {
+    let tree = update_mst(tree, old_costs, estimates)?;
+    let coloring = coloring_alg.run(&tree);
+    let schedule = build_schedule(estimates, coloring, unit_mb, ping_size_bytes, first_color);
+    Ok((tree, schedule))
+}
+
+/// Exponentially-smoothed per-edge ping estimates over the overlay.
+#[derive(Debug, Clone)]
+pub struct Prober {
+    /// Overlay edge endpoints, fixed order (the probe sweep order).
+    edges: Vec<(NodeId, NodeId)>,
+    n: usize,
+    /// Smoothed estimate per edge (ms), aligned with `edges`.
+    est: Vec<f64>,
+    alpha: f64,
+    probe_bytes: u64,
+}
+
+impl Prober {
+    /// Start from the moderator's initial cost graph (edge weights =
+    /// measured ping in ms). `alpha` is the EWMA smoothing factor in
+    /// (0, 1]: 1 trusts each new measurement fully.
+    pub fn new(initial: &Graph, alpha: f64, probe_bytes: u64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1], got {alpha}");
+        assert!(probe_bytes > 0);
+        Prober {
+            edges: initial.edges().iter().map(|e| (e.u, e.v)).collect(),
+            n: initial.node_count(),
+            est: initial.edges().iter().map(|e| e.weight).collect(),
+            alpha,
+            probe_bytes,
+        }
+    }
+
+    /// One ping sweep: re-measure every overlay edge through the driver
+    /// and fold the reading into the smoothed estimate. Edges the
+    /// substrate cannot measure keep their last estimate. Returns how
+    /// many edges were refreshed.
+    pub fn sweep<D: Driver + ?Sized>(&mut self, driver: &D) -> usize {
+        let mut refreshed = 0;
+        for (i, &(u, v)) in self.edges.iter().enumerate() {
+            if let Some(ms) = driver.probe_ping_ms(u, v, self.probe_bytes) {
+                self.est[i] += self.alpha * (ms - self.est[i]);
+                refreshed += 1;
+            }
+        }
+        refreshed
+    }
+
+    /// Fold one out-of-band measurement into the estimate (live
+    /// telemetry, tests). Unknown edges are ignored.
+    pub fn observe(&mut self, u: NodeId, v: NodeId, ms: f64) {
+        let key = if u <= v { (u, v) } else { (v, u) };
+        if let Some(i) = self.edges.iter().position(|&e| e == key) {
+            self.est[i] += self.alpha * (ms - self.est[i]);
+        }
+    }
+
+    /// Current estimates as a cost graph (same edge set and order as the
+    /// initial graph).
+    pub fn estimates(&self) -> Graph {
+        let mut g = Graph::new(self.n);
+        for (i, &(u, v)) in self.edges.iter().enumerate() {
+            g.add_edge(u, v, self.est[i]);
+        }
+        g
+    }
+
+    /// Largest relative deviation of the current estimates from
+    /// `baseline` (the costs the active plan was built from).
+    pub fn max_rel_delta(&self, baseline: &Graph) -> f64 {
+        let mut worst = 0.0f64;
+        for (i, &(u, v)) in self.edges.iter().enumerate() {
+            if let Some(w) = baseline.weight(u, v) {
+                if w > 0.0 {
+                    worst = worst.max((self.est[i] - w).abs() / w);
+                }
+            }
+        }
+        worst
+    }
+}
+
+/// When (and how eagerly) the moderator re-plans mid-session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplanPolicy {
+    /// Probe-sweep cadence in rounds (sweep after every `probe_every`-th
+    /// retired round; 0 disables online probing entirely).
+    pub probe_every: u64,
+    /// Relative smoothed-estimate deviation from the planning baseline
+    /// that triggers a replan. 0 = replan after **every** sweep (the
+    /// "every R rounds" forced cadence).
+    pub replan_threshold: f64,
+    /// EWMA smoothing factor in (0, 1].
+    pub alpha: f64,
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy { probe_every: 1, replan_threshold: 0.25, alpha: 0.5 }
+    }
+}
+
+/// Moderator-side online re-planning state: probes through the engine's
+/// driver, tracks smoothed estimates, and produces fresh [`PlanEpoch`]s
+/// when the policy trigger fires. Wire it into
+/// `RoundEngine::run_pipelined_adaptive` as the replan hook.
+pub struct Replanner {
+    prober: Prober,
+    /// Costs the active plan was built from (the trigger baseline).
+    planned_costs: Graph,
+    tree: Graph,
+    policy: ReplanPolicy,
+    coloring_alg: ColoringAlgorithm,
+    /// Transfer-unit size fed to the §III-C slot formula at each replan.
+    unit_mb: f64,
+    ping_size_bytes: u64,
+    first_color: usize,
+    replans: usize,
+}
+
+impl Replanner {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        costs: &Graph,
+        tree: &Graph,
+        policy: ReplanPolicy,
+        coloring_alg: ColoringAlgorithm,
+        unit_mb: f64,
+        ping_size_bytes: u64,
+        first_color: usize,
+    ) -> Self {
+        assert!(tree.is_tree(), "replanner starts from the moderator's MST");
+        Replanner {
+            prober: Prober::new(costs, policy.alpha, ping_size_bytes),
+            planned_costs: costs.clone(),
+            tree: tree.clone(),
+            policy,
+            coloring_alg,
+            unit_mb,
+            ping_size_bytes,
+            first_color,
+            replans: 0,
+        }
+    }
+
+    /// The engine's round-retirement hook: sweep on cadence, re-plan on
+    /// trigger. Returns the new epoch to migrate to, or `None`.
+    pub fn on_round_complete<D: Driver + ?Sized>(
+        &mut self,
+        driver: &D,
+        round: u64,
+    ) -> Option<PlanEpoch> {
+        if self.policy.probe_every == 0 || (round + 1) % self.policy.probe_every != 0 {
+            return None;
+        }
+        if self.prober.sweep(driver) == 0 {
+            return None; // substrate is unmeasurable (e.g. logical driver)
+        }
+        let delta = self.prober.max_rel_delta(&self.planned_costs);
+        if self.policy.replan_threshold > 0.0 && delta <= self.policy.replan_threshold {
+            return None;
+        }
+        let estimates = self.prober.estimates();
+        let (tree, schedule) = match replan_products(
+            &self.tree,
+            &self.planned_costs,
+            &estimates,
+            self.coloring_alg,
+            self.unit_mb,
+            self.ping_size_bytes,
+            self.first_color,
+        ) {
+            Ok(products) => products,
+            Err(e) => {
+                log::warn!("replan after round {round} failed ({e}); keeping the stale plan");
+                return None;
+            }
+        };
+        self.planned_costs = estimates;
+        self.tree = tree.clone();
+        self.replans += 1;
+        Some(PlanEpoch { tree, schedule })
+    }
+
+    /// The tree of the most recent plan.
+    pub fn tree(&self) -> &Graph {
+        &self.tree
+    }
+
+    /// Smoothed estimates (for logging/diagnostics).
+    pub fn prober(&self) -> &Prober {
+        &self.prober
+    }
+
+    /// How many epochs this replanner has produced.
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+}
+
+/// Mean per-round span of the last `tail` rounds — the steady-state
+/// round cost a frozen plan is compared against.
+pub fn mean_tail_span_s(m: &PipelineMetrics, tail: usize) -> f64 {
+    if m.rounds.is_empty() {
+        return 0.0;
+    }
+    let k = tail.clamp(1, m.rounds.len());
+    m.rounds[m.rounds.len() - k..].iter().map(|p| p.span_s()).sum::<f64>() / k as f64
+}
+
+/// Probe payload used by the scenario schedules (the paper's 56-byte
+/// ping).
+const SCENARIO_PING_BYTES: u64 = 56;
+
+/// A self-contained drifting-link experiment: a complete overlay whose
+/// costs make the MST exactly a requested tree shape (tree edges cheap,
+/// every bypass pair uniformly pricier), a per-edge channel mesh
+/// ([`MeshSimDriver`]), and one scripted mid-session degradation of a
+/// chosen tree edge (capacity ÷ factor, latency × factor — a real link
+/// going bad hurts both). Frozen and adaptive runs share the exact same
+/// physical script, so their difference is purely the re-planning.
+#[derive(Debug, Clone)]
+pub struct LinkDriftScenario {
+    /// Complete overlay costs (ms) — the moderator's initial matrix.
+    pub costs: Graph,
+    /// The session-start MST (== the requested shape).
+    pub tree: Graph,
+    /// Tree edge that degrades mid-session.
+    pub degraded_edge: (NodeId, NodeId),
+    /// Simulated time of the degradation.
+    pub degrade_at_s: f64,
+    /// Quality factor (4.0 = latency ×4, capacity ÷4).
+    pub degrade_factor: f64,
+    /// Uniform per-edge channel capacity (MB/s).
+    pub capacity_mbps: f64,
+}
+
+impl LinkDriftScenario {
+    /// Build over a desired tree shape: `shape`'s edges cost `base_ms`,
+    /// every other pair `bypass_ms` (> `base_ms`), so the MST is exactly
+    /// `shape` while bypass edges exist for the replanner to swap in.
+    #[allow(clippy::too_many_arguments)]
+    pub fn over_tree(
+        shape: &Graph,
+        base_ms: f64,
+        bypass_ms: f64,
+        degraded_edge: (NodeId, NodeId),
+        degrade_at_s: f64,
+        degrade_factor: f64,
+        capacity_mbps: f64,
+    ) -> Self {
+        assert!(shape.is_tree(), "scenario shape must be a tree");
+        assert!(bypass_ms > base_ms, "bypass edges must be pricier than tree edges");
+        assert!(degrade_factor >= 1.0 && degrade_at_s >= 0.0);
+        assert!(
+            shape.has_edge(degraded_edge.0, degraded_edge.1),
+            "degraded edge must be a tree edge"
+        );
+        let n = shape.node_count();
+        let mut costs = Graph::new(n);
+        let mut tree = Graph::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if shape.has_edge(u, v) {
+                    costs.add_edge(u, v, base_ms);
+                    tree.add_edge(u, v, base_ms);
+                } else {
+                    costs.add_edge(u, v, bypass_ms);
+                }
+            }
+        }
+        LinkDriftScenario {
+            costs,
+            tree,
+            degraded_edge,
+            degrade_at_s,
+            degrade_factor,
+            capacity_mbps,
+        }
+    }
+
+    /// The session-start schedule (BFS 2-coloring of the tree, §III-C
+    /// slot formula over `model_mb`).
+    pub fn schedule(&self, model_mb: f64) -> Schedule {
+        build_schedule(&self.costs, bfs_coloring(&self.tree), model_mb, SCENARIO_PING_BYTES, 0)
+    }
+
+    /// Fresh mesh driver with the scripted degradation installed on both
+    /// directions of the degraded edge (skipped for factor 1, keeping
+    /// the trajectory bit-identical to an unscripted mesh).
+    pub fn driver(&self, seed: u64) -> MeshSimDriver {
+        let mut d = MeshSimDriver::from_costs(&self.costs, self.capacity_mbps, seed);
+        if self.degrade_factor > 1.0 {
+            let (u, v) = self.degraded_edge;
+            let mut shifts = Vec::new();
+            for (a, b) in [(u, v), (v, u)] {
+                let c = d.channel_of(a, b).expect("degraded edge exists in the mesh");
+                let ch = d.sim().channel(c);
+                shifts.push(ChannelShift {
+                    at_s: self.degrade_at_s,
+                    channel: c,
+                    capacity_mbps: ch.capacity_mbps / self.degrade_factor,
+                    latency_s: ch.latency_s * self.degrade_factor,
+                });
+            }
+            d.sim_mut().schedule_shifts(shifts);
+        }
+        d
+    }
+
+    /// `rounds` pipelined rounds on the frozen session-start plan — the
+    /// stale-tree baseline.
+    pub fn run_frozen(&self, model_mb: f64, rounds: u64, seed: u64) -> PipelineMetrics {
+        let mut driver = self.driver(seed);
+        let schedule = self.schedule(model_mb);
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        engine.run_pipelined(
+            &self.tree,
+            PipelineOptions::reliable(rounds, model_mb, self.tree.node_count()),
+        )
+    }
+
+    /// `rounds` pipelined rounds with online probing + re-planning under
+    /// `policy`, over the same physical script as [`Self::run_frozen`].
+    pub fn run_adaptive(
+        &self,
+        model_mb: f64,
+        rounds: u64,
+        seed: u64,
+        policy: ReplanPolicy,
+    ) -> PipelineMetrics {
+        let mut driver = self.driver(seed);
+        let schedule = self.schedule(model_mb);
+        let mut replanner = Replanner::new(
+            &self.costs,
+            &self.tree,
+            policy,
+            ColoringAlgorithm::Bfs,
+            model_mb,
+            SCENARIO_PING_BYTES,
+            schedule.first_color,
+        );
+        let mut engine = RoundEngine::new(&mut driver, &schedule);
+        engine.run_pipelined_adaptive(
+            &self.tree,
+            PipelineOptions::reliable(rounds, model_mb, self.tree.node_count()),
+            |d, round, _now| replanner.on_round_complete(d, round),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::driver::LogicalDriver;
+    use crate::graph::topology;
+
+    fn triangle_costs() -> Graph {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 1, 10.0);
+        g.add_edge(1, 2, 10.0);
+        g.add_edge(0, 2, 25.0);
+        g
+    }
+
+    #[test]
+    fn prober_smooths_toward_observations() {
+        let mut p = Prober::new(&triangle_costs(), 0.5, 56);
+        p.observe(0, 1, 30.0);
+        let est = p.estimates();
+        assert!((est.weight(0, 1).unwrap() - 20.0).abs() < 1e-9, "EWMA halves the step");
+        p.observe(1, 0, 30.0); // order-insensitive
+        assert!((p.estimates().weight(0, 1).unwrap() - 25.0).abs() < 1e-9);
+        // other edges untouched
+        assert_eq!(p.estimates().weight(1, 2), Some(10.0));
+        let delta = p.max_rel_delta(&triangle_costs());
+        assert!((delta - 1.5).abs() < 1e-9, "25 vs 10 baseline -> 1.5, got {delta}");
+    }
+
+    #[test]
+    fn prober_sweep_through_mesh_driver_tracks_link_state() {
+        let costs = triangle_costs();
+        let mut d = MeshSimDriver::from_costs(&costs, 10.0, 1);
+        let mut p = Prober::new(&costs, 1.0, 56);
+        assert_eq!(p.sweep(&d), 3);
+        assert!(p.max_rel_delta(&costs) < 0.01, "undisturbed sweep ≈ baseline");
+        // degrade (0,1) 4x and re-sweep
+        for (a, b) in [(0, 1), (1, 0)] {
+            let c = d.channel_of(a, b).unwrap();
+            let ch = d.sim().channel(c);
+            let shift = ChannelShift {
+                at_s: 0.0,
+                channel: c,
+                capacity_mbps: ch.capacity_mbps / 4.0,
+                latency_s: ch.latency_s * 4.0,
+            };
+            d.sim_mut().schedule_shifts(vec![shift]);
+        }
+        d.sim_mut().advance_to(0.001); // apply the shifts
+        p.sweep(&d);
+        let est = p.estimates();
+        assert!(est.weight(0, 1).unwrap() > 35.0, "degradation missed: {est:?}");
+        assert!(p.max_rel_delta(&costs) > 2.0);
+    }
+
+    #[test]
+    fn prober_keeps_estimates_on_unmeasurable_substrate() {
+        let costs = triangle_costs();
+        let mut p = Prober::new(&costs, 0.5, 56);
+        let d = LogicalDriver::new();
+        assert_eq!(p.sweep(&d), 0);
+        assert_eq!(p.estimates().weight(0, 1), Some(10.0));
+    }
+
+    #[test]
+    fn replanner_swaps_tree_when_link_degrades() {
+        let sc = LinkDriftScenario::over_tree(
+            &topology::chain(6),
+            10.0,
+            25.0,
+            (2, 3),
+            0.0,
+            4.0,
+            20.0,
+        );
+        let mut d = sc.driver(1);
+        d.sim_mut().advance_to(0.001); // cross the degradation
+        let mut r = Replanner::new(
+            &sc.costs,
+            &sc.tree,
+            ReplanPolicy { probe_every: 1, replan_threshold: 0.5, alpha: 1.0 },
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            0,
+        );
+        let epoch = r.on_round_complete(&d, 0).expect("4x ping jump must trigger");
+        assert!(!epoch.tree.has_edge(2, 3), "degraded edge must leave the tree");
+        assert!(epoch.tree.is_tree());
+        assert_eq!(r.replans(), 1);
+        // §III-C: slot budget recomputed from the *new* ping_max (the
+        // 25 ms bypass), larger than the all-10ms baseline budget
+        let baseline = sc.schedule(14.0);
+        assert!(epoch.schedule.slot_len_s > baseline.slot_len_s);
+        // second sweep with no further change: under threshold, no replan
+        assert!(r.on_round_complete(&d, 1).is_none());
+    }
+
+    #[test]
+    fn replanner_respects_cadence_and_disable() {
+        let sc = LinkDriftScenario::over_tree(
+            &topology::chain(4),
+            10.0,
+            25.0,
+            (1, 2),
+            0.0,
+            4.0,
+            20.0,
+        );
+        let mut d = sc.driver(1);
+        d.sim_mut().advance_to(0.001);
+        let policy = ReplanPolicy { probe_every: 2, replan_threshold: 0.5, alpha: 1.0 };
+        let mut r = Replanner::new(
+            &sc.costs, &sc.tree, policy, ColoringAlgorithm::Bfs, 14.0, 56, 0,
+        );
+        assert!(r.on_round_complete(&d, 0).is_none(), "round 0 is off-cadence for every-2");
+        assert!(r.on_round_complete(&d, 1).is_some(), "round 1 is on-cadence");
+        let mut off = Replanner::new(
+            &sc.costs,
+            &sc.tree,
+            ReplanPolicy { probe_every: 0, ..policy },
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            0,
+        );
+        assert!(off.on_round_complete(&d, 0).is_none(), "probing disabled");
+        assert!(off.on_round_complete(&d, 1).is_none());
+    }
+
+    #[test]
+    fn scenario_mst_is_the_requested_shape() {
+        let shape = topology::balanced_tree(10);
+        let sc = LinkDriftScenario::over_tree(&shape, 10.0, 25.0, (1, 3), 30.0, 4.0, 20.0);
+        assert_eq!(sc.tree.edge_count(), 9);
+        for e in shape.edges() {
+            assert!(sc.tree.has_edge(e.u, e.v));
+        }
+        let mst = crate::mst::kruskal(&sc.costs).unwrap();
+        assert_eq!(mst.total_weight(), sc.tree.total_weight());
+    }
+
+    #[test]
+    fn mean_tail_span_averages_last_rounds() {
+        let sc = LinkDriftScenario::over_tree(
+            &topology::chain(4),
+            10.0,
+            25.0,
+            (1, 2),
+            1e9, // degradation far beyond the run: plain pipeline
+            4.0,
+            20.0,
+        );
+        let m = sc.run_frozen(5.0, 3, 1);
+        assert_eq!(m.rounds.len(), 3);
+        let tail1 = mean_tail_span_s(&m, 1);
+        assert!((tail1 - m.rounds[2].span_s()).abs() < 1e-12);
+        let all = mean_tail_span_s(&m, 99);
+        let expect: f64 = m.rounds.iter().map(|p| p.span_s()).sum::<f64>() / 3.0;
+        assert!((all - expect).abs() < 1e-12);
+    }
+}

@@ -48,6 +48,14 @@ impl Schedule {
     pub fn transmitters(&self, slot: usize) -> Vec<usize> {
         self.coloring.class(self.color_of_slot(slot))
     }
+
+    /// Whether node `u` transmits in slot `i` — the membership test the
+    /// adaptive pipeline uses so rounds planned on different schedule
+    /// epochs can share one slot counter (see
+    /// `coordinator::engine::RoundEngine::run_pipelined_adaptive`).
+    pub fn transmits_in_slot(&self, u: usize, slot: usize) -> bool {
+        self.coloring.color_of(u) == self.color_of_slot(slot)
+    }
 }
 
 /// `ping_max` for a color class: the paper first takes each node's maximum

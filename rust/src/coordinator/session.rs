@@ -7,6 +7,7 @@ use super::engine::driver::SimDriver;
 use super::engine::{PipelineMetrics, PipelineOptions, RoundEngine, RoundOptions};
 use super::gossip::GossipState;
 use super::moderator::{Moderator, ScheduleBundle};
+use super::probe::{ReplanPolicy, Replanner};
 use super::schedule::Schedule;
 use crate::config::ExperimentConfig;
 use crate::dfl::transfer::TransferPlan;
@@ -14,6 +15,7 @@ use crate::graph::topology::{self, TopologyKind};
 use crate::graph::Graph;
 use crate::metrics::RoundMetrics;
 use crate::netsim::testbed::Testbed;
+use crate::netsim::DriftProcess;
 use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
 
@@ -24,6 +26,12 @@ pub struct GossipSession {
     testbed: Testbed,
     structure: Graph,
     costs: Graph,
+    /// The moderator's noise-averaged connectivity matrix as a graph —
+    /// the costs `bundle.tree` is actually an MST of (the report noise
+    /// makes it differ slightly from `costs`). Online re-planning must
+    /// baseline against this, not the clean pings, so the incremental
+    /// MST update's precondition holds.
+    measured_costs: Graph,
     bundle: ScheduleBundle,
 }
 
@@ -64,7 +72,9 @@ impl GossipSession {
             .compute_schedule(unit_mb, cfg.ping_size_bytes, 1)
             .context("moderator schedule computation")?
             .clone();
-        Ok(GossipSession { cfg: cfg.clone(), testbed, structure, costs, bundle })
+        let measured_costs =
+            moderator.matrix().expect("matrix exists after compute_schedule").to_graph();
+        Ok(GossipSession { cfg: cfg.clone(), testbed, structure, costs, measured_costs, bundle })
     }
 
     pub fn testbed(&self) -> &Testbed {
@@ -77,6 +87,12 @@ impl GossipSession {
 
     pub fn costs(&self) -> &Graph {
         &self.costs
+    }
+
+    /// The moderator's noise-averaged cost matrix (what the published
+    /// tree/schedule were computed from; the adaptive plane's baseline).
+    pub fn measured_costs(&self) -> &Graph {
+        &self.measured_costs
     }
 
     pub fn tree(&self) -> &Graph {
@@ -161,6 +177,51 @@ impl GossipSession {
         let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
         let n = self.bundle.tree.node_count();
         engine.run_pipelined(&self.bundle.tree, PipelineOptions::reliable_plan(rounds, plan, n))
+    }
+
+    /// Run `rounds` pipelined MOSGU rounds with the **dynamic network
+    /// plane** enabled from the config: the simulator's links drift
+    /// (`drift` amplitude, re-drawn every `drift_interval_s` simulated
+    /// seconds), the moderator probes every `probe_every` retired rounds
+    /// through the driver and re-plans — incremental MST, recolor, fresh
+    /// §III-C slot budget — when the smoothed ping estimates deviate more
+    /// than `replan_threshold` from the planning baseline (threshold 0 =
+    /// replan after every sweep). The engine migrates to each new plan at
+    /// the next round boundary; applied migrations land in
+    /// [`PipelineMetrics::replans`].
+    ///
+    /// With `drift = 0` and `probe_every = 0` (the defaults) this is
+    /// **bit-identical** to [`GossipSession::run_pipelined_rounds`] —
+    /// pinned by `tests/engine_equivalence.rs`.
+    pub fn run_adaptive_rounds(&self, model_mb: f64, rounds: u64, seed: u64) -> PipelineMetrics {
+        let plan = self.transfer_plan(model_mb);
+        let drift =
+            DriftProcess { amplitude: self.cfg.drift, interval_s: self.cfg.drift_interval_s };
+        let mut driver = SimDriver::with_drift(&self.testbed, seed, drift);
+        let policy = ReplanPolicy {
+            probe_every: self.cfg.probe_every,
+            replan_threshold: self.cfg.replan_threshold,
+            ..ReplanPolicy::default()
+        };
+        // baseline = the moderator's averaged matrix: bundle.tree is an
+        // MST of *these* costs, the precondition of the incremental
+        // update (the clean pings differ by the ±2% report noise)
+        let mut replanner = Replanner::new(
+            &self.measured_costs,
+            &self.bundle.tree,
+            policy,
+            self.cfg.coloring,
+            plan.segment_mb(),
+            self.cfg.ping_size_bytes,
+            1,
+        );
+        let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
+        let n = self.bundle.tree.node_count();
+        engine.run_pipelined_adaptive(
+            &self.bundle.tree,
+            PipelineOptions::reliable_plan(rounds, plan, n),
+            |d, round, _now| replanner.on_round_complete(d, round),
+        )
     }
 
     /// The paper's baseline on this testbed: all-to-all direct push on the
@@ -294,6 +355,42 @@ mod tests {
             pipelined.total_time_s,
             sequential
         );
+    }
+
+    #[test]
+    fn adaptive_rounds_default_config_matches_pipelined() {
+        // drift 0 + probe_every 0 (defaults): the adaptive path must be
+        // the plain pipeline bit for bit
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        let a = s.run_adaptive_rounds(14.0, 2, 1);
+        let b = s.run_pipelined_rounds(14.0, 2, 1);
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        assert_eq!(a.slots, b.slots);
+        assert_eq!(a.transfers, b.transfers);
+        assert!(a.replans.is_empty());
+    }
+
+    #[test]
+    fn adaptive_rounds_with_drift_and_probing_complete() {
+        let cfg = ExperimentConfig {
+            drift: 0.3,
+            drift_interval_s: 0.5,
+            probe_every: 1,
+            replan_threshold: 0.1,
+            ..quiet_cfg()
+        };
+        let s = GossipSession::new(&cfg).unwrap();
+        let p = s.run_adaptive_rounds(14.0, 4, 1);
+        assert_eq!(p.rounds.len(), 4);
+        for (r, orders) in p.received.iter().enumerate() {
+            for (u, o) in orders.iter().enumerate() {
+                assert_eq!(o.len(), 9, "round {r} node {u} missed models under drift");
+            }
+        }
+        // deterministic replay
+        let again = s.run_adaptive_rounds(14.0, 4, 1);
+        assert_eq!(p.total_time_s.to_bits(), again.total_time_s.to_bits());
+        assert_eq!(p.replans, again.replans);
     }
 
     #[test]

@@ -64,8 +64,11 @@ pub fn run_dfl(
     // one long-lived simulator for every round's gossip, with
     // multi-round pipelining; content-free, so it can run up front. The
     // session's transfer plan decides whether checkpoints move whole or
-    // as cut-through-forwarded segments (--segments / --segment-mb).
-    let pipeline = session.run_pipelined_rounds(model_mb, rounds, 0x90551b);
+    // as cut-through-forwarded segments (--segments / --segment-mb), and
+    // the dynamic network plane (--drift / --probe-every /
+    // --replan-threshold) drifts links and re-plans mid-session; with
+    // the static defaults this is the plain pipeline bit for bit.
+    let pipeline = session.run_adaptive_rounds(model_mb, rounds, 0x90551b);
     anyhow::ensure!(
         pipeline.rounds.len() == rounds as usize,
         "pipeline completed {} of {rounds} rounds",

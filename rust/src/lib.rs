@@ -24,6 +24,8 @@
 //!
 //! - `SimDriver` — the discrete-event simulator (timing experiments,
 //!   Tables III–V; also churn's relabeled subgraph rounds),
+//! - `MeshSimDriver` — a per-edge channel mesh with scriptable link
+//!   quality (the re-planning scenarios),
 //! - `LogicalDriver` — untimed instant delivery (the Table I trace),
 //! - `LiveDriver` — real byte payloads over `transport` meshes
 //!   (in-memory channels or shaped loopback TCP).
@@ -48,6 +50,15 @@
 //! [`metrics::RoundMetrics`] carries per-slot timing so the overlap is
 //! measurable (see `benches/engine_pipeline.rs` and
 //! `benches/segment_sweep.rs`).
+//!
+//! Links are not frozen at session start: `netsim` channels take
+//! scripted shifts or seeded drift, `coordinator::probe` re-measures
+//! pings online through the drivers and re-plans (incremental MST via
+//! `mst::incremental`, recolor, fresh §III-C slot budget), and
+//! `coordinator::engine::RoundEngine::run_pipelined_adaptive` migrates
+//! the pipeline to each new plan at the next round boundary
+//! (`--drift` / `--probe-every` / `--replan-threshold`; static
+//! defaults are bit-identical to the frozen engine).
 //!
 //! The `runtime` module loads the AOT artifacts through PJRT so the gossip
 //! request path never touches Python.

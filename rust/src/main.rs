@@ -91,6 +91,18 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(s) = f.get("segment-mb") {
         cfg.segment_mb = s.parse().context("--segment-mb")?;
     }
+    if let Some(s) = f.get("drift") {
+        cfg.drift = s.parse().context("--drift")?;
+    }
+    if let Some(s) = f.get("drift-interval-s") {
+        cfg.drift_interval_s = s.parse().context("--drift-interval-s")?;
+    }
+    if let Some(s) = f.get("probe-every") {
+        cfg.probe_every = s.parse().context("--probe-every")?;
+    }
+    if let Some(s) = f.get("replan-threshold") {
+        cfg.replan_threshold = s.parse().context("--replan-threshold")?;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!("invalid flags: {e}"))?;
     Ok(cfg)
 }
@@ -133,7 +145,12 @@ fn print_usage() {
          \x20 --segments K   slice each model copy into K segments with\n\
          \x20                cut-through relay forwarding (default 1 = whole model)\n\
          \x20 --segment-mb F derive the segment count per model from a target\n\
-         \x20                segment size in MB (mutually exclusive with --segments)"
+         \x20                segment size in MB (mutually exclusive with --segments)\n\
+         \x20 --drift A      link-quality drift amplitude in [0,1) (0 = static links);\n\
+         \x20                links re-draw every --drift-interval-s simulated seconds\n\
+         \x20 --probe-every R  moderator ping sweep every R rounds (0 = no re-planning)\n\
+         \x20 --replan-threshold D  smoothed-ping deviation that triggers a mid-session\n\
+         \x20                replan (0 = replan after every sweep)"
     );
 }
 

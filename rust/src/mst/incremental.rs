@@ -1,0 +1,286 @@
+//! Incremental MST maintenance for the adaptive re-planning plane.
+//!
+//! When online probing (see `coordinator::probe`) reports that an edge's
+//! ping drifted, the moderator does not need to re-run Prim/Kruskal from
+//! scratch: a **single** changed weight admits an O(E α(n)) edge-swap
+//! update built on [`UnionFind`]:
+//!
+//! * changed edge **in** the tree → removing it cuts the tree in two;
+//!   the new MST keeps the rest of the tree and reconnects the cut with
+//!   the minimum crossing edge (cut property). A decreased tree edge is
+//!   its own minimum, so the tree survives unchanged.
+//! * changed edge **not in** the tree → adding it closes one cycle along
+//!   the tree path between its endpoints; the new MST drops the cycle's
+//!   heaviest edge if the changed edge is now strictly lighter (cycle
+//!   property), and is unchanged otherwise.
+//!
+//! [`update_mst`] is the moderator-facing entry: it diffs the old and new
+//! cost graphs, takes the edge-swap fast path when exactly one weight
+//! changed, and falls back to a from-scratch [`kruskal`] run otherwise
+//! (EWMA smoothing typically moves several edges at once after a drift
+//! episode). Differential property tests
+//! (`tests/mst_incremental.rs`) pin the swap against from-scratch
+//! Kruskal/Prim/Borůvka across every paper topology family.
+
+use super::kruskal::kruskal;
+use super::union_find::UnionFind;
+use super::MstError;
+use crate::graph::{Graph, NodeId};
+
+/// Deterministic edge preference matching `Graph::sorted_edges` (and thus
+/// Kruskal's tie-break): ascending weight, then endpoints.
+fn prefer(w: f64, u: NodeId, v: NodeId, best: Option<(f64, NodeId, NodeId)>) -> bool {
+    match best {
+        None => true,
+        Some((bw, bu, bv)) => (w, u, v) < (bw, bu, bv),
+    }
+}
+
+/// Tree edges of the path between `from` and `to` as (u, v, weight)
+/// triples. Panics if `to` is unreachable (callers pass a tree).
+fn tree_path(tree: &Graph, from: NodeId, to: NodeId) -> Vec<(NodeId, NodeId, f64)> {
+    let n = tree.node_count();
+    let mut parent: Vec<Option<(NodeId, f64)>> = vec![None; n];
+    let mut queue = std::collections::VecDeque::from([from]);
+    let mut seen = vec![false; n];
+    seen[from] = true;
+    while let Some(u) = queue.pop_front() {
+        if u == to {
+            break;
+        }
+        for &(v, w) in tree.neighbors(u) {
+            if !seen[v] {
+                seen[v] = true;
+                parent[v] = Some((u, w));
+                queue.push_back(v);
+            }
+        }
+    }
+    let mut path = Vec::new();
+    let mut cur = to;
+    while cur != from {
+        let (p, w) = parent[cur].expect("endpoints connected in a tree");
+        path.push((p, cur, w));
+        cur = p;
+    }
+    path
+}
+
+/// Rebuild `tree` with edge (`skip_u`, `skip_v`) replaced by
+/// (`add_u`, `add_v`, `add_w`).
+fn swap_edge(
+    tree: &Graph,
+    (skip_u, skip_v): (NodeId, NodeId),
+    (add_u, add_v, add_w): (NodeId, NodeId, f64),
+) -> Graph {
+    let mut out = Graph::new(tree.node_count());
+    for e in tree.edges() {
+        if (e.u == skip_u && e.v == skip_v) || (e.u == skip_v && e.v == skip_u) {
+            continue;
+        }
+        out.add_edge(e.u, e.v, e.weight);
+    }
+    out.add_edge(add_u, add_v, add_w);
+    out
+}
+
+/// Update an MST after the weight of edge (`u`, `v`) changed to its
+/// current value in `costs`. `tree` must be an MST of `costs` with the
+/// edge at its *previous* weight; every other weight must agree with
+/// `costs`. Returns a (possibly identical) MST of `costs`.
+pub fn update_edge_weight(
+    costs: &Graph,
+    tree: &Graph,
+    u: NodeId,
+    v: NodeId,
+) -> Result<Graph, MstError> {
+    let n = costs.node_count();
+    if n == 0 {
+        return Err(MstError::Empty);
+    }
+    assert_eq!(tree.node_count(), n, "tree/costs node count mismatch");
+    let new_w = costs
+        .weight(u, v)
+        .unwrap_or_else(|| panic!("changed edge ({u},{v}) not in the cost graph"));
+
+    if tree.has_edge(u, v) {
+        // cut property: reconnect the two sides with the minimum
+        // crossing edge (which may still be (u, v) itself)
+        let mut uf = UnionFind::new(n);
+        for e in tree.edges() {
+            if (e.u == u && e.v == v) || (e.u == v && e.v == u) {
+                continue;
+            }
+            uf.union(e.u, e.v);
+        }
+        let mut best: Option<(f64, NodeId, NodeId)> = None;
+        for e in costs.edges() {
+            if uf.connected(e.u, e.v) {
+                continue;
+            }
+            if prefer(e.weight, e.u, e.v, best) {
+                best = Some((e.weight, e.u, e.v));
+            }
+        }
+        let (bw, bu, bv) = best.ok_or(MstError::Disconnected)?;
+        if (bu == u && bv == v) || (bu == v && bv == u) {
+            // the changed edge survives at its new weight
+            debug_assert_eq!(bw.to_bits(), new_w.to_bits());
+        }
+        Ok(swap_edge(tree, (u, v), (bu, bv, bw)))
+    } else {
+        // cycle property: the changed edge enters only if it is now
+        // strictly lighter than the heaviest edge on its tree cycle
+        let path = tree_path(tree, u, v);
+        let &(mu, mv, mw) = path
+            .iter()
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then((a.0, a.1).cmp(&(b.0, b.1))))
+            .expect("path between distinct nodes is non-empty");
+        if new_w < mw {
+            Ok(swap_edge(tree, (mu, mv), (u, v, new_w)))
+        } else {
+            Ok(tree.clone())
+        }
+    }
+}
+
+/// Refresh an MST after probing produced `new_costs`: when exactly one
+/// edge weight differs from `old_costs` (and the edge sets match), take
+/// the [`update_edge_weight`] edge-swap fast path; otherwise run Kruskal
+/// from scratch. `tree` must be an MST of `old_costs`.
+pub fn update_mst(tree: &Graph, old_costs: &Graph, new_costs: &Graph) -> Result<Graph, MstError> {
+    if old_costs.node_count() != new_costs.node_count()
+        || old_costs.edge_count() != new_costs.edge_count()
+    {
+        return kruskal(new_costs);
+    }
+    let mut changed: Option<(NodeId, NodeId)> = None;
+    for e in new_costs.edges() {
+        match old_costs.weight(e.u, e.v) {
+            Some(w) if w.to_bits() == e.weight.to_bits() => {}
+            Some(_) if changed.is_none() => changed = Some((e.u, e.v)),
+            _ => return kruskal(new_costs), // ≥2 changes or edge-set drift
+        }
+    }
+    match changed {
+        None => Ok(tree.clone()),
+        Some((u, v)) => update_edge_weight(new_costs, tree, u, v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mst::is_spanning_tree_of;
+
+    /// The Fig-2-style diamond with a unique MST {01, 12, 23}.
+    fn diamond() -> Graph {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 3, 3.0);
+        g.add_edge(3, 0, 4.0);
+        g.add_edge(0, 2, 5.0);
+        g
+    }
+
+    fn with_weight(g: &Graph, u: NodeId, v: NodeId, w: f64) -> Graph {
+        let mut out = Graph::new(g.node_count());
+        for e in g.edges() {
+            let ew = if (e.u == u && e.v == v) || (e.u == v && e.v == u) { w } else { e.weight };
+            out.add_edge(e.u, e.v, ew);
+        }
+        out
+    }
+
+    #[test]
+    fn tree_edge_increase_swaps_in_crossing_edge() {
+        let g = diamond();
+        let tree = kruskal(&g).unwrap();
+        // (2,3) jumps to 9: cut {0,1,2} | {3} reconnects via (3,0)=4
+        let g2 = with_weight(&g, 2, 3, 9.0);
+        let t2 = update_edge_weight(&g2, &tree, 2, 3).unwrap();
+        assert!(t2.has_edge(0, 3));
+        assert!(!t2.has_edge(2, 3));
+        assert_eq!(t2.total_weight(), kruskal(&g2).unwrap().total_weight());
+        assert!(is_spanning_tree_of(&t2, &g2));
+    }
+
+    #[test]
+    fn tree_edge_increase_below_alternatives_keeps_tree() {
+        let g = diamond();
+        let tree = kruskal(&g).unwrap();
+        let g2 = with_weight(&g, 2, 3, 3.5); // still cheaper than (3,0)=4
+        let t2 = update_edge_weight(&g2, &tree, 2, 3).unwrap();
+        assert!(t2.has_edge(2, 3));
+        assert_eq!(t2.weight(2, 3), Some(3.5), "kept edge carries the new weight");
+        assert_eq!(t2.total_weight(), kruskal(&g2).unwrap().total_weight());
+    }
+
+    #[test]
+    fn tree_edge_decrease_keeps_tree() {
+        let g = diamond();
+        let tree = kruskal(&g).unwrap();
+        let g2 = with_weight(&g, 1, 2, 0.5);
+        let t2 = update_edge_weight(&g2, &tree, 1, 2).unwrap();
+        assert!(t2.has_edge(1, 2));
+        assert_eq!(t2.weight(1, 2), Some(0.5));
+        assert_eq!(t2.total_weight(), kruskal(&g2).unwrap().total_weight());
+    }
+
+    #[test]
+    fn non_tree_edge_decrease_swaps_out_heaviest_cycle_edge() {
+        let g = diamond();
+        let tree = kruskal(&g).unwrap();
+        // (0,2) drops to 1.5: cycle 0-1-2 heaviest edge is (1,2)=2
+        let g2 = with_weight(&g, 0, 2, 1.5);
+        let t2 = update_edge_weight(&g2, &tree, 0, 2).unwrap();
+        assert!(t2.has_edge(0, 2));
+        assert!(!t2.has_edge(1, 2));
+        assert_eq!(t2.total_weight(), kruskal(&g2).unwrap().total_weight());
+        assert!(is_spanning_tree_of(&t2, &g2));
+    }
+
+    #[test]
+    fn non_tree_edge_increase_is_a_no_op() {
+        let g = diamond();
+        let tree = kruskal(&g).unwrap();
+        let g2 = with_weight(&g, 0, 2, 50.0);
+        let t2 = update_edge_weight(&g2, &tree, 0, 2).unwrap();
+        assert_eq!(t2.total_weight(), tree.total_weight());
+        assert!(t2.has_edge(0, 1) && t2.has_edge(1, 2) && t2.has_edge(2, 3));
+    }
+
+    #[test]
+    fn update_mst_takes_fast_path_and_fallback() {
+        let g = diamond();
+        let tree = kruskal(&g).unwrap();
+        // no change -> clone
+        let same = update_mst(&tree, &g, &g).unwrap();
+        assert_eq!(same.total_weight(), tree.total_weight());
+        // one change -> swap
+        let g2 = with_weight(&g, 2, 3, 9.0);
+        let t2 = update_mst(&tree, &g, &g2).unwrap();
+        assert_eq!(t2.total_weight(), kruskal(&g2).unwrap().total_weight());
+        // two changes -> kruskal fallback, still an MST of the new costs
+        let g3 = with_weight(&g2, 0, 1, 6.0);
+        let t3 = update_mst(&tree, &g, &g3).unwrap();
+        assert_eq!(t3.total_weight(), kruskal(&g3).unwrap().total_weight());
+        assert!(is_spanning_tree_of(&t3, &g3));
+    }
+
+    #[test]
+    fn disconnecting_cut_reports_error() {
+        // a 2-node graph whose only edge is the tree edge: the cut search
+        // still finds the edge itself, so no error — but a disconnected
+        // cost graph (edge removed) must fall back and report
+        let mut g = Graph::new(2);
+        g.add_edge(0, 1, 1.0);
+        let tree = kruskal(&g).unwrap();
+        let g2 = with_weight(&g, 0, 1, 7.0);
+        let t2 = update_edge_weight(&g2, &tree, 0, 1).unwrap();
+        assert_eq!(t2.weight(0, 1), Some(7.0));
+        let empty = Graph::new(2);
+        assert!(update_mst(&tree, &g, &empty).is_err());
+    }
+}

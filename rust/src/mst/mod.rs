@@ -7,6 +7,7 @@
 //! ablation_mst.rs`) and so property tests can cross-check total weights.
 
 pub mod boruvka;
+pub mod incremental;
 pub mod kruskal;
 pub mod prim;
 pub mod union_find;

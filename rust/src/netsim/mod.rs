@@ -11,6 +11,17 @@
 //! The simulation is event-driven: rates are piecewise constant between
 //! flow arrivals/completions, so the engine jumps from completion to
 //! completion rather than ticking.
+//!
+//! ## Time-varying channels (the dynamic network plane)
+//!
+//! Channels are no longer frozen at construction: a piecewise schedule of
+//! [`ChannelShift`]s (scripted degradations/recoveries) and/or a seeded
+//! [`DriftProcess`] (random link-quality drift) re-rate the system at
+//! simulated points in time. Each change is one extra event horizon: the
+//! loop drains bytes at the old rates up to the change, applies it, and
+//! re-plans — so byte conservation and the monotone clock hold under any
+//! capacity/latency schedule. With no shifts and no drift installed, the
+//! event loop takes exactly the legacy path, float for float.
 
 pub mod fairshare;
 pub mod testbed;
@@ -32,6 +43,41 @@ pub struct Channel {
     pub latency_s: f64,
     /// human-readable endpoint description for debugging
     pub label: String,
+}
+
+/// One scripted change to a channel's quality at a point in simulated
+/// time: from `at_s` on, the channel runs at `capacity_mbps` and delivers
+/// with `latency_s` propagation. Flows in flight drain at the old rate up
+/// to `at_s` and at the new rate afterwards; latency applies to flows
+/// completing after the shift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelShift {
+    pub at_s: f64,
+    pub channel: ChannelId,
+    pub capacity_mbps: f64,
+    pub latency_s: f64,
+}
+
+/// Seeded piecewise-constant link-quality drift: every `interval_s` of
+/// simulated time, each channel draws an independent quality factor
+/// `q ∈ [1 − amplitude, 1 + amplitude]` and runs at `base_capacity · q`
+/// with latency `base_latency / q` until the next draw — degraded links
+/// lose rate and gain delay together, and recover on a later draw.
+/// `amplitude == 0` disables the process entirely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftProcess {
+    pub amplitude: f64,
+    pub interval_s: f64,
+}
+
+/// Installed drift state: the process, its own RNG stream, the next tick
+/// time, and the base (capacity, latency) each factor scales around.
+#[derive(Debug, Clone)]
+struct DriftState {
+    process: DriftProcess,
+    rng: Pcg64,
+    next_at: f64,
+    base: Vec<(f64, f64)>,
 }
 
 /// Loss/retransmission model parameters (see DESIGN.md §2).
@@ -128,6 +174,12 @@ pub struct NetSim {
     /// relative jitter applied to each flow's effective size
     transfer_jitter: f64,
     completed: Vec<FlowRecord>,
+    /// scripted channel changes, sorted by time; `next_shift` indexes the
+    /// first not yet applied
+    shifts: Vec<ChannelShift>,
+    next_shift: usize,
+    /// seeded random link-quality drift (None = static links)
+    drift: Option<DriftState>,
 }
 
 impl NetSim {
@@ -144,6 +196,90 @@ impl NetSim {
             rng: Pcg64::new(seed),
             transfer_jitter: 0.0,
             completed: Vec::new(),
+            shifts: Vec::new(),
+            next_shift: 0,
+            drift: None,
+        }
+    }
+
+    /// Install scripted channel shifts (appended to any already
+    /// scheduled, then kept sorted by time; ties apply in channel order).
+    /// Shifts at or before the current clock apply at the next event.
+    pub fn schedule_shifts(&mut self, shifts: Vec<ChannelShift>) {
+        for s in &shifts {
+            assert!(s.channel < self.channels.len(), "shift on bad channel {}", s.channel);
+            assert!(s.capacity_mbps > 0.0, "shifted capacity must stay positive");
+            assert!(s.latency_s >= 0.0 && s.at_s.is_finite(), "bad shift {s:?}");
+        }
+        // drop already-applied shifts, merge the new ones, re-sort
+        self.shifts.drain(..self.next_shift);
+        self.next_shift = 0;
+        self.shifts.extend(shifts);
+        self.shifts.sort_by(|a, b| {
+            a.at_s.partial_cmp(&b.at_s).unwrap().then(a.channel.cmp(&b.channel))
+        });
+    }
+
+    /// Install seeded link-quality drift (see [`DriftProcess`]); the
+    /// first draw happens `interval_s` into the simulation. An amplitude
+    /// of zero uninstalls the process, leaving the trajectory untouched.
+    pub fn set_drift(&mut self, process: DriftProcess, seed: u64) {
+        assert!((0.0..1.0).contains(&process.amplitude), "drift amplitude must be in [0,1)");
+        if process.amplitude == 0.0 {
+            self.drift = None;
+            return;
+        }
+        assert!(process.interval_s > 0.0, "drift interval must be positive");
+        self.drift = Some(DriftState {
+            process,
+            rng: Pcg64::new(seed),
+            next_at: self.now + process.interval_s,
+            base: self.channels.iter().map(|c| (c.capacity_mbps, c.latency_s)).collect(),
+        });
+    }
+
+    /// Earliest pending channel change strictly after `now` (shifts due
+    /// at or before `now` are applied eagerly by the event loop).
+    fn next_change_at(&self) -> Option<f64> {
+        let shift = self.shifts.get(self.next_shift).map(|s| s.at_s);
+        let drift = self.drift.as_ref().map(|d| d.next_at);
+        match (shift, drift) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Apply every scripted shift and drift tick due at or before the
+    /// current clock. No-op (and allocation-free) when nothing is
+    /// installed, so the static-link trajectory is untouched bit for bit.
+    fn apply_due_changes(&mut self) {
+        while let Some(s) = self.shifts.get(self.next_shift) {
+            if s.at_s > self.now {
+                break;
+            }
+            let (c, cap, lat) = (s.channel, s.capacity_mbps, s.latency_s);
+            self.channels[c].capacity_mbps = cap;
+            self.channels[c].latency_s = lat;
+            self.caps[c] = cap;
+            // a scripted shift redefines the channel's *base* quality, so
+            // an installed drift process wiggles around the shifted value
+            // instead of silently erasing the shift at its next tick
+            if let Some(d) = self.drift.as_mut() {
+                d.base[c] = (cap, lat);
+            }
+            self.next_shift += 1;
+        }
+        if let Some(d) = self.drift.as_mut() {
+            while d.next_at <= self.now {
+                for (c, &(base_cap, base_lat)) in d.base.iter().enumerate() {
+                    let a = d.process.amplitude;
+                    let q = 1.0 + d.rng.gen_f64_range(-a, a);
+                    self.channels[c].capacity_mbps = base_cap * q;
+                    self.channels[c].latency_s = base_lat / q;
+                    self.caps[c] = base_cap * q;
+                }
+                d.next_at += d.process.interval_s;
+            }
         }
     }
 
@@ -159,6 +295,22 @@ impl NetSim {
 
     pub fn channel(&self, c: ChannelId) -> &Channel {
         &self.channels[c]
+    }
+
+    /// Round-trip ping (ms) along `route` for a `probe_bytes` probe,
+    /// evaluated against the channels' **current** — possibly shifted or
+    /// drifted — state: two one-way propagations plus two serializations
+    /// at the bottleneck. This is the online counterpart of
+    /// `Testbed::ping_ms` (which reads the build-time state) and the
+    /// measurement behind the engine drivers' `probe_ping_ms`.
+    pub fn route_ping_ms(&self, route: &[ChannelId], probe_bytes: u64) -> f64 {
+        let one_way: f64 = route.iter().map(|&c| self.channels[c].latency_s).sum();
+        let probe_mb = probe_bytes as f64 / (1024.0 * 1024.0);
+        let min_rate = route
+            .iter()
+            .map(|&c| self.channels[c].capacity_mbps)
+            .fold(f64::INFINITY, f64::min);
+        (2.0 * one_way + 2.0 * probe_mb / min_rate) * 1e3
     }
 
     pub fn active_flow_count(&self) -> usize {
@@ -253,14 +405,20 @@ impl NetSim {
     }
 
     /// Advance simulated time to `t`, draining flow bytes at current rates
-    /// and completing flows along the way. `t` must be ≥ `now`.
+    /// and completing flows along the way. `t` must be ≥ `now`. Scheduled
+    /// channel changes before `t` re-rate the system mid-advance.
     pub fn advance_to(&mut self, t: f64) {
         assert!(t >= self.now - 1e-12, "cannot rewind time {} -> {t}", self.now);
         while self.now < t {
+            self.apply_due_changes();
             let rates = self.active_rates();
             if rates.is_empty() {
-                self.now = t;
-                return;
+                // idle: jump change to change so drift/shifts land on time
+                match self.next_change_at() {
+                    Some(ts) if ts <= t => self.now = ts,
+                    _ => self.now = t,
+                }
+                continue;
             }
             // earliest completion under current rates
             let mut next_done: Option<(f64, FlowId)> = None;
@@ -273,14 +431,22 @@ impl NetSim {
                     next_done = Some((eta, f));
                 }
             }
-            let expected = match next_done {
+            let mut expected = match next_done {
                 Some((eta, f)) if eta <= t => Some(f),
                 _ => None,
             };
-            let horizon = match next_done {
+            let mut horizon = match next_done {
                 Some((eta, _)) if eta <= t => eta,
                 _ => t,
             };
+            // a channel change before the horizon caps the constant-rate
+            // window; no flow is forced complete at a change boundary
+            if let Some(ts) = self.next_change_at() {
+                if ts < horizon {
+                    horizon = ts;
+                    expected = None;
+                }
+            }
             let dt = horizon - self.now;
             for &(f, r) in &rates {
                 self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
@@ -331,39 +497,57 @@ impl NetSim {
     /// stay bit-identical to the legacy global-barrier loop.
     pub fn run_next_completion(&mut self) -> Vec<FlowRecord> {
         let before = self.completed.len();
-        let rates = self.active_rates();
-        if rates.is_empty() {
-            return Vec::new();
-        }
-        let mut eta_min = f64::INFINITY;
-        let mut f_min = usize::MAX;
-        for &(f, r) in &rates {
-            if r > 0.0 {
-                let eta = self.now + self.flows[f].remaining_mb / r;
-                if eta < eta_min {
-                    eta_min = eta;
-                    f_min = f;
+        loop {
+            self.apply_due_changes();
+            let rates = self.active_rates();
+            if rates.is_empty() {
+                return Vec::new();
+            }
+            let mut eta_min = f64::INFINITY;
+            let mut f_min = usize::MAX;
+            for &(f, r) in &rates {
+                if r > 0.0 {
+                    let eta = self.now + self.flows[f].remaining_mb / r;
+                    if eta < eta_min {
+                        eta_min = eta;
+                        f_min = f;
+                    }
                 }
             }
+            assert!(eta_min.is_finite(), "active flows with zero rate — capacity exhausted");
+            // a scheduled channel change before the next completion
+            // re-rates the system: drain to the change, apply, re-plan
+            if let Some(ts) = self.next_change_at() {
+                if ts < eta_min {
+                    let dt = ts - self.now;
+                    if dt > 0.0 {
+                        for &(f, r) in &rates {
+                            self.flows[f].remaining_mb =
+                                (self.flows[f].remaining_mb - r * dt).max(0.0);
+                        }
+                    }
+                    self.now = ts;
+                    continue;
+                }
+            }
+            let dt = eta_min - self.now;
+            for &(f, r) in &rates {
+                self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
+            }
+            // see run_until_idle: force the horizon-setting flow to complete
+            // so float cancellation cannot livelock the event loop
+            self.flows[f_min].remaining_mb = 0.0;
+            self.now = eta_min;
+            let drained: Vec<FlowId> = rates
+                .iter()
+                .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
+                .map(|&(f, _)| f)
+                .collect();
+            for f in drained {
+                self.complete(f);
+            }
+            return self.completed[before..].to_vec();
         }
-        assert!(eta_min.is_finite(), "active flows with zero rate — capacity exhausted");
-        let dt = eta_min - self.now;
-        for &(f, r) in &rates {
-            self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
-        }
-        // see run_until_idle: force the horizon-setting flow to complete
-        // so float cancellation cannot livelock the event loop
-        self.flows[f_min].remaining_mb = 0.0;
-        self.now = eta_min;
-        let drained: Vec<FlowId> = rates
-            .iter()
-            .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
-            .map(|&(f, _)| f)
-            .collect();
-        for f in drained {
-            self.complete(f);
-        }
-        self.completed[before..].to_vec()
     }
 
     /// Next flow-completion time if the system runs undisturbed.
@@ -571,6 +755,152 @@ mod tests {
         sim.start_flow(0, 1, vec![0], 1.0, 77);
         sim.run_until_idle();
         assert_eq!(sim.completed()[0].tag, 77);
+    }
+
+    #[test]
+    fn capacity_shift_slows_flow_mid_drain() {
+        // 10 MB/s for 0.5 s (5 MB moved), then 2.5 MB/s: remaining 5 MB
+        // takes 2 s -> completion at 2.5 s
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: 0.5,
+            channel: 0,
+            capacity_mbps: 2.5,
+            latency_s: 0.0,
+        }]);
+        sim.start_flow(0, 1, vec![0], 10.0, 0);
+        let t = sim.run_until_idle();
+        assert!((t - 2.5).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn capacity_shift_recovery_speeds_flow_back_up() {
+        // degrade 10 -> 2 at t=0.2 (2 MB moved), recover at t=1.2 (2 MB
+        // moved), remaining 6 MB at 10 MB/s -> done at 1.8 s
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.schedule_shifts(vec![
+            ChannelShift { at_s: 0.2, channel: 0, capacity_mbps: 2.0, latency_s: 0.0 },
+            ChannelShift { at_s: 1.2, channel: 0, capacity_mbps: 10.0, latency_s: 0.0 },
+        ]);
+        sim.start_flow(0, 1, vec![0], 10.0, 0);
+        let t = sim.run_until_idle();
+        assert!((t - 1.8).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn latency_shift_applies_to_later_completions() {
+        let mut sim = two_host_net(10.0, 0.05);
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: 0.5,
+            channel: 0,
+            capacity_mbps: 10.0,
+            latency_s: 0.2,
+        }]);
+        sim.start_flow(0, 1, vec![0], 10.0, 0); // drains at t=1.0, after the shift
+        sim.run_until_idle();
+        let rec = &sim.completed()[0];
+        assert!((rec.end - 1.2).abs() < 1e-9, "delivery {}", rec.end);
+    }
+
+    #[test]
+    fn shift_before_any_flow_applies_to_new_flows() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: 1.0,
+            channel: 0,
+            capacity_mbps: 5.0,
+            latency_s: 0.0,
+        }]);
+        sim.advance_to(2.0); // idle advance crosses the shift
+        sim.start_flow(0, 1, vec![0], 5.0, 0);
+        let t = sim.run_until_idle();
+        assert!((t - 3.0).abs() < 1e-9, "t={t}");
+        assert_eq!(sim.channel(0).capacity_mbps, 5.0);
+    }
+
+    #[test]
+    fn no_shift_trajectory_is_bit_identical() {
+        let build = || {
+            let mut sim = two_host_net(10.0, 0.01);
+            sim.start_flow(0, 1, vec![0], 5.0, 0);
+            sim.start_flow(0, 1, vec![0], 9.0, 1);
+            sim.start_flow(1, 0, vec![1], 3.0, 2);
+            sim
+        };
+        let mut plain = build();
+        plain.run_until_idle();
+        let mut with_machinery = build();
+        // install a zero-amplitude drift (uninstalls itself) and no shifts
+        with_machinery.set_drift(DriftProcess { amplitude: 0.0, interval_s: 1.0 }, 7);
+        with_machinery.run_until_idle();
+        assert_eq!(plain.now().to_bits(), with_machinery.now().to_bits());
+        for (a, b) in plain.completed().iter().zip(with_machinery.completed()) {
+            assert_eq!(a, b);
+            assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn drift_is_deterministic_and_bounded() {
+        let run = |seed| {
+            let mut sim = two_host_net(10.0, 0.0);
+            sim.set_drift(DriftProcess { amplitude: 0.3, interval_s: 0.25 }, seed);
+            for i in 0..6 {
+                sim.start_flow(0, 1, vec![0], 4.0, i);
+            }
+            sim.run_until_idle();
+            (sim.now(), sim.completed().to_vec())
+        };
+        let (t1, r1) = run(42);
+        let (t2, r2) = run(42);
+        assert_eq!(t1.to_bits(), t2.to_bits(), "same seed must replay");
+        assert_eq!(r1, r2);
+        let (t3, _) = run(43);
+        assert!(t1 != t3, "different drift seed should perturb the trajectory");
+        // capacity stays inside the drift envelope at all times
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.set_drift(DriftProcess { amplitude: 0.3, interval_s: 0.25 }, 5);
+        for k in 1..20 {
+            sim.advance_to(0.25 * k as f64 + 0.01);
+            let cap = sim.channel(0).capacity_mbps;
+            assert!((7.0..=13.0).contains(&cap), "cap {cap} outside envelope");
+        }
+    }
+
+    #[test]
+    fn scripted_shift_rebases_the_drift_process() {
+        // a 4x degradation must survive later drift ticks: the process
+        // wiggles around the shifted base, not the install-time one
+        let mut sim = two_host_net(20.0, 0.0);
+        sim.set_drift(DriftProcess { amplitude: 0.1, interval_s: 0.25 }, 9);
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: 0.1,
+            channel: 0,
+            capacity_mbps: 5.0,
+            latency_s: 0.0,
+        }]);
+        sim.advance_to(3.0); // crosses the shift and many drift ticks
+        let cap = sim.channel(0).capacity_mbps;
+        assert!(
+            (4.5..=5.5).contains(&cap),
+            "drift erased the scripted degradation: cap {cap}"
+        );
+    }
+
+    #[test]
+    fn route_ping_reflects_current_channel_state() {
+        let mut sim = two_host_net(10.0, 0.05);
+        let before = sim.route_ping_ms(&[0], 56);
+        assert!((before - 100.0).abs() < 0.1, "2×50 ms propagation, got {before}");
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: 1.0,
+            channel: 0,
+            capacity_mbps: 2.5,
+            latency_s: 0.2,
+        }]);
+        sim.advance_to(2.0);
+        let after = sim.route_ping_ms(&[0], 56);
+        assert!((after - 400.0).abs() < 0.5, "degraded ping {after}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! measurement used as edge cost, and construction of the overlay cost
 //! graph for a given topology structure.
 
-use super::{Channel, ChannelId, HostId, LossModel, NetSim};
+use super::{Channel, ChannelId, DriftProcess, HostId, LossModel, NetSim};
 use crate::config::ExperimentConfig;
 use crate::graph::Graph;
 use crate::util::rng::Pcg64;
@@ -173,6 +173,19 @@ impl Testbed {
         sim
     }
 
+    /// Fresh simulator with seeded link-quality drift installed (the
+    /// dynamic network plane): every `drift.interval_s` of simulated time
+    /// each channel's capacity/latency are rescaled around their base
+    /// values (see [`DriftProcess`]). `drift.amplitude == 0` is
+    /// bit-identical to [`Testbed::netsim`].
+    pub fn netsim_with_drift(&self, seed: u64, drift: DriftProcess) -> NetSim {
+        let mut sim = self.netsim(seed);
+        // an independent stream so drift draws never interleave with the
+        // simulator's transfer-jitter rng
+        sim.set_drift(drift, self.cfg.seed ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xd41f7);
+        sim
+    }
+
     /// Fresh simulator with an explicit loss model (used by calibration and
     /// ablation benches).
     pub fn netsim_with_loss(&self, seed: u64, loss: LossModel) -> NetSim {
@@ -291,6 +304,26 @@ mod tests {
             assert!(rec.bandwidth_mbps() < 12.0, "should be near half rate: {rec:?}");
             assert!(rec.bandwidth_mbps() > 9.0, "{rec:?}");
         }
+    }
+
+    #[test]
+    fn drift_free_netsim_with_drift_matches_netsim() {
+        let tb = Testbed::new(&ExperimentConfig::default());
+        let run = |mut sim: super::NetSim| {
+            sim.start_flow(0, 1, tb.route(0, 1), 14.0, 0);
+            sim.start_flow(2, 5, tb.route(2, 5), 14.0, 1);
+            sim.run_until_idle();
+            (sim.now(), sim.take_completed())
+        };
+        let (t0, r0) = run(tb.netsim(3));
+        let (t1, r1) =
+            run(tb.netsim_with_drift(3, DriftProcess { amplitude: 0.0, interval_s: 10.0 }));
+        assert_eq!(t0.to_bits(), t1.to_bits());
+        assert_eq!(r0, r1);
+        // a real amplitude perturbs the trajectory
+        let (t2, _) =
+            run(tb.netsim_with_drift(3, DriftProcess { amplitude: 0.3, interval_s: 0.1 }));
+        assert!(t0 != t2, "drift had no effect");
     }
 
     #[test]

@@ -381,6 +381,70 @@ fn pipelining_strictly_beats_sequential_on_ring_star_tree() {
 }
 
 #[test]
+fn adaptive_rounds_with_static_plane_are_bit_identical_across_topologies() {
+    // the adaptive plane's compatibility anchor: --drift 0 --probe-every 0
+    // (the defaults) must replay the PR-2 pipelined engine bit for bit on
+    // every paper topology, with the default latency jitter enabled
+    for kind in TopologyKind::ALL {
+        let cfg = ExperimentConfig { topology: kind, ..Default::default() }; // jitter 0.08
+        assert_eq!(cfg.drift, 0.0);
+        assert_eq!(cfg.probe_every, 0);
+        let session = GossipSession::new(&cfg).unwrap();
+        let base = session.run_pipelined_rounds(14.0, 3, 5);
+        let adaptive = session.run_adaptive_rounds(14.0, 3, 5);
+        assert!(adaptive.replans.is_empty(), "{kind:?}: static plane must never replan");
+        assert_eq!(adaptive.slots, base.slots, "{kind:?}");
+        assert_eq!(
+            adaptive.total_time_s.to_bits(),
+            base.total_time_s.to_bits(),
+            "{kind:?}: total time diverged"
+        );
+        assert_eq!(adaptive.transfers.len(), base.transfers.len(), "{kind:?}");
+        for (a, b) in adaptive.transfers.iter().zip(&base.transfers) {
+            assert_eq!(a, b, "{kind:?}: transfer diverged");
+            assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+        assert_eq!(adaptive.rounds.len(), base.rounds.len());
+        for (a, b) in adaptive.rounds.iter().zip(&base.rounds) {
+            assert_eq!(a.done_s.to_bits(), b.done_s.to_bits(), "{kind:?}: phase diverged");
+            assert_eq!(a.first_seed_s.to_bits(), b.first_seed_s.to_bits());
+            assert_eq!((a.first_slot, a.last_slot), (b.first_slot, b.last_slot));
+        }
+        assert_eq!(adaptive.received, base.received, "{kind:?}: fold inputs diverged");
+    }
+}
+
+#[test]
+fn adaptive_noop_hook_is_bit_identical_under_failures_and_segments() {
+    // engine-level: run_pipelined vs run_pipelined_adaptive with a no-op
+    // hook, under failure injection and under a segmented plan — future
+    // edits to the adaptive path must not fork the static trajectory
+    let cfg = ExperimentConfig::default(); // jitter 0.08
+    let session = GossipSession::new(&cfg).unwrap();
+    let tree = session.tree().clone();
+    let mk_opts = |plan: TransferPlan| mosgu::coordinator::engine::PipelineOptions {
+        rounds: 3,
+        plan,
+        max_slots: 4 * (8 * 10 + 64),
+        failure_prob: 0.15,
+        failure_rng: Pcg64::new(11),
+    };
+    for plan in [TransferPlan::whole(14.0), TransferPlan::segmented(36.8, 4)] {
+        let mut d1 = SimDriver::new(session.testbed(), 9);
+        let mut e1 = RoundEngine::new(&mut d1, session.schedule());
+        let plain = e1.run_pipelined(&tree, mk_opts(plan));
+        let mut d2 = SimDriver::new(session.testbed(), 9);
+        let mut e2 = RoundEngine::new(&mut d2, session.schedule());
+        let adaptive = e2.run_pipelined_adaptive(&tree, mk_opts(plan), |_, _, _| None);
+        assert_eq!(plain.total_time_s.to_bits(), adaptive.total_time_s.to_bits());
+        assert_eq!(plain.slots, adaptive.slots);
+        assert_eq!(plain.transfers, adaptive.transfers);
+        assert_eq!(plain.received, adaptive.received);
+        assert!(adaptive.replans.is_empty());
+    }
+}
+
+#[test]
 fn live_driver_runs_the_same_protocol_over_a_memory_mesh() {
     let schedule = build_schedule(
         &example::paper_example_graph(),

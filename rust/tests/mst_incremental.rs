@@ -1,0 +1,113 @@
+//! Differential property tests for `mst::incremental`: after **any**
+//! single-edge weight change, the union-find edge-swap update must land
+//! on a minimum spanning tree of the new costs — pinned against
+//! from-scratch Kruskal, Prim and Borůvka (total weight; ties permit
+//! different but equally-optimal edge sets) across every paper topology
+//! family, ≥ 256 cases per property.
+
+use mosgu::graph::topology::{self, TopologyKind, TopologyParams};
+use mosgu::graph::Graph;
+use mosgu::mst::incremental::{update_edge_weight, update_mst};
+use mosgu::mst::{boruvka, is_spanning_tree_of, kruskal, prim};
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+
+/// A random connected structure from one of the eight topology families,
+/// re-weighted with random (almost surely distinct) positive costs.
+fn random_costs(rng: &mut Pcg64) -> Graph {
+    let kind = TopologyKind::EXTENDED[rng.gen_range(TopologyKind::EXTENDED.len())];
+    let n = 4 + rng.gen_range(17); // 4..=20 nodes
+    let structure = topology::generate(kind, n, &TopologyParams::default(), rng);
+    let mut g = Graph::new(n);
+    for e in structure.edges() {
+        g.add_edge(e.u, e.v, rng.gen_f64_range(1.0, 1000.0));
+    }
+    g
+}
+
+/// `g` with the weight of one edge replaced.
+fn reweighted(g: &Graph, u: usize, v: usize, w: f64) -> Graph {
+    let mut out = Graph::new(g.node_count());
+    for e in g.edges() {
+        let ew = if (e.u, e.v) == (u.min(v), u.max(v)) { w } else { e.weight };
+        out.add_edge(e.u, e.v, ew);
+    }
+    out
+}
+
+#[test]
+fn incremental_update_matches_scratch_algorithms_on_paper_topologies() {
+    check("incremental MST == scratch MST", 320, |rng| {
+        let g = random_costs(rng);
+        let tree = kruskal(&g).map_err(|e| format!("base MST: {e}"))?;
+
+        // perturb one random edge: grow, shrink, or wholesale re-draw
+        let e = g.edges()[rng.gen_range(g.edge_count())];
+        let new_w = match rng.gen_range(3) {
+            0 => e.weight * rng.gen_f64_range(1.5, 8.0), // degrade
+            1 => e.weight * rng.gen_f64_range(0.05, 0.8), // recover
+            _ => rng.gen_f64_range(1.0, 1000.0),          // re-draw
+        };
+        let g2 = reweighted(&g, e.u, e.v, new_w);
+
+        let inc = update_edge_weight(&g2, &tree, e.u, e.v)
+            .map_err(|err| format!("incremental update: {err}"))?;
+        if !is_spanning_tree_of(&inc, &g2) {
+            return Err(format!(
+                "incremental result is not a spanning tree of the new costs (edge {}-{} -> {new_w})",
+                e.u, e.v
+            ));
+        }
+        let want = kruskal(&g2).map_err(|err| format!("kruskal: {err}"))?.total_weight();
+        for (name, got) in [
+            ("incremental", inc.total_weight()),
+            ("prim", prim(&g2).map_err(|err| format!("prim: {err}"))?.total_weight()),
+            ("boruvka", boruvka(&g2).map_err(|err| format!("boruvka: {err}"))?.total_weight()),
+        ] {
+            if (got - want).abs() > 1e-6 * want.max(1.0) {
+                return Err(format!(
+                    "{name} weight {got} != kruskal {want} after ({},{}) -> {new_w}",
+                    e.u, e.v
+                ));
+            }
+        }
+
+        // the moderator-facing diff entry must agree with the direct call
+        let via_diff =
+            update_mst(&tree, &g, &g2).map_err(|err| format!("update_mst: {err}"))?;
+        if (via_diff.total_weight() - inc.total_weight()).abs() > 1e-9 {
+            return Err("update_mst disagrees with update_edge_weight".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn repeated_incremental_updates_track_the_true_mst() {
+    // a drift episode: many successive single-edge changes, the tree
+    // maintained incrementally throughout, must stay optimal at each step
+    check("incremental MST tracks drift episodes", 64, |rng| {
+        let mut costs = random_costs(rng);
+        let mut tree = kruskal(&costs).map_err(|e| format!("base MST: {e}"))?;
+        for step in 0..8 {
+            let e = costs.edges()[rng.gen_range(costs.edge_count())];
+            let new_w = rng.gen_f64_range(1.0, 1000.0);
+            let next = reweighted(&costs, e.u, e.v, new_w);
+            tree = update_mst(&tree, &costs, &next)
+                .map_err(|err| format!("step {step}: {err}"))?;
+            costs = next;
+            let want = kruskal(&costs).map_err(|err| format!("step {step}: {err}"))?;
+            if (tree.total_weight() - want.total_weight()).abs() > 1e-6 {
+                return Err(format!(
+                    "step {step}: maintained {} vs scratch {}",
+                    tree.total_weight(),
+                    want.total_weight()
+                ));
+            }
+            if !is_spanning_tree_of(&tree, &costs) {
+                return Err(format!("step {step}: maintained tree left the cost graph"));
+            }
+        }
+        Ok(())
+    });
+}

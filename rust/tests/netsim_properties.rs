@@ -4,7 +4,7 @@
 use mosgu::config::ExperimentConfig;
 use mosgu::netsim::fairshare::max_min_rates;
 use mosgu::netsim::testbed::Testbed;
-use mosgu::netsim::{Channel, LossModel, NetSim};
+use mosgu::netsim::{Channel, ChannelShift, DriftProcess, LossModel, NetSim};
 use mosgu::util::proptest::check;
 use mosgu::util::rng::Pcg64;
 use mosgu::{prop_assert, prop_assert_eq};
@@ -129,6 +129,120 @@ fn completed_records_account_for_all_flows() {
         prop_assert_eq!(sim.active_flow_count(), 0);
         // end times are all >= start times and finite
         for r in sim.completed() {
+            prop_assert!(r.end.is_finite() && r.end >= r.start);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn byte_conservation_and_monotone_clock_under_capacity_schedules() {
+    // random piecewise capacity/latency schedules: every started flow
+    // still completes exactly once, the event clock never rewinds, and
+    // no flow beats the physics of the *best* capacity its channel ever
+    // had
+    check("time-varying byte conservation", 150, |rng| {
+        let nc = 1 + rng.gen_range(4);
+        let base_caps: Vec<f64> = (0..nc).map(|_| rng.gen_f64_range(2.0, 40.0)).collect();
+        let chans: Vec<Channel> = base_caps
+            .iter()
+            .enumerate()
+            .map(|(i, &cap)| Channel {
+                capacity_mbps: cap,
+                latency_s: rng.gen_f64_range(0.0, 0.02),
+                label: format!("c{i}"),
+            })
+            .collect();
+        let mut sim =
+            NetSim::new(chans, LossModel { gain: 0.0, size_scale_mb: 1.0 }, 0.0, rng.next_u64());
+
+        // cap_max[c] = best capacity channel c ever runs at
+        let mut cap_max = base_caps.clone();
+        let mut shifts = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..rng.gen_range(12) {
+            t += rng.gen_f64_range(0.05, 1.5);
+            let c = rng.gen_range(nc);
+            let cap = rng.gen_f64_range(1.0, 40.0);
+            cap_max[c] = cap_max[c].max(cap);
+            shifts.push(ChannelShift {
+                at_s: t,
+                channel: c,
+                capacity_mbps: cap,
+                latency_s: rng.gen_f64_range(0.0, 0.02),
+            });
+        }
+        sim.schedule_shifts(shifts);
+
+        // flows tagged with their channel so records can be matched back
+        let nf = 1 + rng.gen_range(20);
+        let mut payloads = Vec::new();
+        for i in 0..nf {
+            let c = rng.gen_range(nc);
+            let mb = rng.gen_f64_range(0.5, 16.0);
+            sim.start_flow(0, 1, vec![c], mb, ((c as u64) << 32) | i as u64);
+            payloads.push(mb);
+        }
+
+        let mut prev = sim.now();
+        let mut done = 0;
+        loop {
+            let events = sim.run_next_completion();
+            if events.is_empty() {
+                break;
+            }
+            prop_assert!(sim.now() >= prev - 1e-12, "clock rewound {prev} -> {}", sim.now());
+            prev = sim.now();
+            done += events.len();
+        }
+        prop_assert_eq!(done, nf);
+        prop_assert_eq!(sim.active_flow_count(), 0);
+        prop_assert_eq!(sim.completed().len(), nf);
+        for r in sim.completed() {
+            prop_assert!(r.end.is_finite() && r.end >= r.start, "{r:?}");
+            let c = (r.tag >> 32) as usize;
+            // even drained entirely at the channel's best-ever capacity,
+            // the payload needs at least payload/cap_max seconds
+            prop_assert!(
+                r.duration() >= r.payload_mb / cap_max[c] - 1e-9,
+                "flow {r:?} beat best-case capacity {}",
+                cap_max[c]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drift_preserves_conservation_and_determinism() {
+    check("drift conservation", 60, |rng| {
+        let seed = rng.next_u64();
+        let amplitude = rng.gen_f64_range(0.05, 0.45);
+        let run = || {
+            let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+            let tb = Testbed::new(&cfg);
+            let mut sim = tb.netsim_with_drift(
+                seed,
+                DriftProcess { amplitude, interval_s: 0.2 },
+            );
+            let n = cfg.nodes;
+            let mut started = 0;
+            let mut rng2 = Pcg64::new(seed ^ 0xabc);
+            for _ in 0..(1 + rng2.gen_range(25)) {
+                let u = rng2.gen_range(n);
+                let v = (u + 1 + rng2.gen_range(n - 1)) % n;
+                sim.start_flow(u, v, tb.route(u, v), rng2.gen_f64_range(0.5, 8.0), 0);
+                started += 1;
+            }
+            let end = sim.run_until_idle();
+            (started, end, sim.take_completed())
+        };
+        let (started, end_a, rec_a) = run();
+        let (_, end_b, rec_b) = run();
+        prop_assert_eq!(rec_a.len(), started);
+        prop_assert_eq!(end_a.to_bits(), end_b.to_bits());
+        prop_assert_eq!(rec_a, rec_b);
+        for r in rec_a {
             prop_assert!(r.end.is_finite() && r.end >= r.start);
         }
         Ok(())

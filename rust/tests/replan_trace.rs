@@ -1,0 +1,165 @@
+//! Golden trace of a **replanned** session, `tests/table1_trace.rs`
+//! style: the paper's 10-node example runs pipelined rounds through the
+//! untimed logical driver; after round 0 a forced replan migrates the
+//! pipeline to a chain tree. Pinned: the Table I structure of the
+//! pre-replan round (slot-1 send set and every node's full reception
+//! order), the recorded [`ReplanEvent`], the bit-identical pre-replan
+//! transfer prefix against an unreplanned run, and the post-replan
+//! rounds gossiping on (and only on) the new tree's edges.
+
+use mosgu::coloring::bfs_coloring;
+use mosgu::coordinator::engine::driver::LogicalDriver;
+use mosgu::coordinator::engine::{PipelineMetrics, PipelineOptions, PlanEpoch, RoundEngine};
+use mosgu::coordinator::example as ex;
+use mosgu::coordinator::schedule::{build_schedule, Schedule};
+use mosgu::graph::topology;
+use mosgu::graph::Graph;
+
+fn paper_schedule() -> Schedule {
+    build_schedule(
+        &ex::paper_example_graph(),
+        ex::paper_example_coloring(),
+        14.0,
+        56,
+        ex::RED,
+    )
+}
+
+fn chain_epoch() -> PlanEpoch {
+    let tree = topology::chain(10);
+    let coloring = bfs_coloring(&tree);
+    PlanEpoch { tree, schedule: Schedule { coloring, slot_len_s: 1.0, first_color: 0 } }
+}
+
+/// Three pipelined rounds with a forced replan after round 0 (adopted
+/// before round 2 exists — round 1 is already in flight on the paper
+/// tree when round 0 retires, so the chain epoch governs round 2).
+fn replanned_run() -> PipelineMetrics {
+    let schedule = paper_schedule();
+    let mut driver = LogicalDriver::new();
+    let mut engine = RoundEngine::new(&mut driver, &schedule);
+    let chain = chain_epoch();
+    engine.run_pipelined_adaptive(
+        &ex::paper_example_mst(),
+        PipelineOptions::reliable(3, 1.0, 10),
+        |_d, round, _now| (round == 0).then(|| chain.clone()),
+    )
+}
+
+fn plain_run() -> PipelineMetrics {
+    let schedule = paper_schedule();
+    let mut driver = LogicalDriver::new();
+    let mut engine = RoundEngine::new(&mut driver, &schedule);
+    engine.run_pipelined(&ex::paper_example_mst(), PipelineOptions::reliable(3, 1.0, 10))
+}
+
+#[test]
+fn replan_event_is_recorded_once_at_the_round_boundary() {
+    let p = replanned_run();
+    assert_eq!(p.replans.len(), 1, "exactly one forced replan");
+    let ev = &p.replans[0];
+    assert_eq!(ev.after_round, 0);
+    assert!(ev.tree_changed, "paper MST -> chain is a real tree change");
+    assert!(ev.at_s > 0.0);
+    assert_eq!(p.rounds.len(), 3, "all three rounds complete");
+    for (r, orders) in p.received.iter().enumerate() {
+        for (u, order) in orders.iter().enumerate() {
+            assert_eq!(order.len(), 9, "round {r} node {u} missed models");
+        }
+    }
+}
+
+#[test]
+fn pre_replan_round_replays_table1_exactly() {
+    let p = replanned_run();
+    // slot 1 (the first red slot): Table I's nine sends, verbatim
+    let first_tick: Vec<(usize, usize)> = p
+        .transfers
+        .iter()
+        .filter(|r| r.start == 0.0)
+        .map(|r| (r.src, r.dst))
+        .collect();
+    let mut expect = vec![
+        (ex::H, ex::A),
+        (ex::C, ex::B),
+        (ex::I, ex::B),
+        (ex::C, ex::D),
+        (ex::E, ex::F),
+        (ex::G, ex::F),
+        (ex::H, ex::F),
+        (ex::G, ex::K),
+        (ex::I, ex::K),
+    ];
+    let mut got = first_tick.clone();
+    got.sort_unstable();
+    expect.sort_unstable();
+    assert_eq!(got, expect, "slot-1 send set diverged from Table I");
+
+    // round 0 reception orders: the paper's final Table I row, minus the
+    // leading own-model label
+    let table1_minus_own = [
+        "HFEGKIBCD", "CIDKGFEHA", "BDIKGFEHA", "CBIKGFEHA", "FGHAKIBCD", "EGHAKIBCD",
+        "FKEIHABCD", "AFEGKIBCD", "BKCGDFEHA", "GIFBECHDA",
+    ];
+    for (u, want) in table1_minus_own.iter().enumerate() {
+        let got: String = p.received[0][u].iter().map(|&o| ex::label(o)).collect();
+        assert_eq!(&got, want, "round 0 node {} order", ex::label(u));
+    }
+}
+
+#[test]
+fn pre_replan_prefix_is_bit_identical_to_the_unreplanned_run() {
+    // migration cannot rewrite history: everything that completed before
+    // the replan must match an unreplanned pipeline move for move
+    let adaptive = replanned_run();
+    let plain = plain_run();
+    let at = adaptive.replans[0].at_s;
+    let pre_a: Vec<_> = adaptive.transfers.iter().filter(|r| r.end <= at).collect();
+    let pre_p: Vec<_> = plain.transfers.iter().filter(|r| r.end <= at).collect();
+    assert!(!pre_a.is_empty());
+    assert_eq!(pre_a.len(), pre_p.len(), "pre-replan transfer count diverged");
+    for (a, b) in pre_a.iter().zip(&pre_p) {
+        assert_eq!(a, b, "pre-replan transfer diverged");
+    }
+}
+
+#[test]
+fn post_replan_rounds_gossip_on_the_chain() {
+    let p = replanned_run();
+    let paper = ex::paper_example_mst();
+    let chain: Graph = topology::chain(10);
+    let at = p.replans[0].at_s;
+    // every flow rides an edge of the epoch trees, nothing else
+    for r in &p.transfers {
+        assert!(
+            paper.has_edge(r.src, r.dst) || chain.has_edge(r.src, r.dst),
+            "flow {}->{} on neither epoch's tree",
+            r.src,
+            r.dst
+        );
+    }
+    // chain-only edges (absent from the paper MST) appear, and only
+    // after the migration
+    let migrated: Vec<_> = p
+        .transfers
+        .iter()
+        .filter(|r| chain.has_edge(r.src, r.dst) && !paper.has_edge(r.src, r.dst))
+        .collect();
+    assert!(!migrated.is_empty(), "round 2 never used the new tree");
+    for r in &migrated {
+        assert!(r.start >= at - 1e-9, "new-tree flow at {} before replan at {at}", r.start);
+    }
+    // and the paper-only edges carry no traffic once rounds 0/1 drained:
+    // the last old-tree flow ends no later than round 1's retirement
+    let paper_only_end = p
+        .transfers
+        .iter()
+        .filter(|r| paper.has_edge(r.src, r.dst) && !chain.has_edge(r.src, r.dst))
+        .map(|r| r.end)
+        .fold(0.0f64, f64::max);
+    assert!(
+        paper_only_end <= p.rounds[1].done_s + 1e-9,
+        "old-tree traffic {paper_only_end} outlived round 1 ({})",
+        p.rounds[1].done_s
+    );
+}
