@@ -9,18 +9,30 @@
 //! cargo run --release --example topology_sweep [-- --models v3s,b0,b3]
 //! cargo run --release --example topology_sweep -- --segments 1,4,8
 //! cargo run --release --example topology_sweep -- --drift 0.3
+//! cargo run --release --example topology_sweep -- --subnets 1,4,8 --scale-nodes 96
+//! cargo run --release --example topology_sweep -- --skip-grid --subnets 1,4
 //! ```
+//!
+//! `--skip-grid` skips the paper Table II–V grid and runs only the
+//! requested sweep dimensions (what CI's cookbook smoke uses).
 //!
 //! `--drift A` adds the dynamic-plane dimension: pipelined rounds over
 //! drifting links (amplitude `A`), with the frozen session-start plan
 //! vs online probing + re-planning (`--probe-every`, default 1).
+//!
+//! `--subnets a,b,c` adds the scale-out dimension: a router-hierarchy
+//! overlay of `--scale-nodes` nodes per subnet count, hierarchically
+//! planned (per-subnet MST + coloring stitched through the gateway
+//! backbone), with the exchange phase run on the sequential simulator vs
+//! the sharded per-subnet simulator (see docs/ARCHITECTURE.md).
 
 use mosgu::bench::tables::{all_models, run_grid};
 use mosgu::config::ExperimentConfig;
-use mosgu::coordinator::session::GossipSession;
+use mosgu::coordinator::session::{GossipSession, ScaleScenario};
 use mosgu::dfl::models::by_code;
 use mosgu::dfl::transfer::TransferPlan;
 use mosgu::graph::topology::TopologyKind;
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     mosgu::util::logger::init();
@@ -68,40 +80,66 @@ fn main() -> anyhow::Result<()> {
         Some(r) => r.parse().map_err(|e| anyhow::anyhow!("bad --probe-every {r}: {e}"))?,
         None => 1,
     };
+    let subnet_counts: Vec<usize> = match flag_value("--subnets")? {
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                let k: usize =
+                    s.trim().parse().map_err(|e| anyhow::anyhow!("bad --subnets {s}: {e}"))?;
+                anyhow::ensure!(k >= 1, "--subnets must be >= 1");
+                Ok(k)
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+        None => Vec::new(),
+    };
+    let scale_nodes: usize = match flag_value("--scale-nodes")? {
+        Some(n) => n.parse().map_err(|e| anyhow::anyhow!("bad --scale-nodes {n}: {e}"))?,
+        None => 96,
+    };
+    // --skip-grid: jump straight to the requested sweep dimensions
+    // (CI smokes the subnet sweep without paying for the paper grid)
+    let skip_grid = args.iter().any(|a| a == "--skip-grid");
 
     let cfg = ExperimentConfig { repeats: 3, ..Default::default() };
-    let cells = run_grid(&cfg, &TopologyKind::ALL, &models, |s| eprintln!("running {s}"))?;
+    if !skip_grid {
+        let cells = run_grid(&cfg, &TopologyKind::ALL, &models, |s| eprintln!("running {s}"))?;
 
-    println!("\n{:<17}{:>6}{:>10}{:>10}{:>10}{:>11}{:>11}", "topology", "model", "P:bw", "P:xfer", "P:round", "bw-gain", "time-gain");
-    for c in &cells {
+        println!("\n{:<17}{:>6}{:>10}{:>10}{:>10}{:>11}{:>11}", "topology", "model", "P:bw", "P:xfer", "P:round", "bw-gain", "time-gain");
+        for c in &cells {
+            println!(
+                "{:<17}{:>6}{:>10.2}{:>10.2}{:>10.2}{:>10.1}x{:>10.1}x",
+                c.topology,
+                c.model,
+                c.proposed.bandwidth.mean(),
+                c.proposed.transfer.mean(),
+                c.proposed.exchange.mean(),
+                c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean(),
+                c.broadcast.total.mean() / c.proposed.exchange.mean(),
+            );
+        }
+
+        // §V-B qualitative checks
+        println!("\n== paper §V-B qualitative checks ==");
+        let mean_over = |topo: &str, f: &dyn Fn(&mosgu::metrics::Cell) -> f64| {
+            let xs: Vec<f64> = cells.iter().filter(|c| c.topology == topo).map(f).collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        let gain =
+            |c: &mosgu::metrics::Cell| c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean();
+        for kind in TopologyKind::ALL {
+            println!(
+                "  {:<17} mean bandwidth gain {:.2}x",
+                kind.name(),
+                mean_over(kind.name(), &gain)
+            );
+        }
+        let ba = mean_over("Barabasi-Albert", &|c| c.proposed.transfer.mean());
+        let er = mean_over("Erdos-Renyi", &|c| c.proposed.transfer.mean());
         println!(
-            "{:<17}{:>6}{:>10.2}{:>10.2}{:>10.2}{:>10.1}x{:>10.1}x",
-            c.topology,
-            c.model,
-            c.proposed.bandwidth.mean(),
-            c.proposed.transfer.mean(),
-            c.proposed.exchange.mean(),
-            c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean(),
-            c.broadcast.total.mean() / c.proposed.exchange.mean(),
+            "  BA mean transfer {ba:.2} s vs ER {er:.2} s -> hubs slow BA down: {}",
+            if ba > er { "yes (matches paper)" } else { "no" }
         );
     }
-
-    // §V-B qualitative checks
-    println!("\n== paper §V-B qualitative checks ==");
-    let mean_over = |topo: &str, f: &dyn Fn(&mosgu::metrics::Cell) -> f64| {
-        let xs: Vec<f64> = cells.iter().filter(|c| c.topology == topo).map(f).collect();
-        xs.iter().sum::<f64>() / xs.len() as f64
-    };
-    let gain = |c: &mosgu::metrics::Cell| c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean();
-    for kind in TopologyKind::ALL {
-        println!("  {:<17} mean bandwidth gain {:.2}x", kind.name(), mean_over(kind.name(), &gain));
-    }
-    let ba = mean_over("Barabasi-Albert", &|c| c.proposed.transfer.mean());
-    let er = mean_over("Erdos-Renyi", &|c| c.proposed.transfer.mean());
-    println!(
-        "  BA mean transfer {ba:.2} s vs ER {er:.2} s -> hubs slow BA down: {}",
-        if ba > er { "yes (matches paper)" } else { "no" }
-    );
 
     // segment-granularity dimension: cut-through forwarding vs whole-model
     // transfers, on the paper grid plus the deep-relay shapes where
@@ -139,6 +177,42 @@ fn main() -> anyhow::Result<()> {
                 row.push_str(&format!("{:>9.2}x", whole / best));
                 println!("{row}");
             }
+        }
+    }
+
+    // scale-out dimension: hierarchical planning + sharded simulation of
+    // the exchange phase, sequential vs per-subnet-parallel
+    if !subnet_counts.is_empty() {
+        println!("\n== subnet sweep (exchange phase, n = {scale_nodes}) ==");
+        println!(
+            "{:<9}{:>8}{:>12}{:>12}{:>12}{:>12}{:>10}",
+            "subnets", "shards", "sim_seq_s", "sim_shard_s", "wall_seq_s", "wall_shard_s", "speedup"
+        );
+        for &subnets in &subnet_counts {
+            anyhow::ensure!(subnets <= scale_nodes, "--subnets {subnets} > --scale-nodes");
+            let scfg = ExperimentConfig {
+                nodes: scale_nodes,
+                subnets,
+                latency_jitter: 0.0,
+                ..cfg.clone()
+            };
+            let scenario = ScaleScenario::new(&scfg, 14.0)?;
+            let t0 = Instant::now();
+            let seq = scenario.run_exchange(14.0, cfg.seed, 0.0, false, false);
+            let wall_seq = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let shard = scenario.run_exchange(14.0, cfg.seed, 0.0, true, true);
+            let wall_shard = t1.elapsed().as_secs_f64();
+            println!(
+                "{:<9}{:>8}{:>12.3}{:>12.3}{:>12.4}{:>12.4}{:>9.2}x",
+                subnets,
+                mosgu::netsim::shard::ShardedNetSim::planned_shard_count(subnets),
+                seq.total_time_s,
+                shard.total_time_s,
+                wall_seq,
+                wall_shard,
+                wall_seq / wall_shard.max(1e-9),
+            );
         }
     }
 

@@ -1,0 +1,124 @@
+//! Scale sweep: wall-clock cost of simulating one gossip-round exchange
+//! phase on the sequential single-queue simulator vs the sharded
+//! per-subnet simulator, over router-hierarchy overlays of growing n.
+//!
+//! The exchange phase (every node's own model to each tree neighbor) is
+//! the blocking part of an FL round — Table V's indicator; the O(n²)
+//! dissemination tail pipelines with later rounds (§III-D) — and is the
+//! unit large-n scenarios are measured in. Both simulators run the *same*
+//! topology and hierarchical plan; only the event-queue decomposition
+//! differs, so the comparison isolates simulator scalability.
+//!
+//! Emits one `JSON {...}` line per cell; CI uploads them as the
+//! `scale-sweep` artifact. Full mode gates on the ISSUE-4 acceptance
+//! bar: a 32-subnet hierarchy at n = 10 000 must complete with
+//! byte-conserving metrics and run ≥ 4× faster sharded than sequential
+//! (mirrored by the `#[ignore]`d release test in `tests/scale_shard.rs`).
+//!
+//! ```bash
+//! cargo bench --bench scale_sweep             # full grid incl. n = 10k + gate
+//! cargo bench --bench scale_sweep -- --smoke  # CI subset (n <= 1k, no gate)
+//! ```
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::ScaleScenario;
+use std::time::Instant;
+
+const MODEL_MB: f64 = 14.0;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let grid: &[(usize, usize)] = if smoke {
+        &[(100, 8), (1_000, 32)]
+    } else {
+        &[(100, 8), (1_000, 32), (10_000, 32)]
+    };
+
+    section(&format!(
+        "scale sweep: sequential vs sharded netsim, exchange phase ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:>7} {:>8} {:>7} {:>11} {:>12} {:>12} {:>9} {:>12}",
+        "n", "subnets", "copies", "sim_s", "wall_seq_s", "wall_shard_s", "speedup", "bytes_ok"
+    );
+
+    let mut ok = true;
+    for &(n, subnets) in grid {
+        let cfg = ExperimentConfig {
+            nodes: n,
+            subnets,
+            // ties batch completions; per-transfer jitter would explode
+            // the sequential event count (docs/EXPERIMENTS.md §Scale-out)
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let scenario = ScaleScenario::new(&cfg, MODEL_MB).expect("scenario");
+
+        let t0 = Instant::now();
+        let seq = scenario.run_exchange(MODEL_MB, 1, 0.0, false, false);
+        let wall_seq = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let shard = scenario.run_exchange(MODEL_MB, 1, 0.0, true, true);
+        let wall_shard = t1.elapsed().as_secs_f64();
+        let speedup = wall_seq / wall_shard.max(1e-9);
+
+        // byte conservation: 2(n-1) own-model copies of MODEL_MB each,
+        // delivered exactly once on both simulators
+        let expect_copies = 2 * (n - 1);
+        let expect_mb = expect_copies as f64 * MODEL_MB;
+        let bytes_ok = seq.transfer_count() == expect_copies
+            && shard.transfer_count() == expect_copies
+            && (seq.total_payload_mb() - expect_mb).abs() < 1e-6 * expect_mb
+            && (shard.total_payload_mb() - expect_mb).abs() < 1e-6 * expect_mb;
+        assert!(bytes_ok, "byte conservation violated at n={n}");
+
+        println!(
+            "{:>7} {:>8} {:>7} {:>11.3} {:>12.4} {:>12.4} {:>8.2}x {:>12}",
+            n,
+            subnets,
+            seq.transfer_count(),
+            shard.total_time_s,
+            wall_seq,
+            wall_shard,
+            speedup,
+            bytes_ok
+        );
+        println!(
+            "JSON {{\"bench\":\"scale_sweep\",\"n\":{n},\"subnets\":{subnets},\
+             \"copies\":{},\"model_mb\":{MODEL_MB},\
+             \"sim_seq_s\":{:.6},\"sim_shard_s\":{:.6},\
+             \"wall_seq_s\":{:.6},\"wall_shard_s\":{:.6},\"speedup\":{:.4},\
+             \"payload_mb\":{:.3},\"bytes_conserved\":{bytes_ok}}}",
+            seq.transfer_count(),
+            seq.total_time_s,
+            shard.total_time_s,
+            wall_seq,
+            wall_shard,
+            speedup,
+            shard.total_payload_mb(),
+        );
+
+        if n >= 10_000 {
+            let pass = speedup >= 4.0;
+            ok &= pass;
+            println!(
+                "  acceptance n={n}: sharded {:.3}s vs sequential {:.3}s -> {:.2}x ({})",
+                wall_shard,
+                wall_seq,
+                speedup,
+                if pass { "pass (>= 4x)" } else { "FAIL (< 4x)" }
+            );
+        }
+    }
+
+    if smoke {
+        println!("acceptance: skipped in smoke mode (needs the n=10k cell; run without --smoke)");
+    } else {
+        println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+        if !ok {
+            std::process::exit(1);
+        }
+    }
+}

@@ -9,10 +9,12 @@
 pub mod bfs;
 pub mod dsatur;
 pub mod greedy;
+pub mod stitch;
 
 pub use bfs::bfs_coloring;
 pub use dsatur::dsatur;
 pub use greedy::{largest_degree_first, welsh_powell};
+pub use stitch::stitched_tree_coloring;
 
 use crate::graph::{Graph, NodeId};
 

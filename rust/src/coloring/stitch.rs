@@ -1,0 +1,136 @@
+//! Per-subnet coloring stitched across a hierarchical gossip tree.
+//!
+//! Hierarchical planning (§III-C at scale) colors each subnet's subtree
+//! **independently** — the subnet's own moderator could compute it with
+//! no global view — then makes the colorings globally proper by flipping
+//! whole subnets: the stitched tree's cross-subnet edges form a tree over
+//! the subnets, so a BFS over that quotient tree can align each child
+//! subnet's parity with its parent through the one gateway edge joining
+//! them. With one subnet the function is exactly the flat coloring
+//! algorithm, bit for bit.
+
+use super::{Coloring, ColoringAlgorithm};
+use crate::graph::Graph;
+use std::collections::VecDeque;
+
+/// Color `tree` (a stitched hierarchical gossip tree) subnet by subnet
+/// and align parities across gateway edges. Falls back to running `alg`
+/// over the whole tree when any per-subnet coloring uses more than two
+/// colors (the greedy algorithms may on adversarial subtrees —
+/// docs/EXPERIMENTS.md §Deviations), so the result is always a proper
+/// coloring of `tree`.
+pub fn stitched_tree_coloring(tree: &Graph, subnet_of: &[usize], alg: ColoringAlgorithm) -> Coloring {
+    let n = tree.node_count();
+    assert_eq!(subnet_of.len(), n, "subnet assignment covers every node");
+    let k = subnet_of.iter().copied().max().map_or(0, |m| m + 1);
+    if k <= 1 {
+        return alg.run(tree); // flat fallback, bit for bit
+    }
+    let mut assignment = vec![0usize; n];
+    for s in 0..k {
+        let members: Vec<usize> = (0..n).filter(|&u| subnet_of[u] == s).collect();
+        let (sub, map) = tree.induced(&members);
+        let col = alg.run(&sub);
+        if col.num_colors() > 2 {
+            // parity flips only compose 2-colorings; stay proper globally
+            return alg.run(tree);
+        }
+        for (new, &old) in map.iter().enumerate() {
+            assignment[old] = col.color_of(new);
+        }
+    }
+    // quotient tree: each cross-subnet tree edge joins two subnets once
+    let mut crossing: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); k];
+    for e in tree.edges() {
+        let (su, sv) = (subnet_of[e.u], subnet_of[e.v]);
+        if su != sv {
+            crossing[su].push((sv, e.u, e.v));
+            crossing[sv].push((su, e.v, e.u));
+        }
+    }
+    let mut seen = vec![false; k];
+    seen[0] = true;
+    let mut queue = VecDeque::from([0usize]);
+    while let Some(s) = queue.pop_front() {
+        for &(t, here, there) in &crossing[s] {
+            if seen[t] {
+                continue;
+            }
+            seen[t] = true;
+            if assignment[here] == assignment[there] {
+                // flip the child subnet so the gateway edge is bichromatic
+                for u in 0..n {
+                    if subnet_of[u] == t {
+                        assignment[u] ^= 1;
+                    }
+                }
+            }
+            queue.push_back(t);
+        }
+    }
+    let stitched = Coloring::new(assignment);
+    // parity flips are only sound when subnets are connected in the tree
+    // and the quotient is a tree (stitched_mst guarantees both); on any
+    // other input, keep the properness contract via the global algorithm
+    if stitched.is_proper(tree) {
+        stitched
+    } else {
+        alg.run(tree)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::hierarchy::plan_hierarchical;
+    use crate::graph::generators::router_hierarchy;
+    use crate::mst::MstAlgorithm;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn single_subnet_matches_flat_coloring_bit_for_bit() {
+        let (structure, h) = router_hierarchy(12, 1, 2, 4, &mut Pcg64::new(3));
+        let tree = MstAlgorithm::Prim.run(&structure).unwrap();
+        let flat = ColoringAlgorithm::Bfs.run(&tree);
+        let stitched = stitched_tree_coloring(&tree, h.subnet_of(), ColoringAlgorithm::Bfs);
+        assert_eq!(stitched.assignment(), flat.assignment());
+    }
+
+    #[test]
+    fn stitched_coloring_is_proper_on_hierarchical_trees() {
+        for (n, s) in [(18, 3), (26, 4), (40, 8)] {
+            let (structure, h) = router_hierarchy(n, s, 2, 4, &mut Pcg64::new(n as u64));
+            let epoch = plan_hierarchical(
+                &structure,
+                &h,
+                MstAlgorithm::Prim,
+                ColoringAlgorithm::Bfs,
+                14.0,
+                56,
+                0,
+            )
+            .unwrap();
+            let col = stitched_tree_coloring(&epoch.tree, h.subnet_of(), ColoringAlgorithm::Bfs);
+            assert!(col.is_proper(&epoch.tree), "n={n} s={s}");
+            assert!(col.num_colors() <= 2);
+        }
+    }
+
+    #[test]
+    fn fallback_to_global_coloring_stays_proper() {
+        // force the fallback path with a greedy algorithm; even if a
+        // per-subnet run used 3 colors, the result must stay proper
+        let (structure, h) = router_hierarchy(30, 5, 2, 4, &mut Pcg64::new(17));
+        let tree = crate::mst::stitched_mst(
+            &structure,
+            h.subnet_of(),
+            h.gateways(),
+            MstAlgorithm::Kruskal,
+        )
+        .unwrap();
+        for alg in ColoringAlgorithm::ALL {
+            let col = stitched_tree_coloring(&tree, h.subnet_of(), alg);
+            assert!(col.is_proper(&tree), "{alg:?} produced an improper stitched coloring");
+        }
+    }
+}

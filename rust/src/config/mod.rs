@@ -8,6 +8,7 @@ pub use parser::{ParseError, TomlValue, parse_toml};
 
 use crate::coloring::ColoringAlgorithm;
 use crate::dfl::transfer::TransferPlan;
+use crate::graph::generators::GeneratorKind;
 use crate::graph::topology::{TopologyKind, TopologyParams};
 use crate::mst::MstAlgorithm;
 
@@ -22,6 +23,16 @@ pub struct ExperimentConfig {
     /// Topology family for the underlay.
     pub topology: TopologyKind,
     pub topology_params: TopologyParams,
+    /// Which overlay generator builds the session structure: `Flat` (the
+    /// default) uses the `topology` family; `hierarchy` selects the
+    /// router-hierarchy scale-out generator (`subnets` groups joined by
+    /// `gateway_links` backbone links per subnet); `geometric` the random
+    /// geometric graph (`geo_radius`). CLI: `--topology-gen`.
+    pub topology_gen: GeneratorKind,
+    /// Backbone links each subnet's gateway maintains under the
+    /// router-hierarchy generator (1 = gateway ring). CLI:
+    /// `--gateway-links`.
+    pub gateway_links: usize,
     /// MST algorithm (paper selects Prim).
     pub mst: MstAlgorithm,
     /// Coloring algorithm (paper selects BFS).
@@ -79,6 +90,8 @@ impl Default for ExperimentConfig {
             subnets: 3,
             topology: TopologyKind::Complete,
             topology_params: TopologyParams::default(),
+            topology_gen: GeneratorKind::Flat,
+            gateway_links: 2,
             mst: MstAlgorithm::Prim,
             coloring: ColoringAlgorithm::Bfs,
             seed: 2025,
@@ -130,6 +143,17 @@ impl ExperimentConfig {
                 let s = value.as_str().ok_or_else(|| bad("string"))?;
                 self.topology = TopologyKind::parse(s)
                     .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "topology_gen" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.topology_gen = GeneratorKind::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "gateway_links" => {
+                self.gateway_links = value.as_int().ok_or_else(|| bad("integer"))? as usize
+            }
+            "geo_radius" => {
+                self.topology_params.geo_radius = value.as_float().ok_or_else(|| bad("float"))?
             }
             "mst" => {
                 let s = value.as_str().ok_or_else(|| bad("string"))?;
@@ -237,6 +261,15 @@ impl ExperimentConfig {
         }
         if self.replan_threshold < 0.0 || !self.replan_threshold.is_finite() {
             return reject("replan_threshold", "must be a finite value >= 0");
+        }
+        // upper bound also catches negative TOML values wrapped by the
+        // i64 -> usize cast (same trick the nodes/subnets checks use)
+        if self.gateway_links == 0 || self.gateway_links > self.nodes {
+            return reject("gateway_links", "need 1 <= gateway_links <= nodes");
+        }
+        let r = self.topology_params.geo_radius;
+        if !(r > 0.0 && r.is_finite()) {
+            return reject("geo_radius", "must be a finite value > 0");
         }
         Ok(())
     }
@@ -378,6 +411,36 @@ backbone_latency_ms = 8.5
         assert!(ExperimentConfig::from_toml_str("drift = -0.1").is_err());
         assert!(ExperimentConfig::from_toml_str("drift_interval_s = 0.0").is_err());
         assert!(ExperimentConfig::from_toml_str("replan_threshold = -1.0").is_err());
+    }
+
+    #[test]
+    fn scale_out_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "topology_gen = \"hierarchy\"\nnodes = 64\nsubnets = 8\ngateway_links = 3",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology_gen, GeneratorKind::Hierarchy);
+        assert_eq!(cfg.subnets, 8);
+        assert_eq!(cfg.gateway_links, 3);
+
+        let cfg = ExperimentConfig::from_toml_str("topology_gen = \"geometric\"\ngeo_radius = 0.25")
+            .unwrap();
+        assert_eq!(cfg.topology_gen, GeneratorKind::Geometric);
+        assert_eq!(cfg.topology_params.geo_radius, 0.25);
+
+        // defaults keep the flat paper grid
+        let d = ExperimentConfig::default();
+        assert_eq!(d.topology_gen, GeneratorKind::Flat);
+        assert_eq!(d.gateway_links, 2);
+
+        assert!(ExperimentConfig::from_toml_str("topology_gen = \"torus\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("gateway_links = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("gateway_links = -2").is_err(),
+            "negative values must not wrap through the usize cast"
+        );
+        assert!(ExperimentConfig::from_toml_str("geo_radius = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("geo_radius = -1.0").is_err());
     }
 
     #[test]

@@ -64,6 +64,7 @@
 //! path (and float trajectory) is identical to [`RoundEngine::run_pipelined`].
 
 pub mod driver;
+pub mod sharded;
 
 use self::driver::{CopyToken, Driver};
 use super::broadcast;
@@ -395,13 +396,12 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         }
     }
 
-    /// Deterministic delivery order: ascending sender id, then recipient
-    /// id — the order that reproduces the paper's Table I strings and the
-    /// legacy slot loop's failure-coin sequence.
+    /// Deterministic delivery order for this engine's token-carrying
+    /// launch metadata — delegates to [`whole_model_delivery_order`], the
+    /// single source of the comparator.
     fn delivery_order(planned: &[PlannedTx], meta: &[(usize, NodeId, CopyToken)]) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..meta.len()).collect();
-        order.sort_by_key(|&j| (planned[meta[j].0].from, meta[j].1));
-        order
+        let view: Vec<(usize, NodeId)> = meta.iter().map(|&(i, to, _)| (i, to)).collect();
+        whole_model_delivery_order(planned, &view)
     }
 
     /// Launch the next pending segment of copy `ci` if its sender has one
@@ -1038,9 +1038,26 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
     }
 }
 
+/// Deterministic whole-model delivery order: ascending sender id, then
+/// recipient id — the order that reproduces the paper's Table I strings
+/// and the legacy slot loop's failure-coin sequence. `meta[j]` is the
+/// j-th launched copy as (planned index, recipient). Shared by the
+/// event-driven engine and the barrier-driven sharded runner
+/// ([`sharded`]) so their failure-coin sequences can never drift apart —
+/// the single-shard bit-identity contract depends on it.
+pub(crate) fn whole_model_delivery_order(
+    planned: &[PlannedTx],
+    meta: &[(usize, NodeId)],
+) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..meta.len()).collect();
+    order.sort_by_key(|&j| (planned[meta[j].0].from, meta[j].1));
+    order
+}
+
 /// Exchange-phase end: the latest delivery among own-model copies (owner
 /// == sender in the flow tag) — the blocking part of one FL round.
-fn exchange_time(transfers: &[FlowRecord]) -> f64 {
+/// Shared with the barrier-driven sharded runner ([`sharded`]).
+pub(crate) fn exchange_time(transfers: &[FlowRecord]) -> f64 {
     transfers
         .iter()
         .filter(|r| broadcast::tag_owner(r.tag) == broadcast::tag_sender(r.tag))

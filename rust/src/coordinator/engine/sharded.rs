@@ -1,0 +1,296 @@
+//! Barrier-driven round execution over the sharded simulator
+//! ([`ShardedNetSim`]) — the scale-out counterpart of
+//! [`RoundEngine`](super::RoundEngine).
+//!
+//! The event-driven engine keys slot state on *single* completion events,
+//! which serializes the simulation: finding the globally next event means
+//! merging every shard's queue. This module instead drives slots with a
+//! **round barrier** — launch every copy of the slot, drain all shards to
+//! idle (in parallel threads when asked), re-synchronize the clocks, then
+//! apply deliveries in the engine's deterministic (sender, recipient)
+//! order. Within a slot the shards share no state, so the trajectory is
+//! identical whether shards drain in parallel or sequentially; with a
+//! single shard the barrier drive replays the flat engine's whole-model
+//! round **bit for bit** (`NetSim::run_until_idle` and per-event stepping
+//! share one trajectory by construction; pinned in
+//! `tests/engine_equivalence.rs`).
+//!
+//! Two scopes:
+//!
+//! * [`run_sharded_round`] — full §III-D dissemination over a
+//!   [`GossipState`], exactly the engine's whole-model protocol. O(n²)
+//!   copies; for equivalence tests and moderate n.
+//! * [`run_sharded_exchange`] — the **exchange phase** only: every node's
+//!   own model to each tree neighbor, slots alternating by color,
+//!   failures retried. This is the blocking part of an FL round (Table
+//!   V's indicator; §III-D: the forwarding tail pipelines with the next
+//!   round), O(n) copies — the unit of measurement for n ≥ 10k scale
+//!   scenarios (`benches/scale_sweep.rs`).
+
+use super::super::broadcast::flow_tag;
+use super::super::gossip::{GossipState, Send};
+use super::super::schedule::Schedule;
+use super::{exchange_time, whole_model_delivery_order};
+use crate::graph::{Graph, NodeId};
+use crate::metrics::{RoundMetrics, SlotTiming};
+use crate::netsim::shard::ShardedNetSim;
+use crate::util::rng::Pcg64;
+
+/// Knobs of one barrier-driven sharded round.
+#[derive(Debug, Clone)]
+pub struct ShardedRoundOptions {
+    /// Whole-model transfer size (MB) — the sharded plane moves
+    /// unsegmented copies; segment-granular plans stay on the
+    /// event-driven engine.
+    pub model_mb: f64,
+    /// Per-delivery §III-D disruption probability (bytes spent, nothing
+    /// delivered, entry retried).
+    pub failure_prob: f64,
+    /// Hard slot budget (protocol-bug guard).
+    pub max_slots: usize,
+    /// Failure coin stream, drawn in deterministic (sender, recipient)
+    /// order — the flat engine's exact sequence.
+    pub failure_rng: Pcg64,
+    /// Drain each shard on its own thread at the slot barrier.
+    pub parallel: bool,
+}
+
+impl ShardedRoundOptions {
+    /// Failure-free options with the session's conventional slot budget.
+    pub fn reliable(model_mb: f64, nodes: usize, parallel: bool) -> Self {
+        ShardedRoundOptions {
+            model_mb,
+            failure_prob: 0.0,
+            max_slots: 8 * nodes + 64,
+            failure_rng: Pcg64::new(0),
+            parallel,
+        }
+    }
+}
+
+/// Run one full-dissemination MOSGU round (the engine's whole-model
+/// protocol) over the sharded simulator. Single-shard simulators replay
+/// the flat engine bit for bit.
+pub fn run_sharded_round(
+    sim: &mut ShardedNetSim,
+    state: &mut GossipState,
+    schedule: &Schedule,
+    mut opts: ShardedRoundOptions,
+) -> RoundMetrics {
+    let mut slots_used = 0;
+    let mut slot_timings = Vec::new();
+    for slot in 0..opts.max_slots {
+        if state.is_complete() {
+            break;
+        }
+        slots_used = slot + 1;
+        let color = schedule.color_of_slot(slot);
+        let transmitters = schedule.transmitters(slot);
+        let planned = state.plan_slot(&transmitters);
+        let start_s = sim.now();
+        if planned.is_empty() {
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+            continue;
+        }
+        let mut meta: Vec<(usize, NodeId)> = Vec::new();
+        for (i, tx) in planned.iter().enumerate() {
+            for &to in &tx.recipients {
+                sim.start_flow(tx.from, to, opts.model_mb, flow_tag(tx.entry.key.owner, tx.from));
+                meta.push((i, to));
+            }
+        }
+        let end_s = sim.drain_and_sync(opts.parallel);
+        // the engine's deterministic delivery order — one shared
+        // comparator, so the failure-coin sequence cannot drift from the
+        // flat slot loop's
+        let order = whole_model_delivery_order(&planned, &meta);
+        let mut failed = vec![false; planned.len()];
+        for j in order {
+            let (i, to) = meta[j];
+            if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
+                failed[i] = true;
+                continue;
+            }
+            let tx = &planned[i];
+            state.deliver(Send { from: tx.from, to, key: tx.entry.key });
+        }
+        for (i, tx) in planned.iter().enumerate() {
+            if failed[i] {
+                state.requeue(tx);
+            }
+        }
+        slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: meta.len() });
+    }
+    assert!(
+        state.is_complete(),
+        "sharded round did not complete within {} slots",
+        opts.max_slots
+    );
+    finish(sim, slots_used, slot_timings)
+}
+
+/// Run the exchange phase of one round: each node's own model to every
+/// tree neighbor, color classes alternating over slots, disrupted copies
+/// retried on the sender's next turn. Completes in one slot per color
+/// when failure-free.
+pub fn run_sharded_exchange(
+    sim: &mut ShardedNetSim,
+    tree: &Graph,
+    schedule: &Schedule,
+    mut opts: ShardedRoundOptions,
+) -> RoundMetrics {
+    let n = tree.node_count();
+    assert!(tree.is_tree(), "exchange runs on the planned gossip tree");
+    // pending[u] = neighbors still owed u's own model
+    let mut pending: Vec<Vec<NodeId>> = (0..n).map(|u| tree.neighbor_ids(u)).collect();
+    let mut left: usize = pending.iter().map(|p| p.len()).sum();
+    let mut slots_used = 0;
+    let mut slot_timings = Vec::new();
+    for slot in 0..opts.max_slots {
+        if left == 0 {
+            break;
+        }
+        slots_used = slot + 1;
+        let color = schedule.color_of_slot(slot);
+        let start_s = sim.now();
+        let mut launched: Vec<(NodeId, NodeId)> = Vec::new();
+        for u in 0..n {
+            if pending[u].is_empty() || !schedule.transmits_in_slot(u, slot) {
+                continue;
+            }
+            for &v in &pending[u] {
+                sim.start_flow(u, v, opts.model_mb, flow_tag(u, u));
+                launched.push((u, v));
+            }
+        }
+        if launched.is_empty() {
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+            continue;
+        }
+        let end_s = sim.drain_and_sync(opts.parallel);
+        for &(u, v) in &launched {
+            let dropped = opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob);
+            if !dropped {
+                pending[u].retain(|&x| x != v);
+                left -= 1;
+            }
+        }
+        slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: launched.len() });
+    }
+    assert!(left == 0, "exchange did not complete within {} slots", opts.max_slots);
+    finish(sim, slots_used, slot_timings)
+}
+
+fn finish(sim: &mut ShardedNetSim, slots: usize, slot_timings: Vec<SlotTiming>) -> RoundMetrics {
+    let total_time_s = sim.now();
+    let transfers = sim.take_completed();
+    let exchange_time_s = exchange_time(&transfers);
+    RoundMetrics {
+        transfers,
+        total_time_s,
+        exchange_time_s,
+        slots,
+        slot_timings,
+        segments: 1,
+        relay_copies: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::bfs_coloring;
+    use crate::config::ExperimentConfig;
+    use crate::graph::topology;
+    use crate::netsim::testbed::Testbed;
+
+    fn quiet_cfg(nodes: usize, subnets: usize) -> ExperimentConfig {
+        ExperimentConfig { nodes, subnets, latency_jitter: 0.0, ..Default::default() }
+    }
+
+    fn chain_schedule(n: usize) -> (Graph, Schedule) {
+        let tree = topology::chain(n);
+        let coloring = bfs_coloring(&tree);
+        (tree, Schedule { coloring, slot_len_s: 1.0, first_color: 0 })
+    }
+
+    #[test]
+    fn exchange_completes_in_one_slot_per_color() {
+        let cfg = quiet_cfg(12, 3);
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_schedule(12);
+        let mut sim = ShardedNetSim::sharded(&tb, 1);
+        let m = run_sharded_exchange(
+            &mut sim,
+            &tree,
+            &schedule,
+            ShardedRoundOptions::reliable(14.0, 12, false),
+        );
+        assert_eq!(m.slots, 2);
+        // sum of degrees on a chain: 2(n-1) own-model copies
+        assert_eq!(m.transfer_count(), 22);
+        assert!((m.total_payload_mb() - 22.0 * 14.0).abs() < 1e-9, "bytes conserved");
+        // all transfers are own-model, so exchange == last delivery
+        assert!(m.exchange_time_s > 0.0);
+    }
+
+    #[test]
+    fn exchange_with_failures_retries_until_delivered() {
+        let cfg = quiet_cfg(10, 3);
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_schedule(10);
+        let mut sim = ShardedNetSim::sharded(&tb, 2);
+        let opts = ShardedRoundOptions {
+            model_mb: 5.0,
+            failure_prob: 0.5,
+            max_slots: 256,
+            failure_rng: Pcg64::new(7),
+            parallel: false,
+        };
+        let m = run_sharded_exchange(&mut sim, &tree, &schedule, opts);
+        assert!(m.transfer_count() > 18, "disrupted copies spend bytes: {}", m.transfer_count());
+        assert!(m.slots > 2);
+    }
+
+    #[test]
+    fn exchange_parallel_matches_sequential_bit_for_bit() {
+        let run = |parallel: bool| {
+            let cfg = quiet_cfg(16, 4);
+            let tb = Testbed::new(&cfg);
+            let (tree, schedule) = chain_schedule(16);
+            let mut sim = ShardedNetSim::sharded(&tb, 5);
+            run_sharded_exchange(
+                &mut sim,
+                &tree,
+                &schedule,
+                ShardedRoundOptions::reliable(14.0, 16, parallel),
+            )
+        };
+        let seq = run(false);
+        let par = run(true);
+        assert_eq!(seq.total_time_s.to_bits(), par.total_time_s.to_bits());
+        assert_eq!(seq.transfers, par.transfers);
+        assert_eq!(seq.slots, par.slots);
+    }
+
+    #[test]
+    fn full_round_disseminates_on_multi_shard_sim() {
+        let cfg = quiet_cfg(12, 3);
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_schedule(12);
+        let mut sim = ShardedNetSim::sharded(&tb, 3);
+        let mut state = GossipState::new(tree, 0);
+        let m = run_sharded_round(
+            &mut sim,
+            &mut state,
+            &schedule,
+            ShardedRoundOptions::reliable(5.0, 12, true),
+        );
+        assert!(state.is_complete());
+        // every model crosses every chain edge once: 12 × 11 copies
+        assert_eq!(m.transfer_count(), 132);
+        assert!((m.total_payload_mb() - 132.0 * 5.0).abs() < 1e-9, "bytes conserved");
+        let copies: usize = m.slot_timings.iter().map(|t| t.copies).sum();
+        assert_eq!(copies, m.transfer_count());
+    }
+}

@@ -1,0 +1,119 @@
+//! Hierarchical planning: per-subnet MST + coloring stitched through the
+//! gateway backbone into one [`PlanEpoch`].
+//!
+//! The paper's moderator plans one flat overlay (§III-A/B/C). At
+//! hierarchy scale the same three steps decompose along the subnet
+//! structure the physical testbed already has (§IV-A, one subnetwork per
+//! router):
+//!
+//! 1. **Tree** — each subnet's MST is computed independently over its
+//!    induced cost subgraph; a backbone MST over the gateway-gateway
+//!    pings stitches them into one spanning tree
+//!    ([`crate::mst::hierarchical::stitched_mst`]).
+//! 2. **Coloring** — each subnet's subtree is 2-colored independently;
+//!    subnet parities are aligned across the gateway edges
+//!    ([`crate::coloring::stitched_tree_coloring`]).
+//! 3. **Schedule** — the paper's §III-C slot-length formula over the full
+//!    cost graph, unchanged: `ping_max` ranges over every node's gossip
+//!    neighbors, so the worst (usually backbone) edge budgets the slot.
+//!
+//! With a **single subnet** every step collapses to the flat planner bit
+//! for bit — `tests/engine_equivalence.rs` pins that equivalence — so
+//! hierarchical planning is a strict superset of the paper's, not a fork.
+
+use super::engine::PlanEpoch;
+use super::schedule::build_schedule;
+use crate::coloring::{stitched_tree_coloring, ColoringAlgorithm};
+use crate::graph::generators::Hierarchy;
+use crate::graph::Graph;
+use crate::mst::hierarchical::stitched_mst;
+use crate::mst::{MstAlgorithm, MstError};
+
+/// Plan one epoch (tree + slot schedule) hierarchically. `costs` is the
+/// full overlay cost graph (measured pings, ms); `model_mb` the transfer
+/// unit the §III-C formula budgets.
+pub fn plan_hierarchical(
+    costs: &Graph,
+    hierarchy: &Hierarchy,
+    mst: MstAlgorithm,
+    coloring: ColoringAlgorithm,
+    model_mb: f64,
+    ping_size_bytes: u64,
+    first_color: usize,
+) -> Result<PlanEpoch, MstError> {
+    assert_eq!(
+        hierarchy.node_count(),
+        costs.node_count(),
+        "hierarchy and cost graph disagree on node count"
+    );
+    let tree = stitched_mst(costs, hierarchy.subnet_of(), hierarchy.gateways(), mst)?;
+    let coloring = stitched_tree_coloring(&tree, hierarchy.subnet_of(), coloring);
+    let schedule = build_schedule(costs, coloring, model_mb, ping_size_bytes, first_color);
+    Ok(PlanEpoch { tree, schedule })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::router_hierarchy;
+    use crate::util::rng::Pcg64;
+
+    fn costs_for(n: usize, subnets: usize, seed: u64) -> (Graph, Hierarchy) {
+        let (structure, h) = router_hierarchy(n, subnets, 2, 4, &mut Pcg64::new(seed));
+        // ping-like weights: intra cheap, gateway links expensive
+        let mut costs = Graph::new(n);
+        for e in structure.sorted_edges() {
+            let cross = h.subnet(e.u) != h.subnet(e.v);
+            let w = if cross { 25.0 + e.u as f64 * 0.1 } else { 1.0 + e.v as f64 * 0.01 };
+            costs.add_edge(e.u, e.v, w);
+        }
+        (costs, h)
+    }
+
+    #[test]
+    fn single_subnet_epoch_matches_flat_planner_bit_for_bit() {
+        let (costs, h) = costs_for(12, 1, 3);
+        let flat_tree = MstAlgorithm::Prim.run(&costs).unwrap();
+        let flat_col = ColoringAlgorithm::Bfs.run(&flat_tree);
+        let flat_sched = build_schedule(&costs, flat_col, 14.0, 56, 1);
+        let epoch = plan_hierarchical(
+            &costs,
+            &h,
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            1,
+        )
+        .unwrap();
+        assert_eq!(epoch.tree.edge_count(), flat_tree.edge_count());
+        for e in flat_tree.edges() {
+            assert!(epoch.tree.has_edge(e.u, e.v));
+        }
+        assert_eq!(epoch.schedule.coloring.assignment(), flat_sched.coloring.assignment());
+        assert_eq!(epoch.schedule.slot_len_s.to_bits(), flat_sched.slot_len_s.to_bits());
+        assert_eq!(epoch.schedule.first_color, flat_sched.first_color);
+    }
+
+    #[test]
+    fn multi_subnet_epoch_is_a_proper_plan() {
+        let (costs, h) = costs_for(26, 4, 9);
+        let epoch = plan_hierarchical(
+            &costs,
+            &h,
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            1,
+        )
+        .unwrap();
+        assert!(epoch.tree.is_tree());
+        assert!(epoch.schedule.coloring.is_proper(&epoch.tree));
+        // the expensive gateway edges dominate ping_max, so the slot
+        // budget reflects the backbone, not the cheap intra links
+        let expect =
+            crate::coordinator::schedule::slot_length_s(25.0, 14.0, 56);
+        assert!(epoch.schedule.slot_len_s >= expect, "slot budget ignores the backbone");
+    }
+}

@@ -47,6 +47,7 @@ pub mod churn;
 pub mod engine;
 pub mod example;
 pub mod gossip;
+pub mod hierarchy;
 pub mod moderator;
 pub mod probe;
 pub mod queue;

@@ -11,6 +11,7 @@
 
 use super::schedule::{build_schedule, Schedule};
 use crate::coloring::ColoringAlgorithm;
+use crate::graph::generators::Hierarchy;
 use crate::graph::matrix::CostMatrix;
 use crate::graph::{Graph, NodeId};
 use crate::mst::{MstAlgorithm, MstError};
@@ -47,7 +48,27 @@ pub struct Moderator {
     coloring_alg: ColoringAlgorithm,
     /// membership epoch — bumped on join/leave, forces recomputation
     epoch: u64,
-    computed_epoch: Option<u64>,
+    /// (epoch, plan fingerprint) of the cached bundle. The fingerprint is
+    /// 0 for the flat planner and a hash of the hierarchy's subnet
+    /// assignment + gateways otherwise, so interleaving flat and
+    /// hierarchical requests — or two *different* hierarchies — can
+    /// never serve a bundle planned for another structure.
+    computed: Option<(u64, u64)>,
+}
+
+/// Cache fingerprint of a planning request: 0 = the flat planner; a
+/// FNV-style fold of the hierarchy's structure otherwise (always odd, so
+/// it never collides with the flat key).
+fn plan_fingerprint(hierarchy: Option<&Hierarchy>) -> u64 {
+    let Some(h) = hierarchy else { return 0 };
+    let mut acc: u64 = 0xCBF2_9CE4_8422_2325;
+    for &s in h.subnet_of() {
+        acc = (acc ^ (s as u64).wrapping_add(1)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    for &g in h.gateways() {
+        acc = (acc ^ (g as u64).wrapping_add(0x9E37_79B9)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    acc | 1
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -71,7 +92,7 @@ impl Moderator {
             mst_alg: mst,
             coloring_alg: coloring,
             epoch: 0,
-            computed_epoch: None,
+            computed: None,
         }
     }
 
@@ -98,11 +119,14 @@ impl Moderator {
         self.matrix = None;
     }
 
-    /// True if `compute_schedule` needs to run (first round or membership
-    /// changed since the last computation) — §III-A: "the moderator only
-    /// needs to recompute … when there are changes in the network".
+    /// True if the next `compute_schedule*` call must re-run the graph
+    /// computations (first round or membership changed since the last
+    /// computation) — §III-A: "the moderator only needs to recompute …
+    /// when there are changes in the network". Requesting the *other*
+    /// planning mode (flat vs hierarchical) also recomputes, even when
+    /// this returns false: the mode is part of the cache key.
     pub fn needs_recompute(&self) -> bool {
-        self.computed_epoch != Some(self.epoch)
+        self.computed.map(|(e, _)| e) != Some(self.epoch)
     }
 
     /// Run the graph computations and publish the bundle.
@@ -117,7 +141,42 @@ impl Moderator {
         ping_size_bytes: u64,
         first_color: usize,
     ) -> Result<&ScheduleBundle, ModeratorError> {
-        if !self.needs_recompute() {
+        self.plan_and_publish(None, model_mb, ping_size_bytes, first_color)
+    }
+
+    /// As [`Moderator::compute_schedule`], planning **hierarchically**:
+    /// per-subnet MST + coloring computed independently and stitched
+    /// through the gateway backbone (see `coordinator::hierarchy`). With
+    /// a single-subnet hierarchy this is the flat
+    /// [`Moderator::compute_schedule`] bit for bit — the fallback anchor
+    /// `tests/engine_equivalence.rs` pins. Caching and membership-epoch
+    /// semantics are identical to the flat path, with the planning mode
+    /// *and* the hierarchy's structure part of the cache key — passing a
+    /// different hierarchy in the same epoch re-plans.
+    pub fn compute_schedule_hierarchical(
+        &mut self,
+        hierarchy: &Hierarchy,
+        model_mb: f64,
+        ping_size_bytes: u64,
+        first_color: usize,
+    ) -> Result<&ScheduleBundle, ModeratorError> {
+        self.plan_and_publish(Some(hierarchy), model_mb, ping_size_bytes, first_color)
+    }
+
+    /// Shared body of the two planning modes: `hierarchy = None` is the
+    /// paper's flat §III-A/B/C pipeline, `Some` routes through
+    /// `coordinator::hierarchy`. The cached bundle is reused only when
+    /// the membership epoch *and* the plan fingerprint (mode + hierarchy
+    /// structure) both match.
+    fn plan_and_publish(
+        &mut self,
+        hierarchy: Option<&Hierarchy>,
+        model_mb: f64,
+        ping_size_bytes: u64,
+        first_color: usize,
+    ) -> Result<&ScheduleBundle, ModeratorError> {
+        let fingerprint = plan_fingerprint(hierarchy);
+        if self.computed == Some((self.epoch, fingerprint)) {
             return self.bundle.as_ref().ok_or(ModeratorError::NotComputed);
         }
         if self.reports.is_empty() {
@@ -127,13 +186,31 @@ impl Moderator {
             self.reports.iter().map(|r| (r.reporter, r.peer, r.cost)).collect();
         let matrix = CostMatrix::from_reports(self.n, &triples);
         let costs = matrix.to_graph();
-        let tree = self.mst_alg.run(&costs)?;
-        let coloring = self.coloring_alg.run(&tree);
-        let schedule = build_schedule(&costs, coloring, model_mb, ping_size_bytes, first_color);
+        let (tree, schedule) = match hierarchy {
+            None => {
+                let tree = self.mst_alg.run(&costs)?;
+                let coloring = self.coloring_alg.run(&tree);
+                let schedule =
+                    build_schedule(&costs, coloring, model_mb, ping_size_bytes, first_color);
+                (tree, schedule)
+            }
+            Some(h) => {
+                let epoch = super::hierarchy::plan_hierarchical(
+                    &costs,
+                    h,
+                    self.mst_alg,
+                    self.coloring_alg,
+                    model_mb,
+                    ping_size_bytes,
+                    first_color,
+                )?;
+                (epoch.tree, epoch.schedule)
+            }
+        };
         let neighbor_table = (0..self.n).map(|u| tree.neighbor_ids(u)).collect();
         self.matrix = Some(matrix);
         self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table });
-        self.computed_epoch = Some(self.epoch);
+        self.computed = Some((self.epoch, fingerprint));
         Ok(self.bundle.as_ref().unwrap())
     }
 
@@ -327,6 +404,98 @@ mod tests {
             m.replan_with_costs(&g, 10.0, 56, 0),
             Err(ModeratorError::NotComputed)
         ));
+    }
+
+    #[test]
+    fn hierarchical_schedule_single_subnet_matches_flat() {
+        let mut flat = example_moderator();
+        let flat_bundle = flat.compute_schedule(14.0, 56, example::RED).unwrap().clone();
+        let mut hier = example_moderator();
+        let h = crate::graph::generators::Hierarchy::flat(10);
+        let hier_bundle =
+            hier.compute_schedule_hierarchical(&h, 14.0, 56, example::RED).unwrap().clone();
+        assert_eq!(hier_bundle.tree.edge_count(), flat_bundle.tree.edge_count());
+        for e in flat_bundle.tree.edges() {
+            assert!(hier_bundle.tree.has_edge(e.u, e.v));
+            assert_eq!(
+                hier_bundle.tree.weight(e.u, e.v).unwrap().to_bits(),
+                e.weight.to_bits()
+            );
+        }
+        assert_eq!(
+            hier_bundle.schedule.coloring.assignment(),
+            flat_bundle.schedule.coloring.assignment()
+        );
+        assert_eq!(
+            hier_bundle.schedule.slot_len_s.to_bits(),
+            flat_bundle.schedule.slot_len_s.to_bits()
+        );
+        assert_eq!(hier_bundle.neighbor_table, flat_bundle.neighbor_table);
+        assert!(!hier.needs_recompute(), "hierarchical path caches like the flat one");
+    }
+
+    #[test]
+    fn hierarchical_schedule_multi_subnet_plans_properly() {
+        use crate::graph::generators::router_hierarchy;
+        let (structure, h) = router_hierarchy(18, 3, 2, 4, &mut crate::util::rng::Pcg64::new(4));
+        let mut m = Moderator::new(0, 18, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut m, &structure, 0.01);
+        let bundle = m.compute_schedule_hierarchical(&h, 14.0, 56, 0).unwrap();
+        assert!(bundle.tree.is_tree());
+        assert!(bundle.schedule.coloring.is_proper(&bundle.tree));
+        // crossing tree edges ride gateway links only
+        for e in bundle.tree.edges() {
+            if h.subnet(e.u) != h.subnet(e.v) {
+                assert!(h.is_gateway(e.u) && h.is_gateway(e.v));
+            }
+        }
+        for (u, table) in bundle.neighbor_table.iter().enumerate() {
+            assert_eq!(table, &bundle.tree.neighbor_ids(u));
+        }
+    }
+
+    #[test]
+    fn switching_planning_mode_recomputes_despite_cache() {
+        use crate::graph::generators::router_hierarchy;
+        let (structure, h) = router_hierarchy(18, 3, 2, 4, &mut crate::util::rng::Pcg64::new(6));
+        let mut m = Moderator::new(0, 18, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut m, &structure, 0.0);
+        // flat plan first: with unit intra and backbone costs the flat
+        // MST is free to cross subnets anywhere
+        m.compute_schedule(14.0, 56, 0).unwrap();
+        assert!(!m.needs_recompute());
+        // requesting the hierarchical mode must NOT serve the flat cache:
+        // the republished tree obeys the gateway-only-crossing invariant
+        let bundle = m.compute_schedule_hierarchical(&h, 14.0, 56, 0).unwrap();
+        for e in bundle.tree.edges() {
+            if h.subnet(e.u) != h.subnet(e.v) {
+                assert!(
+                    h.is_gateway(e.u) && h.is_gateway(e.v),
+                    "stale flat bundle served for a hierarchical request"
+                );
+            }
+        }
+        // and switching back re-plans flat (cache keyed on mode both ways)
+        let flat_again = m.compute_schedule(14.0, 56, 0).unwrap().clone();
+        let mut fresh = Moderator::new(0, 18, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut fresh, &structure, 0.0);
+        let want = fresh.compute_schedule(14.0, 56, 0).unwrap();
+        assert_eq!(flat_again.tree.edge_count(), want.tree.edge_count());
+        for e in want.tree.edges() {
+            assert!(flat_again.tree.has_edge(e.u, e.v));
+        }
+        // a *different* hierarchy in the same epoch also re-plans: the
+        // structure is part of the cache key, not just the mode
+        m.compute_schedule_hierarchical(&h, 14.0, 56, 0).unwrap();
+        let flat_h = crate::graph::generators::Hierarchy::flat(18);
+        let replanned = m.compute_schedule_hierarchical(&flat_h, 14.0, 56, 0).unwrap();
+        assert_eq!(replanned.tree.edge_count(), want.tree.edge_count());
+        for e in want.tree.edges() {
+            assert!(
+                replanned.tree.has_edge(e.u, e.v),
+                "stale bundle served for a different hierarchy"
+            );
+        }
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //! the budget by the segment count while cut-through relays overlap the
 //! per-hop transfers the old whole-model slots serialized. With
 //! `segments = 1` the fed unit is the checkpoint itself, bit for bit.
+//!
+//! Under **hierarchical planning** (`coordinator::hierarchy`) the
+//! coloring handed to [`build_schedule`] is the stitched per-subnet
+//! coloring; the formula itself is untouched — `ping_max` still ranges
+//! over every node's gossip neighbors in the full cost graph, so the
+//! worst (typically backbone/gateway) edge budgets the slot for both
+//! color classes, exactly as the flat §III-C schedule would.
 
 use crate::coloring::Coloring;
 use crate::graph::Graph;

@@ -4,16 +4,20 @@
 
 use super::broadcast::{self, BroadcastMode};
 use super::engine::driver::SimDriver;
-use super::engine::{PipelineMetrics, PipelineOptions, RoundEngine, RoundOptions};
+use super::engine::sharded::{self, ShardedRoundOptions};
+use super::engine::{PipelineMetrics, PipelineOptions, PlanEpoch, RoundEngine, RoundOptions};
 use super::gossip::GossipState;
+use super::hierarchy::plan_hierarchical;
 use super::moderator::{Moderator, ScheduleBundle};
 use super::probe::{ReplanPolicy, Replanner};
 use super::schedule::Schedule;
 use crate::config::ExperimentConfig;
 use crate::dfl::transfer::TransferPlan;
-use crate::graph::topology::{self, TopologyKind};
+use crate::graph::generators::{self, Hierarchy};
+use crate::graph::topology::TopologyKind;
 use crate::graph::Graph;
 use crate::metrics::RoundMetrics;
+use crate::netsim::shard::ShardedNetSim;
 use crate::netsim::testbed::Testbed;
 use crate::netsim::DriftProcess;
 use crate::util::rng::Pcg64;
@@ -32,6 +36,9 @@ pub struct GossipSession {
     /// baseline against this, not the clean pings, so the incremental
     /// MST update's precondition holds.
     measured_costs: Graph,
+    /// Subnet structure when the overlay came from the router-hierarchy
+    /// generator (`topology_gen = "hierarchy"`); `None` for flat overlays.
+    hierarchy: Option<Hierarchy>,
     bundle: ScheduleBundle,
 }
 
@@ -51,7 +58,15 @@ impl GossipSession {
     pub fn with_model(cfg: &ExperimentConfig, model_mb: f64) -> Result<Self> {
         cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
         let mut rng = Pcg64::new(cfg.seed);
-        let structure = topology::generate(cfg.topology, cfg.nodes, &cfg.topology_params, &mut rng);
+        let (structure, hierarchy) = generators::generate_structure(
+            cfg.topology_gen,
+            cfg.topology,
+            cfg.nodes,
+            cfg.subnets,
+            cfg.gateway_links,
+            &cfg.topology_params,
+            &mut rng,
+        );
         let testbed = Testbed::new(cfg);
         let costs = testbed.overlay_costs(&structure);
 
@@ -68,13 +83,30 @@ impl GossipSession {
             moderator.submit_report(u, &peers);
         }
         let unit_mb = cfg.transfer_plan(model_mb).segment_mb();
-        let bundle = moderator
-            .compute_schedule(unit_mb, cfg.ping_size_bytes, 1)
-            .context("moderator schedule computation")?
-            .clone();
+        // hierarchical overlays plan per subnet + backbone; a single
+        // subnet is bit-identical to the flat planner, and flat overlays
+        // take the flat path untouched
+        let bundle = match hierarchy.as_ref().filter(|h| h.subnet_count() > 1) {
+            Some(h) => moderator
+                .compute_schedule_hierarchical(h, unit_mb, cfg.ping_size_bytes, 1)
+                .context("moderator hierarchical schedule computation")?
+                .clone(),
+            None => moderator
+                .compute_schedule(unit_mb, cfg.ping_size_bytes, 1)
+                .context("moderator schedule computation")?
+                .clone(),
+        };
         let measured_costs =
             moderator.matrix().expect("matrix exists after compute_schedule").to_graph();
-        Ok(GossipSession { cfg: cfg.clone(), testbed, structure, costs, measured_costs, bundle })
+        Ok(GossipSession {
+            cfg: cfg.clone(),
+            testbed,
+            structure,
+            costs,
+            measured_costs,
+            hierarchy,
+            bundle,
+        })
     }
 
     pub fn testbed(&self) -> &Testbed {
@@ -93,6 +125,12 @@ impl GossipSession {
     /// tree/schedule were computed from; the adaptive plane's baseline).
     pub fn measured_costs(&self) -> &Graph {
         &self.measured_costs
+    }
+
+    /// The overlay's subnet structure, when it came from the
+    /// router-hierarchy generator.
+    pub fn hierarchy(&self) -> Option<&Hierarchy> {
+        self.hierarchy.as_ref()
     }
 
     pub fn tree(&self) -> &Graph {
@@ -231,6 +269,39 @@ impl GossipSession {
         broadcast::paper_baseline(&self.testbed, model_mb, seed)
     }
 
+    /// Run one **whole-model** MOSGU round on the sharded simulator: one
+    /// event queue per testbed subnet plus a backbone queue, slots driven
+    /// by a round barrier (`parallel` drains shards on threads — see
+    /// `netsim::shard`). The barrier runner always moves unsegmented
+    /// copies — the config's `segments` / `segment_mb` keys are
+    /// deliberately **not** consulted (segment-granular cut-through stays
+    /// on the event-driven engine). With a single-subnet config this is
+    /// the flat whole-model round —
+    /// [`GossipSession::run_mosgu_round_planned`] with
+    /// `TransferPlan::whole(model_mb)` — **bit for bit** (pinned by
+    /// `tests/engine_equivalence.rs`); multi-shard runs decouple local
+    /// from cross-subnet contention and trade that fidelity for
+    /// wall-clock scalability.
+    pub fn run_sharded_round(
+        &self,
+        model_mb: f64,
+        seed: u64,
+        failure_prob: f64,
+        parallel: bool,
+    ) -> RoundMetrics {
+        let mut sim = ShardedNetSim::sharded(&self.testbed, seed);
+        let mut state = GossipState::new(self.bundle.tree.clone(), 0);
+        let n = state.node_count();
+        let opts = ShardedRoundOptions {
+            model_mb,
+            failure_prob,
+            max_slots: 8 * n + 64,
+            failure_rng: Pcg64::new(seed ^ 0xfa11),
+            parallel,
+        };
+        sharded::run_sharded_round(&mut sim, &mut state, &self.bundle.schedule, opts)
+    }
+
     /// Flooding with relay on the session's structural overlay (ablation).
     pub fn run_flood_round(&self, model_mb: f64, seed: u64) -> RoundMetrics {
         broadcast::run_broadcast_round(
@@ -252,6 +323,108 @@ pub fn sessions_for_all_topologies(cfg: &ExperimentConfig) -> Result<Vec<(Topolo
             Ok((kind, GossipSession::new(&cfg)?))
         })
         .collect()
+}
+
+/// Large-n hierarchical scenario: router-hierarchy overlay, hierarchical
+/// planning straight from the measured cost graph, exchange rounds on the
+/// sharded simulator.
+///
+/// [`GossipSession`] routes planning through the moderator's **dense**
+/// cost matrix (faithful to §III-A, O(n²) memory) — fine at paper scale,
+/// prohibitive at n ≥ 10k. This scenario plans from the sparse overlay
+/// costs via [`plan_hierarchical`] instead, and measures the **exchange
+/// phase** of a round (every node's model to its tree neighbors — Table
+/// V's blocking indicator; the O(n²) dissemination tail pipelines with
+/// later rounds per §III-D) over [`ShardedNetSim`], sequential or
+/// sharded-parallel. `benches/scale_sweep.rs` drives it to n = 10k.
+pub struct ScaleScenario {
+    cfg: ExperimentConfig,
+    testbed: Testbed,
+    structure: Graph,
+    hierarchy: Hierarchy,
+    epoch: PlanEpoch,
+}
+
+impl ScaleScenario {
+    /// Generate the hierarchy overlay (`nodes`, `subnets`,
+    /// `gateway_links`, lattice degree `ws_k`), measure edge costs on the
+    /// testbed, and plan hierarchically. `model_mb` feeds the §III-C slot
+    /// budget.
+    pub fn new(cfg: &ExperimentConfig, model_mb: f64) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+        let mut rng = Pcg64::new(cfg.seed);
+        let (structure, hierarchy) = generators::router_hierarchy(
+            cfg.nodes,
+            cfg.subnets,
+            cfg.gateway_links,
+            cfg.topology_params.ws_k,
+            &mut rng,
+        );
+        let testbed = Testbed::new(cfg);
+        let costs = testbed.overlay_costs(&structure);
+        let epoch = plan_hierarchical(
+            &costs,
+            &hierarchy,
+            cfg.mst,
+            cfg.coloring,
+            cfg.transfer_plan(model_mb).segment_mb(),
+            cfg.ping_size_bytes,
+            1,
+        )
+        .map_err(|e| anyhow::anyhow!("hierarchical planning: {e}"))?;
+        Ok(ScaleScenario { cfg: cfg.clone(), testbed, structure, hierarchy, epoch })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+
+    pub fn structure(&self) -> &Graph {
+        &self.structure
+    }
+
+    pub fn hierarchy(&self) -> &Hierarchy {
+        &self.hierarchy
+    }
+
+    pub fn tree(&self) -> &Graph {
+        &self.epoch.tree
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.epoch.schedule
+    }
+
+    /// Run the exchange phase of one gossip round. `sharded` selects the
+    /// per-subnet simulator ([`ShardedNetSim::sharded`]) vs the
+    /// sequential single-queue baseline ([`ShardedNetSim::single`]) on
+    /// the same topology and plan; `parallel` drains shards on threads.
+    pub fn run_exchange(
+        &self,
+        model_mb: f64,
+        seed: u64,
+        failure_prob: f64,
+        use_shards: bool,
+        parallel: bool,
+    ) -> RoundMetrics {
+        let mut sim = if use_shards {
+            ShardedNetSim::sharded(&self.testbed, seed)
+        } else {
+            ShardedNetSim::single(&self.testbed, seed)
+        };
+        let opts = ShardedRoundOptions {
+            model_mb,
+            failure_prob,
+            max_slots: 64 + 8 * self.epoch.schedule.coloring.num_colors(),
+            failure_rng: Pcg64::new(seed ^ 0xfa11),
+            parallel,
+        };
+        sharded::run_sharded_exchange(&mut sim, &self.epoch.tree, &self.epoch.schedule, opts)
+    }
 }
 
 #[cfg(test)]
@@ -431,6 +604,76 @@ mod tests {
             seg.total_time_s,
             whole.total_time_s
         );
+    }
+
+    #[test]
+    fn hierarchy_session_plans_and_runs_full_rounds() {
+        let cfg = ExperimentConfig {
+            nodes: 12,
+            subnets: 3,
+            topology_gen: crate::graph::generators::GeneratorKind::Hierarchy,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let s = GossipSession::new(&cfg).unwrap();
+        let h = s.hierarchy().expect("hierarchy overlay carries its structure");
+        assert_eq!(h.subnet_count(), 3);
+        assert!(s.tree().is_tree());
+        assert!(s.schedule().coloring.is_proper(s.tree()));
+        // cross-subnet tree edges ride the gateway backbone only
+        for e in s.tree().edges() {
+            if h.subnet(e.u) != h.subnet(e.v) {
+                assert!(h.is_gateway(e.u) && h.is_gateway(e.v));
+            }
+        }
+        // the stitched plan still disseminates fully through the engine
+        let m = s.run_mosgu_round(5.0, 1, 0.0);
+        assert_eq!(m.transfer_count(), 12 * 11);
+        // and through the sharded barrier runner, bytes conserved
+        let sharded = s.run_sharded_round(5.0, 1, 0.0, true);
+        assert_eq!(sharded.transfer_count(), 12 * 11);
+        assert!((sharded.total_payload_mb() - 132.0 * 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geometric_session_builds_and_disseminates() {
+        let cfg = ExperimentConfig {
+            nodes: 12,
+            topology_gen: crate::graph::generators::GeneratorKind::Geometric,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let s = GossipSession::new(&cfg).unwrap();
+        assert!(s.hierarchy().is_none());
+        assert!(s.structure().is_connected());
+        let m = s.run_mosgu_round(5.0, 1, 0.0);
+        assert_eq!(m.transfer_count(), 12 * 11);
+    }
+
+    #[test]
+    fn scale_scenario_exchange_conserves_bytes_on_both_simulators() {
+        let cfg = ExperimentConfig {
+            nodes: 48,
+            subnets: 6,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let sc = ScaleScenario::new(&cfg, 14.0).unwrap();
+        assert!(sc.tree().is_tree());
+        assert_eq!(sc.hierarchy().subnet_count(), 6);
+        let expect_copies = 2 * (48 - 1);
+        let expect_mb = expect_copies as f64 * 14.0;
+        let seq = sc.run_exchange(14.0, 1, 0.0, false, false);
+        let shd = sc.run_exchange(14.0, 1, 0.0, true, true);
+        for (name, m) in [("sequential", &seq), ("sharded", &shd)] {
+            assert_eq!(m.transfer_count(), expect_copies, "{name}");
+            assert!((m.total_payload_mb() - expect_mb).abs() < 1e-6, "{name} bytes");
+            assert_eq!(m.slots, 2, "{name}: one slot per color class");
+        }
+        // sharded runs replay deterministically
+        let again = sc.run_exchange(14.0, 1, 0.0, true, true);
+        assert_eq!(shd.total_time_s.to_bits(), again.total_time_s.to_bits());
+        assert_eq!(shd.transfers, again.transfers);
     }
 
     #[test]

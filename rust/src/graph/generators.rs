@@ -1,0 +1,401 @@
+//! Scale-out topology generators: the overlay families behind the
+//! multi-subnet scenario plane.
+//!
+//! [`crate::graph::topology`] carries the paper's §IV-B evaluation grid
+//! (Erdős–Rényi, Watts–Strogatz, Barabási–Albert, Complete). This module
+//! adds the generators large-n scenarios need:
+//!
+//! * [`random_geometric`] — nodes placed uniformly in the unit square,
+//!   edges within a connection radius (the classic wireless/proximity
+//!   model; components are stitched by nearest cross-component pairs so
+//!   the result is always connected);
+//! * [`router_hierarchy`] — the testbed's shape scaled up: nodes grouped
+//!   into subnets (round-robin, matching [`crate::netsim::testbed::Testbed`]'s
+//!   device→router assignment), a ring lattice plus seeded chords inside
+//!   each subnet, and **gateway** nodes joined by backbone links across
+//!   subnets. Returns the [`Hierarchy`] the planner and the sharded
+//!   simulator consume.
+//!
+//! Every generator is a pure function of its arguments and the supplied
+//! [`Pcg64`] — seeded determinism is property-tested in
+//! `tests/generator_properties.rs`.
+
+use super::topology::{self, TopologyKind, TopologyParams};
+use super::{Graph, NodeId};
+use crate::util::rng::Pcg64;
+
+/// The subnet structure of a hierarchical overlay: which subnet each node
+/// belongs to and which member speaks for the subnet on the backbone.
+///
+/// Invariants (enforced at construction): every node is in exactly one
+/// subnet, every subnet id is dense in `0..subnet_count()`, and each
+/// subnet's gateway is one of its own members.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hierarchy {
+    /// node → subnet id.
+    subnet_of: Vec<usize>,
+    /// subnet id → its gateway node.
+    gateways: Vec<NodeId>,
+}
+
+impl Hierarchy {
+    pub fn new(subnet_of: Vec<usize>, gateways: Vec<NodeId>) -> Self {
+        let k = gateways.len();
+        assert!(k >= 1, "hierarchy needs at least one subnet");
+        assert!(
+            subnet_of.iter().all(|&s| s < k),
+            "subnet id out of range (expected < {k})"
+        );
+        for (s, &g) in gateways.iter().enumerate() {
+            assert!(
+                g < subnet_of.len() && subnet_of[g] == s,
+                "gateway {g} is not a member of subnet {s}"
+            );
+        }
+        Hierarchy { subnet_of, gateways }
+    }
+
+    /// The degenerate single-subnet hierarchy over `n` nodes — the
+    /// bit-identical fallback anchor of hierarchical planning.
+    pub fn flat(n: usize) -> Self {
+        assert!(n >= 1);
+        Hierarchy { subnet_of: vec![0; n], gateways: vec![0] }
+    }
+
+    /// Round-robin assignment `node % subnets`, gateway = lowest-id
+    /// member — exactly the testbed's device→router split, so overlay
+    /// subnets and simulator shards always agree.
+    pub fn round_robin(n: usize, subnets: usize) -> Self {
+        assert!(subnets >= 1 && subnets <= n, "need 1 <= subnets <= nodes");
+        Hierarchy {
+            subnet_of: (0..n).map(|d| d % subnets).collect(),
+            gateways: (0..subnets).collect(),
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.subnet_of.len()
+    }
+
+    pub fn subnet_count(&self) -> usize {
+        self.gateways.len()
+    }
+
+    /// node → subnet id, as a slice.
+    pub fn subnet_of(&self) -> &[usize] {
+        &self.subnet_of
+    }
+
+    pub fn subnet(&self, u: NodeId) -> usize {
+        self.subnet_of[u]
+    }
+
+    pub fn gateways(&self) -> &[NodeId] {
+        &self.gateways
+    }
+
+    pub fn gateway(&self, s: usize) -> NodeId {
+        self.gateways[s]
+    }
+
+    pub fn is_gateway(&self, u: NodeId) -> bool {
+        self.gateways.contains(&u)
+    }
+
+    /// Members of subnet `s`, ascending.
+    pub fn members(&self, s: usize) -> Vec<NodeId> {
+        (0..self.subnet_of.len()).filter(|&u| self.subnet_of[u] == s).collect()
+    }
+}
+
+/// Random geometric graph: `n` nodes uniform in the unit square, an edge
+/// between every pair within `radius`. Disconnected draws are stitched by
+/// joining the nearest cross-component pair repeatedly, so the result is
+/// always connected while staying geometrically plausible. Unit edge
+/// weights — the testbed overlays measured ping costs (§III-A).
+///
+/// O(n²) pair scan: intended for overlays up to a few thousand nodes; the
+/// scale-out plane uses [`router_hierarchy`], which is O(n·k).
+pub fn random_geometric(n: usize, radius: f64, rng: &mut Pcg64) -> Graph {
+    assert!(n >= 2, "need at least 2 nodes, got {n}");
+    assert!(radius > 0.0 && radius.is_finite(), "bad radius {radius}");
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.gen_f64(), rng.gen_f64())).collect();
+    let d2 = |u: usize, v: usize| {
+        let (dx, dy) = (pts[u].0 - pts[v].0, pts[u].1 - pts[v].1);
+        dx * dx + dy * dy
+    };
+    let mut g = Graph::new(n);
+    let r2 = radius * radius;
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if d2(u, v) <= r2 {
+                g.add_edge(u, v, 1.0);
+            }
+        }
+    }
+    // Stitch components Borůvka-style (deterministic given the
+    // positions): each round joins every component to its nearest
+    // foreign node in one O(n²) sweep, at least halving the component
+    // count — O(n² log n) overall even for radii that leave ~n
+    // singletons, where a one-merge-per-rescan loop would be O(n³).
+    loop {
+        let comp = topology::components(&g);
+        let k = comp.iter().copied().max().unwrap() + 1;
+        if k == 1 {
+            return g;
+        }
+        let mut best: Vec<(f64, usize, usize)> = vec![(f64::INFINITY, 0, 0); k];
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if comp[u] == comp[v] {
+                    continue;
+                }
+                let d = d2(u, v);
+                if d < best[comp[u]].0 {
+                    best[comp[u]] = (d, u, v);
+                }
+                if d < best[comp[v]].0 {
+                    best[comp[v]] = (d, v, u);
+                }
+            }
+        }
+        for &(_, u, v) in &best {
+            // two components may pick the same pair symmetrically
+            if !g.has_edge(u, v) {
+                g.add_edge(u, v, 1.0);
+            }
+        }
+    }
+}
+
+/// The router-hierarchy generator: `n` nodes in `subnets` round-robin
+/// groups (matching the testbed's device→router split), each subnet wired
+/// as a ring lattice of degree ≈ `intra_k` plus `len/4` seeded chord
+/// edges, and subnets joined by a gateway backbone — each subnet's
+/// gateway links to the next `gateway_links` subnets' gateways around the
+/// subnet ring (1 = a backbone ring, higher = denser backbone).
+///
+/// Connected by construction: each subnet's ring lattice is connected and
+/// the backbone ring joins all gateways. Unit edge weights.
+pub fn router_hierarchy(
+    n: usize,
+    subnets: usize,
+    gateway_links: usize,
+    intra_k: usize,
+    rng: &mut Pcg64,
+) -> (Graph, Hierarchy) {
+    assert!(n >= 2, "need at least 2 nodes, got {n}");
+    assert!(subnets >= 1 && subnets <= n, "need 1 <= subnets <= nodes");
+    assert!(gateway_links >= 1, "gateway_links must be >= 1");
+    let h = Hierarchy::round_robin(n, subnets);
+    let mut g = Graph::new(n);
+    for s in 0..subnets {
+        let members = h.members(s);
+        let len = members.len();
+        if len <= 1 {
+            continue;
+        }
+        // ring lattice: member i links to the next ~intra_k/2 members
+        let half = (intra_k / 2).clamp(1, len - 1);
+        for i in 0..len {
+            for d in 1..=half {
+                let (u, v) = (members[i], members[(i + d) % len]);
+                if u != v && !g.has_edge(u, v) {
+                    g.add_edge(u, v, 1.0);
+                }
+            }
+        }
+        // seeded chords: sparse shortcuts within the subnet
+        for _ in 0..len / 4 {
+            let (u, v) = (members[rng.gen_range(len)], members[rng.gen_range(len)]);
+            if u != v && !g.has_edge(u, v) {
+                g.add_edge(u, v, 1.0);
+            }
+        }
+    }
+    if subnets > 1 {
+        let reach = gateway_links.min(subnets - 1);
+        for s in 0..subnets {
+            for j in 1..=reach {
+                let (a, b) = (h.gateway(s), h.gateway((s + j) % subnets));
+                if a != b && !g.has_edge(a, b) {
+                    g.add_edge(a, b, 1.0);
+                }
+            }
+        }
+    }
+    (g, h)
+}
+
+/// Which overlay generator a session uses (config key `topology_gen`,
+/// CLI `--topology-gen`). `Flat` (the default) defers to the paper grid's
+/// `topology` key; the others select from this module's scale-out suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GeneratorKind {
+    /// Use the `topology` family ([`TopologyKind`]) — the paper's grid.
+    Flat,
+    /// [`random_geometric`] over the unit square (`geo_radius`).
+    Geometric,
+    /// Watts–Strogatz small world (alias for the `topology` family).
+    WattsStrogatz,
+    /// Barabási–Albert scale-free (alias for the `topology` family).
+    BarabasiAlbert,
+    /// [`router_hierarchy`]: subnets + gateway backbone (`subnets`,
+    /// `gateway_links`, lattice degree `ws_k`).
+    Hierarchy,
+}
+
+impl GeneratorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GeneratorKind::Flat => "flat",
+            GeneratorKind::Geometric => "geometric",
+            GeneratorKind::WattsStrogatz => "watts-strogatz",
+            GeneratorKind::BarabasiAlbert => "barabasi-albert",
+            GeneratorKind::Hierarchy => "hierarchy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GeneratorKind> {
+        match s.to_ascii_lowercase().replace(['_', ' '], "-").as_str() {
+            "flat" | "topology" => Some(GeneratorKind::Flat),
+            "geometric" | "geo" | "rgg" | "random-geometric" => Some(GeneratorKind::Geometric),
+            "watts-strogatz" | "ws" => Some(GeneratorKind::WattsStrogatz),
+            "barabasi-albert" | "ba" => Some(GeneratorKind::BarabasiAlbert),
+            "hierarchy" | "router-hierarchy" | "subnets" => Some(GeneratorKind::Hierarchy),
+            _ => None,
+        }
+    }
+}
+
+/// Scenario entry point: generate the overlay structure a config's
+/// generator kind prescribes, plus the [`Hierarchy`] when one exists.
+/// `Flat` (and the WS/BA aliases) reproduce `topology::generate` draw for
+/// draw, so default configs are untouched bit for bit.
+pub fn generate_structure(
+    kind: GeneratorKind,
+    family: TopologyKind,
+    n: usize,
+    subnets: usize,
+    gateway_links: usize,
+    params: &TopologyParams,
+    rng: &mut Pcg64,
+) -> (Graph, Option<Hierarchy>) {
+    match kind {
+        GeneratorKind::Flat => (topology::generate(family, n, params, rng), None),
+        GeneratorKind::Geometric => (random_geometric(n, params.geo_radius, rng), None),
+        GeneratorKind::WattsStrogatz => {
+            (topology::generate(TopologyKind::WattsStrogatz, n, params, rng), None)
+        }
+        GeneratorKind::BarabasiAlbert => {
+            (topology::generate(TopologyKind::BarabasiAlbert, n, params, rng), None)
+        }
+        GeneratorKind::Hierarchy => {
+            let (g, h) = router_hierarchy(n, subnets, gateway_links, params.ws_k, rng);
+            (g, Some(h))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_connected_and_deterministic() {
+        let a = random_geometric(40, 0.2, &mut Pcg64::new(5));
+        let b = random_geometric(40, 0.2, &mut Pcg64::new(5));
+        assert!(a.is_connected());
+        assert_eq!(a.edge_count(), b.edge_count());
+        for (ea, eb) in a.sorted_edges().iter().zip(b.sorted_edges().iter()) {
+            assert_eq!((ea.u, ea.v), (eb.u, eb.v));
+        }
+    }
+
+    #[test]
+    fn geometric_large_radius_is_complete() {
+        let g = random_geometric(12, 1.5, &mut Pcg64::new(1));
+        assert_eq!(g.edge_count(), 12 * 11 / 2);
+    }
+
+    #[test]
+    fn hierarchy_invariants_hold() {
+        let (g, h) = router_hierarchy(26, 4, 2, 4, &mut Pcg64::new(9));
+        assert!(g.is_connected());
+        assert_eq!(h.node_count(), 26);
+        assert_eq!(h.subnet_count(), 4);
+        // round-robin split; every node in exactly one subnet
+        for u in 0..26 {
+            assert_eq!(h.subnet(u), u % 4);
+        }
+        // gateways are members of their subnet (lowest ids)
+        for s in 0..4 {
+            assert_eq!(h.gateway(s), s);
+            assert!(h.members(s).contains(&h.gateway(s)));
+        }
+        // cross-subnet edges touch gateways only
+        for e in g.edges() {
+            if h.subnet(e.u) != h.subnet(e.v) {
+                assert!(h.is_gateway(e.u) && h.is_gateway(e.v), "non-gateway crossing edge");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_single_subnet_has_no_crossings() {
+        let (g, h) = router_hierarchy(10, 1, 2, 4, &mut Pcg64::new(2));
+        assert!(g.is_connected());
+        assert_eq!(h.subnet_count(), 1);
+        assert_eq!(h.gateways(), &[0]);
+    }
+
+    #[test]
+    fn flat_hierarchy_constructor() {
+        let h = Hierarchy::flat(7);
+        assert_eq!(h.subnet_count(), 1);
+        assert_eq!(h.members(0).len(), 7);
+        assert!(h.is_gateway(0));
+        assert!(!h.is_gateway(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a member")]
+    fn bad_gateway_rejected() {
+        Hierarchy::new(vec![0, 0, 1], vec![0, 0]);
+    }
+
+    #[test]
+    fn generator_kind_parse_roundtrip() {
+        for kind in [
+            GeneratorKind::Flat,
+            GeneratorKind::Geometric,
+            GeneratorKind::WattsStrogatz,
+            GeneratorKind::BarabasiAlbert,
+            GeneratorKind::Hierarchy,
+        ] {
+            assert_eq!(GeneratorKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(GeneratorKind::parse("rgg"), Some(GeneratorKind::Geometric));
+        assert_eq!(GeneratorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn generate_structure_flat_matches_topology_generate() {
+        let params = TopologyParams::default();
+        let (a, h) = generate_structure(
+            GeneratorKind::Flat,
+            TopologyKind::ErdosRenyi,
+            14,
+            3,
+            2,
+            &params,
+            &mut Pcg64::new(77),
+        );
+        assert!(h.is_none());
+        let b = topology::generate(TopologyKind::ErdosRenyi, 14, &params, &mut Pcg64::new(77));
+        assert_eq!(a.edge_count(), b.edge_count());
+        for (ea, eb) in a.sorted_edges().iter().zip(b.sorted_edges().iter()) {
+            assert_eq!((ea.u, ea.v), (eb.u, eb.v));
+        }
+    }
+}

@@ -1,8 +1,11 @@
 //! Graph substrate: weighted undirected graphs, cost adjacency matrices
 //! (paper §III-A, Fig 1), topology generators for the four experimental
-//! underlays (paper §IV-B, Fig 4), and DOT export for the figures.
+//! underlays (paper §IV-B, Fig 4) plus the scale-out generator suite
+//! (random geometric, router hierarchy — [`generators`]), and DOT export
+//! for the figures.
 
 pub mod dot;
+pub mod generators;
 pub mod matrix;
 pub mod topology;
 

@@ -2,6 +2,8 @@
 //! (§IV-B, Fig 4) — Erdős–Rényi, Watts–Strogatz, Barabási–Albert,
 //! Complete — plus three deterministic shapes (ring, star, balanced
 //! binary tree) used by the pipelining benches and scenario sweeps.
+//! The scale-out generator suite (random geometric, router hierarchy)
+//! lives in [`crate::graph::generators`].
 //!
 //! Generators produce *structure only* (unit edge weights). The testbed
 //! model (`netsim::testbed`) then assigns each node to a subnet and replaces
@@ -88,22 +90,26 @@ impl TopologyKind {
 
 /// Generator parameters. Defaults follow the paper's N=10 setup: ER edge
 /// probability 0.35 (sparse but connectable), WS ring degree 4 with 0.3
-/// rewiring, BA attachment m=2.
+/// rewiring, BA attachment m=2, geometric radius 0.35 (unit square).
 #[derive(Debug, Clone, Copy)]
 pub struct TopologyParams {
     /// Erdős–Rényi edge probability.
     pub er_p: f64,
-    /// Watts–Strogatz even ring degree k.
+    /// Watts–Strogatz even ring degree k (also the intra-subnet lattice
+    /// degree of the router-hierarchy generator).
     pub ws_k: usize,
     /// Watts–Strogatz rewiring probability β.
     pub ws_beta: f64,
     /// Barabási–Albert edges added per new node.
     pub ba_m: usize,
+    /// Random-geometric connection radius in the unit square
+    /// (`generators::random_geometric`).
+    pub geo_radius: f64,
 }
 
 impl Default for TopologyParams {
     fn default() -> Self {
-        TopologyParams { er_p: 0.35, ws_k: 4, ws_beta: 0.3, ba_m: 2 }
+        TopologyParams { er_p: 0.35, ws_k: 4, ws_beta: 0.3, ba_m: 2, geo_radius: 0.35 }
     }
 }
 
@@ -160,7 +166,9 @@ fn augment_to_connected(mut g: Graph, rng: &mut Pcg64) -> Graph {
     }
 }
 
-fn components(g: &Graph) -> Vec<usize> {
+/// Label each node with a connected-component id (0-based, discovery
+/// order). Shared with `graph::generators`' connectivity augmentation.
+pub(crate) fn components(g: &Graph) -> Vec<usize> {
     let n = g.node_count();
     let mut comp = vec![usize::MAX; n];
     let mut next = 0;

@@ -60,11 +60,31 @@
 //! (`--drift` / `--probe-every` / `--replan-threshold`; static
 //! defaults are bit-identical to the frozen engine).
 //!
+//! ## The scale-out plane (hierarchical subnets + sharded simulation)
+//!
+//! Beyond the paper's flat ten-node overlay, the reproduction scales to
+//! hierarchies of tens of thousands of nodes: [`graph::generators`]
+//! builds router-hierarchy overlays (subnets joined by gateway/backbone
+//! links, plus random-geometric graphs), [`coordinator::hierarchy`]
+//! plans per-subnet MSTs and colorings stitched through a backbone MST
+//! into one [`coordinator::engine::PlanEpoch`], and
+//! [`netsim::shard::ShardedNetSim`] simulates each subnet on its own
+//! event queue with only gateway flows crossing shards (thread-parallel
+//! between round barriers — see
+//! [`coordinator::engine::sharded`]). Every knob collapses to the flat
+//! paper pipeline when neutral: one subnet plans flat bit for bit, one
+//! shard simulates flat bit for bit (`tests/engine_equivalence.rs`).
+//! `--topology-gen hierarchy --subnets S --gateway-links L` on the CLI;
+//! [`coordinator::session::ScaleScenario`] and `benches/scale_sweep.rs`
+//! drive it to n = 10k.
+//!
 //! The `runtime` module loads the AOT artifacts through PJRT so the gossip
 //! request path never touches Python.
 //!
 //! Start with [`coordinator::session::GossipSession`] (one line to schedule
-//! and run a round) or `examples/quickstart.rs`.
+//! and run a round) or `examples/quickstart.rs`. A layer-by-layer tour
+//! lives in [`docs::architecture`] (docs/ARCHITECTURE.md) and a runnable
+//! scenario cookbook in [`docs::experiments`] (docs/EXPERIMENTS.md).
 
 pub mod coloring;
 pub mod config;
@@ -79,3 +99,14 @@ pub mod transport;
 pub mod util;
 
 pub mod bench;
+
+/// Rendered project documentation — the `docs/` pages embedded so
+/// `cargo doc --no-deps` (CI runs it with `-D warnings`) resolves and
+/// link-checks their intra-doc references on every push.
+pub mod docs {
+    #[doc = include_str!("../../docs/ARCHITECTURE.md")]
+    pub mod architecture {}
+
+    #[doc = include_str!("../../docs/EXPERIMENTS.md")]
+    pub mod experiments {}
+}

@@ -23,6 +23,7 @@ use mosgu::dfl::models::{self, MODELS};
 use mosgu::dfl::round::run_dfl;
 use mosgu::dfl::trainer::Trainer;
 use mosgu::graph::dot::{node_label, to_dot, DotStyle};
+use mosgu::graph::generators::GeneratorKind;
 use mosgu::graph::matrix::CostMatrix;
 use mosgu::graph::topology::TopologyKind;
 use mosgu::netsim::testbed::Testbed;
@@ -85,6 +86,19 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(t) = f.get("topology") {
         cfg.topology = TopologyKind::parse(t).with_context(|| format!("bad topology {t}"))?;
     }
+    if let Some(g) = f.get("topology-gen") {
+        cfg.topology_gen =
+            GeneratorKind::parse(g).with_context(|| format!("bad topology-gen {g}"))?;
+    }
+    if let Some(s) = f.get("subnets") {
+        cfg.subnets = s.parse().context("--subnets")?;
+    }
+    if let Some(s) = f.get("gateway-links") {
+        cfg.gateway_links = s.parse().context("--gateway-links")?;
+    }
+    if let Some(s) = f.get("geo-radius") {
+        cfg.topology_params.geo_radius = s.parse().context("--geo-radius")?;
+    }
     if let Some(s) = f.get("segments") {
         cfg.segments = s.parse().context("--segments")?;
     }
@@ -142,6 +156,12 @@ fn print_usage() {
          \x20 --config F     load a TOML experiment config\n\
          \x20 --seed N       RNG seed for topology + simulator jitter\n\
          \x20 --topology T   underlay family (er|ws|ba|complete|ring|star|tree|chain)\n\
+         \x20 --topology-gen G  overlay generator (flat|geometric|ws|ba|hierarchy);\n\
+         \x20                hierarchy groups nodes into --subnets subnets joined by\n\
+         \x20                gateway backbone links (see docs/ARCHITECTURE.md)\n\
+         \x20 --subnets S    router subnets in the testbed (and the hierarchy overlay)\n\
+         \x20 --gateway-links L  backbone links per subnet gateway (hierarchy generator)\n\
+         \x20 --geo-radius R unit-square connection radius (geometric generator)\n\
          \x20 --segments K   slice each model copy into K segments with\n\
          \x20                cut-through relay forwarding (default 1 = whole model)\n\
          \x20 --segment-mb F derive the segment count per model from a target\n\

@@ -1,0 +1,153 @@
+//! Hierarchical (per-subnet) MST construction for the scale-out plane.
+//!
+//! The paper's moderator runs one MST over the whole overlay (§III-B).
+//! At hierarchy scale the overlay decomposes: each subnet's spanning tree
+//! is computed **independently** over the subnet's induced cost subgraph,
+//! and the subnet trees are stitched through a **backbone MST** over the
+//! gateway-gateway edges — the same divide the paper's physical testbed
+//! imposes with its per-router subnetworks, and the segmented-topology
+//! rationale of arXiv:1908.07782. With a single subnet the function *is*
+//! the flat MST, float for float — the fallback anchor pinned by
+//! `tests/engine_equivalence.rs`.
+
+use super::{MstAlgorithm, MstError};
+use crate::graph::{Graph, NodeId};
+
+/// Per-subnet MSTs stitched by a backbone MST over gateway edges.
+///
+/// * `costs` — the full overlay cost graph (ping ms weights);
+/// * `subnet_of[u]` — each node's subnet id (dense `0..gateways.len()`);
+/// * `gateways[s]` — subnet `s`'s backbone representative.
+///
+/// Requirements: each subnet's induced cost subgraph is connected, and
+/// `costs` carries an edge between every backbone-adjacent gateway pair
+/// (the router-hierarchy generator guarantees both). Errors with
+/// [`MstError::Disconnected`] otherwise.
+pub fn stitched_mst(
+    costs: &Graph,
+    subnet_of: &[usize],
+    gateways: &[NodeId],
+    alg: MstAlgorithm,
+) -> Result<Graph, MstError> {
+    let n = costs.node_count();
+    assert_eq!(subnet_of.len(), n, "subnet assignment covers every node");
+    let k = gateways.len();
+    assert!(k >= 1, "need at least one subnet");
+    if k == 1 {
+        // flat fallback: the moderator's own MST, bit for bit
+        return alg.run(costs);
+    }
+    let mut tree = Graph::new(n);
+    for s in 0..k {
+        let members: Vec<NodeId> = (0..n).filter(|&u| subnet_of[u] == s).collect();
+        if members.len() <= 1 {
+            continue; // a singleton subnet hangs off the backbone alone
+        }
+        let (sub, map) = costs.induced(&members);
+        let sub_tree = alg.run(&sub)?;
+        for e in sub_tree.edges() {
+            tree.add_edge(map[e.u], map[e.v], e.weight);
+        }
+    }
+    // backbone MST over the measured gateway-gateway costs
+    let mut quotient = Graph::new(k);
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if let Some(w) = costs.weight(gateways[a], gateways[b]) {
+                quotient.add_edge(a, b, w);
+            }
+        }
+    }
+    let backbone = alg.run(&quotient)?;
+    for e in backbone.edges() {
+        tree.add_edge(gateways[e.u], gateways[e.v], e.weight);
+    }
+    if !tree.is_tree() {
+        return Err(MstError::Disconnected);
+    }
+    Ok(tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{router_hierarchy, Hierarchy};
+    use crate::util::rng::Pcg64;
+
+    fn weighted(structure: &Graph, seed: u64) -> Graph {
+        // distinct pseudo-random weights so MSTs are unique
+        let mut rng = Pcg64::new(seed);
+        let mut g = Graph::new(structure.node_count());
+        for e in structure.sorted_edges() {
+            g.add_edge(e.u, e.v, rng.gen_f64_range(1.0, 99.0));
+        }
+        g
+    }
+
+    #[test]
+    fn single_subnet_is_the_flat_mst_bit_for_bit() {
+        let (structure, h) = router_hierarchy(12, 1, 2, 4, &mut Pcg64::new(3));
+        let costs = weighted(&structure, 7);
+        let flat = MstAlgorithm::Prim.run(&costs).unwrap();
+        let stitched =
+            stitched_mst(&costs, h.subnet_of(), h.gateways(), MstAlgorithm::Prim).unwrap();
+        assert_eq!(stitched.edge_count(), flat.edge_count());
+        for e in flat.edges() {
+            assert!(stitched.has_edge(e.u, e.v));
+            assert_eq!(
+                stitched.weight(e.u, e.v).unwrap().to_bits(),
+                e.weight.to_bits(),
+                "weight diverged on ({},{})",
+                e.u,
+                e.v
+            );
+        }
+    }
+
+    #[test]
+    fn stitched_tree_spans_and_crosses_only_at_gateways() {
+        let (structure, h) = router_hierarchy(26, 4, 2, 4, &mut Pcg64::new(5));
+        let costs = weighted(&structure, 11);
+        let tree =
+            stitched_mst(&costs, h.subnet_of(), h.gateways(), MstAlgorithm::Kruskal).unwrap();
+        assert!(tree.is_tree());
+        assert_eq!(tree.node_count(), 26);
+        let mut crossings = 0;
+        for e in tree.edges() {
+            if h.subnet(e.u) != h.subnet(e.v) {
+                crossings += 1;
+                assert!(h.is_gateway(e.u) && h.is_gateway(e.v));
+            }
+        }
+        // a spanning backbone over 4 subnets has exactly 3 crossing edges
+        assert_eq!(crossings, 3);
+    }
+
+    #[test]
+    fn per_subnet_trees_are_subnet_msts() {
+        let (structure, h) = router_hierarchy(24, 3, 2, 4, &mut Pcg64::new(8));
+        let costs = weighted(&structure, 13);
+        let tree = stitched_mst(&costs, h.subnet_of(), h.gateways(), MstAlgorithm::Prim).unwrap();
+        for s in 0..3 {
+            let members = h.members(s);
+            let (sub_costs, _) = costs.induced(&members);
+            let (sub_tree, _) = tree.induced(&members);
+            let want = MstAlgorithm::Prim.run(&sub_costs).unwrap();
+            assert!(
+                (sub_tree.total_weight() - want.total_weight()).abs() < 1e-9,
+                "subnet {s}: stitched part is not the subnet MST"
+            );
+        }
+    }
+
+    #[test]
+    fn disconnected_backbone_is_an_error() {
+        // two subnets but no gateway-gateway edge in the costs
+        let mut costs = Graph::new(4);
+        costs.add_edge(0, 2, 1.0); // subnet 0: {0, 2}
+        costs.add_edge(1, 3, 1.0); // subnet 1: {1, 3}
+        let h = Hierarchy::round_robin(4, 2);
+        let err = stitched_mst(&costs, h.subnet_of(), h.gateways(), MstAlgorithm::Prim);
+        assert!(matches!(err, Err(MstError::Disconnected)));
+    }
+}

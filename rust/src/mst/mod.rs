@@ -7,12 +7,14 @@
 //! ablation_mst.rs`) and so property tests can cross-check total weights.
 
 pub mod boruvka;
+pub mod hierarchical;
 pub mod incremental;
 pub mod kruskal;
 pub mod prim;
 pub mod union_find;
 
 pub use boruvka::boruvka;
+pub use hierarchical::stitched_mst;
 pub use kruskal::kruskal;
 pub use prim::prim;
 

@@ -22,8 +22,15 @@
 //! re-plans — so byte conservation and the monotone clock hold under any
 //! capacity/latency schedule. With no shifts and no drift installed, the
 //! event loop takes exactly the legacy path, float for float.
+//!
+//! ## Scaling out
+//!
+//! One event queue is sequential by construction; the multi-subnet
+//! scale-out plane runs one `NetSim` per subnet plus a backbone queue,
+//! re-synchronized at round barriers — see [`shard::ShardedNetSim`].
 
 pub mod fairshare;
+pub mod shard;
 pub mod testbed;
 
 use crate::util::rng::Pcg64;
@@ -167,6 +174,11 @@ pub struct NetSim {
     /// cached channel capacities (hot: read once per event)
     caps: Vec<f64>,
     flows: Vec<Flow>,
+    /// ids of flows still draining, ascending (hot: every event iterates
+    /// exactly the active set instead of scanning every flow ever created
+    /// — the O(total-flows) per-event scan that dominated n ≥ 10k runs;
+    /// see docs/EXPERIMENTS.md §Perf/L4)
+    active_ids: Vec<FlowId>,
     loss: LossModel,
     /// per-flow protocol overhead fraction (headers/acks)
     protocol_overhead: f64,
@@ -191,6 +203,7 @@ impl NetSim {
             channels,
             caps,
             flows: Vec::new(),
+            active_ids: Vec::new(),
             loss,
             protocol_overhead,
             rng: Pcg64::new(seed),
@@ -314,7 +327,7 @@ impl NetSim {
     }
 
     pub fn active_flow_count(&self) -> usize {
-        self.flows.iter().filter(|f| f.state == FlowState::Active).count()
+        self.active_ids.len()
     }
 
     /// Records of all completed flows so far.
@@ -355,6 +368,8 @@ impl NetSim {
         };
         let effective = payload_mb * (1.0 + self.protocol_overhead) * jitter;
         let id = self.flows.len();
+        // new ids are strictly increasing, so a push keeps the list sorted
+        self.active_ids.push(id);
         self.flows.push(Flow {
             src,
             dst,
@@ -373,13 +388,13 @@ impl NetSim {
     /// share divided by the congestion-loss inflation for the flow's
     /// current bottleneck occupancy.
     ///
-    /// Perf note (EXPERIMENTS.md §Perf/L3): routes are borrowed, not
-    /// cloned, and channel capacities are cached — this function runs once
-    /// per simulation event and dominated the profile before that change.
+    /// Perf note (docs/EXPERIMENTS.md §Perf/L3, §Perf/L4): routes are
+    /// borrowed, not cloned, channel capacities are cached, and the
+    /// active set is a maintained ascending id list — this function runs
+    /// once per simulation event, and scanning every flow ever created
+    /// here made large rounds O(total-flows²) before the list existed.
     fn active_rates(&self) -> Vec<(FlowId, f64)> {
-        let active: Vec<FlowId> = (0..self.flows.len())
-            .filter(|&f| self.flows[f].state == FlowState::Active)
-            .collect();
+        let active = &self.active_ids;
         if active.is_empty() {
             return Vec::new();
         }
@@ -394,7 +409,8 @@ impl NetSim {
             }
         }
         active
-            .into_iter()
+            .iter()
+            .copied()
             .zip(rates)
             .map(|(f, r)| {
                 let bottleneck = self.flows[f].route.iter().map(|&c| occupancy[c]).max().unwrap();
@@ -563,6 +579,10 @@ impl NetSim {
     }
 
     fn complete(&mut self, f: FlowId) {
+        debug_assert_eq!(self.flows[f].state, FlowState::Active, "double-complete of flow {f}");
+        if let Ok(pos) = self.active_ids.binary_search(&f) {
+            self.active_ids.remove(pos);
+        }
         let latency: f64 = self.flows[f].route.iter().map(|&c| self.channels[c].latency_s).sum();
         let flow = &mut self.flows[f];
         flow.state = FlowState::Done;
@@ -901,6 +921,24 @@ mod tests {
         sim.advance_to(2.0);
         let after = sim.route_ping_ms(&[0], 56);
         assert!((after - 400.0).abs() < 0.5, "degraded ping {after}");
+    }
+
+    #[test]
+    fn active_flow_bookkeeping_tracks_completions() {
+        // the maintained active-id list (the §Perf/L4 fix) must shrink as
+        // flows drain and stay consistent under interleaved launches
+        let mut sim = two_host_net(10.0, 0.0);
+        assert_eq!(sim.active_flow_count(), 0);
+        sim.start_flow(0, 1, vec![0], 5.0, 0);
+        sim.start_flow(0, 1, vec![0], 9.0, 1);
+        assert_eq!(sim.active_flow_count(), 2);
+        sim.run_next_completion();
+        assert_eq!(sim.active_flow_count(), 1);
+        sim.start_flow(1, 0, vec![1], 1.0, 2);
+        assert_eq!(sim.active_flow_count(), 2);
+        sim.run_until_idle();
+        assert_eq!(sim.active_flow_count(), 0);
+        assert_eq!(sim.completed().len(), 3);
     }
 
     #[test]

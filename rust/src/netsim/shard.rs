@@ -1,0 +1,390 @@
+//! Sharded discrete-event simulation for the multi-subnet scale-out plane.
+//!
+//! A single [`NetSim`] event loop is sequential: every event recomputes
+//! max-min rates over *all* active flows and channels, so simulating a
+//! hierarchy of tens of thousands of devices in one queue is quadratic in
+//! the round's flow count. [`ShardedNetSim`] splits the paper's testbed
+//! (§IV-A: devices behind routers, routers fully interconnected) into one
+//! independent event queue per subnet plus one **backbone shard**:
+//!
+//! * flows between devices of the same subnet run entirely inside that
+//!   subnet's shard (route: up-link → down-link, exactly the flat route);
+//! * flows crossing subnets run in the backbone shard over clones of the
+//!   endpoints' device links plus the router-router channel — so gateway
+//!   traffic contends with other gateway traffic, while intra-subnet
+//!   traffic never blocks on a foreign subnet's congestion.
+//!
+//! Shards advance independently between **round barriers** and are
+//! re-synchronized at each barrier ([`ShardedNetSim::drain_and_sync`]):
+//! every shard drains to idle (optionally on its own thread), then all
+//! clocks jump to the latest shard's time. Within a barrier window the
+//! shards share no state, so the result is bit-for-bit deterministic
+//! regardless of thread scheduling — parallel and sequential drains of
+//! the same sharded simulator are identical.
+//!
+//! **Fidelity contract.** The decomposition decouples one real coupling:
+//! a device's local and cross-subnet flows no longer share its physical
+//! up/down link. Single-subnet (and forced single-shard) configurations
+//! have no cross flows and run over the *full* testbed wiring with the
+//! *same* channel ids — pinned bit-identical to [`Testbed::netsim`]'s
+//! flat simulator by `tests/engine_equivalence.rs`. Byte conservation
+//! holds in every mode: each launched payload drains exactly once in
+//! exactly one shard.
+
+use super::testbed::Testbed;
+use super::{ChannelId, FlowRecord, HostId, NetSim};
+
+/// Derive a shard's RNG stream from the experiment seed (tag 0 = the
+/// backbone shard, 1 + subnet index = local shards; the single-shard mode
+/// uses the seed untouched so it replays the flat simulator).
+fn shard_seed(seed: u64, tag: u64) -> u64 {
+    seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)).rotate_left(17) ^ 0x5bad_c0de
+}
+
+/// One event queue per subnet plus a backbone queue for gateway flows.
+pub struct ShardedNetSim {
+    /// Local shards, indexed by subnet (a single entry spanning the full
+    /// wiring in single-shard mode).
+    shards: Vec<NetSim>,
+    /// Cross-subnet flows drain here (`None` in single-shard mode, where
+    /// `shards[0]` carries everything over the flat routes).
+    backbone: Option<NetSim>,
+    /// device → testbed subnet (routing decisions).
+    subnet_of: Vec<usize>,
+    /// device → shard carrying its intra-subnet flows.
+    shard_of: Vec<usize>,
+    /// device → (up, down) channel ids inside shard `shard_of[device]`.
+    local_links: Vec<(ChannelId, ChannelId)>,
+    /// device → (up, down) channel-clone ids inside the backbone shard.
+    backbone_links: Vec<(ChannelId, ChannelId)>,
+    /// dense S×S router-link table; ids live in the backbone shard, or in
+    /// `shards[0]` in single-shard mode.
+    router_links: Vec<Option<ChannelId>>,
+    subnets: usize,
+    /// Payload launched so far (MB) — the byte-conservation ledger.
+    launched_mb: f64,
+}
+
+impl ShardedNetSim {
+    /// One shard per testbed subnet (plus the backbone shard). A testbed
+    /// with a single subnet degenerates to [`ShardedNetSim::single`].
+    pub fn sharded(tb: &Testbed, seed: u64) -> Self {
+        Self::build(tb, seed, tb.subnet_count())
+    }
+
+    /// One shard over the full testbed wiring — today's sequential
+    /// simulator behind the sharded API, the baseline every speedup and
+    /// equivalence claim is measured against.
+    pub fn single(tb: &Testbed, seed: u64) -> Self {
+        Self::build(tb, seed, 1)
+    }
+
+    fn build(tb: &Testbed, seed: u64, shard_count: usize) -> Self {
+        let n = tb.node_count();
+        let s = tb.subnet_count();
+        let subnet_of: Vec<usize> = (0..n).map(|d| tb.subnet_of(d)).collect();
+        let mut router_links = vec![None; s * s];
+
+        if shard_count <= 1 || s == 1 {
+            // the flat simulator, channel id for channel id — cross flows
+            // route up → router-router → down inside the one shard
+            for a in 0..s {
+                for b in 0..s {
+                    router_links[a * s + b] = tb.router_link_id(a, b);
+                }
+            }
+            return ShardedNetSim {
+                shards: vec![tb.netsim(seed)],
+                backbone: None,
+                subnet_of,
+                shard_of: vec![0; n],
+                local_links: (0..n).map(|d| tb.device_link_ids(d)).collect(),
+                backbone_links: Vec::new(),
+                router_links,
+                subnets: s,
+                launched_mb: 0.0,
+            };
+        }
+
+        // local shards: each subnet's device up/down links, remapped dense
+        let mut shards = Vec::with_capacity(s);
+        let mut local_links = vec![(0, 0); n];
+        for si in 0..s {
+            let mut chs = Vec::new();
+            for d in tb.subnet_members(si) {
+                let (up, down) = tb.device_link_ids(d);
+                local_links[d] = (chs.len(), chs.len() + 1);
+                chs.push(tb.channels()[up].clone());
+                chs.push(tb.channels()[down].clone());
+            }
+            shards.push(tb.netsim_for_channels(chs, shard_seed(seed, 1 + si as u64)));
+        }
+        // backbone shard: clones of every device link plus the router mesh
+        let mut chs = Vec::new();
+        let mut backbone_links = vec![(0, 0); n];
+        for d in 0..n {
+            let (up, down) = tb.device_link_ids(d);
+            backbone_links[d] = (chs.len(), chs.len() + 1);
+            chs.push(tb.channels()[up].clone());
+            chs.push(tb.channels()[down].clone());
+        }
+        for a in 0..s {
+            for b in 0..s {
+                if let Some(c) = tb.router_link_id(a, b) {
+                    router_links[a * s + b] = Some(chs.len());
+                    chs.push(tb.channels()[c].clone());
+                }
+            }
+        }
+        let backbone = Some(tb.netsim_for_channels(chs, shard_seed(seed, 0)));
+        ShardedNetSim {
+            shards,
+            backbone,
+            shard_of: subnet_of.clone(),
+            subnet_of,
+            local_links,
+            backbone_links,
+            router_links,
+            subnets: s,
+            launched_mb: 0.0,
+        }
+    }
+
+    /// Event queues in play (local shards + backbone).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len() + usize::from(self.backbone.is_some())
+    }
+
+    /// Event queues [`ShardedNetSim::sharded`] will use for a testbed of
+    /// `subnets` subnets, without building one: one per subnet plus the
+    /// backbone, degenerating to the single flat queue at one subnet.
+    pub fn planned_shard_count(subnets: usize) -> usize {
+        if subnets > 1 {
+            subnets + 1
+        } else {
+            1
+        }
+    }
+
+    pub fn subnet_count(&self) -> usize {
+        self.subnets
+    }
+
+    /// Latest clock across all shards (the shared time after a barrier;
+    /// between barriers shards advance independently).
+    pub fn now(&self) -> f64 {
+        self.shards
+            .iter()
+            .map(|s| s.now())
+            .chain(self.backbone.iter().map(|b| b.now()))
+            .fold(0.0, f64::max)
+    }
+
+    pub fn active_flow_count(&self) -> usize {
+        self.shards.iter().map(|s| s.active_flow_count()).sum::<usize>()
+            + self.backbone.as_ref().map_or(0, |b| b.active_flow_count())
+    }
+
+    /// Payload launched so far (MB) — compare against the completed
+    /// records' payload sum to assert byte conservation.
+    pub fn launched_payload_mb(&self) -> f64 {
+        self.launched_mb
+    }
+
+    /// Start a device-to-device transfer: same-subnet flows run in the
+    /// subnet's shard, cross-subnet flows in the backbone shard (or the
+    /// flat route in single-shard mode).
+    pub fn start_flow(&mut self, src: HostId, dst: HostId, payload_mb: f64, tag: u64) {
+        assert!(src != dst, "flow to self {src}");
+        self.launched_mb += payload_mb;
+        let (su, sd) = (self.subnet_of[src], self.subnet_of[dst]);
+        if su == sd || self.backbone.is_none() {
+            let shard = self.shard_of[src];
+            let (up, _) = self.local_links[src];
+            let (_, down) = self.local_links[dst];
+            let route = if su == sd {
+                vec![up, down]
+            } else {
+                let rr = self.router_links[su * self.subnets + sd].expect("router link");
+                vec![up, rr, down]
+            };
+            self.shards[shard].start_flow(src, dst, route, payload_mb, tag);
+        } else {
+            let (up, _) = self.backbone_links[src];
+            let (_, down) = self.backbone_links[dst];
+            let rr = self.router_links[su * self.subnets + sd].expect("router link");
+            self.backbone
+                .as_mut()
+                .expect("backbone shard exists")
+                .start_flow(src, dst, vec![up, rr, down], payload_mb, tag);
+        }
+    }
+
+    /// Round barrier: drain every shard to idle — each on its own thread
+    /// when `parallel` — then advance all clocks to the latest shard's
+    /// time. Returns the barrier time. Shards share no state inside the
+    /// window, so parallel and sequential drains are bit-identical.
+    pub fn drain_and_sync(&mut self, parallel: bool) -> f64 {
+        if parallel && self.shards.len() > 1 {
+            let shards = &mut self.shards;
+            let backbone = &mut self.backbone;
+            std::thread::scope(|scope| {
+                for sim in shards.iter_mut() {
+                    if sim.active_flow_count() > 0 {
+                        scope.spawn(move || {
+                            sim.run_until_idle();
+                        });
+                    }
+                }
+                // the (tiny) backbone drains on the barrier thread
+                if let Some(bb) = backbone.as_mut() {
+                    bb.run_until_idle();
+                }
+            });
+        } else {
+            for sim in self.shards.iter_mut() {
+                sim.run_until_idle();
+            }
+            if let Some(bb) = self.backbone.as_mut() {
+                bb.run_until_idle();
+            }
+        }
+        let t = self.now();
+        for sim in self.shards.iter_mut() {
+            sim.advance_to(t);
+        }
+        if let Some(bb) = self.backbone.as_mut() {
+            bb.advance_to(t);
+        }
+        t
+    }
+
+    /// Drain completed-transfer records from every shard (local shards in
+    /// subnet order, then the backbone) — deterministic, and exactly the
+    /// flat simulator's completion order in single-shard mode.
+    pub fn take_completed(&mut self) -> Vec<FlowRecord> {
+        let mut out = Vec::new();
+        for sim in self.shards.iter_mut() {
+            out.extend(sim.take_completed());
+        }
+        if let Some(bb) = self.backbone.as_mut() {
+            out.extend(bb.take_completed());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg(nodes: usize, subnets: usize) -> ExperimentConfig {
+        ExperimentConfig { nodes, subnets, latency_jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn single_shard_replays_flat_simulator_bit_for_bit() {
+        let tb = Testbed::new(&cfg(10, 3));
+        let mut flat = tb.netsim(7);
+        for (src, dst) in [(0, 3), (0, 1), (2, 5), (4, 7)] {
+            flat.start_flow(src, dst, tb.route(src, dst), 14.0, (src * 16 + dst) as u64);
+        }
+        flat.run_until_idle();
+
+        let mut sharded = ShardedNetSim::single(&tb, 7);
+        for (src, dst) in [(0, 3), (0, 1), (2, 5), (4, 7)] {
+            sharded.start_flow(src, dst, 14.0, (src * 16 + dst) as u64);
+        }
+        sharded.drain_and_sync(false);
+        assert_eq!(sharded.now().to_bits(), flat.now().to_bits());
+        let a = sharded.take_completed();
+        let b = flat.take_completed();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+            assert_eq!(x.end.to_bits(), y.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn one_subnet_sharded_is_the_single_shard() {
+        let tb = Testbed::new(&cfg(8, 1));
+        let sharded = ShardedNetSim::sharded(&tb, 1);
+        assert_eq!(sharded.shard_count(), 1);
+        assert_eq!(sharded.subnet_count(), 1);
+    }
+
+    #[test]
+    fn local_flows_stay_in_their_shard_and_cross_flows_hit_the_backbone() {
+        let tb = Testbed::new(&cfg(12, 3));
+        let mut sim = ShardedNetSim::sharded(&tb, 1);
+        assert_eq!(sim.shard_count(), 4, "3 local shards + backbone");
+        // 0 and 3 share subnet 0; 0 and 1 differ
+        sim.start_flow(0, 3, 4.0, 1);
+        assert_eq!(sim.shards[0].active_flow_count(), 1);
+        sim.start_flow(0, 1, 4.0, 2);
+        assert_eq!(sim.backbone.as_ref().unwrap().active_flow_count(), 1);
+        let t = sim.drain_and_sync(false);
+        assert!(t > 0.0);
+        assert_eq!(sim.active_flow_count(), 0);
+        let recs = sim.take_completed();
+        assert_eq!(recs.len(), 2);
+        let total: f64 = recs.iter().map(|r| r.payload_mb).sum();
+        assert!((total - sim.launched_payload_mb()).abs() < 1e-9, "bytes conserved");
+    }
+
+    #[test]
+    fn parallel_and_sequential_drains_are_bit_identical() {
+        let run = |parallel: bool| {
+            let tb = Testbed::new(&cfg(12, 4));
+            let mut sim = ShardedNetSim::sharded(&tb, 3);
+            for d in 0..12 {
+                sim.start_flow(d, (d + 4) % 12, 5.0, d as u64); // cross flows
+                sim.start_flow(d, (d + 8) % 12, 3.0, (100 + d) as u64);
+            }
+            let t = sim.drain_and_sync(parallel);
+            (t, sim.take_completed())
+        };
+        let (t_seq, r_seq) = run(false);
+        let (t_par, r_par) = run(true);
+        assert_eq!(t_seq.to_bits(), t_par.to_bits());
+        assert_eq!(r_seq.len(), r_par.len());
+        for (a, b) in r_seq.iter().zip(&r_par) {
+            assert_eq!(a, b);
+            assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes_all_shard_clocks() {
+        let tb = Testbed::new(&cfg(12, 3));
+        let mut sim = ShardedNetSim::sharded(&tb, 1);
+        sim.start_flow(0, 3, 20.0, 0); // slow intra flow in shard 0
+        sim.start_flow(1, 4, 1.0, 1); // fast intra flow in shard 1
+        let t = sim.drain_and_sync(false);
+        for s in &sim.shards {
+            assert_eq!(s.now().to_bits(), t.to_bits(), "shard clock off the barrier");
+        }
+        assert_eq!(sim.backbone.as_ref().unwrap().now().to_bits(), t.to_bits());
+    }
+
+    #[test]
+    fn deterministic_across_runs_with_jitter() {
+        let run = || {
+            let mut c = cfg(12, 3);
+            c.latency_jitter = 0.1; // enables per-shard transfer jitter
+            let tb = Testbed::new(&c);
+            let mut sim = ShardedNetSim::sharded(&tb, 9);
+            for d in 0..12 {
+                sim.start_flow(d, (d + 1) % 12, 4.0, d as u64);
+            }
+            let t = sim.drain_and_sync(true);
+            (t, sim.take_completed())
+        };
+        let (t1, r1) = run();
+        let (t2, r2) = run();
+        assert_eq!(t1.to_bits(), t2.to_bits());
+        assert_eq!(r1, r2);
+    }
+}

@@ -97,6 +97,32 @@ impl Testbed {
         self.subnets
     }
 
+    /// The experiment config this testbed was built from.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The full channel table, in construction order (device up/down
+    /// pairs, then router-router links).
+    pub fn channels(&self) -> &[Channel] {
+        &self.channels
+    }
+
+    /// A device's (uplink, downlink) channel ids in the full table.
+    pub fn device_link_ids(&self, d: HostId) -> (ChannelId, ChannelId) {
+        self.device_links[d]
+    }
+
+    /// The directed router link a→b in the full table (`None` when a == b).
+    pub fn router_link_id(&self, a: usize, b: usize) -> Option<ChannelId> {
+        self.router_links[a * self.subnets + b]
+    }
+
+    /// Devices attached to router `s`, ascending.
+    pub fn subnet_members(&self, s: usize) -> Vec<HostId> {
+        (0..self.nodes).filter(|&d| self.subnet_of[d] == s).collect()
+    }
+
     /// Which subnet (router) a device belongs to.
     pub fn subnet_of(&self, d: HostId) -> usize {
         self.subnet_of[d]
@@ -160,12 +186,17 @@ impl Testbed {
 
     /// Fresh simulator over this wiring.
     pub fn netsim(&self, seed: u64) -> NetSim {
-        let mut sim = NetSim::new(
-            self.channels.clone(),
-            LossModel::default(),
-            self.cfg.protocol_overhead,
-            seed,
-        );
+        self.netsim_for_channels(self.channels.clone(), seed)
+    }
+
+    /// Fresh simulator over an arbitrary channel subset with this
+    /// testbed's construction policy (default loss model, protocol
+    /// overhead, transfer jitter derived from the latency jitter). The
+    /// single place that policy lives: [`Testbed::netsim`] and every
+    /// shard of [`super::shard::ShardedNetSim`] build through it, so the
+    /// sharded simulators can never drift from the flat baseline.
+    pub fn netsim_for_channels(&self, channels: Vec<Channel>, seed: u64) -> NetSim {
+        let mut sim = NetSim::new(channels, LossModel::default(), self.cfg.protocol_overhead, seed);
         if self.cfg.latency_jitter > 0.0 {
             // transfer-size jitter kept small relative to latency jitter
             sim.set_transfer_jitter((self.cfg.latency_jitter / 2.0).min(0.49));

@@ -1,0 +1,159 @@
+//! Link hygiene for the documentation pages.
+//!
+//! Intra-doc references (`[`crate::...`]`) in `docs/*.md` are resolved
+//! by `cargo doc --no-deps` because `lib.rs` embeds the pages as
+//! `mosgu::docs::*` (CI denies rustdoc warnings). This test covers what
+//! rustdoc does not: **relative file links** in the markdown — every
+//! `[text](path)` that is not an external URL or a pure anchor must
+//! point at a file that exists, and anchors into a markdown file must
+//! match one of its headings.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Repo root: this file lives at `<repo>/rust/tests/docs_links.rs`.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("workspace root").to_path_buf()
+}
+
+/// Extract `(target, line)` pairs from every markdown inline link,
+/// skipping fenced code blocks.
+fn markdown_links(text: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b']' && bytes[i + 1] == b'(' {
+                let start = i + 2;
+                if let Some(rel_end) = line[start..].find(')') {
+                    out.push((line[start..start + rel_end].to_string(), lineno + 1));
+                    i = start + rel_end;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// GitHub-style heading slugs: lowercase, drop non-alphanumerics except
+/// spaces/hyphens, spaces → hyphens.
+fn heading_anchors(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence || !line.starts_with('#') {
+            continue;
+        }
+        let title = line.trim_start_matches('#').trim();
+        let slug: String = title
+            .chars()
+            .filter_map(|c| {
+                if c.is_alphanumeric() {
+                    Some(c.to_ascii_lowercase())
+                } else if c == ' ' || c == '-' {
+                    Some('-')
+                } else {
+                    None
+                }
+            })
+            .collect();
+        out.push(slug);
+    }
+    out
+}
+
+fn is_external(target: &str) -> bool {
+    target.starts_with("http://")
+        || target.starts_with("https://")
+        || target.starts_with("mailto:")
+        || target.starts_with('#') && target.len() > 1 && !target.contains('/')
+}
+
+#[test]
+fn docs_relative_links_resolve() {
+    let root = repo_root();
+    let pages = ["README.md", "docs/ARCHITECTURE.md", "docs/EXPERIMENTS.md"];
+    let mut checked = 0;
+    let mut failures: Vec<String> = Vec::new();
+    for page in pages {
+        let path = root.join(page);
+        let text = fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {page}: {e}"));
+        let dir = path.parent().expect("page has a directory");
+        for (target, line) in markdown_links(&text) {
+            if is_external(&target) || target.starts_with('#') {
+                continue;
+            }
+            let (file_part, anchor) = match target.split_once('#') {
+                Some((f, a)) => (f, Some(a.to_string())),
+                None => (target.as_str(), None),
+            };
+            if file_part.is_empty() {
+                continue;
+            }
+            checked += 1;
+            let dest = dir.join(file_part);
+            if !dest.exists() {
+                failures.push(format!("{page}:{line}: broken relative link -> {target}"));
+                continue;
+            }
+            if let Some(anchor) = anchor {
+                if file_part.ends_with(".md") {
+                    let dest_text = fs::read_to_string(&dest)
+                        .unwrap_or_else(|e| panic!("read {}: {e}", dest.display()));
+                    if !heading_anchors(&dest_text).contains(&anchor) {
+                        failures.push(format!(
+                            "{page}:{line}: anchor #{anchor} missing in {file_part}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    assert!(failures.is_empty(), "broken docs links:\n{}", failures.join("\n"));
+    assert!(checked >= 4, "link extraction found too few relative links ({checked})");
+}
+
+#[test]
+fn docs_pages_exist_and_are_embedded() {
+    let root = repo_root();
+    for page in ["docs/ARCHITECTURE.md", "docs/EXPERIMENTS.md"] {
+        assert!(root.join(page).exists(), "{page} missing");
+    }
+    // the pages referenced by code comments carry their anchors
+    let experiments = fs::read_to_string(root.join("docs/EXPERIMENTS.md")).unwrap();
+    for heading in ["## Calibration", "## Deviations", "### Perf/L3", "### Perf/L4"] {
+        assert!(
+            experiments.contains(heading),
+            "docs/EXPERIMENTS.md lost the {heading:?} section code comments point at"
+        );
+    }
+    let lib = fs::read_to_string(root.join("rust/src/lib.rs")).unwrap();
+    assert!(
+        lib.contains("include_str!(\"../../docs/ARCHITECTURE.md\")")
+            && lib.contains("include_str!(\"../../docs/EXPERIMENTS.md\")"),
+        "docs pages must stay embedded in rustdoc for CI link-checking"
+    );
+}
+
+#[test]
+fn markdown_link_extractor_behaves() {
+    let text = "see [a](x.md) and [b](http://e.com) and\n```\n[c](skip.md)\n```\n[d](y.md#z)";
+    let links = markdown_links(text);
+    let targets: Vec<&str> = links.iter().map(|(t, _)| t.as_str()).collect();
+    assert_eq!(targets, vec!["x.md", "http://e.com", "y.md#z"]);
+    assert_eq!(heading_anchors("# A B\n## Perf/L3\n"), vec!["a-b", "perfl3"]);
+}

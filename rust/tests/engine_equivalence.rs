@@ -16,7 +16,11 @@
 //!    path across all paper topologies, jitter, and failure injection,
 //!    while `segments ≥ 4` cut-through forwarding strictly beats
 //!    whole-model transfers for large models on deep trees (chain,
-//!    balanced tree) at n ≥ 10.
+//!    balanced tree) at n ≥ 10;
+//! 7. the scale-out plane anchors to the flat engine: single-subnet
+//!    hierarchical planning reproduces the flat planner bit for bit, and
+//!    the single-shard sharded simulator replays the flat engine's round
+//!    **bit for bit** across topologies, jitter, and failure injection.
 
 use mosgu::coloring::bfs_coloring;
 use mosgu::config::ExperimentConfig;
@@ -230,6 +234,110 @@ fn segmented_rounds_disseminate_completely_under_failures() {
     let again = session.run_mosgu_round_planned(TransferPlan::segmented(14.0, 4), 2, 0.15);
     assert_eq!(lossy.total_time_s.to_bits(), again.total_time_s.to_bits());
     assert_eq!(lossy.transfers, again.transfers);
+}
+
+fn assert_rounds_bit_identical(a: &RoundMetrics, b: &RoundMetrics, label: &str) {
+    assert_eq!(a.slots, b.slots, "{label}: slot count diverged");
+    assert_eq!(
+        a.total_time_s.to_bits(),
+        b.total_time_s.to_bits(),
+        "{label}: total time diverged ({} vs {})",
+        a.total_time_s,
+        b.total_time_s
+    );
+    assert_eq!(
+        a.exchange_time_s.to_bits(),
+        b.exchange_time_s.to_bits(),
+        "{label}: exchange time diverged"
+    );
+    assert_eq!(a.transfers.len(), b.transfers.len(), "{label}: transfer count diverged");
+    for (x, y) in a.transfers.iter().zip(&b.transfers) {
+        assert_eq!(x, y, "{label}: transfer record diverged");
+        assert_eq!(x.start.to_bits(), y.start.to_bits(), "{label}");
+        assert_eq!(x.end.to_bits(), y.end.to_bits(), "{label}");
+    }
+    assert_eq!(a.slot_timings.len(), b.slot_timings.len(), "{label}");
+    for (x, y) in a.slot_timings.iter().zip(&b.slot_timings) {
+        assert_eq!(x, y, "{label}: slot timing diverged");
+        assert_eq!(x.start_s.to_bits(), y.start_s.to_bits(), "{label}");
+        assert_eq!(x.end_s.to_bits(), y.end_s.to_bits(), "{label}");
+    }
+}
+
+#[test]
+fn single_shard_sharded_round_is_bit_identical_to_flat_engine() {
+    // the scale-out plane's compatibility anchor: with one subnet the
+    // sharded barrier runner must replay the flat event-driven engine
+    // bit for bit on every paper topology
+    for kind in TopologyKind::ALL {
+        let cfg = ExperimentConfig { subnets: 1, ..quiet_cfg(kind) };
+        let session = GossipSession::new(&cfg).unwrap();
+        for (model_mb, seed) in [(11.6, 1u64), (48.0, 7u64)] {
+            let flat = session.run_mosgu_round(model_mb, seed, 0.0);
+            let sharded = session.run_sharded_round(model_mb, seed, 0.0, false);
+            assert_rounds_bit_identical(&sharded, &flat, &format!("{kind:?} mb={model_mb}"));
+        }
+    }
+}
+
+#[test]
+fn single_shard_sharded_round_is_bit_identical_under_jitter_and_failures() {
+    // jittered testbed + failure injection: the rng draw sequences (per-
+    // transfer jitter and the failure coins) must replay exactly
+    let cfg = ExperimentConfig { subnets: 1, ..Default::default() }; // latency_jitter = 0.08
+    let session = GossipSession::new(&cfg).unwrap();
+    for failure_prob in [0.0, 0.15] {
+        let flat = session.run_mosgu_round(14.0, 3, failure_prob);
+        let sharded = session.run_sharded_round(14.0, 3, failure_prob, false);
+        assert_rounds_bit_identical(&sharded, &flat, &format!("fp={failure_prob}"));
+    }
+}
+
+#[test]
+fn hierarchical_planning_single_subnet_is_bit_identical_to_flat() {
+    // per-topology: a moderator planning hierarchically over a flat
+    // (single-subnet) hierarchy publishes the flat bundle bit for bit
+    use mosgu::coordinator::moderator::Moderator;
+    use mosgu::graph::generators::Hierarchy;
+    for kind in TopologyKind::ALL {
+        let session = GossipSession::new(&quiet_cfg(kind)).unwrap();
+        let cfg = session.config();
+        let submit = |m: &mut Moderator| {
+            for u in 0..10 {
+                let peers: Vec<(usize, f64)> = session.costs().neighbors(u).to_vec();
+                m.submit_report(u, &peers);
+            }
+        };
+        let mut flat = Moderator::new(0, 10, cfg.mst, cfg.coloring);
+        submit(&mut flat);
+        let flat_bundle = flat.compute_schedule(14.0, 56, 1).unwrap().clone();
+        let mut hier = Moderator::new(0, 10, cfg.mst, cfg.coloring);
+        submit(&mut hier);
+        let hier_bundle = hier
+            .compute_schedule_hierarchical(&Hierarchy::flat(10), 14.0, 56, 1)
+            .unwrap()
+            .clone();
+        assert_eq!(hier_bundle.tree.edge_count(), flat_bundle.tree.edge_count(), "{kind:?}");
+        for e in flat_bundle.tree.edges() {
+            assert!(hier_bundle.tree.has_edge(e.u, e.v), "{kind:?}: tree diverged");
+            assert_eq!(
+                hier_bundle.tree.weight(e.u, e.v).unwrap().to_bits(),
+                e.weight.to_bits(),
+                "{kind:?}: weight diverged"
+            );
+        }
+        assert_eq!(
+            hier_bundle.schedule.coloring.assignment(),
+            flat_bundle.schedule.coloring.assignment(),
+            "{kind:?}: coloring diverged"
+        );
+        assert_eq!(
+            hier_bundle.schedule.slot_len_s.to_bits(),
+            flat_bundle.schedule.slot_len_s.to_bits(),
+            "{kind:?}: slot budget diverged"
+        );
+        assert_eq!(hier_bundle.neighbor_table, flat_bundle.neighbor_table, "{kind:?}");
+    }
 }
 
 #[test]

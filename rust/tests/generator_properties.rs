@@ -1,0 +1,191 @@
+//! Property tests for the scale-out generator suite
+//! (`graph::generators`): seeded determinism, connectivity, degree and
+//! edge-count bounds, and the hierarchy invariants the planner and the
+//! sharded simulator rely on (every node in exactly one subnet, gateways
+//! connected by the backbone, crossings only at gateways).
+
+use mosgu::coordinator::hierarchy::plan_hierarchical;
+use mosgu::graph::generators::{random_geometric, router_hierarchy, Hierarchy};
+use mosgu::graph::Graph;
+use mosgu::mst::MstAlgorithm;
+use mosgu::coloring::ColoringAlgorithm;
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
+
+fn same_edges(a: &Graph, b: &Graph) -> bool {
+    a.edge_count() == b.edge_count()
+        && a.sorted_edges()
+            .iter()
+            .zip(b.sorted_edges().iter())
+            .all(|(x, y)| (x.u, x.v) == (y.u, y.v) && x.weight.to_bits() == y.weight.to_bits())
+}
+
+#[test]
+fn geometric_is_deterministic_and_connected() {
+    check("geometric determinism + connectivity", 80, |rng| {
+        let n = 4 + rng.gen_range(60);
+        let radius = rng.gen_f64_range(0.05, 0.6);
+        let seed = rng.next_u64();
+        let a = random_geometric(n, radius, &mut Pcg64::new(seed));
+        let b = random_geometric(n, radius, &mut Pcg64::new(seed));
+        prop_assert!(same_edges(&a, &b), "same seed must yield identical graphs");
+        prop_assert!(a.is_connected(), "n={n} radius={radius} disconnected");
+        prop_assert_eq!(a.node_count(), n);
+        // connected on n nodes => at least a spanning tree's edges
+        prop_assert!(a.edge_count() >= n - 1, "edge count below tree bound");
+        Ok(())
+    });
+}
+
+#[test]
+fn geometric_edge_count_grows_with_radius() {
+    check("geometric radius monotonicity", 40, |rng| {
+        let n = 10 + rng.gen_range(40);
+        let seed = rng.next_u64();
+        // same positions (same seed), nested radii => nested raw edge
+        // sets; Borůvka stitching adds at most ~2·components ≤ 2n extra
+        // edges to the sparser graph
+        let small = random_geometric(n, 0.15, &mut Pcg64::new(seed));
+        let large = random_geometric(n, 0.6, &mut Pcg64::new(seed));
+        prop_assert!(
+            large.edge_count() + 2 * n >= small.edge_count(),
+            "radius growth lost edges: {} vs {}",
+            large.edge_count(),
+            small.edge_count()
+        );
+        // the full-diagonal radius yields the complete graph
+        let complete = random_geometric(n, 1.5, &mut Pcg64::new(seed));
+        prop_assert_eq!(complete.edge_count(), n * (n - 1) / 2);
+        Ok(())
+    });
+}
+
+#[test]
+fn hierarchy_generator_invariants() {
+    check("router hierarchy invariants", 80, |rng| {
+        let subnets = 1 + rng.gen_range(8);
+        let per = 2 + rng.gen_range(12);
+        let n = (subnets * per).max(2);
+        let gateway_links = 1 + rng.gen_range(3);
+        let intra_k = 2 + 2 * rng.gen_range(3);
+        let seed = rng.next_u64();
+        let (g, h) = router_hierarchy(n, subnets, gateway_links, intra_k, &mut Pcg64::new(seed));
+        let (g2, h2) = router_hierarchy(n, subnets, gateway_links, intra_k, &mut Pcg64::new(seed));
+        prop_assert!(same_edges(&g, &g2), "same seed must yield identical graphs");
+        prop_assert_eq!(h, h2);
+
+        prop_assert!(g.is_connected());
+        prop_assert_eq!(h.node_count(), n);
+        prop_assert_eq!(h.subnet_count(), subnets);
+        // every node in exactly one subnet, round-robin like the testbed
+        let mut counts = vec![0usize; subnets];
+        for u in 0..n {
+            prop_assert_eq!(h.subnet(u), u % subnets);
+            counts[h.subnet(u)] += 1;
+        }
+        prop_assert!(counts.iter().all(|&c| c >= 1), "empty subnet");
+        // gateways are members of their own subnet
+        for s in 0..subnets {
+            prop_assert_eq!(h.subnet(h.gateway(s)), s);
+        }
+        // crossings only at gateways; backbone (gateway-gateway edges)
+        // connects every subnet
+        let mut backbone = Graph::new(subnets);
+        for e in g.edges() {
+            let (su, sv) = (h.subnet(e.u), h.subnet(e.v));
+            if su != sv {
+                prop_assert!(
+                    h.is_gateway(e.u) && h.is_gateway(e.v),
+                    "crossing edge off the backbone"
+                );
+                if !backbone.has_edge(su, sv) {
+                    backbone.add_edge(su, sv, 1.0);
+                }
+            }
+        }
+        if subnets > 1 {
+            prop_assert!(backbone.is_connected(), "backbone does not span the subnets");
+            // each gateway keeps >= gateway_links backbone links (ring +
+            // chords; capped by the number of other subnets)
+            let reach = gateway_links.min(subnets - 1);
+            for s in 0..subnets {
+                prop_assert!(
+                    backbone.degree(s) >= reach.min(backbone.node_count() - 1),
+                    "subnet {s} under-linked"
+                );
+            }
+        }
+        // degree bound: lattice degree + chords + backbone
+        let max_intra = intra_k + per; // lattice ~intra_k plus at most len/4 chords each way
+        for u in 0..n {
+            let cap = max_intra + if h.is_gateway(u) { 2 * subnets } else { 0 };
+            prop_assert!(g.degree(u) <= cap, "node {u} degree {} > {cap}", g.degree(u));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hierarchical_plans_are_proper_on_random_hierarchies() {
+    check("hierarchical planning invariants", 60, |rng| {
+        let subnets = 1 + rng.gen_range(6);
+        let n = (subnets * (3 + rng.gen_range(8))).max(2);
+        let (structure, h) =
+            router_hierarchy(n, subnets, 2, 4, &mut Pcg64::new(rng.next_u64()));
+        // ping-like weights, intra cheap / backbone expensive
+        let mut costs = Graph::new(n);
+        for e in structure.sorted_edges() {
+            let cross = h.subnet(e.u) != h.subnet(e.v);
+            let base = if cross { 20.0 } else { 1.0 };
+            costs.add_edge(e.u, e.v, base * (1.0 + rng.gen_f64()));
+        }
+        let epoch = plan_hierarchical(
+            &costs,
+            &h,
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            1,
+        )
+        .map_err(|e| format!("planning failed: {e}"))?;
+        prop_assert!(epoch.tree.is_tree());
+        prop_assert_eq!(epoch.tree.node_count(), n);
+        prop_assert!(epoch.schedule.coloring.is_proper(&epoch.tree));
+        prop_assert!(epoch.schedule.slot_len_s > 0.0);
+        for e in epoch.tree.edges() {
+            if h.subnet(e.u) != h.subnet(e.v) {
+                prop_assert!(h.is_gateway(e.u) && h.is_gateway(e.v));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn flat_hierarchy_plan_matches_flat_planner() {
+    check("single-subnet plan == flat plan", 40, |rng| {
+        let n = 4 + rng.gen_range(20);
+        let (structure, _) = router_hierarchy(n, 1, 2, 4, &mut Pcg64::new(rng.next_u64()));
+        let mut costs = Graph::new(n);
+        for e in structure.sorted_edges() {
+            costs.add_edge(e.u, e.v, rng.gen_f64_range(1.0, 50.0));
+        }
+        let flat_tree = MstAlgorithm::Prim.run(&costs).map_err(|e| e.to_string())?;
+        let epoch = plan_hierarchical(
+            &costs,
+            &Hierarchy::flat(n),
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            1,
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert!(same_edges(&epoch.tree, &flat_tree), "tree diverged from flat MST");
+        let flat_col = ColoringAlgorithm::Bfs.run(&flat_tree);
+        prop_assert_eq!(epoch.schedule.coloring.assignment(), flat_col.assignment());
+        Ok(())
+    });
+}

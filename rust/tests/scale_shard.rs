@@ -1,0 +1,110 @@
+//! Integration tests for the multi-subnet scale-out plane: sharded
+//! simulation correctness at moderate n (always run) and the ISSUE-4
+//! acceptance bar at n = 10 000 (`#[ignore]`d — simulation-heavy, run
+//! explicitly with `cargo test --release scale_10k -- --ignored`).
+
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::{GossipSession, ScaleScenario};
+use mosgu::graph::generators::GeneratorKind;
+use std::time::Instant;
+
+fn scale_cfg(nodes: usize, subnets: usize) -> ExperimentConfig {
+    ExperimentConfig { nodes, subnets, latency_jitter: 0.0, ..Default::default() }
+}
+
+#[test]
+fn sharded_exchange_matches_sequential_semantics_at_moderate_n() {
+    let cfg = scale_cfg(192, 8);
+    let sc = ScaleScenario::new(&cfg, 14.0).unwrap();
+    let expect_copies = 2 * (192 - 1);
+    let seq = sc.run_exchange(14.0, 1, 0.0, false, false);
+    let shd = sc.run_exchange(14.0, 1, 0.0, true, true);
+    for (name, m) in [("sequential", &seq), ("sharded", &shd)] {
+        assert_eq!(m.transfer_count(), expect_copies, "{name} copies");
+        assert!(
+            (m.total_payload_mb() - expect_copies as f64 * 14.0).abs() < 1e-6,
+            "{name} bytes"
+        );
+        assert_eq!(m.slots, 2, "{name} slots");
+        assert!(m.total_time_s > 0.0, "{name} clock");
+        // clocks are monotone through the barrier
+        for pair in m.slot_timings.windows(2) {
+            assert!(pair[0].end_s <= pair[1].start_s + 1e-12, "{name} slots overlap");
+        }
+    }
+}
+
+#[test]
+fn sharded_exchange_deterministic_and_parallel_invariant() {
+    let cfg = scale_cfg(96, 8);
+    let sc = ScaleScenario::new(&cfg, 14.0).unwrap();
+    let a = sc.run_exchange(14.0, 7, 0.0, true, true);
+    let b = sc.run_exchange(14.0, 7, 0.0, true, true);
+    let c = sc.run_exchange(14.0, 7, 0.0, true, false);
+    assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+    assert_eq!(a.transfers, b.transfers);
+    // parallel vs sequential drains of the same sharded sim: identical
+    assert_eq!(a.total_time_s.to_bits(), c.total_time_s.to_bits());
+    assert_eq!(a.transfers, c.transfers);
+}
+
+#[test]
+fn sharded_exchange_completes_under_failures() {
+    let cfg = scale_cfg(64, 8);
+    let sc = ScaleScenario::new(&cfg, 5.0).unwrap();
+    let clean = sc.run_exchange(5.0, 2, 0.0, true, true);
+    let lossy = sc.run_exchange(5.0, 2, 0.2, true, true);
+    assert!(lossy.slots >= clean.slots, "failures must not shorten the exchange");
+    assert!(lossy.transfer_count() > clean.transfer_count(), "disrupted copies spend bytes");
+}
+
+#[test]
+fn hierarchy_session_sharded_full_round_conserves_bytes() {
+    let cfg = ExperimentConfig {
+        topology_gen: GeneratorKind::Hierarchy,
+        ..scale_cfg(24, 4)
+    };
+    let session = GossipSession::new(&cfg).unwrap();
+    let m = session.run_sharded_round(5.0, 1, 0.0, true);
+    // full dissemination: every model crosses every tree edge once
+    assert_eq!(m.transfer_count(), 24 * 23);
+    assert!((m.total_payload_mb() - (24 * 23) as f64 * 5.0).abs() < 1e-6);
+    // deterministic replay
+    let again = session.run_sharded_round(5.0, 1, 0.0, false);
+    assert_eq!(m.total_time_s.to_bits(), again.total_time_s.to_bits());
+    assert_eq!(m.transfers, again.transfers);
+}
+
+/// ISSUE-4 acceptance: a 32-subnet hierarchy at n = 10 000 completes a
+/// full gossip-round exchange with byte-conserving metrics, and the
+/// sharded simulator beats the sequential one >= 4x wall-clock on the
+/// same topology and plan. Run with:
+/// `cargo test --release --test scale_shard -- --ignored`
+#[test]
+#[ignore = "simulation-heavy acceptance run; needs --release"]
+fn scale_10k_sharded_is_4x_faster_than_sequential() {
+    let cfg = scale_cfg(10_000, 32);
+    let sc = ScaleScenario::new(&cfg, 14.0).expect("10k scenario plans");
+    let expect_copies = 2 * (10_000 - 1);
+
+    let t0 = Instant::now();
+    let seq = sc.run_exchange(14.0, 1, 0.0, false, false);
+    let wall_seq = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let shd = sc.run_exchange(14.0, 1, 0.0, true, true);
+    let wall_shard = t1.elapsed().as_secs_f64();
+
+    for (name, m) in [("sequential", &seq), ("sharded", &shd)] {
+        assert_eq!(m.transfer_count(), expect_copies, "{name} copies");
+        assert!(
+            (m.total_payload_mb() - expect_copies as f64 * 14.0).abs()
+                < 1e-6 * expect_copies as f64,
+            "{name} bytes not conserved"
+        );
+    }
+    let speedup = wall_seq / wall_shard.max(1e-9);
+    assert!(
+        speedup >= 4.0,
+        "sharded {wall_shard:.3}s vs sequential {wall_seq:.3}s = {speedup:.2}x (< 4x)"
+    );
+}
