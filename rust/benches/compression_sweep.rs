@@ -1,0 +1,146 @@
+//! Compressed-payload gossip sweep: wire MB, compression ratio, and
+//! exchange/dissemination time per codec × Table II model size, on the
+//! balanced-tree and chain underlays where payload size dominates the
+//! round. Emits one `JSON {...}` line per cell for the bench trajectory;
+//! CI uploads them as the `compression-sweep` artifact.
+//!
+//! Codecs: `none` (full-width fp32 baseline), uniform k-bit quantization
+//! (`quant8` / `quant4`), top-k sparsification (`topk0.10`) — see
+//! `dfl::compress`. The sweep's gate is the PR's acceptance bar: quant-8
+//! must move ≥ 3.5× fewer wire bytes per round than `none` with a
+//! strictly shorter exchange phase on balanced-tree at n = 10.
+//!
+//! ```bash
+//! cargo bench --bench compression_sweep             # full grid
+//! cargo bench --bench compression_sweep -- --smoke  # CI smoke subset
+//! ```
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::compress::CompressionConfig;
+use mosgu::dfl::models::{by_code, MODELS};
+use mosgu::graph::topology::TopologyKind;
+
+fn codec_cfg(base: &ExperimentConfig, codec: &CompressionConfig) -> ExperimentConfig {
+    ExperimentConfig {
+        compress: codec.kind,
+        quant_bits: codec.quant_bits,
+        topk_frac: codec.topk_frac,
+        ..base.clone()
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let models: Vec<_> = if smoke {
+        ["v3s", "b3"].iter().map(|c| by_code(c).unwrap()).collect()
+    } else {
+        MODELS.iter().collect()
+    };
+    let codecs: Vec<CompressionConfig> = if smoke {
+        vec![CompressionConfig::quant(8), CompressionConfig::topk(0.1)]
+    } else {
+        vec![
+            CompressionConfig::quant(8),
+            CompressionConfig::quant(4),
+            CompressionConfig::topk(0.1),
+            CompressionConfig::topk(0.25),
+        ]
+    };
+    let topologies: &[TopologyKind] = if smoke {
+        &[TopologyKind::BalancedTree]
+    } else {
+        &[TopologyKind::BalancedTree, TopologyKind::Chain, TopologyKind::Complete]
+    };
+
+    section(&format!(
+        "compression sweep: codec wire savings vs full-width gossip ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:<16} {:>6} {:>9} {:>10} {:>9} {:>7} {:>11} {:>11}",
+        "topology", "model", "codec", "wire_mb", "total_mb", "ratio", "exchange_s", "total_s"
+    );
+    for &kind in topologies {
+        let base = ExperimentConfig {
+            topology: kind,
+            nodes: 10,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let plain = GossipSession::new(&base).expect("session");
+        let none = CompressionConfig::none();
+        for spec in &models {
+            let baseline = plain.run_mosgu_round(spec.capacity_mb, 1, 0.0);
+            for codec in std::iter::once(&none).chain(codecs.iter()) {
+                let m = if codec.is_none() {
+                    baseline.clone()
+                } else {
+                    GossipSession::new(&codec_cfg(&base, codec))
+                        .expect("session")
+                        .run_mosgu_round(spec.capacity_mb, 1, 0.0)
+                };
+                println!(
+                    "{:<16} {:>6} {:>9} {:>10.3} {:>9.1} {:>6.2}x {:>11.3} {:>11.3}",
+                    kind.name(),
+                    spec.code,
+                    codec.label(),
+                    m.wire_model_mb,
+                    m.total_payload_mb(),
+                    m.compression_ratio(),
+                    m.exchange_time_s,
+                    m.total_time_s
+                );
+                println!(
+                    "JSON {{\"bench\":\"compression_sweep\",\"topology\":\"{}\",\"model\":\"{}\",\
+                     \"model_mb\":{},\"codec\":\"{}\",\"wire_mb_per_copy\":{:.6},\
+                     \"total_wire_mb\":{:.4},\"ratio\":{:.4},\"exchange_s\":{:.6},\
+                     \"total_s\":{:.6},\"bw_mbps\":{:.4}}}",
+                    kind.name(),
+                    spec.code,
+                    spec.capacity_mb,
+                    codec.label(),
+                    m.wire_model_mb,
+                    m.total_payload_mb(),
+                    m.compression_ratio(),
+                    m.exchange_time_s,
+                    m.total_time_s,
+                    m.bandwidth_mbps()
+                );
+            }
+        }
+    }
+
+    section("acceptance check: quant8 vs none on balanced-tree, n=10");
+    let base = ExperimentConfig {
+        topology: TopologyKind::BalancedTree,
+        nodes: 10,
+        latency_jitter: 0.0,
+        ..Default::default()
+    };
+    let plain = GossipSession::new(&base).expect("session");
+    let quant =
+        GossipSession::new(&codec_cfg(&base, &CompressionConfig::quant(8))).expect("session");
+    let mut ok = true;
+    for code in ["v3s", "b3"] {
+        let mb = by_code(code).unwrap().capacity_mb;
+        let a = plain.run_mosgu_round(mb, 1, 0.0);
+        let b = quant.run_mosgu_round(mb, 1, 0.0);
+        let ratio = a.total_payload_mb() / b.total_payload_mb();
+        let pass = ratio >= 3.5 && b.exchange_time_s < a.exchange_time_s;
+        ok &= pass;
+        println!(
+            "  {code}: wire {:>9.1} -> {:>8.1} MB ({ratio:.2}x), exchange {:>7.3} -> {:>7.3} s -> {}",
+            a.total_payload_mb(),
+            b.total_payload_mb(),
+            a.exchange_time_s,
+            b.exchange_time_s,
+            if pass { "pass" } else { "FAIL" }
+        );
+    }
+    println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+    if !ok {
+        std::process::exit(1);
+    }
+}

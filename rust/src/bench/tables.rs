@@ -72,6 +72,32 @@ pub fn run_grid(
     Ok(cells)
 }
 
+/// Render the compression companion table: per (topology, model) cell,
+/// the proposed side's logical MB per copy, wire MB per copy, and
+/// logical/wire ratio (broadcast stays uncompressed full-width fp32, so
+/// its column is the logical size). All three are 1:1 with the payloads
+/// the flows actually moved — `RoundMetrics` records wire-sized
+/// transfers and carries the logical size alongside.
+pub fn render_compression(cells: &[Cell]) -> String {
+    let mut out = String::new();
+    out.push_str("== Compression: logical vs wire MB per model copy ==\n");
+    out.push_str(&format!(
+        "{:<17}{:>8}{:>12}{:>10}{:>8}\n",
+        "topology", "model", "logical_mb", "wire_mb", "ratio"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<17}{:>8}{:>12.2}{:>10.2}{:>7.2}x\n",
+            c.topology,
+            c.model,
+            c.proposed.logical_mb.mean(),
+            c.proposed.wire_mb.mean(),
+            c.proposed.compression_ratio()
+        ));
+    }
+    out
+}
+
 /// Render one paper table from a cell grid.
 pub fn render(table: PaperTable, cells: &[Cell]) -> String {
     let topologies: Vec<String> = {
@@ -164,5 +190,33 @@ mod tests {
         assert!(h.bandwidth_improvement > 1.0);
         assert!(h.transfer_improvement > 1.0);
         assert!(h.round_improvement > 1.0);
+    }
+
+    #[test]
+    fn compressed_grid_reports_wire_savings() {
+        use crate::dfl::compress::CompressionKind;
+        let cfg = ExperimentConfig {
+            compress: CompressionKind::Quant,
+            quant_bits: 8,
+            ..tiny_cfg()
+        };
+        let cells = run_grid(&cfg, &[TopologyKind::Complete], &[&MODELS[6]], |_| {}).unwrap();
+        let c = &cells[0];
+        // proposed side compresses; the broadcast baseline stays full-width
+        assert!(c.proposed.compression_ratio() > 3.5, "{}", c.proposed.compression_ratio());
+        assert!((c.broadcast.compression_ratio() - 1.0).abs() < 1e-12);
+        assert!((c.proposed.logical_mb.mean() - 48.0).abs() < 1e-9);
+        let s = render_compression(&cells);
+        assert!(s.contains("wire_mb"), "{s}");
+        assert!(s.contains("Complete"));
+        // compressed payloads must beat the uncompressed proposed round
+        let plain =
+            run_grid(&tiny_cfg(), &[TopologyKind::Complete], &[&MODELS[6]], |_| {}).unwrap();
+        assert!(
+            c.proposed.exchange.mean() < plain[0].proposed.exchange.mean(),
+            "compressed exchange {} vs full-width {}",
+            c.proposed.exchange.mean(),
+            plain[0].proposed.exchange.mean()
+        );
     }
 }

@@ -7,6 +7,7 @@ pub mod parser;
 pub use parser::{ParseError, TomlValue, parse_toml};
 
 use crate::coloring::ColoringAlgorithm;
+use crate::dfl::compress::{CompressionConfig, CompressionKind};
 use crate::dfl::transfer::TransferPlan;
 use crate::graph::generators::GeneratorKind;
 use crate::graph::topology::{TopologyKind, TopologyParams};
@@ -63,6 +64,20 @@ pub struct ExperimentConfig {
     /// count is derived per model as `ceil(model_mb / segment_mb)`.
     /// Mutually exclusive with `segments > 1`. CLI: `--segment-mb`.
     pub segment_mb: f64,
+    /// Payload compression codec for gossiped checkpoints (`none` = the
+    /// legacy full-width fp32 wire format, bit-identical to the
+    /// uncompressed engine; `quant` = uniform k-bit quantization; `topk`
+    /// = top-k sparsification). Compressed payloads shrink every flow the
+    /// drivers launch and the §III-C slot budget with them; the DFL loop
+    /// applies the codec with per-node error feedback at snapshot time.
+    /// CLI: `--compress`.
+    pub compress: CompressionKind,
+    /// Quantization width in bits (1..=16) for `compress = quant`.
+    /// CLI: `--quant-bits`.
+    pub quant_bits: u32,
+    /// Fraction of entries kept in (0, 1] for `compress = topk`.
+    /// CLI: `--topk-frac`.
+    pub topk_frac: f64,
     /// Link-quality drift amplitude in [0, 1) (0 = static links, the
     /// legacy behavior). Every `drift_interval_s` of simulated time each
     /// channel draws a factor `q ∈ [1 − drift, 1 + drift]` and runs at
@@ -105,6 +120,9 @@ impl Default for ExperimentConfig {
             protocol_overhead: 0.04,
             segments: 1,
             segment_mb: 0.0,
+            compress: CompressionKind::None,
+            quant_bits: 8,
+            topk_frac: 0.1,
             drift: 0.0,
             drift_interval_s: 20.0,
             probe_every: 0,
@@ -196,6 +214,13 @@ impl ExperimentConfig {
             }
             "segments" => self.segments = value.as_int().ok_or_else(|| bad("integer"))? as usize,
             "segment_mb" => self.segment_mb = value.as_float().ok_or_else(|| bad("float"))?,
+            "compress" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.compress = CompressionKind::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "quant_bits" => self.quant_bits = value.as_int().ok_or_else(|| bad("integer"))? as u32,
+            "topk_frac" => self.topk_frac = value.as_float().ok_or_else(|| bad("float"))?,
             "drift" => self.drift = value.as_float().ok_or_else(|| bad("float"))?,
             "drift_interval_s" => {
                 self.drift_interval_s = value.as_float().ok_or_else(|| bad("float"))?
@@ -253,6 +278,13 @@ impl ExperimentConfig {
         if self.segments > 1 && self.segment_mb > 0.0 {
             return reject("segment_mb", "set either segments or segment_mb, not both");
         }
+        // compression knobs stay valid even while dormant (compress=none),
+        // so flipping the codec on never trips a latent bad value; the
+        // ranges live in CompressionConfig::validate (single source of
+        // truth with the codec's own asserts)
+        if let Err(why) = self.compression().validate() {
+            return Err(ConfigError::Value("compress".into(), why));
+        }
         if !(0.0..1.0).contains(&self.drift) {
             return reject("drift", "must be in [0,1)");
         }
@@ -274,16 +306,28 @@ impl ExperimentConfig {
         Ok(())
     }
 
+    /// The configured payload codec (knobs included).
+    pub fn compression(&self) -> CompressionConfig {
+        CompressionConfig {
+            kind: self.compress,
+            quant_bits: self.quant_bits,
+            topk_frac: self.topk_frac,
+        }
+    }
+
     /// The transfer plan this config prescribes for a `model_mb`-sized
-    /// checkpoint: `segment_mb` (per-model segment count) wins when set,
-    /// then the fixed `segments` count; the default is the whole-model
-    /// legacy plan.
+    /// checkpoint: `segment_mb` (per-model segment count, derived from
+    /// the logical size) wins when set, then the fixed `segments` count;
+    /// the default is the whole-model legacy plan. The configured
+    /// compression codec then sets the plan's wire size (`compress =
+    /// none` keeps wire == logical, bit for bit).
     pub fn transfer_plan(&self, model_mb: f64) -> TransferPlan {
-        if self.segment_mb > 0.0 {
+        let plan = if self.segment_mb > 0.0 {
             TransferPlan::by_segment_mb(model_mb, self.segment_mb)
         } else {
             TransferPlan::segmented(model_mb, self.segments)
-        }
+        };
+        plan.with_compression(&self.compression())
     }
 }
 
@@ -448,5 +492,52 @@ backbone_latency_ms = 8.5
         let plan = ExperimentConfig::default().transfer_plan(21.6);
         assert_eq!(plan.segments(), 1);
         assert_eq!(plan.model_mb().to_bits(), 21.6f64.to_bits());
+        // the default codec is none: wire size is the logical size, bit
+        // for bit — the compression plane's compatibility anchor
+        assert_eq!(plan.wire_mb().to_bits(), 21.6f64.to_bits());
+        assert!(!plan.is_compressed());
+    }
+
+    #[test]
+    fn compression_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str("compress = \"quant\"\nquant_bits = 4").unwrap();
+        assert_eq!(cfg.compress, CompressionKind::Quant);
+        assert_eq!(cfg.quant_bits, 4);
+        let plan = cfg.transfer_plan(48.0);
+        assert!(plan.is_compressed());
+        assert!(plan.compression_ratio() > 7.0, "4-bit ≈ 8x, got {}", plan.compression_ratio());
+
+        let cfg = ExperimentConfig::from_toml_str("compress = \"topk\"\ntopk_frac = 0.25").unwrap();
+        assert_eq!(cfg.compress, CompressionKind::TopK);
+        assert!((cfg.transfer_plan(48.0).compression_ratio() - 2.0).abs() < 0.05);
+
+        // defaults keep the legacy wire format
+        let d = ExperimentConfig::default();
+        assert_eq!(d.compress, CompressionKind::None);
+        assert_eq!(d.quant_bits, 8);
+        assert_eq!(d.topk_frac, 0.1);
+        assert!(d.compression().is_none());
+
+        assert!(ExperimentConfig::from_toml_str("compress = \"gzip\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("quant_bits = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("quant_bits = 17").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("quant_bits = -3").is_err(),
+            "negative values must not wrap through the u32 cast"
+        );
+        assert!(ExperimentConfig::from_toml_str("topk_frac = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("topk_frac = 1.5").is_err());
+    }
+
+    #[test]
+    fn compression_composes_with_segments() {
+        let cfg =
+            ExperimentConfig::from_toml_str("compress = \"quant\"\nquant_bits = 8\nsegments = 4")
+                .unwrap();
+        let plan = cfg.transfer_plan(48.0);
+        assert_eq!(plan.segments(), 4);
+        // each wire unit is a quarter of the *compressed* payload
+        assert!((plan.segment_mb() * 4.0 - plan.wire_mb()).abs() < 1e-12);
+        assert!(plan.segment_mb() < 48.0 / 4.0 / 3.5);
     }
 }

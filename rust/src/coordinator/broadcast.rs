@@ -131,6 +131,10 @@ pub fn run_broadcast_round(
         slot_timings: Vec::new(),
         segments: 1,
         relay_copies: 0,
+        // the baseline stays uncompressed full-width fp32 (the paper's
+        // conventional flooding broadcast): wire == logical
+        logical_model_mb: model_mb,
+        wire_model_mb: model_mb,
     }
 }
 

@@ -252,6 +252,10 @@ pub struct PipelineMetrics {
     /// Copies launched out-of-turn by cut-through relays (0 for
     /// whole-model plans).
     pub relay_copies: usize,
+    /// Logical (uncompressed) MB per model copy under the run's plan.
+    pub logical_model_mb: f64,
+    /// Wire MB per model copy (== logical without compression).
+    pub wire_model_mb: f64,
     /// Mid-session re-planning decisions applied by
     /// [`RoundEngine::run_pipelined_adaptive`] (empty for plain
     /// pipelined runs).
@@ -655,7 +659,8 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
 
             let (sends, end_s, launched) = if !segmented {
                 // whole-model path: the pre-segmentation engine, verbatim
-                let meta = self.launch_slot(&planned, plan.model_mb());
+                // (wire_mb == model_mb bit for bit without compression)
+                let meta = self.launch_slot(&planned, plan.wire_mb());
                 self.drain_slot(meta.len());
                 let end_s = self.driver.now();
 
@@ -728,6 +733,8 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             slot_timings,
             segments: plan.segments(),
             relay_copies: relay_copies_total,
+            logical_model_mb: plan.model_mb(),
+            wire_model_mb: plan.wire_mb(),
         }
     }
 
@@ -846,7 +853,8 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             let mut completed_nodes: Vec<(usize, NodeId)> = Vec::new(); // (active idx, node)
             let (end_s, launched) = if !segmented {
                 // whole-model path: the pre-segmentation pipeline, verbatim
-                let meta = self.launch_slot(&planned, plan.model_mb());
+                // (wire_mb == model_mb bit for bit without compression)
+                let meta = self.launch_slot(&planned, plan.wire_mb());
                 self.drain_slot(meta.len());
                 let end_s = self.driver.now();
 
@@ -1033,6 +1041,8 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             received,
             segments: plan.segments(),
             relay_copies: relay_copies_total,
+            logical_model_mb: plan.model_mb(),
+            wire_model_mb: plan.wire_mb(),
             replans,
         }
     }

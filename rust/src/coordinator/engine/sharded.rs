@@ -39,10 +39,14 @@ use crate::util::rng::Pcg64;
 /// Knobs of one barrier-driven sharded round.
 #[derive(Debug, Clone)]
 pub struct ShardedRoundOptions {
-    /// Whole-model transfer size (MB) — the sharded plane moves
-    /// unsegmented copies; segment-granular plans stay on the
+    /// Whole-model **logical** checkpoint size (MB) — the sharded plane
+    /// moves unsegmented copies; segment-granular plans stay on the
     /// event-driven engine.
     pub model_mb: f64,
+    /// Bytes each copy actually moves on the wire (MB); equals
+    /// `model_mb` (same float bits) unless the session's compression
+    /// codec shrank the payload.
+    pub wire_mb: f64,
     /// Per-delivery §III-D disruption probability (bytes spent, nothing
     /// delivered, entry retried).
     pub failure_prob: f64,
@@ -56,10 +60,12 @@ pub struct ShardedRoundOptions {
 }
 
 impl ShardedRoundOptions {
-    /// Failure-free options with the session's conventional slot budget.
+    /// Failure-free uncompressed options with the session's conventional
+    /// slot budget.
     pub fn reliable(model_mb: f64, nodes: usize, parallel: bool) -> Self {
         ShardedRoundOptions {
             model_mb,
+            wire_mb: model_mb,
             failure_prob: 0.0,
             max_slots: 8 * nodes + 64,
             failure_rng: Pcg64::new(0),
@@ -95,7 +101,7 @@ pub fn run_sharded_round(
         let mut meta: Vec<(usize, NodeId)> = Vec::new();
         for (i, tx) in planned.iter().enumerate() {
             for &to in &tx.recipients {
-                sim.start_flow(tx.from, to, opts.model_mb, flow_tag(tx.entry.key.owner, tx.from));
+                sim.start_flow(tx.from, to, opts.wire_mb, flow_tag(tx.entry.key.owner, tx.from));
                 meta.push((i, to));
             }
         }
@@ -126,7 +132,7 @@ pub fn run_sharded_round(
         "sharded round did not complete within {} slots",
         opts.max_slots
     );
-    finish(sim, slots_used, slot_timings)
+    finish(sim, slots_used, slot_timings, &opts)
 }
 
 /// Run the exchange phase of one round: each node's own model to every
@@ -159,7 +165,7 @@ pub fn run_sharded_exchange(
                 continue;
             }
             for &v in &pending[u] {
-                sim.start_flow(u, v, opts.model_mb, flow_tag(u, u));
+                sim.start_flow(u, v, opts.wire_mb, flow_tag(u, u));
                 launched.push((u, v));
             }
         }
@@ -178,10 +184,15 @@ pub fn run_sharded_exchange(
         slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: launched.len() });
     }
     assert!(left == 0, "exchange did not complete within {} slots", opts.max_slots);
-    finish(sim, slots_used, slot_timings)
+    finish(sim, slots_used, slot_timings, &opts)
 }
 
-fn finish(sim: &mut ShardedNetSim, slots: usize, slot_timings: Vec<SlotTiming>) -> RoundMetrics {
+fn finish(
+    sim: &mut ShardedNetSim,
+    slots: usize,
+    slot_timings: Vec<SlotTiming>,
+    opts: &ShardedRoundOptions,
+) -> RoundMetrics {
     let total_time_s = sim.now();
     let transfers = sim.take_completed();
     let exchange_time_s = exchange_time(&transfers);
@@ -193,6 +204,8 @@ fn finish(sim: &mut ShardedNetSim, slots: usize, slot_timings: Vec<SlotTiming>) 
         slot_timings,
         segments: 1,
         relay_copies: 0,
+        logical_model_mb: opts.model_mb,
+        wire_model_mb: opts.wire_mb,
     }
 }
 
@@ -242,6 +255,7 @@ mod tests {
         let mut sim = ShardedNetSim::sharded(&tb, 2);
         let opts = ShardedRoundOptions {
             model_mb: 5.0,
+            wire_mb: 5.0,
             failure_prob: 0.5,
             max_slots: 256,
             failure_rng: Pcg64::new(7),
@@ -271,6 +285,29 @@ mod tests {
         assert_eq!(seq.total_time_s.to_bits(), par.total_time_s.to_bits());
         assert_eq!(seq.transfers, par.transfers);
         assert_eq!(seq.slots, par.slots);
+    }
+
+    #[test]
+    fn compressed_wire_size_shrinks_sharded_exchange() {
+        let cfg = quiet_cfg(12, 3);
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_schedule(12);
+        let run = |wire_mb: f64| {
+            let mut sim = ShardedNetSim::sharded(&tb, 1);
+            let opts = ShardedRoundOptions {
+                wire_mb,
+                ..ShardedRoundOptions::reliable(48.0, 12, false)
+            };
+            run_sharded_exchange(&mut sim, &tree, &schedule, opts)
+        };
+        let full = run(48.0);
+        let compressed = run(12.0);
+        assert_eq!(compressed.transfer_count(), full.transfer_count());
+        // wire bytes shrink 4x; logical accounting stays at 48 MB/copy
+        assert!((compressed.total_payload_mb() * 4.0 - full.total_payload_mb()).abs() < 1e-6);
+        assert!((compressed.compression_ratio() - 4.0).abs() < 1e-12);
+        assert!((compressed.total_logical_mb() - full.total_logical_mb()).abs() < 1e-9);
+        assert!(compressed.exchange_time_s < full.exchange_time_s);
     }
 
     #[test]

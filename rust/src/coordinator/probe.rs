@@ -92,25 +92,46 @@ impl Prober {
 
     /// One ping sweep: re-measure every overlay edge through the driver
     /// and fold the reading into the smoothed estimate. Edges the
-    /// substrate cannot measure keep their last estimate. Returns how
-    /// many edges were refreshed.
+    /// substrate cannot measure — including ones reporting a NaN/∞ or
+    /// negative ping (a dead or mid-shift link) — keep their last
+    /// estimate, so a poisoned reading can never reach the estimate
+    /// graph (whose construction rejects non-finite weights). Returns
+    /// how many edges were refreshed.
     pub fn sweep<D: Driver + ?Sized>(&mut self, driver: &D) -> usize {
         let mut refreshed = 0;
-        for (i, &(u, v)) in self.edges.iter().enumerate() {
+        for i in 0..self.edges.len() {
+            let (u, v) = self.edges[i];
             if let Some(ms) = driver.probe_ping_ms(u, v, self.probe_bytes) {
-                self.est[i] += self.alpha * (ms - self.est[i]);
-                refreshed += 1;
+                if self.fold(i, ms) {
+                    refreshed += 1;
+                }
             }
         }
         refreshed
     }
 
+    /// EWMA-fold one reading into estimate `i`; rejects readings that are
+    /// non-finite or negative, or whose folded estimate would not be
+    /// finite. Returns whether the estimate moved.
+    fn fold(&mut self, i: usize, ms: f64) -> bool {
+        if !(ms.is_finite() && ms >= 0.0) {
+            return false;
+        }
+        let cand = self.est[i] + self.alpha * (ms - self.est[i]);
+        if !cand.is_finite() {
+            return false;
+        }
+        self.est[i] = cand;
+        true
+    }
+
     /// Fold one out-of-band measurement into the estimate (live
-    /// telemetry, tests). Unknown edges are ignored.
+    /// telemetry, tests). Unknown edges and unusable readings (NaN/∞,
+    /// negative) are ignored.
     pub fn observe(&mut self, u: NodeId, v: NodeId, ms: f64) {
         let key = if u <= v { (u, v) } else { (v, u) };
         if let Some(i) = self.edges.iter().position(|&e| e == key) {
-            self.est[i] += self.alpha * (ms - self.est[i]);
+            self.fold(i, ms);
         }
     }
 
@@ -469,6 +490,80 @@ mod tests {
         let d = LogicalDriver::new();
         assert_eq!(p.sweep(&d), 0);
         assert_eq!(p.estimates().weight(0, 1), Some(10.0));
+    }
+
+    /// A substrate whose probes return a fixed (possibly non-finite)
+    /// reading — the regression fixture for poisoned link measurements.
+    struct PoisonedDriver(f64);
+
+    impl crate::coordinator::engine::driver::Driver for PoisonedDriver {
+        fn launch(
+            &mut self,
+            _from: NodeId,
+            _to: NodeId,
+            _seg: crate::coordinator::queue::SegmentKey,
+            _payload_mb: f64,
+        ) -> crate::coordinator::engine::driver::CopyToken {
+            unreachable!("probe-only stub")
+        }
+        fn wait_any(&mut self) -> Vec<crate::coordinator::engine::driver::Completion> {
+            Vec::new()
+        }
+        fn now(&self) -> f64 {
+            0.0
+        }
+        fn take_transfers(&mut self) -> Vec<crate::netsim::FlowRecord> {
+            Vec::new()
+        }
+        fn probe_ping_ms(&self, _from: NodeId, _to: NodeId, _bytes: u64) -> Option<f64> {
+            Some(self.0)
+        }
+    }
+
+    #[test]
+    fn prober_rejects_non_finite_and_negative_readings() {
+        // regression: a NaN/∞ probe used to poison the EWMA estimate, and
+        // Prober::estimates() would then panic constructing the cost
+        // graph mid-replan
+        let costs = triangle_costs();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -3.0] {
+            let mut p = Prober::new(&costs, 0.5, 56);
+            assert_eq!(p.sweep(&PoisonedDriver(bad)), 0, "reading {bad} must be rejected");
+            p.observe(0, 1, bad);
+            let est = p.estimates(); // must not panic
+            assert_eq!(est.weight(0, 1), Some(10.0), "estimate moved on reading {bad}");
+        }
+        // a sane reading through the same path still refreshes
+        let mut p = Prober::new(&costs, 0.5, 56);
+        assert_eq!(p.sweep(&PoisonedDriver(30.0)), 3);
+        assert!((p.estimates().weight(0, 1).unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replanner_survives_poisoned_probes_and_keeps_the_plan() {
+        // end to end: a fully poisoned sweep must leave the replanner on
+        // its stale (valid) plan instead of panicking
+        let sc = LinkDriftScenario::over_tree(
+            &topology::chain(4),
+            10.0,
+            25.0,
+            (1, 2),
+            0.0,
+            4.0,
+            20.0,
+        );
+        let mut r = Replanner::new(
+            &sc.costs,
+            &sc.tree,
+            ReplanPolicy { probe_every: 1, replan_threshold: 0.0, alpha: 1.0 },
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            0,
+        );
+        assert!(r.on_round_complete(&PoisonedDriver(f64::NAN), 0).is_none());
+        assert_eq!(r.replans(), 0);
+        assert!(r.tree().is_tree());
     }
 
     #[test]

@@ -294,6 +294,9 @@ impl GossipSession {
         let n = state.node_count();
         let opts = ShardedRoundOptions {
             model_mb,
+            // the config's codec shrinks the wire payload here too
+            // (compress = none keeps wire == logical bit for bit)
+            wire_mb: self.transfer_plan(model_mb).wire_mb(),
             failure_prob,
             max_slots: 8 * n + 64,
             failure_rng: Pcg64::new(seed ^ 0xfa11),
@@ -418,6 +421,7 @@ impl ScaleScenario {
         };
         let opts = ShardedRoundOptions {
             model_mb,
+            wire_mb: self.cfg.transfer_plan(model_mb).wire_mb(),
             failure_prob,
             max_slots: 64 + 8 * self.epoch.schedule.coloring.num_colors(),
             failure_rng: Pcg64::new(seed ^ 0xfa11),

@@ -1,0 +1,564 @@
+//! Payload compression codecs for the gossip plane (the communication-
+//! compression lever the paper's model-size ↔ latency correlation begs
+//! for).
+//!
+//! The paper ships every checkpoint at full fp32 width; compressed
+//! decentralized gossip is standard practice in the related literature
+//! (communication-compressed decentralized FL per arXiv:2306.02570,
+//! sparse segment exchange per arXiv:1908.07782). This module provides
+//! the two workhorse codecs plus the error-feedback memory that keeps
+//! compressed FedAvg converging:
+//!
+//! * **Uniform k-bit quantization** ([`quant_encode`] / [`quant_decode`]):
+//!   each [`QUANT_CHUNK`]-element chunk is mapped to `2^bits` levels
+//!   between its min and max (per-chunk `(min, step)` header). Wire cost
+//!   ≈ `bits/32` of fp32, so `--quant-bits 8` is a ~4× reduction.
+//! * **Top-k sparsification** ([`topk_encode`] / [`topk_decode`]): keep
+//!   the `ceil(frac · n)` largest-magnitude entries as (index, value)
+//!   pairs, zeros elsewhere. Wire cost ≈ `2 · frac` of fp32.
+//! * **Error feedback** ([`ErrorFeedback`]): each node compresses
+//!   `params + residual` and carries `residual = target − decoded` into
+//!   the next round, so quantization/sparsification error accumulates
+//!   nowhere (EF-SGD style memory).
+//!
+//! The codecs operate on real parameter vectors (the DFL loop in
+//! [`crate::dfl::round`] encodes at snapshot time and folds decoded
+//! payloads); the *wire size* they imply is threaded through
+//! [`TransferPlan`](crate::dfl::transfer::TransferPlan) →
+//! [`Driver`](crate::coordinator::engine::driver::Driver) flow launches →
+//! `netsim` payloads, so plans, slot budgets, and the Table III/IV
+//! metrics all react to the smaller payloads. `compress = none` is the
+//! compatibility anchor: the wire size is the logical size, bit for bit
+//! (pinned in `tests/engine_equivalence.rs`).
+
+/// Elements per quantization chunk (one `(min, step)` f32 pair of header
+/// per chunk on the wire).
+pub const QUANT_CHUNK: usize = 1024;
+
+/// Bytes per megabyte (the wire-size arithmetic's single constant).
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Which codec compresses gossip payloads. CLI: `--compress`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionKind {
+    /// Full-width fp32 checkpoints — the legacy wire format.
+    None,
+    /// Uniform k-bit quantization (`--quant-bits`).
+    Quant,
+    /// Top-k magnitude sparsification (`--topk-frac`).
+    TopK,
+}
+
+impl CompressionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionKind::None => "none",
+            CompressionKind::Quant => "quant",
+            CompressionKind::TopK => "topk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(CompressionKind::None),
+            "quant" => Some(CompressionKind::Quant),
+            "topk" | "top-k" => Some(CompressionKind::TopK),
+            _ => None,
+        }
+    }
+}
+
+/// Full codec selection: kind plus its knobs. Both knobs always carry
+/// values (paper-sensible defaults); only the active kind's knob matters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionConfig {
+    pub kind: CompressionKind,
+    /// Quantization width in bits, `1..=16`. CLI: `--quant-bits`.
+    pub quant_bits: u32,
+    /// Fraction of entries top-k keeps, in `(0, 1]`. CLI: `--topk-frac`.
+    pub topk_frac: f64,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig { kind: CompressionKind::None, quant_bits: 8, topk_frac: 0.1 }
+    }
+}
+
+impl CompressionConfig {
+    /// The legacy full-width wire format.
+    pub fn none() -> Self {
+        CompressionConfig::default()
+    }
+
+    /// Uniform `bits`-bit quantization.
+    pub fn quant(bits: u32) -> Self {
+        CompressionConfig { kind: CompressionKind::Quant, quant_bits: bits, ..Self::default() }
+    }
+
+    /// Top-k sparsification keeping a `frac` fraction of entries.
+    pub fn topk(frac: f64) -> Self {
+        CompressionConfig { kind: CompressionKind::TopK, topk_frac: frac, ..Self::default() }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.kind == CompressionKind::None
+    }
+
+    /// Human-readable codec label for logs/benches (`none`, `quant8`,
+    /// `topk0.10`).
+    pub fn label(&self) -> String {
+        match self.kind {
+            CompressionKind::None => "none".to_string(),
+            CompressionKind::Quant => format!("quant{}", self.quant_bits),
+            CompressionKind::TopK => format!("topk{:.2}", self.topk_frac),
+        }
+    }
+
+    /// Knob sanity — the single source of truth for the codec ranges
+    /// (`ExperimentConfig::validate` delegates here).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=16).contains(&self.quant_bits) {
+            return Err(format!("quant_bits must be in 1..=16, got {}", self.quant_bits));
+        }
+        if !(self.topk_frac.is_finite() && self.topk_frac > 0.0 && self.topk_frac <= 1.0) {
+            return Err(format!("topk_frac must be in (0, 1], got {}", self.topk_frac));
+        }
+        Ok(())
+    }
+
+    /// Wire MB a logically `model_mb`-sized fp32 checkpoint occupies
+    /// under this codec. `None` returns `model_mb` **verbatim** (same
+    /// float bits — the `compress = none` bit-identity anchor). The
+    /// arithmetic mirrors the codecs' actual wire layout: packed codes +
+    /// per-chunk `(min, step)` headers for quantization, 4-byte index +
+    /// 4-byte value per kept entry for top-k.
+    pub fn wire_mb(&self, model_mb: f64) -> f64 {
+        match self.kind {
+            CompressionKind::None => model_mb,
+            CompressionKind::Quant => {
+                let params = (model_mb * MB / 4.0).ceil();
+                let chunks = (params / QUANT_CHUNK as f64).ceil();
+                (params * self.quant_bits as f64 / 8.0 + chunks * 8.0) / MB
+            }
+            CompressionKind::TopK => {
+                let params = (model_mb * MB / 4.0).ceil();
+                let kept = (params * self.topk_frac).ceil().max(1.0);
+                kept * 8.0 / MB
+            }
+        }
+    }
+
+    /// Nominal compression ratio (logical / wire) for a `model_mb`-sized
+    /// checkpoint.
+    pub fn ratio(&self, model_mb: f64) -> f64 {
+        model_mb / self.wire_mb(model_mb)
+    }
+
+    /// One wire round-trip: what the receivers of a `params` snapshot
+    /// actually see under this codec (identity for `None`).
+    pub fn encode_decode(&self, params: &[f32]) -> Vec<f32> {
+        match self.kind {
+            CompressionKind::None => params.to_vec(),
+            CompressionKind::Quant => quant_decode(&quant_encode(params, self.quant_bits)),
+            CompressionKind::TopK => topk_decode(&topk_encode(params, self.topk_frac)),
+        }
+    }
+}
+
+/// A k-bit-quantized parameter vector: per-chunk `(min, step)` headers
+/// plus densely packed codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantEncoded {
+    pub bits: u32,
+    pub len: usize,
+    /// `(min, step)` per [`QUANT_CHUNK`]-element chunk.
+    pub chunks: Vec<(f32, f32)>,
+    /// Codes packed little-endian-first into 64-bit words.
+    pub words: Vec<u64>,
+}
+
+impl QuantEncoded {
+    /// Exact wire size in bytes (packed codes + chunk headers).
+    pub fn wire_bytes(&self) -> usize {
+        (self.len * self.bits as usize).div_ceil(8) + self.chunks.len() * 8
+    }
+}
+
+/// Uniformly quantize `params` to `bits` bits per element, chunk by
+/// chunk. Non-finite inputs in a chunk collapse that chunk's range to a
+/// zero step (decoded as the chunk min) rather than poisoning the codes.
+pub fn quant_encode(params: &[f32], bits: u32) -> QuantEncoded {
+    assert!((1..=16).contains(&bits), "quant bits must be in 1..=16, got {bits}");
+    let levels = (1u64 << bits) - 1;
+    let mut chunks = Vec::with_capacity(params.len().div_ceil(QUANT_CHUNK).max(1));
+    let mut words = vec![0u64; (params.len() * bits as usize).div_ceil(64)];
+    let mut bitpos = 0usize;
+    for chunk in params.chunks(QUANT_CHUNK) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in chunk {
+            if x.is_finite() {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if !(lo.is_finite() && hi.is_finite()) {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let step = if hi > lo { (hi - lo) / levels as f32 } else { 0.0 };
+        chunks.push((lo, step));
+        for &x in chunk {
+            let q: u64 = if step > 0.0 && x.is_finite() {
+                (((x - lo) / step).round() as i64).clamp(0, levels as i64) as u64
+            } else {
+                0
+            };
+            let wi = bitpos / 64;
+            let off = bitpos % 64;
+            words[wi] |= q << off;
+            if off + bits as usize > 64 {
+                words[wi + 1] |= q >> (64 - off);
+            }
+            bitpos += bits as usize;
+        }
+    }
+    QuantEncoded { bits, len: params.len(), chunks, words }
+}
+
+/// Decode a quantized vector back to f32 (`min + code · step` per
+/// element).
+pub fn quant_decode(enc: &QuantEncoded) -> Vec<f32> {
+    let bits = enc.bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let mut out = Vec::with_capacity(enc.len);
+    let mut bitpos = 0usize;
+    for i in 0..enc.len {
+        let (lo, step) = enc.chunks[i / QUANT_CHUNK];
+        let wi = bitpos / 64;
+        let off = bitpos % 64;
+        let mut q = enc.words[wi] >> off;
+        if off + bits > 64 {
+            q |= enc.words[wi + 1] << (64 - off);
+        }
+        q &= mask;
+        out.push(lo + q as f32 * step);
+        bitpos += bits;
+    }
+    out
+}
+
+/// A top-k-sparsified parameter vector: the kept entries as parallel
+/// (ascending index, value) arrays.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopKEncoded {
+    pub len: usize,
+    /// Kept positions, strictly ascending.
+    pub indices: Vec<u32>,
+    /// Values at those positions.
+    pub values: Vec<f32>,
+}
+
+impl TopKEncoded {
+    /// Exact wire size in bytes (4-byte index + 4-byte value per entry).
+    pub fn wire_bytes(&self) -> usize {
+        self.indices.len() * 8
+    }
+}
+
+/// Keep the `ceil(frac · len)` largest-magnitude entries (deterministic
+/// tie-break: lower index wins). Non-finite entries rank as **zero**
+/// magnitude and, if still selected, are transmitted as 0.0 — a NaN/∞
+/// parameter (or residual) must never ride the wire and poison every
+/// receiver's FedAvg fold (quantization sanitizes the same way).
+///
+/// Selection is O(n + k log k): partition the top `k` out with
+/// `select_nth_unstable_by`, then sort only the kept indices — a full
+/// O(n log n) sort of a multi-million-parameter checkpoint per node per
+/// round would dominate the DFL hot loop.
+pub fn topk_encode(params: &[f32], frac: f64) -> TopKEncoded {
+    assert!(
+        frac.is_finite() && frac > 0.0 && frac <= 1.0,
+        "topk fraction must be in (0, 1], got {frac}"
+    );
+    assert!(params.len() <= u32::MAX as usize, "top-k index field is 32-bit");
+    if params.is_empty() {
+        return TopKEncoded { len: 0, indices: Vec::new(), values: Vec::new() };
+    }
+    let mag = |x: f32| if x.is_finite() { x.abs() } else { 0.0 };
+    let k = ((params.len() as f64 * frac).ceil() as usize).clamp(1, params.len());
+    let mut keep: Vec<usize> = (0..params.len()).collect();
+    if k < keep.len() {
+        // strict total order (descending magnitude, then index), so the
+        // selected set is deterministic
+        keep.select_nth_unstable_by(k - 1, |&a, &b| {
+            mag(params[b]).total_cmp(&mag(params[a])).then_with(|| a.cmp(&b))
+        });
+        keep.truncate(k);
+    }
+    keep.sort_unstable();
+    TopKEncoded {
+        len: params.len(),
+        indices: keep.iter().map(|&i| i as u32).collect(),
+        values: keep
+            .iter()
+            .map(|&i| if params[i].is_finite() { params[i] } else { 0.0 })
+            .collect(),
+    }
+}
+
+/// Densify a top-k vector (zeros at dropped positions).
+pub fn topk_decode(enc: &TopKEncoded) -> Vec<f32> {
+    let mut out = vec![0.0f32; enc.len];
+    for (&i, &v) in enc.indices.iter().zip(&enc.values) {
+        out[i as usize] = v;
+    }
+    out
+}
+
+/// Per-node error-feedback memory: the residual the last compression
+/// round failed to transmit, folded into the next round's payload so the
+/// codec error telescopes instead of accumulating.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(len: usize) -> Self {
+        ErrorFeedback { residual: vec![0.0; len] }
+    }
+
+    /// The currently carried residual.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Compress `params` with memory: encodes `params + residual`,
+    /// updates the residual to `target − decoded`, and returns the
+    /// decoded wire-visible payload (what every receiver — and, for
+    /// exact consensus, the sender itself — folds). For `compress =
+    /// none` this is a plain copy and the residual stays zero.
+    ///
+    /// A non-finite residual entry (a NaN parameter makes
+    /// `target − sent` NaN) is reset to 0.0 instead of being carried —
+    /// otherwise one bad training step would poison that coordinate's
+    /// feedback forever.
+    pub fn compress(&mut self, params: &[f32], cfg: &CompressionConfig) -> Vec<f32> {
+        assert_eq!(params.len(), self.residual.len(), "error-feedback dimension mismatch");
+        if cfg.is_none() {
+            return params.to_vec();
+        }
+        let target: Vec<f32> = params.iter().zip(&self.residual).map(|(&p, &r)| p + r).collect();
+        let sent = cfg.encode_decode(&target);
+        for ((r, &t), &s) in self.residual.iter_mut().zip(&target).zip(&sent) {
+            let next = t - s;
+            *r = if next.is_finite() { next } else { 0.0 };
+        }
+        sent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37).sin() * 3.0).collect()
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [CompressionKind::None, CompressionKind::Quant, CompressionKind::TopK] {
+            assert_eq!(CompressionKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(CompressionKind::parse("TOPK"), Some(CompressionKind::TopK));
+        assert_eq!(CompressionKind::parse("gzip"), None);
+    }
+
+    #[test]
+    fn none_wire_size_is_bit_identical() {
+        let c = CompressionConfig::none();
+        for mb in [11.6, 21.6, 48.0] {
+            assert_eq!(c.wire_mb(mb).to_bits(), mb.to_bits());
+            assert_eq!(c.ratio(mb), 1.0);
+        }
+    }
+
+    #[test]
+    fn quant8_wire_size_is_about_4x_smaller() {
+        let c = CompressionConfig::quant(8);
+        for mb in [11.6, 48.0] {
+            let ratio = c.ratio(mb);
+            assert!(ratio > 3.5 && ratio < 4.1, "mb={mb}: ratio {ratio}");
+        }
+        // fewer bits compress harder
+        assert!(CompressionConfig::quant(4).wire_mb(48.0) < c.wire_mb(48.0));
+    }
+
+    #[test]
+    fn topk_wire_size_tracks_fraction() {
+        let c = CompressionConfig::topk(0.1);
+        let ratio = c.ratio(48.0);
+        assert!((ratio - 5.0).abs() < 0.05, "frac 0.1 → 8 bytes per kept of 40 → 5x, got {ratio}");
+    }
+
+    #[test]
+    fn quant_roundtrip_error_within_half_step() {
+        for bits in [2u32, 4, 8, 12, 16] {
+            let params = ramp(QUANT_CHUNK * 2 + 37);
+            let enc = quant_encode(&params, bits);
+            let dec = quant_decode(&enc);
+            assert_eq!(dec.len(), params.len());
+            for (ci, chunk) in params.chunks(QUANT_CHUNK).enumerate() {
+                let (_, step) = enc.chunks[ci];
+                for (j, &x) in chunk.iter().enumerate() {
+                    let err = (x - dec[ci * QUANT_CHUNK + j]).abs();
+                    // half a step plus slack for f32 boundary rounding
+                    let bound = step as f64 * 0.51 + 1e-6;
+                    assert!(
+                        (err as f64) <= bound,
+                        "bits={bits} chunk {ci} elem {j}: err {err} > {bound}"
+                    );
+                }
+            }
+            // wire accounting matches the header math
+            assert_eq!(
+                enc.wire_bytes(),
+                (params.len() * bits as usize).div_ceil(8) + enc.chunks.len() * 8
+            );
+        }
+    }
+
+    #[test]
+    fn quant_constant_chunk_decodes_exactly() {
+        let params = vec![2.5f32; 100];
+        let dec = quant_decode(&quant_encode(&params, 4));
+        assert_eq!(dec, params, "zero-range chunks must decode to the chunk min exactly");
+    }
+
+    #[test]
+    fn quant_nonfinite_inputs_do_not_poison_the_chunk() {
+        let mut params = ramp(16);
+        params[3] = f32::NAN;
+        params[9] = f32::INFINITY;
+        let dec = quant_decode(&quant_encode(&params, 8));
+        assert!(dec.iter().all(|x| x.is_finite()), "decoded payload must stay finite");
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let params = vec![0.1f32, -5.0, 0.2, 4.0, -0.05, 3.0];
+        let enc = topk_encode(&params, 0.5); // k = 3
+        assert_eq!(enc.indices, vec![1, 3, 5]);
+        assert_eq!(enc.values, vec![-5.0, 4.0, 3.0]);
+        let dec = topk_decode(&enc);
+        assert_eq!(dec, vec![0.0, -5.0, 0.0, 4.0, 0.0, 3.0]);
+        assert_eq!(enc.wire_bytes(), 3 * 8);
+    }
+
+    #[test]
+    fn topk_always_keeps_at_least_one() {
+        let enc = topk_encode(&[0.0f32, 0.0, 7.0], 1e-9);
+        assert_eq!(enc.indices.len(), 1);
+        assert_eq!(enc.indices[0], 2);
+    }
+
+    #[test]
+    fn topk_nonfinite_inputs_never_reach_the_wire() {
+        // a NaN/∞ parameter ranks as zero magnitude and decodes as 0.0 —
+        // it must not be preferentially selected or transmitted verbatim
+        let params = vec![f32::NAN, 1.0, f32::INFINITY, -2.0, 0.5, f32::NEG_INFINITY];
+        let enc = topk_encode(&params, 0.5); // k = 3
+        assert_eq!(enc.indices, vec![1, 3, 4], "finite magnitudes win selection");
+        let dec = topk_decode(&enc);
+        assert!(dec.iter().all(|x| x.is_finite()), "decoded payload must stay finite");
+        // even at frac = 1.0 (every entry kept) the wire stays finite
+        let all = topk_decode(&topk_encode(&params, 1.0));
+        assert!(all.iter().all(|x| x.is_finite()));
+        assert_eq!(all[1], 1.0);
+        assert_eq!(all[0], 0.0);
+    }
+
+    #[test]
+    fn error_feedback_self_heals_non_finite_residuals() {
+        // one NaN training step must not poison the coordinate's
+        // feedback memory for the rest of the session
+        let cfg = CompressionConfig::topk(0.5);
+        let mut ef = ErrorFeedback::new(4);
+        let sent = ef.compress(&[f32::NAN, 1.0, -2.0, 0.25], &cfg);
+        assert!(sent.iter().all(|x| x.is_finite()));
+        assert!(ef.residual().iter().all(|r| r.is_finite()));
+        // recovered params keep flowing normally afterwards
+        let sent = ef.compress(&[0.5, 1.0, -2.0, 0.25], &cfg);
+        assert!(sent.iter().all(|x| x.is_finite()));
+        assert!(ef.residual().iter().all(|r| r.is_finite()));
+    }
+
+    #[test]
+    fn error_feedback_conserves_the_residual() {
+        let cfg = CompressionConfig::quant(4);
+        let mut ef = ErrorFeedback::new(300);
+        let params = ramp(300);
+        let prev = ef.residual().to_vec();
+        let sent = ef.compress(&params, &cfg);
+        for i in 0..300 {
+            let target = params[i] + prev[i];
+            let recon = sent[i] + ef.residual()[i];
+            assert!(
+                (recon - target).abs() <= 1e-5,
+                "elem {i}: sent + residual = {recon} != target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_feedback_none_is_a_plain_copy() {
+        let mut ef = ErrorFeedback::new(8);
+        let params = ramp(8);
+        let sent = ef.compress(&params, &CompressionConfig::none());
+        assert_eq!(sent, params);
+        assert!(ef.residual().iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_mean_error_shrinks_over_rounds() {
+        // the EF memory re-transmits what earlier rounds dropped: over a
+        // static target the cumulative transmitted signal approaches it
+        let cfg = CompressionConfig::topk(0.25);
+        let params = ramp(64);
+        let mut ef = ErrorFeedback::new(64);
+        let mut acc = vec![0.0f32; 64];
+        let mut errs = Vec::new();
+        for round in 0..8 {
+            let sent = ef.compress(&params, &cfg);
+            // receiver averages rounds (what FedAvg folding approximates)
+            for i in 0..64 {
+                acc[i] += (sent[i] - acc[i]) / (round + 1) as f32;
+            }
+            let err: f32 = acc.iter().zip(&params).map(|(a, p)| (a - p).abs()).sum::<f32>() / 64.0;
+            errs.push(err);
+        }
+        assert!(errs[7] < errs[0], "EF must reduce steady-state error: {errs:?}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(CompressionConfig::quant(0).validate().is_err());
+        assert!(CompressionConfig::quant(17).validate().is_err());
+        assert!(CompressionConfig::topk(0.0).validate().is_err());
+        assert!(CompressionConfig::topk(1.5).validate().is_err());
+        assert!(CompressionConfig::topk(f64::NAN).validate().is_err());
+        assert!(CompressionConfig::none().validate().is_ok());
+        assert!(CompressionConfig::quant(8).validate().is_ok());
+        assert!(CompressionConfig::topk(1.0).validate().is_ok());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(CompressionConfig::none().label(), "none");
+        assert_eq!(CompressionConfig::quant(8).label(), "quant8");
+        assert_eq!(CompressionConfig::topk(0.1).label(), "topk0.10");
+    }
+}

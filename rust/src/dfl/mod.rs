@@ -1,7 +1,10 @@
 //! Decentralized federated learning layer: the Table II model registry,
 //! the artifact-driven per-node trainer, segment-granular transfer
-//! planning, and DFL round orchestration (train → gossip → aggregate).
+//! planning, payload compression codecs (quantization / top-k with
+//! error feedback), and DFL round orchestration (train → gossip →
+//! aggregate).
 
+pub mod compress;
 pub mod models;
 pub mod round;
 pub mod trainer;

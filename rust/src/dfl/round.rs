@@ -16,6 +16,7 @@
 //! three-layer stack composing — Rust protocol + DES timing + PJRT
 //! execution of the JAX/Pallas artifacts.
 
+use super::compress::ErrorFeedback;
 use super::trainer::{NodeModel, Trainer};
 use crate::coordinator::session::GossipSession;
 use anyhow::Result;
@@ -34,8 +35,11 @@ pub struct DflRoundReport {
     pub comm_time_s: f64,
     /// slots the round's traffic was active in
     pub slots: usize,
-    /// parameter MB a single model transfer moved
+    /// logical parameter MB a single model transfer represents
     pub model_mb: f64,
+    /// MB a single model copy actually moved on the wire (== `model_mb`
+    /// with `compress = none`)
+    pub wire_mb: f64,
     /// wire segments each model copy traveled as (1 = whole-model)
     pub segments: usize,
     /// absolute pipeline time the round's first seed entered the engine
@@ -78,6 +82,20 @@ pub fn run_dfl(
     let mut nodes: Vec<NodeModel> = (0..n).map(|u| trainer.init_node(u, 0.02)).collect();
     let mut reports = Vec::new();
 
+    // payload compression (--compress quant|topk): each node encodes
+    // `params + residual` at snapshot time and gossips the *decoded*
+    // payload, carrying the codec error forward as an error-feedback
+    // residual. With compress = none this plumbing is skipped entirely
+    // and the loop is the legacy full-width path.
+    let codec = session.config().compression();
+    let dim = nodes.first().map_or(0, |m| m.params.len());
+    let mut feedback: Vec<ErrorFeedback> = if codec.is_none() {
+        Vec::new()
+    } else {
+        (0..n).map(|_| ErrorFeedback::new(dim)).collect()
+    };
+    let wire_mb = session.transfer_plan(model_mb).wire_mb();
+
     for round in 0..rounds {
         // --- local training ---
         let mut train_loss = 0.0f32;
@@ -95,14 +113,28 @@ pub fn run_dfl(
         train_loss /= n as f32;
 
         // --- aggregation: fold every received model pairwise (FedAvg),
-        // in the engine's actual delivery order for this round ---
+        // in the engine's actual delivery order for this round. Under a
+        // compression codec the snapshot is each node's decoded
+        // (wire-visible) payload, and the sender adopts that decoded
+        // payload as its own fold contribution too — so every node
+        // averages the identical vector set and consensus stays exact;
+        // the residual carries the codec error into the next round. ---
         let received = &pipeline.received[round as usize];
-        let snapshot: HashMap<usize, Vec<f32>> =
-            nodes.iter().map(|m| (m.node, m.params.clone())).collect();
+        let snapshot: HashMap<usize, Vec<f32>> = if codec.is_none() {
+            nodes.iter().map(|m| (m.node, m.params.clone())).collect()
+        } else {
+            nodes
+                .iter()
+                .map(|m| (m.node, feedback[m.node].compress(&m.params, &codec)))
+                .collect()
+        };
         let weights: HashMap<usize, f32> = nodes.iter().map(|m| (m.node, m.weight)).collect();
         let mut eval_loss = 0.0f32;
         for node in nodes.iter_mut() {
             node.weight = 1.0;
+            if !codec.is_none() {
+                node.params = snapshot[&node.node].clone();
+            }
             for &owner in &received[node.node] {
                 trainer.aggregate_into(node, &snapshot[&owner], weights[&owner])?;
             }
@@ -119,6 +151,7 @@ pub fn run_dfl(
             comm_time_s: phase.exchange_done_s - phase.first_seed_s,
             slots: phase.slot_span(),
             model_mb,
+            wire_mb,
             segments: pipeline.segments,
             start_s: phase.first_seed_s,
             done_s: phase.done_s,

@@ -27,13 +27,29 @@
 //!
 //! `segments = 1` is the compatibility anchor: a single whole-model
 //! transfer unit, bit-identical to the pre-segmentation engine.
+//!
+//! ## Compressed wire sizes
+//!
+//! A plan distinguishes the **logical** checkpoint size
+//! ([`TransferPlan::model_mb`] — what the learning layer snapshots) from
+//! the **wire** size ([`TransferPlan::wire_mb`] — what flows actually
+//! move). [`TransferPlan::with_compression`] derives the wire size from a
+//! [`CompressionConfig`](crate::dfl::compress::CompressionConfig)
+//! (quantization / top-k — CLI `--compress`), and every consumer of
+//! [`TransferPlan::segment_mb`] — the engine's flow launches, the §III-C
+//! slot budget, the simulator's loss model — sees the compressed payload.
+//! With `compress = none` the wire size **is** the logical size, bit for
+//! bit.
 
+use crate::dfl::compress::CompressionConfig;
 use std::ops::Range;
 
 /// How one model checkpoint is sliced into wire-level transfer units.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TransferPlan {
     model_mb: f64,
+    /// Bytes one copy actually moves (== `model_mb` without compression).
+    wire_mb: f64,
     segments: usize,
 }
 
@@ -48,7 +64,7 @@ impl TransferPlan {
         assert!(model_mb > 0.0, "model size must be positive, got {model_mb} MB");
         assert!(segments >= 1, "a transfer plan needs at least one segment");
         assert!(segments <= u16::MAX as usize, "segment count {segments} exceeds u16 wire field");
-        TransferPlan { model_mb, segments }
+        TransferPlan { model_mb, wire_mb: model_mb, segments }
     }
 
     /// Slice the checkpoint into units of at most `segment_mb` MB:
@@ -61,9 +77,37 @@ impl TransferPlan {
         Self::segmented(model_mb, k)
     }
 
-    /// Full checkpoint size in MB.
+    /// Re-derive the wire size under `codec` (keeps the logical size and
+    /// slicing): the size every flow launch, slot budget, and loss-model
+    /// evaluation sees. `compress = none` leaves the wire size equal to
+    /// the logical size, bit for bit.
+    pub fn with_compression(mut self, codec: &CompressionConfig) -> Self {
+        self.wire_mb = codec.wire_mb(self.model_mb);
+        assert!(self.wire_mb > 0.0, "compressed wire size must stay positive");
+        self
+    }
+
+    /// Full **logical** checkpoint size in MB (what the learning layer
+    /// snapshots, regardless of compression).
     pub fn model_mb(&self) -> f64 {
         self.model_mb
+    }
+
+    /// Bytes one model copy actually moves on the wire, in MB. Equals
+    /// [`TransferPlan::model_mb`] (same float bits) unless a compression
+    /// codec was applied via [`TransferPlan::with_compression`].
+    pub fn wire_mb(&self) -> f64 {
+        self.wire_mb
+    }
+
+    /// Logical-to-wire size ratio (1.0 without compression).
+    pub fn compression_ratio(&self) -> f64 {
+        self.model_mb / self.wire_mb
+    }
+
+    /// Whether this plan moves compressed payloads.
+    pub fn is_compressed(&self) -> bool {
+        self.wire_mb.to_bits() != self.model_mb.to_bits()
     }
 
     /// Number of transfer units one copy is cut into (`k >= 1`).
@@ -71,13 +115,14 @@ impl TransferPlan {
         self.segments
     }
 
-    /// Size of one transfer unit in MB (equal split; for `segments == 1`
-    /// this is exactly `model_mb`, preserving the legacy payload bits).
+    /// **Wire** size of one transfer unit in MB (equal split; for
+    /// `segments == 1` this is exactly `wire_mb`, preserving the legacy
+    /// payload bits when uncompressed).
     pub fn segment_mb(&self) -> f64 {
         if self.segments == 1 {
-            self.model_mb
+            self.wire_mb
         } else {
-            self.model_mb / self.segments as f64
+            self.wire_mb / self.segments as f64
         }
     }
 
@@ -171,5 +216,31 @@ mod tests {
     #[should_panic(expected = "at least one segment")]
     fn zero_segments_rejected() {
         TransferPlan::segmented(10.0, 0);
+    }
+
+    #[test]
+    fn uncompressed_plan_wire_equals_logical_bits() {
+        let p = TransferPlan::whole(21.6);
+        assert_eq!(p.wire_mb().to_bits(), p.model_mb().to_bits());
+        assert!(!p.is_compressed());
+        assert_eq!(p.compression_ratio(), 1.0);
+        // none codec applied explicitly keeps the exact bits too
+        let q = p.with_compression(&CompressionConfig::none());
+        assert_eq!(q.wire_mb().to_bits(), 21.6f64.to_bits());
+        assert_eq!(q.segment_mb().to_bits(), 21.6f64.to_bits());
+        assert_eq!(q, p);
+    }
+
+    #[test]
+    fn compressed_plan_shrinks_wire_units_not_logical_size() {
+        let p = TransferPlan::segmented(48.0, 4).with_compression(&CompressionConfig::quant(8));
+        assert_eq!(p.model_mb().to_bits(), 48.0f64.to_bits(), "logical size untouched");
+        assert!(p.is_compressed());
+        assert!(p.compression_ratio() > 3.5, "ratio {}", p.compression_ratio());
+        // wire units split the wire size, not the logical size
+        assert!((p.segment_mb() * 4.0 - p.wire_mb()).abs() < 1e-12);
+        assert!(p.segment_mb() < 48.0 / 4.0 / 3.5);
+        // slicing of the logical parameter vector is unchanged
+        assert_eq!(p.segment_bounds(100).len(), 4);
     }
 }

@@ -71,13 +71,21 @@ impl Graph {
         &self.edges
     }
 
-    /// Add an undirected edge. Panics on self-loop, out-of-range id, or
-    /// duplicate edge — programming errors in this codebase.
+    /// Add an undirected edge. Panics on self-loop, out-of-range id,
+    /// duplicate edge, or a non-finite/negative weight — programming
+    /// errors in this codebase. Non-finite weights are rejected *here*,
+    /// at construction time, so graph consumers (MST orderings, slot
+    /// budgets) never have to defend against NaN costs; online producers
+    /// of weights (e.g. `coordinator::probe`) filter unusable readings
+    /// before building a graph.
     pub fn add_edge(&mut self, u: NodeId, v: NodeId, weight: f64) {
         assert!(u != v, "self-loop {u}");
         assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range n={}", self.n);
         assert!(!self.has_edge(u, v), "duplicate edge ({u},{v})");
-        assert!(weight.is_finite() && weight >= 0.0, "bad weight {weight}");
+        assert!(
+            weight.is_finite() && weight >= 0.0,
+            "edge ({u},{v}) weight must be finite and >= 0, got {weight}"
+        );
         self.adj[u].push((v, weight));
         self.adj[v].push((u, weight));
         self.edges.push(Edge::new(u, v, weight));

@@ -41,6 +41,14 @@
 //! flows back up into reassembled model copies so the paper's Table III
 //! bandwidth column stays comparable.
 //!
+//! Payloads need not ship at full fp32 width: the **compression plane**
+//! ([`dfl::compress`] — `--compress {none,quant,topk}`, `--quant-bits`,
+//! `--topk-frac`) quantizes or top-k-sparsifies each checkpoint with
+//! per-node error feedback, and the [`dfl::transfer::TransferPlan`]
+//! carries the compressed *wire* size into every flow launch, the
+//! §III-C slot budget, and the loss model, with `compress = none`
+//! bit-identical to the full-width engine.
+//!
 //! On top of single rounds the engine pipelines **multiple rounds over
 //! one long-lived simulator** ([`coordinator::engine::RoundEngine::run_pipelined`]):
 //! each node seeds round *t+1* the moment it has aggregated round *t*,

@@ -105,6 +105,16 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(s) = f.get("segment-mb") {
         cfg.segment_mb = s.parse().context("--segment-mb")?;
     }
+    if let Some(s) = f.get("compress") {
+        cfg.compress = mosgu::dfl::compress::CompressionKind::parse(s)
+            .with_context(|| format!("bad compress codec {s} (none|quant|topk)"))?;
+    }
+    if let Some(s) = f.get("quant-bits") {
+        cfg.quant_bits = s.parse().context("--quant-bits")?;
+    }
+    if let Some(s) = f.get("topk-frac") {
+        cfg.topk_frac = s.parse().context("--topk-frac")?;
+    }
     if let Some(s) = f.get("drift") {
         cfg.drift = s.parse().context("--drift")?;
     }
@@ -166,6 +176,11 @@ fn print_usage() {
          \x20                cut-through relay forwarding (default 1 = whole model)\n\
          \x20 --segment-mb F derive the segment count per model from a target\n\
          \x20                segment size in MB (mutually exclusive with --segments)\n\
+         \x20 --compress C   payload codec for gossiped checkpoints (none|quant|topk);\n\
+         \x20                quant/topk shrink every wire transfer and the slot budget,\n\
+         \x20                with per-node error feedback in DFL training\n\
+         \x20 --quant-bits K quantization width in bits, 1..=16 (default 8)\n\
+         \x20 --topk-frac F  fraction of entries top-k keeps, in (0,1] (default 0.1)\n\
          \x20 --drift A      link-quality drift amplitude in [0,1) (0 = static links);\n\
          \x20                links re-draw every --drift-interval-s simulated seconds\n\
          \x20 --probe-every R  moderator ping sweep every R rounds (0 = no re-planning)\n\
@@ -207,6 +222,9 @@ fn cmd_tables(f: &HashMap<String, String>) -> Result<()> {
     };
     for t in selected {
         println!("{}", tables::render(t, &cells));
+    }
+    if !cfg.compression().is_none() {
+        println!("{}", tables::render_compression(&cells));
     }
     Ok(())
 }
@@ -333,6 +351,14 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
             "transfer plan: {} segments of {:.2} MB each, cut-through relay forwarding",
             plan.segments(),
             plan.segment_mb()
+        );
+    }
+    if plan.is_compressed() {
+        println!(
+            "compression: {} — {:.2} MB on the wire per copy ({:.2}x smaller), error feedback on",
+            cfg.compression().label(),
+            plan.wire_mb(),
+            plan.compression_ratio()
         );
     }
     let session = GossipSession::with_model(&cfg, artifacts.model_mb())?;

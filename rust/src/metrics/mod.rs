@@ -69,6 +69,11 @@ pub struct RoundMetrics {
     /// Model copies launched out-of-turn by cut-through relays (0 under
     /// whole-model plans) — the cut-through activity indicator.
     pub relay_copies: usize,
+    /// **Logical** (uncompressed fp32) MB one model copy represents.
+    pub logical_model_mb: f64,
+    /// **Wire** MB one model copy actually moved (== logical without
+    /// compression; flow records carry wire-sized payloads).
+    pub wire_model_mb: f64,
 }
 
 impl RoundMetrics {
@@ -143,35 +148,39 @@ impl RoundMetrics {
 
     /// Mean observed goodput per **reassembled model copy** — the paper's
     /// "Bandwidth (MB/s)". Per-segment bandwidths are deliberately not
-    /// averaged (see the module docs).
+    /// averaged (see the module docs). A round with zero copies (e.g. a
+    /// fully disrupted slot window) reports 0.0, **not** NaN — NaN here
+    /// used to poison [`RepeatedMetrics`] averages and bench JSON.
     pub fn bandwidth_mbps(&self) -> f64 {
         let mut s = Summary::new();
         for t in self.copy_records().iter() {
             s.push(t.bandwidth_mbps());
         }
-        s.mean()
+        mean_or_zero(&s)
     }
 
     /// Mean per-segment goodput — the raw wire-level figure, for
     /// comparing against [`RoundMetrics::bandwidth_mbps`] when studying
     /// cut-through pipelining (the segment-sweep bench reports both).
+    /// 0.0 for a round with no transfers.
     pub fn per_segment_bandwidth_mbps(&self) -> f64 {
         let mut s = Summary::new();
         for t in &self.transfers {
             s.push(t.bandwidth_mbps());
         }
-        s.mean()
+        mean_or_zero(&s)
     }
 
     /// Mean single-transfer duration of a reassembled copy (first segment
     /// launched → last segment delivered) — the paper's Table IV
-    /// indicator.
+    /// indicator. 0.0 for a round with no copies (see
+    /// [`RoundMetrics::bandwidth_mbps`]).
     pub fn avg_transfer_s(&self) -> f64 {
         let mut s = Summary::new();
         for t in self.copy_records().iter() {
             s.push(t.duration());
         }
-        s.mean()
+        mean_or_zero(&s)
     }
 
     /// Transfer-unit flows completed (segments under segmented plans).
@@ -179,9 +188,27 @@ impl RoundMetrics {
         self.transfers.len()
     }
 
-    /// Total payload moved (MB), counting every copy.
+    /// Total **wire** payload moved (MB), counting every copy — flow
+    /// records carry the (possibly compressed) on-the-wire sizes.
     pub fn total_payload_mb(&self) -> f64 {
         self.transfers.iter().map(|t| t.payload_mb).sum()
+    }
+
+    /// Total **logical** MB the round's reassembled copies represent
+    /// (copies × uncompressed checkpoint size) — compare against
+    /// [`RoundMetrics::total_payload_mb`] for the measured wire saving.
+    pub fn total_logical_mb(&self) -> f64 {
+        self.model_copy_count() as f64 * self.logical_model_mb
+    }
+
+    /// Logical-to-wire compression ratio of this round's payloads (1.0
+    /// when uncompressed).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_model_mb > 0.0 {
+            self.logical_model_mb / self.wire_model_mb
+        } else {
+            1.0
+        }
     }
 
     /// Simulated seconds spent in slots that actually carried transfers.
@@ -195,6 +222,17 @@ impl RoundMetrics {
     }
 }
 
+/// Empty-set-safe mean: a [`Summary`] with no samples reports 0.0 here
+/// instead of NaN, so a round that moved nothing (e.g. every copy
+/// disrupted in its observed window) cannot poison downstream averages.
+fn mean_or_zero(s: &Summary) -> f64 {
+    if s.count() == 0 {
+        0.0
+    } else {
+        s.mean()
+    }
+}
+
 /// Aggregate over repeated rounds (the paper reports averaged figures).
 #[derive(Debug, Clone, Default)]
 pub struct RepeatedMetrics {
@@ -204,6 +242,10 @@ pub struct RepeatedMetrics {
     pub total: Summary,
     /// exchange-phase time (Table V's indicator)
     pub exchange: Summary,
+    /// per-copy logical (uncompressed) MB
+    pub logical_mb: Summary,
+    /// per-copy wire MB (== logical without compression)
+    pub wire_mb: Summary,
 }
 
 impl RepeatedMetrics {
@@ -216,10 +258,27 @@ impl RepeatedMetrics {
             bw.push(c.bandwidth_mbps());
             xfer.push(c.duration());
         }
-        self.bandwidth.push(bw.mean());
-        self.transfer.push(xfer.mean());
+        // a round with zero model copies contributes no per-copy samples
+        // (its NaN mean used to poison these averages); its round-level
+        // times still count
+        if bw.count() > 0 {
+            self.bandwidth.push(bw.mean());
+            self.transfer.push(xfer.mean());
+        }
         self.total.push(round.total_time_s);
         self.exchange.push(round.exchange_time_s);
+        self.logical_mb.push(round.logical_model_mb);
+        self.wire_mb.push(round.wire_model_mb);
+    }
+
+    /// Mean logical-to-wire compression ratio over the pushed rounds
+    /// (1.0 when nothing was pushed or nothing was compressed).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_mb.count() == 0 || self.wire_mb.mean() <= 0.0 {
+            1.0
+        } else {
+            self.logical_mb.mean() / self.wire_mb.mean()
+        }
     }
 }
 
@@ -292,6 +351,8 @@ mod tests {
             slot_timings: Vec::new(),
             segments: 1,
             relay_copies: 0,
+            logical_model_mb: 10.0,
+            wire_model_mb: 10.0,
         }
     }
 
@@ -308,6 +369,8 @@ mod tests {
             ],
             segments: 1,
             relay_copies: 0,
+            logical_model_mb: 10.0,
+            wire_model_mb: 10.0,
         };
         assert!((m.bandwidth_mbps() - (5.0 + 2.0) / 2.0).abs() < 1e-12);
         assert!((m.avg_transfer_s() - 3.5).abs() < 1e-12);
@@ -339,6 +402,8 @@ mod tests {
             slot_timings: Vec::new(),
             segments: 2,
             relay_copies: 0,
+            logical_model_mb: 10.0,
+            wire_model_mb: 10.0,
         };
         let copies = m.model_copies();
         assert_eq!(copies.len(), 1);
@@ -389,6 +454,8 @@ mod tests {
             slot_timings: Vec::new(),
             segments: 2,
             relay_copies: 1,
+            logical_model_mb: 4.0,
+            wire_model_mb: 4.0,
         };
         let copies = m.model_copies();
         assert_eq!(copies.len(), 3, "two edges + one retransmission = 3 copies");
@@ -421,6 +488,8 @@ mod tests {
             slot_timings: vec![busy, idle],
             segments: 1,
             relay_copies: 0,
+            logical_model_mb: 10.0,
+            wire_model_mb: 10.0,
         };
         assert_eq!(m.active_slots(), 1);
         assert!((m.busy_time_s() - 2.5).abs() < 1e-12);
@@ -434,6 +503,46 @@ mod tests {
         }
         assert_eq!(rep.total.count(), 2);
         assert!((rep.total.mean() - 15.0).abs() < 1e-12);
+        assert!((rep.compression_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_copy_round_reports_zero_not_nan() {
+        // regression: a round that recorded no model copies (e.g. a fully
+        // disrupted slot window) used to return NaN means that poisoned
+        // RepeatedMetrics averages and bench JSON
+        let empty = whole_metrics(Vec::new(), 1.0, 1);
+        assert_eq!(empty.bandwidth_mbps(), 0.0);
+        assert_eq!(empty.avg_transfer_s(), 0.0);
+        assert_eq!(empty.per_segment_bandwidth_mbps(), 0.0);
+        assert!(empty.bandwidth_mbps().is_finite());
+
+        let mut rep = RepeatedMetrics::default();
+        rep.push(&whole_metrics(vec![rec(10.0, 0.0, 2.0)], 2.0, 1));
+        rep.push(&empty);
+        // the empty round contributes no per-copy samples...
+        assert_eq!(rep.bandwidth.count(), 1);
+        assert_eq!(rep.transfer.count(), 1);
+        assert!((rep.bandwidth.mean() - 5.0).abs() < 1e-12);
+        // ...but its round-level times still count, NaN-free
+        assert_eq!(rep.total.count(), 2);
+        assert!(rep.total.mean().is_finite());
+        assert!(rep.bandwidth.mean().is_finite() && rep.transfer.mean().is_finite());
+    }
+
+    #[test]
+    fn compressed_round_reports_wire_vs_logical() {
+        // a 10 MB logical copy moving 2.5 MB on the wire (4x codec)
+        let mut m = whole_metrics(vec![rec(2.5, 0.0, 1.0), rec(2.5, 0.0, 2.0)], 2.0, 2);
+        m.wire_model_mb = 2.5;
+        assert!((m.compression_ratio() - 4.0).abs() < 1e-12);
+        assert!((m.total_payload_mb() - 5.0).abs() < 1e-12, "wire bytes");
+        assert!((m.total_logical_mb() - 20.0).abs() < 1e-12, "logical bytes");
+        let mut rep = RepeatedMetrics::default();
+        rep.push(&m);
+        assert!((rep.compression_ratio() - 4.0).abs() < 1e-12);
+        assert!((rep.wire_mb.mean() - 2.5).abs() < 1e-12);
+        assert!((rep.logical_mb.mean() - 10.0).abs() < 1e-12);
     }
 
     #[test]

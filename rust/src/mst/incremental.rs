@@ -28,12 +28,27 @@ use super::MstError;
 use crate::graph::{Graph, NodeId};
 
 /// Deterministic edge preference matching `Graph::sorted_edges` (and thus
-/// Kruskal's tie-break): ascending weight, then endpoints.
+/// Kruskal's tie-break): ascending weight, then endpoints. Uses
+/// `f64::total_cmp`, so the comparison is total even for weights a
+/// validation gap lets through — ordering can never panic here.
 fn prefer(w: f64, u: NodeId, v: NodeId, best: Option<(f64, NodeId, NodeId)>) -> bool {
     match best {
         None => true,
-        Some((bw, bu, bv)) => (w, u, v) < (bw, bu, bv),
+        Some((bw, bu, bv)) => w.total_cmp(&bw).then_with(|| (u, v).cmp(&(bu, bv))).is_lt(),
     }
+}
+
+/// Reject cost graphs carrying non-finite weights before any ordering
+/// runs over them — the re-planning path's input can come from online
+/// probe estimates, and a drifted/poisoned NaN must surface as a clear
+/// [`MstError::NonFinite`] instead of a mid-replan comparator panic.
+fn check_finite(costs: &Graph) -> Result<(), MstError> {
+    for e in costs.edges() {
+        if !e.weight.is_finite() {
+            return Err(MstError::NonFinite { u: e.u, v: e.v });
+        }
+    }
+    Ok(())
 }
 
 /// Tree edges of the path between `from` and `to` as (u, v, weight)
@@ -102,6 +117,13 @@ pub fn update_edge_weight(
     let new_w = costs
         .weight(u, v)
         .unwrap_or_else(|| panic!("changed edge ({u},{v}) not in the cost graph"));
+    // only the changed weight needs validating here: every comparison
+    // below is total_cmp-based (panic-free), and update_mst already
+    // scans the full graph once — a second O(E) pass would erode the
+    // fast path's point
+    if !new_w.is_finite() {
+        return Err(MstError::NonFinite { u, v });
+    }
 
     if tree.has_edge(u, v) {
         // cut property: reconnect the two sides with the minimum
@@ -130,11 +152,13 @@ pub fn update_edge_weight(
         Ok(swap_edge(tree, (u, v), (bu, bv, bw)))
     } else {
         // cycle property: the changed edge enters only if it is now
-        // strictly lighter than the heaviest edge on its tree cycle
+        // strictly lighter than the heaviest edge on its tree cycle.
+        // total_cmp keeps the ordering total: a NaN slipping past
+        // validation can no longer panic the comparator mid-replan.
         let path = tree_path(tree, u, v);
         let &(mu, mv, mw) = path
             .iter()
-            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then((a.0, a.1).cmp(&(b.0, b.1))))
+            .max_by(|a, b| a.2.total_cmp(&b.2).then((a.0, a.1).cmp(&(b.0, b.1))))
             .expect("path between distinct nodes is non-empty");
         if new_w < mw {
             Ok(swap_edge(tree, (mu, mv), (u, v, new_w)))
@@ -149,6 +173,9 @@ pub fn update_edge_weight(
 /// the [`update_edge_weight`] edge-swap fast path; otherwise run Kruskal
 /// from scratch. `tree` must be an MST of `old_costs`.
 pub fn update_mst(tree: &Graph, old_costs: &Graph, new_costs: &Graph) -> Result<Graph, MstError> {
+    // validate before any ordering (kruskal's sort included) touches the
+    // refreshed weights: probed/drifted costs must fail loudly, not panic
+    check_finite(new_costs)?;
     if old_costs.node_count() != new_costs.node_count()
         || old_costs.edge_count() != new_costs.edge_count()
     {

@@ -66,6 +66,11 @@ pub enum MstError {
     Disconnected,
     #[error("graph is empty")]
     Empty,
+    /// A cost graph carried a NaN/∞ edge weight (e.g. a poisoned probe
+    /// estimate). Surfaced as an error at (re-)planning time so a
+    /// drifted cost can never panic an ordering comparison mid-replan.
+    #[error("edge ({u},{v}) has a non-finite weight")]
+    NonFinite { u: usize, v: usize },
 }
 
 /// Shared validity check: `t` is a spanning tree of `g` with edges drawn

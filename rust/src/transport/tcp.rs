@@ -32,14 +32,44 @@ pub struct TcpEndpoint {
     _readers: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// Whether an `accept(2)` failure is a per-connection hiccup the acceptor
+/// should skip (the handshake that died does not doom the listener) or a
+/// listener-level fault that must be reported. Aborted/reset handshakes
+/// and EINTR/EAGAIN are routine on loaded hosts; treating them as fatal
+/// used to kill the acceptor thread and deadlock [`mesh`].
+fn accept_error_is_transient(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    matches!(
+        e.kind(),
+        ErrorKind::ConnectionAborted
+            | ErrorKind::ConnectionReset
+            | ErrorKind::Interrupted
+            | ErrorKind::WouldBlock
+            | ErrorKind::TimedOut
+    )
+}
+
+/// What one acceptor thread hands back: the parked reader handles, or
+/// the listener-level I/O error that stopped it.
+type AcceptorResult = std::io::Result<Vec<std::thread::JoinHandle<()>>>;
+
 /// Build an n-node loopback mesh with `rate_mbps` per-endpoint uplink
 /// shaping (MB/s). Returns the endpoints in node order.
+///
+/// Setup I/O failures — binding, reading a listener address, dialing,
+/// or a non-transient `accept` error — propagate as `Err` instead of
+/// panicking inside the acceptor thread (which would leave the dialing
+/// side blocked forever); transient accept failures are skipped and the
+/// acceptor keeps waiting for the expected peers.
 pub fn mesh(n: usize, rate_mbps: f64) -> Result<Vec<TcpEndpoint>> {
     // bind listeners on ephemeral ports first
     let listeners: Vec<TcpListener> = (0..n)
         .map(|_| TcpListener::bind("127.0.0.1:0").context("bind"))
         .collect::<Result<_>>()?;
-    let ports: Vec<u16> = listeners.iter().map(|l| l.local_addr().unwrap().port()).collect();
+    let ports: Vec<u16> = listeners
+        .iter()
+        .map(|l| Ok(l.local_addr().context("listener local_addr")?.port()))
+        .collect::<Result<_>>()?;
 
     // each endpoint's incoming queue
     let mut queues: Vec<(Sender<(usize, Message)>, Receiver<(usize, Message)>)> =
@@ -55,14 +85,29 @@ pub fn mesh(n: usize, rate_mbps: f64) -> Result<Vec<TcpEndpoint>> {
             (tx, rx)
         };
         let expected = n - 1;
-        let accept_handle = std::thread::spawn(move || {
+        let accept_handle = std::thread::spawn(move || -> AcceptorResult {
+            // budget on skipped transient failures: each dialer connects
+            // exactly once, so a "transient" abort may still have
+            // consumed a peer that will never re-dial — without a bound
+            // that would turn the old panic into a silent join() hang
+            let mut transient_budget = 2 * expected + 16;
             let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
-            for _ in 0..expected {
-                let (stream, _) = listener.accept().expect("accept");
-                let tx = tx.clone();
-                handles.push(std::thread::spawn(move || reader_loop(stream, tx)));
+            while handles.len() < expected {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        handles.push(std::thread::spawn(move || reader_loop(stream, tx)));
+                    }
+                    // a dying handshake is not a dying listener: skip it
+                    // and keep accepting the expected peers (bounded)
+                    Err(e) if accept_error_is_transient(&e) && transient_budget > 0 => {
+                        transient_budget -= 1;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
             }
-            handles
+            Ok(handles)
         });
         accept_threads.push(accept_handle);
         endpoints.push(TcpEndpoint {
@@ -91,9 +136,12 @@ pub fn mesh(n: usize, rate_mbps: f64) -> Result<Vec<TcpEndpoint>> {
             endpoints[i].out[j] = Some(stream);
         }
     }
-    // park reader threads
-    for (ep, handle) in endpoints.iter_mut().zip(accept_threads) {
-        ep._readers = handle.join().expect("acceptor panicked");
+    // park reader threads; acceptor-side I/O errors surface here
+    for (node, (ep, handle)) in endpoints.iter_mut().zip(accept_threads).enumerate() {
+        ep._readers = handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("acceptor thread for node {node} panicked"))?
+            .with_context(|| format!("accepting mesh connections for node {node}"))?;
     }
     Ok(endpoints)
 }
@@ -163,6 +211,30 @@ impl Transport for TcpEndpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn accept_error_classification() {
+        use std::io::{Error, ErrorKind};
+        // per-connection hiccups are skipped...
+        for kind in [
+            ErrorKind::ConnectionAborted,
+            ErrorKind::ConnectionReset,
+            ErrorKind::Interrupted,
+            ErrorKind::WouldBlock,
+            ErrorKind::TimedOut,
+        ] {
+            assert!(accept_error_is_transient(&Error::from(kind)), "{kind:?}");
+        }
+        // ...listener-level faults propagate through mesh()'s Result
+        for kind in [
+            ErrorKind::InvalidInput,
+            ErrorKind::PermissionDenied,
+            ErrorKind::AddrNotAvailable,
+            ErrorKind::OutOfMemory,
+        ] {
+            assert!(!accept_error_is_transient(&Error::from(kind)), "{kind:?}");
+        }
+    }
 
     #[test]
     fn tcp_mesh_roundtrip() {

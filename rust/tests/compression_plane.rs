@@ -1,0 +1,271 @@
+//! The compression plane's contract tests:
+//!
+//! 1. codec round-trips, property-tested: quantization error stays under
+//!    half a step, top-k keeps exactly the largest magnitudes with valid
+//!    indices, and error feedback conserves `target = sent + residual`;
+//! 2. the acceptance bar: `--compress quant --quant-bits 8` on
+//!    balanced-tree underlays at n ≥ 10 moves ≥ 3.5× fewer wire bytes
+//!    per round than `compress = none` while the exchange (and full
+//!    dissemination) time strictly decreases, across jitter and failure
+//!    injection — and pipelined DFL rounds still hand every node a
+//!    complete fold set;
+//! 3. compressed gossip + error-feedback folding reaches model consensus
+//!    (the `models_agree` criterion) without the PJRT artifacts, by
+//!    replaying the engine's actual reception orders over a plain
+//!    weighted-average fold.
+
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::compress::{
+    quant_decode, quant_encode, topk_decode, topk_encode, CompressionConfig, CompressionKind,
+    ErrorFeedback, QUANT_CHUNK,
+};
+use mosgu::dfl::round::models_agree;
+use mosgu::dfl::trainer::NodeModel;
+use mosgu::graph::topology::TopologyKind;
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+
+fn random_params(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (rng.gen_f64_range(-4.0, 4.0)) as f32).collect()
+}
+
+#[test]
+fn quantization_roundtrip_error_bounded_by_half_step() {
+    check("quant roundtrip error bound", 128, |rng| {
+        let len = 1 + rng.gen_range(3 * QUANT_CHUNK);
+        let bits = 1 + rng.gen_range(16) as u32;
+        let params = random_params(rng, len);
+        let enc = quant_encode(&params, bits);
+        let dec = quant_decode(&enc);
+        if dec.len() != params.len() {
+            return Err(format!("len {} != {}", dec.len(), params.len()));
+        }
+        for (i, (&x, &y)) in params.iter().zip(&dec).enumerate() {
+            let (_, step) = enc.chunks[i / QUANT_CHUNK];
+            // half a step plus slack for f32 rounding at code boundaries
+            let bound = step as f64 * 0.51 + 1e-6;
+            if ((x - y).abs() as f64) > bound {
+                return Err(format!(
+                    "bits={bits} elem {i}: |{x} - {y}| > half-step {bound}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topk_indices_valid_and_magnitudes_maximal() {
+    check("topk index validity + selection", 128, |rng| {
+        let len = 1 + rng.gen_range(2000);
+        let frac = rng.gen_f64_range(0.01, 1.0);
+        let params = random_params(rng, len);
+        let enc = topk_encode(&params, frac);
+        let k = ((len as f64 * frac).ceil() as usize).clamp(1, len);
+        if enc.indices.len() != k || enc.values.len() != k {
+            return Err(format!("kept {} of expected {k}", enc.indices.len()));
+        }
+        // indices strictly ascending, in range, values match the source
+        for (j, &i) in enc.indices.iter().enumerate() {
+            if i as usize >= len {
+                return Err(format!("index {i} out of range {len}"));
+            }
+            if j > 0 && enc.indices[j - 1] >= i {
+                return Err("indices not strictly ascending".into());
+            }
+            if enc.values[j] != params[i as usize] {
+                return Err(format!("value at {i} diverged"));
+            }
+        }
+        // every kept magnitude >= every dropped magnitude
+        let kept: std::collections::HashSet<usize> =
+            enc.indices.iter().map(|&i| i as usize).collect();
+        let min_kept = enc.values.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+        for (i, &x) in params.iter().enumerate() {
+            if !kept.contains(&i) && x.abs() > min_kept {
+                return Err(format!("dropped |{x}| at {i} exceeds kept min {min_kept}"));
+            }
+        }
+        // decode: kept positions match, the rest are zero
+        let dec = topk_decode(&enc);
+        for (i, &y) in dec.iter().enumerate() {
+            let want = if kept.contains(&i) { params[i] } else { 0.0 };
+            if y != want {
+                return Err(format!("decoded[{i}] = {y}, want {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn error_feedback_residual_conservation() {
+    check("EF residual conservation", 96, |rng| {
+        let len = 1 + rng.gen_range(3000);
+        let codec = if rng.gen_bool(0.5) {
+            CompressionConfig::quant(1 + rng.gen_range(16) as u32)
+        } else {
+            CompressionConfig::topk(rng.gen_f64_range(0.05, 1.0))
+        };
+        let mut ef = ErrorFeedback::new(len);
+        let mut prev = ef.residual().to_vec();
+        for _round in 0..3 {
+            let params = random_params(rng, len);
+            let sent = ef.compress(&params, &codec);
+            for i in 0..len {
+                let target = params[i] + prev[i];
+                let recon = sent[i] + ef.residual()[i];
+                if (recon - target).abs() > 1e-4 {
+                    return Err(format!(
+                        "{}: elem {i} sent+residual {recon} != params+prev_residual {target}",
+                        codec.label()
+                    ));
+                }
+            }
+            prev = ef.residual().to_vec();
+        }
+        Ok(())
+    });
+}
+
+fn quiet_cfg(kind: TopologyKind, n: usize) -> ExperimentConfig {
+    ExperimentConfig { topology: kind, nodes: n, latency_jitter: 0.0, ..Default::default() }
+}
+
+fn quant8(cfg: &ExperimentConfig) -> ExperimentConfig {
+    ExperimentConfig { compress: CompressionKind::Quant, quant_bits: 8, ..cfg.clone() }
+}
+
+#[test]
+fn quant8_cuts_wire_bytes_3_5x_and_strictly_speeds_rounds() {
+    // the PR's acceptance bar, plus jitter/failure robustness
+    for n in [10usize, 12] {
+        let base = quiet_cfg(TopologyKind::BalancedTree, n);
+        let plain = GossipSession::new(&base).unwrap();
+        let compressed = GossipSession::new(&quant8(&base)).unwrap();
+        for model_mb in [11.6, 48.0] {
+            let a = plain.run_mosgu_round(model_mb, 1, 0.0);
+            let b = compressed.run_mosgu_round(model_mb, 1, 0.0);
+            // same protocol: every model still crosses every tree edge
+            assert_eq!(b.transfer_count(), a.transfer_count(), "n={n} mb={model_mb}");
+            let wire_ratio = a.total_payload_mb() / b.total_payload_mb();
+            assert!(
+                wire_ratio >= 3.5,
+                "n={n} mb={model_mb}: wire bytes only dropped {wire_ratio:.2}x"
+            );
+            assert!((b.compression_ratio() - wire_ratio).abs() < 0.05);
+            // logical accounting is unchanged
+            assert!((b.total_logical_mb() - a.total_logical_mb()).abs() < 1e-9);
+            // smaller payloads must strictly speed the round up
+            assert!(
+                b.exchange_time_s < a.exchange_time_s,
+                "n={n} mb={model_mb}: exchange {} !< {}",
+                b.exchange_time_s,
+                a.exchange_time_s
+            );
+            assert!(b.total_time_s < a.total_time_s, "n={n} mb={model_mb}");
+        }
+    }
+    // jitter + failure injection: compressed rounds stay complete and
+    // deterministic, and still beat full-width on exchange time
+    let base = ExperimentConfig { topology: TopologyKind::BalancedTree, ..Default::default() };
+    let plain = GossipSession::new(&base).unwrap();
+    let compressed = GossipSession::new(&quant8(&base)).unwrap();
+    let a = plain.run_mosgu_round(48.0, 3, 0.15);
+    let b = compressed.run_mosgu_round(48.0, 3, 0.15);
+    assert!(b.exchange_time_s < a.exchange_time_s);
+    let again = compressed.run_mosgu_round(48.0, 3, 0.15);
+    assert_eq!(b.total_time_s.to_bits(), again.total_time_s.to_bits());
+    assert_eq!(b.transfers, again.transfers);
+}
+
+#[test]
+fn compressed_pipeline_hands_dfl_full_fold_inputs() {
+    // run_dfl's communication path under compression: pipelined rounds
+    // complete with full reception orders, and the wire payload shrinks
+    let base = quiet_cfg(TopologyKind::BalancedTree, 10);
+    let plain = GossipSession::new(&base).unwrap();
+    let compressed = GossipSession::new(&quant8(&base)).unwrap();
+    let a = plain.run_adaptive_rounds(21.6, 2, 0x90551b);
+    let b = compressed.run_adaptive_rounds(21.6, 2, 0x90551b);
+    assert_eq!(b.rounds.len(), 2);
+    for (r, orders) in b.received.iter().enumerate() {
+        for (u, order) in orders.iter().enumerate() {
+            assert_eq!(order.len(), 9, "round {r} node {u} missed models");
+        }
+    }
+    assert!((b.logical_model_mb - 21.6).abs() < 1e-12);
+    assert!(b.wire_model_mb * 3.5 < b.logical_model_mb);
+    assert!(b.total_time_s < a.total_time_s, "compressed pipeline must finish sooner");
+    // topk threads through the same path
+    let topk_cfg = ExperimentConfig {
+        compress: CompressionKind::TopK,
+        topk_frac: 0.1,
+        ..base.clone()
+    };
+    let t = GossipSession::new(&topk_cfg).unwrap().run_adaptive_rounds(21.6, 2, 0x90551b);
+    assert!((t.logical_model_mb / t.wire_model_mb - 5.0).abs() < 0.05);
+    assert!(t.total_time_s < a.total_time_s);
+}
+
+/// Replay run_dfl's aggregation (weighted pairwise average in the
+/// engine's reception orders) without the PJRT artifacts.
+fn fold_round(snapshot: &[Vec<f32>], received: &[Vec<usize>]) -> Vec<Vec<f32>> {
+    let n = snapshot.len();
+    (0..n)
+        .map(|u| {
+            let mut acc = snapshot[u].clone();
+            let mut weight = 1.0f32;
+            for &owner in &received[u] {
+                weight += 1.0;
+                for (a, &o) in acc.iter_mut().zip(&snapshot[owner]) {
+                    *a += (o - *a) / weight;
+                }
+            }
+            acc
+        })
+        .collect()
+}
+
+#[test]
+fn compressed_gossip_with_error_feedback_reaches_consensus() {
+    // the models_agree criterion of the DFL loop, codec on: every node
+    // folds the identical decoded snapshot set (the sender adopts its own
+    // decoded payload, exactly as run_dfl does), so consensus holds to
+    // float-reordering tolerance within the same round budget as none
+    let dim = QUANT_CHUNK + 123;
+    let rounds = 2u64;
+    for codec in [
+        CompressionConfig::none(),
+        CompressionConfig::quant(8),
+        CompressionConfig::topk(0.25),
+    ] {
+        let cfg = ExperimentConfig {
+            compress: codec.kind,
+            quant_bits: codec.quant_bits,
+            topk_frac: codec.topk_frac,
+            ..quiet_cfg(TopologyKind::BalancedTree, 10)
+        };
+        let session = GossipSession::new(&cfg).unwrap();
+        let pipeline = session.run_pipelined_rounds(11.6, rounds, 0x90551b);
+        let mut rng = Pcg64::new(0xfeed);
+        let mut params: Vec<Vec<f32>> = (0..10).map(|_| random_params(&mut rng, dim)).collect();
+        let mut feedback: Vec<ErrorFeedback> = (0..10).map(|_| ErrorFeedback::new(dim)).collect();
+        for round in 0..rounds as usize {
+            let snapshot: Vec<Vec<f32>> =
+                (0..10).map(|u| feedback[u].compress(&params[u], &codec)).collect();
+            params = fold_round(&snapshot, &pipeline.received[round]);
+        }
+        let nodes: Vec<NodeModel> = params
+            .into_iter()
+            .enumerate()
+            .map(|(node, params)| NodeModel { node, params, weight: 1.0 })
+            .collect();
+        assert!(
+            models_agree(&nodes, 1e-4),
+            "{}: compressed gossip failed to reach consensus",
+            codec.label()
+        );
+    }
+}

@@ -341,6 +341,48 @@ fn hierarchical_planning_single_subnet_is_bit_identical_to_flat() {
 }
 
 #[test]
+fn compress_none_config_is_bit_identical_across_topologies_jitter_failures() {
+    // the compression plane's compatibility anchor: an explicit
+    // `compress = "none"` config (with dormant quant/topk knobs set)
+    // must replay the default engine bit for bit — single rounds,
+    // adaptive pipelines, and sharded rounds, under jitter and failure
+    // injection — and still match the pre-compression legacy slot loop
+    for kind in TopologyKind::ALL {
+        for jitter in [0.0, 0.08] {
+            let base = ExperimentConfig {
+                topology: kind,
+                latency_jitter: jitter,
+                subnets: 1,
+                ..Default::default()
+            };
+            let mut none = base.clone();
+            none.compress = mosgu::dfl::compress::CompressionKind::None;
+            none.quant_bits = 4; // dormant knobs must not leak
+            none.topk_frac = 0.5;
+            let s_base = GossipSession::new(&base).unwrap();
+            let s_none = GossipSession::new(&none).unwrap();
+            for failure_prob in [0.0, 0.15] {
+                let a = s_base.run_mosgu_round(14.0, 3, failure_prob);
+                let b = s_none.run_mosgu_round(14.0, 3, failure_prob);
+                let label = format!("{kind:?} j={jitter} f={failure_prob}");
+                assert_rounds_bit_identical(&b, &a, &label);
+                // and against the seed's legacy loop (failure-free +
+                // jittered cases both covered by the loop above)
+                let legacy = legacy_mosgu_round(&s_none, 14.0, 3, failure_prob);
+                assert_metrics_match_legacy(&b, &legacy);
+            }
+            let ap = s_base.run_adaptive_rounds(14.0, 2, 5);
+            let bp = s_none.run_adaptive_rounds(14.0, 2, 5);
+            assert_eq!(ap.total_time_s.to_bits(), bp.total_time_s.to_bits(), "{kind:?}");
+            assert_eq!(ap.transfers, bp.transfers, "{kind:?}");
+            let ash = s_base.run_sharded_round(14.0, 3, 0.15, false);
+            let bsh = s_none.run_sharded_round(14.0, 3, 0.15, false);
+            assert_rounds_bit_identical(&bsh, &ash, &format!("{kind:?} sharded"));
+        }
+    }
+}
+
+#[test]
 fn sim_rounds_are_byte_identical_for_fixed_seed() {
     let session = GossipSession::new(&quiet_cfg(TopologyKind::WattsStrogatz)).unwrap();
     let a = session.run_mosgu_round(14.0, 42, 0.1);
