@@ -1,20 +1,70 @@
-//! L3 hot-path microbenchmarks: the discrete-event simulator's event rate,
-//! max-min fair-share recomputation, gossip planning, and the moderator's
-//! full M+O+S computation — the pieces §Perf of EXPERIMENTS.md tracks.
+//! L3/L5 hot-path microbenchmarks: the discrete-event simulator's event
+//! rate, incremental vs full-oracle re-rating, max-min fair-share
+//! recomputation, gossip planning, and the moderator's full M+O+S
+//! computation — the pieces §Perf of EXPERIMENTS.md tracks.
+//!
+//! Emits one `JSON {...}` line per measurement; CI smoke-runs this bench
+//! and uploads them as the `netsim-throughput` artifact.
+//!
+//! ```bash
+//! cargo bench --bench netsim_throughput             # full iteration counts
+//! cargo bench --bench netsim_throughput -- --smoke  # CI subset (fewer iters)
+//! ```
 
-use mosgu::bench::{bench, section};
+use mosgu::bench::{bench, section, BenchResult};
 use mosgu::config::ExperimentConfig;
 use mosgu::coordinator::gossip::GossipState;
 use mosgu::coordinator::moderator::Moderator;
 use mosgu::coordinator::session::GossipSession;
 use mosgu::netsim::fairshare::max_min_rates;
 use mosgu::netsim::testbed::Testbed;
+use mosgu::netsim::NetSim;
 use mosgu::util::rng::Pcg64;
 
-fn main() {
-    let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+/// One machine-readable line per measurement (`events` = simulator events
+/// per closure run when the bench drives a DES; 0 for pure-CPU kernels).
+fn emit(r: &BenchResult, events: u64) {
+    let ev_per_s = if events > 0 { events as f64 / r.mean_s } else { 0.0 };
+    println!(
+        "JSON {{\"bench\":\"netsim_throughput\",\"name\":\"{}\",\"iters\":{},\
+         \"mean_s\":{:.9},\"std_s\":{:.9},\"min_s\":{:.9},\
+         \"per_sec\":{:.3},\"events\":{events},\"events_per_sec\":{:.1}}}",
+        r.name,
+        r.iters,
+        r.mean_s,
+        r.std_s,
+        r.min_s,
+        r.per_sec(),
+        ev_per_s,
+    );
+}
 
-    section("fair-share allocation");
+/// The broadcast traffic pattern as a raw simulator: every ordered pair
+/// of the testbed's nodes ships one 14 MB flow over its flat route — 90
+/// concurrent flows contending on shared device links.
+fn broadcast_sim(tb: &Testbed, full_rerate: bool) -> NetSim {
+    let n = tb.node_count();
+    let mut sim = tb.netsim(1);
+    sim.set_full_rerate(full_rerate);
+    for src in 0..n {
+        for dst in 0..n {
+            if src != dst {
+                sim.start_flow(src, dst, tb.route(src, dst), 14.0, (src * n + dst) as u64);
+            }
+        }
+    }
+    sim
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+    // smoke mode trims warmup/iteration counts for CI wall-clock budget;
+    // the measured quantities are identical
+    let (w, it) = if smoke { (1u32, 5u32) } else { (3, 30) };
+    let (w_big, it_big) = if smoke { (1u32, 3u32) } else { (1, 5) };
+
+    section("fair-share allocation (full water-filling kernel)");
     let mut rng = Pcg64::new(1);
     for (nc, nf) in [(32usize, 100usize), (64, 500), (128, 2000)] {
         let caps: Vec<f64> = (0..nc).map(|_| rng.gen_f64_range(5.0, 50.0)).collect();
@@ -24,24 +74,59 @@ fn main() {
                 (0..hops).map(|_| rng.gen_range(nc)).collect()
             })
             .collect();
-        let r = bench(&format!("max_min_rates {nc}ch x {nf}flows"), 3, 30, || {
+        let r = bench(&format!("max_min_rates {nc}ch x {nf}flows"), w, it, || {
             max_min_rates(&caps, &routes)
         });
         println!("{}", r.report());
+        emit(&r, 0);
     }
 
-    section("DES end-to-end: broadcast round (90 concurrent flows)");
+    section("DES event rate: incremental vs full-oracle re-rate");
     let tb = Testbed::new(&cfg);
-    let r = bench("broadcast round N=10", 3, 30, || {
+    // events per drain is deterministic — count once, time separately
+    let events_per_drain = {
+        let mut sim = broadcast_sim(&tb, false);
+        sim.run_until_idle();
+        sim.counters().events
+    };
+    let r_inc = bench("drain 90 flows, incremental re-rate", w, it, || {
+        let mut sim = broadcast_sim(&tb, false);
+        sim.run_until_idle();
+        sim.now()
+    });
+    println!("{}  ({:.0} events/s)", r_inc.report(), events_per_drain as f64 / r_inc.mean_s);
+    emit(&r_inc, events_per_drain);
+    let r_full = bench("drain 90 flows, full-rerate oracle", w, it, || {
+        let mut sim = broadcast_sim(&tb, true);
+        sim.run_until_idle();
+        sim.now()
+    });
+    println!(
+        "{}  ({:.0} events/s, incremental speedup {:.2}x)",
+        r_full.report(),
+        events_per_drain as f64 / r_full.mean_s,
+        r_full.mean_s / r_inc.mean_s
+    );
+    emit(&r_full, events_per_drain);
+
+    section("DES end-to-end: broadcast round (90 concurrent flows)");
+    let r = bench("broadcast round N=10", w, it, || {
         mosgu::coordinator::broadcast::paper_baseline(&tb, 14.0, 1)
     });
-    println!("{}  ({:.0} rounds/s)", r.report(), r.per_sec());
+    let round_events = mosgu::coordinator::broadcast::paper_baseline(&tb, 14.0, 1).sim.events;
+    println!(
+        "{}  ({:.0} rounds/s, {:.0} events/s)",
+        r.report(),
+        r.per_sec(),
+        round_events as f64 / r.mean_s
+    );
+    emit(&r, round_events);
 
     section("gossip protocol planning (no DES)");
     let session = GossipSession::new(&cfg).expect("session");
     let tree = session.tree().clone();
     let sched = session.schedule().clone();
-    let r = bench("full logical round N=10", 3, 100, || {
+    let r = bench("full logical round N=10", w, if smoke { 10 } else { 100 }, || {
         let mut st = GossipState::new(tree.clone(), 0);
         for slot in 0..200 {
             if st.is_complete() {
@@ -55,10 +140,11 @@ fn main() {
         st
     });
     println!("{}  ({:.0} rounds/s)", r.report(), r.per_sec());
+    emit(&r, 0);
 
     section("moderator M+O+S computation (reports -> schedule)");
     let costs = session.costs().clone();
-    let r = bench("moderator schedule N=10 complete", 3, 100, || {
+    let r = bench("moderator schedule N=10 complete", w, if smoke { 10 } else { 100 }, || {
         let mut m = Moderator::new(
             0,
             10,
@@ -73,11 +159,19 @@ fn main() {
         m.compute_schedule(14.0, 56, 1).unwrap().tree.edge_count()
     });
     println!("{}", r.report());
+    emit(&r, 0);
 
     section("timed MOSGU round through the DES");
-    let r = bench("mosgu sim round N=10 (14MB)", 3, 30, || session.run_mosgu_round(14.0, 1, 0.0));
-    println!("{}  ({:.0} rounds/s)", r.report(), r.per_sec());
-    let r = bench("full Table cell (5 repeats b+p)", 1, 5, || {
+    let r = bench("mosgu sim round N=10 (14MB)", w, it, || session.run_mosgu_round(14.0, 1, 0.0));
+    let mosgu_events = session.run_mosgu_round(14.0, 1, 0.0).sim.events;
+    println!(
+        "{}  ({:.0} rounds/s, {:.0} events/s)",
+        r.report(),
+        r.per_sec(),
+        mosgu_events as f64 / r.mean_s
+    );
+    emit(&r, mosgu_events);
+    let r = bench("full Table cell (5 repeats b+p)", w_big, it_big, || {
         let mut b = mosgu::metrics::RepeatedMetrics::default();
         for rep in 0..5u64 {
             b.push(&session.run_broadcast_round(14.0, rep));
@@ -86,4 +180,5 @@ fn main() {
         b
     });
     println!("{}", r.report());
+    emit(&r, 0);
 }

@@ -7,32 +7,42 @@
 //! dissemination tail pipelines with later rounds (§III-D) — and is the
 //! unit large-n scenarios are measured in. Both simulators run the *same*
 //! topology and hierarchical plan; only the event-queue decomposition
-//! differs, so the comparison isolates simulator scalability.
+//! differs, so the comparison isolates simulator scalability. Each cell
+//! also reports simulator throughput (events/sec, from
+//! `RoundMetrics::sim` counters) — the §Perf/L5 headline metric.
 //!
 //! Emits one `JSON {...}` line per cell; CI uploads them as the
 //! `scale-sweep` artifact. Full mode gates on the ISSUE-4 acceptance
 //! bar: a 32-subnet hierarchy at n = 10 000 must complete with
 //! byte-conserving metrics and run ≥ 4× faster sharded than sequential
 //! (mirrored by the `#[ignore]`d release test in `tests/scale_shard.rs`).
+//! The n = 100 000 cell runs **sharded-only** — the single-queue
+//! baseline is quadratic in the round's flow count and would dominate
+//! the sweep by hours — and checks byte conservation at that scale
+//! (ISSUE-6 acceptance).
 //!
 //! ```bash
-//! cargo bench --bench scale_sweep             # full grid incl. n = 10k + gate
+//! cargo bench --bench scale_sweep             # full grid incl. n = 10k gate + n = 100k
 //! cargo bench --bench scale_sweep -- --smoke  # CI subset (n <= 1k, no gate)
 //! ```
 
 use mosgu::bench::section;
 use mosgu::config::ExperimentConfig;
 use mosgu::coordinator::session::ScaleScenario;
+use mosgu::metrics::RoundMetrics;
 use std::time::Instant;
 
 const MODEL_MB: f64 = 14.0;
+
+/// Cells at or above this node count skip the sequential baseline.
+const SEQ_CUTOFF: usize = 100_000;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let grid: &[(usize, usize)] = if smoke {
         &[(100, 8), (1_000, 32)]
     } else {
-        &[(100, 8), (1_000, 32), (10_000, 32)]
+        &[(100, 8), (1_000, 32), (10_000, 32), (100_000, 256)]
     };
 
     section(&format!(
@@ -40,8 +50,17 @@ fn main() {
         if smoke { "smoke" } else { "full" }
     ));
     println!(
-        "{:>7} {:>8} {:>7} {:>11} {:>12} {:>12} {:>9} {:>12}",
-        "n", "subnets", "copies", "sim_s", "wall_seq_s", "wall_shard_s", "speedup", "bytes_ok"
+        "{:>7} {:>8} {:>7} {:>11} {:>12} {:>12} {:>10} {:>10} {:>9} {:>9}",
+        "n",
+        "subnets",
+        "copies",
+        "sim_s",
+        "wall_seq_s",
+        "wall_shrd_s",
+        "ev/s_seq",
+        "ev/s_shrd",
+        "speedup",
+        "bytes_ok"
     );
 
     let mut ok = true;
@@ -55,52 +74,73 @@ fn main() {
             ..Default::default()
         };
         let scenario = ScaleScenario::new(&cfg, MODEL_MB).expect("scenario");
+        let run_seq = n < SEQ_CUTOFF;
 
-        let t0 = Instant::now();
-        let seq = scenario.run_exchange(MODEL_MB, 1, 0.0, false, false);
-        let wall_seq = t0.elapsed().as_secs_f64();
+        let (seq, wall_seq) = if run_seq {
+            let t0 = Instant::now();
+            let m = scenario.run_exchange(MODEL_MB, 1, 0.0, false, false);
+            (Some(m), t0.elapsed().as_secs_f64())
+        } else {
+            (None, 0.0)
+        };
         let t1 = Instant::now();
         let shard = scenario.run_exchange(MODEL_MB, 1, 0.0, true, true);
         let wall_shard = t1.elapsed().as_secs_f64();
         let speedup = wall_seq / wall_shard.max(1e-9);
+        let ev_seq = seq.as_ref().map_or(0.0, |m| m.sim.events as f64 / wall_seq.max(1e-9));
+        let ev_shard = shard.sim.events as f64 / wall_shard.max(1e-9);
 
         // byte conservation: 2(n-1) own-model copies of MODEL_MB each,
-        // delivered exactly once on both simulators
+        // delivered exactly once on every simulator that ran
         let expect_copies = 2 * (n - 1);
         let expect_mb = expect_copies as f64 * MODEL_MB;
-        let bytes_ok = seq.transfer_count() == expect_copies
-            && shard.transfer_count() == expect_copies
-            && (seq.total_payload_mb() - expect_mb).abs() < 1e-6 * expect_mb
-            && (shard.total_payload_mb() - expect_mb).abs() < 1e-6 * expect_mb;
+        let conserved = |m: &RoundMetrics| {
+            m.transfer_count() == expect_copies
+                && (m.total_payload_mb() - expect_mb).abs() < 1e-6 * expect_mb
+        };
+        let seq_ok = match &seq {
+            Some(m) => conserved(m),
+            None => true,
+        };
+        let bytes_ok = seq_ok && conserved(&shard);
         assert!(bytes_ok, "byte conservation violated at n={n}");
 
+        let dash = || "-".to_string();
         println!(
-            "{:>7} {:>8} {:>7} {:>11.3} {:>12.4} {:>12.4} {:>8.2}x {:>12}",
+            "{:>7} {:>8} {:>7} {:>11.3} {:>12} {:>12.4} {:>10} {:>10.0} {:>9} {:>9}",
             n,
             subnets,
-            seq.transfer_count(),
+            shard.transfer_count(),
             shard.total_time_s,
-            wall_seq,
+            if run_seq { format!("{wall_seq:.4}") } else { dash() },
             wall_shard,
-            speedup,
+            if run_seq { format!("{ev_seq:.0}") } else { dash() },
+            ev_shard,
+            if run_seq { format!("{speedup:.2}x") } else { dash() },
             bytes_ok
         );
         println!(
             "JSON {{\"bench\":\"scale_sweep\",\"n\":{n},\"subnets\":{subnets},\
-             \"copies\":{},\"model_mb\":{MODEL_MB},\
+             \"copies\":{},\"model_mb\":{MODEL_MB},\"seq_ran\":{run_seq},\
              \"sim_seq_s\":{:.6},\"sim_shard_s\":{:.6},\
              \"wall_seq_s\":{:.6},\"wall_shard_s\":{:.6},\"speedup\":{:.4},\
+             \"events_seq\":{},\"events_shard\":{},\
+             \"ev_per_s_seq\":{:.1},\"ev_per_s_shard\":{:.1},\
              \"payload_mb\":{:.3},\"bytes_conserved\":{bytes_ok}}}",
-            seq.transfer_count(),
-            seq.total_time_s,
+            shard.transfer_count(),
+            seq.as_ref().map_or(0.0, |m| m.total_time_s),
             shard.total_time_s,
             wall_seq,
             wall_shard,
-            speedup,
+            if run_seq { speedup } else { 0.0 },
+            seq.as_ref().map_or(0, |m| m.sim.events),
+            shard.sim.events,
+            ev_seq,
+            ev_shard,
             shard.total_payload_mb(),
         );
 
-        if n >= 10_000 {
+        if n == 10_000 && run_seq {
             let pass = speedup >= 4.0;
             ok &= pass;
             println!(

@@ -123,6 +123,7 @@ pub fn run_broadcast_round(
     }
 
     let total = sim.now();
+    let sim_counters = sim.counters();
     RoundMetrics {
         transfers: sim.take_completed(),
         total_time_s: total,
@@ -135,6 +136,7 @@ pub fn run_broadcast_round(
         // conventional flooding broadcast): wire == logical
         logical_model_mb: model_mb,
         wire_model_mb: model_mb,
+        sim: sim_counters,
     }
 }
 

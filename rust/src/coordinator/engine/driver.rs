@@ -27,7 +27,7 @@ use crate::coordinator::broadcast::flow_tag_segment;
 use crate::coordinator::queue::{ModelKey, SegmentKey};
 use crate::graph::NodeId;
 use crate::netsim::testbed::Testbed;
-use crate::netsim::{DriftProcess, FlowRecord, NetSim};
+use crate::netsim::{DriftProcess, FlowRecord, NetSim, SimCounters};
 use crate::transport::{Message, Transport};
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -62,6 +62,15 @@ pub trait Driver {
 
     /// Drain the low-level transfer records accumulated so far.
     fn take_transfers(&mut self) -> Vec<FlowRecord>;
+
+    /// Cumulative simulator work counters (events processed, rate
+    /// recomputes) since the substrate was built. Substrates with no
+    /// simulator report zeros. Callers that want per-round figures
+    /// snapshot at round start and diff via
+    /// [`SimCounters::since`](crate::netsim::SimCounters::since).
+    fn sim_counters(&self) -> SimCounters {
+        SimCounters::default()
+    }
 
     /// Measure the substrate's **current** round-trip ping between two
     /// nodes in milliseconds, for a probe of `probe_bytes` — the paper's
@@ -164,6 +173,10 @@ impl Driver for SimDriver<'_> {
         self.sim.take_completed()
     }
 
+    fn sim_counters(&self) -> SimCounters {
+        self.sim.counters()
+    }
+
     fn probe_ping_ms(&self, from: NodeId, to: NodeId, probe_bytes: u64) -> Option<f64> {
         let (src, dst) = (self.map[from], self.map[to]);
         if src == dst {
@@ -199,7 +212,7 @@ impl MeshSimDriver {
                 channels.push(crate::netsim::Channel {
                     capacity_mbps,
                     latency_s: e.weight / 2.0 / 1e3,
-                    label: format!("{a}->{b}"),
+                    label: format!("{a}->{b}").into(),
                 });
             }
         }
@@ -252,6 +265,10 @@ impl Driver for MeshSimDriver {
 
     fn take_transfers(&mut self) -> Vec<FlowRecord> {
         self.sim.take_completed()
+    }
+
+    fn sim_counters(&self) -> SimCounters {
+        self.sim.counters()
     }
 
     fn probe_ping_ms(&self, from: NodeId, to: NodeId, probe_bytes: u64) -> Option<f64> {

@@ -632,6 +632,8 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
     ) -> RoundMetrics {
         let plan = opts.plan;
         let segmented = plan.is_segmented();
+        // drivers may be long-lived (pipelining); diff counters per round
+        let counters_at_start = self.driver.sim_counters();
         // cut-through relays need the tree while the state is mutably
         // borrowed by delivery callbacks — snapshot it once per round
         let tree = if segmented { Some(state.tree().clone()) } else { None };
@@ -735,6 +737,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             relay_copies: relay_copies_total,
             logical_model_mb: plan.model_mb(),
             wire_model_mb: plan.wire_mb(),
+            sim: self.driver.sim_counters().since(counters_at_start),
         }
     }
 

@@ -6,7 +6,9 @@
 //! which serializes the simulation: finding the globally next event means
 //! merging every shard's queue. This module instead drives slots with a
 //! **round barrier** — launch every copy of the slot, drain all shards to
-//! idle (in parallel threads when asked), re-synchronize the clocks, then
+//! idle (stealable tasks on a persistent worker pool when asked — see
+//! [`DrainPool`](crate::netsim::pool::DrainPool)), re-synchronize the
+//! clocks, then
 //! apply deliveries in the engine's deterministic (sender, recipient)
 //! order. Within a slot the shards share no state, so the trajectory is
 //! identical whether shards drain in parallel or sequentially; with a
@@ -55,7 +57,8 @@ pub struct ShardedRoundOptions {
     /// Failure coin stream, drawn in deterministic (sender, recipient)
     /// order — the flat engine's exact sequence.
     pub failure_rng: Pcg64,
-    /// Drain each shard on its own thread at the slot barrier.
+    /// Drain shards concurrently on the persistent pool at the slot
+    /// barrier (worker count decoupled from shard count).
     pub parallel: bool,
 }
 
@@ -206,6 +209,9 @@ fn finish(
         relay_copies: 0,
         logical_model_mb: opts.model_mb,
         wire_model_mb: opts.wire_mb,
+        // measured simulator work (cumulative over the sim's lifetime —
+        // each run_sharded_* call here gets a fresh sim from its caller)
+        sim: sim.counters(),
     }
 }
 

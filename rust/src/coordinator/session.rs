@@ -414,11 +414,32 @@ impl ScaleScenario {
         use_shards: bool,
         parallel: bool,
     ) -> RoundMetrics {
+        self.run_exchange_pooled(model_mb, seed, failure_prob, use_shards, parallel, None)
+    }
+
+    /// As [`ScaleScenario::run_exchange`] with the barrier pool's width
+    /// pinned: `drain_workers = Some(w)` drains with `w` concurrent
+    /// workers (counting the barrier thread), `None` uses the machine's
+    /// available parallelism. A pure scheduling knob — every width
+    /// produces bit-identical results (pinned by `tests/scale_shard.rs`),
+    /// so it exists for benchmarking the pool and testing determinism.
+    pub fn run_exchange_pooled(
+        &self,
+        model_mb: f64,
+        seed: u64,
+        failure_prob: f64,
+        use_shards: bool,
+        parallel: bool,
+        drain_workers: Option<usize>,
+    ) -> RoundMetrics {
         let mut sim = if use_shards {
             ShardedNetSim::sharded(&self.testbed, seed)
         } else {
             ShardedNetSim::single(&self.testbed, seed)
         };
+        if let Some(w) = drain_workers {
+            sim.set_drain_workers(w);
+        }
         let opts = ShardedRoundOptions {
             model_mb,
             wire_mb: self.cfg.transfer_plan(model_mb).wire_mb(),

@@ -12,7 +12,7 @@
 //! only usable once its last segment lands.
 
 use crate::coordinator::broadcast::{tag_owner, tag_segment, tag_sender};
-use crate::netsim::FlowRecord;
+use crate::netsim::{FlowRecord, SimCounters};
 use crate::util::stats::Summary;
 
 /// Timing of one schedule slot as the round engine drove it: when the
@@ -74,6 +74,11 @@ pub struct RoundMetrics {
     /// **Wire** MB one model copy actually moved (== logical without
     /// compression; flow records carry wire-sized payloads).
     pub wire_model_mb: f64,
+    /// Simulator work counters for the round (events processed, rate
+    /// recomputes), aggregated across shards — the measured basis of the
+    /// events/sec bench headline. Zero when no simulator backed the round
+    /// (logical/live drivers).
+    pub sim: SimCounters,
 }
 
 impl RoundMetrics {
@@ -353,6 +358,7 @@ mod tests {
             relay_copies: 0,
             logical_model_mb: 10.0,
             wire_model_mb: 10.0,
+            sim: SimCounters::default(),
         }
     }
 
@@ -371,6 +377,7 @@ mod tests {
             relay_copies: 0,
             logical_model_mb: 10.0,
             wire_model_mb: 10.0,
+            sim: SimCounters::default(),
         };
         assert!((m.bandwidth_mbps() - (5.0 + 2.0) / 2.0).abs() < 1e-12);
         assert!((m.avg_transfer_s() - 3.5).abs() < 1e-12);
@@ -404,6 +411,7 @@ mod tests {
             relay_copies: 0,
             logical_model_mb: 10.0,
             wire_model_mb: 10.0,
+            sim: SimCounters::default(),
         };
         let copies = m.model_copies();
         assert_eq!(copies.len(), 1);
@@ -456,6 +464,7 @@ mod tests {
             relay_copies: 1,
             logical_model_mb: 4.0,
             wire_model_mb: 4.0,
+            sim: SimCounters::default(),
         };
         let copies = m.model_copies();
         assert_eq!(copies.len(), 3, "two edges + one retransmission = 3 copies");
@@ -490,6 +499,7 @@ mod tests {
             relay_copies: 0,
             logical_model_mb: 10.0,
             wire_model_mb: 10.0,
+            sim: SimCounters::default(),
         };
         assert_eq!(m.active_slots(), 1);
         assert!((m.busy_time_s() - 2.5).abs() < 1e-12);

@@ -2,9 +2,15 @@
 //!
 //! The fluid-flow model at the heart of the network simulator: every active
 //! flow traverses a set of directed channels; each channel has a capacity;
-//! rates are the unique max-min fair allocation. Recomputed on every flow
-//! arrival/departure — O(channels × flows) per call, plenty fast for the
-//! paper-scale topologies (hundreds of flows).
+//! rates are the unique max-min fair allocation.
+//!
+//! This is the *full* O(channels × flows) pass. The event loop no longer
+//! calls it per event — `NetSim` re-water-fills only the dirty connected
+//! component with allocation-free scratch (§Perf/L5) — but this function
+//! remains the ground truth: max-min components are arithmetically
+//! independent, so the restricted pass is bit-identical to this one, and
+//! `tests/netsim_rerate.rs` pins the two against each other (enable the
+//! full pass per event with `NetSim::set_full_rerate`).
 
 /// Compute max-min fair rates.
 ///

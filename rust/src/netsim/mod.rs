@@ -23,13 +23,29 @@
 //! capacity/latency schedule. With no shifts and no drift installed, the
 //! event loop takes exactly the legacy path, float for float.
 //!
+//! ## Hot path at scale (§Perf/L5)
+//!
+//! Flow state lives in a struct-of-arrays arena (`FlowArena`): parallel
+//! column vectors indexed by `FlowId`, with routes packed end-to-end in
+//! one flat arena behind an offsets table. The per-event work is
+//! *incremental*: each channel keeps its active-user list, and on a flow
+//! arrival/completion (or a capacity change) only the connected component
+//! of channels/flows transitively sharing a bottleneck with the change is
+//! re-water-filled — components are independent in max-min allocation, so
+//! the restricted pass is bit-identical to the full one (the full pass in
+//! [`fairshare::max_min_rates`] is kept as the differential-test oracle;
+//! see [`NetSim::set_full_rerate`]). Changes landing at the same event
+//! horizon batch into one recompute via lazy dirty marks.
+//!
 //! ## Scaling out
 //!
 //! One event queue is sequential by construction; the multi-subnet
 //! scale-out plane runs one `NetSim` per subnet plus a backbone queue,
-//! re-synchronized at round barriers — see [`shard::ShardedNetSim`].
+//! re-synchronized at round barriers by a persistent work-stealing pool —
+//! see [`shard::ShardedNetSim`] and [`pool::DrainPool`].
 
 pub mod fairshare;
+pub mod pool;
 pub mod shard;
 pub mod testbed;
 
@@ -48,8 +64,10 @@ pub type FlowId = usize;
 pub struct Channel {
     pub capacity_mbps: f64,
     pub latency_s: f64,
-    /// human-readable endpoint description for debugging
-    pub label: String,
+    /// human-readable endpoint description for debugging; interned so
+    /// clone-heavy paths (the backbone shard clones every device link)
+    /// share one allocation instead of copying a `String` per clone
+    pub label: std::sync::Arc<str>,
 }
 
 /// One scripted change to a channel's quality at a point in simulated
@@ -119,27 +137,116 @@ impl LossModel {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum FlowState {
-    Active,
-    Done,
+/// Hot-path work counters, measured (not inferred from wall clock) so
+/// benches and metrics can report events/sec and recompute amortization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SimCounters {
+    /// event-loop iterations processed (completions + change horizons +
+    /// idle clock jumps)
+    pub events: u64,
+    /// water-filling passes actually run (component-restricted passes in
+    /// the incremental mode, full passes in oracle mode)
+    pub rate_recomputes: u64,
 }
 
-/// One payload transfer in flight.
-#[derive(Debug, Clone)]
-struct Flow {
-    src: HostId,
-    dst: HostId,
-    route: Vec<ChannelId>,
+impl SimCounters {
+    /// Accumulate another counter set (shard aggregation).
+    pub fn merge(&mut self, other: SimCounters) {
+        self.events += other.events;
+        self.rate_recomputes += other.rate_recomputes;
+    }
+
+    /// Counters accumulated since an earlier snapshot of the same sim.
+    pub fn since(self, earlier: SimCounters) -> SimCounters {
+        SimCounters {
+            events: self.events - earlier.events,
+            rate_recomputes: self.rate_recomputes - earlier.rate_recomputes,
+        }
+    }
+}
+
+/// Struct-of-arrays flow state: one column per field, indexed by
+/// `FlowId`, with every route packed end-to-end in one flat arena behind
+/// an offsets table (`route_offsets[f]..route_offsets[f+1]`). Replaces
+/// the old `Vec<Flow>` of per-flow structs: the event loop touches only
+/// `remaining_mb` when draining, and routes stop being a pointer-chase
+/// per flow (§Perf/L5).
+#[derive(Debug, Default)]
+struct FlowArena {
+    src: Vec<HostId>,
+    dst: Vec<HostId>,
     /// payload size before loss inflation (MB)
-    payload_mb: f64,
+    payload_mb: Vec<f64>,
     /// bytes still to move, including inflation (MB)
-    remaining_mb: f64,
-    start: f64,
-    end: f64,
-    state: FlowState,
+    remaining_mb: Vec<f64>,
+    start: Vec<f64>,
     /// opaque tag the driver can use (model owner id, etc.)
-    tag: u64,
+    tag: Vec<u64>,
+    done: Vec<bool>,
+    /// `route_offsets[f]..route_offsets[f+1]` bounds flow `f`'s route in
+    /// `route_arena`; always starts with a leading 0 sentinel
+    route_offsets: Vec<u32>,
+    route_arena: Vec<ChannelId>,
+}
+
+impl FlowArena {
+    fn new() -> Self {
+        FlowArena { route_offsets: vec![0], ..Default::default() }
+    }
+
+    fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        src: HostId,
+        dst: HostId,
+        route: &[ChannelId],
+        payload_mb: f64,
+        remaining_mb: f64,
+        start: f64,
+        tag: u64,
+    ) -> FlowId {
+        let id = self.len();
+        self.src.push(src);
+        self.dst.push(dst);
+        self.payload_mb.push(payload_mb);
+        self.remaining_mb.push(remaining_mb);
+        self.start.push(start);
+        self.tag.push(tag);
+        self.done.push(false);
+        self.route_arena.extend_from_slice(route);
+        self.route_offsets.push(self.route_arena.len() as u32);
+        id
+    }
+
+    fn route(&self, f: FlowId) -> &[ChannelId] {
+        &self.route_arena[self.route_offsets[f] as usize..self.route_offsets[f + 1] as usize]
+    }
+}
+
+/// Reused scratch for the incremental re-rate: epoch-stamped mark arrays
+/// (no clearing between recomputes) plus the component worklists. Lives
+/// on the sim so the per-event `Vec<Vec<usize>>` users allocation the old
+/// full pass paid is gone entirely.
+#[derive(Debug, Default)]
+struct RerateScratch {
+    /// current stamp; a mark array entry equals it iff set this recompute
+    epoch: u64,
+    chan_mark: Vec<u64>,
+    flow_mark: Vec<u64>,
+    /// per-flow "frozen in this water-filling pass" stamp
+    frozen_mark: Vec<u64>,
+    /// channel id → dense slot in `remaining`/`unfrozen` (valid only for
+    /// channels of the current component)
+    chan_slot: Vec<u32>,
+    comp_channels: Vec<ChannelId>,
+    comp_flows: Vec<FlowId>,
+    remaining: Vec<f64>,
+    unfrozen: Vec<usize>,
+    queue: Vec<ChannelId>,
 }
 
 /// Completed-transfer record handed to metrics.
@@ -173,12 +280,28 @@ pub struct NetSim {
     channels: Vec<Channel>,
     /// cached channel capacities (hot: read once per event)
     caps: Vec<f64>,
-    flows: Vec<Flow>,
+    flows: FlowArena,
     /// ids of flows still draining, ascending (hot: every event iterates
     /// exactly the active set instead of scanning every flow ever created
     /// — the O(total-flows) per-event scan that dominated n ≥ 10k runs;
     /// see docs/EXPERIMENTS.md §Perf/L4)
     active_ids: Vec<FlowId>,
+    /// channel → active flows crossing it, ascending, one entry per route
+    /// occurrence (a flow crossing a channel twice appears twice — the
+    /// water-filling subtraction is per occurrence)
+    channel_users: Vec<Vec<FlowId>>,
+    /// cached goodput per flow, valid whenever no dirty marks are pending;
+    /// indexed by `FlowId` (stale entries for completed flows are inert)
+    flow_rate: Vec<f64>,
+    /// channels whose capacity or user set changed since the last re-rate
+    /// (seeds for the component BFS; duplicates fine)
+    dirty_channels: Vec<ChannelId>,
+    /// every channel changed at once (a drift tick re-caps all of them)
+    all_dirty: bool,
+    /// oracle mode: full water-filling on every event (differential tests)
+    full_rerate: bool,
+    scratch: RerateScratch,
+    counters: SimCounters,
     loss: LossModel,
     /// per-flow protocol overhead fraction (headers/acks)
     protocol_overhead: f64,
@@ -197,13 +320,21 @@ pub struct NetSim {
 impl NetSim {
     pub fn new(channels: Vec<Channel>, loss: LossModel, protocol_overhead: f64, seed: u64) -> Self {
         assert!((0.0..1.0).contains(&protocol_overhead));
-        let caps = channels.iter().map(|c| c.capacity_mbps).collect();
+        let caps: Vec<f64> = channels.iter().map(|c| c.capacity_mbps).collect();
+        let nc = channels.len();
         NetSim {
             now: 0.0,
             channels,
             caps,
-            flows: Vec::new(),
+            flows: FlowArena::new(),
             active_ids: Vec::new(),
+            channel_users: vec![Vec::new(); nc],
+            flow_rate: Vec::new(),
+            dirty_channels: Vec::new(),
+            all_dirty: false,
+            full_rerate: false,
+            scratch: RerateScratch::default(),
+            counters: SimCounters::default(),
             loss,
             protocol_overhead,
             rng: Pcg64::new(seed),
@@ -215,22 +346,41 @@ impl NetSim {
         }
     }
 
+    /// Work counters accumulated since construction.
+    pub fn counters(&self) -> SimCounters {
+        self.counters
+    }
+
+    /// Force the legacy full water-filling pass on every event instead of
+    /// the incremental per-component re-rate. This is the differential-
+    /// test oracle: components are independent under max-min allocation,
+    /// so both modes produce bit-identical trajectories — only the work
+    /// counters differ (pinned by `tests/netsim_rerate.rs`).
+    pub fn set_full_rerate(&mut self, full: bool) {
+        self.full_rerate = full;
+    }
+
     /// Install scripted channel shifts (appended to any already
     /// scheduled, then kept sorted by time; ties apply in channel order).
     /// Shifts at or before the current clock apply at the next event.
     pub fn schedule_shifts(&mut self, shifts: Vec<ChannelShift>) {
         for s in &shifts {
+            assert!(s.at_s.is_finite(), "non-finite shift time in {s:?}");
             assert!(s.channel < self.channels.len(), "shift on bad channel {}", s.channel);
-            assert!(s.capacity_mbps > 0.0, "shifted capacity must stay positive");
-            assert!(s.latency_s >= 0.0 && s.at_s.is_finite(), "bad shift {s:?}");
+            assert!(
+                s.capacity_mbps.is_finite() && s.capacity_mbps > 0.0,
+                "shifted capacity must stay positive and finite: {s:?}"
+            );
+            assert!(s.latency_s.is_finite() && s.latency_s >= 0.0, "bad shift latency {s:?}");
         }
-        // drop already-applied shifts, merge the new ones, re-sort
+        // drop already-applied shifts, merge the new ones, re-sort.
+        // total_cmp keeps the sort panic-free under any float input (the
+        // asserts above reject non-finite times before they can reorder
+        // the schedule) — same hardening as the PR-5 MST edge sort.
         self.shifts.drain(..self.next_shift);
         self.next_shift = 0;
         self.shifts.extend(shifts);
-        self.shifts.sort_by(|a, b| {
-            a.at_s.partial_cmp(&b.at_s).unwrap().then(a.channel.cmp(&b.channel))
-        });
+        self.shifts.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.channel.cmp(&b.channel)));
     }
 
     /// Install seeded link-quality drift (see [`DriftProcess`]); the
@@ -274,6 +424,7 @@ impl NetSim {
             self.channels[c].capacity_mbps = cap;
             self.channels[c].latency_s = lat;
             self.caps[c] = cap;
+            self.dirty_channels.push(c);
             // a scripted shift redefines the channel's *base* quality, so
             // an installed drift process wiggles around the shifted value
             // instead of silently erasing the shift at its next tick
@@ -291,6 +442,9 @@ impl NetSim {
                     self.channels[c].latency_s = base_lat / q;
                     self.caps[c] = base_cap * q;
                 }
+                // every channel re-capped at once; shifts and drift ticks
+                // landing at the same horizon batch into one recompute
+                self.all_dirty = true;
                 d.next_at += d.process.interval_s;
             }
         }
@@ -343,11 +497,10 @@ impl NetSim {
     ///
     /// The effective bytes to move include protocol overhead and optional
     /// jitter. Congestion loss is applied *dynamically* while the flow is
-    /// draining (see [`NetSim::active_rates`]): whenever its bottleneck
-    /// channel is shared by `k` flows, the goodput drops below the fair
-    /// share by the [`LossModel`] inflation factor — so loss reacts to
-    /// congestion arriving and leaving during the transfer, symmetric in
-    /// start order.
+    /// draining: whenever its bottleneck channel is shared by `k` flows,
+    /// the goodput drops below the fair share by the [`LossModel`]
+    /// inflation factor — so loss reacts to congestion arriving and
+    /// leaving during the transfer, symmetric in start order.
     pub fn start_flow(
         &mut self,
         src: HostId,
@@ -368,38 +521,163 @@ impl NetSim {
         };
         let effective = payload_mb * (1.0 + self.protocol_overhead) * jitter;
         let id = self.flows.len();
-        // new ids are strictly increasing, so a push keeps the list sorted
+        // new ids are strictly increasing, so pushes keep both the active
+        // list and every per-channel user list sorted ascending — the
+        // order the water-filling freeze step depends on
         self.active_ids.push(id);
-        self.flows.push(Flow {
-            src,
-            dst,
-            route,
-            payload_mb,
-            remaining_mb: effective,
-            start: self.now,
-            end: f64::NAN,
-            state: FlowState::Active,
-            tag,
-        });
-        id
+        self.flow_rate.push(0.0);
+        for &c in &route {
+            self.channel_users[c].push(id);
+            self.dirty_channels.push(c);
+        }
+        self.flows.push(src, dst, &route, payload_mb, effective, self.now, tag)
     }
 
-    /// Current goodput of active flows, as (flow, rate) pairs: max-min fair
-    /// share divided by the congestion-loss inflation for the flow's
-    /// current bottleneck occupancy.
+    /// Bring the `flow_rate` cache up to date. No-op when nothing changed
+    /// since the last call — that is how same-horizon arrival/shift/drift
+    /// batches collapse into one recompute.
     ///
-    /// Perf note (docs/EXPERIMENTS.md §Perf/L3, §Perf/L4): routes are
-    /// borrowed, not cloned, channel capacities are cached, and the
-    /// active set is a maintained ascending id list — this function runs
-    /// once per simulation event, and scanning every flow ever created
-    /// here made large rounds O(total-flows²) before the list existed.
-    fn active_rates(&self) -> Vec<(FlowId, f64)> {
-        let active = &self.active_ids;
-        if active.is_empty() {
-            return Vec::new();
+    /// Incremental mode re-water-fills only the connected component(s) of
+    /// channels/flows reachable from the dirty channels over the
+    /// channel↔flow incidence. Restricting the pass is bit-exact because
+    /// max-min components are arithmetically independent: every
+    /// `remaining -= share` involves only component-local values, the
+    /// bottleneck order within a component is preserved under any global
+    /// interleaving, ties resolve by ascending channel id in both passes,
+    /// users freeze in ascending flow order in both, and the negative-
+    /// remaining clamp is idempotent. See docs/EXPERIMENTS.md §Perf/L5.
+    fn ensure_rates(&mut self) {
+        if self.full_rerate {
+            // oracle: the legacy full pass, every event, regardless of
+            // dirty state (recomputing a clean system reproduces the same
+            // values, so the trajectory cannot differ)
+            self.dirty_channels.clear();
+            self.all_dirty = false;
+            self.recompute_all_rates();
+            return;
         }
-        let routes: Vec<&[usize]> =
-            active.iter().map(|&f| self.flows[f].route.as_slice()).collect();
+        if !self.all_dirty && self.dirty_channels.is_empty() {
+            return;
+        }
+        let nc = self.channels.len();
+        let nf = self.flows.len();
+        let s = &mut self.scratch;
+        s.epoch += 1;
+        let epoch = s.epoch;
+        s.chan_mark.resize(nc, 0);
+        s.chan_slot.resize(nc, 0);
+        s.flow_mark.resize(nf, 0);
+        s.frozen_mark.resize(nf, 0);
+        s.comp_channels.clear();
+        s.comp_flows.clear();
+        s.queue.clear();
+        if self.all_dirty {
+            for (c, users) in self.channel_users.iter().enumerate() {
+                if !users.is_empty() {
+                    s.chan_mark[c] = epoch;
+                    s.queue.push(c);
+                }
+            }
+        } else {
+            for &c in &self.dirty_channels {
+                if s.chan_mark[c] != epoch {
+                    s.chan_mark[c] = epoch;
+                    s.queue.push(c);
+                }
+            }
+        }
+        self.dirty_channels.clear();
+        self.all_dirty = false;
+        // BFS over the channel↔flow incidence: everything transitively
+        // sharing a (potential) bottleneck with a dirty channel
+        while let Some(c) = s.queue.pop() {
+            s.comp_channels.push(c);
+            for &f in &self.channel_users[c] {
+                if s.flow_mark[f] != epoch {
+                    s.flow_mark[f] = epoch;
+                    s.comp_flows.push(f);
+                    for &c2 in self.flows.route(f) {
+                        if s.chan_mark[c2] != epoch {
+                            s.chan_mark[c2] = epoch;
+                            s.queue.push(c2);
+                        }
+                    }
+                }
+            }
+        }
+        if s.comp_flows.is_empty() {
+            return;
+        }
+        self.counters.rate_recomputes += 1;
+        // ascending order is load-bearing: the bottleneck tie-break and
+        // the freeze order must match the full pass's 0..n scans
+        s.comp_channels.sort_unstable();
+        s.comp_flows.sort_unstable();
+        s.remaining.clear();
+        s.unfrozen.clear();
+        for (slot, &c) in s.comp_channels.iter().enumerate() {
+            s.chan_slot[c] = slot as u32;
+            s.remaining.push(self.caps[c]);
+            s.unfrozen.push(self.channel_users[c].len());
+        }
+        // progressive filling restricted to the component
+        let mut left = s.comp_flows.len();
+        while left > 0 {
+            let mut best_share = f64::INFINITY;
+            let mut best = usize::MAX;
+            for (i, (&rem, &un)) in s.remaining.iter().zip(&s.unfrozen).enumerate() {
+                if un == 0 {
+                    continue;
+                }
+                let share = rem / un as f64;
+                if share < best_share {
+                    best_share = share;
+                    best = i;
+                }
+            }
+            assert!(best != usize::MAX, "unfrozen flows with no channel");
+            let bottleneck = s.comp_channels[best];
+            for &f in &self.channel_users[bottleneck] {
+                if s.frozen_mark[f] == epoch {
+                    continue; // duplicate occurrence already frozen
+                }
+                s.frozen_mark[f] = epoch;
+                self.flow_rate[f] = best_share;
+                left -= 1;
+                // subtraction is per route occurrence, like the full pass
+                for &c2 in self.flows.route(f) {
+                    let slot = s.chan_slot[c2] as usize;
+                    s.remaining[slot] -= best_share;
+                    s.unfrozen[slot] -= 1;
+                }
+            }
+            // guard against fp drift (idempotent, so the full pass's
+            // extra interleaved clamps cannot diverge from this one)
+            for r in s.remaining.iter_mut() {
+                if *r < 0.0 {
+                    *r = 0.0;
+                }
+            }
+        }
+        // congestion-loss inflation at current occupancy (`share / infl`,
+        // the exact op order of the full pass)
+        for &f in &s.comp_flows {
+            let bottleneck =
+                self.flows.route(f).iter().map(|&c| self.channel_users[c].len()).max().unwrap();
+            let infl = self.loss.inflation(self.flows.payload_mb[f], bottleneck);
+            self.flow_rate[f] /= infl;
+        }
+    }
+
+    /// The legacy per-event path: one full [`max_min_rates`] pass over
+    /// every active flow. Kept as the oracle the incremental re-rate is
+    /// differentially tested against.
+    fn recompute_all_rates(&mut self) {
+        if self.active_ids.is_empty() {
+            return;
+        }
+        self.counters.rate_recomputes += 1;
+        let routes: Vec<&[usize]> = self.active_ids.iter().map(|&f| self.flows.route(f)).collect();
         let rates = max_min_rates(&self.caps, &routes);
         // current per-channel occupancy for the loss model
         let mut occupancy = vec![0usize; self.channels.len()];
@@ -408,16 +686,11 @@ impl NetSim {
                 occupancy[c] += 1;
             }
         }
-        active
-            .iter()
-            .copied()
-            .zip(rates)
-            .map(|(f, r)| {
-                let bottleneck = self.flows[f].route.iter().map(|&c| occupancy[c]).max().unwrap();
-                let infl = self.loss.inflation(self.flows[f].payload_mb, bottleneck);
-                (f, r / infl)
-            })
-            .collect()
+        for (i, (&f, r)) in self.active_ids.iter().zip(rates).enumerate() {
+            let bottleneck = routes[i].iter().map(|&c| occupancy[c]).max().unwrap();
+            let infl = self.loss.inflation(self.flows.payload_mb[f], bottleneck);
+            self.flow_rate[f] = r / infl;
+        }
     }
 
     /// Advance simulated time to `t`, draining flow bytes at current rates
@@ -427,8 +700,9 @@ impl NetSim {
         assert!(t >= self.now - 1e-12, "cannot rewind time {} -> {t}", self.now);
         while self.now < t {
             self.apply_due_changes();
-            let rates = self.active_rates();
-            if rates.is_empty() {
+            self.ensure_rates();
+            self.counters.events += 1;
+            if self.active_ids.is_empty() {
                 // idle: jump change to change so drift/shifts land on time
                 match self.next_change_at() {
                     Some(ts) if ts <= t => self.now = ts,
@@ -438,11 +712,12 @@ impl NetSim {
             }
             // earliest completion under current rates
             let mut next_done: Option<(f64, FlowId)> = None;
-            for &(f, r) in &rates {
+            for &f in &self.active_ids {
+                let r = self.flow_rate[f];
                 if r <= 0.0 {
                     continue;
                 }
-                let eta = self.now + self.flows[f].remaining_mb / r;
+                let eta = self.now + self.flows.remaining_mb[f] / r;
                 if next_done.is_none() || eta < next_done.unwrap().0 {
                     next_done = Some((eta, f));
                 }
@@ -464,23 +739,25 @@ impl NetSim {
                 }
             }
             let dt = horizon - self.now;
-            for &(f, r) in &rates {
-                self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
+            for &f in &self.active_ids {
+                let r = self.flow_rate[f];
+                self.flows.remaining_mb[f] = (self.flows.remaining_mb[f] - r * dt).max(0.0);
             }
             // Force-complete the flow whose ETA set the horizon: when `now`
             // is large, `horizon - now` cancels catastrophically and can
             // leave a ~1e-12 MB remainder that never crosses the threshold,
             // livelocking the event loop (§Perf/L3 bugfix).
             if let Some(f) = expected {
-                self.flows[f].remaining_mb = 0.0;
+                self.flows.remaining_mb[f] = 0.0;
             }
             self.now = horizon;
             // complete every drained flow (ties complete together);
             // 1e-9 MB ≈ 1 byte — physically nothing left to send
-            let drained: Vec<FlowId> = rates
+            let drained: Vec<FlowId> = self
+                .active_ids
                 .iter()
-                .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
-                .map(|&(f, _)| f)
+                .copied()
+                .filter(|&f| self.flows.remaining_mb[f] <= 1e-9)
                 .collect();
             for f in drained {
                 self.complete(f);
@@ -515,15 +792,17 @@ impl NetSim {
         let before = self.completed.len();
         loop {
             self.apply_due_changes();
-            let rates = self.active_rates();
-            if rates.is_empty() {
+            self.ensure_rates();
+            if self.active_ids.is_empty() {
                 return Vec::new();
             }
+            self.counters.events += 1;
             let mut eta_min = f64::INFINITY;
             let mut f_min = usize::MAX;
-            for &(f, r) in &rates {
+            for &f in &self.active_ids {
+                let r = self.flow_rate[f];
                 if r > 0.0 {
-                    let eta = self.now + self.flows[f].remaining_mb / r;
+                    let eta = self.now + self.flows.remaining_mb[f] / r;
                     if eta < eta_min {
                         eta_min = eta;
                         f_min = f;
@@ -537,9 +816,10 @@ impl NetSim {
                 if ts < eta_min {
                     let dt = ts - self.now;
                     if dt > 0.0 {
-                        for &(f, r) in &rates {
-                            self.flows[f].remaining_mb =
-                                (self.flows[f].remaining_mb - r * dt).max(0.0);
+                        for &f in &self.active_ids {
+                            let r = self.flow_rate[f];
+                            self.flows.remaining_mb[f] =
+                                (self.flows.remaining_mb[f] - r * dt).max(0.0);
                         }
                     }
                     self.now = ts;
@@ -547,17 +827,19 @@ impl NetSim {
                 }
             }
             let dt = eta_min - self.now;
-            for &(f, r) in &rates {
-                self.flows[f].remaining_mb = (self.flows[f].remaining_mb - r * dt).max(0.0);
+            for &f in &self.active_ids {
+                let r = self.flow_rate[f];
+                self.flows.remaining_mb[f] = (self.flows.remaining_mb[f] - r * dt).max(0.0);
             }
             // see run_until_idle: force the horizon-setting flow to complete
             // so float cancellation cannot livelock the event loop
-            self.flows[f_min].remaining_mb = 0.0;
+            self.flows.remaining_mb[f_min] = 0.0;
             self.now = eta_min;
-            let drained: Vec<FlowId> = rates
+            let drained: Vec<FlowId> = self
+                .active_ids
                 .iter()
-                .filter(|&&(f, _)| self.flows[f].remaining_mb <= 1e-9)
-                .map(|&(f, _)| f)
+                .copied()
+                .filter(|&f| self.flows.remaining_mb[f] <= 1e-9)
                 .collect();
             for f in drained {
                 self.complete(f);
@@ -566,36 +848,49 @@ impl NetSim {
         }
     }
 
-    /// Next flow-completion time if the system runs undisturbed.
-    pub fn next_completion_eta(&self) -> Option<f64> {
-        let rates = self.active_rates();
+    /// Next flow-completion time if the system runs undisturbed. Takes
+    /// `&mut self` because it refreshes the lazy rate cache.
+    pub fn next_completion_eta(&mut self) -> Option<f64> {
+        self.ensure_rates();
         let mut eta = f64::INFINITY;
-        for (f, r) in rates {
+        for &f in &self.active_ids {
+            let r = self.flow_rate[f];
             if r > 0.0 {
-                eta = eta.min(self.now + self.flows[f].remaining_mb / r);
+                eta = eta.min(self.now + self.flows.remaining_mb[f] / r);
             }
         }
         eta.is_finite().then_some(eta)
     }
 
     fn complete(&mut self, f: FlowId) {
-        debug_assert_eq!(self.flows[f].state, FlowState::Active, "double-complete of flow {f}");
+        debug_assert!(!self.flows.done[f], "double-complete of flow {f}");
         if let Ok(pos) = self.active_ids.binary_search(&f) {
             self.active_ids.remove(pos);
         }
-        let latency: f64 = self.flows[f].route.iter().map(|&c| self.channels[c].latency_s).sum();
-        let flow = &mut self.flows[f];
-        flow.state = FlowState::Done;
-        // delivery = drain completion + propagation along the route
-        flow.end = self.now + latency;
+        let mut latency = 0.0;
+        let (lo, hi) =
+            (self.flows.route_offsets[f] as usize, self.flows.route_offsets[f + 1] as usize);
+        for i in lo..hi {
+            let c = self.flows.route_arena[i];
+            latency += self.channels[c].latency_s;
+            // drop one user entry per route occurrence; the remaining
+            // users' shares just changed, so the channel goes dirty
+            let users = &mut self.channel_users[c];
+            if let Ok(pos) = users.binary_search(&f) {
+                users.remove(pos);
+            }
+            self.dirty_channels.push(c);
+        }
+        self.flows.done[f] = true;
         self.completed.push(FlowRecord {
             flow: f,
-            src: flow.src,
-            dst: flow.dst,
-            payload_mb: flow.payload_mb,
-            start: flow.start,
-            end: flow.end,
-            tag: flow.tag,
+            src: self.flows.src[f],
+            dst: self.flows.dst[f],
+            payload_mb: self.flows.payload_mb[f],
+            start: self.flows.start[f],
+            // delivery = drain completion + propagation along the route
+            end: self.now + latency,
+            tag: self.flows.tag[f],
         });
     }
 }
@@ -939,6 +1234,99 @@ mod tests {
         sim.run_until_idle();
         assert_eq!(sim.active_flow_count(), 0);
         assert_eq!(sim.completed().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite shift time")]
+    fn non_finite_shift_time_is_rejected_up_front() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: f64::NAN,
+            channel: 0,
+            capacity_mbps: 1.0,
+            latency_s: 0.0,
+        }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn infinite_shift_capacity_is_rejected() {
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.schedule_shifts(vec![ChannelShift {
+            at_s: 1.0,
+            channel: 0,
+            capacity_mbps: f64::INFINITY,
+            latency_s: 0.0,
+        }]);
+    }
+
+    #[test]
+    fn incremental_rerate_matches_full_oracle_with_changes() {
+        // shifts, drift, staggered arrivals, shared bottlenecks: the
+        // component-restricted re-rate and the full per-event pass must
+        // produce one bit-identical trajectory
+        let run = |full: bool| {
+            let mut sim = two_host_net(10.0, 0.01);
+            sim.set_full_rerate(full);
+            sim.set_drift(DriftProcess { amplitude: 0.2, interval_s: 0.3 }, 11);
+            sim.schedule_shifts(vec![
+                ChannelShift { at_s: 0.4, channel: 0, capacity_mbps: 4.0, latency_s: 0.02 },
+                ChannelShift { at_s: 0.4, channel: 1, capacity_mbps: 6.0, latency_s: 0.0 },
+            ]);
+            sim.start_flow(0, 1, vec![0], 5.0, 0);
+            sim.start_flow(0, 1, vec![0], 9.0, 1);
+            sim.start_flow(1, 0, vec![1], 3.0, 2);
+            sim.advance_to(0.2);
+            sim.start_flow(0, 1, vec![0, 1], 7.0, 3); // couples both channels
+            let t = sim.run_until_idle();
+            (t, sim.take_completed(), sim.counters())
+        };
+        let (t_inc, rec_inc, c_inc) = run(false);
+        let (t_full, rec_full, c_full) = run(true);
+        assert_eq!(t_inc.to_bits(), t_full.to_bits());
+        assert_eq!(rec_inc.len(), rec_full.len());
+        for (a, b) in rec_inc.iter().zip(&rec_full) {
+            assert_eq!(a, b);
+            assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+        assert_eq!(c_inc.events, c_full.events, "same event decomposition");
+        assert!(c_inc.rate_recomputes <= c_full.rate_recomputes);
+    }
+
+    #[test]
+    fn counters_track_events_and_recomputes() {
+        let mut sim = two_host_net(10.0, 0.0);
+        assert_eq!(sim.counters(), SimCounters::default());
+        sim.start_flow(0, 1, vec![0], 5.0, 0);
+        sim.start_flow(0, 1, vec![0], 9.0, 1);
+        sim.run_until_idle();
+        let c = sim.counters();
+        assert!(c.events >= 2, "two completions = at least two events, got {c:?}");
+        assert!(c.rate_recomputes >= 1, "{c:?}");
+        let mut merged = SimCounters::default();
+        merged.merge(c);
+        merged.merge(c);
+        assert_eq!(merged.events, 2 * c.events);
+        assert_eq!(merged.since(c), c);
+    }
+
+    #[test]
+    fn disjoint_components_skip_recompute_for_untouched_flows() {
+        // flows on channel 1 never share a bottleneck with channel 0:
+        // completing channel-0 flows must not re-waterfill channel 1's
+        let mut sim = two_host_net(10.0, 0.0);
+        sim.start_flow(1, 0, vec![1], 100.0, 9); // long-lived, isolated
+        for i in 0..8 {
+            sim.start_flow(0, 1, vec![0], 1.0 + i as f64 * 0.5, i);
+        }
+        sim.run_until_idle();
+        let c = sim.counters();
+        // the full oracle would recompute once per event; the incremental
+        // path must do strictly less work here than events processed
+        assert!(
+            c.rate_recomputes < c.events,
+            "no recompute amortization: {c:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Persistent work-stealing drain pool for round barriers.
+//!
+//! The old barrier spawned one OS thread per subnet per round
+//! (`std::thread::scope` in `ShardedNetSim::drain_and_sync`): at 256
+//! subnets that is 256 thread spawns/joins per barrier, with most threads
+//! doing microseconds of work. [`DrainPool`] decouples parallelism from
+//! shard count: a fixed set of workers lives across barriers, each busy
+//! shard becomes one stealable *task*, and workers (plus the submitting
+//! thread) claim tasks from a shared index until the queue is dry.
+//!
+//! ## Determinism
+//!
+//! Within a barrier window the shards share no state — each task drains
+//! one `NetSim` to idle with purely private data. Claim order therefore
+//! cannot influence any result: every drain computes the same trajectory
+//! regardless of which worker runs it or when. Pool drains with 1, 2, or
+//! N workers are bit-identical to each other and to a sequential drain
+//! (pinned by tests here and in `tests/scale_shard.rs`).
+
+use super::NetSim;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A claimable drain task. The raw pointer erases the caller's borrow so
+/// the long-lived workers can hold it; [`DrainPool::drain`] re-establishes
+/// the safety contract (see its implementation).
+#[derive(Clone, Copy)]
+struct Task(*mut NetSim);
+
+// SAFETY: a Task is only ever dereferenced by the single thread that
+// claimed it under the pool mutex, and the NetSim it points at is Send
+// (owned Vecs, Pcg64, Arc<str> labels).
+unsafe impl Send for Task {}
+
+struct PoolState {
+    /// tasks for the current barrier window
+    tasks: Vec<Task>,
+    /// next unclaimed index into `tasks`
+    next: usize,
+    /// claimed tasks not yet finished + unclaimed tasks
+    outstanding: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers wait here for tasks (or shutdown)
+    work_cv: Condvar,
+    /// the submitter waits here for `outstanding == 0`
+    done_cv: Condvar,
+}
+
+/// A persistent pool draining batches of independent `NetSim`s.
+pub struct DrainPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    parallelism: usize,
+}
+
+impl DrainPool {
+    /// Build a pool with `parallelism` concurrent drainers. The submitting
+    /// thread participates in every drain, so `parallelism - 1` worker
+    /// threads are spawned; `parallelism <= 1` spawns none and
+    /// [`DrainPool::drain`] degenerates to a sequential loop.
+    pub fn new(parallelism: usize) -> Self {
+        let parallelism = parallelism.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                tasks: Vec::new(),
+                next: 0,
+                outstanding: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..parallelism)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        DrainPool { shared, handles, parallelism }
+    }
+
+    /// Concurrent drainers this pool runs with (including the submitter).
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Drain every sim in `sims` to idle, stealing tasks onto all workers
+    /// plus the calling thread. Blocks until the last task finishes.
+    ///
+    /// SAFETY argument for the internal pointer erasure: each `&mut
+    /// NetSim` becomes exactly one task; a task is claimed by exactly one
+    /// thread (the claim increments `next` under the mutex); and this
+    /// function does not return until `outstanding` reaches zero, so no
+    /// worker touches a sim after the caller's borrows are released.
+    /// Exclusive access per sim is therefore preserved end to end.
+    pub fn drain<'a, I>(&self, sims: I)
+    where
+        I: IntoIterator<Item = &'a mut NetSim>,
+    {
+        let tasks: Vec<Task> = sims.into_iter().map(|s| Task(s as *mut NetSim)).collect();
+        if tasks.is_empty() {
+            return;
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.outstanding == 0, "overlapping drain calls");
+            st.outstanding = tasks.len();
+            st.tasks = tasks;
+            st.next = 0;
+            self.shared.work_cv.notify_all();
+        }
+        // the submitter steals too: a 1-wide pool is just this loop
+        loop {
+            let task = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next < st.tasks.len() {
+                    let t = st.tasks[st.next];
+                    st.next += 1;
+                    Some(t)
+                } else {
+                    None
+                }
+            };
+            match task {
+                // SAFETY: see above — this thread is the sole claimant
+                Some(t) => {
+                    unsafe { (*t.0).run_until_idle() };
+                    finish_one(&self.shared);
+                }
+                None => break,
+            }
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while st.outstanding > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.tasks.clear();
+    }
+}
+
+impl Drop for DrainPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.next < st.tasks.len() {
+                    let t = st.tasks[st.next];
+                    st.next += 1;
+                    break t;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: sole claimant; see DrainPool::drain
+        unsafe { (*task.0).run_until_idle() };
+        finish_one(shared);
+    }
+}
+
+fn finish_one(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    st.outstanding -= 1;
+    if st.outstanding == 0 {
+        shared.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{Channel, LossModel};
+
+    fn busy_sims(n: usize) -> Vec<NetSim> {
+        (0..n)
+            .map(|i| {
+                let chans = vec![
+                    Channel { capacity_mbps: 8.0 + i as f64, latency_s: 0.01, label: "a".into() },
+                    Channel { capacity_mbps: 3.0, latency_s: 0.0, label: "b".into() },
+                ];
+                let mut sim = NetSim::new(chans, LossModel::default(), 0.02, 7 + i as u64);
+                for k in 0..5 {
+                    sim.start_flow(0, 1, vec![0], 2.0 + k as f64, k as u64);
+                    sim.start_flow(1, 0, vec![1], 1.5, (10 + k) as u64);
+                }
+                sim
+            })
+            .collect()
+    }
+
+    fn fingerprint(sims: &[NetSim]) -> Vec<(u64, usize)> {
+        sims.iter().map(|s| (s.now().to_bits(), s.completed().len())).collect()
+    }
+
+    #[test]
+    fn pool_drain_matches_sequential_bit_for_bit() {
+        let mut seq = busy_sims(7);
+        for s in seq.iter_mut() {
+            s.run_until_idle();
+        }
+        let pool = DrainPool::new(4);
+        let mut par = busy_sims(7);
+        pool.drain(par.iter_mut());
+        assert_eq!(fingerprint(&seq), fingerprint(&par));
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.completed(), b.completed());
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let base = {
+            let mut sims = busy_sims(9);
+            DrainPool::new(1).drain(sims.iter_mut());
+            fingerprint(&sims)
+        };
+        for workers in [2, 3, 16] {
+            let mut sims = busy_sims(9);
+            DrainPool::new(workers).drain(sims.iter_mut());
+            assert_eq!(fingerprint(&sims), base, "{workers} workers diverged");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_barriers() {
+        let pool = DrainPool::new(3);
+        let mut sims = busy_sims(5);
+        pool.drain(sims.iter_mut());
+        assert!(sims.iter().all(|s| s.active_flow_count() == 0));
+        // second barrier window: launch more flows, drain again
+        for (i, s) in sims.iter_mut().enumerate() {
+            s.start_flow(0, 1, vec![0], 4.0, 100 + i as u64);
+        }
+        pool.drain(sims.iter_mut().filter(|s| s.active_flow_count() > 0));
+        assert!(sims.iter().all(|s| s.active_flow_count() == 0));
+        // an empty batch is a no-op
+        pool.drain(std::iter::empty());
+    }
+
+    #[test]
+    fn tasks_exceeding_workers_all_complete() {
+        let pool = DrainPool::new(2);
+        let mut sims = busy_sims(40);
+        pool.drain(sims.iter_mut());
+        assert!(sims.iter().all(|s| s.active_flow_count() == 0));
+    }
+}

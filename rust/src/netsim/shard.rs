@@ -16,10 +16,13 @@
 //!
 //! Shards advance independently between **round barriers** and are
 //! re-synchronized at each barrier ([`ShardedNetSim::drain_and_sync`]):
-//! every shard drains to idle (optionally on its own thread), then all
-//! clocks jump to the latest shard's time. Within a barrier window the
-//! shards share no state, so the result is bit-for-bit deterministic
-//! regardless of thread scheduling — parallel and sequential drains of
+//! every busy shard — the backbone included, since at large subnet
+//! counts it carries *all* gateway traffic and dominates the barrier —
+//! becomes one stealable task on a persistent [`DrainPool`] whose worker
+//! count is decoupled from the subnet count, then all clocks jump to the
+//! latest shard's time. Within a barrier window the shards share no
+//! state, so the result is bit-for-bit deterministic regardless of
+//! thread scheduling or pool width — parallel and sequential drains of
 //! the same sharded simulator are identical.
 //!
 //! **Fidelity contract.** The decomposition decouples one real coupling:
@@ -31,8 +34,9 @@
 //! holds in every mode: each launched payload drains exactly once in
 //! exactly one shard.
 
+use super::pool::DrainPool;
 use super::testbed::Testbed;
-use super::{ChannelId, FlowRecord, HostId, NetSim};
+use super::{ChannelId, FlowRecord, HostId, NetSim, SimCounters};
 
 /// Derive a shard's RNG stream from the experiment seed (tag 0 = the
 /// backbone shard, 1 + subnet index = local shards; the single-shard mode
@@ -63,6 +67,12 @@ pub struct ShardedNetSim {
     subnets: usize,
     /// Payload launched so far (MB) — the byte-conservation ledger.
     launched_mb: f64,
+    /// Persistent barrier pool, built lazily on the first parallel drain
+    /// and reused across barriers (rebuilt only when the requested width
+    /// changes). Pure scheduling state — never touches results.
+    pool: Option<DrainPool>,
+    /// Requested pool width; 0 = auto (`available_parallelism`).
+    drain_workers: usize,
 }
 
 impl ShardedNetSim {
@@ -103,6 +113,8 @@ impl ShardedNetSim {
                 router_links,
                 subnets: s,
                 launched_mb: 0.0,
+                pool: None,
+                drain_workers: 0,
             };
         }
 
@@ -147,6 +159,51 @@ impl ShardedNetSim {
             router_links,
             subnets: s,
             launched_mb: 0.0,
+            pool: None,
+            drain_workers: 0,
+        }
+    }
+
+    /// Pin the barrier pool's parallelism (concurrent drainers, counting
+    /// the calling thread); 0 restores the default
+    /// (`std::thread::available_parallelism`). A pure scheduling knob:
+    /// drains are bit-identical for every width (shards share no state
+    /// within a barrier window), pinned by `tests/scale_shard.rs`.
+    pub fn set_drain_workers(&mut self, workers: usize) {
+        if self.drain_workers != workers {
+            self.drain_workers = workers;
+            self.pool = None;
+        }
+    }
+
+    fn drain_parallelism(&self) -> usize {
+        if self.drain_workers > 0 {
+            self.drain_workers
+        } else {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        }
+    }
+
+    /// Aggregate work counters across every shard (local + backbone).
+    pub fn counters(&self) -> SimCounters {
+        let mut c = SimCounters::default();
+        for s in &self.shards {
+            c.merge(s.counters());
+        }
+        if let Some(bb) = &self.backbone {
+            c.merge(bb.counters());
+        }
+        c
+    }
+
+    /// Propagate the full-water-filling oracle mode (differential tests)
+    /// to every shard; see `NetSim::set_full_rerate`.
+    pub fn set_full_rerate(&mut self, full: bool) {
+        for s in &mut self.shards {
+            s.set_full_rerate(full);
+        }
+        if let Some(bb) = &mut self.backbone {
+            bb.set_full_rerate(full);
         }
     }
 
@@ -220,27 +277,27 @@ impl ShardedNetSim {
         }
     }
 
-    /// Round barrier: drain every shard to idle — each on its own thread
-    /// when `parallel` — then advance all clocks to the latest shard's
-    /// time. Returns the barrier time. Shards share no state inside the
-    /// window, so parallel and sequential drains are bit-identical.
+    /// Round barrier: drain every shard to idle — as stealable tasks on
+    /// the persistent pool when `parallel` — then advance all clocks to
+    /// the latest shard's time. Returns the barrier time. Shards share no
+    /// state inside the window, so parallel and sequential drains are
+    /// bit-identical, whatever the pool width.
     pub fn drain_and_sync(&mut self, parallel: bool) -> f64 {
-        if parallel && self.shards.len() > 1 {
-            let shards = &mut self.shards;
-            let backbone = &mut self.backbone;
-            std::thread::scope(|scope| {
-                for sim in shards.iter_mut() {
-                    if sim.active_flow_count() > 0 {
-                        scope.spawn(move || {
-                            sim.run_until_idle();
-                        });
-                    }
-                }
-                // the (tiny) backbone drains on the barrier thread
-                if let Some(bb) = backbone.as_mut() {
-                    bb.run_until_idle();
-                }
-            });
+        let width = self.drain_parallelism();
+        if parallel && self.shard_count() > 1 && width > 1 {
+            if self.pool.is_none() {
+                self.pool = Some(DrainPool::new(width));
+            }
+            let pool = self.pool.as_ref().expect("pool built above");
+            // every busy queue is one task — the backbone too: it carries
+            // all gateway traffic and dominates the barrier at large
+            // subnet counts, so it must not serialize behind the others
+            pool.drain(
+                self.shards
+                    .iter_mut()
+                    .chain(self.backbone.as_mut())
+                    .filter(|s| s.active_flow_count() > 0),
+            );
         } else {
             for sim in self.shards.iter_mut() {
                 sim.run_until_idle();

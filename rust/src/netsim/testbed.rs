@@ -53,13 +53,13 @@ impl Testbed {
             channels.push(Channel {
                 capacity_mbps: cfg.local_link_mbps,
                 latency_s: jittered(cfg.local_latency_ms) / 1e3,
-                label: format!("dev{d}->r{}", subnet_of[d]),
+                label: format!("dev{d}->r{}", subnet_of[d]).into(),
             });
             let down = channels.len();
             channels.push(Channel {
                 capacity_mbps: cfg.local_link_mbps,
                 latency_s: jittered(cfg.local_latency_ms) / 1e3,
-                label: format!("r{}->dev{d}", subnet_of[d]),
+                label: format!("r{}->dev{d}", subnet_of[d]).into(),
             });
             device_links.push((up, down));
         }
@@ -73,7 +73,7 @@ impl Testbed {
                 channels.push(Channel {
                     capacity_mbps: cfg.backbone_mbps,
                     latency_s: jittered(cfg.backbone_latency_ms) / 1e3,
-                    label: format!("r{a}->r{b}"),
+                    label: format!("r{a}->r{b}").into(),
                 });
                 router_links[a * s + b] = Some(id);
             }

@@ -383,6 +383,33 @@ fn compress_none_config_is_bit_identical_across_topologies_jitter_failures() {
 }
 
 #[test]
+fn full_rerate_oracle_matches_incremental_through_the_engine() {
+    // the incremental re-rate's engine-level anchor: a SimDriver whose
+    // simulator is forced into full-water-filling oracle mode must run
+    // the identical round float for float — only the work counters in
+    // RoundMetrics::sim may differ (the oracle recomputes at least as
+    // often). Complements the simulator-level differential suite in
+    // tests/netsim_rerate.rs.
+    for kind in TopologyKind::ALL {
+        let session = GossipSession::new(&quiet_cfg(kind)).unwrap();
+        let base = session.run_mosgu_round(14.0, 3, 0.0);
+        let mut driver = SimDriver::new(session.testbed(), 3);
+        driver.sim_mut().set_full_rerate(true);
+        let mut engine = RoundEngine::new(&mut driver, session.schedule());
+        let mut state = GossipState::new(session.tree().clone(), 0);
+        let m = engine.run_round(&mut state, RoundOptions::reliable(14.0, 144), |_, _| {});
+        assert_rounds_bit_identical(&m, &base, &format!("{kind:?} oracle"));
+        assert_eq!(m.sim.events, base.sim.events, "{kind:?}: event walks diverged");
+        assert!(
+            m.sim.rate_recomputes >= base.sim.rate_recomputes,
+            "{kind:?}: oracle must recompute at least as often ({} vs {})",
+            m.sim.rate_recomputes,
+            base.sim.rate_recomputes
+        );
+    }
+}
+
+#[test]
 fn sim_rounds_are_byte_identical_for_fixed_seed() {
     let session = GossipSession::new(&quiet_cfg(TopologyKind::WattsStrogatz)).unwrap();
     let a = session.run_mosgu_round(14.0, 42, 0.1);

@@ -150,7 +150,7 @@ fn byte_conservation_and_monotone_clock_under_capacity_schedules() {
             .map(|(i, &cap)| Channel {
                 capacity_mbps: cap,
                 latency_s: rng.gen_f64_range(0.0, 0.02),
-                label: format!("c{i}"),
+                label: format!("c{i}").into(),
             })
             .collect();
         let mut sim =

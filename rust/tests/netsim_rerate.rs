@@ -1,0 +1,255 @@
+//! Differential tests for the incremental per-component re-rate
+//! (§Perf/L5): the lazy, dirty-component water-filling must reproduce
+//! the legacy full recomputation — re-enabled via
+//! `NetSim::set_full_rerate(true)` as the oracle — **bit for bit**
+//! across random topologies with duplicate-hop routes, staggered
+//! arrivals, same-horizon shift batches, and link drift, while never
+//! doing more rate-recompute work than the oracle.
+
+use mosgu::config::ExperimentConfig;
+use mosgu::netsim::shard::ShardedNetSim;
+use mosgu::netsim::testbed::Testbed;
+use mosgu::netsim::{
+    Channel, ChannelShift, DriftProcess, FlowRecord, LossModel, NetSim, SimCounters,
+};
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
+
+/// A fully pre-drawn workload, so the incremental and oracle runs replay
+/// the exact same script (all randomness is spent before either sim runs).
+struct Spec {
+    chans: Vec<Channel>,
+    loss: LossModel,
+    overhead: f64,
+    seed: u64,
+    drift: Option<(DriftProcess, u64)>,
+    shifts: Vec<ChannelShift>,
+    /// arrival waves: advance the clock to `.0` (re-rating mid-drain),
+    /// then launch the `.1` flows
+    waves: Vec<(f64, Vec<(Vec<usize>, f64, u64)>)>,
+}
+
+fn random_spec(rng: &mut Pcg64) -> Spec {
+    let nc = 2 + rng.gen_range(12);
+    let chans: Vec<Channel> = (0..nc)
+        .map(|i| Channel {
+            capacity_mbps: rng.gen_f64_range(1.0, 60.0),
+            latency_s: rng.gen_f64_range(0.0, 0.03),
+            label: format!("c{i}").into(),
+        })
+        .collect();
+    // half the cases exercise loss inflation: bottleneck occupancy feeds
+    // the inflation factor, which the incremental path must reproduce
+    let loss = if rng.gen_bool(0.5) {
+        LossModel::default()
+    } else {
+        LossModel { gain: 0.0, size_scale_mb: 1.0 }
+    };
+    let drift = if rng.gen_bool(0.4) {
+        Some((
+            DriftProcess {
+                amplitude: rng.gen_f64_range(0.05, 0.4),
+                interval_s: rng.gen_f64_range(0.1, 0.8),
+            },
+            rng.next_u64(),
+        ))
+    } else {
+        None
+    };
+    // shift batches: several channels shifting at the *same* instant must
+    // collapse into one incremental recompute, not one per shift
+    let mut shifts = Vec::new();
+    for _ in 0..rng.gen_range(3) {
+        let at = rng.gen_f64_range(0.1, 3.0);
+        for _ in 0..(1 + rng.gen_range(3)) {
+            shifts.push(ChannelShift {
+                at_s: at,
+                channel: rng.gen_range(nc),
+                capacity_mbps: rng.gen_f64_range(1.0, 60.0),
+                latency_s: rng.gen_f64_range(0.0, 0.03),
+            });
+        }
+    }
+    let mut waves = Vec::new();
+    let mut t = 0.0;
+    let mut tag = 0u64;
+    for w in 0..(1 + rng.gen_range(4)) {
+        if w > 0 {
+            t += rng.gen_f64_range(0.05, 1.0);
+        }
+        let flows = (0..(1 + rng.gen_range(12)))
+            .map(|_| {
+                // duplicate hops allowed: a route may cross a channel twice
+                let hops = 1 + rng.gen_range(4);
+                let route: Vec<usize> = (0..hops).map(|_| rng.gen_range(nc)).collect();
+                tag += 1;
+                (route, rng.gen_f64_range(0.2, 20.0), tag)
+            })
+            .collect();
+        waves.push((t, flows));
+    }
+    Spec {
+        chans,
+        loss,
+        overhead: rng.gen_f64_range(0.0, 0.2),
+        seed: rng.next_u64(),
+        drift,
+        shifts,
+        waves,
+    }
+}
+
+/// Replay `spec` in either mode; returns (final clock, records, counters,
+/// payload MB launched).
+fn run(spec: &Spec, full: bool) -> (f64, Vec<FlowRecord>, SimCounters, f64) {
+    let mut sim = NetSim::new(spec.chans.clone(), spec.loss, spec.overhead, spec.seed);
+    sim.set_full_rerate(full);
+    if let Some((p, seed)) = spec.drift {
+        sim.set_drift(p, seed);
+    }
+    if !spec.shifts.is_empty() {
+        sim.schedule_shifts(spec.shifts.clone());
+    }
+    let mut launched = 0.0;
+    for (at, flows) in &spec.waves {
+        sim.advance_to(*at);
+        for (route, mb, tag) in flows {
+            sim.start_flow(0, 1, route.clone(), *mb, *tag);
+            launched += *mb;
+        }
+    }
+    let end = sim.run_until_idle();
+    let recs = sim.take_completed();
+    (end, recs, sim.counters(), launched)
+}
+
+#[test]
+fn incremental_rerate_is_bit_identical_to_full_oracle() {
+    check("incremental == oracle", 150, |rng| {
+        let spec = random_spec(rng);
+        let (end_i, rec_i, c_i, launched) = run(&spec, false);
+        let (end_f, rec_f, c_f, _) = run(&spec, true);
+        prop_assert_eq!(end_i.to_bits(), end_f.to_bits());
+        prop_assert_eq!(rec_i.len(), rec_f.len());
+        for (a, b) in rec_i.iter().zip(&rec_f) {
+            prop_assert_eq!(a, b);
+            prop_assert_eq!(a.start.to_bits(), b.start.to_bits());
+            prop_assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+        // byte conservation: every launched payload completes exactly once
+        let nf: usize = spec.waves.iter().map(|(_, fl)| fl.len()).sum();
+        prop_assert_eq!(rec_i.len(), nf);
+        let delivered: f64 = rec_i.iter().map(|r| r.payload_mb).sum();
+        prop_assert!(
+            (delivered - launched).abs() < 1e-6 * launched.max(1.0),
+            "bytes not conserved: launched {launched}, delivered {delivered}"
+        );
+        // same events walked; the incremental path never recomputes more
+        prop_assert_eq!(c_i.events, c_f.events);
+        prop_assert!(
+            c_i.rate_recomputes <= c_f.rate_recomputes,
+            "incremental did more work: {} vs oracle {}",
+            c_i.rate_recomputes,
+            c_f.rate_recomputes
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn event_by_event_trajectory_matches_oracle_under_shifts_and_drift() {
+    // step both sims one completion at a time, comparing the clock at
+    // every event — catches transient divergences an end-state
+    // comparison could mask (e.g. rates wrong between two completions)
+    let mk = |full: bool| {
+        let chans: Vec<Channel> = (0..4)
+            .map(|i| Channel {
+                capacity_mbps: 6.0 + 3.0 * i as f64,
+                latency_s: 0.005 * i as f64,
+                label: format!("c{i}").into(),
+            })
+            .collect();
+        let mut sim = NetSim::new(chans, LossModel::default(), 0.05, 11);
+        sim.set_full_rerate(full);
+        sim.set_drift(DriftProcess { amplitude: 0.25, interval_s: 0.3 }, 21);
+        sim.schedule_shifts(vec![
+            // two shifts sharing one horizon + a later one
+            ChannelShift { at_s: 0.4, channel: 0, capacity_mbps: 2.0, latency_s: 0.01 },
+            ChannelShift { at_s: 0.4, channel: 2, capacity_mbps: 30.0, latency_s: 0.0 },
+            ChannelShift { at_s: 1.1, channel: 1, capacity_mbps: 4.5, latency_s: 0.02 },
+        ]);
+        for i in 0..10u64 {
+            let route = vec![i as usize % 4, (i as usize + 1) % 4];
+            sim.start_flow(0, 1, route, 1.0 + 0.7 * i as f64, i);
+        }
+        sim
+    };
+    let mut inc = mk(false);
+    let mut ora = mk(true);
+    loop {
+        let a = inc.run_next_completion();
+        let b = ora.run_next_completion();
+        assert_eq!(a, b, "completion batch diverged");
+        assert_eq!(inc.now().to_bits(), ora.now().to_bits(), "clock diverged mid-drain");
+        if a.is_empty() {
+            break;
+        }
+    }
+    assert_eq!(inc.counters().events, ora.counters().events);
+    assert!(inc.counters().rate_recomputes <= ora.counters().rate_recomputes);
+}
+
+#[test]
+fn disjoint_components_do_strictly_less_recompute_work() {
+    // two independent channels, staggered distinct-size flows on each: a
+    // completion on one channel must not re-rate the other, so the
+    // incremental pass count is strictly below the oracle's
+    let mk = |full: bool| {
+        let chans = vec![
+            Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "a".into() },
+            Channel { capacity_mbps: 10.0, latency_s: 0.0, label: "b".into() },
+        ];
+        let mut sim = NetSim::new(chans, LossModel { gain: 0.0, size_scale_mb: 1.0 }, 0.0, 5);
+        sim.set_full_rerate(full);
+        for i in 0..6u64 {
+            sim.start_flow(0, 1, vec![(i % 2) as usize], 1.0 + i as f64, i);
+        }
+        sim.run_until_idle();
+        sim.counters()
+    };
+    let inc = mk(false);
+    let ora = mk(true);
+    assert_eq!(inc.events, ora.events);
+    assert!(
+        inc.rate_recomputes < ora.rate_recomputes,
+        "disjoint completions must skip the untouched component: {} vs {}",
+        inc.rate_recomputes,
+        ora.rate_recomputes
+    );
+}
+
+#[test]
+fn sharded_sim_oracle_mode_matches_incremental() {
+    // ShardedNetSim::set_full_rerate propagates to every shard (backbone
+    // included); the pooled parallel drain stays bit-identical either way
+    let cfg = ExperimentConfig { nodes: 16, subnets: 4, latency_jitter: 0.0, ..Default::default() };
+    let tb = Testbed::new(&cfg);
+    let run = |full: bool| {
+        let mut sim = ShardedNetSim::sharded(&tb, 3);
+        sim.set_full_rerate(full);
+        for d in 0..16 {
+            sim.start_flow(d, (d + 5) % 16, 6.0, d as u64); // mostly cross-subnet
+            sim.start_flow(d, d ^ 1, 2.5, (100 + d) as u64); // intra pairs
+        }
+        let t = sim.drain_and_sync(true);
+        (t, sim.take_completed(), sim.counters())
+    };
+    let (t_i, r_i, c_i) = run(false);
+    let (t_f, r_f, c_f) = run(true);
+    assert_eq!(t_i.to_bits(), t_f.to_bits());
+    assert_eq!(r_i, r_f);
+    assert_eq!(c_i.events, c_f.events);
+    assert!(c_i.rate_recomputes <= c_f.rate_recomputes);
+    assert!(c_i.events > 0 && c_i.rate_recomputes > 0, "counters must register work");
+}
