@@ -35,12 +35,13 @@ fn main() {
     let direct = s.run_broadcast_round(14.0, 1);
     let flood = s.run_flood_round(14.0, 1);
     println!(
-        "direct push: {} transfers, {:.1} s total;  flood: {} transfers, {:.1} s total ({}x more bytes)",
+        "direct push: {} transfers, {:.1} s total;  flood: {} transfers, {:.1} s total ({:.2}x more bytes)",
         direct.transfer_count(),
         direct.total_time_s,
         flood.transfer_count(),
         flood.total_time_s,
-        flood.transfer_count() / direct.transfer_count().max(1)
+        // float ratio: integer division here used to floor 1.9x to 1x
+        flood.transfer_count() as f64 / direct.transfer_count().max(1) as f64
     );
 
     section("failure injection: retransmission overhead (MOSGU, v2)");

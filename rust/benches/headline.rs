@@ -1,22 +1,65 @@
 //! The abstract's headline claim: "reducing bandwidth and transfer time by
 //! up to circa 8 and 4.4 times, respectively, compared to naive flooding
 //! broadcasting methods." Computes the max improvement ratios over the
-//! full grid and per size category.
+//! full grid and per size category, emitting one `JSON {...}` line per
+//! grid cell plus a `headline` summary line for the bench trajectory; CI
+//! uploads them as the `headline` artifact.
+//!
+//! ```bash
+//! cargo bench --bench headline             # full 4x7 grid, 5 repeats
+//! cargo bench --bench headline -- --smoke  # CI subset: v3s + b3, 1 repeat
+//! ```
 
 use mosgu::bench::section;
 use mosgu::bench::tables::{all_models, headline, run_grid};
 use mosgu::config::ExperimentConfig;
+use mosgu::dfl::models::by_code;
 use mosgu::graph::topology::TopologyKind;
 
 fn main() {
-    let cfg = ExperimentConfig::default();
-    section("headline improvement factors (max over 4 topologies x 7 models)");
-    let cells = run_grid(&cfg, &TopologyKind::ALL, &all_models(), |s| eprintln!("  {s}"))
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke {
+        ExperimentConfig { repeats: 1, ..Default::default() }
+    } else {
+        ExperimentConfig::default()
+    };
+    let models = if smoke {
+        vec![by_code("v3s").unwrap(), by_code("b3").unwrap()]
+    } else {
+        all_models()
+    };
+    section(&format!(
+        "headline improvement factors (max over 4 topologies x {} models, {} mode)",
+        models.len(),
+        if smoke { "smoke" } else { "full" }
+    ));
+    let cells = run_grid(&cfg, &TopologyKind::ALL, &models, |s| eprintln!("  {s}"))
         .expect("grid");
+    for c in &cells {
+        println!(
+            "JSON {{\"bench\":\"headline\",\"topology\":\"{}\",\"model\":\"{}\",\
+             \"broadcast_bw_mbps\":{:.4},\"proposed_bw_mbps\":{:.4},\
+             \"broadcast_total_s\":{:.6},\"proposed_exchange_s\":{:.6},\
+             \"bw_ratio\":{:.4},\"round_ratio\":{:.4}}}",
+            c.topology,
+            c.model,
+            c.broadcast.bandwidth.mean(),
+            c.proposed.bandwidth.mean(),
+            c.broadcast.total.mean(),
+            c.proposed.exchange.mean(),
+            c.proposed.bandwidth.mean() / c.broadcast.bandwidth.mean(),
+            c.broadcast.total.mean() / c.proposed.exchange.mean(),
+        );
+    }
     let h = headline(&cells);
     println!("bandwidth improvement:     {:.2}x   (paper: up to ~8x)", h.bandwidth_improvement);
     println!("transfer-time improvement: {:.2}x   (paper Table IV spread: 2.6-7.4x)", h.transfer_improvement);
     println!("round-time improvement:    {:.2}x   (paper: up to 4.4x)", h.round_improvement);
+    println!(
+        "JSON {{\"bench\":\"headline\",\"summary\":true,\"bandwidth_improvement\":{:.4},\
+         \"transfer_improvement\":{:.4},\"round_improvement\":{:.4}}}",
+        h.bandwidth_improvement, h.transfer_improvement, h.round_improvement
+    );
 
     section("paper §V-A observations checked");
     // small models gain least in bandwidth terms; large gain most
@@ -32,4 +75,12 @@ fn main() {
     let large = avg_bw_ratio("b3");
     println!("bandwidth ratio v3s: {small:.2}x, b3: {large:.2}x -> large models gain {}",
         if large > small { "MORE (matches paper)" } else { "LESS (MISMATCH)" });
+
+    // the abstract's direction is the gate: the planner must actually
+    // improve on flooding broadcast somewhere in the grid
+    let ok = h.bandwidth_improvement > 1.0 && h.round_improvement > 1.0;
+    println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+    if !ok {
+        std::process::exit(1);
+    }
 }

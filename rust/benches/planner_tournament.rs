@@ -1,0 +1,175 @@
+//! Planner tournament: flooding, random peer-sampling gossip, the paper's
+//! single-MST planner, and multi-tree (`--trees k`) striped dissemination
+//! head to head across the paper topologies × Table II model sizes. Emits
+//! one `JSON {...}` line per (topology, model, planner) cell for the bench
+//! trajectory; CI uploads them as the `planner-tournament` artifact.
+//!
+//! Two gates (the PR's acceptance bar):
+//!
+//! * the single-MST planner moves 4–16× fewer wire bytes than flooding on
+//!   the complete overlay at n = 10 (the paper's headline band — §V
+//!   reports up to ~8×);
+//! * k ≥ 2 edge-disjoint trees strictly shorten the exchange phase vs the
+//!   single MST on at least one fat (complete) topology with the large
+//!   b3 = 48 MB model at n ≥ 12.
+//!
+//! ```bash
+//! cargo bench --bench planner_tournament             # full grid
+//! cargo bench --bench planner_tournament -- --smoke  # CI subset
+//! ```
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::broadcast::{self, BroadcastMode};
+use mosgu::coordinator::session::GossipSession;
+use mosgu::graph::topology::TopologyKind;
+use mosgu::metrics::RoundMetrics;
+
+const SEED: u64 = 1;
+
+fn base_cfg(kind: TopologyKind, n: usize, trees: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        topology: kind,
+        nodes: n,
+        trees,
+        repeats: 1,
+        latency_jitter: 0.0,
+        ..Default::default()
+    }
+}
+
+fn emit(kind: TopologyKind, model: &str, n: usize, planner: &str, lanes: usize, m: &RoundMetrics) {
+    println!(
+        "{:<16} {:>5} {:>4} {:>10} {:>5} {:>9} {:>10.1} {:>11.3} {:>11.3}",
+        kind.name(),
+        model,
+        n,
+        planner,
+        lanes,
+        m.transfer_count(),
+        m.total_payload_mb(),
+        m.exchange_time_s,
+        m.total_time_s
+    );
+    println!(
+        "JSON {{\"bench\":\"planner_tournament\",\"topology\":\"{}\",\"model\":\"{}\",\
+         \"n\":{},\"planner\":\"{}\",\"lanes\":{},\"transfers\":{},\"wire_mb\":{:.4},\
+         \"exchange_s\":{:.6},\"total_s\":{:.6},\"bw_mbps\":{:.4}}}",
+        kind.name(),
+        model,
+        n,
+        planner,
+        lanes,
+        m.transfer_count(),
+        m.total_payload_mb(),
+        m.exchange_time_s,
+        m.total_time_s,
+        m.bandwidth_mbps()
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let topologies: &[TopologyKind] =
+        if smoke { &[TopologyKind::Complete] } else { &TopologyKind::ALL };
+    let models: &[(&str, f64)] =
+        if smoke { &[("b3", 48.0)] } else { &[("v3s", 11.6), ("b3", 48.0)] };
+
+    section(&format!(
+        "planner tournament: flooding vs gossip vs MST vs k-tree ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:<16} {:>5} {:>4} {:>10} {:>5} {:>9} {:>10} {:>11} {:>11}",
+        "topology", "model", "n", "planner", "lanes", "transfers", "wire_mb", "exchange_s", "total_s"
+    );
+
+    // gate A inputs, captured from the Complete/b3 cell of the grid
+    let mut flood_vs_mst: Option<(f64, f64)> = None;
+    for &kind in topologies {
+        let single = GossipSession::new(&base_cfg(kind, 10, 1)).expect("session");
+        let multi = GossipSession::new(&base_cfg(kind, 10, 2)).expect("session");
+        let lanes = 1 + multi.extra_lanes().len();
+        for &(model, mb) in models {
+            let flood = single.run_flood_round(mb, SEED);
+            let sampled = broadcast::run_broadcast_round(
+                single.testbed(),
+                single.structure(),
+                mb,
+                BroadcastMode::RandomGossip { fanout: 3 },
+                SEED,
+            );
+            let push = single.run_broadcast_round(mb, SEED);
+            let mst = single.run_mosgu_round(mb, SEED, 0.0);
+            let ktree = multi.run_mosgu_round(mb, SEED, 0.0);
+            emit(kind, model, 10, "flood", 0, &flood);
+            emit(kind, model, 10, "gossip3", 0, &sampled);
+            emit(kind, model, 10, "push", 0, &push);
+            emit(kind, model, 10, "mst", 1, &mst);
+            emit(kind, model, 10, "ktree2", lanes, &ktree);
+            if kind == TopologyKind::Complete && model == "b3" {
+                flood_vs_mst = Some((flood.total_payload_mb(), mst.total_payload_mb()));
+            }
+        }
+    }
+
+    section("gate A: flooding vs single-MST wire bytes (Complete, n=10, b3)");
+    let (flood_mb, mst_mb) = flood_vs_mst.expect("grid always covers Complete/b3");
+    let ratio = flood_mb / mst_mb;
+    let gate_a = (4.0..=16.0).contains(&ratio);
+    println!(
+        "  flooding {flood_mb:.0} MB vs MST {mst_mb:.0} MB -> {ratio:.2}x \
+         (paper band: 4-16x, headline ~8x) -> {}",
+        if gate_a { "pass" } else { "FAIL" }
+    );
+    println!(
+        "JSON {{\"bench\":\"planner_tournament\",\"gate\":\"flood_vs_mst\",\
+         \"flood_mb\":{flood_mb:.4},\"mst_mb\":{mst_mb:.4},\"ratio\":{ratio:.4},\
+         \"pass\":{gate_a}}}"
+    );
+
+    section("gate B: k-tree vs single MST exchange time (Complete, b3 = 48 MB)");
+    let sizes: &[usize] = if smoke { &[12, 16] } else { &[12, 16, 24] };
+    let mut best: Option<(usize, usize, f64)> = None; // (n, k, speedup)
+    for &n in sizes {
+        let single = GossipSession::new(&base_cfg(TopologyKind::Complete, n, 1)).expect("session");
+        let mst = single.run_mosgu_round(48.0, SEED, 0.0);
+        for k in [2usize, 3] {
+            let multi =
+                GossipSession::new(&base_cfg(TopologyKind::Complete, n, k)).expect("session");
+            let lanes = 1 + multi.extra_lanes().len();
+            if lanes == 1 {
+                println!("  n={n} k={k}: no extra edge-disjoint lane found, skipping");
+                continue;
+            }
+            let ktree = multi.run_mosgu_round(48.0, SEED, 0.0);
+            let speedup = mst.exchange_time_s / ktree.exchange_time_s;
+            println!(
+                "  n={n} k={k} ({lanes} lanes): exchange {:.3} s -> {:.3} s ({speedup:.2}x)",
+                mst.exchange_time_s, ktree.exchange_time_s
+            );
+            println!(
+                "JSON {{\"bench\":\"planner_tournament\",\"gate\":\"ktree_vs_mst\",\"n\":{n},\
+                 \"k\":{k},\"lanes\":{lanes},\"mst_exchange_s\":{:.6},\
+                 \"ktree_exchange_s\":{:.6},\"speedup\":{speedup:.4}}}",
+                mst.exchange_time_s, ktree.exchange_time_s
+            );
+            if speedup > best.map_or(0.0, |(_, _, s)| s) {
+                best = Some((n, k, speedup));
+            }
+        }
+    }
+    let gate_b = best.is_some_and(|(_, _, s)| s > 1.0);
+    match best {
+        Some((n, k, s)) => println!(
+            "  best: {s:.2}x at n={n}, k={k} -> {}",
+            if gate_b { "pass (multi-tree strictly beats single MST)" } else { "FAIL" }
+        ),
+        None => println!("  no multi-tree configuration produced extra lanes -> FAIL"),
+    }
+
+    println!("acceptance: {}", if gate_a && gate_b { "pass" } else { "FAIL" });
+    if !(gate_a && gate_b) {
+        std::process::exit(1);
+    }
+}

@@ -85,6 +85,13 @@ pub struct ExperimentConfig {
     pub drift: f64,
     /// Simulated seconds between drift re-draws. CLI: `--drift-interval-s`.
     pub drift_interval_s: f64,
+    /// Spanning-tree lanes for multi-tree dissemination (1 = the paper's
+    /// single-MST planner, bit-identical to the legacy engine; k >= 2
+    /// asks the moderator to carve up to k-1 extra edge-disjoint trees
+    /// and stripe each model copy across the forest). Dense underlays
+    /// may yield fewer disjoint trees than requested — the planner keeps
+    /// whatever it finds. CLI: `--trees`.
+    pub trees: usize,
     /// Rounds between moderator ping sweeps in adaptive runs (0 = no
     /// online probing / re-planning). CLI: `--probe-every`.
     pub probe_every: u64,
@@ -125,6 +132,7 @@ impl Default for ExperimentConfig {
             topk_frac: 0.1,
             drift: 0.0,
             drift_interval_s: 20.0,
+            trees: 1,
             probe_every: 0,
             replan_threshold: 0.25,
         }
@@ -225,6 +233,7 @@ impl ExperimentConfig {
             "drift_interval_s" => {
                 self.drift_interval_s = value.as_float().ok_or_else(|| bad("float"))?
             }
+            "trees" => self.trees = value.as_int().ok_or_else(|| bad("integer"))? as usize,
             "probe_every" => {
                 self.probe_every = value.as_int().ok_or_else(|| bad("integer"))? as u64
             }
@@ -302,6 +311,11 @@ impl ExperimentConfig {
         let r = self.topology_params.geo_radius;
         if !(r > 0.0 && r.is_finite()) {
             return reject("geo_radius", "must be a finite value > 0");
+        }
+        // upper bound doubles as the negative-wrap guard (a spanning
+        // forest of an n-node graph can never hold n disjoint trees)
+        if self.trees == 0 || self.trees >= self.nodes {
+            return reject("trees", "need 1 <= trees < nodes");
         }
         Ok(())
     }
@@ -485,6 +499,24 @@ backbone_latency_ms = 8.5
         );
         assert!(ExperimentConfig::from_toml_str("geo_radius = 0.0").is_err());
         assert!(ExperimentConfig::from_toml_str("geo_radius = -1.0").is_err());
+    }
+
+    #[test]
+    fn trees_key_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str("trees = 3").unwrap();
+        assert_eq!(cfg.trees, 3);
+
+        // the default keeps the paper's single-MST planner
+        assert_eq!(ExperimentConfig::default().trees, 1);
+
+        assert!(ExperimentConfig::from_toml_str("trees = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("trees = 10").is_err(), "trees must be < nodes");
+        assert!(
+            ExperimentConfig::from_toml_str("trees = -2").is_err(),
+            "negative values must not wrap through the usize cast"
+        );
+        let cfg = ExperimentConfig::from_toml_str("nodes = 24\ntrees = 10").unwrap();
+        assert_eq!(cfg.trees, 10);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The flooding-broadcast baseline (paper §V compares MOSGU against
 //! "conventional flooding broadcast" [32]).
 //!
-//! Two modes:
+//! Three modes:
 //!
 //! * [`BroadcastMode::DirectPush`] — every node pushes its model to every
 //!   overlay neighbor simultaneously. On the paper's complete overlay this
@@ -12,16 +12,27 @@
 //!   neighbors except the source. Strictly worse on dense overlays (the
 //!   redundant copies still burn bandwidth); included for the ablation
 //!   bench.
+//! * [`BroadcastMode::RandomGossip`] — fanout-f push gossip in the style
+//!   of the classic epidemic protocols (cf. arXiv:1908.07782): a node
+//!   forwards each *new* model to `fanout` uniformly sampled neighbors
+//!   instead of all of them. Caps the redundancy of flooding at the price
+//!   of probabilistic coverage; with `fanout >=` the overlay's maximum
+//!   degree it degenerates to flooding exactly.
 
 use crate::graph::{Graph, NodeId};
 use crate::metrics::RoundMetrics;
 use crate::netsim::testbed::Testbed;
+use crate::util::rng::Pcg64;
 use std::collections::HashSet;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BroadcastMode {
     DirectPush,
     Flood,
+    /// Push each new model to `fanout` randomly sampled eligible
+    /// neighbors (sampling is seeded per node from the round seed, so
+    /// runs replay bit-identically).
+    RandomGossip { fanout: usize },
 }
 
 /// Tag layout for flow records: model owner in bits 0..16, segment index
@@ -70,10 +81,17 @@ pub fn run_broadcast_round(
     let mut sim = testbed.netsim(seed);
     // holds[u] = set of model owners node u has
     let mut holds: Vec<HashSet<NodeId>> = (0..n).map(|u| HashSet::from([u])).collect();
+    // per-node sampling streams (only RandomGossip draws from them, so
+    // the other modes replay bit-identically to the pre-gossip engine)
+    let mut rngs: Vec<Pcg64> = {
+        let mut root = Pcg64::new(seed ^ 0x6055_1F00);
+        (0..n).map(|u| root.fork(u as u64)).collect()
+    };
 
-    // t=0: every node pushes its own model to every overlay neighbor
+    // t=0: every node pushes its own model to its push set (all overlay
+    // neighbors, or a fanout-sized sample under RandomGossip)
     for u in 0..n {
-        for v in structure.neighbor_ids(u) {
+        for v in push_targets(structure, u, u, u, mode, &mut rngs) {
             sim.start_flow(u, v, testbed.route(u, v), model_mb, flow_tag(u, u));
         }
     }
@@ -85,9 +103,9 @@ pub fn run_broadcast_round(
                 holds[rec.dst].insert(tag_owner(rec.tag));
             }
         }
-        BroadcastMode::Flood => {
-            // reactive: forward each newly received model to all neighbors
-            // except the one it came from
+        BroadcastMode::Flood | BroadcastMode::RandomGossip { .. } => {
+            // reactive: forward each newly received model to the push set
+            // (all neighbors except the source, or a sample of them)
             let mut cursor = 0usize;
             loop {
                 let Some(eta) = sim.next_completion_eta() else { break };
@@ -102,10 +120,8 @@ pub fn run_broadcast_round(
                 fresh.sort_unstable();
                 for (dst, src, owner) in fresh {
                     if holds[dst].insert(owner) {
-                        for v in structure.neighbor_ids(dst) {
-                            if v != src && v != owner {
-                                sim.start_flow(dst, v, testbed.route(dst, v), model_mb, flow_tag(owner, dst));
-                            }
+                        for v in push_targets(structure, dst, src, owner, mode, &mut rngs) {
+                            sim.start_flow(dst, v, testbed.route(dst, v), model_mb, flow_tag(owner, dst));
                         }
                     }
                 }
@@ -113,9 +129,16 @@ pub fn run_broadcast_round(
         }
     }
 
-    // dissemination completeness: on a connected overlay both modes must
-    // deliver everything (DirectPush only on complete overlays)
-    if mode == BroadcastMode::Flood || is_complete_graph(structure) {
+    // dissemination completeness on a connected overlay: flooding always
+    // delivers everything, DirectPush only on complete overlays, and
+    // RandomGossip exactly when its fanout never truncates a push set
+    // (it is then flooding move for move)
+    let guaranteed = match mode {
+        BroadcastMode::Flood => true,
+        BroadcastMode::DirectPush => is_complete_graph(structure),
+        BroadcastMode::RandomGossip { fanout } => (0..n).all(|u| structure.degree(u) <= fanout),
+    };
+    if guaranteed {
         debug_assert!(
             holds.iter().all(|h| h.len() == n),
             "broadcast round left nodes without models"
@@ -137,6 +160,40 @@ pub fn run_broadcast_round(
         logical_model_mb: model_mb,
         wire_model_mb: model_mb,
         sim: sim_counters,
+    }
+}
+
+/// The push set for an `owner`-model arriving at `at` from `src` (for the
+/// t=0 self-push, `at == src == owner`): every eligible neighbor under
+/// DirectPush/Flood, a seeded `fanout`-sized sample under RandomGossip.
+/// Eligibility excludes the node the copy just came from and the model's
+/// owner — neither needs it back.
+fn push_targets(
+    structure: &Graph,
+    at: NodeId,
+    src: NodeId,
+    owner: NodeId,
+    mode: BroadcastMode,
+    rngs: &mut [Pcg64],
+) -> Vec<NodeId> {
+    let eligible: Vec<NodeId> = structure
+        .neighbor_ids(at)
+        .into_iter()
+        .filter(|&v| v != src && v != owner)
+        .collect();
+    match mode {
+        BroadcastMode::RandomGossip { fanout } => {
+            let k = fanout.min(eligible.len());
+            let mut picks: Vec<NodeId> = rngs[at]
+                .sample_indices(eligible.len(), k)
+                .into_iter()
+                .map(|i| eligible[i])
+                .collect();
+            // launch order stays id-sorted like the dense modes'
+            picks.sort_unstable();
+            picks
+        }
+        _ => eligible,
     }
 }
 
@@ -207,6 +264,79 @@ mod tests {
         let direct = run_broadcast_round(&tb, &overlay, 2.0, BroadcastMode::DirectPush, 1);
         let flood = run_broadcast_round(&tb, &overlay, 2.0, BroadcastMode::Flood, 1);
         assert!(flood.transfer_count() > 2 * direct.transfer_count());
+    }
+
+    #[test]
+    fn random_gossip_with_covering_fanout_is_flooding_move_for_move() {
+        // on a path every push set has at most 2 nodes, so fanout 2 never
+        // truncates anything: the sampled mode must replay the flood run
+        // bit for bit (and therefore reach everyone — each of the 10
+        // models crosses each of the 9 edges exactly once)
+        let mut overlay = Graph::new(10);
+        for u in 0..9 {
+            overlay.add_edge(u, u + 1, 1.0);
+        }
+        let tb = tb();
+        let flood = run_broadcast_round(&tb, &overlay, 5.0, BroadcastMode::Flood, 3);
+        let gossip =
+            run_broadcast_round(&tb, &overlay, 5.0, BroadcastMode::RandomGossip { fanout: 2 }, 3);
+        assert_eq!(gossip.transfer_count(), flood.transfer_count());
+        assert_eq!(gossip.transfer_count(), 90, "10 models x 9 edges, once each");
+        assert_eq!(gossip.total_time_s.to_bits(), flood.total_time_s.to_bits());
+        // every node receives all 9 foreign models
+        let mut got: Vec<HashSet<NodeId>> = vec![HashSet::new(); 10];
+        for r in &gossip.transfers {
+            got[r.dst].insert(tag_owner(r.tag));
+        }
+        for (u, owners) in got.iter().enumerate() {
+            assert_eq!(owners.len(), 9, "node {u} missed models");
+        }
+    }
+
+    #[test]
+    fn random_gossip_fanout_caps_flooding_redundancy_and_conserves_bytes() {
+        let overlay = crate::graph::topology::complete(8);
+        let cfg = ExperimentConfig { nodes: 8, latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let flood = run_broadcast_round(&tb, &overlay, 2.0, BroadcastMode::Flood, 1);
+        let gossip =
+            run_broadcast_round(&tb, &overlay, 2.0, BroadcastMode::RandomGossip { fanout: 1 }, 1);
+        // each node launches at most one copy per model it first receives
+        // (plus its own seed push): n + n(n-1) flows at the very most
+        assert!(gossip.transfer_count() <= 8 + 8 * 7, "{}", gossip.transfer_count());
+        assert!(gossip.transfer_count() >= 8, "every node seeds its own model");
+        assert!(
+            gossip.transfer_count() < flood.transfer_count(),
+            "fanout 1 ({}) must undercut flooding ({})",
+            gossip.transfer_count(),
+            flood.transfer_count()
+        );
+        // byte conservation: every flow carries exactly one whole model
+        let expect_mb = gossip.transfer_count() as f64 * 2.0;
+        assert!((gossip.total_payload_mb() - expect_mb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_gossip_replays_bit_identically_per_seed() {
+        let overlay = crate::graph::topology::complete(8);
+        let cfg = ExperimentConfig { nodes: 8, latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let mode = BroadcastMode::RandomGossip { fanout: 2 };
+        let a = run_broadcast_round(&tb, &overlay, 3.0, mode, 7);
+        let b = run_broadcast_round(&tb, &overlay, 3.0, mode, 7);
+        assert_eq!(a.transfer_count(), b.transfer_count());
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        // and a different seed samples a different forwarding pattern
+        // (counts may coincide; the flow lists should not)
+        let c = run_broadcast_round(&tb, &overlay, 3.0, mode, 8);
+        let pairs = |m: &RoundMetrics| {
+            let mut p: Vec<(NodeId, NodeId, NodeId)> =
+                m.transfers.iter().map(|r| (r.src, r.dst, tag_owner(r.tag))).collect();
+            p.sort_unstable();
+            p
+        };
+        assert_eq!(pairs(&a), pairs(&b));
+        assert_ne!(pairs(&a), pairs(&c), "seed must steer the sampling");
     }
 
     #[test]

@@ -79,16 +79,48 @@ use crate::util::rng::Pcg64;
 use std::collections::HashMap;
 use std::rc::Rc;
 
+/// One dissemination lane of a multi-tree plan: a spanning tree plus the
+/// slot schedule colored for it. Lane 0 of a plan is the moderator's MST
+/// (today's single-tree engine); extra lanes are edge-disjoint trees
+/// carved from the residual cost graph
+/// ([`crate::mst::disjoint::extra_disjoint_trees`]), each carrying an
+/// equal stripe of every model copy.
+#[derive(Debug, Clone)]
+pub struct TreeLane {
+    pub tree: Graph,
+    pub schedule: Schedule,
+}
+
 /// The tree + schedule a set of rounds is planned on — the unit of
 /// mid-session migration. Re-planning swaps in a new epoch at the next
 /// round boundary; rounds already in flight finish on their own epoch.
 #[derive(Debug, Clone)]
 pub struct PlanEpoch {
     /// The gossip tree (the moderator's — possibly incrementally
-    /// updated — MST).
+    /// updated — MST). Lane 0 of the plan.
     pub tree: Graph,
     /// The recolored slot schedule for that tree.
     pub schedule: Schedule,
+    /// Extra edge-disjoint dissemination lanes (`--trees k` with `k ≥ 2`);
+    /// empty for single-tree plans. [`RoundEngine::run_forest_round`]
+    /// stripes each copy across lane 0 + these; the pipelined/adaptive
+    /// paths gossip on lane 0 only.
+    pub extra: Vec<TreeLane>,
+}
+
+impl PlanEpoch {
+    /// A single-tree plan (no extra lanes) — the paper's §III pipeline.
+    pub fn single(tree: Graph, schedule: Schedule) -> Self {
+        PlanEpoch { tree, schedule, extra: Vec::new() }
+    }
+
+    /// All dissemination lanes in order, lane 0 first.
+    pub fn lanes(&self) -> Vec<TreeLane> {
+        let mut lanes =
+            vec![TreeLane { tree: self.tree.clone(), schedule: self.schedule.clone() }];
+        lanes.extend(self.extra.iter().cloned());
+        lanes
+    }
 }
 
 /// One applied mid-session re-planning decision.
@@ -741,6 +773,119 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         }
     }
 
+    /// Run one communication round striped across `lanes` edge-disjoint
+    /// spanning trees (multi-tree dissemination, after the parallel
+    /// partial streams of arXiv:1908.07782).
+    ///
+    /// Each model copy is cut into `lanes.len()` equal stripes
+    /// ([`TransferPlan::stripe`]); lane `i` disseminates stripe `i` down
+    /// its own tree under its own slot schedule, with cut-through
+    /// relaying per lane. A node holds a model once every lane's stripe
+    /// has reached it; lanes progress concurrently within each slot, so
+    /// on fat graphs the per-node up/downlinks carry `k` thinner streams
+    /// instead of one thick one and differently shaped trees split the
+    /// relay load. Because the lanes are pairwise edge-disjoint, every
+    /// `(src, dst, owner)` flow group belongs to exactly one lane and the
+    /// metrics rollup reassembles stripes into lane-copies exactly
+    /// (`RoundMetrics::segments` is the *per-lane* unit count; the wire
+    /// bytes of one full copy stay `plan.wire_mb()`).
+    ///
+    /// With a single lane this is the segmented engine on that lane's
+    /// tree; callers keep `trees = 1` on [`RoundEngine::run_round`],
+    /// which preserves the whole-model fast path bit for bit.
+    pub fn run_forest_round(
+        &mut self,
+        lanes: &[TreeLane],
+        round: u64,
+        mut opts: RoundOptions,
+    ) -> RoundMetrics {
+        assert!(!lanes.is_empty(), "a forest round needs at least one lane");
+        let plan = opts.plan;
+        // per-lane stripe: 1/k of the bytes as ceil(segments/k) units
+        let stripe = plan.stripe(lanes.len());
+        let counters_at_start = self.driver.sim_counters();
+        let mut states: Vec<GossipState> =
+            lanes.iter().map(|l| GossipState::new(l.tree.clone(), round)).collect();
+        let trees: Vec<&Graph> = lanes.iter().map(|l| &l.tree).collect();
+        let mut relay_copies_total = 0usize;
+        let mut slots_used = 0;
+        let mut slot_timings = Vec::new();
+        for slot in 0..opts.max_slots {
+            if states.iter().all(|s| s.is_complete()) {
+                break;
+            }
+            slots_used = slot + 1;
+            // lane 0's color labels the slot; every lane plans its own
+            // transmitter class for the joint conflict-free schedule
+            let color = lanes[0].schedule.color_of_slot(slot);
+            let mut planned: Vec<PlannedTx> = Vec::new();
+            let mut planned_rounds: Vec<usize> = Vec::new();
+            for (li, lane) in lanes.iter().enumerate() {
+                let transmitters = lane.schedule.transmitters(slot);
+                for tx in states[li].plan_slot(&transmitters) {
+                    planned_rounds.push(li);
+                    planned.push(tx);
+                }
+            }
+            let start_s = self.driver.now();
+            if planned.is_empty() {
+                slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+                continue;
+            }
+            let stats = self.run_cut_through_slot(
+                &trees,
+                &planned,
+                &planned_rounds,
+                &stripe,
+                opts.failure_prob,
+                &mut opts.failure_rng,
+                &mut |op| match op {
+                    StateOp::Holds { round_idx, node, key } => {
+                        states[round_idx].queue(node).holds(&key)
+                    }
+                    StateOp::Deliver { round_idx, send } => {
+                        states[round_idx].deliver_reassembled(send)
+                    }
+                    StateOp::RelayDisrupted { round_idx, node, key, received_from } => {
+                        states[round_idx].enqueue_forward(node, key, received_from);
+                        false
+                    }
+                },
+            );
+            let end_s = self.driver.now();
+            for (i, tx) in planned.iter().enumerate() {
+                if stats.failed[i] {
+                    states[planned_rounds[i]].requeue(tx);
+                }
+            }
+            relay_copies_total += stats.relay_copies;
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: stats.seg_launches });
+        }
+        assert!(
+            states.iter().all(|s| s.is_complete()),
+            "forest round did not complete within {} slots (lanes={}, failure_prob={})",
+            opts.max_slots,
+            lanes.len(),
+            opts.failure_prob
+        );
+        let total_time_s = self.driver.now();
+        let transfers = self.driver.take_transfers();
+        let exchange_time_s = exchange_time(&transfers);
+        RoundMetrics {
+            transfers,
+            total_time_s,
+            exchange_time_s,
+            slots: slots_used,
+            slot_timings,
+            // rollup unit: one *lane-copy* = the stripe's segment count
+            segments: stripe.segments(),
+            relay_copies: relay_copies_total,
+            logical_model_mb: plan.model_mb(),
+            wire_model_mb: plan.wire_mb(),
+            sim: self.driver.sim_counters().since(counters_at_start),
+        }
+    }
+
     /// Run `opts.rounds` communication rounds through one long-lived
     /// driver with multi-round pipelining.
     ///
@@ -782,7 +927,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let own_copies: usize = (0..n).map(|u| tree.degree(u)).sum();
 
         let mut current: Rc<PlanEpoch> =
-            Rc::new(PlanEpoch { tree: tree.clone(), schedule: self.schedule.clone() });
+            Rc::new(PlanEpoch::single(tree.clone(), self.schedule.clone()));
         let mut replans: Vec<ReplanEvent> = Vec::new();
 
         let fresh_round = |epoch: &Rc<PlanEpoch>, round: u64, now: f64, slot: usize| ActiveRound {
@@ -1261,6 +1406,120 @@ mod tests {
         assert_eq!(m.transfer_count(), 24);
     }
 
+    /// Edge-disjoint lanes over a complete overlay, each with its own
+    /// BFS 2-coloring schedule.
+    fn forest_lanes(n: usize, k: usize) -> Vec<TreeLane> {
+        let g = topology::complete(n);
+        let trees = crate::mst::disjoint::disjoint_spanning_trees(&g, k).unwrap();
+        assert_eq!(trees.len(), k);
+        trees
+            .into_iter()
+            .map(|tree| {
+                let coloring = bfs_coloring(&tree);
+                TreeLane { tree, schedule: Schedule { coloring, slot_len_s: 1.0, first_color: 0 } }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn forest_round_disseminates_and_conserves_bytes() {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, nodes: 8, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let lanes = forest_lanes(8, 2);
+        let mut driver = SimDriver::new(&tb, 5);
+        let mut engine = RoundEngine::new(&mut driver, &lanes[0].schedule);
+        let m = engine.run_forest_round(
+            &lanes,
+            0,
+            RoundOptions::reliable_plan(TransferPlan::whole(48.0), 128),
+        );
+        // per lane: 8 models × 7 tree edges = 56 lane-copies of 24 MB
+        assert_eq!(m.transfer_count(), 2 * 56);
+        assert_eq!(m.model_copy_count(), 2 * 56);
+        assert_eq!(m.segments, 1, "whole model striped 2 ways = 1 unit per lane");
+        assert!(m.relay_copies > 0, "lanes relay down their trees");
+        // wire bytes of one full copy stay the full plan's
+        assert!((m.wire_model_mb - 48.0).abs() < 1e-12);
+        // byte conservation: both lanes together move exactly the bytes
+        // a single tree would (n(n-1) copies × wire_mb)
+        assert!((m.total_payload_mb() - 8.0 * 7.0 * 48.0).abs() < 1e-9, "{}", m.total_payload_mb());
+    }
+
+    #[test]
+    fn single_lane_forest_matches_segmented_run_round() {
+        // a 1-lane forest is the segmented engine on that tree, bit for bit
+        let cfg = ExperimentConfig { latency_jitter: 0.0, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let (tree, schedule) = chain_setup(10);
+        let plan = TransferPlan::segmented(48.0, 4);
+
+        let mut d1 = SimDriver::new(&tb, 3);
+        let mut e1 = RoundEngine::new(&mut d1, &schedule);
+        let mut state = GossipState::new(tree.clone(), 0);
+        let single = e1.run_round(&mut state, RoundOptions::reliable_plan(plan, 64), |_, _| {});
+
+        let mut d2 = SimDriver::new(&tb, 3);
+        let mut e2 = RoundEngine::new(&mut d2, &schedule);
+        let lanes = vec![TreeLane { tree, schedule: schedule.clone() }];
+        let forest = e2.run_forest_round(&lanes, 0, RoundOptions::reliable_plan(plan, 64));
+
+        assert_eq!(forest.total_time_s.to_bits(), single.total_time_s.to_bits());
+        assert_eq!(forest.slots, single.slots);
+        assert_eq!(forest.transfers, single.transfers);
+        assert_eq!(forest.relay_copies, single.relay_copies);
+    }
+
+    #[test]
+    fn forest_round_with_failures_still_disseminates() {
+        let cfg = ExperimentConfig { latency_jitter: 0.0, nodes: 8, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let lanes = forest_lanes(8, 2);
+        let mut driver = SimDriver::new(&tb, 11);
+        let mut engine = RoundEngine::new(&mut driver, &lanes[0].schedule);
+        let m = engine.run_forest_round(
+            &lanes,
+            0,
+            RoundOptions {
+                plan: TransferPlan::segmented(14.0, 4),
+                failure_prob: 0.2,
+                max_slots: 512,
+                failure_rng: Pcg64::new(9),
+            },
+        );
+        // disrupted lane-copies spend bytes and retransmit: strictly more
+        // flows than the loss-free minimum of 2 × 56 copies × 2 segments
+        assert!(m.transfer_count() > 2 * 56 * 2);
+        assert!((m.total_payload_mb() - 8.0 * 7.0 * 14.0) > 1.0, "retransmissions add bytes");
+    }
+
+    #[test]
+    fn forest_round_beats_single_tree_on_fat_topology() {
+        // complete overlay, big model: k=2 halves every relay's per-copy
+        // burden and the lanes run concurrently, so the round must finish
+        // strictly faster than the single-MST engine
+        let cfg = ExperimentConfig { latency_jitter: 0.0, nodes: 12, ..Default::default() };
+        let tb = Testbed::new(&cfg);
+        let lanes = forest_lanes(12, 2);
+
+        let mut d1 = SimDriver::new(&tb, 7);
+        let mut e1 = RoundEngine::new(&mut d1, &lanes[0].schedule);
+        let mut state = GossipState::new(lanes[0].tree.clone(), 0);
+        let single =
+            e1.run_round(&mut state, RoundOptions::reliable_plan(TransferPlan::whole(48.0), 256), |_, _| {});
+
+        let mut d2 = SimDriver::new(&tb, 7);
+        let mut e2 = RoundEngine::new(&mut d2, &lanes[0].schedule);
+        let forest =
+            e2.run_forest_round(&lanes, 0, RoundOptions::reliable_plan(TransferPlan::whole(48.0), 256));
+
+        assert!(
+            forest.total_time_s < single.total_time_s,
+            "forest {} vs single {}",
+            forest.total_time_s,
+            single.total_time_s
+        );
+    }
+
     #[test]
     fn pipelined_rounds_all_complete_with_full_reception_orders() {
         let tb = quiet_testbed();
@@ -1364,7 +1623,7 @@ mod tests {
             PipelineOptions::reliable(3, 1.0, 10),
             |_d, round, _now| {
                 (round == 0)
-                    .then(|| PlanEpoch { tree: chain.clone(), schedule: chain_sched.clone() })
+                    .then(|| PlanEpoch::single(chain.clone(), chain_sched.clone()))
             },
         );
         assert_eq!(p.replans.len(), 1);

@@ -32,7 +32,7 @@
 use super::super::broadcast::flow_tag;
 use super::super::gossip::{GossipState, Send};
 use super::super::schedule::Schedule;
-use super::{exchange_time, whole_model_delivery_order};
+use super::{exchange_time, whole_model_delivery_order, TreeLane};
 use crate::graph::{Graph, NodeId};
 use crate::metrics::{RoundMetrics, SlotTiming};
 use crate::netsim::shard::ShardedNetSim;
@@ -135,6 +135,148 @@ pub fn run_sharded_round(
         "sharded round did not complete within {} slots",
         opts.max_slots
     );
+    finish(sim, slots_used, slot_timings, &opts)
+}
+
+/// Multi-tree counterpart of [`run_sharded_round`]: one gossip state per
+/// dissemination lane, each model striped `1/k` of its bytes down each of
+/// the `k` edge-disjoint trees. All lanes launch into the **same**
+/// simulator each slot, so striped flows contend for the physical links
+/// exactly like the event-driven engine's forest rounds. A single lane
+/// delegates to [`run_sharded_round`] verbatim.
+pub fn run_sharded_forest_round(
+    sim: &mut ShardedNetSim,
+    lanes: &[TreeLane],
+    mut opts: ShardedRoundOptions,
+) -> RoundMetrics {
+    assert!(!lanes.is_empty(), "a forest round needs at least one lane");
+    if lanes.len() == 1 {
+        let mut state = GossipState::new(lanes[0].tree.clone(), 0);
+        return run_sharded_round(sim, &mut state, &lanes[0].schedule, opts);
+    }
+    let lane_wire = opts.wire_mb / lanes.len() as f64;
+    let mut states: Vec<GossipState> =
+        lanes.iter().map(|l| GossipState::new(l.tree.clone(), 0)).collect();
+    let mut slots_used = 0;
+    let mut slot_timings = Vec::new();
+    for slot in 0..opts.max_slots {
+        if states.iter().all(|s| s.is_complete()) {
+            break;
+        }
+        slots_used = slot + 1;
+        let color = lanes[0].schedule.color_of_slot(slot);
+        let start_s = sim.now();
+        let mut planned = Vec::new();
+        let mut planned_lane: Vec<usize> = Vec::new();
+        for (li, lane) in lanes.iter().enumerate() {
+            let transmitters = lane.schedule.transmitters(slot);
+            for tx in states[li].plan_slot(&transmitters) {
+                planned_lane.push(li);
+                planned.push(tx);
+            }
+        }
+        if planned.is_empty() {
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+            continue;
+        }
+        let mut meta: Vec<(usize, NodeId)> = Vec::new();
+        for (i, tx) in planned.iter().enumerate() {
+            for &to in &tx.recipients {
+                sim.start_flow(tx.from, to, lane_wire, flow_tag(tx.entry.key.owner, tx.from));
+                meta.push((i, to));
+            }
+        }
+        let end_s = sim.drain_and_sync(opts.parallel);
+        // (sender, recipient) pairs are unique across lanes — the trees
+        // are edge-disjoint — so the shared comparator stays a total
+        // order and the failure-coin sequence is well defined
+        let order = whole_model_delivery_order(&planned, &meta);
+        let mut failed = vec![false; planned.len()];
+        for j in order {
+            let (i, to) = meta[j];
+            if opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob) {
+                failed[i] = true;
+                continue;
+            }
+            let tx = &planned[i];
+            states[planned_lane[i]].deliver(Send { from: tx.from, to, key: tx.entry.key });
+        }
+        for (i, tx) in planned.iter().enumerate() {
+            if failed[i] {
+                states[planned_lane[i]].requeue(tx);
+            }
+        }
+        slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: meta.len() });
+    }
+    assert!(
+        states.iter().all(|s| s.is_complete()),
+        "sharded forest round did not complete within {} slots (lanes={})",
+        opts.max_slots,
+        lanes.len()
+    );
+    finish(sim, slots_used, slot_timings, &opts)
+}
+
+/// Multi-tree counterpart of [`run_sharded_exchange`]: each node owes a
+/// `1/k` stripe of its own model to its neighbors in **every** lane's
+/// tree. Total exchanged bytes match the single-tree exchange exactly
+/// (`k` lanes × `1/k` wire each); the win is concurrency — stripes ride
+/// edge-disjoint overlay links. A single lane delegates to
+/// [`run_sharded_exchange`] verbatim.
+pub fn run_sharded_forest_exchange(
+    sim: &mut ShardedNetSim,
+    lanes: &[TreeLane],
+    mut opts: ShardedRoundOptions,
+) -> RoundMetrics {
+    assert!(!lanes.is_empty(), "a forest exchange needs at least one lane");
+    if lanes.len() == 1 {
+        return run_sharded_exchange(sim, &lanes[0].tree, &lanes[0].schedule, opts);
+    }
+    let lane_wire = opts.wire_mb / lanes.len() as f64;
+    let n = lanes[0].tree.node_count();
+    for l in lanes {
+        assert!(l.tree.is_tree(), "exchange runs on planned gossip trees");
+    }
+    // pending[li][u] = lane-li neighbors still owed u's stripe
+    let mut pending: Vec<Vec<Vec<NodeId>>> =
+        lanes.iter().map(|l| (0..n).map(|u| l.tree.neighbor_ids(u)).collect()).collect();
+    let mut left: usize = pending.iter().flatten().map(|p| p.len()).sum();
+    let mut slots_used = 0;
+    let mut slot_timings = Vec::new();
+    for slot in 0..opts.max_slots {
+        if left == 0 {
+            break;
+        }
+        slots_used = slot + 1;
+        let color = lanes[0].schedule.color_of_slot(slot);
+        let start_s = sim.now();
+        let mut launched: Vec<(usize, NodeId, NodeId)> = Vec::new();
+        for (li, lane) in lanes.iter().enumerate() {
+            for u in 0..n {
+                if pending[li][u].is_empty() || !lane.schedule.transmits_in_slot(u, slot) {
+                    continue;
+                }
+                for &v in &pending[li][u] {
+                    sim.start_flow(u, v, lane_wire, flow_tag(u, u));
+                    launched.push((li, u, v));
+                }
+            }
+        }
+        if launched.is_empty() {
+            slot_timings.push(SlotTiming { slot, color, start_s, end_s: start_s, copies: 0 });
+            continue;
+        }
+        let end_s = sim.drain_and_sync(opts.parallel);
+        for &(li, u, v) in &launched {
+            let dropped = opts.failure_prob > 0.0 && opts.failure_rng.gen_bool(opts.failure_prob);
+            if !dropped {
+                pending[li][u].retain(|&x| x != v);
+                left -= 1;
+            }
+        }
+        slot_timings.push(SlotTiming { slot, color, start_s, end_s, copies: launched.len() });
+    }
+    assert!(left == 0, "forest exchange did not complete within {} slots", opts.max_slots);
     finish(sim, slots_used, slot_timings, &opts)
 }
 
@@ -314,6 +456,91 @@ mod tests {
         assert!((compressed.compression_ratio() - 4.0).abs() < 1e-12);
         assert!((compressed.total_logical_mb() - full.total_logical_mb()).abs() < 1e-9);
         assert!(compressed.exchange_time_s < full.exchange_time_s);
+    }
+
+    /// Two hand-built edge-disjoint spanning trees over 8 nodes: the
+    /// chain 0-1-…-7 and an interleaved tree sharing none of its edges.
+    fn two_lanes() -> Vec<TreeLane> {
+        let (chain, chain_sched) = chain_schedule(8);
+        let mut second = Graph::new(8);
+        for (u, v) in [(0, 2), (2, 4), (4, 6), (1, 3), (3, 5), (5, 7), (0, 7)] {
+            second.add_edge(u, v, 1.0);
+        }
+        let second_sched =
+            Schedule { coloring: bfs_coloring(&second), slot_len_s: 1.0, first_color: 0 };
+        vec![
+            TreeLane { tree: chain, schedule: chain_sched },
+            TreeLane { tree: second, schedule: second_sched },
+        ]
+    }
+
+    #[test]
+    fn forest_round_stripes_and_conserves_bytes() {
+        let cfg = quiet_cfg(8, 2);
+        let tb = Testbed::new(&cfg);
+        let lanes = two_lanes();
+        let mut sim = ShardedNetSim::sharded(&tb, 1);
+        let m = run_sharded_forest_round(
+            &mut sim,
+            &lanes,
+            ShardedRoundOptions::reliable(48.0, 8, false),
+        );
+        // each lane moves every model across its 7 tree edges: 2 × 8×7
+        // lane-copies, each carrying half the bytes — total conserved
+        assert_eq!(m.transfer_count(), 112);
+        assert!((m.total_payload_mb() - 56.0 * 48.0).abs() < 1e-6, "bytes conserved");
+        let copies: usize = m.slot_timings.iter().map(|t| t.copies).sum();
+        assert_eq!(copies, m.transfer_count());
+    }
+
+    #[test]
+    fn forest_round_single_lane_delegates_bit_for_bit() {
+        let cfg = quiet_cfg(8, 2);
+        let tb = Testbed::new(&cfg);
+        let lanes = &two_lanes()[..1];
+        let mut sim = ShardedNetSim::sharded(&tb, 3);
+        let forest =
+            run_sharded_forest_round(&mut sim, lanes, ShardedRoundOptions::reliable(14.0, 8, false));
+        let mut sim2 = ShardedNetSim::sharded(&tb, 3);
+        let mut state = GossipState::new(lanes[0].tree.clone(), 0);
+        let plain = run_sharded_round(
+            &mut sim2,
+            &mut state,
+            &lanes[0].schedule,
+            ShardedRoundOptions::reliable(14.0, 8, false),
+        );
+        assert_eq!(forest.total_time_s.to_bits(), plain.total_time_s.to_bits());
+        assert_eq!(forest.transfers, plain.transfers);
+        assert_eq!(forest.slots, plain.slots);
+    }
+
+    #[test]
+    fn forest_exchange_conserves_single_tree_byte_total() {
+        let cfg = quiet_cfg(8, 2);
+        let tb = Testbed::new(&cfg);
+        let lanes = two_lanes();
+        let mut sim = ShardedNetSim::sharded(&tb, 1);
+        let m = run_sharded_forest_exchange(
+            &mut sim,
+            &lanes,
+            ShardedRoundOptions::reliable(48.0, 8, false),
+        );
+        // per lane: sum of tree degrees = 2(n-1) stripes; 2 lanes double
+        // the copy count while halving each copy's bytes
+        assert_eq!(m.transfer_count(), 2 * 2 * 7);
+        let mut single_sim = ShardedNetSim::sharded(&tb, 1);
+        let single = run_sharded_exchange(
+            &mut single_sim,
+            &lanes[0].tree,
+            &lanes[0].schedule,
+            ShardedRoundOptions::reliable(48.0, 8, false),
+        );
+        assert!(
+            (m.total_payload_mb() - single.total_payload_mb()).abs() < 1e-6,
+            "striping must not change total exchanged bytes: {} vs {}",
+            m.total_payload_mb(),
+            single.total_payload_mb()
+        );
     }
 
     #[test]

@@ -21,13 +21,13 @@
 //! for bit — `tests/engine_equivalence.rs` pins that equivalence — so
 //! hierarchical planning is a strict superset of the paper's, not a fork.
 
-use super::engine::PlanEpoch;
+use super::engine::{PlanEpoch, TreeLane};
 use super::schedule::build_schedule;
 use crate::coloring::{stitched_tree_coloring, ColoringAlgorithm};
 use crate::graph::generators::Hierarchy;
 use crate::graph::Graph;
 use crate::mst::hierarchical::stitched_mst;
-use crate::mst::{MstAlgorithm, MstError};
+use crate::mst::{extra_disjoint_trees, MstAlgorithm, MstError};
 
 /// Plan one epoch (tree + slot schedule) hierarchically. `costs` is the
 /// full overlay cost graph (measured pings, ms); `model_mb` the transfer
@@ -49,7 +49,57 @@ pub fn plan_hierarchical(
     let tree = stitched_mst(costs, hierarchy.subnet_of(), hierarchy.gateways(), mst)?;
     let coloring = stitched_tree_coloring(&tree, hierarchy.subnet_of(), coloring);
     let schedule = build_schedule(costs, coloring, model_mb, ping_size_bytes, first_color);
-    Ok(PlanEpoch { tree, schedule })
+    Ok(PlanEpoch::single(tree, schedule))
+}
+
+/// As [`plan_hierarchical`] with up to `trees - 1` extra edge-disjoint
+/// dissemination lanes (multi-tree, `--trees k`). Extra lanes are carved
+/// from the **admissible** cost graph — intra-subnet edges plus
+/// gateway-gateway cross links, the same edge universe `stitched_mst`
+/// draws from — so every lane honors the gateway-only-crossing invariant
+/// while each subnet's residual links grow its own forest. Fewer (or
+/// zero) extra lanes come back when the admissible residual disconnects
+/// first; `trees = 1` is [`plan_hierarchical`] verbatim.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_hierarchical_forest(
+    costs: &Graph,
+    hierarchy: &Hierarchy,
+    mst: MstAlgorithm,
+    coloring: ColoringAlgorithm,
+    trees: usize,
+    model_mb: f64,
+    ping_size_bytes: u64,
+    first_color: usize,
+) -> Result<PlanEpoch, MstError> {
+    let mut epoch =
+        plan_hierarchical(costs, hierarchy, mst, coloring, model_mb, ping_size_bytes, first_color)?;
+    if trees >= 2 {
+        let admissible = gateway_admissible(costs, hierarchy);
+        epoch.extra = extra_disjoint_trees(&admissible, &epoch.tree, trees - 1)
+            .into_iter()
+            .map(|tree| {
+                let col = stitched_tree_coloring(&tree, hierarchy.subnet_of(), coloring);
+                let schedule = build_schedule(costs, col, model_mb, ping_size_bytes, first_color);
+                TreeLane { tree, schedule }
+            })
+            .collect();
+    }
+    Ok(epoch)
+}
+
+/// The cost edges hierarchical planning may use: intra-subnet links plus
+/// gateway-gateway cross links (non-gateway cross edges are physically
+/// routed through routers and excluded from every lane, exactly as in
+/// [`stitched_mst`]).
+fn gateway_admissible(costs: &Graph, h: &Hierarchy) -> Graph {
+    let mut g = Graph::new(costs.node_count());
+    for e in costs.edges() {
+        let cross = h.subnet(e.u) != h.subnet(e.v);
+        if !cross || (h.is_gateway(e.u) && h.is_gateway(e.v)) {
+            g.add_edge(e.u, e.v, e.weight);
+        }
+    }
+    g
 }
 
 #[cfg(test)]
@@ -93,6 +143,72 @@ mod tests {
         assert_eq!(epoch.schedule.coloring.assignment(), flat_sched.coloring.assignment());
         assert_eq!(epoch.schedule.slot_len_s.to_bits(), flat_sched.slot_len_s.to_bits());
         assert_eq!(epoch.schedule.first_color, flat_sched.first_color);
+    }
+
+    #[test]
+    fn forest_adds_edge_disjoint_gateway_respecting_lanes() {
+        let (_, h) = costs_for(12, 2, 5);
+        // dense overlay: every pair measured, so extra lanes exist
+        let n = 12;
+        let mut costs = Graph::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                let cross = h.subnet(u) != h.subnet(v);
+                let w = if cross { 25.0 } else { 1.0 } + (u * n + v) as f64 * 0.01;
+                costs.add_edge(u, v, w);
+            }
+        }
+        let epoch = plan_hierarchical_forest(
+            &costs,
+            &h,
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            3,
+            14.0,
+            56,
+            1,
+        )
+        .unwrap();
+        assert!(!epoch.extra.is_empty(), "dense overlay should admit an extra lane");
+        let lanes = epoch.lanes();
+        let trees: Vec<Graph> = lanes.iter().map(|l| l.tree.clone()).collect();
+        assert!(crate::mst::disjoint::pairwise_edge_disjoint(&trees));
+        for lane in &lanes {
+            assert!(lane.tree.is_tree());
+            assert!(lane.schedule.coloring.is_proper(&lane.tree));
+            // every lane honors the gateway-only-crossing invariant
+            for e in lane.tree.edges() {
+                if h.subnet(e.u) != h.subnet(e.v) {
+                    assert!(h.is_gateway(e.u) && h.is_gateway(e.v), "({}, {})", e.u, e.v);
+                }
+            }
+        }
+        // lane 0 and the slot schedule are plan_hierarchical verbatim
+        let base = plan_hierarchical(
+            &costs,
+            &h,
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            14.0,
+            56,
+            1,
+        )
+        .unwrap();
+        assert_eq!(epoch.tree.sorted_edges(), base.tree.sorted_edges());
+        assert_eq!(epoch.schedule.slot_len_s.to_bits(), base.schedule.slot_len_s.to_bits());
+        // trees = 1 keeps the epoch single-lane
+        let single = plan_hierarchical_forest(
+            &costs,
+            &h,
+            MstAlgorithm::Prim,
+            ColoringAlgorithm::Bfs,
+            1,
+            14.0,
+            56,
+            1,
+        )
+        .unwrap();
+        assert!(single.extra.is_empty());
     }
 
     #[test]

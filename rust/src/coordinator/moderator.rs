@@ -9,12 +9,13 @@
 //! connectivity table, and graph computations re-run only when membership
 //! changed.
 
+use super::engine::TreeLane;
 use super::schedule::{build_schedule, Schedule};
 use crate::coloring::ColoringAlgorithm;
 use crate::graph::generators::Hierarchy;
 use crate::graph::matrix::CostMatrix;
 use crate::graph::{Graph, NodeId};
-use crate::mst::{MstAlgorithm, MstError};
+use crate::mst::{extra_disjoint_trees, MstAlgorithm, MstError};
 
 /// One directed connectivity report: `reporter` measured `cost` to `peer`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -33,6 +34,12 @@ pub struct ScheduleBundle {
     pub schedule: Schedule,
     /// Per-node gossip neighbor table derived from the tree.
     pub neighbor_table: Vec<Vec<NodeId>>,
+    /// Extra dissemination lanes (multi-tree, `--trees k`): up to `k - 1`
+    /// spanning trees pairwise edge-disjoint with [`ScheduleBundle::tree`]
+    /// and each other, each with its own coloring-derived slot schedule.
+    /// Empty under single-tree planning (`trees = 1`), and possibly
+    /// shorter than requested when the residual cost graph disconnects.
+    pub extra: Vec<TreeLane>,
 }
 
 /// Moderator state machine. Owns the connectivity table; survives
@@ -46,6 +53,8 @@ pub struct Moderator {
     bundle: Option<ScheduleBundle>,
     mst_alg: MstAlgorithm,
     coloring_alg: ColoringAlgorithm,
+    /// dissemination lane count (`--trees k`); 1 = the paper's single MST
+    trees: usize,
     /// membership epoch — bumped on join/leave, forces recomputation
     epoch: u64,
     /// (epoch, plan fingerprint) of the cached bundle. The fingerprint is
@@ -54,6 +63,32 @@ pub struct Moderator {
     /// hierarchical requests — or two *different* hierarchies — can
     /// never serve a bundle planned for another structure.
     computed: Option<(u64, u64)>,
+}
+
+/// Build the extra dissemination lanes for a `trees`-lane plan: up to
+/// `trees - 1` spanning trees edge-disjoint with `base` (and each other)
+/// carved from `costs`, each colored and scheduled like lane 0. Shared by
+/// initial planning and drift replanning; `trees <= 1` is a no-op.
+fn extra_lanes(
+    costs: &Graph,
+    base: &Graph,
+    trees: usize,
+    coloring_alg: ColoringAlgorithm,
+    model_mb: f64,
+    ping_size_bytes: u64,
+    first_color: usize,
+) -> Vec<TreeLane> {
+    if trees < 2 {
+        return Vec::new();
+    }
+    extra_disjoint_trees(costs, base, trees - 1)
+        .into_iter()
+        .map(|tree| {
+            let coloring = coloring_alg.run(&tree);
+            let schedule = build_schedule(costs, coloring, model_mb, ping_size_bytes, first_color);
+            TreeLane { tree, schedule }
+        })
+        .collect()
 }
 
 /// Cache fingerprint of a planning request: 0 = the flat planner; a
@@ -91,6 +126,7 @@ impl Moderator {
             bundle: None,
             mst_alg: mst,
             coloring_alg: coloring,
+            trees: 1,
             epoch: 0,
             computed: None,
         }
@@ -98,6 +134,23 @@ impl Moderator {
 
     pub fn node(&self) -> NodeId {
         self.node
+    }
+
+    /// Dissemination lane count the next plan will target (`--trees k`).
+    pub fn trees(&self) -> usize {
+        self.trees
+    }
+
+    /// Set the dissemination lane count (`--trees k`, clamped to ≥ 1).
+    /// The lane count is part of the plan cache key, so changing it makes
+    /// the next `compute_schedule*` call re-plan the forest; `k = 1`
+    /// restores the paper's single-MST planning exactly.
+    pub fn set_trees(&mut self, k: usize) {
+        let k = k.max(1);
+        if k != self.trees {
+            self.trees = k;
+            self.computed = None;
+        }
     }
 
     pub fn epoch(&self) -> u64 {
@@ -175,7 +228,9 @@ impl Moderator {
         ping_size_bytes: u64,
         first_color: usize,
     ) -> Result<&ScheduleBundle, ModeratorError> {
-        let fingerprint = plan_fingerprint(hierarchy);
+        // lane count folded in above bit 0 so the flat/hierarchical mode
+        // separation (even/odd) survives and each `trees` re-keys the plan
+        let fingerprint = plan_fingerprint(hierarchy) ^ (((self.trees - 1) as u64) << 1);
         if self.computed == Some((self.epoch, fingerprint)) {
             return self.bundle.as_ref().ok_or(ModeratorError::NotComputed);
         }
@@ -186,30 +241,40 @@ impl Moderator {
             self.reports.iter().map(|r| (r.reporter, r.peer, r.cost)).collect();
         let matrix = CostMatrix::from_reports(self.n, &triples);
         let costs = matrix.to_graph();
-        let (tree, schedule) = match hierarchy {
+        let (tree, schedule, extra) = match hierarchy {
             None => {
                 let tree = self.mst_alg.run(&costs)?;
                 let coloring = self.coloring_alg.run(&tree);
                 let schedule =
                     build_schedule(&costs, coloring, model_mb, ping_size_bytes, first_color);
-                (tree, schedule)
-            }
-            Some(h) => {
-                let epoch = super::hierarchy::plan_hierarchical(
+                let extra = extra_lanes(
                     &costs,
-                    h,
-                    self.mst_alg,
+                    &tree,
+                    self.trees,
                     self.coloring_alg,
                     model_mb,
                     ping_size_bytes,
                     first_color,
+                );
+                (tree, schedule, extra)
+            }
+            Some(h) => {
+                let epoch = super::hierarchy::plan_hierarchical_forest(
+                    &costs,
+                    h,
+                    self.mst_alg,
+                    self.coloring_alg,
+                    self.trees,
+                    model_mb,
+                    ping_size_bytes,
+                    first_color,
                 )?;
-                (epoch.tree, epoch.schedule)
+                (epoch.tree, epoch.schedule, epoch.extra)
             }
         };
         let neighbor_table = (0..self.n).map(|u| tree.neighbor_ids(u)).collect();
         self.matrix = Some(matrix);
-        self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table });
+        self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table, extra });
         self.computed = Some((self.epoch, fingerprint));
         Ok(self.bundle.as_ref().unwrap())
     }
@@ -240,9 +305,20 @@ impl Moderator {
             ping_size_bytes,
             first_color,
         )?;
+        // multi-tree: extra lanes are re-carved from the fresh estimates
+        // around the replanned lane-0 tree (drift can reshape every lane)
+        let extra = extra_lanes(
+            estimates,
+            &tree,
+            self.trees,
+            self.coloring_alg,
+            model_mb,
+            ping_size_bytes,
+            first_color,
+        );
         let neighbor_table = (0..self.n).map(|u| tree.neighbor_ids(u)).collect();
         self.matrix = Some(CostMatrix::from_graph(estimates));
-        self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table });
+        self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table, extra });
         Ok(self.bundle.as_ref().unwrap())
     }
 
@@ -495,6 +571,88 @@ mod tests {
                 replanned.tree.has_edge(e.u, e.v),
                 "stale bundle served for a different hierarchy"
             );
+        }
+    }
+
+    /// Complete overlay where the chain 0-1-…-(n-1) is strictly cheapest:
+    /// the MST is that chain for every algorithm, and the dense residual
+    /// admits extra disjoint lanes.
+    fn chain_cheap_complete(n: usize) -> Graph {
+        let mut g = Graph::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                g.add_edge(u, v, if v == u + 1 { 1.0 } else { 2.0 });
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn multi_tree_bundle_adds_disjoint_lanes() {
+        let g = chain_cheap_complete(10);
+        let mut single = Moderator::new(0, 10, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut single, &g, 0.0);
+        let single_bundle = single.compute_schedule(14.0, 56, 0).unwrap().clone();
+        assert!(single_bundle.extra.is_empty(), "trees defaults to 1");
+
+        let mut m = Moderator::new(0, 10, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut m, &g, 0.0);
+        m.set_trees(3);
+        assert_eq!(m.trees(), 3);
+        let bundle = m.compute_schedule(14.0, 56, 0).unwrap().clone();
+        assert!(!bundle.extra.is_empty(), "dense overlay must admit an extra lane");
+        // lane 0 and its schedule are untouched by forest planning
+        assert_eq!(bundle.tree.sorted_edges(), single_bundle.tree.sorted_edges());
+        assert_eq!(
+            bundle.schedule.slot_len_s.to_bits(),
+            single_bundle.schedule.slot_len_s.to_bits()
+        );
+        assert_eq!(bundle.neighbor_table, single_bundle.neighbor_table);
+        let mut trees = vec![bundle.tree.clone()];
+        trees.extend(bundle.extra.iter().map(|l| l.tree.clone()));
+        assert!(crate::mst::disjoint::pairwise_edge_disjoint(&trees));
+        for lane in &bundle.extra {
+            assert!(lane.tree.is_tree());
+            assert!(lane.schedule.coloring.is_proper(&lane.tree));
+        }
+    }
+
+    #[test]
+    fn set_trees_rekeys_the_plan_cache() {
+        let g = chain_cheap_complete(10);
+        let mut m = Moderator::new(0, 10, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut m, &g, 0.0);
+        m.compute_schedule(14.0, 56, 0).unwrap();
+        assert!(!m.needs_recompute());
+        m.set_trees(2);
+        assert!(m.needs_recompute(), "lane-count change must invalidate the cache");
+        let forest = m.compute_schedule(14.0, 56, 0).unwrap().clone();
+        assert!(!forest.extra.is_empty());
+        // and back: trees = 1 republishes a single-lane bundle
+        m.set_trees(1);
+        let back = m.compute_schedule(14.0, 56, 0).unwrap();
+        assert!(back.extra.is_empty());
+    }
+
+    #[test]
+    fn replan_with_costs_recarves_extra_lanes() {
+        let g = chain_cheap_complete(10);
+        let mut m = Moderator::new(0, 10, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+        submit_full_reports(&mut m, &g, 0.0);
+        m.set_trees(2);
+        m.compute_schedule(14.0, 56, 0).unwrap();
+        // drift every weight slightly; lane structure stays viable
+        let mut estimates = Graph::new(10);
+        for e in m.matrix().unwrap().to_graph().edges() {
+            estimates.add_edge(e.u, e.v, e.weight * 1.1);
+        }
+        let after = m.replan_with_costs(&estimates, 14.0, 56, 0).unwrap().clone();
+        assert!(!after.extra.is_empty(), "replan must keep the forest");
+        let mut trees = vec![after.tree.clone()];
+        trees.extend(after.extra.iter().map(|l| l.tree.clone()));
+        assert!(crate::mst::disjoint::pairwise_edge_disjoint(&trees));
+        for lane in &after.extra {
+            assert!(lane.schedule.coloring.is_proper(&lane.tree));
         }
     }
 

@@ -259,7 +259,7 @@ impl Replanner {
         self.planned_costs = estimates;
         self.tree = tree.clone();
         self.replans += 1;
-        Some(PlanEpoch { tree, schedule })
+        Some(PlanEpoch::single(tree, schedule))
     }
 
     /// The tree of the most recent plan.

@@ -5,9 +5,11 @@
 use super::broadcast::{self, BroadcastMode};
 use super::engine::driver::SimDriver;
 use super::engine::sharded::{self, ShardedRoundOptions};
-use super::engine::{PipelineMetrics, PipelineOptions, PlanEpoch, RoundEngine, RoundOptions};
+use super::engine::{
+    PipelineMetrics, PipelineOptions, PlanEpoch, RoundEngine, RoundOptions, TreeLane,
+};
 use super::gossip::GossipState;
-use super::hierarchy::plan_hierarchical;
+use super::hierarchy::plan_hierarchical_forest;
 use super::moderator::{Moderator, ScheduleBundle};
 use super::probe::{ReplanPolicy, Replanner};
 use super::schedule::Schedule;
@@ -82,6 +84,9 @@ impl GossipSession {
                 .collect();
             moderator.submit_report(u, &peers);
         }
+        // multi-tree dissemination (`--trees k`): the moderator carves up
+        // to k-1 extra edge-disjoint lanes; k = 1 is the paper's planner
+        moderator.set_trees(cfg.trees);
         let unit_mb = cfg.transfer_plan(model_mb).segment_mb();
         // hierarchical overlays plan per subnet + backbone; a single
         // subnet is bit-identical to the flat planner, and flat overlays
@@ -141,6 +146,24 @@ impl GossipSession {
         &self.bundle.schedule
     }
 
+    /// The extra dissemination lanes the moderator planned under
+    /// `--trees k` (empty with `trees = 1`, possibly fewer than `k - 1`
+    /// on sparse overlays).
+    pub fn extra_lanes(&self) -> &[TreeLane] {
+        &self.bundle.extra
+    }
+
+    /// Every dissemination lane: lane 0 (the paper's tree + schedule)
+    /// followed by the extra edge-disjoint lanes.
+    pub fn lanes(&self) -> Vec<TreeLane> {
+        let mut lanes = vec![TreeLane {
+            tree: self.bundle.tree.clone(),
+            schedule: self.bundle.schedule.clone(),
+        }];
+        lanes.extend(self.bundle.extra.iter().cloned());
+        lanes
+    }
+
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
     }
@@ -181,8 +204,7 @@ impl GossipSession {
     ) -> RoundMetrics {
         let mut driver = SimDriver::new(&self.testbed, seed);
         let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
-        let mut state = GossipState::new(self.bundle.tree.clone(), 0);
-        let n = state.node_count();
+        let n = self.bundle.tree.node_count();
         let opts = RoundOptions {
             plan,
             failure_prob,
@@ -190,7 +212,14 @@ impl GossipSession {
             max_slots: 8 * n + 64,
             failure_rng: Pcg64::new(seed ^ 0xfa11),
         };
-        engine.run_round(&mut state, opts, |_, _| {})
+        if self.bundle.extra.is_empty() {
+            // single tree: the paper's engine path, untouched
+            let mut state = GossipState::new(self.bundle.tree.clone(), 0);
+            engine.run_round(&mut state, opts, |_, _| {})
+        } else {
+            // multi-tree: stripe the plan round-robin across the lanes
+            engine.run_forest_round(&self.lanes(), 0, opts)
+        }
     }
 
     /// Run `rounds` MOSGU communication rounds through **one long-lived
@@ -290,8 +319,7 @@ impl GossipSession {
         parallel: bool,
     ) -> RoundMetrics {
         let mut sim = ShardedNetSim::sharded(&self.testbed, seed);
-        let mut state = GossipState::new(self.bundle.tree.clone(), 0);
-        let n = state.node_count();
+        let n = self.bundle.tree.node_count();
         let opts = ShardedRoundOptions {
             model_mb,
             // the config's codec shrinks the wire payload here too
@@ -302,7 +330,12 @@ impl GossipSession {
             failure_rng: Pcg64::new(seed ^ 0xfa11),
             parallel,
         };
-        sharded::run_sharded_round(&mut sim, &mut state, &self.bundle.schedule, opts)
+        if self.bundle.extra.is_empty() {
+            let mut state = GossipState::new(self.bundle.tree.clone(), 0);
+            sharded::run_sharded_round(&mut sim, &mut state, &self.bundle.schedule, opts)
+        } else {
+            sharded::run_sharded_forest_round(&mut sim, &self.lanes(), opts)
+        }
     }
 
     /// Flooding with relay on the session's structural overlay (ablation).
@@ -335,7 +368,7 @@ pub fn sessions_for_all_topologies(cfg: &ExperimentConfig) -> Result<Vec<(Topolo
 /// [`GossipSession`] routes planning through the moderator's **dense**
 /// cost matrix (faithful to §III-A, O(n²) memory) — fine at paper scale,
 /// prohibitive at n ≥ 10k. This scenario plans from the sparse overlay
-/// costs via [`plan_hierarchical`] instead, and measures the **exchange
+/// costs via [`plan_hierarchical_forest`] instead, and measures the **exchange
 /// phase** of a round (every node's model to its tree neighbors — Table
 /// V's blocking indicator; the O(n²) dissemination tail pipelines with
 /// later rounds per §III-D) over [`ShardedNetSim`], sequential or
@@ -365,11 +398,14 @@ impl ScaleScenario {
         );
         let testbed = Testbed::new(cfg);
         let costs = testbed.overlay_costs(&structure);
-        let epoch = plan_hierarchical(
+        // trees = 1 is plan_hierarchical verbatim; trees ≥ 2 carves extra
+        // edge-disjoint lanes per subnet + gateway backbone
+        let epoch = plan_hierarchical_forest(
             &costs,
             &hierarchy,
             cfg.mst,
             cfg.coloring,
+            cfg.trees,
             cfg.transfer_plan(model_mb).segment_mb(),
             cfg.ping_size_bytes,
             1,
@@ -448,7 +484,16 @@ impl ScaleScenario {
             failure_rng: Pcg64::new(seed ^ 0xfa11),
             parallel,
         };
-        sharded::run_sharded_exchange(&mut sim, &self.epoch.tree, &self.epoch.schedule, opts)
+        if self.epoch.extra.is_empty() {
+            sharded::run_sharded_exchange(&mut sim, &self.epoch.tree, &self.epoch.schedule, opts)
+        } else {
+            sharded::run_sharded_forest_exchange(&mut sim, &self.epoch.lanes(), opts)
+        }
+    }
+
+    /// The extra dissemination lanes (empty under `trees = 1`).
+    pub fn extra_lanes(&self) -> &[TreeLane] {
+        &self.epoch.extra
     }
 }
 
@@ -699,6 +744,61 @@ mod tests {
         let again = sc.run_exchange(14.0, 1, 0.0, true, true);
         assert_eq!(shd.total_time_s.to_bits(), again.total_time_s.to_bits());
         assert_eq!(shd.transfers, again.transfers);
+    }
+
+    #[test]
+    fn multi_tree_session_disseminates_and_conserves_bytes() {
+        let cfg = ExperimentConfig { trees: 2, ..quiet_cfg() };
+        let s = GossipSession::new(&cfg).unwrap();
+        // the default complete overlay is dense enough for a second lane
+        assert_eq!(s.extra_lanes().len(), 1, "complete n=10 admits an extra lane");
+        let lanes = s.lanes();
+        let trees: Vec<Graph> = lanes.iter().map(|l| l.tree.clone()).collect();
+        assert!(crate::mst::disjoint::pairwise_edge_disjoint(&trees));
+
+        // event-driven engine: each lane moves every model across its 9
+        // edges, each stripe carrying half the bytes — total conserved
+        let m = s.run_mosgu_round(48.0, 1, 0.0);
+        assert_eq!(m.transfer_count(), 2 * 90);
+        assert!((m.total_payload_mb() - 90.0 * 48.0).abs() < 1e-6, "bytes conserved");
+
+        // sharded barrier runner takes the forest path too
+        let sharded = s.run_sharded_round(48.0, 1, 0.0, true);
+        assert_eq!(sharded.transfer_count(), 2 * 90);
+        assert!((sharded.total_payload_mb() - 90.0 * 48.0).abs() < 1e-6);
+
+        // deterministic replay
+        let again = s.run_mosgu_round(48.0, 1, 0.0);
+        assert_eq!(m.total_time_s.to_bits(), again.total_time_s.to_bits());
+        assert_eq!(m.transfers, again.transfers);
+    }
+
+    #[test]
+    fn multi_tree_session_survives_failure_injection() {
+        let cfg = ExperimentConfig { trees: 2, ..quiet_cfg() };
+        let s = GossipSession::new(&cfg).unwrap();
+        let m = s.run_mosgu_round(14.0, 5, 0.2);
+        // disruption spends bytes; dissemination still completes (the
+        // run_forest_round completion assert would panic otherwise)
+        assert!(m.transfer_count() >= 2 * 90);
+    }
+
+    #[test]
+    fn scale_scenario_forest_exchange_conserves_bytes() {
+        let cfg = ExperimentConfig {
+            nodes: 48,
+            subnets: 6,
+            trees: 2,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let sc = ScaleScenario::new(&cfg, 14.0).unwrap();
+        let lanes = 1 + sc.extra_lanes().len();
+        let m = sc.run_exchange(14.0, 1, 0.0, true, false);
+        // every lane's exchange moves 2(n-1) stripes of 14/lanes MB, so
+        // the byte total is lane-count invariant
+        assert_eq!(m.transfer_count(), lanes * 2 * 47);
+        assert!((m.total_payload_mb() - 2.0 * 47.0 * 14.0).abs() < 1e-6, "bytes conserved");
     }
 
     #[test]

@@ -131,6 +131,24 @@ impl TransferPlan {
         self.segments > 1
     }
 
+    /// The per-lane plan when one copy is striped round-robin across
+    /// `lanes` edge-disjoint trees (multi-tree dissemination): each lane
+    /// carries `1/lanes` of the logical and wire bytes as
+    /// `ceil(segments / lanes)` units, so the lane payloads sum back to
+    /// exactly one copy. `lanes == 1` returns `self` unchanged — the
+    /// single-tree engine sees the same plan bits as today.
+    pub fn stripe(&self, lanes: usize) -> TransferPlan {
+        assert!(lanes >= 1, "striping needs at least one lane");
+        if lanes == 1 {
+            return *self;
+        }
+        TransferPlan {
+            model_mb: self.model_mb / lanes as f64,
+            wire_mb: self.wire_mb / lanes as f64,
+            segments: self.segments.div_ceil(lanes).max(1),
+        }
+    }
+
     /// Element ranges slicing a flat parameter vector of `len` entries
     /// into the plan's segments: `k` contiguous near-equal chunks, first
     /// `len % k` chunks one element longer, covering `0..len` exactly.
@@ -216,6 +234,37 @@ mod tests {
     #[should_panic(expected = "at least one segment")]
     fn zero_segments_rejected() {
         TransferPlan::segmented(10.0, 0);
+    }
+
+    #[test]
+    fn stripe_identity_for_one_lane() {
+        let p = TransferPlan::segmented(48.0, 6).with_compression(&CompressionConfig::quant(8));
+        let s = p.stripe(1);
+        assert_eq!(s, p);
+        assert_eq!(s.wire_mb().to_bits(), p.wire_mb().to_bits());
+    }
+
+    #[test]
+    fn stripe_splits_bytes_and_segments_across_lanes() {
+        let p = TransferPlan::segmented(48.0, 6);
+        let s = p.stripe(3);
+        assert_eq!(s.segments(), 2);
+        assert!((s.model_mb() - 16.0).abs() < 1e-12);
+        assert!((s.wire_mb() - 16.0).abs() < 1e-12);
+        // lane payloads sum back to one full copy
+        assert!((s.wire_mb() * 3.0 - p.wire_mb()).abs() < 1e-12);
+        // uneven division rounds the per-lane unit count up, never to zero
+        assert_eq!(TransferPlan::segmented(48.0, 4).stripe(3).segments(), 2);
+        assert_eq!(TransferPlan::whole(48.0).stripe(4).segments(), 1);
+    }
+
+    #[test]
+    fn stripe_preserves_compression_ratio() {
+        let p = TransferPlan::segmented(48.0, 8).with_compression(&CompressionConfig::quant(8));
+        let s = p.stripe(2);
+        assert!(s.is_compressed());
+        assert!((s.compression_ratio() - p.compression_ratio()).abs() < 1e-12);
+        assert!((s.wire_mb() * 2.0 - p.wire_mb()).abs() < 1e-12);
     }
 
     #[test]

@@ -59,6 +59,16 @@
 //! measurable (see `benches/engine_pipeline.rs` and
 //! `benches/segment_sweep.rs`).
 //!
+//! Dissemination need not ride a single tree either: the **multi-tree
+//! plane** ([`mst::disjoint`], `--trees k`) carves up to `k` pairwise
+//! edge-disjoint spanning trees from the measured costs and
+//! [`coordinator::engine::RoundEngine::run_forest_round`] stripes each
+//! model copy across them ([`dfl::transfer::TransferPlan::stripe`]) —
+//! `k` thinner concurrent streams over disjoint edges instead of one
+//! thick one through the MST hub, with `trees = 1` bit-identical to the
+//! single-MST engine. `benches/planner_tournament.rs` races flooding,
+//! random gossip, the single MST, and the forest head to head.
+//!
 //! Links are not frozen at session start: `netsim` channels take
 //! scripted shifts or seeded drift, `coordinator::probe` re-measures
 //! pings online through the drivers and re-plans (incremental MST via

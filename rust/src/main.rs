@@ -105,6 +105,9 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(s) = f.get("segment-mb") {
         cfg.segment_mb = s.parse().context("--segment-mb")?;
     }
+    if let Some(s) = f.get("trees") {
+        cfg.trees = s.parse().context("--trees")?;
+    }
     if let Some(s) = f.get("compress") {
         cfg.compress = mosgu::dfl::compress::CompressionKind::parse(s)
             .with_context(|| format!("bad compress codec {s} (none|quant|topk)"))?;
@@ -176,6 +179,8 @@ fn print_usage() {
          \x20                cut-through relay forwarding (default 1 = whole model)\n\
          \x20 --segment-mb F derive the segment count per model from a target\n\
          \x20                segment size in MB (mutually exclusive with --segments)\n\
+         \x20 --trees K      stripe each model copy across up to K edge-disjoint\n\
+         \x20                spanning trees (default 1 = the paper's single MST)\n\
          \x20 --compress C   payload codec for gossiped checkpoints (none|quant|topk);\n\
          \x20                quant/topk shrink every wire transfer and the slot budget,\n\
          \x20                with per-node error feedback in DFL training\n\

@@ -1,0 +1,327 @@
+//! k edge-disjoint spanning trees (multi-tree dissemination plane).
+//!
+//! The paper's planner routes every segment down *one* MST, which leaves
+//! all non-tree links idle. Following the parallel-partial-stream idea of
+//! Segmented Gossip (arXiv:1908.07782), the moderator can instead extract
+//! up to `k` pairwise edge-disjoint spanning trees from the cost graph and
+//! stripe the model's segments round-robin across them, so differently
+//! shaped trees share the forwarding load.
+//!
+//! Extraction is iterated Kruskal with used-edge removal: sort edges once
+//! (NaN-safe `total_cmp`), greedily build a spanning tree, remove its
+//! edges from the residual set, repeat. Ties between equal-weight edges
+//! are broken **degree-aware** (prefer endpoints with low degree in the
+//! tree under construction) so uniform-cost topologies produce path-like
+//! trees instead of a star whose hub would strand the residual graph.
+//! When the residual graph disconnects before `k` trees exist we
+//! gracefully fall back to the trees found so far (a ring admits exactly
+//! one; a complete graph several).
+//! The degree-bounded variant additionally skips edges that would push a
+//! node past `max_degree` inside one tree — a greedy filter, so it retries
+//! unbounded when the bound makes the residual unspannable.
+
+use super::union_find::UnionFind;
+use super::MstError;
+use crate::graph::{Edge, Graph};
+
+/// Extract up to `k` pairwise edge-disjoint spanning trees of `g`.
+///
+/// Always returns at least one tree (an MST — identical to
+/// [`super::kruskal`] whenever edge weights are distinct) or an error;
+/// returns fewer than `k` trees when the residual graph disconnects
+/// first. Deterministic: no RNG, edges ordered by `total_cmp` weight
+/// with a degree-aware tie-break inside equal-weight runs.
+pub fn disjoint_spanning_trees(g: &Graph, k: usize) -> Result<Vec<Graph>, MstError> {
+    forest(g, k, usize::MAX)
+}
+
+/// Like [`disjoint_spanning_trees`] but each tree also respects a per-node
+/// degree cap (bounded fan-out keeps any single relay from serializing a
+/// whole stripe). The cap is a greedy filter, not a feasibility proof: if
+/// a bounded pass cannot span, the pass retries unbounded so the result
+/// still spans whenever the residual graph is connected.
+pub fn degree_bounded_disjoint_trees(
+    g: &Graph,
+    k: usize,
+    max_degree: usize,
+) -> Result<Vec<Graph>, MstError> {
+    forest(g, k, max_degree.max(1))
+}
+
+/// Extract up to `extra` additional spanning trees that are edge-disjoint
+/// from `base` and from each other. Never errors: low connectivity just
+/// yields fewer (possibly zero) trees. This is the moderator's entry
+/// point — lane 0 stays whatever `MstAlgorithm` produced, and the extra
+/// lanes are carved from the residual cost graph.
+pub fn extra_disjoint_trees(g: &Graph, base: &Graph, extra: usize) -> Vec<Graph> {
+    let n = g.node_count();
+    if n == 0 || g.edges().iter().any(|e| !e.weight.is_finite()) {
+        return Vec::new();
+    }
+    let edges = ordered_edges(g);
+    let mut used = vec![false; edges.len()];
+    for be in base.edges() {
+        if let Some(i) = edges.iter().position(|e| e.u == be.u && e.v == be.v) {
+            used[i] = true;
+        }
+    }
+    let mut trees = Vec::new();
+    while trees.len() < extra {
+        let Some(picked) = kruskal_subset(n, &edges, &used, usize::MAX) else { break };
+        trees.push(commit(n, &edges, &mut used, &picked));
+        if n <= 1 {
+            break; // a 1-node graph admits endless trivial trees
+        }
+    }
+    trees
+}
+
+fn forest(g: &Graph, k: usize, max_degree: usize) -> Result<Vec<Graph>, MstError> {
+    let n = g.node_count();
+    if n == 0 {
+        return Err(MstError::Empty);
+    }
+    if let Some(e) = g.edges().iter().find(|e| !e.weight.is_finite()) {
+        return Err(MstError::NonFinite { u: e.u, v: e.v });
+    }
+    let k = k.max(1);
+    let edges = ordered_edges(g);
+    let mut used = vec![false; edges.len()];
+    let mut trees = Vec::new();
+    while trees.len() < k {
+        let picked = kruskal_subset(n, &edges, &used, max_degree)
+            .or_else(|| kruskal_subset(n, &edges, &used, usize::MAX));
+        let Some(picked) = picked else { break };
+        trees.push(commit(n, &edges, &mut used, &picked));
+        if n <= 1 {
+            break; // avoid returning k identical trivial trees
+        }
+    }
+    if trees.is_empty() {
+        return Err(MstError::Disconnected);
+    }
+    Ok(trees)
+}
+
+/// Deterministic NaN-safe ordering: weight via `total_cmp`, then endpoints.
+fn ordered_edges(g: &Graph) -> Vec<Edge> {
+    let mut edges = g.edges().to_vec();
+    edges.sort_by(|a, b| a.weight.total_cmp(&b.weight).then(a.u.cmp(&b.u)).then(a.v.cmp(&b.v)));
+    edges
+}
+
+/// One Kruskal pass over the unused edges, skipping edges that would push
+/// an endpoint past `max_degree` within this tree. Returns the picked
+/// indices iff they span all `n` nodes.
+///
+/// Within each **equal-weight run** the pick is degree-aware: among the
+/// union-eligible candidates, choose the one minimizing
+/// `(deg u + deg v, max(deg u, deg v), u, v)` where degrees count edges
+/// already picked into *this* tree. Plain first-fit would turn every
+/// uniform-cost clique into a star at node 0 — whose hub then has no
+/// residual edges left, so no second disjoint tree could ever exist. The
+/// degree-aware pick yields path-like trees instead, keeping the residual
+/// connected for subsequent passes. On distinct weights every run has
+/// length one and the pass is classical Kruskal.
+fn kruskal_subset(n: usize, edges: &[Edge], used: &[bool], max_degree: usize) -> Option<Vec<usize>> {
+    let mut uf = UnionFind::new(n);
+    let mut deg = vec![0usize; n];
+    let mut picked = Vec::with_capacity(n.saturating_sub(1));
+    let mut i = 0;
+    while i < edges.len() && picked.len() + 1 < n {
+        let mut j = i + 1;
+        while j < edges.len() && edges[j].weight.total_cmp(&edges[i].weight).is_eq() {
+            j += 1;
+        }
+        // drain this equal-weight run degree-aware until nothing unions
+        loop {
+            let mut best: Option<(usize, (usize, usize, usize, usize))> = None;
+            for (ei, e) in edges.iter().enumerate().take(j).skip(i) {
+                if used[ei] || deg[e.u] >= max_degree || deg[e.v] >= max_degree {
+                    continue;
+                }
+                if uf.connected(e.u, e.v) {
+                    continue;
+                }
+                let key = (deg[e.u] + deg[e.v], deg[e.u].max(deg[e.v]), e.u, e.v);
+                let better = match best {
+                    None => true,
+                    Some((_, k)) => key < k,
+                };
+                if better {
+                    best = Some((ei, key));
+                }
+            }
+            let Some((ei, _)) = best else { break };
+            let e = edges[ei];
+            uf.union(e.u, e.v);
+            deg[e.u] += 1;
+            deg[e.v] += 1;
+            picked.push(ei);
+            if picked.len() + 1 == n {
+                break;
+            }
+        }
+        i = j;
+    }
+    (picked.len() + 1 == n.max(1)).then_some(picked)
+}
+
+/// Materialize a picked edge set as a tree and mark its edges used.
+fn commit(n: usize, edges: &[Edge], used: &mut [bool], picked: &[usize]) -> Graph {
+    let mut t = Graph::new(n);
+    for &i in picked {
+        used[i] = true;
+        let e = edges[i];
+        t.add_edge(e.u, e.v, e.weight);
+    }
+    t
+}
+
+/// True iff no edge (as an unordered endpoint pair) appears in more than
+/// one of `trees`. Shared by unit tests and the proptest suite.
+pub fn pairwise_edge_disjoint(trees: &[Graph]) -> bool {
+    let mut seen = std::collections::HashSet::new();
+    trees.iter().flat_map(|t| t.edges()).all(|e| seen.insert((e.u, e.v)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::{complete, ring};
+    use crate::mst::{is_spanning_tree_of, kruskal};
+
+    #[test]
+    fn first_tree_is_the_kruskal_mst() {
+        let g = crate::mst::tests::diamond();
+        let trees = disjoint_spanning_trees(&g, 1).unwrap();
+        assert_eq!(trees.len(), 1);
+        let mst = kruskal(&g).unwrap();
+        assert_eq!(trees[0].sorted_edges(), mst.sorted_edges());
+    }
+
+    #[test]
+    fn complete_six_decomposes_into_three_trees() {
+        // K6 has 15 edges = 3 spanning trees × 5 edges; the degree-aware
+        // greedy achieves the perfect decomposition.
+        let g = complete(6);
+        let trees = disjoint_spanning_trees(&g, 5).unwrap();
+        assert_eq!(trees.len(), 3);
+        assert!(pairwise_edge_disjoint(&trees));
+        for t in &trees {
+            assert!(is_spanning_tree_of(t, &g));
+        }
+    }
+
+    #[test]
+    fn complete_graph_yields_several_disjoint_trees() {
+        let g = complete(10);
+        let trees = disjoint_spanning_trees(&g, 8).unwrap();
+        // K10 admits 5 in theory (45 edges / 9); greedy extraction is not
+        // a perfect packing, but must find several and never exceed 5.
+        assert!(
+            (3..=5).contains(&trees.len()),
+            "expected 3..=5 disjoint trees on K10, got {}",
+            trees.len()
+        );
+        assert!(pairwise_edge_disjoint(&trees));
+        for t in &trees {
+            assert!(is_spanning_tree_of(t, &g));
+            let max_deg = (0..10).map(|u| t.degree(u)).max().unwrap();
+            assert!(max_deg <= 4, "degree-aware greedy built a hub (max degree {max_deg})");
+        }
+    }
+
+    #[test]
+    fn ring_falls_back_to_one_tree() {
+        let g = ring(8);
+        let trees = disjoint_spanning_trees(&g, 3).unwrap();
+        assert_eq!(trees.len(), 1);
+        assert!(is_spanning_tree_of(&trees[0], &g));
+    }
+
+    #[test]
+    fn disconnected_graph_errors() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        assert_eq!(disjoint_spanning_trees(&g, 2).unwrap_err(), MstError::Disconnected);
+    }
+
+    #[test]
+    fn empty_graph_errors() {
+        assert_eq!(disjoint_spanning_trees(&Graph::new(0), 2).unwrap_err(), MstError::Empty);
+    }
+
+    #[test]
+    fn single_node_returns_one_trivial_tree() {
+        let trees = disjoint_spanning_trees(&Graph::new(1), 4).unwrap();
+        assert_eq!(trees.len(), 1);
+        assert_eq!(trees[0].edge_count(), 0);
+    }
+
+    #[test]
+    fn degree_bound_is_respected_on_complete_graph() {
+        let g = complete(9);
+        let trees = degree_bounded_disjoint_trees(&g, 3, 3).unwrap();
+        assert_eq!(trees.len(), 3);
+        assert!(pairwise_edge_disjoint(&trees));
+        for t in &trees {
+            assert!(is_spanning_tree_of(t, &g));
+            for u in 0..9 {
+                assert!(t.degree(u) <= 3, "degree({u}) = {} in bounded tree", t.degree(u));
+            }
+        }
+    }
+
+    #[test]
+    fn degree_bound_falls_back_to_unbounded_on_a_star() {
+        // A star's only spanning tree has a degree-(n-1) hub; the bounded
+        // pass cannot span, so the unbounded retry must kick in.
+        let g = crate::graph::topology::star(6);
+        let trees = degree_bounded_disjoint_trees(&g, 2, 2).unwrap();
+        assert_eq!(trees.len(), 1);
+        assert!(is_spanning_tree_of(&trees[0], &g));
+    }
+
+    #[test]
+    fn extra_trees_avoid_the_base_tree_edges() {
+        // complete overlay where the chain 0-1-…-7 is strictly cheapest,
+        // so the base MST is that chain for any MST algorithm
+        let mut g = Graph::new(8);
+        for u in 0..8 {
+            for v in (u + 1)..8 {
+                let w = if v == u + 1 { 1.0 } else { 2.0 };
+                g.add_edge(u, v, w);
+            }
+        }
+        let base = kruskal(&g).unwrap();
+        assert_eq!(base.edge_count(), 7);
+        let extra = extra_disjoint_trees(&g, &base, 2);
+        assert_eq!(extra.len(), 2);
+        let mut all = vec![base];
+        all.extend(extra);
+        assert!(pairwise_edge_disjoint(&all));
+        for t in &all {
+            assert!(is_spanning_tree_of(t, &g));
+        }
+    }
+
+    #[test]
+    fn extra_trees_empty_when_residual_disconnects() {
+        let g = ring(6);
+        let base = kruskal(&g).unwrap();
+        assert!(extra_disjoint_trees(&g, &base, 2).is_empty());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let g = complete(12);
+        let a = disjoint_spanning_trees(&g, 4).unwrap();
+        let b = disjoint_spanning_trees(&g, 4).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.sorted_edges(), tb.sorted_edges());
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! ablation_mst.rs`) and so property tests can cross-check total weights.
 
 pub mod boruvka;
+pub mod disjoint;
 pub mod hierarchical;
 pub mod incremental;
 pub mod kruskal;
@@ -14,6 +15,7 @@ pub mod prim;
 pub mod union_find;
 
 pub use boruvka::boruvka;
+pub use disjoint::{disjoint_spanning_trees, extra_disjoint_trees};
 pub use hierarchical::stitched_mst;
 pub use kruskal::kruskal;
 pub use prim::prim;

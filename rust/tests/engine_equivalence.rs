@@ -20,13 +20,19 @@
 //! 7. the scale-out plane anchors to the flat engine: single-subnet
 //!    hierarchical planning reproduces the flat planner bit for bit, and
 //!    the single-shard sharded simulator replays the flat engine's round
-//!    **bit for bit** across topologies, jitter, and failure injection.
+//!    **bit for bit** across topologies, jitter, and failure injection;
+//! 8. the multi-tree plane anchors to the single-MST engine: an explicit
+//!    `trees = 1` config carves no extra lanes and replays the default
+//!    session **bit for bit** across every path (engine, segmented,
+//!    sharded), a one-lane forest round is exactly the segmented engine
+//!    on that tree, and `trees = 2` forests stay edge-disjoint, conserve
+//!    bytes, and replay deterministically.
 
 use mosgu::coloring::bfs_coloring;
 use mosgu::config::ExperimentConfig;
 use mosgu::coordinator::broadcast::{tag_owner, tag_sender};
 use mosgu::coordinator::engine::driver::{LiveDriver, LogicalDriver, SimDriver};
-use mosgu::coordinator::engine::{RoundEngine, RoundOptions};
+use mosgu::coordinator::engine::{RoundEngine, RoundOptions, TreeLane};
 use mosgu::coordinator::example;
 use mosgu::coordinator::gossip::{run_logical_round, GossipState, Send};
 use mosgu::coordinator::schedule::{build_schedule, Schedule};
@@ -652,6 +658,120 @@ fn logical_driver_and_sim_driver_agree_on_protocol_structure() {
     let timed = session.run_mosgu_round(14.0, 1, 0.0);
     assert_eq!(logical.slots, timed.slots);
     assert_eq!(logical.transfer_count(), timed.transfer_count());
+}
+
+#[test]
+fn trees_one_config_is_bit_identical_across_engine_paths() {
+    // the multi-tree plane's compatibility anchor (this PR's acceptance
+    // bar): an explicit `--trees 1` config must carve no extra lanes and
+    // replay the default single-MST session bit for bit on every paper
+    // topology — single rounds under jitter and failure injection,
+    // segmented plans, and the sharded runner — and still match the
+    // seed's legacy slot loop
+    for kind in TopologyKind::ALL {
+        for jitter in [0.0, 0.08] {
+            let base = ExperimentConfig {
+                topology: kind,
+                latency_jitter: jitter,
+                subnets: 1,
+                ..Default::default()
+            };
+            let pinned = ExperimentConfig { trees: 1, ..base.clone() };
+            let s_base = GossipSession::new(&base).unwrap();
+            let s_pin = GossipSession::new(&pinned).unwrap();
+            assert!(
+                s_pin.extra_lanes().is_empty(),
+                "{kind:?}: trees = 1 must never carve extra lanes"
+            );
+            for failure_prob in [0.0, 0.15] {
+                let a = s_base.run_mosgu_round(14.0, 3, failure_prob);
+                let b = s_pin.run_mosgu_round(14.0, 3, failure_prob);
+                let label = format!("{kind:?} j={jitter} f={failure_prob}");
+                assert_rounds_bit_identical(&b, &a, &label);
+                let legacy = legacy_mosgu_round(&s_pin, 14.0, 3, failure_prob);
+                assert_metrics_match_legacy(&b, &legacy);
+            }
+            let seg_a = s_base.run_mosgu_round_planned(TransferPlan::segmented(36.8, 4), 3, 0.15);
+            let seg_b = s_pin.run_mosgu_round_planned(TransferPlan::segmented(36.8, 4), 3, 0.15);
+            assert_rounds_bit_identical(&seg_b, &seg_a, &format!("{kind:?} segmented"));
+            let sh_a = s_base.run_sharded_round(14.0, 3, 0.15, false);
+            let sh_b = s_pin.run_sharded_round(14.0, 3, 0.15, false);
+            assert_rounds_bit_identical(&sh_b, &sh_a, &format!("{kind:?} sharded"));
+            // compression composes: the quantized wire plan stays on the
+            // single-tree path under an explicit trees = 1
+            let mut comp = base.clone();
+            comp.compress = mosgu::dfl::compress::CompressionKind::Quant;
+            comp.quant_bits = 8;
+            let comp_pin = ExperimentConfig { trees: 1, ..comp.clone() };
+            let qa = GossipSession::new(&comp).unwrap().run_mosgu_round(14.0, 3, 0.15);
+            let qb = GossipSession::new(&comp_pin).unwrap().run_mosgu_round(14.0, 3, 0.15);
+            assert_rounds_bit_identical(&qb, &qa, &format!("{kind:?} quant"));
+        }
+    }
+}
+
+#[test]
+fn single_lane_forest_round_matches_segmented_engine_on_all_topologies() {
+    // the forest executor's own anchor: one lane carrying the session's
+    // tree + schedule is exactly the segmented cut-through engine on that
+    // tree (`stripe(1)` is the identity, so the lane sees the same plan
+    // bits), bit for bit, including under failure injection. The session
+    // keeps whole-model `trees = 1` rounds on `run_round`, which the
+    // tests above pin to the legacy slot loop.
+    for kind in TopologyKind::ALL {
+        let session = GossipSession::new(&quiet_cfg(kind)).unwrap();
+        let plan = TransferPlan::segmented(14.0, 4);
+        for failure_prob in [0.0, 0.15] {
+            let reference = session.run_mosgu_round_planned(plan, 3, failure_prob);
+            let mut driver = SimDriver::new(session.testbed(), 3);
+            let mut engine = RoundEngine::new(&mut driver, session.schedule());
+            let lanes = vec![TreeLane {
+                tree: session.tree().clone(),
+                schedule: session.schedule().clone(),
+            }];
+            let m = engine.run_forest_round(
+                &lanes,
+                0,
+                RoundOptions {
+                    plan,
+                    failure_prob,
+                    max_slots: 8 * 10 + 64,
+                    failure_rng: Pcg64::new(3 ^ 0xfa11),
+                },
+            );
+            let label = format!("{kind:?} f={failure_prob}");
+            assert_rounds_bit_identical(&m, &reference, &label);
+            assert_eq!(m.relay_copies, reference.relay_copies, "{label}: cascades diverged");
+        }
+    }
+}
+
+#[test]
+fn multi_tree_rounds_stay_disjoint_conserve_bytes_and_replay() {
+    // trees = 2 on the dense default overlay: the session plans a second
+    // edge-disjoint lane, every lane moves each model across its n-1
+    // edges at half the bytes (totals conserved), and fixed seeds replay
+    // bit for bit — through both the event engine and the sharded runner
+    let cfg = ExperimentConfig { trees: 2, ..quiet_cfg(TopologyKind::Complete) };
+    let session = GossipSession::new(&cfg).unwrap();
+    assert_eq!(session.extra_lanes().len(), 1, "complete n=10 admits a second lane");
+    let lanes = session.lanes();
+    for (a, la) in lanes.iter().enumerate() {
+        for lb in &lanes[a + 1..] {
+            for e in la.tree.edges() {
+                assert!(!lb.tree.has_edge(e.u, e.v), "lanes share edge {}-{}", e.u, e.v);
+            }
+        }
+    }
+    let m = session.run_mosgu_round(48.0, 1, 0.0);
+    assert_eq!(m.transfer_count(), 2 * 90, "each lane moves 90 half-size stripes");
+    assert!((m.total_payload_mb() - 90.0 * 48.0).abs() < 1e-6, "byte total is lane-invariant");
+    let again = session.run_mosgu_round(48.0, 1, 0.0);
+    assert_eq!(m.total_time_s.to_bits(), again.total_time_s.to_bits());
+    assert_eq!(m.transfers, again.transfers);
+    let sharded = session.run_sharded_round(48.0, 1, 0.0, false);
+    assert_eq!(sharded.transfer_count(), 2 * 90);
+    assert!((sharded.total_payload_mb() - 90.0 * 48.0).abs() < 1e-6);
 }
 
 #[test]

@@ -1,0 +1,125 @@
+//! Property tests for `mst::disjoint` (seeded randomized loops — the
+//! offline toolchain carries no proptest crate, so properties run over a
+//! deterministic family of random connected graphs). Pinned invariants:
+//! every extracted tree spans the input graph using only its edges, trees
+//! are pairwise edge-disjoint, extraction is deterministic, sparse graphs
+//! fall back to fewer trees than requested, and `extra_disjoint_trees`
+//! never touches the base tree's edges.
+
+use mosgu::graph::Graph;
+use mosgu::mst::disjoint::{degree_bounded_disjoint_trees, pairwise_edge_disjoint};
+use mosgu::mst::{disjoint_spanning_trees, extra_disjoint_trees, is_spanning_tree_of, kruskal};
+use mosgu::util::rng::Pcg64;
+
+/// Random connected graph: a random spanning-tree backbone (node v joins
+/// a uniformly chosen earlier node) plus `extra` random chords, all with
+/// distinct-ish random weights.
+fn random_connected_graph(rng: &mut Pcg64, n: usize, extra: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for v in 1..n {
+        let u = rng.gen_range(v);
+        g.add_edge(u, v, rng.gen_f64_range(1.0, 100.0));
+    }
+    let mut added = 0;
+    let mut attempts = 0;
+    while added < extra && attempts < 20 * extra + 100 {
+        attempts += 1;
+        let u = rng.gen_range(n);
+        let v = rng.gen_range(n);
+        if u != v && !g.has_edge(u, v) {
+            g.add_edge(u.min(v), u.max(v), rng.gen_f64_range(1.0, 100.0));
+            added += 1;
+        }
+    }
+    g
+}
+
+#[test]
+fn extracted_trees_span_using_graph_edges_and_stay_disjoint() {
+    let mut rng = Pcg64::new(0xd15301);
+    for case in 0..30 {
+        let n = 5 + rng.gen_range(10); // 5..=14
+        let extra = rng.gen_range(2 * n);
+        let g = random_connected_graph(&mut rng, n, extra);
+        let k = 1 + rng.gen_range(4); // 1..=4
+        let trees = disjoint_spanning_trees(&g, k).unwrap();
+        assert!(
+            !trees.is_empty() && trees.len() <= k,
+            "case {case}: got {} trees for k = {k}",
+            trees.len()
+        );
+        assert!(pairwise_edge_disjoint(&trees), "case {case}");
+        // the greedy can never exceed the edge-count packing bound
+        assert!(trees.len() <= g.edge_count() / (n - 1), "case {case}");
+        for t in &trees {
+            assert!(is_spanning_tree_of(t, &g), "case {case}");
+            for e in t.edges() {
+                assert!(g.has_edge(e.u, e.v), "case {case}: tree edge not in graph");
+            }
+        }
+    }
+}
+
+#[test]
+fn extraction_is_deterministic_per_graph() {
+    let mut rng = Pcg64::new(0xd15302);
+    for _ in 0..20 {
+        let n = 6 + rng.gen_range(8);
+        let g = random_connected_graph(&mut rng, n, n);
+        let a = disjoint_spanning_trees(&g, 3).unwrap();
+        let b = disjoint_spanning_trees(&g, 3).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.sorted_edges(), tb.sorted_edges());
+        }
+    }
+}
+
+#[test]
+fn sparse_graphs_fall_back_to_fewer_trees() {
+    let mut rng = Pcg64::new(0xd15303);
+    for case in 0..30 {
+        let n = 5 + rng.gen_range(10);
+        // fewer than n-1 chords: after the first tree the residual has
+        // < n-1 edges left, so exactly one tree can ever come out
+        let extra = rng.gen_range(n - 1);
+        let g = random_connected_graph(&mut rng, n, extra);
+        let trees = disjoint_spanning_trees(&g, 4).unwrap();
+        assert_eq!(trees.len(), 1, "case {case}: n={n} m={}", g.edge_count());
+        assert!(is_spanning_tree_of(&trees[0], &g));
+    }
+}
+
+#[test]
+fn degree_bounded_extraction_still_spans_and_stays_disjoint() {
+    let mut rng = Pcg64::new(0xd15304);
+    for case in 0..20 {
+        let n = 6 + rng.gen_range(8);
+        let g = random_connected_graph(&mut rng, n, 3 * n);
+        let trees = degree_bounded_disjoint_trees(&g, 3, 3).unwrap();
+        assert!(!trees.is_empty(), "case {case}");
+        assert!(pairwise_edge_disjoint(&trees), "case {case}");
+        for t in &trees {
+            assert!(is_spanning_tree_of(t, &g), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn extra_trees_never_reuse_base_edges() {
+    let mut rng = Pcg64::new(0xd15305);
+    for case in 0..25 {
+        let n = 5 + rng.gen_range(10);
+        let extra_chords = rng.gen_range(3 * n);
+        let g = random_connected_graph(&mut rng, n, extra_chords);
+        let base = kruskal(&g).unwrap();
+        let extra = extra_disjoint_trees(&g, &base, 3);
+        assert!(extra.len() <= 3, "case {case}");
+        let mut all = vec![base];
+        all.extend(extra.iter().cloned());
+        assert!(pairwise_edge_disjoint(&all), "case {case}: a lane reused a base edge");
+        for t in &extra {
+            assert!(is_spanning_tree_of(t, &g), "case {case}");
+        }
+    }
+}

@@ -28,7 +28,7 @@ fn paper_schedule() -> Schedule {
 fn chain_epoch() -> PlanEpoch {
     let tree = topology::chain(10);
     let coloring = bfs_coloring(&tree);
-    PlanEpoch { tree, schedule: Schedule { coloring, slot_len_s: 1.0, first_color: 0 } }
+    PlanEpoch::single(tree, Schedule { coloring, slot_len_s: 1.0, first_color: 0 })
 }
 
 /// Three pipelined rounds with a forced replan after round 0 (adopted
