@@ -1,0 +1,146 @@
+//! Robustness sweep: honest-node consensus under each Byzantine attack ×
+//! fold policy, driven through the chaos harness (real engine timing and
+//! reception orders, synthetic payloads). Emits one `JSON {...}` line per
+//! cell for the bench trajectory; CI uploads them as the
+//! `robustness-sweep` artifact.
+//!
+//! Attacks: `none`, scaled poison, random poison, a sybil clique, and a
+//! dropping relay on tree edges — see `dfl::adversary`. Folds: the plain
+//! mean plus trimmed-mean / coordinate-median / Krum — see `dfl::robust`.
+//! The sweep's gate is the PR's acceptance bar: every robust fold keeps
+//! honest outputs inside the trusted-input envelope under every attack,
+//! while the plain mean is demonstrably defeated by scaled poison.
+//!
+//! ```bash
+//! cargo bench --bench robustness_sweep             # full grid
+//! cargo bench --bench robustness_sweep -- --smoke  # CI smoke subset
+//! ```
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::dfl::adversary::AdversaryKind;
+use mosgu::dfl::chaos::{run_chaos, ChaosOptions};
+use mosgu::dfl::robust::FoldKind;
+use mosgu::graph::topology::TopologyKind;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let topologies: &[TopologyKind] = if smoke {
+        &[TopologyKind::BalancedTree]
+    } else {
+        &[TopologyKind::Chain, TopologyKind::Ring, TopologyKind::BalancedTree]
+    };
+    let attacks: &[AdversaryKind] = if smoke {
+        &[AdversaryKind::None, AdversaryKind::ScaledPoison, AdversaryKind::DroppingRelay]
+    } else {
+        &[
+            AdversaryKind::None,
+            AdversaryKind::ScaledPoison,
+            AdversaryKind::RandomPoison,
+            AdversaryKind::SybilClique,
+            AdversaryKind::DroppingRelay,
+        ]
+    };
+    let folds =
+        [FoldKind::Mean, FoldKind::TrimmedMean, FoldKind::CoordinateMedian, FoldKind::Krum];
+    let opts = ChaosOptions {
+        rounds: if smoke { 2 } else { 4 },
+        dim: if smoke { 16 } else { 64 },
+        ..Default::default()
+    };
+
+    section(&format!(
+        "robustness sweep: honest consensus under attack x fold ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:<16} {:<18} {:>10} {:>4} {:>12} {:>12} {:>8} {:>9}",
+        "topology", "adversary", "fold", "byz", "spread", "deviation", "bounded", "time_s"
+    );
+    let mut ok = true;
+    for &kind in topologies {
+        for &adversary in attacks {
+            for &fold in &folds {
+                let cfg = ExperimentConfig {
+                    topology: kind,
+                    nodes: 10,
+                    latency_jitter: 0.0,
+                    adversary,
+                    fold,
+                    ..Default::default()
+                };
+                let report = run_chaos(&cfg, &opts).expect("chaos run");
+                println!(
+                    "{:<16} {:<18} {:>10} {:>4} {:>12.3e} {:>12.3e} {:>8} {:>9.3}",
+                    kind.name(),
+                    report.adversary,
+                    report.fold,
+                    report.byzantine.len(),
+                    report.final_spread(),
+                    report.max_deviation(),
+                    report.bounded(),
+                    report.total_time_s
+                );
+                println!(
+                    "JSON {{\"bench\":\"robustness_sweep\",\"topology\":\"{}\",\
+                     \"adversary\":\"{}\",\"fold\":\"{}\",\"byzantine\":{},\
+                     \"rounds\":{},\"final_spread\":{:.6e},\"max_deviation\":{:.6e},\
+                     \"bounded\":{},\"total_s\":{:.6}}}",
+                    kind.name(),
+                    report.adversary,
+                    report.fold,
+                    report.byzantine.len(),
+                    opts.rounds,
+                    report.final_spread(),
+                    report.max_deviation(),
+                    report.bounded(),
+                    report.total_time_s
+                );
+                // the robust folds must hold everywhere; the plain mean
+                // only where nobody poisons the payloads
+                if fold != FoldKind::Mean || !adversary_corrupts(adversary) {
+                    ok &= report.bounded();
+                }
+            }
+        }
+    }
+
+    section("acceptance check: trimmed mean holds where the plain mean breaks");
+    let poisoned = ExperimentConfig {
+        topology: TopologyKind::BalancedTree,
+        nodes: 10,
+        latency_jitter: 0.0,
+        adversary: AdversaryKind::ScaledPoison,
+        poison_scale: -100.0,
+        ..Default::default()
+    };
+    let mean = run_chaos(&poisoned, &opts).expect("mean run");
+    let robust = run_chaos(
+        &ExperimentConfig { fold: FoldKind::TrimmedMean, ..poisoned },
+        &opts,
+    )
+    .expect("trimmed run");
+    let contrast = !mean.bounded() && robust.bounded();
+    println!(
+        "  mean: bounded={} deviation={:.3e}; trimmed: bounded={} deviation={:.3e} -> {}",
+        mean.bounded(),
+        mean.max_deviation(),
+        robust.bounded(),
+        robust.max_deviation(),
+        if contrast { "pass" } else { "FAIL" }
+    );
+    ok &= contrast;
+    println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+/// Whether the attack corrupts payload content (the plain mean's envelope
+/// gate is only meaningful when it does not).
+fn adversary_corrupts(kind: AdversaryKind) -> bool {
+    matches!(
+        kind,
+        AdversaryKind::ScaledPoison | AdversaryKind::RandomPoison | AdversaryKind::SybilClique
+    )
+}

@@ -7,7 +7,9 @@ pub mod parser;
 pub use parser::{ParseError, TomlValue, parse_toml};
 
 use crate::coloring::ColoringAlgorithm;
+use crate::dfl::adversary::{AdversaryConfig, AdversaryKind};
 use crate::dfl::compress::{CompressionConfig, CompressionKind};
+use crate::dfl::robust::{FoldKind, FoldPolicy};
 use crate::dfl::transfer::TransferPlan;
 use crate::graph::generators::GeneratorKind;
 use crate::graph::topology::{TopologyKind, TopologyParams};
@@ -99,6 +101,29 @@ pub struct ExperimentConfig {
     /// triggers a mid-session replan (0 = replan after every sweep).
     /// CLI: `--replan-threshold`.
     pub replan_threshold: f64,
+    /// Byzantine node model for the robustness plane (`none` = every
+    /// node honest, bit-identical to the legacy engine; `scaled-poison`,
+    /// `random-poison`, `sybil`, `dropping-relay` compromise
+    /// `adversary_frac` of the nodes). CLI: `--adversary`.
+    pub adversary: AdversaryKind,
+    /// Fraction of nodes marked Byzantine in (0, 1) (at least one node
+    /// when an attack is active). CLI: `--adversary-frac`.
+    pub adversary_frac: f64,
+    /// Poison multiplier for scaled-poison / sybil payloads; its
+    /// magnitude is the random-poison noise amplitude. CLI:
+    /// `--poison-scale`.
+    pub poison_scale: f64,
+    /// Fraction of a dropping relay's tree edges it junks, in (0, 1].
+    /// CLI: `--drop-edge-frac`.
+    pub drop_edge_frac: f64,
+    /// Aggregation rule for the FedAvg fold (`mean` = the legacy
+    /// pairwise running average, bit-identical; `trimmed-mean`,
+    /// `median`, `krum` are the robust policies). CLI: `--fold`.
+    pub fold: FoldKind,
+    /// Byzantine tolerance `f` the robust folds assume (0 = auto:
+    /// the scenario's actual compromised count, or `max(1, n/5)` blind).
+    /// CLI: `--fold-f`.
+    pub fold_f: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -135,6 +160,12 @@ impl Default for ExperimentConfig {
             trees: 1,
             probe_every: 0,
             replan_threshold: 0.25,
+            adversary: AdversaryKind::None,
+            adversary_frac: 0.2,
+            poison_scale: -10.0,
+            drop_edge_frac: 1.0,
+            fold: FoldKind::Mean,
+            fold_f: 0,
         }
     }
 }
@@ -240,6 +271,24 @@ impl ExperimentConfig {
             "replan_threshold" => {
                 self.replan_threshold = value.as_float().ok_or_else(|| bad("float"))?
             }
+            "adversary" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.adversary = AdversaryKind::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "adversary_frac" => {
+                self.adversary_frac = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "poison_scale" => self.poison_scale = value.as_float().ok_or_else(|| bad("float"))?,
+            "drop_edge_frac" => {
+                self.drop_edge_frac = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "fold" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.fold = FoldKind::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
+            "fold_f" => self.fold_f = value.as_int().ok_or_else(|| bad("integer"))? as usize,
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -317,6 +366,20 @@ impl ExperimentConfig {
         if self.trees == 0 || self.trees >= self.nodes {
             return reject("trees", "need 1 <= trees < nodes");
         }
+        // adversary knobs stay valid even while dormant (adversary =
+        // none), same contract as the compression plane; ranges live in
+        // AdversaryConfig::validate
+        if let Err(why) = self.adversary_config().validate() {
+            return Err(ConfigError::Value("adversary".into(), why));
+        }
+        // upper bound doubles as the negative-wrap guard: a fold cannot
+        // assume every node (or more) is Byzantine
+        if self.fold_f >= self.nodes {
+            return reject("fold_f", "need 0 <= fold_f < nodes (0 = auto)");
+        }
+        if let Err(why) = self.fold_policy(1).validate() {
+            return Err(ConfigError::Value("fold".into(), why));
+        }
         Ok(())
     }
 
@@ -327,6 +390,23 @@ impl ExperimentConfig {
             quant_bits: self.quant_bits,
             topk_frac: self.topk_frac,
         }
+    }
+
+    /// The configured Byzantine attack (knobs included).
+    pub fn adversary_config(&self) -> AdversaryConfig {
+        AdversaryConfig {
+            kind: self.adversary,
+            frac: self.adversary_frac,
+            poison_scale: self.poison_scale as f32,
+            drop_edge_frac: self.drop_edge_frac,
+        }
+    }
+
+    /// The configured fold policy; `auto_f` substitutes for `fold_f = 0`
+    /// (sessions pass the scenario's actual Byzantine count).
+    pub fn fold_policy(&self, auto_f: usize) -> FoldPolicy {
+        let f = if self.fold_f == 0 { auto_f } else { self.fold_f };
+        FoldPolicy { kind: self.fold, f }
     }
 
     /// The transfer plan this config prescribes for a `model_mb`-sized
@@ -559,6 +639,63 @@ backbone_latency_ms = 8.5
         );
         assert!(ExperimentConfig::from_toml_str("topk_frac = 0.0").is_err());
         assert!(ExperimentConfig::from_toml_str("topk_frac = 1.5").is_err());
+    }
+
+    #[test]
+    fn adversary_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "adversary = \"scaled-poison\"\nadversary_frac = 0.3\npoison_scale = -5.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.adversary, AdversaryKind::ScaledPoison);
+        assert_eq!(cfg.adversary_frac, 0.3);
+        assert_eq!(cfg.poison_scale, -5.0);
+        let a = cfg.adversary_config();
+        assert_eq!(a.kind, AdversaryKind::ScaledPoison);
+        assert_eq!(a.poison_scale, -5.0f32);
+
+        let cfg =
+            ExperimentConfig::from_toml_str("adversary = \"drop\"\ndrop_edge_frac = 0.5").unwrap();
+        assert_eq!(cfg.adversary, AdversaryKind::DroppingRelay);
+        assert_eq!(cfg.drop_edge_frac, 0.5);
+
+        // defaults keep every node honest
+        let d = ExperimentConfig::default();
+        assert_eq!(d.adversary, AdversaryKind::None);
+        assert!(d.adversary_config().is_none());
+
+        assert!(ExperimentConfig::from_toml_str("adversary = \"evil\"").is_err());
+        // dormant knobs are still range-checked (compression-plane contract)
+        assert!(ExperimentConfig::from_toml_str("adversary_frac = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("adversary_frac = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("drop_edge_frac = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("drop_edge_frac = 1.5").is_err());
+    }
+
+    #[test]
+    fn fold_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str("fold = \"trimmed-mean\"\nfold_f = 2").unwrap();
+        assert_eq!(cfg.fold, FoldKind::TrimmedMean);
+        assert_eq!(cfg.fold_f, 2);
+        let p = cfg.fold_policy(3);
+        assert_eq!(p.kind, FoldKind::TrimmedMean);
+        assert_eq!(p.f, 2, "explicit fold_f wins over auto");
+        // fold_f = 0 defers to the caller's auto value
+        let cfg = ExperimentConfig::from_toml_str("fold = \"krum\"").unwrap();
+        assert_eq!(cfg.fold_policy(3).f, 3);
+
+        // the default is the legacy pairwise mean
+        let d = ExperimentConfig::default();
+        assert_eq!(d.fold, FoldKind::Mean);
+        assert_eq!(d.fold_f, 0);
+        assert!(d.fold_policy(2).is_mean());
+
+        assert!(ExperimentConfig::from_toml_str("fold = \"average\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("fold_f = 10").is_err(), "fold_f must be < nodes");
+        assert!(
+            ExperimentConfig::from_toml_str("fold_f = -1").is_err(),
+            "negative values must not wrap through the usize cast"
+        );
     }
 
     #[test]

@@ -163,6 +163,11 @@ pub struct RoundOptions {
     /// (sender, recipient) order for whole-model plans and in completion
     /// order for segmented plans.
     pub failure_rng: Pcg64,
+    /// Byzantine dropping-relay edges (robustness plane): forwards over
+    /// these directed tree edges deliver junk content. `None` — the
+    /// default — leaves the round's gossip state untouched, so honest
+    /// runs stay bit-identical.
+    pub drops: Option<Rc<crate::dfl::adversary::DropPlan>>,
 }
 
 impl RoundOptions {
@@ -173,7 +178,13 @@ impl RoundOptions {
 
     /// A failure-free round under an explicit transfer plan.
     pub fn reliable_plan(plan: TransferPlan, max_slots: usize) -> Self {
-        RoundOptions { plan, failure_prob: 0.0, max_slots, failure_rng: Pcg64::new(0) }
+        RoundOptions {
+            plan,
+            failure_prob: 0.0,
+            max_slots,
+            failure_rng: Pcg64::new(0),
+            drops: None,
+        }
     }
 }
 
@@ -208,6 +219,10 @@ pub struct PipelineOptions {
     pub max_slots: usize,
     pub failure_prob: f64,
     pub failure_rng: Pcg64,
+    /// Byzantine dropping-relay edges (see [`RoundOptions::drops`]):
+    /// every pipelined round's state gets the plan installed, junked
+    /// copies are excluded from [`PipelineMetrics::received`].
+    pub drops: Option<Rc<crate::dfl::adversary::DropPlan>>,
 }
 
 impl PipelineOptions {
@@ -224,6 +239,7 @@ impl PipelineOptions {
             max_slots: (rounds as usize + 1) * (8 * nodes + 64),
             failure_prob: 0.0,
             failure_rng: Pcg64::new(0),
+            drops: None,
         }
     }
 }
@@ -664,6 +680,12 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
     ) -> RoundMetrics {
         let plan = opts.plan;
         let segmented = plan.is_segmented();
+        // install the adversary's dropping-relay plan, if any; `None`
+        // deliberately leaves the state alone so callers that staged
+        // drops on it directly (tests) keep them across run_round
+        if opts.drops.is_some() {
+            state.set_drops(opts.drops.clone());
+        }
         // drivers may be long-lived (pipelining); diff counters per round
         let counters_at_start = self.driver.sim_counters();
         // cut-through relays need the tree while the state is mutably
@@ -806,6 +828,12 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let counters_at_start = self.driver.sim_counters();
         let mut states: Vec<GossipState> =
             lanes.iter().map(|l| GossipState::new(l.tree.clone(), round)).collect();
+        if opts.drops.is_some() {
+            // a dropping relay junks its forwards on every lane it sits on
+            for st in states.iter_mut() {
+                st.set_drops(opts.drops.clone());
+            }
+        }
         let trees: Vec<&Graph> = lanes.iter().map(|l| &l.tree).collect();
         let mut relay_copies_total = 0usize;
         let mut slots_used = 0;
@@ -930,21 +958,28 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             Rc::new(PlanEpoch::single(tree.clone(), self.schedule.clone()));
         let mut replans: Vec<ReplanEvent> = Vec::new();
 
-        let fresh_round = |epoch: &Rc<PlanEpoch>, round: u64, now: f64, slot: usize| ActiveRound {
-            state: GossipState::unseeded(epoch.tree.clone(), round),
-            plan: Rc::clone(epoch),
-            seeded: vec![false; n],
-            seeded_count: 0,
-            own_left: own_copies,
-            phase: RoundPhase {
-                round,
-                first_seed_s: now,
-                all_seeded_s: now,
-                exchange_done_s: f64::NAN,
-                done_s: f64::NAN,
-                first_slot: slot,
-                last_slot: slot,
-            },
+        let drops = opts.drops.clone();
+        let fresh_round = |epoch: &Rc<PlanEpoch>, round: u64, now: f64, slot: usize| {
+            let mut state = GossipState::unseeded(epoch.tree.clone(), round);
+            if drops.is_some() {
+                state.set_drops(drops.clone());
+            }
+            ActiveRound {
+                state,
+                plan: Rc::clone(epoch),
+                seeded: vec![false; n],
+                seeded_count: 0,
+                own_left: own_copies,
+                phase: RoundPhase {
+                    round,
+                    first_seed_s: now,
+                    all_seeded_s: now,
+                    exchange_done_s: f64::NAN,
+                    done_s: f64::NAN,
+                    first_slot: slot,
+                    last_slot: slot,
+                },
+            }
         };
 
         let mut active: Vec<ActiveRound> = Vec::new();
@@ -1135,6 +1170,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 }
                 ar.phase.done_s = end_s;
                 ar.phase.last_slot = slot;
+                // junked copies (dropping-relay forwards) never reach the
+                // fold: dissemination *timing* is adversary-blind, but the
+                // aggregation layer only folds authentic payloads
                 let orders: Vec<Vec<NodeId>> = (0..n)
                     .map(|u| {
                         ar.state
@@ -1142,7 +1180,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                             .held_order()
                             .iter()
                             .map(|k| k.owner)
-                            .filter(|&o| o != u)
+                            .filter(|&o| o != u && !ar.state.is_junk(u, o))
                             .collect()
                     })
                     .collect();
@@ -1292,6 +1330,7 @@ mod tests {
             failure_prob: 0.2,
             max_slots: 144,
             failure_rng: Pcg64::new(42),
+            drops: None,
         };
         let m = engine.run_round(&mut state, opts, |_, _| {});
         assert!(state.is_complete());
@@ -1376,6 +1415,7 @@ mod tests {
             failure_prob: 0.2,
             max_slots: 256,
             failure_rng: Pcg64::new(9),
+            drops: None,
         };
         let m = engine.run_round(&mut state, opts, |_, _| {});
         assert!(state.is_complete());
@@ -1484,6 +1524,7 @@ mod tests {
                 failure_prob: 0.2,
                 max_slots: 512,
                 failure_rng: Pcg64::new(9),
+                drops: None,
             },
         );
         // disrupted lane-copies spend bytes and retransmit: strictly more

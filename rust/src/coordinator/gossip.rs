@@ -17,7 +17,10 @@
 
 use super::queue::{GossipQueue, ModelKey, QueueEntry};
 use super::schedule::Schedule;
+use crate::dfl::adversary::DropPlan;
 use crate::graph::{Graph, NodeId};
+use std::collections::HashSet;
+use std::rc::Rc;
 
 /// One delivered copy: `from` forwards model `key` to `to`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,6 +53,14 @@ pub struct GossipState {
     tree: Graph,
     queues: Vec<GossipQueue>,
     round: u64,
+    /// Byzantine dropping-relay plan (robustness plane). `None` — the
+    /// default — is the zero-overhead honest path.
+    drops: Option<Rc<DropPlan>>,
+    /// `(holder, owner)` pairs whose held copy is junk: a dropping relay
+    /// garbled the content somewhere upstream. Timing, queueing and
+    /// completion are untouched (the attack is stealthy — right-sized
+    /// garbage bytes still flow); only the fold excludes these copies.
+    junk: HashSet<(NodeId, NodeId)>,
 }
 
 impl GossipState {
@@ -69,7 +80,44 @@ impl GossipState {
         assert!(tree.is_tree(), "gossip graph must be the moderator's MST");
         let n = tree.node_count();
         let queues: Vec<GossipQueue> = (0..n).map(GossipQueue::new).collect();
-        GossipState { tree, queues, round }
+        GossipState { tree, queues, round, drops: None, junk: HashSet::new() }
+    }
+
+    /// Install (or clear) the Byzantine dropping-relay plan. Junk markers
+    /// from a previous plan are discarded.
+    pub fn set_drops(&mut self, drops: Option<Rc<DropPlan>>) {
+        self.drops = drops;
+        self.junk.clear();
+    }
+
+    /// Whether the copy of `owner`'s model held at `holder` is junk
+    /// (garbled by a dropping relay upstream). Junk copies must not feed
+    /// the fold.
+    pub fn is_junk(&self, holder: NodeId, owner: NodeId) -> bool {
+        !self.junk.is_empty() && self.junk.contains(&(holder, owner))
+    }
+
+    /// Number of junked copies across all nodes (diagnostics).
+    pub fn junk_count(&self) -> usize {
+        self.junk.len()
+    }
+
+    /// Track content integrity for a delivery: the copy lands junked if
+    /// the sender's own held copy was already junk (garbage propagates
+    /// downstream) or the sender is a dropping relay junking this edge.
+    /// A node's **own** model is always sent honestly (`owner == from`) —
+    /// the relay attack corrupts only what it forwards for others, which
+    /// both keeps the attacker covert and matches the lethal case: a
+    /// relay that garbles its own model too would be trivially detected.
+    fn track_junk(&mut self, send: Send) {
+        if let Some(drops) = &self.drops {
+            if send.key.owner != send.from
+                && (self.junk.contains(&(send.from, send.key.owner))
+                    || drops.drops(send.from, send.to))
+            {
+                self.junk.insert((send.to, send.key.owner));
+            }
+        }
     }
 
     /// Seed node `u`'s locally trained model for this round (panics if
@@ -132,6 +180,7 @@ impl GossipState {
     /// the recipient (false = deduplicated retransmission). Degree-1
     /// recipients hold but never re-forward (§III-D).
     pub fn deliver(&mut self, send: Send) -> bool {
+        self.track_junk(send);
         let enqueue = self.tree.degree(send.to) > 1;
         self.queues[send.to].receive(send.key, send.from, enqueue)
     }
@@ -141,6 +190,7 @@ impl GossipState {
     /// cascade already forwarded every segment inline as it arrived (see
     /// `coordinator::engine`). Returns `true` if the model was new.
     pub fn deliver_reassembled(&mut self, send: Send) -> bool {
+        self.track_junk(send);
         self.queues[send.to].receive(send.key, send.from, false)
     }
 
@@ -433,6 +483,36 @@ mod tests {
         let trace = run_logical_round(&mut st, &sched, |u| (b'a' + u as u8) as char, 32);
         assert!(st.is_complete());
         assert!(trace.slots.len() >= 4);
+    }
+
+    #[test]
+    fn dropping_relay_junks_forwards_but_not_own_model() {
+        // chain 0-1-2-3, Byzantine relay 1 junking the 1→2 edge
+        let mut tree = Graph::new(4);
+        tree.add_edge(0, 1, 1.0);
+        tree.add_edge(1, 2, 1.0);
+        tree.add_edge(2, 3, 1.0);
+        let coloring = crate::coloring::bfs_coloring(&tree);
+        let sched = Schedule { coloring, slot_len_s: 1.0, first_color: 0 };
+        let mut st = GossipState::new(tree, 0);
+        st.set_drops(Some(Rc::new(DropPlan::from_edges([(1, 2)]))));
+        run_logical_round(&mut st, &sched, |u| (b'a' + u as u8) as char, 32);
+        assert!(st.is_complete(), "junking is stealthy: dissemination still completes");
+        // relay 1 ships its own model honestly over the junked edge
+        assert!(!st.is_junk(2, 1));
+        assert!(!st.is_junk(3, 1));
+        // 0's model is forwarded by 1 over the junked edge → junk at 2,
+        // and the garbage propagates downstream to 3
+        assert!(st.is_junk(2, 0));
+        assert!(st.is_junk(3, 0));
+        // the honest direction (2 → 1) is untouched
+        assert!(!st.is_junk(1, 2));
+        assert!(!st.is_junk(1, 3));
+        assert!(!st.is_junk(0, 3));
+        assert_eq!(st.junk_count(), 2);
+        // clearing the plan clears the markers
+        st.set_drops(None);
+        assert_eq!(st.junk_count(), 0);
     }
 
     #[test]

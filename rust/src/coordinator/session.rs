@@ -14,6 +14,8 @@ use super::moderator::{Moderator, ScheduleBundle};
 use super::probe::{ReplanPolicy, Replanner};
 use super::schedule::Schedule;
 use crate::config::ExperimentConfig;
+use crate::dfl::adversary::{AdversaryScenario, DropPlan};
+use crate::dfl::robust::FoldPolicy;
 use crate::dfl::transfer::TransferPlan;
 use crate::graph::generators::{self, Hierarchy};
 use crate::graph::topology::TopologyKind;
@@ -24,6 +26,7 @@ use crate::netsim::testbed::Testbed;
 use crate::netsim::DriftProcess;
 use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
+use std::rc::Rc;
 
 /// A fully prepared experiment: structural overlay, simulated testbed, and
 /// the moderator's published schedule bundle.
@@ -42,6 +45,10 @@ pub struct GossipSession {
     /// generator (`topology_gen = "hierarchy"`); `None` for flat overlays.
     hierarchy: Option<Hierarchy>,
     bundle: ScheduleBundle,
+    /// The robustness plane's Byzantine scenario (`--adversary`): which
+    /// nodes are compromised and how they misbehave. `None` with
+    /// `adversary = none` — every honest path stays bit-identical.
+    adversary: Option<AdversaryScenario>,
 }
 
 impl GossipSession {
@@ -103,6 +110,10 @@ impl GossipSession {
         };
         let measured_costs =
             moderator.matrix().expect("matrix exists after compute_schedule").to_graph();
+        // Byzantine scenario: seeded off the experiment seed so the same
+        // config always compromises the same nodes (and, for a dropping
+        // relay, the same tree edges)
+        let adversary = AdversaryScenario::plan(&cfg.adversary_config(), &bundle.tree, cfg.seed);
         Ok(GossipSession {
             cfg: cfg.clone(),
             testbed,
@@ -111,6 +122,7 @@ impl GossipSession {
             measured_costs,
             hierarchy,
             bundle,
+            adversary,
         })
     }
 
@@ -168,6 +180,30 @@ impl GossipSession {
         &self.cfg
     }
 
+    /// The active Byzantine scenario, if the config enables one
+    /// (`--adversary`); `None` under `adversary = none`.
+    pub fn adversary(&self) -> Option<&AdversaryScenario> {
+        self.adversary.as_ref()
+    }
+
+    /// The session's robust-aggregation policy (`--fold`). With
+    /// `fold_f = 0` (auto) the assumed-Byzantine count `f` resolves to
+    /// the scenario's actual compromised-node count, or `max(1, n/5)`
+    /// when no adversary is configured (defending blind).
+    pub fn fold_policy(&self) -> FoldPolicy {
+        let auto_f = self
+            .adversary
+            .as_ref()
+            .map_or_else(|| (self.cfg.nodes / 5).max(1), AdversaryScenario::byzantine_count);
+        self.cfg.fold_policy(auto_f)
+    }
+
+    /// The dropping-relay plan the engine's rounds must honor; `None`
+    /// unless the scenario fields a relay that junks forwards.
+    fn drop_plan(&self) -> Option<Rc<DropPlan>> {
+        self.adversary.as_ref().and_then(AdversaryScenario::drop_plan)
+    }
+
     /// The config's transfer plan for a `model_mb`-sized checkpoint
     /// (whole-model by default; `--segments` / `--segment-mb` slice it).
     pub fn transfer_plan(&self, model_mb: f64) -> TransferPlan {
@@ -211,6 +247,7 @@ impl GossipSession {
             // generous guard: retransmissions can stretch the round
             max_slots: 8 * n + 64,
             failure_rng: Pcg64::new(seed ^ 0xfa11),
+            drops: self.drop_plan(),
         };
         if self.bundle.extra.is_empty() {
             // single tree: the paper's engine path, untouched
@@ -243,7 +280,9 @@ impl GossipSession {
         let mut driver = SimDriver::new(&self.testbed, seed);
         let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
         let n = self.bundle.tree.node_count();
-        engine.run_pipelined(&self.bundle.tree, PipelineOptions::reliable_plan(rounds, plan, n))
+        let mut opts = PipelineOptions::reliable_plan(rounds, plan, n);
+        opts.drops = self.drop_plan();
+        engine.run_pipelined(&self.bundle.tree, opts)
     }
 
     /// Run `rounds` pipelined MOSGU rounds with the **dynamic network
@@ -261,6 +300,21 @@ impl GossipSession {
     /// **bit-identical** to [`GossipSession::run_pipelined_rounds`] —
     /// pinned by `tests/engine_equivalence.rs`.
     pub fn run_adaptive_rounds(&self, model_mb: f64, rounds: u64, seed: u64) -> PipelineMetrics {
+        self.run_adaptive_rounds_with_failures(model_mb, rounds, seed, 0.0)
+    }
+
+    /// As [`GossipSession::run_adaptive_rounds`] with per-transmission
+    /// network disruptions at `failure_prob` (bytes spent, nothing
+    /// delivered, entry re-queued — the §III-D model). The chaos harness
+    /// composes this with drift, compression and an active adversary;
+    /// `failure_prob = 0` is the adaptive path verbatim.
+    pub fn run_adaptive_rounds_with_failures(
+        &self,
+        model_mb: f64,
+        rounds: u64,
+        seed: u64,
+        failure_prob: f64,
+    ) -> PipelineMetrics {
         let plan = self.transfer_plan(model_mb);
         let drift =
             DriftProcess { amplitude: self.cfg.drift, interval_s: self.cfg.drift_interval_s };
@@ -284,9 +338,15 @@ impl GossipSession {
         );
         let mut engine = RoundEngine::new(&mut driver, &self.bundle.schedule);
         let n = self.bundle.tree.node_count();
+        let mut opts = PipelineOptions::reliable_plan(rounds, plan, n);
+        opts.drops = self.drop_plan();
+        if failure_prob > 0.0 {
+            opts.failure_prob = failure_prob;
+            opts.failure_rng = Pcg64::new(seed ^ 0xfa11);
+        }
         engine.run_pipelined_adaptive(
             &self.bundle.tree,
-            PipelineOptions::reliable_plan(rounds, plan, n),
+            opts,
             |d, round, _now| replanner.on_round_complete(d, round),
         )
     }
@@ -310,7 +370,9 @@ impl GossipSession {
     /// `TransferPlan::whole(model_mb)` — **bit for bit** (pinned by
     /// `tests/engine_equivalence.rs`); multi-shard runs decouple local
     /// from cross-subnet contention and trade that fidelity for
-    /// wall-clock scalability.
+    /// wall-clock scalability. The robustness plane's dropping-relay
+    /// plan is deliberately **not** consulted here — junk tracking lives
+    /// on the event-driven engine, which is what the DFL fold runs on.
     pub fn run_sharded_round(
         &self,
         model_mb: f64,
@@ -799,6 +861,59 @@ mod tests {
         // the byte total is lane-count invariant
         assert_eq!(m.transfer_count(), lanes * 2 * 47);
         assert!((m.total_payload_mb() - 2.0 * 47.0 * 14.0).abs() < 1e-6, "bytes conserved");
+    }
+
+    #[test]
+    fn default_session_has_no_adversary_and_mean_fold() {
+        let s = GossipSession::new(&quiet_cfg()).unwrap();
+        assert!(s.adversary().is_none());
+        assert!(s.fold_policy().is_mean());
+        // with no scenario, auto f falls back to the blind n/5 assumption
+        let cfg = ExperimentConfig { fold: crate::dfl::robust::FoldKind::Krum, ..quiet_cfg() };
+        let s = GossipSession::new(&cfg).unwrap();
+        assert_eq!(s.fold_policy().f, 2, "blind auto f = max(1, 10/5)");
+    }
+
+    #[test]
+    fn dropping_relay_censors_reception_orders_without_stalling() {
+        let cfg = ExperimentConfig {
+            topology: TopologyKind::Chain,
+            adversary: crate::dfl::adversary::AdversaryKind::DroppingRelay,
+            adversary_frac: 0.3,
+            ..quiet_cfg()
+        };
+        let s = GossipSession::new(&cfg).unwrap();
+        let scenario = s.adversary().expect("scenario is active");
+        assert_eq!(scenario.byzantine_count(), 3);
+        assert_eq!(s.fold_policy().f, 3, "auto f resolves to the scenario's count");
+        let p = s.run_pipelined_rounds(5.0, 2, 1);
+        assert_eq!(p.rounds.len(), 2, "junked forwards must not stall dissemination timing");
+        // a chain relay junking all its edges censors everything it
+        // forwards (three Byzantine nodes cannot all be chain endpoints,
+        // so at least one actually relays)
+        let folded: usize = p.received.iter().flatten().map(Vec::len).sum();
+        assert!(folded < 2 * 10 * 9, "some payloads must be censored, got all {folded}");
+        // deterministic replay, scenario included
+        let again = s.run_pipelined_rounds(5.0, 2, 1);
+        assert_eq!(p.received, again.received);
+        assert_eq!(p.total_time_s.to_bits(), again.total_time_s.to_bits());
+    }
+
+    #[test]
+    fn poison_adversaries_leave_gossip_timing_untouched() {
+        // content attacks corrupt payloads, not the wire: timing and
+        // reception orders must be bit-identical to the honest run
+        let honest = GossipSession::new(&quiet_cfg()).unwrap();
+        let cfg = ExperimentConfig {
+            adversary: crate::dfl::adversary::AdversaryKind::ScaledPoison,
+            fold: crate::dfl::robust::FoldKind::TrimmedMean,
+            ..quiet_cfg()
+        };
+        let attacked = GossipSession::new(&cfg).unwrap();
+        let a = honest.run_pipelined_rounds(14.0, 2, 1);
+        let b = attacked.run_pipelined_rounds(14.0, 2, 1);
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        assert_eq!(a.received, b.received);
     }
 
     #[test]

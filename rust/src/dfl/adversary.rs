@@ -1,0 +1,463 @@
+//! Byzantine node behaviors — the attack half of the adversarial
+//! robustness plane (`dfl::robust` is the defense half).
+//!
+//! A fraction of nodes is seeded-randomly marked Byzantine and assigned a
+//! [`NodeBehavior`]:
+//!
+//! - [`NodeBehavior::ScaledPoison`] — the node ships its honest payload
+//!   multiplied by `factor` (the classic sign-flip / scaling attack);
+//! - [`NodeBehavior::RandomPoison`] — the node ships seeded uniform noise;
+//! - [`NodeBehavior::SybilClique`] — every clique member ships the *same*
+//!   poisoned payload (the clique leader's, scaled), so naive means see it
+//!   with `|members|`-fold weight;
+//! - [`NodeBehavior::DroppingRelay`] — a *routing* attack: the node
+//!   forwards garbage on a fraction of its tree edges. On an MST this is
+//!   lethal without a defense — a single inner relay starves whole
+//!   subtrees — which is exactly why it is exercised on the gossip trees
+//!   (see `coordinator::gossip`'s junk tracking).
+//!
+//! Payload attacks act on the model snapshot each round
+//! ([`AdversaryScenario::corrupt_snapshot`]); the dropping relay instead
+//! compiles to a [`DropPlan`] of directed tree edges that the round engine
+//! consults when a relay *forwards* another node's model. Dropped
+//! forwards still ship bytes of the right size (a stealthy attacker does
+//! not reveal itself in the timing channel), so slot timings, transfer
+//! counts and completion invariants are untouched — only the *content*
+//! is junk, and junked copies are excluded from the fold inputs.
+
+use crate::graph::{Graph, NodeId};
+use crate::util::rng::Pcg64;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+/// Which attack the Byzantine nodes mount.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdversaryKind {
+    None,
+    ScaledPoison,
+    RandomPoison,
+    SybilClique,
+    DroppingRelay,
+}
+
+impl AdversaryKind {
+    /// Parse a CLI/TOML spelling (`none`, `scaled-poison`, `random-poison`,
+    /// `sybil`, `dropping-relay`).
+    pub fn parse(s: &str) -> Option<AdversaryKind> {
+        match s {
+            "none" => Some(AdversaryKind::None),
+            "scaled-poison" | "scaled" => Some(AdversaryKind::ScaledPoison),
+            "random-poison" | "random" => Some(AdversaryKind::RandomPoison),
+            "sybil" | "sybil-clique" => Some(AdversaryKind::SybilClique),
+            "dropping-relay" | "drop" => Some(AdversaryKind::DroppingRelay),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdversaryKind::None => "none",
+            AdversaryKind::ScaledPoison => "scaled-poison",
+            AdversaryKind::RandomPoison => "random-poison",
+            AdversaryKind::SybilClique => "sybil",
+            AdversaryKind::DroppingRelay => "dropping-relay",
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == AdversaryKind::None
+    }
+}
+
+/// Attack configuration as carried by the config/CLI layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdversaryConfig {
+    pub kind: AdversaryKind,
+    /// Fraction of nodes marked Byzantine (at least one when active).
+    pub frac: f64,
+    /// Multiplier for scaled-poison / sybil payloads; its magnitude is the
+    /// noise amplitude for random-poison.
+    pub poison_scale: f32,
+    /// Fraction of a dropping relay's tree edges it junks.
+    pub drop_edge_frac: f64,
+}
+
+impl AdversaryConfig {
+    pub fn none() -> Self {
+        AdversaryConfig {
+            kind: AdversaryKind::None,
+            frac: 0.2,
+            poison_scale: -10.0,
+            drop_edge_frac: 1.0,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.kind.is_none()
+    }
+
+    /// Range-check the knobs (dormant knobs are validated too, mirroring
+    /// the compression plane's contract).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.frac > 0.0 && self.frac < 1.0) {
+            return Err(format!("adversary_frac {} must be in (0, 1)", self.frac));
+        }
+        if !self.poison_scale.is_finite() {
+            return Err(format!("poison_scale {} must be finite", self.poison_scale));
+        }
+        if !(self.drop_edge_frac > 0.0 && self.drop_edge_frac <= 1.0) {
+            return Err(format!("drop_edge_frac {} must be in (0, 1]", self.drop_edge_frac));
+        }
+        Ok(())
+    }
+
+    /// Compact label for bench tables (`none`, `scaled-poison@0.2`, ...).
+    pub fn label(&self) -> String {
+        if self.is_none() {
+            "none".into()
+        } else {
+            format!("{}@{}", self.kind.name(), self.frac)
+        }
+    }
+}
+
+/// Per-node behavior assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeBehavior {
+    Honest,
+    ScaledPoison { factor: f32 },
+    RandomPoison,
+    SybilClique { members: Vec<NodeId> },
+    DroppingRelay { edge_frac: f64 },
+}
+
+impl NodeBehavior {
+    pub fn is_honest(&self) -> bool {
+        *self == NodeBehavior::Honest
+    }
+}
+
+/// The directed tree edges on which a Byzantine relay junks forwarded
+/// models. Consulted by the round engine on every fresh delivery.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DropPlan {
+    dropped: HashSet<(NodeId, NodeId)>,
+}
+
+impl DropPlan {
+    /// Build a plan from explicit directed `(relay, recipient)` edges
+    /// (scenario planning uses [`AdversaryScenario::plan`]; this is for
+    /// tests and benches that pin specific edges).
+    pub fn from_edges(edges: impl IntoIterator<Item = (NodeId, NodeId)>) -> Self {
+        DropPlan { dropped: edges.into_iter().collect() }
+    }
+
+    /// Whether the relay at `from` junks models it forwards to `to`.
+    pub fn drops(&self, from: NodeId, to: NodeId) -> bool {
+        self.dropped.contains(&(from, to))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dropped.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.dropped.len()
+    }
+}
+
+/// One concrete, seeded instantiation of an attack on a gossip tree.
+#[derive(Debug, Clone)]
+pub struct AdversaryScenario {
+    /// Behavior per node id (`0..n`).
+    pub behaviors: Vec<NodeBehavior>,
+    /// Byzantine node ids, ascending.
+    byzantine: Vec<NodeId>,
+    /// Directed junked forward edges (empty unless `DroppingRelay`).
+    drops: Rc<DropPlan>,
+    poison_scale: f32,
+}
+
+impl AdversaryScenario {
+    /// Instantiate `cfg` on `tree`: pick `max(1, floor(frac · n))`
+    /// Byzantine nodes (never all of them) and, for dropping relays,
+    /// `ceil(edge_frac · degree)` junked tree edges per relay. Fully
+    /// deterministic in `seed`. Returns `None` when the attack is off.
+    pub fn plan(cfg: &AdversaryConfig, tree: &Graph, seed: u64) -> Option<AdversaryScenario> {
+        if cfg.is_none() {
+            return None;
+        }
+        let n = tree.node_count();
+        let count = ((cfg.frac * n as f64).floor() as usize).max(1).min(n.saturating_sub(1));
+        if count == 0 {
+            return None;
+        }
+        let mut rng = Pcg64::new(seed ^ 0x0bad_5eed);
+        let mut byzantine = rng.sample_indices(n, count);
+        byzantine.sort_unstable();
+        let mut behaviors = vec![NodeBehavior::Honest; n];
+        let mut dropped = HashSet::new();
+        for &u in &byzantine {
+            behaviors[u] = match cfg.kind {
+                AdversaryKind::None => unreachable!("handled above"),
+                AdversaryKind::ScaledPoison => {
+                    NodeBehavior::ScaledPoison { factor: cfg.poison_scale }
+                }
+                AdversaryKind::RandomPoison => NodeBehavior::RandomPoison,
+                AdversaryKind::SybilClique => {
+                    NodeBehavior::SybilClique { members: byzantine.clone() }
+                }
+                AdversaryKind::DroppingRelay => {
+                    let deg = tree.degree(u);
+                    if deg > 0 {
+                        let k = ((cfg.drop_edge_frac * deg as f64).ceil() as usize).clamp(1, deg);
+                        for i in rng.sample_indices(deg, k) {
+                            dropped.insert((u, tree.neighbors(u)[i].0));
+                        }
+                    }
+                    NodeBehavior::DroppingRelay { edge_frac: cfg.drop_edge_frac }
+                }
+            };
+        }
+        Some(AdversaryScenario {
+            behaviors,
+            byzantine,
+            drops: Rc::new(DropPlan { dropped }),
+            poison_scale: cfg.poison_scale,
+        })
+    }
+
+    /// Byzantine node ids, ascending.
+    pub fn byzantine(&self) -> &[NodeId] {
+        &self.byzantine
+    }
+
+    pub fn byzantine_count(&self) -> usize {
+        self.byzantine.len()
+    }
+
+    pub fn is_byzantine(&self, u: NodeId) -> bool {
+        self.byzantine.binary_search(&u).is_ok()
+    }
+
+    /// Honest node ids, ascending.
+    pub fn honest(&self) -> Vec<NodeId> {
+        (0..self.behaviors.len()).filter(|&u| !self.is_byzantine(u)).collect()
+    }
+
+    /// Whether the scenario corrupts payload *content* (poison / sybil).
+    /// A dropping relay ships authentic content and attacks only the
+    /// forwarding plane, so its envelope of trustworthy inputs is every
+    /// node's snapshot, not just the honest subset.
+    pub fn corrupts_content(&self) -> bool {
+        self.behaviors.iter().any(|b| {
+            matches!(
+                b,
+                NodeBehavior::ScaledPoison { .. }
+                    | NodeBehavior::RandomPoison
+                    | NodeBehavior::SybilClique { .. }
+            )
+        })
+    }
+
+    /// The drop plan for the round engine (`None` when no edges are junked,
+    /// so payload-only attacks keep the engine on its zero-overhead path).
+    pub fn drop_plan(&self) -> Option<Rc<DropPlan>> {
+        if self.drops.is_empty() {
+            None
+        } else {
+            Some(Rc::clone(&self.drops))
+        }
+    }
+
+    /// Apply the payload attacks to one round's model snapshot (indexed by
+    /// node id). Dropping relays leave payloads alone — their attack lives
+    /// in the routing plane. Deterministic in `(seed, round)`.
+    pub fn corrupt_snapshot(&self, snapshot: &mut [Vec<f32>], round: u64, seed: u64) {
+        // capture the sybil leader's honest payload before any overwrite
+        let sybil_src: Option<Vec<f32>> = self.behaviors.iter().find_map(|b| match b {
+            NodeBehavior::SybilClique { members } => {
+                members.first().and_then(|&l| snapshot.get(l).cloned())
+            }
+            _ => None,
+        });
+        for (u, behavior) in self.behaviors.iter().enumerate() {
+            if u >= snapshot.len() {
+                break;
+            }
+            match behavior {
+                NodeBehavior::Honest | NodeBehavior::DroppingRelay { .. } => {}
+                NodeBehavior::ScaledPoison { factor } => {
+                    for x in &mut snapshot[u] {
+                        *x *= factor;
+                    }
+                }
+                NodeBehavior::RandomPoison => {
+                    let mut rng = Pcg64::new(
+                        seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                            ^ (u as u64).wrapping_mul(0xA24B_AED4_963E_E407),
+                    );
+                    let amp = (self.poison_scale.abs() as f64).max(1.0);
+                    for x in &mut snapshot[u] {
+                        *x = rng.gen_f64_range(-amp, amp) as f32;
+                    }
+                }
+                NodeBehavior::SybilClique { .. } => {
+                    if let Some(src) = &sybil_src {
+                        snapshot[u] = src.iter().map(|&x| x * self.poison_scale).collect();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn chain(n: usize) -> Graph {
+        let mut g = Graph::new(n);
+        for u in 0..n - 1 {
+            g.add_edge(u, u + 1, 1.0);
+        }
+        g
+    }
+
+    fn cfg(kind: AdversaryKind) -> AdversaryConfig {
+        AdversaryConfig { kind, ..AdversaryConfig::none() }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_junk() {
+        for kind in [
+            AdversaryKind::None,
+            AdversaryKind::ScaledPoison,
+            AdversaryKind::RandomPoison,
+            AdversaryKind::SybilClique,
+            AdversaryKind::DroppingRelay,
+        ] {
+            assert_eq!(AdversaryKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(AdversaryKind::parse("drop"), Some(AdversaryKind::DroppingRelay));
+        assert_eq!(AdversaryKind::parse("evil"), None);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(AdversaryConfig::none().validate().is_ok());
+        assert!(AdversaryConfig { frac: 0.0, ..AdversaryConfig::none() }.validate().is_err());
+        assert!(AdversaryConfig { frac: 1.0, ..AdversaryConfig::none() }.validate().is_err());
+        assert!(AdversaryConfig { poison_scale: f32::NAN, ..AdversaryConfig::none() }
+            .validate()
+            .is_err());
+        assert!(AdversaryConfig { drop_edge_frac: 0.0, ..AdversaryConfig::none() }
+            .validate()
+            .is_err());
+        assert!(AdversaryConfig { drop_edge_frac: 1.1, ..AdversaryConfig::none() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn none_plans_to_none() {
+        assert!(AdversaryScenario::plan(&AdversaryConfig::none(), &chain(10), 7).is_none());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_sized() {
+        let tree = chain(10);
+        let a = AdversaryScenario::plan(&cfg(AdversaryKind::ScaledPoison), &tree, 42).unwrap();
+        let b = AdversaryScenario::plan(&cfg(AdversaryKind::ScaledPoison), &tree, 42).unwrap();
+        assert_eq!(a.byzantine(), b.byzantine());
+        assert_eq!(a.byzantine_count(), 2, "frac 0.2 of 10 nodes");
+        assert_eq!(a.honest().len(), 8);
+        for &u in a.byzantine() {
+            assert!(a.is_byzantine(u));
+            assert!(!a.behaviors[u].is_honest());
+        }
+        assert!(a.drop_plan().is_none(), "payload attack junks no edges");
+    }
+
+    #[test]
+    fn at_least_one_but_never_all_byzantine() {
+        let tree = chain(3);
+        let low = AdversaryConfig { frac: 0.01, ..cfg(AdversaryKind::RandomPoison) };
+        assert_eq!(AdversaryScenario::plan(&low, &tree, 1).unwrap().byzantine_count(), 1);
+        let high = AdversaryConfig { frac: 0.99, ..cfg(AdversaryKind::RandomPoison) };
+        assert_eq!(AdversaryScenario::plan(&high, &tree, 1).unwrap().byzantine_count(), 2);
+    }
+
+    #[test]
+    fn dropping_relay_junks_its_own_tree_edges() {
+        let tree = chain(10);
+        let s = AdversaryScenario::plan(&cfg(AdversaryKind::DroppingRelay), &tree, 9).unwrap();
+        let plan = s.drop_plan().expect("dropping relay must junk edges");
+        assert!(!plan.is_empty());
+        for &u in s.byzantine() {
+            // edge_frac = 1.0: every tree edge out of u is junked
+            for &(v, _) in tree.neighbors(u) {
+                assert!(plan.drops(u, v), "missing drop {u} -> {v}");
+                assert!(!plan.drops(v, u), "honest direction must not drop");
+            }
+        }
+        assert_eq!(plan.len(), s.byzantine().iter().map(|&u| tree.degree(u)).sum::<usize>());
+    }
+
+    #[test]
+    fn corrupt_snapshot_scales_poisoners_only() {
+        let tree = chain(10);
+        let s = AdversaryScenario::plan(&cfg(AdversaryKind::ScaledPoison), &tree, 42).unwrap();
+        let mut snap: Vec<Vec<f32>> = (0..10).map(|u| vec![u as f32 + 1.0; 3]).collect();
+        let orig = snap.clone();
+        s.corrupt_snapshot(&mut snap, 0, 42);
+        for u in 0..10 {
+            if s.is_byzantine(u) {
+                assert_eq!(snap[u][0], orig[u][0] * -10.0);
+            } else {
+                assert_eq!(snap[u], orig[u]);
+            }
+        }
+    }
+
+    #[test]
+    fn sybil_clique_ships_one_identical_poisoned_payload() {
+        let tree = chain(10);
+        let s = AdversaryScenario::plan(&cfg(AdversaryKind::SybilClique), &tree, 42).unwrap();
+        let mut snap: Vec<Vec<f32>> = (0..10).map(|u| vec![u as f32 + 1.0; 3]).collect();
+        let orig = snap.clone();
+        s.corrupt_snapshot(&mut snap, 0, 42);
+        let leader = s.byzantine()[0];
+        let want: Vec<f32> = orig[leader].iter().map(|&x| x * -10.0).collect();
+        for &u in s.byzantine() {
+            assert_eq!(snap[u], want, "clique member {u} diverged from the leader payload");
+        }
+    }
+
+    #[test]
+    fn random_poison_is_bounded_and_round_varying() {
+        let tree = chain(10);
+        let s = AdversaryScenario::plan(&cfg(AdversaryKind::RandomPoison), &tree, 42).unwrap();
+        let byz = s.byzantine()[0];
+        let mut r0: Vec<Vec<f32>> = vec![vec![0.0; 64]; 10];
+        let mut r1 = r0.clone();
+        s.corrupt_snapshot(&mut r0, 0, 42);
+        s.corrupt_snapshot(&mut r1, 1, 42);
+        assert_ne!(r0[byz], r1[byz], "noise must vary per round");
+        assert!(r0[byz].iter().all(|x| x.abs() <= 10.0), "amplitude is |poison_scale|");
+        let mut again: Vec<Vec<f32>> = vec![vec![0.0; 64]; 10];
+        s.corrupt_snapshot(&mut again, 0, 42);
+        assert_eq!(r0[byz], again[byz], "noise must be deterministic in (seed, round)");
+    }
+
+    #[test]
+    fn dropping_relay_leaves_payloads_alone() {
+        let tree = chain(10);
+        let s = AdversaryScenario::plan(&cfg(AdversaryKind::DroppingRelay), &tree, 9).unwrap();
+        let mut snap: Vec<Vec<f32>> = (0..10).map(|u| vec![u as f32; 2]).collect();
+        let orig = snap.clone();
+        s.corrupt_snapshot(&mut snap, 0, 9);
+        assert_eq!(snap, orig);
+    }
+}

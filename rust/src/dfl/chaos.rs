@@ -1,0 +1,307 @@
+//! Chaos-injection harness for the robustness plane: compose a Byzantine
+//! attack (`--adversary`) with the dynamic-network drift plane
+//! (`--drift`), per-transmission failure injection and payload
+//! compression (`--compress`), then measure what the configured fold
+//! policy (`--fold`) leaves of honest-node consensus.
+//!
+//! The harness is deliberately artifact-free: gossip timing and per-node
+//! reception orders come from the real pipelined engine
+//! ([`GossipSession::run_adaptive_rounds_with_failures`]), while the
+//! "models" are synthetic parameter vectors folded CPU-side exactly the
+//! way `dfl::round` folds real checkpoints (`--fold mean` replays the
+//! reception-order running average; the robust policies go through
+//! [`FoldPolicy::fold`]). That makes the Byzantine consensus guarantees
+//! testable in CI without PJRT — `tests/robustness_plane.rs` and
+//! `benches/robustness_sweep.rs` both drive this module.
+
+use super::compress::ErrorFeedback;
+use super::robust::FoldPolicy;
+use crate::config::ExperimentConfig;
+use crate::coordinator::session::GossipSession;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Harness knobs that are not part of [`ExperimentConfig`] (the attack,
+/// fold, drift and compression knobs all come from the config).
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosOptions {
+    /// Gossip/fold rounds to run.
+    pub rounds: u64,
+    /// Synthetic parameter-vector width.
+    pub dim: usize,
+    /// Logical checkpoint size driving the timing simulation, MB.
+    pub model_mb: f64,
+    /// Per-transmission disruption probability (§III-D), composed on top
+    /// of whatever the adversary does.
+    pub failure_prob: f64,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        ChaosOptions { rounds: 3, dim: 16, model_mb: 5.0, failure_prob: 0.0 }
+    }
+}
+
+/// Honest-node consensus metrics for one chaos round.
+#[derive(Debug, Clone)]
+pub struct ChaosRoundReport {
+    pub round: u64,
+    /// Max pairwise L∞ distance between honest nodes' fold outputs.
+    pub honest_spread: f32,
+    /// Max L∞ distance of an honest output from the trusted-input mean —
+    /// the "bounded deviation" the robust folds guarantee.
+    pub honest_deviation: f32,
+    /// Whether every honest output stayed inside the trusted inputs'
+    /// per-coordinate range (robust folds: yes even under attack; the
+    /// plain mean: no — a poisoned payload drags it out). "Trusted" is
+    /// the honest subset for content attacks, and every node for a
+    /// dropping relay (its payloads are authentic; only forwarding lies).
+    pub within_input_range: bool,
+}
+
+/// Full chaos-run report.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub rounds: Vec<ChaosRoundReport>,
+    /// The compromised nodes (empty with `adversary = none`).
+    pub byzantine: Vec<usize>,
+    /// Fold-policy label (`mean`, `trimmed2`, ...).
+    pub fold: String,
+    /// Attack label (`none`, `scaled-poison@0.2`, ...).
+    pub adversary: String,
+    /// Simulated time of the whole pipelined gossip run, seconds.
+    pub total_time_s: f64,
+}
+
+impl ChaosReport {
+    /// Honest spread after the last round.
+    pub fn final_spread(&self) -> f32 {
+        self.rounds.last().map_or(0.0, |r| r.honest_spread)
+    }
+
+    /// Worst honest deviation from the trusted-input mean across rounds.
+    pub fn max_deviation(&self) -> f32 {
+        self.rounds.iter().map(|r| r.honest_deviation).fold(0.0, f32::max)
+    }
+
+    /// Did every round keep every honest output inside the trusted
+    /// inputs' coordinate range? The robustness plane's headline gate.
+    pub fn bounded(&self) -> bool {
+        self.rounds.iter().all(|r| r.within_input_range)
+    }
+}
+
+/// Run the chaos harness: real engine timing + reception orders, synthetic
+/// payloads, the config's attack corrupting snapshots between "training"
+/// and the wire, and the config's fold policy defending.
+pub fn run_chaos(cfg: &ExperimentConfig, opts: &ChaosOptions) -> Result<ChaosReport> {
+    anyhow::ensure!(opts.rounds >= 1, "chaos needs at least one round");
+    anyhow::ensure!(opts.dim >= 1, "chaos needs a non-empty parameter vector");
+    anyhow::ensure!(opts.model_mb > 0.0, "model_mb must be positive");
+    anyhow::ensure!(
+        (0.0..1.0).contains(&opts.failure_prob),
+        "failure_prob must be in [0, 1)"
+    );
+    let session = GossipSession::with_model(cfg, opts.model_mb)?;
+    let n = cfg.nodes;
+    let pipeline = session.run_adaptive_rounds_with_failures(
+        opts.model_mb,
+        opts.rounds,
+        cfg.seed ^ 0xc4a05,
+        opts.failure_prob,
+    );
+    anyhow::ensure!(
+        pipeline.received.len() == opts.rounds as usize,
+        "pipeline completed {} of {} rounds",
+        pipeline.received.len(),
+        opts.rounds
+    );
+
+    let policy = session.fold_policy();
+    let scenario = session.adversary();
+    let codec = cfg.compression();
+    let mut feedback: Vec<ErrorFeedback> = if codec.is_none() {
+        Vec::new()
+    } else {
+        (0..n).map(|_| ErrorFeedback::new(opts.dim)).collect()
+    };
+
+    // synthetic per-node start: a shared point plus per-node offsets, the
+    // decentralized-start shape dfl::Trainer::init_node produces
+    let mut params: Vec<Vec<f32>> = (0..n)
+        .map(|u| {
+            let mut rng = Pcg64::new(cfg.seed ^ 0xc0de ^ (u as u64).wrapping_mul(0x9E37_79B9));
+            (0..opts.dim).map(|_| 0.2 * (rng.gen_f64() as f32 - 0.5)).collect()
+        })
+        .collect();
+    let honest: Vec<usize> = scenario.map_or_else(|| (0..n).collect(), |s| s.honest());
+    anyhow::ensure!(!honest.is_empty(), "scenario left no honest nodes");
+    // the envelope of inputs whose *content* can be trusted: honest nodes
+    // under a poison/sybil attack, everyone under a pure routing attack
+    let trusted: Vec<usize> = match scenario {
+        Some(s) if s.corrupts_content() => s.honest(),
+        _ => (0..n).collect(),
+    };
+
+    let mut round_reports = Vec::with_capacity(opts.rounds as usize);
+    for round in 0..opts.rounds {
+        // wire snapshot (compressed if the config says so), then the
+        // attack corrupts it exactly where a real Byzantine node would
+        let mut snapshot: Vec<Vec<f32>> = if codec.is_none() {
+            params.clone()
+        } else {
+            params.iter().enumerate().map(|(u, p)| feedback[u].compress(p, &codec)).collect()
+        };
+        if let Some(s) = scenario {
+            s.corrupt_snapshot(&mut snapshot, round, cfg.seed);
+        }
+
+        // trusted-input envelope the robust folds must stay inside
+        let mut lo = vec![f32::INFINITY; opts.dim];
+        let mut hi = vec![f32::NEG_INFINITY; opts.dim];
+        let mut center = vec![0.0f32; opts.dim];
+        for &u in &trusted {
+            for (i, &x) in snapshot[u].iter().enumerate() {
+                lo[i] = lo[i].min(x);
+                hi[i] = hi[i].max(x);
+                center[i] += x;
+            }
+        }
+        for c in center.iter_mut() {
+            *c /= trusted.len() as f32;
+        }
+
+        let received = &pipeline.received[round as usize];
+        let mut next: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for u in 0..n {
+            if policy.is_mean() {
+                // the legacy pairwise FedAvg replay, in reception order
+                let mut acc = snapshot[u].clone();
+                let mut w = 1.0f32;
+                for &o in &received[u] {
+                    w += 1.0;
+                    for (a, &x) in acc.iter_mut().zip(&snapshot[o]) {
+                        *a += (x - *a) / w;
+                    }
+                }
+                next.push(acc);
+            } else {
+                let others: Vec<(usize, &[f32])> =
+                    received[u].iter().map(|&o| (o, snapshot[o].as_slice())).collect();
+                next.push(policy.fold(u, &snapshot[u], &others));
+            }
+        }
+        params = next;
+
+        let mut spread = 0.0f32;
+        let mut deviation = 0.0f32;
+        let mut within = true;
+        for (ai, &u) in honest.iter().enumerate() {
+            for &v in &honest[ai + 1..] {
+                for (a, b) in params[u].iter().zip(&params[v]) {
+                    spread = spread.max((a - b).abs());
+                }
+            }
+            for (i, &x) in params[u].iter().enumerate() {
+                deviation = deviation.max((x - center[i]).abs());
+                if x < lo[i] - 1e-5 || x > hi[i] + 1e-5 {
+                    within = false;
+                }
+            }
+        }
+        round_reports.push(ChaosRoundReport {
+            round,
+            honest_spread: spread,
+            honest_deviation: deviation,
+            within_input_range: within,
+        });
+    }
+
+    Ok(ChaosReport {
+        rounds: round_reports,
+        byzantine: scenario.map(|s| s.byzantine().to_vec()).unwrap_or_default(),
+        fold: policy.label(),
+        adversary: cfg.adversary_config().label(),
+        total_time_s: pipeline.total_time_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfl::adversary::AdversaryKind;
+    use crate::dfl::compress::CompressionKind;
+    use crate::dfl::robust::FoldKind;
+
+    fn quiet_cfg() -> ExperimentConfig {
+        ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn honest_mean_run_converges_to_consensus() {
+        let report = run_chaos(&quiet_cfg(), &ChaosOptions::default()).unwrap();
+        assert!(report.byzantine.is_empty());
+        assert_eq!(report.adversary, "none");
+        assert_eq!(report.fold, "mean");
+        // full dissemination: every node averages the same ten vectors
+        // (reception order only moves fp dust)
+        assert!(report.final_spread() < 1e-4, "spread {}", report.final_spread());
+        assert!(report.bounded(), "an honest mean cannot leave the input envelope");
+    }
+
+    #[test]
+    fn trimmed_mean_survives_scaled_poison() {
+        let cfg = ExperimentConfig {
+            adversary: AdversaryKind::ScaledPoison,
+            fold: FoldKind::TrimmedMean,
+            ..quiet_cfg()
+        };
+        let report = run_chaos(&cfg, &ChaosOptions::default()).unwrap();
+        assert_eq!(report.byzantine.len(), 2, "20% of 10 nodes");
+        assert!(report.bounded(), "trimmed mean must stay in the honest envelope");
+        // full dissemination means identical candidate sets everywhere:
+        // honest nodes agree exactly
+        assert!(report.final_spread() < 1e-6, "spread {}", report.final_spread());
+    }
+
+    #[test]
+    fn plain_mean_breaks_under_scaled_poison() {
+        let cfg = ExperimentConfig {
+            adversary: AdversaryKind::ScaledPoison,
+            poison_scale: -100.0,
+            ..quiet_cfg()
+        };
+        let report = run_chaos(&cfg, &ChaosOptions::default()).unwrap();
+        assert!(
+            !report.bounded(),
+            "a -100x poisoned payload must drag the unprotected mean out of range"
+        );
+    }
+
+    #[test]
+    fn chaos_composes_drift_failures_and_compression() {
+        let cfg = ExperimentConfig {
+            adversary: AdversaryKind::RandomPoison,
+            fold: FoldKind::CoordinateMedian,
+            compress: CompressionKind::Quant,
+            drift: 0.3,
+            drift_interval_s: 0.5,
+            ..quiet_cfg()
+        };
+        let opts = ChaosOptions { rounds: 4, failure_prob: 0.2, ..Default::default() };
+        let report = run_chaos(&cfg, &opts).unwrap();
+        assert_eq!(report.rounds.len(), 4);
+        assert!(report.bounded(), "the median must hold under composed chaos");
+        assert!(report.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn run_chaos_rejects_bad_options() {
+        let cfg = quiet_cfg();
+        assert!(run_chaos(&cfg, &ChaosOptions { rounds: 0, ..Default::default() }).is_err());
+        assert!(run_chaos(&cfg, &ChaosOptions { dim: 0, ..Default::default() }).is_err());
+        assert!(
+            run_chaos(&cfg, &ChaosOptions { failure_prob: 1.0, ..Default::default() }).is_err()
+        );
+    }
+}

@@ -21,6 +21,12 @@
 //!   the next round, so quantization/sparsification error accumulates
 //!   nowhere (EF-SGD style memory).
 //!
+//! The decoders treat their input as **hostile**: a received encoding is
+//! validated up front (header ranges, chunk/word counts, index bounds and
+//! ordering) and rejected with a [`DecodeError`] instead of panicking or
+//! writing out of bounds — one malformed payload must never take down the
+//! fold (see `tests/robustness_plane.rs` for the fuzzing).
+//!
 //! The codecs operate on real parameter vectors (the DFL loop in
 //! [`crate::dfl::round`] encodes at snapshot time and folds decoded
 //! payloads); the *wire size* they imply is threaded through
@@ -34,6 +40,27 @@
 /// Elements per quantization chunk (one `(min, step)` f32 pair of header
 /// per chunk on the wire).
 pub const QUANT_CHUNK: usize = 1024;
+
+/// Why a received encoding was rejected. Decoders validate before they
+/// allocate or index — a hostile payload fails the decode, it does not
+/// panic the cluster.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum DecodeError {
+    #[error("quant bits {0} out of range 1..=32")]
+    BadBits(u32),
+    #[error("chunk header count {got} != expected {want}")]
+    ChunkCountMismatch { got: usize, want: usize },
+    #[error("packed word count {got} != expected {want}")]
+    WordCountMismatch { got: usize, want: usize },
+    #[error("non-finite chunk header (min {min}, step {step})")]
+    NonFiniteHeader { min: f32, step: f32 },
+    #[error("{indices} indices vs {values} values")]
+    ArityMismatch { indices: usize, values: usize },
+    #[error("index {index} out of bounds for length {len}")]
+    IndexOutOfBounds { index: u32, len: usize },
+    #[error("indices not strictly ascending at position {at}")]
+    IndicesNotAscending { at: usize },
+}
 
 /// Bytes per megabyte (the wire-size arithmetic's single constant).
 const MB: f64 = 1024.0 * 1024.0;
@@ -160,8 +187,10 @@ impl CompressionConfig {
     pub fn encode_decode(&self, params: &[f32]) -> Vec<f32> {
         match self.kind {
             CompressionKind::None => params.to_vec(),
-            CompressionKind::Quant => quant_decode(&quant_encode(params, self.quant_bits)),
-            CompressionKind::TopK => topk_decode(&topk_encode(params, self.topk_frac)),
+            CompressionKind::Quant => quant_decode(&quant_encode(params, self.quant_bits))
+                .expect("self-encoded quant payload is valid"),
+            CompressionKind::TopK => topk_decode(&topk_encode(params, self.topk_frac))
+                .expect("self-encoded top-k payload is valid"),
         }
     }
 }
@@ -228,9 +257,30 @@ pub fn quant_encode(params: &[f32], bits: u32) -> QuantEncoded {
 }
 
 /// Decode a quantized vector back to f32 (`min + code · step` per
-/// element).
-pub fn quant_decode(enc: &QuantEncoded) -> Vec<f32> {
+/// element), validating the encoding first: `bits` must be in `1..=32`
+/// (checked **before** the `1 << bits` mask — a hostile `bits = 0` or
+/// `bits > 32` header must not overflow the shift; the local encoder only
+/// emits `1..=16` but the decoder cannot assume a friendly peer), the
+/// chunk-header and packed-word counts must match `len`, and headers must
+/// be finite (a NaN `(min, step)` would poison every decoded element).
+pub fn quant_decode(enc: &QuantEncoded) -> Result<Vec<f32>, DecodeError> {
+    if !(1..=32).contains(&enc.bits) {
+        return Err(DecodeError::BadBits(enc.bits));
+    }
     let bits = enc.bits as usize;
+    let want = enc.len.div_ceil(QUANT_CHUNK);
+    if enc.chunks.len() != want {
+        return Err(DecodeError::ChunkCountMismatch { got: enc.chunks.len(), want });
+    }
+    let want = (enc.len * bits).div_ceil(64);
+    if enc.words.len() != want {
+        return Err(DecodeError::WordCountMismatch { got: enc.words.len(), want });
+    }
+    for &(min, step) in &enc.chunks {
+        if !(min.is_finite() && step.is_finite()) {
+            return Err(DecodeError::NonFiniteHeader { min, step });
+        }
+    }
     let mask = (1u64 << bits) - 1;
     let mut out = Vec::with_capacity(enc.len);
     let mut bitpos = 0usize;
@@ -246,7 +296,7 @@ pub fn quant_decode(enc: &QuantEncoded) -> Vec<f32> {
         out.push(lo + q as f32 * step);
         bitpos += bits;
     }
-    out
+    Ok(out)
 }
 
 /// A top-k-sparsified parameter vector: the kept entries as parallel
@@ -308,13 +358,32 @@ pub fn topk_encode(params: &[f32], frac: f64) -> TopKEncoded {
     }
 }
 
-/// Densify a top-k vector (zeros at dropped positions).
-pub fn topk_decode(enc: &TopKEncoded) -> Vec<f32> {
+/// Densify a top-k vector (zeros at dropped positions), validating the
+/// encoding first: the index and value arrays must have equal length and
+/// the indices must be strictly ascending and `< len` — the unchecked
+/// `out[i] = v` write this replaces let any corrupted index panic (or,
+/// with a resized `len` header, scribble) the receiving fold.
+pub fn topk_decode(enc: &TopKEncoded) -> Result<Vec<f32>, DecodeError> {
+    if enc.indices.len() != enc.values.len() {
+        return Err(DecodeError::ArityMismatch {
+            indices: enc.indices.len(),
+            values: enc.values.len(),
+        });
+    }
+    for (j, &i) in enc.indices.iter().enumerate() {
+        if i as usize >= enc.len {
+            return Err(DecodeError::IndexOutOfBounds { index: i, len: enc.len });
+        }
+        // strict ascent also rejects duplicate indices
+        if j > 0 && enc.indices[j - 1] >= i {
+            return Err(DecodeError::IndicesNotAscending { at: j });
+        }
+    }
     let mut out = vec![0.0f32; enc.len];
     for (&i, &v) in enc.indices.iter().zip(&enc.values) {
         out[i as usize] = v;
     }
-    out
+    Ok(out)
 }
 
 /// Per-node error-feedback memory: the residual the last compression
@@ -409,7 +478,7 @@ mod tests {
         for bits in [2u32, 4, 8, 12, 16] {
             let params = ramp(QUANT_CHUNK * 2 + 37);
             let enc = quant_encode(&params, bits);
-            let dec = quant_decode(&enc);
+            let dec = quant_decode(&enc).unwrap();
             assert_eq!(dec.len(), params.len());
             for (ci, chunk) in params.chunks(QUANT_CHUNK).enumerate() {
                 let (_, step) = enc.chunks[ci];
@@ -434,7 +503,7 @@ mod tests {
     #[test]
     fn quant_constant_chunk_decodes_exactly() {
         let params = vec![2.5f32; 100];
-        let dec = quant_decode(&quant_encode(&params, 4));
+        let dec = quant_decode(&quant_encode(&params, 4)).unwrap();
         assert_eq!(dec, params, "zero-range chunks must decode to the chunk min exactly");
     }
 
@@ -443,7 +512,7 @@ mod tests {
         let mut params = ramp(16);
         params[3] = f32::NAN;
         params[9] = f32::INFINITY;
-        let dec = quant_decode(&quant_encode(&params, 8));
+        let dec = quant_decode(&quant_encode(&params, 8)).unwrap();
         assert!(dec.iter().all(|x| x.is_finite()), "decoded payload must stay finite");
     }
 
@@ -453,7 +522,7 @@ mod tests {
         let enc = topk_encode(&params, 0.5); // k = 3
         assert_eq!(enc.indices, vec![1, 3, 5]);
         assert_eq!(enc.values, vec![-5.0, 4.0, 3.0]);
-        let dec = topk_decode(&enc);
+        let dec = topk_decode(&enc).unwrap();
         assert_eq!(dec, vec![0.0, -5.0, 0.0, 4.0, 0.0, 3.0]);
         assert_eq!(enc.wire_bytes(), 3 * 8);
     }
@@ -472,10 +541,10 @@ mod tests {
         let params = vec![f32::NAN, 1.0, f32::INFINITY, -2.0, 0.5, f32::NEG_INFINITY];
         let enc = topk_encode(&params, 0.5); // k = 3
         assert_eq!(enc.indices, vec![1, 3, 4], "finite magnitudes win selection");
-        let dec = topk_decode(&enc);
+        let dec = topk_decode(&enc).unwrap();
         assert!(dec.iter().all(|x| x.is_finite()), "decoded payload must stay finite");
         // even at frac = 1.0 (every entry kept) the wire stays finite
-        let all = topk_decode(&topk_encode(&params, 1.0));
+        let all = topk_decode(&topk_encode(&params, 1.0)).unwrap();
         assert!(all.iter().all(|x| x.is_finite()));
         assert_eq!(all[1], 1.0);
         assert_eq!(all[0], 0.0);
@@ -560,5 +629,58 @@ mod tests {
         assert_eq!(CompressionConfig::none().label(), "none");
         assert_eq!(CompressionConfig::quant(8).label(), "quant8");
         assert_eq!(CompressionConfig::topk(0.1).label(), "topk0.10");
+    }
+
+    #[test]
+    fn quant_decode_rejects_hostile_headers() {
+        let good = quant_encode(&ramp(QUANT_CHUNK + 10), 8);
+        assert!(quant_decode(&good).is_ok());
+        // bits = 0 and bits > 32 must be rejected before the shift
+        for bits in [0u32, 33, 64, u32::MAX] {
+            let enc = QuantEncoded { bits, ..good.clone() };
+            assert_eq!(quant_decode(&enc), Err(DecodeError::BadBits(bits)));
+        }
+        // truncated / padded word payloads
+        let mut enc = good.clone();
+        enc.words.pop();
+        assert!(matches!(quant_decode(&enc), Err(DecodeError::WordCountMismatch { .. })));
+        let mut enc = good.clone();
+        enc.words.push(0);
+        assert!(matches!(quant_decode(&enc), Err(DecodeError::WordCountMismatch { .. })));
+        // a liar `len` header must not out-read the chunk table
+        let enc = QuantEncoded { len: good.len + QUANT_CHUNK, ..good.clone() };
+        assert!(quant_decode(&enc).is_err());
+        // missing chunk headers
+        let mut enc = good.clone();
+        enc.chunks.pop();
+        assert!(matches!(quant_decode(&enc), Err(DecodeError::ChunkCountMismatch { .. })));
+        // NaN headers would decode every element to NaN
+        let mut enc = good.clone();
+        enc.chunks[0].1 = f32::NAN;
+        assert!(matches!(quant_decode(&enc), Err(DecodeError::NonFiniteHeader { .. })));
+    }
+
+    #[test]
+    fn topk_decode_rejects_hostile_indices() {
+        let good = topk_encode(&ramp(64), 0.25);
+        assert!(topk_decode(&good).is_ok());
+        // out-of-bounds index: the old unchecked write panicked here
+        let mut enc = good.clone();
+        *enc.indices.last_mut().unwrap() = 64;
+        assert_eq!(topk_decode(&enc), Err(DecodeError::IndexOutOfBounds { index: 64, len: 64 }));
+        // a liar `len` header shrinks the output under the indices
+        let enc = TopKEncoded { len: 3, ..good.clone() };
+        assert!(matches!(topk_decode(&enc), Err(DecodeError::IndexOutOfBounds { .. })));
+        // duplicate index (double-write) and descending order
+        let mut enc = good.clone();
+        enc.indices[1] = enc.indices[0];
+        assert_eq!(topk_decode(&enc), Err(DecodeError::IndicesNotAscending { at: 1 }));
+        let mut enc = good.clone();
+        enc.indices.swap(0, 1);
+        assert!(matches!(topk_decode(&enc), Err(DecodeError::IndicesNotAscending { .. })));
+        // mismatched arities must not zip-truncate silently
+        let mut enc = good.clone();
+        enc.values.pop();
+        assert!(matches!(topk_decode(&enc), Err(DecodeError::ArityMismatch { .. })));
     }
 }

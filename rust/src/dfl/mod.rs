@@ -1,11 +1,15 @@
 //! Decentralized federated learning layer: the Table II model registry,
 //! the artifact-driven per-node trainer, segment-granular transfer
 //! planning, payload compression codecs (quantization / top-k with
-//! error feedback), and DFL round orchestration (train → gossip →
-//! aggregate).
+//! error feedback), DFL round orchestration (train → gossip →
+//! aggregate), and the adversarial robustness plane (Byzantine node
+//! behaviors, robust fold policies, and the chaos-injection harness).
 
+pub mod adversary;
+pub mod chaos;
 pub mod compress;
 pub mod models;
+pub mod robust;
 pub mod round;
 pub mod trainer;
 pub mod transfer;

@@ -1,0 +1,340 @@
+//! Robust aggregation policies for the FedAvg fold — the defense half of
+//! the adversarial robustness plane (`dfl::adversary` is the attack half).
+//!
+//! `run_dfl` folds whatever payloads the gossip plane delivers. With every
+//! node honest a weighted running average is exact FedAvg, but a single
+//! Byzantine payload can drag that mean arbitrarily far. [`FoldPolicy`]
+//! makes the fold pluggable:
+//!
+//! - [`FoldKind::Mean`] — the existing weighted running average, replayed
+//!   through the *identical* `aggregate_into` call sequence so
+//!   `--fold mean` stays bit-identical to the pre-robustness engine;
+//! - [`FoldKind::TrimmedMean`] — coordinate-wise trimmed mean: drop the
+//!   `f` largest and `f` smallest values per coordinate, average the rest
+//!   (Yin et al., ICML 2018);
+//! - [`FoldKind::CoordinateMedian`] — coordinate-wise median;
+//! - [`FoldKind::Krum`] — select the single candidate whose summed squared
+//!   distance to its `m − f − 2` nearest peers is minimal (Blanchard et
+//!   al., NeurIPS 2017).
+//!
+//! All robust folds operate over a **canonical candidate order** — the
+//! node's own payload plus every received payload, sorted by owner id —
+//! so two honest nodes holding the same payload set compute the same
+//! fold output bit for bit, regardless of reception order. That is what
+//! turns per-node robustness into *consensus* robustness: under full
+//! dissemination every honest node sees the same candidate set, hence
+//! folds to the same model, and each robust fold output is coordinate-wise
+//! confined to the candidate value range (for `TrimmedMean` with
+//! `m ≥ 2f + 1`, to the *honest* value range).
+
+/// Which aggregation rule the fold applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoldKind {
+    /// Weighted running average (exact FedAvg; no Byzantine tolerance).
+    Mean,
+    /// Coordinate-wise trimmed mean, trimming `f` from each tail.
+    TrimmedMean,
+    /// Coordinate-wise median.
+    CoordinateMedian,
+    /// Krum selection: keep the candidate closest to its peers.
+    Krum,
+}
+
+impl FoldKind {
+    /// Parse a CLI/TOML spelling (`mean`, `trimmed-mean`, `median`, `krum`).
+    pub fn parse(s: &str) -> Option<FoldKind> {
+        match s {
+            "mean" => Some(FoldKind::Mean),
+            "trimmed-mean" | "trimmed" => Some(FoldKind::TrimmedMean),
+            "median" | "coordinate-median" => Some(FoldKind::CoordinateMedian),
+            "krum" => Some(FoldKind::Krum),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FoldKind::Mean => "mean",
+            FoldKind::TrimmedMean => "trimmed-mean",
+            FoldKind::CoordinateMedian => "median",
+            FoldKind::Krum => "krum",
+        }
+    }
+}
+
+/// A fold rule plus its Byzantine-tolerance parameter `f` (the number of
+/// hostile payloads the fold must survive; ignored by `Mean` and
+/// `CoordinateMedian`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldPolicy {
+    pub kind: FoldKind,
+    pub f: usize,
+}
+
+impl FoldPolicy {
+    pub fn mean() -> Self {
+        FoldPolicy { kind: FoldKind::Mean, f: 0 }
+    }
+
+    pub fn trimmed_mean(f: usize) -> Self {
+        FoldPolicy { kind: FoldKind::TrimmedMean, f }
+    }
+
+    pub fn coordinate_median() -> Self {
+        FoldPolicy { kind: FoldKind::CoordinateMedian, f: 0 }
+    }
+
+    pub fn krum(f: usize) -> Self {
+        FoldPolicy { kind: FoldKind::Krum, f }
+    }
+
+    /// `Mean` takes the legacy `aggregate_into` fast path in `run_dfl`.
+    pub fn is_mean(&self) -> bool {
+        self.kind == FoldKind::Mean
+    }
+
+    /// Compact label for bench tables (`mean`, `trimmed2`, `median`, `krum2`).
+    pub fn label(&self) -> String {
+        match self.kind {
+            FoldKind::Mean => "mean".into(),
+            FoldKind::TrimmedMean => format!("trimmed{}", self.f),
+            FoldKind::CoordinateMedian => "median".into(),
+            FoldKind::Krum => format!("krum{}", self.f),
+        }
+    }
+
+    /// Range-check the policy (`Err(reason)` mirrors the config layer's
+    /// dormant-knob validation contract).
+    pub fn validate(&self) -> Result<(), String> {
+        match self.kind {
+            FoldKind::TrimmedMean | FoldKind::Krum if self.f == 0 => {
+                Err(format!("{} requires f >= 1", self.kind.name()))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Fold one node's candidate set: its own payload plus every received
+    /// `(owner, payload)` pair. Candidates are re-sorted by owner id into a
+    /// canonical order first, so the output is independent of reception
+    /// order (see the module docs). All payloads must share `own`'s length.
+    pub fn fold(&self, own_id: usize, own: &[f32], others: &[(usize, &[f32])]) -> Vec<f32> {
+        let mut cands: Vec<(usize, &[f32])> = Vec::with_capacity(others.len() + 1);
+        cands.push((own_id, own));
+        for &(owner, payload) in others {
+            debug_assert_eq!(payload.len(), own.len(), "fold payload length mismatch");
+            cands.push((owner, payload));
+        }
+        cands.sort_by_key(|&(owner, _)| owner);
+        let m = cands.len();
+        if m == 1 {
+            return own.to_vec();
+        }
+        match self.kind {
+            FoldKind::Mean => {
+                let dim = own.len();
+                let mut out = vec![0.0f32; dim];
+                for (weight, &(_, payload)) in cands.iter().enumerate() {
+                    let w = (weight + 1) as f32;
+                    for (acc, &x) in out.iter_mut().zip(payload) {
+                        *acc += (x - *acc) / w;
+                    }
+                }
+                out
+            }
+            FoldKind::TrimmedMean => {
+                // never trim everything: at most (m-1)/2 from each tail
+                let t = self.f.min((m - 1) / 2);
+                self.per_coordinate(&cands, |col| {
+                    col.sort_unstable_by(f32::total_cmp);
+                    let kept = &col[t..col.len() - t];
+                    let sum: f64 = kept.iter().map(|&x| x as f64).sum();
+                    (sum / kept.len() as f64) as f32
+                })
+            }
+            FoldKind::CoordinateMedian => self.per_coordinate(&cands, |col| {
+                col.sort_unstable_by(f32::total_cmp);
+                let mid = col.len() / 2;
+                if col.len() % 2 == 1 {
+                    col[mid]
+                } else {
+                    0.5 * (col[mid - 1] + col[mid])
+                }
+            }),
+            FoldKind::Krum => {
+                // squared L2 distances between every candidate pair
+                let mut dist = vec![vec![0.0f64; m]; m];
+                for i in 0..m {
+                    for j in (i + 1)..m {
+                        let d: f64 = cands[i]
+                            .1
+                            .iter()
+                            .zip(cands[j].1)
+                            .map(|(&a, &b)| {
+                                let d = (a - b) as f64;
+                                d * d
+                            })
+                            .sum();
+                        dist[i][j] = d;
+                        dist[j][i] = d;
+                    }
+                }
+                // score = sum of the k closest peers, k = m - f - 2
+                let k = m.saturating_sub(self.f + 2).max(1).min(m - 1);
+                // tie-break on owner id for cross-node determinism
+                let mut best = (f64::INFINITY, usize::MAX, 0usize);
+                for (i, &(owner, _)) in cands.iter().enumerate() {
+                    let mut row: Vec<f64> =
+                        (0..m).filter(|&j| j != i).map(|j| dist[i][j]).collect();
+                    row.sort_unstable_by(f64::total_cmp);
+                    let score: f64 = row[..k].iter().sum();
+                    if (score, owner, i) < best {
+                        best = (score, owner, i);
+                    }
+                }
+                cands[best.2].1.to_vec()
+            }
+        }
+    }
+
+    /// Apply `reduce` to each coordinate's column of candidate values.
+    fn per_coordinate<F>(&self, cands: &[(usize, &[f32])], mut reduce: F) -> Vec<f32>
+    where
+        F: FnMut(&mut Vec<f32>) -> f32,
+    {
+        let dim = cands[0].1.len();
+        let mut col = Vec::with_capacity(cands.len());
+        (0..dim)
+            .map(|d| {
+                col.clear();
+                col.extend(cands.iter().map(|&(_, payload)| payload[d]));
+                reduce(&mut col)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs(v: &[(usize, Vec<f32>)]) -> Vec<(usize, &[f32])> {
+        v.iter().map(|(o, p)| (*o, p.as_slice())).collect()
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_junk() {
+        for kind in
+            [FoldKind::Mean, FoldKind::TrimmedMean, FoldKind::CoordinateMedian, FoldKind::Krum]
+        {
+            assert_eq!(FoldKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(FoldKind::parse("trimmed"), Some(FoldKind::TrimmedMean));
+        assert_eq!(FoldKind::parse("coordinate-median"), Some(FoldKind::CoordinateMedian));
+        assert_eq!(FoldKind::parse("average"), None);
+    }
+
+    #[test]
+    fn validate_requires_f_for_trimmed_and_krum() {
+        assert!(FoldPolicy::mean().validate().is_ok());
+        assert!(FoldPolicy::coordinate_median().validate().is_ok());
+        assert!(FoldPolicy::trimmed_mean(0).validate().is_err());
+        assert!(FoldPolicy::krum(0).validate().is_err());
+        assert!(FoldPolicy::trimmed_mean(2).validate().is_ok());
+        assert!(FoldPolicy::krum(1).validate().is_ok());
+    }
+
+    #[test]
+    fn mean_fold_matches_running_average() {
+        let others = vec![(1usize, vec![2.0f32, 4.0]), (2, vec![3.0, 8.0])];
+        let out = FoldPolicy::mean().fold(0, &[1.0, 0.0], &pairs(&others));
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn trimmed_mean_discards_the_tails() {
+        // one poisoned candidate at 1000x: trimming f=1 removes it entirely
+        let others = vec![
+            (1usize, vec![1.1f32]),
+            (2, vec![0.9]),
+            (3, vec![1000.0]),
+            (4, vec![-1000.0]),
+        ];
+        let out = FoldPolicy::trimmed_mean(1).fold(0, &[1.0], &pairs(&others));
+        assert!((out[0] - 1.0).abs() < 1e-6, "trimmed mean {out:?} dragged by outliers");
+    }
+
+    #[test]
+    fn trimmed_mean_never_trims_everything() {
+        let others = vec![(1usize, vec![3.0f32])];
+        let out = FoldPolicy::trimmed_mean(5).fold(0, &[1.0], &pairs(&others));
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_is_coordinate_wise() {
+        let others = vec![(1usize, vec![5.0f32, -7.0]), (2, vec![2.0, 100.0])];
+        let out = FoldPolicy::coordinate_median().fold(0, &[1.0, 0.0], &pairs(&others));
+        assert_eq!(out, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn krum_picks_the_clustered_candidate() {
+        let others = vec![
+            (1usize, vec![1.01f32, 1.01]),
+            (2, vec![0.99, 0.99]),
+            (3, vec![50.0, -50.0]),
+        ];
+        let out = FoldPolicy::krum(1).fold(0, &[1.0, 1.0], &pairs(&others));
+        assert!(out[0] < 2.0, "krum selected the outlier: {out:?}");
+    }
+
+    #[test]
+    fn robust_folds_stay_inside_the_candidate_range() {
+        let own = vec![0.5f32, -0.5];
+        let others = vec![(3usize, vec![1.5f32, 2.0]), (7, vec![-9.0, 0.25])];
+        for policy in
+            [FoldPolicy::trimmed_mean(1), FoldPolicy::coordinate_median(), FoldPolicy::krum(1)]
+        {
+            let out = policy.fold(0, &own, &pairs(&others));
+            for d in 0..2 {
+                let mut vals = vec![own[d]];
+                vals.extend(others.iter().map(|(_, p)| p[d]));
+                let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                assert!(
+                    out[d] >= lo && out[d] <= hi,
+                    "{}: coord {d} = {} escaped [{lo}, {hi}]",
+                    policy.label(),
+                    out[d]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fold_is_reception_order_independent() {
+        // canonical owner sort: permuting the received list cannot change
+        // the output (this is what makes consensus exact across nodes)
+        let a = vec![(4usize, vec![2.0f32, 1.0]), (1, vec![-3.0, 0.5]), (9, vec![0.1, 7.0])];
+        let mut b = a.clone();
+        b.rotate_left(2);
+        for policy in [
+            FoldPolicy::mean(),
+            FoldPolicy::trimmed_mean(1),
+            FoldPolicy::coordinate_median(),
+            FoldPolicy::krum(1),
+        ] {
+            let x = policy.fold(0, &[1.0, 1.0], &pairs(&a));
+            let y = policy.fold(0, &[1.0, 1.0], &pairs(&b));
+            assert_eq!(x, y, "{} depends on reception order", policy.label());
+        }
+    }
+
+    #[test]
+    fn lone_node_folds_to_itself() {
+        for policy in [FoldPolicy::mean(), FoldPolicy::trimmed_mean(2), FoldPolicy::krum(2)] {
+            assert_eq!(policy.fold(0, &[4.0, 2.0], &[]), vec![4.0, 2.0]);
+        }
+    }
+}

@@ -20,7 +20,6 @@ use super::compress::ErrorFeedback;
 use super::trainer::{NodeModel, Trainer};
 use crate::coordinator::session::GossipSession;
 use anyhow::Result;
-use std::collections::HashMap;
 
 /// Per-round report for the training log / loss curve.
 #[derive(Debug, Clone)]
@@ -63,6 +62,7 @@ pub fn run_dfl(
     mut on_round: impl FnMut(&DflRoundReport),
 ) -> Result<Vec<DflRoundReport>> {
     let n = session.tree().node_count();
+    anyhow::ensure!(n > 0, "cannot run DFL over an empty session (n = 0)");
     let model_mb = trainer.artifacts().model_mb();
 
     // one long-lived simulator for every round's gossip, with
@@ -95,6 +95,8 @@ pub fn run_dfl(
         (0..n).map(|_| ErrorFeedback::new(dim)).collect()
     };
     let wire_mb = session.transfer_plan(model_mb).wire_mb();
+    // robust-aggregation policy (--fold); Mean is the legacy pairwise path
+    let policy = session.fold_policy();
 
     for round in 0..rounds {
         // --- local training ---
@@ -112,32 +114,39 @@ pub fn run_dfl(
         }
         train_loss /= n as f32;
 
-        // --- aggregation: fold every received model pairwise (FedAvg),
-        // in the engine's actual delivery order for this round. Under a
+        // --- aggregation: fold every received model under the session's
+        // fold policy, in the engine's actual delivery order for this
+        // round. `--fold mean` replays the legacy pairwise FedAvg
+        // artifact sequence verbatim; the robust policies fold the
+        // canonical owner-sorted candidate set CPU-side. Under a
         // compression codec the snapshot is each node's decoded
         // (wire-visible) payload, and the sender adopts that decoded
         // payload as its own fold contribution too — so every node
         // averages the identical vector set and consensus stays exact;
-        // the residual carries the codec error into the next round. ---
+        // the residual carries the codec error into the next round. An
+        // active adversary corrupts the snapshot exactly where a real
+        // Byzantine node would: between local training and the wire. ---
         let received = &pipeline.received[round as usize];
-        let snapshot: HashMap<usize, Vec<f32>> = if codec.is_none() {
-            nodes.iter().map(|m| (m.node, m.params.clone())).collect()
+        let mut snapshot: Vec<Vec<f32>> = if codec.is_none() {
+            nodes.iter().map(|m| m.params.clone()).collect()
         } else {
-            nodes
-                .iter()
-                .map(|m| (m.node, feedback[m.node].compress(&m.params, &codec)))
-                .collect()
+            nodes.iter().map(|m| feedback[m.node].compress(&m.params, &codec)).collect()
         };
-        let weights: HashMap<usize, f32> = nodes.iter().map(|m| (m.node, m.weight)).collect();
+        if let Some(scenario) = session.adversary() {
+            scenario.corrupt_snapshot(&mut snapshot, round, session.config().seed);
+        }
+        let weights: Vec<f32> = nodes.iter().map(|m| m.weight).collect();
         let mut eval_loss = 0.0f32;
         for node in nodes.iter_mut() {
             node.weight = 1.0;
             if !codec.is_none() {
-                node.params = snapshot[&node.node].clone();
+                node.params = snapshot[node.node].clone();
             }
-            for &owner in &received[node.node] {
-                trainer.aggregate_into(node, &snapshot[&owner], weights[&owner])?;
-            }
+            let payloads: Vec<(usize, &[f32], f32)> = received[node.node]
+                .iter()
+                .map(|&owner| (owner, snapshot[owner].as_slice(), weights[owner]))
+                .collect();
+            trainer.fold_received(node, &payloads, &policy)?;
             eval_loss += trainer.eval(node, u64::MAX ^ round)?;
             node.weight = 1.0;
         }
@@ -163,9 +172,14 @@ pub fn run_dfl(
 }
 
 /// After full dissemination + pairwise folding, every node holds the same
-/// FedAvg model; used by integration tests to assert consensus.
+/// FedAvg model; used by integration tests to assert consensus. An empty
+/// slice agrees vacuously (it must not panic — callers may filter down to
+/// the honest subset first).
 pub fn models_agree(nodes: &[NodeModel], atol: f32) -> bool {
-    let first = &nodes[0].params;
+    let Some(first) = nodes.first() else {
+        return true;
+    };
+    let first = &first.params;
     nodes.iter().all(|m| {
         m.params.len() == first.len()
             && m.params.iter().zip(first.iter()).all(|(a, b)| (a - b).abs() <= atol)
@@ -184,6 +198,15 @@ mod tests {
         assert!(models_agree(&[a.clone(), b.clone()], 1e-6));
         b.params[1] = 3.0;
         assert!(!models_agree(&[a, b], 1e-6));
+    }
+
+    #[test]
+    fn models_agree_handles_empty_and_singleton_slices() {
+        // `nodes[0]` used to panic on an empty slice — honest-subset
+        // filtering under a Byzantine scenario can legitimately hit it
+        assert!(models_agree(&[], 1e-6));
+        let a = NodeModel { node: 0, params: vec![1.0], weight: 1.0 };
+        assert!(models_agree(&[a], 1e-6));
     }
 
     #[test]

@@ -114,6 +114,35 @@ impl<'rt> Trainer<'rt> {
         acc.weight = out[1].to_vec::<f32>()?[0];
         Ok(())
     }
+
+    /// Fold one round's received payloads into `acc` under `policy`.
+    ///
+    /// [`FoldKind::Mean`](crate::dfl::robust::FoldKind::Mean) replays the
+    /// **identical** pairwise [`Trainer::aggregate_into`] artifact sequence
+    /// the pre-robustness loop ran, in reception order — that is the
+    /// `--fold mean` bit-identity anchor. The robust policies compute
+    /// CPU-side over the canonical owner-sorted candidate set (see
+    /// [`FoldPolicy::fold`](crate::dfl::robust::FoldPolicy::fold)) — a
+    /// robust rule is not a pairwise-foldable reduction, so it cannot ride
+    /// the running-average artifact.
+    pub fn fold_received(
+        &self,
+        acc: &mut NodeModel,
+        payloads: &[(usize, &[f32], f32)],
+        policy: &crate::dfl::robust::FoldPolicy,
+    ) -> Result<()> {
+        if policy.is_mean() {
+            for &(_, payload, weight) in payloads {
+                self.aggregate_into(acc, payload, weight)?;
+            }
+        } else {
+            let others: Vec<(usize, &[f32])> =
+                payloads.iter().map(|&(owner, payload, _)| (owner, payload)).collect();
+            acc.params = policy.fold(acc.node, &acc.params, &others);
+            acc.weight = 1.0;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -49,6 +49,18 @@
 //! §III-C slot budget, and the loss model, with `compress = none`
 //! bit-identical to the full-width engine.
 //!
+//! Nor are payloads trusted: the **robustness plane**
+//! ([`dfl::adversary`] / [`dfl::robust`] — `--adversary`, `--fold`)
+//! plans seeded Byzantine behaviors (scaled/random poisoning, sybil
+//! cliques, and dropping relays that junk forwarded copies on tree
+//! edges without perturbing timing) and swaps the FedAvg fold for a
+//! robust aggregator (trimmed mean, coordinate median, Krum) over a
+//! canonical owner-sorted candidate set, so honest nodes reach exact
+//! consensus with outputs confined to the trusted inputs' envelope.
+//! The [`dfl::chaos`] harness composes attacks with drift, failures and
+//! compression; `--fold mean --adversary none` is bit-identical to the
+//! unhardened engine.
+//!
 //! On top of single rounds the engine pipelines **multiple rounds over
 //! one long-lived simulator** ([`coordinator::engine::RoundEngine::run_pipelined`]):
 //! each node seeds round *t+1* the moment it has aggregated round *t*,

@@ -130,6 +130,27 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(s) = f.get("replan-threshold") {
         cfg.replan_threshold = s.parse().context("--replan-threshold")?;
     }
+    if let Some(s) = f.get("adversary") {
+        cfg.adversary = mosgu::dfl::adversary::AdversaryKind::parse(s).with_context(|| {
+            format!("bad adversary {s} (none|scaled-poison|random-poison|sybil|dropping-relay)")
+        })?;
+    }
+    if let Some(s) = f.get("adversary-frac") {
+        cfg.adversary_frac = s.parse().context("--adversary-frac")?;
+    }
+    if let Some(s) = f.get("poison-scale") {
+        cfg.poison_scale = s.parse().context("--poison-scale")?;
+    }
+    if let Some(s) = f.get("drop-edge-frac") {
+        cfg.drop_edge_frac = s.parse().context("--drop-edge-frac")?;
+    }
+    if let Some(s) = f.get("fold") {
+        cfg.fold = mosgu::dfl::robust::FoldKind::parse(s)
+            .with_context(|| format!("bad fold {s} (mean|trimmed-mean|median|krum)"))?;
+    }
+    if let Some(s) = f.get("fold-f") {
+        cfg.fold_f = s.parse().context("--fold-f")?;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!("invalid flags: {e}"))?;
     Ok(cfg)
 }
@@ -190,7 +211,17 @@ fn print_usage() {
          \x20                links re-draw every --drift-interval-s simulated seconds\n\
          \x20 --probe-every R  moderator ping sweep every R rounds (0 = no re-planning)\n\
          \x20 --replan-threshold D  smoothed-ping deviation that triggers a mid-session\n\
-         \x20                replan (0 = replan after every sweep)"
+         \x20                replan (0 = replan after every sweep)\n\
+         \x20 --adversary A  Byzantine node model (none|scaled-poison|random-poison|\n\
+         \x20                sybil|dropping-relay); compromises --adversary-frac of the\n\
+         \x20                nodes (default none = every node honest)\n\
+         \x20 --adversary-frac F  fraction of nodes compromised, in (0,1) (default 0.2)\n\
+         \x20 --poison-scale S  poison multiplier / noise amplitude (default -10)\n\
+         \x20 --drop-edge-frac F  tree-edge fraction a dropping relay junks (default 1)\n\
+         \x20 --fold P       aggregation rule (mean|trimmed-mean|median|krum);\n\
+         \x20                mean is the legacy FedAvg fold, the rest tolerate f\n\
+         \x20                Byzantine peers at full dissemination\n\
+         \x20 --fold-f N     Byzantine count the robust folds assume (0 = auto)"
     );
 }
 
@@ -367,6 +398,14 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
         );
     }
     let session = GossipSession::with_model(&cfg, artifacts.model_mb())?;
+    if let Some(scenario) = session.adversary() {
+        println!(
+            "adversary: {} compromising nodes {:?}; fold policy: {}",
+            cfg.adversary_config().label(),
+            scenario.byzantine(),
+            session.fold_policy().label()
+        );
+    }
     let trainer = Trainer::new(&rt, &artifacts);
     println!("round  train_loss  eval_loss  comm_s  slots");
     let reports = run_dfl(&session, &trainer, rounds, local_steps, lr, |r| {

@@ -37,7 +37,7 @@ fn quantization_roundtrip_error_bounded_by_half_step() {
         let bits = 1 + rng.gen_range(16) as u32;
         let params = random_params(rng, len);
         let enc = quant_encode(&params, bits);
-        let dec = quant_decode(&enc);
+        let dec = quant_decode(&enc).expect("self-encoded quant payload is valid");
         if dec.len() != params.len() {
             return Err(format!("len {} != {}", dec.len(), params.len()));
         }
@@ -88,7 +88,7 @@ fn topk_indices_valid_and_magnitudes_maximal() {
             }
         }
         // decode: kept positions match, the rest are zero
-        let dec = topk_decode(&enc);
+        let dec = topk_decode(&enc).expect("self-encoded top-k payload is valid");
         for (i, &y) in dec.iter().enumerate() {
             let want = if kept.contains(&i) { params[i] } else { 0.0 };
             if y != want {

@@ -26,7 +26,11 @@
 //!    session **bit for bit** across every path (engine, segmented,
 //!    sharded), a one-lane forest round is exactly the segmented engine
 //!    on that tree, and `trees = 2` forests stay edge-disjoint, conserve
-//!    bytes, and replay deterministically.
+//!    bytes, and replay deterministically;
+//! 9. the robustness plane anchors to the unhardened engine: a
+//!    `--fold mean --adversary none` config (dormant attack/fold knobs
+//!    set) replays the default session bit for bit across every path,
+//!    jitter, and failure injection.
 
 use mosgu::coloring::bfs_coloring;
 use mosgu::config::ExperimentConfig;
@@ -389,6 +393,52 @@ fn compress_none_config_is_bit_identical_across_topologies_jitter_failures() {
 }
 
 #[test]
+fn fold_mean_adversary_none_is_bit_identical_across_topologies_jitter_failures() {
+    // the robustness plane's compatibility anchor: `--fold mean
+    // --adversary none` (with the dormant attack/fold knobs set) must
+    // replay the default engine bit for bit — single rounds, adaptive
+    // pipelines, and sharded rounds, under jitter and failure injection —
+    // and still match the pre-robustness legacy slot loop
+    for kind in TopologyKind::ALL {
+        for jitter in [0.0, 0.08] {
+            let base = ExperimentConfig {
+                topology: kind,
+                latency_jitter: jitter,
+                subnets: 1,
+                ..Default::default()
+            };
+            let mut pinned = base.clone();
+            pinned.adversary = mosgu::dfl::adversary::AdversaryKind::None;
+            pinned.fold = mosgu::dfl::robust::FoldKind::Mean;
+            pinned.adversary_frac = 0.3; // dormant knobs must not leak
+            pinned.poison_scale = -5.0;
+            pinned.drop_edge_frac = 0.5;
+            pinned.fold_f = 3;
+            let s_base = GossipSession::new(&base).unwrap();
+            let s_pin = GossipSession::new(&pinned).unwrap();
+            assert!(s_pin.adversary().is_none(), "{kind:?}: no scenario without an attack");
+            assert!(s_pin.fold_policy().is_mean(), "{kind:?}: mean fold must stay mean");
+            for failure_prob in [0.0, 0.15] {
+                let a = s_base.run_mosgu_round(14.0, 3, failure_prob);
+                let b = s_pin.run_mosgu_round(14.0, 3, failure_prob);
+                let label = format!("{kind:?} j={jitter} f={failure_prob}");
+                assert_rounds_bit_identical(&b, &a, &label);
+                let legacy = legacy_mosgu_round(&s_pin, 14.0, 3, failure_prob);
+                assert_metrics_match_legacy(&b, &legacy);
+            }
+            let ap = s_base.run_adaptive_rounds(14.0, 2, 5);
+            let bp = s_pin.run_adaptive_rounds(14.0, 2, 5);
+            assert_eq!(ap.total_time_s.to_bits(), bp.total_time_s.to_bits(), "{kind:?}");
+            assert_eq!(ap.transfers, bp.transfers, "{kind:?}");
+            assert_eq!(ap.received, bp.received, "{kind:?}: fold inputs diverged");
+            let ash = s_base.run_sharded_round(14.0, 3, 0.15, false);
+            let bsh = s_pin.run_sharded_round(14.0, 3, 0.15, false);
+            assert_rounds_bit_identical(&bsh, &ash, &format!("{kind:?} sharded"));
+        }
+    }
+}
+
+#[test]
 fn full_rerate_oracle_matches_incremental_through_the_engine() {
     // the incremental re-rate's engine-level anchor: a SimDriver whose
     // simulator is forced into full-water-filling oracle mode must run
@@ -611,6 +661,7 @@ fn adaptive_noop_hook_is_bit_identical_under_failures_and_segments() {
         max_slots: 4 * (8 * 10 + 64),
         failure_prob: 0.15,
         failure_rng: Pcg64::new(11),
+        drops: None,
     };
     for plan in [TransferPlan::whole(14.0), TransferPlan::segmented(36.8, 4)] {
         let mut d1 = SimDriver::new(session.testbed(), 9);
@@ -737,6 +788,7 @@ fn single_lane_forest_round_matches_segmented_engine_on_all_topologies() {
                     failure_prob,
                     max_slots: 8 * 10 + 64,
                     failure_rng: Pcg64::new(3 ^ 0xfa11),
+                    drops: None,
                 },
             );
             let label = format!("{kind:?} f={failure_prob}");

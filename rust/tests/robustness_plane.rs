@@ -1,0 +1,231 @@
+//! The robustness plane's contract tests:
+//!
+//! 1. decoder hardening, property-tested: `quant_decode` / `topk_decode`
+//!    must never panic on truncated, padded, index-corrupted or
+//!    NaN-headered encodings — corruption a hostile peer controls — and
+//!    must reject every corruption that breaks the encoding invariants;
+//! 2. the acceptance bar: honest-node consensus survives `f` Byzantine
+//!    nodes (scaled poison, sybil collusion, and a dropping relay on
+//!    tree edges) under the robust fold policies on the paper topologies
+//!    (chain, ring, balanced tree), with every honest output confined to
+//!    the trusted inputs' coordinate envelope — while the plain mean is
+//!    demonstrably defeated by the same attack;
+//! 3. composition: the chaos harness stacks an attack with drift,
+//!    per-transmission failure injection, replanning and compression,
+//!    and the robust fold still holds consensus.
+
+use mosgu::config::ExperimentConfig;
+use mosgu::dfl::adversary::AdversaryKind;
+use mosgu::dfl::chaos::{run_chaos, ChaosOptions};
+use mosgu::dfl::compress::{
+    quant_decode, quant_encode, topk_decode, topk_encode, CompressionKind, QUANT_CHUNK,
+};
+use mosgu::dfl::robust::FoldKind;
+use mosgu::graph::topology::TopologyKind;
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+
+fn random_params(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (rng.gen_f64_range(-4.0, 4.0)) as f32).collect()
+}
+
+#[test]
+fn quant_decode_never_panics_on_corrupted_encodings() {
+    check("quant decoder rejects hostile encodings", 192, |rng| {
+        let len = 1 + rng.gen_range(3 * QUANT_CHUNK);
+        let bits = 1 + rng.gen_range(16) as u32;
+        let params = random_params(rng, len);
+        let mut enc = quant_encode(&params, bits);
+        let case = rng.gen_range(6);
+        // `true` means the corruption breaks an encoding invariant the
+        // decoder checks; the remaining cases may coincide with a valid
+        // (differently-shaped) encoding, so only panic-freedom is asserted
+        let must_err = match case {
+            0 => {
+                enc.words.pop();
+                true
+            }
+            1 => {
+                enc.words.push(rng.next_u64());
+                true
+            }
+            2 => {
+                enc.len = rng.gen_range(4 * QUANT_CHUNK);
+                false
+            }
+            3 => {
+                enc.chunks.pop();
+                true
+            }
+            4 => {
+                enc.bits = rng.gen_range(41) as u32;
+                !(1..=32).contains(&enc.bits)
+                    || (enc.len * enc.bits as usize).div_ceil(64) != enc.words.len()
+            }
+            _ => {
+                enc.chunks[0].0 = f32::NAN;
+                true
+            }
+        };
+        match quant_decode(&enc) {
+            Err(_) => Ok(()),
+            Ok(dec) if must_err => Err(format!(
+                "case {case}: decoder accepted a corrupted encoding ({} elems)",
+                dec.len()
+            )),
+            Ok(dec) if dec.len() != enc.len => {
+                Err(format!("case {case}: decoded {} of len {}", dec.len(), enc.len))
+            }
+            Ok(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn topk_decode_never_panics_on_corrupted_encodings() {
+    check("topk decoder rejects hostile encodings", 192, |rng| {
+        let len = 1 + rng.gen_range(2048);
+        let frac = rng.gen_f64_range(0.01, 1.0);
+        let params = random_params(rng, len);
+        let mut enc = topk_encode(&params, frac);
+        let k = enc.indices.len();
+        let mut case = rng.gen_range(5);
+        if k < 2 && (case == 2 || case == 4) {
+            // duplicate/reversal need two indices; fall back to the OOB case
+            case = 0;
+        }
+        match case {
+            // out-of-bounds index: the unchecked write this decoder
+            // replaced would scribble past the output buffer
+            0 => enc.indices[0] = enc.len as u32,
+            // truncated value array
+            1 => {
+                enc.values.pop();
+            }
+            // duplicate index
+            2 => enc.indices[1] = enc.indices[0],
+            // shrunken `len` header puts the last kept index out of range
+            3 => enc.len = *enc.indices.last().unwrap() as usize,
+            // descending indices
+            _ => enc.indices.reverse(),
+        }
+        match topk_decode(&enc) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("case {case}: decoder accepted a corrupted encoding")),
+        }
+    });
+}
+
+fn quiet_cfg(kind: TopologyKind) -> ExperimentConfig {
+    ExperimentConfig { topology: kind, nodes: 10, latency_jitter: 0.0, ..Default::default() }
+}
+
+/// The paper's line topologies, where single relays carry whole subtrees.
+const PAPER_TOPOLOGIES: [TopologyKind; 3] =
+    [TopologyKind::Chain, TopologyKind::Ring, TopologyKind::BalancedTree];
+
+#[test]
+fn robust_folds_survive_f_byzantine_on_paper_topologies() {
+    // the PR's acceptance bar: f = 2 of 10 nodes hostile, every robust
+    // fold policy, every paper topology — honest consensus must hold with
+    // outputs confined to the honest inputs' coordinate envelope
+    let combos = [
+        (FoldKind::TrimmedMean, AdversaryKind::ScaledPoison),
+        (FoldKind::CoordinateMedian, AdversaryKind::RandomPoison),
+        (FoldKind::Krum, AdversaryKind::ScaledPoison),
+        (FoldKind::TrimmedMean, AdversaryKind::SybilClique),
+    ];
+    for kind in PAPER_TOPOLOGIES {
+        for (fold, adversary) in combos {
+            let cfg = ExperimentConfig { adversary, fold, ..quiet_cfg(kind) };
+            let report = run_chaos(&cfg, &ChaosOptions::default()).unwrap();
+            let tag = format!("{kind:?}/{}/{}", report.fold, report.adversary);
+            assert_eq!(report.byzantine.len(), 2, "{tag}: 20% of 10 nodes");
+            assert!(report.bounded(), "{tag}: an honest output left the trusted envelope");
+            assert!(report.max_deviation() < 0.5, "{tag}: deviation {}", report.max_deviation());
+            // full dissemination hands every honest node the identical
+            // candidate set, and the canonical owner-sorted fold turns
+            // that into exact agreement
+            assert!(report.final_spread() < 1e-6, "{tag}: spread {}", report.final_spread());
+        }
+    }
+}
+
+#[test]
+fn dropping_relay_on_tree_edges_keeps_honest_consensus_bounded() {
+    // the relay attack is lethal on tree topologies: one interior node
+    // censors whole subtrees. Junked payloads must stay out of the fold
+    // inputs, rounds must still complete, and because relayed *content*
+    // is authentic, every fold output stays inside the all-node envelope.
+    for kind in [TopologyKind::Chain, TopologyKind::BalancedTree] {
+        for fold in [FoldKind::TrimmedMean, FoldKind::CoordinateMedian, FoldKind::Krum] {
+            let cfg = ExperimentConfig {
+                adversary: AdversaryKind::DroppingRelay,
+                adversary_frac: 0.3,
+                fold,
+                ..quiet_cfg(kind)
+            };
+            let report = run_chaos(&cfg, &ChaosOptions::default()).unwrap();
+            let tag = format!("{kind:?}/{}", report.fold);
+            assert_eq!(report.byzantine.len(), 3, "{tag}");
+            assert!(report.bounded(), "{tag}: authentic content escaped its own envelope");
+            assert!(report.max_deviation() < 0.5, "{tag}: deviation {}", report.max_deviation());
+        }
+    }
+}
+
+#[test]
+fn plain_mean_is_defeated_where_robust_folds_hold() {
+    // the contrast pair behind the whole plane: same topology, same
+    // attack, same seed — only the fold differs
+    for kind in PAPER_TOPOLOGIES {
+        let poisoned = ExperimentConfig {
+            adversary: AdversaryKind::ScaledPoison,
+            poison_scale: -100.0,
+            ..quiet_cfg(kind)
+        };
+        let mean = run_chaos(&poisoned, &ChaosOptions::default()).unwrap();
+        assert!(
+            !mean.bounded(),
+            "{kind:?}: a -100x poisoned payload must drag the plain mean out of range"
+        );
+        let robust = run_chaos(
+            &ExperimentConfig { fold: FoldKind::TrimmedMean, ..poisoned },
+            &ChaosOptions::default(),
+        )
+        .unwrap();
+        assert!(robust.bounded(), "{kind:?}: the trimmed mean must shrug the same attack off");
+        assert!(
+            robust.max_deviation() < mean.max_deviation(),
+            "{kind:?}: robust deviation {} !< mean deviation {}",
+            robust.max_deviation(),
+            mean.max_deviation()
+        );
+    }
+}
+
+#[test]
+fn chaos_composition_with_drift_failures_and_compression_holds_consensus() {
+    // everything at once: scaled poison + 8-bit quantization + network
+    // drift with per-round probing/replanning + 15% transmission failures
+    let cfg = ExperimentConfig {
+        adversary: AdversaryKind::ScaledPoison,
+        fold: FoldKind::TrimmedMean,
+        compress: CompressionKind::Quant,
+        quant_bits: 8,
+        drift: 0.2,
+        drift_interval_s: 1.0,
+        probe_every: 1,
+        replan_threshold: 0.2,
+        ..quiet_cfg(TopologyKind::Ring)
+    };
+    let opts = ChaosOptions { rounds: 4, failure_prob: 0.15, ..Default::default() };
+    let report = run_chaos(&cfg, &opts).unwrap();
+    assert_eq!(report.rounds.len(), 4);
+    assert!(report.bounded(), "composed chaos broke the trimmed mean's envelope");
+    assert!(report.final_spread() < 1e-5, "spread {}", report.final_spread());
+    // deterministic replay: same config, same seed, same verdicts
+    let again = run_chaos(&cfg, &opts).unwrap();
+    assert_eq!(report.final_spread().to_bits(), again.final_spread().to_bits());
+    assert_eq!(report.total_time_s.to_bits(), again.total_time_s.to_bits());
+}
