@@ -1,0 +1,200 @@
+//! Convergence sweep: the learning-dynamics scenario zoo (Dirichlet
+//! non-IID shards, partial participation, stragglers, FedAvg vs D-PSGD,
+//! compression) driven through the convergence harness — real engine
+//! timing and reception orders, synthetic quadratic learning. Emits one
+//! `JSON {...}` line per cell, each carrying the full accuracy-vs-round
+//! (`acc_curve`) and accuracy-vs-wire-MB (`wire_curve`) trajectories; CI
+//! uploads them as the `convergence-sweep` artifact.
+//!
+//! The full grid's gates are the PR's acceptance bar: every scenario
+//! still learns (final eval beats round-0 eval), and quant-8 + error
+//! feedback matches the uncompressed final eval loss within tolerance on
+//! a Dirichlet non-IID scenario while moving strictly fewer wire bytes.
+//!
+//! ```bash
+//! cargo bench --bench convergence_sweep             # full grid
+//! cargo bench --bench convergence_sweep -- --smoke  # CI smoke subset
+//! ```
+
+use mosgu::bench::section;
+use mosgu::config::ExperimentConfig;
+use mosgu::dfl::compress::CompressionKind;
+use mosgu::dfl::convergence::{run_convergence, ConvergenceOptions, ConvergenceReport};
+use mosgu::dfl::data::AlgoKind;
+use mosgu::graph::topology::TopologyKind;
+
+/// One sweep cell: a named scenario-zoo configuration.
+struct Cell {
+    label: &'static str,
+    cfg: ExperimentConfig,
+}
+
+fn base_cfg(topology: TopologyKind) -> ExperimentConfig {
+    ExperimentConfig { topology, nodes: 10, latency_jitter: 0.0, ..Default::default() }
+}
+
+fn cells(topology: TopologyKind, smoke: bool) -> Vec<Cell> {
+    let base = base_cfg(topology);
+    let mut cells = vec![
+        Cell { label: "baseline", cfg: base.clone() },
+        Cell {
+            label: "dirichlet-0.3",
+            cfg: ExperimentConfig { dirichlet_alpha: 0.3, ..base.clone() },
+        },
+        Cell {
+            label: "quant8",
+            cfg: ExperimentConfig { compress: CompressionKind::Quant, ..base.clone() },
+        },
+    ];
+    if !smoke {
+        cells.extend([
+            Cell {
+                label: "dirichlet-1.0",
+                cfg: ExperimentConfig { dirichlet_alpha: 1.0, ..base.clone() },
+            },
+            Cell {
+                label: "dirichlet-0.1",
+                cfg: ExperimentConfig { dirichlet_alpha: 0.1, ..base.clone() },
+            },
+            Cell {
+                label: "participation-0.6",
+                cfg: ExperimentConfig { participation: 0.6, ..base.clone() },
+            },
+            Cell {
+                label: "stragglers",
+                cfg: ExperimentConfig {
+                    straggler_frac: 0.2,
+                    straggler_slowdown: 4.0,
+                    ..base.clone()
+                },
+            },
+            Cell {
+                label: "dpsgd",
+                cfg: ExperimentConfig { algo: AlgoKind::DPsgd, ..base.clone() },
+            },
+            Cell {
+                label: "kitchen-sink",
+                cfg: ExperimentConfig {
+                    dirichlet_alpha: 0.3,
+                    participation: 0.8,
+                    straggler_frac: 0.2,
+                    straggler_slowdown: 3.0,
+                    compress: CompressionKind::Quant,
+                    ..base.clone()
+                },
+            },
+        ]);
+    }
+    cells
+}
+
+fn curve_json(values: impl Iterator<Item = f64>) -> String {
+    let parts: Vec<String> = values.map(|v| format!("{v:.6}")).collect();
+    format!("[{}]", parts.join(","))
+}
+
+fn report_cell(topology: TopologyKind, label: &str, report: &ConvergenceReport) {
+    println!(
+        "{:<16} {:<18} {:>8} {:>12.4} {:>12.4} {:>10.4} {:>10.1} {:>9.3}",
+        topology.name(),
+        label,
+        report.algo,
+        report.first_eval_loss(),
+        report.final_eval_loss(),
+        report.final_accuracy(),
+        report.total_wire_mb(),
+        report.total_time_s
+    );
+    println!(
+        "JSON {{\"bench\":\"convergence_sweep\",\"topology\":\"{}\",\
+         \"scenario\":\"{}\",\"algo\":\"{}\",\"rounds\":{},\
+         \"first_eval\":{:.6},\"final_eval\":{:.6},\"final_acc\":{:.6},\
+         \"wire_mb\":{:.6},\"total_s\":{:.6},\"stragglers\":{},\
+         \"acc_curve\":{},\"wire_curve\":{}}}",
+        topology.name(),
+        label,
+        report.algo,
+        report.rounds.len(),
+        report.first_eval_loss(),
+        report.final_eval_loss(),
+        report.final_accuracy(),
+        report.total_wire_mb(),
+        report.total_time_s,
+        report.stragglers.len(),
+        curve_json(report.rounds.iter().map(|r| r.accuracy)),
+        curve_json(report.rounds.iter().map(|r| r.cum_wire_mb)),
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let topologies: &[TopologyKind] = if smoke {
+        &[TopologyKind::BalancedTree]
+    } else {
+        &[TopologyKind::Chain, TopologyKind::Ring, TopologyKind::BalancedTree]
+    };
+    let opts = ConvergenceOptions {
+        rounds: if smoke { 3 } else { 8 },
+        dim: if smoke { 16 } else { 64 },
+        ..Default::default()
+    };
+
+    section(&format!(
+        "convergence sweep: scenario zoo x topology ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    ));
+    println!(
+        "{:<16} {:<18} {:>8} {:>12} {:>12} {:>10} {:>10} {:>9}",
+        "topology", "scenario", "algo", "first_eval", "final_eval", "final_acc", "wire_mb", "time_s"
+    );
+    let mut ok = true;
+    for &topology in topologies {
+        for cell in cells(topology, smoke) {
+            let report = run_convergence(&cell.cfg, &opts).expect("convergence run");
+            report_cell(topology, cell.label, &report);
+            // every scenario must still learn
+            if !report.improved() {
+                println!("  FAIL: scenario {} did not improve", cell.label);
+                ok = false;
+            }
+            // curves must be well-formed for the artifact consumers
+            let monotone = report
+                .rounds
+                .windows(2)
+                .all(|w| w[0].cum_wire_mb <= w[1].cum_wire_mb && w[0].done_s < w[1].done_s);
+            if !monotone {
+                println!("  FAIL: scenario {} curve not monotone", cell.label);
+                ok = false;
+            }
+        }
+    }
+
+    // acceptance gate: quant-8 + error feedback tracks the uncompressed
+    // final eval loss on a Dirichlet non-IID scenario, for fewer bytes
+    section("acceptance check: quant-8 + EF matches uncompressed on Dirichlet shards");
+    let noniid = ExperimentConfig { dirichlet_alpha: 0.3, ..base_cfg(TopologyKind::BalancedTree) };
+    let gate_opts = ConvergenceOptions { rounds: if smoke { 4 } else { 10 }, ..opts };
+    let plain = run_convergence(&noniid, &gate_opts).expect("uncompressed run");
+    let quant = run_convergence(
+        &ExperimentConfig { compress: CompressionKind::Quant, quant_bits: 8, ..noniid },
+        &gate_opts,
+    )
+    .expect("quant run");
+    let diff = (quant.final_eval_loss() - plain.final_eval_loss()).abs();
+    let tol = 0.05;
+    let tracks = diff < tol && quant.total_wire_mb() < plain.total_wire_mb();
+    println!(
+        "  plain: eval={:.4} wire={:.1} MB; quant8+EF: eval={:.4} wire={:.1} MB; |diff|={:.2e} (tol {tol}) -> {}",
+        plain.final_eval_loss(),
+        plain.total_wire_mb(),
+        quant.final_eval_loss(),
+        quant.total_wire_mb(),
+        diff,
+        if tracks { "pass" } else { "FAIL" }
+    );
+    ok &= tracks;
+    println!("acceptance: {}", if ok { "pass" } else { "FAIL" });
+    if !ok {
+        std::process::exit(1);
+    }
+}

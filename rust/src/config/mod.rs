@@ -9,6 +9,7 @@ pub use parser::{ParseError, TomlValue, parse_toml};
 use crate::coloring::ColoringAlgorithm;
 use crate::dfl::adversary::{AdversaryConfig, AdversaryKind};
 use crate::dfl::compress::{CompressionConfig, CompressionKind};
+use crate::dfl::data::AlgoKind;
 use crate::dfl::robust::{FoldKind, FoldPolicy};
 use crate::dfl::transfer::TransferPlan;
 use crate::graph::generators::GeneratorKind;
@@ -124,6 +125,32 @@ pub struct ExperimentConfig {
     /// the scenario's actual compromised count, or `max(1, n/5)` blind).
     /// CLI: `--fold-f`.
     pub fold_f: usize,
+    /// Dirichlet concentration for non-IID data sharding (`∞` = the
+    /// legacy deterministic one-stride-class-per-node task, bit-identical;
+    /// finite α draws each node's class mixture from Dirichlet(α) —
+    /// small α ⇒ near-one-hot shards, large α ⇒ near-uniform). Seeded by
+    /// `seed`, so shards replay per run. CLI: `--dirichlet-alpha`
+    /// (accepts `inf`).
+    pub dirichlet_alpha: f64,
+    /// Fraction of nodes that train and originate payloads each round,
+    /// in (0, 1] (1 = every node, the legacy engine bit for bit; below 1
+    /// a seeded per-round subset of `ceil(p·n)` nodes originates while
+    /// the rest only relay on the tree). CLI: `--participation`.
+    pub participation: f64,
+    /// Fraction of nodes marked as compute stragglers in [0, 1] (0 = no
+    /// stragglers, bit-identical). CLI: `--straggler-frac`.
+    pub straggler_frac: f64,
+    /// Compute slowdown of a straggler relative to the baseline, ≥ 1: a
+    /// straggler skips `ceil(slowdown − 1)` of its transmit opportunities
+    /// at every round start (local training still running), entering the
+    /// slot schedule late. Dormant while `straggler_frac = 0`. CLI:
+    /// `--straggler-slowdown`.
+    pub straggler_slowdown: f64,
+    /// DFL aggregation algorithm (`fedavg` = full-dissemination FedAvg,
+    /// the legacy fold; `dpsgd` = D-PSGD-style Metropolis neighbor
+    /// mixing over the gossip tree — requires `fold = mean`). CLI:
+    /// `--algo`.
+    pub algo: AlgoKind,
 }
 
 impl Default for ExperimentConfig {
@@ -166,6 +193,11 @@ impl Default for ExperimentConfig {
             drop_edge_frac: 1.0,
             fold: FoldKind::Mean,
             fold_f: 0,
+            dirichlet_alpha: f64::INFINITY,
+            participation: 1.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 4.0,
+            algo: AlgoKind::FedAvg,
         }
     }
 }
@@ -289,6 +321,21 @@ impl ExperimentConfig {
                     .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
             }
             "fold_f" => self.fold_f = value.as_int().ok_or_else(|| bad("integer"))? as usize,
+            "dirichlet_alpha" => {
+                self.dirichlet_alpha = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "participation" => self.participation = value.as_float().ok_or_else(|| bad("float"))?,
+            "straggler_frac" => {
+                self.straggler_frac = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "straggler_slowdown" => {
+                self.straggler_slowdown = value.as_float().ok_or_else(|| bad("float"))?
+            }
+            "algo" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.algo = AlgoKind::parse(s)
+                    .ok_or_else(|| ConfigError::Value(key.into(), s.to_string()))?;
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -379,6 +426,25 @@ impl ExperimentConfig {
         }
         if let Err(why) = self.fold_policy(1).validate() {
             return Err(ConfigError::Value("fold".into(), why));
+        }
+        // scenario-zoo knobs stay valid even while dormant (same contract
+        // as the compression/adversary planes)
+        if self.dirichlet_alpha.is_nan() || self.dirichlet_alpha <= 0.0 {
+            return reject("dirichlet_alpha", "must be > 0 (inf = legacy per-node class shards)");
+        }
+        if self.participation.is_nan() || self.participation <= 0.0 || self.participation > 1.0 {
+            return reject("participation", "must be in (0, 1]");
+        }
+        if !(0.0..=1.0).contains(&self.straggler_frac) {
+            return reject("straggler_frac", "must be in [0, 1]");
+        }
+        if self.straggler_slowdown < 1.0 || !self.straggler_slowdown.is_finite() {
+            return reject("straggler_slowdown", "must be a finite value >= 1");
+        }
+        // D-PSGD replaces the fold entirely with neighbor mixing; a
+        // robust fold selection would be silently ignored — reject it
+        if self.algo == AlgoKind::DPsgd && self.fold != FoldKind::Mean {
+            return reject("algo", "dpsgd requires fold = mean (mixing replaces the fold)");
         }
         Ok(())
     }
@@ -696,6 +762,47 @@ backbone_latency_ms = 8.5
             ExperimentConfig::from_toml_str("fold_f = -1").is_err(),
             "negative values must not wrap through the usize cast"
         );
+    }
+
+    #[test]
+    fn scenario_zoo_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "dirichlet_alpha = 0.3\nparticipation = 0.6\nstraggler_frac = 0.2\n\
+             straggler_slowdown = 3.0\nalgo = \"dpsgd\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.dirichlet_alpha, 0.3);
+        assert_eq!(cfg.participation, 0.6);
+        assert_eq!(cfg.straggler_frac, 0.2);
+        assert_eq!(cfg.straggler_slowdown, 3.0);
+        assert_eq!(cfg.algo, AlgoKind::DPsgd);
+
+        // the f64 parser accepts the infinity sentinel spelled out
+        let cfg = ExperimentConfig::from_toml_str("dirichlet_alpha = inf").unwrap();
+        assert!(cfg.dirichlet_alpha.is_infinite());
+
+        // defaults keep the legacy IID-in-lockstep learning plane
+        let d = ExperimentConfig::default();
+        assert!(d.dirichlet_alpha.is_infinite());
+        assert_eq!(d.participation, 1.0);
+        assert_eq!(d.straggler_frac, 0.0);
+        assert_eq!(d.straggler_slowdown, 4.0);
+        assert_eq!(d.algo, AlgoKind::FedAvg);
+
+        assert!(ExperimentConfig::from_toml_str("dirichlet_alpha = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("dirichlet_alpha = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("dirichlet_alpha = nan").is_err());
+        assert!(ExperimentConfig::from_toml_str("participation = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_str("participation = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("straggler_frac = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("straggler_frac = -0.1").is_err());
+        assert!(ExperimentConfig::from_toml_str("straggler_slowdown = 0.5").is_err());
+        assert!(ExperimentConfig::from_toml_str("straggler_slowdown = inf").is_err());
+        assert!(ExperimentConfig::from_toml_str("algo = \"sgd\"").is_err());
+        // mixing replaces the fold — a robust fold selection is a conflict
+        assert!(ExperimentConfig::from_toml_str("algo = \"dpsgd\"\nfold = \"krum\"").is_err());
+        // while fedavg composes with any fold
+        ExperimentConfig::from_toml_str("algo = \"fedavg\"\nfold = \"krum\"").unwrap();
     }
 
     #[test]

@@ -223,6 +223,21 @@ pub struct PipelineOptions {
     /// every pipelined round's state gets the plan installed, junked
     /// copies are excluded from [`PipelineMetrics::received`].
     pub drops: Option<Rc<crate::dfl::adversary::DropPlan>>,
+    /// Partial-participation plan (`--participation p < 1`): only a
+    /// round's sampled participants seed (originate) their model —
+    /// non-participants relay on the tree but contribute no copy, so the
+    /// schedule slots their copies would have occupied are pruned
+    /// automatically and the round completes when every node holds every
+    /// *originated* model. `None` = every node originates every round
+    /// (the legacy pipeline, bit for bit).
+    pub participants: Option<Rc<crate::dfl::data::ParticipationPlan>>,
+    /// Straggler compute holds (`--straggler-frac > 0`): an originating
+    /// node `u` sits out its first `hold_slots[u]` transmit opportunities
+    /// of each round (local training still running), so its traffic
+    /// enters the slot schedule that many color turns late and the
+    /// pipelined overlap accounting absorbs or exposes the delay. `None`
+    /// = no holds (the legacy pipeline, bit for bit).
+    pub stragglers: Option<Rc<crate::dfl::data::StragglerPlan>>,
 }
 
 impl PipelineOptions {
@@ -240,6 +255,8 @@ impl PipelineOptions {
             failure_prob: 0.0,
             failure_rng: Pcg64::new(0),
             drops: None,
+            participants: None,
+            stragglers: None,
         }
     }
 }
@@ -329,6 +346,12 @@ struct ActiveRound {
     seeded_count: usize,
     /// Own-model copies not yet (freshly) delivered; 0 = exchange done.
     own_left: usize,
+    /// Models a node must hold for this round to be complete: the
+    /// round's originator count (= n without a participation plan).
+    goal: usize,
+    /// Remaining straggler transmit-opportunity holds per node (`None`
+    /// without a straggler plan — the legacy planning loop, verbatim).
+    hold: Option<Vec<u32>>,
     phase: RoundPhase,
 }
 
@@ -959,17 +982,46 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let mut replans: Vec<ReplanEvent> = Vec::new();
 
         let drops = opts.drops.clone();
+        let participants = opts.participants.clone();
+        let stragglers = opts.stragglers.clone();
         let fresh_round = |epoch: &Rc<PlanEpoch>, round: u64, now: f64, slot: usize| {
             let mut state = GossipState::unseeded(epoch.tree.clone(), round);
             if drops.is_some() {
                 state.set_drops(drops.clone());
             }
+            // this round's originator set (None = everyone): sets the
+            // completion goal, the exchange-phase copy budget, and which
+            // nodes carry a straggler compute hold
+            let originators = participants.as_ref().and_then(|p| p.participants(round));
+            let goal = originators.map_or(n, <[usize]>::len);
+            let own_left = originators
+                .map_or(own_copies, |set| set.iter().map(|&u| epoch.tree.degree(u)).sum());
+            let hold = stragglers.as_ref().and_then(|s| {
+                let mut h = vec![0u32; n];
+                match originators {
+                    Some(set) => {
+                        for &u in set {
+                            h[u] = s.hold_slots[u];
+                        }
+                    }
+                    None => h.copy_from_slice(&s.hold_slots),
+                }
+                // all-zero holds (possible under participation sampling)
+                // keep the legacy planning loop
+                if h.iter().all(|&x| x == 0) {
+                    None
+                } else {
+                    Some(h)
+                }
+            });
             ActiveRound {
                 state,
                 plan: Rc::clone(epoch),
                 seeded: vec![false; n],
                 seeded_count: 0,
-                own_left: own_copies,
+                own_left,
+                goal,
+                hold,
                 phase: RoundPhase {
                     round,
                     first_seed_s: now,
@@ -991,7 +1043,11 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         if opts.rounds > 0 {
             let mut first = fresh_round(&current, 0, self.driver.now(), 0);
             for u in 0..n {
-                first.state.seed_node(u);
+                // non-participants are "seeded" for bookkeeping (they are
+                // ready relays) but originate no copy of their own
+                if participants.as_ref().map_or(true, |p| p.originates(0, u)) {
+                    first.state.seed_node(u);
+                }
                 first.seeded[u] = true;
             }
             first.seeded_count = n;
@@ -1018,6 +1074,16 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 for (ai, ar) in active.iter_mut().enumerate() {
                     if !ar.plan.schedule.transmits_in_slot(u, slot) {
                         continue;
+                    }
+                    // straggler compute hold: the node spends this transmit
+                    // opportunity still training its oldest pending round —
+                    // it transmits nothing this slot (for any round: a held
+                    // node cannot jump ahead to newer traffic either)
+                    if let Some(hold) = ar.hold.as_mut() {
+                        if hold[u] > 0 && ar.state.queue(u).pending_len() > 0 {
+                            hold[u] -= 1;
+                            break;
+                        }
                     }
                     if let Some(tx) = ar.state.plan_node(u) {
                         planned_rounds.push(ai);
@@ -1066,7 +1132,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                             ar.phase.exchange_done_s = end_s;
                         }
                     }
-                    if ar.state.queue(to).held_count() == n {
+                    if ar.state.queue(to).held_count() == ar.goal {
                         completed_nodes.push((ai, to));
                     }
                 }
@@ -1106,7 +1172,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                                         exchange_done_rounds.push(round_idx);
                                     }
                                 }
-                                if ar.state.queue(send.to).held_count() == n {
+                                if ar.state.queue(send.to).held_count() == ar.goal {
                                     completed_nodes.push((round_idx, send.to));
                                 }
                             }
@@ -1149,7 +1215,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 };
                 let ar = &mut active[ni];
                 if !ar.seeded[u] {
-                    ar.state.seed_node(u);
+                    if participants.as_ref().map_or(true, |p| p.originates(next, u)) {
+                        ar.state.seed_node(u);
+                    }
                     ar.seeded[u] = true;
                     if ar.seeded_count == 0 {
                         ar.phase.first_seed_s = end_s;
@@ -1165,7 +1233,7 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             // retire fully disseminated rounds
             let mut retired: Vec<u64> = Vec::new();
             active.retain_mut(|ar| {
-                if !ar.state.is_complete() {
+                if !ar.state.all_hold(ar.goal) {
                     return true;
                 }
                 ar.phase.done_s = end_s;
@@ -1188,6 +1256,43 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 retired.push(ar.phase.round);
                 false
             });
+
+            // a retiring round may hold nodes that never tripped the
+            // per-delivery completion check (a goal-of-one originator
+            // already holds its round's every model at seed time): seed
+            // everyone into the successor before the round is dropped.
+            // Without a participation plan every node completed via a
+            // delivery, so this loop is a no-op — the legacy path.
+            for &r in &retired {
+                let next = r + 1;
+                if next >= opts.rounds {
+                    continue;
+                }
+                let ni = match active.iter().position(|ar| ar.state.round() == next) {
+                    Some(i) => i,
+                    None => {
+                        active.push(fresh_round(&current, next, end_s, slot + 1));
+                        active.len() - 1
+                    }
+                };
+                let ar = &mut active[ni];
+                for u in 0..n {
+                    if !ar.seeded[u] {
+                        if participants.as_ref().map_or(true, |p| p.originates(next, u)) {
+                            ar.state.seed_node(u);
+                        }
+                        ar.seeded[u] = true;
+                        if ar.seeded_count == 0 {
+                            ar.phase.first_seed_s = end_s;
+                            ar.phase.first_slot = slot + 1;
+                        }
+                        ar.seeded_count += 1;
+                        if ar.seeded_count == n {
+                            ar.phase.all_seeded_s = end_s;
+                        }
+                    }
+                }
+            }
 
             // the moderator's re-planning hook fires as rounds retire; a
             // new epoch governs every round created from here on

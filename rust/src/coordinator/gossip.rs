@@ -148,6 +148,14 @@ impl GossipState {
         self.queues.iter().all(|q| q.held_count() == n)
     }
 
+    /// Every node holds at least `goal` models — round completion under
+    /// a partial-participation plan, where `goal` is the round's
+    /// originator count ([`is_complete`](Self::is_complete) with `goal =
+    /// n`: nobody can hold more models than exist).
+    pub fn all_hold(&self, goal: usize) -> bool {
+        self.queues.iter().all(|q| q.held_count() >= goal)
+    }
+
     /// Plan the transmissions of one slot for the given transmitting class.
     ///
     /// Each transmitter pops its oldest entry and addresses every tree

@@ -15,6 +15,7 @@ use super::probe::{ReplanPolicy, Replanner};
 use super::schedule::Schedule;
 use crate::config::ExperimentConfig;
 use crate::dfl::adversary::{AdversaryScenario, DropPlan};
+use crate::dfl::data::{ParticipationPlan, StragglerPlan};
 use crate::dfl::robust::FoldPolicy;
 use crate::dfl::transfer::TransferPlan;
 use crate::graph::generators::{self, Hierarchy};
@@ -204,6 +205,42 @@ impl GossipSession {
         self.adversary.as_ref().and_then(AdversaryScenario::drop_plan)
     }
 
+    /// The session's per-round originator sets over `rounds` pipelined
+    /// rounds (`--participation`); `None` while dormant (`p = 1`, every
+    /// node originates — the legacy engine bit for bit). Seeded by the
+    /// config seed, so the DFL layer and the engine agree on who trains.
+    pub fn participation_plan(&self, rounds: u64) -> Option<Rc<ParticipationPlan>> {
+        if self.cfg.participation >= 1.0 {
+            return None;
+        }
+        Some(Rc::new(ParticipationPlan::sample(
+            self.cfg.participation,
+            self.bundle.tree.node_count(),
+            rounds,
+            self.cfg.seed,
+        )))
+    }
+
+    /// The session's straggler compute-hold plan (`--straggler-frac` /
+    /// `--straggler-slowdown`); `None` while dormant (no stragglers, or
+    /// a slowdown too small to cost a transmit opportunity).
+    pub fn straggler_plan(&self) -> Option<Rc<StragglerPlan>> {
+        if self.cfg.straggler_frac <= 0.0 {
+            return None;
+        }
+        let plan = StragglerPlan::sample(
+            self.cfg.straggler_frac,
+            self.cfg.straggler_slowdown,
+            self.bundle.tree.node_count(),
+            self.cfg.seed,
+        );
+        if plan.is_noop() {
+            None
+        } else {
+            Some(Rc::new(plan))
+        }
+    }
+
     /// The config's transfer plan for a `model_mb`-sized checkpoint
     /// (whole-model by default; `--segments` / `--segment-mb` slice it).
     pub fn transfer_plan(&self, model_mb: f64) -> TransferPlan {
@@ -282,6 +319,8 @@ impl GossipSession {
         let n = self.bundle.tree.node_count();
         let mut opts = PipelineOptions::reliable_plan(rounds, plan, n);
         opts.drops = self.drop_plan();
+        opts.participants = self.participation_plan(rounds);
+        opts.stragglers = self.straggler_plan();
         engine.run_pipelined(&self.bundle.tree, opts)
     }
 
@@ -340,6 +379,8 @@ impl GossipSession {
         let n = self.bundle.tree.node_count();
         let mut opts = PipelineOptions::reliable_plan(rounds, plan, n);
         opts.drops = self.drop_plan();
+        opts.participants = self.participation_plan(rounds);
+        opts.stragglers = self.straggler_plan();
         if failure_prob > 0.0 {
             opts.failure_prob = failure_prob;
             opts.failure_rng = Pcg64::new(seed ^ 0xfa11);

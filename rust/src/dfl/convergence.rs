@@ -1,0 +1,403 @@
+//! Convergence harness for the learning-dynamics scenario zoo: a
+//! CPU-only quadratic learner over the synthetic stride classes, driven
+//! by the real pipelined engine for timing, reception orders, partial
+//! participation and straggler holds.
+//!
+//! Like [`chaos`](super::chaos), the harness is artifact-free so CI can
+//! gate learning dynamics without PJRT: node `u`'s "data" is the class
+//! mixture `share_u` that `--dirichlet-alpha` deals it, its local
+//! objective is `F_u(x) = ½‖x − m_u‖²/dim` with `m_u = Σ_c share_u[c]·t_c`
+//! over seeded per-class targets `t_c`, and local SGD contracts toward
+//! `m_u` exactly the way the real trainer contracts toward its shard.
+//! Gossip content (FedAvg fold or D-PSGD mixing, compression + error
+//! feedback, participation pruning) then replays CPU-side in the
+//! engine's delivery orders, so accuracy-vs-round and accuracy-vs-wire
+//! curves measure the *protocol's* effect on learning, not PJRT noise.
+//! `tests/learning_dynamics.rs` and `benches/convergence_sweep.rs` both
+//! drive this module.
+
+use super::compress::ErrorFeedback;
+use super::data::{self, AlgoKind, STRIDE_CLASSES};
+use super::round::cumulative_wire_mb;
+use crate::config::ExperimentConfig;
+use crate::coordinator::session::GossipSession;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Harness knobs that are not part of [`ExperimentConfig`] (the zoo
+/// knobs — alpha, participation, stragglers, algo — all come from the
+/// config, as do compression and fold).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvergenceOptions {
+    /// Training/gossip rounds to run.
+    pub rounds: u64,
+    /// Synthetic parameter-vector width.
+    pub dim: usize,
+    /// Logical checkpoint size driving the timing simulation, MB.
+    pub model_mb: f64,
+    /// Local SGD steps per round.
+    pub local_steps: u32,
+    /// Local learning rate in (0, 1] (a contraction factor toward the
+    /// node's shard mean).
+    pub lr: f64,
+    /// Per-transmission disruption probability composed on top of the
+    /// scenario (0 = reliable links).
+    pub failure_prob: f64,
+}
+
+impl Default for ConvergenceOptions {
+    fn default() -> Self {
+        ConvergenceOptions {
+            rounds: 5,
+            dim: 16,
+            model_mb: 5.0,
+            local_steps: 3,
+            lr: 0.5,
+            failure_prob: 0.0,
+        }
+    }
+}
+
+/// One round of the convergence curve.
+#[derive(Debug, Clone)]
+pub struct ConvergenceRound {
+    pub round: u64,
+    /// Mean local objective across this round's participants, after
+    /// their local steps (before gossip).
+    pub train_loss: f64,
+    /// Mean local objective across *all* nodes after aggregation — each
+    /// node evaluated on its own shard (the personalization convention
+    /// `dfl::round` uses).
+    pub eval_loss: f64,
+    /// `1 / (1 + eval_loss)` — the curve ordinate.
+    pub accuracy: f64,
+    /// Cumulative wire MB the pipeline had moved by this round's full
+    /// dissemination — the accuracy-vs-wire abscissa.
+    pub cum_wire_mb: f64,
+    /// Absolute pipeline time the round fully disseminated.
+    pub done_s: f64,
+}
+
+/// Full convergence-run report.
+#[derive(Debug, Clone)]
+pub struct ConvergenceReport {
+    pub rounds: Vec<ConvergenceRound>,
+    /// Which nodes trained each round (`None` = everyone, every round).
+    pub participants_per_round: Option<Vec<Vec<usize>>>,
+    /// The straggling nodes (empty without `--straggler-frac`).
+    pub stragglers: Vec<usize>,
+    /// Algorithm label (`fedavg` / `dpsgd`).
+    pub algo: String,
+    /// Simulated time of the whole pipelined gossip run, seconds.
+    pub total_time_s: f64,
+}
+
+impl ConvergenceReport {
+    pub fn final_eval_loss(&self) -> f64 {
+        self.rounds.last().map_or(0.0, |r| r.eval_loss)
+    }
+
+    pub fn first_eval_loss(&self) -> f64 {
+        self.rounds.first().map_or(0.0, |r| r.eval_loss)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map_or(0.0, |r| r.accuracy)
+    }
+
+    /// Total wire MB the run moved.
+    pub fn total_wire_mb(&self) -> f64 {
+        self.rounds.last().map_or(0.0, |r| r.cum_wire_mb)
+    }
+
+    /// Did the run learn at all (final eval beats round-0 eval)?
+    pub fn improved(&self) -> bool {
+        self.rounds.len() >= 2 && self.final_eval_loss() < self.first_eval_loss()
+    }
+}
+
+/// Node `u`'s shard mean `m_u = Σ_c share_u[c] · t_c` over the seeded
+/// class targets.
+fn shard_means(cfg: &ExperimentConfig, n: usize, dim: usize) -> Vec<Vec<f64>> {
+    // per-class targets: well-separated seeded points, shared by every
+    // run at this (seed, dim)
+    let targets: Vec<Vec<f64>> = (0..STRIDE_CLASSES)
+        .map(|c| {
+            let mut rng =
+                Pcg64::new(cfg.seed ^ 0x7a26 ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            (0..dim).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()
+        })
+        .collect();
+    let shares = data::trainer_shares(cfg.dirichlet_alpha, n, STRIDE_CLASSES, cfg.seed);
+    shares
+        .iter()
+        .map(|s| {
+            let mut m = vec![0.0f64; dim];
+            for (c, &w) in s.iter().enumerate() {
+                for (mi, &t) in m.iter_mut().zip(&targets[c]) {
+                    *mi += w * t;
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Mean-squared local objective `½‖x − m‖²/dim`.
+fn local_loss(x: &[f32], m: &[f64]) -> f64 {
+    let dim = x.len().max(1);
+    x.iter().zip(m).map(|(&a, &b)| (a as f64 - b) * (a as f64 - b)).sum::<f64>() / (2.0 * dim as f64)
+}
+
+/// Run the convergence harness: real engine timing + reception orders
+/// (with the config's participation pruning and straggler holds baked
+/// into the pipeline), synthetic quadratic learning CPU-side.
+pub fn run_convergence(cfg: &ExperimentConfig, opts: &ConvergenceOptions) -> Result<ConvergenceReport> {
+    anyhow::ensure!(opts.rounds >= 1, "convergence needs at least one round");
+    anyhow::ensure!(opts.dim >= 1, "convergence needs a non-empty parameter vector");
+    anyhow::ensure!(opts.model_mb > 0.0, "model_mb must be positive");
+    anyhow::ensure!(opts.lr > 0.0 && opts.lr <= 1.0, "lr must be in (0, 1]");
+    anyhow::ensure!(
+        (0.0..1.0).contains(&opts.failure_prob),
+        "failure_prob must be in [0, 1)"
+    );
+    let session = GossipSession::with_model(cfg, opts.model_mb)?;
+    let n = cfg.nodes;
+    let pipeline = session.run_adaptive_rounds_with_failures(
+        opts.model_mb,
+        opts.rounds,
+        cfg.seed ^ 0xc0e7e,
+        opts.failure_prob,
+    );
+    anyhow::ensure!(
+        pipeline.received.len() == opts.rounds as usize,
+        "pipeline completed {} of {} rounds",
+        pipeline.received.len(),
+        opts.rounds
+    );
+    let cum_wire = cumulative_wire_mb(&pipeline);
+
+    let means = shard_means(cfg, n, opts.dim);
+    let participation = session.participation_plan(opts.rounds);
+    let originates = |round: u64, u: usize| {
+        participation.as_ref().map_or(true, |p| p.originates(round, u))
+    };
+    let stragglers =
+        session.straggler_plan().map_or_else(Vec::new, |s| s.stragglers());
+    let policy = session.fold_policy();
+    let codec = cfg.compression();
+    let mut feedback: Vec<ErrorFeedback> = if codec.is_none() {
+        Vec::new()
+    } else {
+        (0..n).map(|_| ErrorFeedback::new(opts.dim)).collect()
+    };
+
+    // decentralized start: per-node seeded points (the init_node shape)
+    let mut params: Vec<Vec<f32>> = (0..n)
+        .map(|u| {
+            let mut rng = Pcg64::new(cfg.seed ^ 0xc01d ^ (u as u64).wrapping_mul(0x9E37_79B9));
+            (0..opts.dim).map(|_| 0.2 * (rng.gen_f64() as f32 - 0.5)).collect()
+        })
+        .collect();
+
+    let mut rounds = Vec::with_capacity(opts.rounds as usize);
+    for round in 0..opts.rounds {
+        // --- local training: participants contract toward their shard
+        // mean (gradient of the quadratic is exactly x − m_u) ---
+        let mut train_loss = 0.0f64;
+        let mut trained = 0u32;
+        for u in 0..n {
+            if !originates(round, u) {
+                continue;
+            }
+            for _ in 0..opts.local_steps {
+                for (x, &m) in params[u].iter_mut().zip(&means[u]) {
+                    *x -= (opts.lr * (*x as f64 - m)) as f32;
+                }
+            }
+            train_loss += local_loss(&params[u], &means[u]);
+            trained += 1;
+        }
+        train_loss /= trained.max(1) as f64;
+
+        // --- wire snapshot: originators only; EF residuals advance only
+        // for nodes that actually transmit ---
+        let mut snapshot: Vec<Vec<f32>> = params
+            .iter()
+            .enumerate()
+            .map(|(u, p)| {
+                if !originates(round, u) {
+                    Vec::new()
+                } else if codec.is_none() {
+                    p.clone()
+                } else {
+                    feedback[u].compress(p, &codec)
+                }
+            })
+            .collect();
+        if let Some(s) = session.adversary() {
+            s.corrupt_snapshot(&mut snapshot, round, cfg.seed);
+        }
+
+        // --- aggregation in the engine's delivery orders ---
+        let received = &pipeline.received[round as usize];
+        let mut next: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for u in 0..n {
+            // a transmitting node adopts its own decoded payload so the
+            // candidate set is identical everywhere (consensus stays
+            // exact); its residual carries the codec error forward
+            let own: &[f32] = if !codec.is_none() && originates(round, u) {
+                &snapshot[u]
+            } else {
+                &params[u]
+            };
+            match cfg.algo {
+                AlgoKind::FedAvg => {
+                    if policy.is_mean() {
+                        let mut acc = own.to_vec();
+                        let mut w = 1.0f32;
+                        for &o in &received[u] {
+                            w += 1.0;
+                            for (a, &x) in acc.iter_mut().zip(&snapshot[o]) {
+                                *a += (x - *a) / w;
+                            }
+                        }
+                        next.push(acc);
+                    } else {
+                        let others: Vec<(usize, &[f32])> =
+                            received[u].iter().map(|&o| (o, snapshot[o].as_slice())).collect();
+                        next.push(policy.fold(u, own, &others));
+                    }
+                }
+                AlgoKind::DPsgd => {
+                    let tree = session.tree();
+                    let peers: Vec<(usize, &[f32])> = received[u]
+                        .iter()
+                        .filter(|&&o| tree.neighbors(u).iter().any(|&(v, _)| v == o))
+                        .map(|&o| (o, snapshot[o].as_slice()))
+                        .collect();
+                    next.push(data::dpsgd_mix(tree, u, own, &peers));
+                }
+            }
+        }
+        params = next;
+
+        let eval_loss =
+            (0..n).map(|u| local_loss(&params[u], &means[u])).sum::<f64>() / n as f64;
+        rounds.push(ConvergenceRound {
+            round,
+            train_loss,
+            eval_loss,
+            accuracy: data::accuracy_proxy(eval_loss),
+            cum_wire_mb: cum_wire[round as usize],
+            done_s: pipeline.rounds[round as usize].done_s,
+        });
+    }
+
+    Ok(ConvergenceReport {
+        rounds,
+        participants_per_round: participation
+            .map(|p| (0..opts.rounds).map(|r| p.participants(r).unwrap_or(&[]).to_vec()).collect()),
+        stragglers,
+        algo: cfg.algo.name().to_string(),
+        total_time_s: pipeline.total_time_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfl::compress::CompressionKind;
+
+    fn quiet_cfg() -> ExperimentConfig {
+        ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn iid_fedavg_learns_and_the_curve_is_well_formed() {
+        let report = run_convergence(&quiet_cfg(), &ConvergenceOptions::default()).unwrap();
+        assert_eq!(report.rounds.len(), 5);
+        assert!(report.improved(), "full participation FedAvg must reduce eval loss");
+        assert!(report.stragglers.is_empty());
+        assert!(report.participants_per_round.is_none());
+        assert_eq!(report.algo, "fedavg");
+        // curves are monotone where they must be
+        let wire: Vec<f64> = report.rounds.iter().map(|r| r.cum_wire_mb).collect();
+        assert!(wire.windows(2).all(|w| w[0] <= w[1]));
+        assert!(wire[0] > 0.0, "a gossip round moves bytes");
+        let done: Vec<f64> = report.rounds.iter().map(|r| r.done_s).collect();
+        assert!(done.windows(2).all(|w| w[0] < w[1]));
+        for r in &report.rounds {
+            assert!((0.0..=1.0).contains(&r.accuracy));
+        }
+    }
+
+    #[test]
+    fn dirichlet_skew_hurts_final_consensus_eval() {
+        // under FedAvg full dissemination every node ends at the global
+        // mean; with skewed shards the local evals sit farther from it
+        let iid = run_convergence(&quiet_cfg(), &ConvergenceOptions::default()).unwrap();
+        let skewed_cfg = ExperimentConfig { dirichlet_alpha: 0.1, ..quiet_cfg() };
+        let skewed = run_convergence(&skewed_cfg, &ConvergenceOptions::default()).unwrap();
+        assert!(
+            skewed.final_eval_loss() > iid.final_eval_loss() * 0.5,
+            "severe non-IID should not beat the one-hot baseline decisively: {} vs {}",
+            skewed.final_eval_loss(),
+            iid.final_eval_loss()
+        );
+    }
+
+    #[test]
+    fn quant8_error_feedback_tracks_uncompressed() {
+        let base = run_convergence(&quiet_cfg(), &ConvergenceOptions::default()).unwrap();
+        let qcfg = ExperimentConfig {
+            compress: CompressionKind::Quant,
+            quant_bits: 8,
+            ..quiet_cfg()
+        };
+        let quant = run_convergence(&qcfg, &ConvergenceOptions::default()).unwrap();
+        let diff = (quant.final_eval_loss() - base.final_eval_loss()).abs();
+        assert!(diff < 0.05, "quant-8 + EF must track uncompressed, diff {diff}");
+        assert!(
+            quant.total_wire_mb() < base.total_wire_mb(),
+            "quantization must shrink the wire"
+        );
+    }
+
+    #[test]
+    fn participation_and_stragglers_flow_into_the_report() {
+        let cfg = ExperimentConfig {
+            participation: 0.6,
+            straggler_frac: 0.2,
+            straggler_slowdown: 3.0,
+            ..quiet_cfg()
+        };
+        let report = run_convergence(&cfg, &ConvergenceOptions::default()).unwrap();
+        let per_round = report.participants_per_round.as_ref().unwrap();
+        assert_eq!(per_round.len(), 5);
+        for set in per_round {
+            assert_eq!(set.len(), 6, "ceil(0.6 * 10) participants per round");
+        }
+        assert_eq!(report.stragglers.len(), 2, "ceil(0.2 * 10) stragglers");
+        assert!(report.improved(), "partial participation still learns");
+    }
+
+    #[test]
+    fn dpsgd_mixes_toward_consensus() {
+        let cfg = ExperimentConfig { algo: AlgoKind::DPsgd, ..quiet_cfg() };
+        let opts = ConvergenceOptions { rounds: 8, ..Default::default() };
+        let report = run_convergence(&cfg, &opts).unwrap();
+        assert_eq!(report.algo, "dpsgd");
+        assert!(report.improved(), "neighbor mixing must still learn");
+    }
+
+    #[test]
+    fn run_convergence_rejects_bad_options() {
+        let cfg = quiet_cfg();
+        let bad = |o: ConvergenceOptions| run_convergence(&cfg, &o).is_err();
+        assert!(bad(ConvergenceOptions { rounds: 0, ..Default::default() }));
+        assert!(bad(ConvergenceOptions { dim: 0, ..Default::default() }));
+        assert!(bad(ConvergenceOptions { lr: 0.0, ..Default::default() }));
+        assert!(bad(ConvergenceOptions { failure_prob: 1.0, ..Default::default() }));
+    }
+}

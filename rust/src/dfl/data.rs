@@ -1,0 +1,334 @@
+//! Learning-dynamics scenario zoo: seeded Dirichlet(α) non-IID data
+//! shards, partial per-round participation, heterogeneous per-node
+//! compute (stragglers), and the D-PSGD neighbor-mixing algorithm.
+//!
+//! Everything here is deterministic per seed and dormant by default:
+//! `dirichlet_alpha = ∞` reproduces today's one-stride-class-per-node
+//! sharding, `participation = 1` originates every node every round,
+//! `straggler_frac = 0` injects no compute holds, and `algo = fedavg`
+//! keeps the full-dissemination fold. With the knobs at those defaults
+//! the engine is pinned bit-identical to the pre-zoo pipeline in
+//! `tests/engine_equivalence.rs`.
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg64;
+
+/// Distinct stride classes in the synthetic task (`synth_batch` maps
+/// class `c` to stride `3 + 2c`); the Dirichlet shards distribute over
+/// this class space.
+pub const STRIDE_CLASSES: usize = 5;
+
+/// Which DFL algorithm folds received payloads each round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AlgoKind {
+    /// Full-dissemination FedAvg: every node folds every originated
+    /// model of the round (the legacy path, bit-identical).
+    #[default]
+    FedAvg,
+    /// D-PSGD-style neighbor mixing: each node mixes only with its tree
+    /// neighbors' models under Metropolis–Hastings weights.
+    DPsgd,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Some(AlgoKind::FedAvg),
+            "dpsgd" | "d-psgd" => Some(AlgoKind::DPsgd),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::FedAvg => "fedavg",
+            AlgoKind::DPsgd => "dpsgd",
+        }
+    }
+}
+
+/// One Gamma(α, 1) draw via Marsaglia–Tsang squeeze (with the
+/// `Gamma(α) = Gamma(α+1)·U^{1/α}` boost below α = 1).
+pub fn gamma_sample(rng: &mut Pcg64, alpha: f64) -> f64 {
+    assert!(alpha > 0.0 && alpha.is_finite(), "gamma needs finite alpha > 0");
+    if alpha < 1.0 {
+        let u = rng.gen_f64().max(f64::MIN_POSITIVE);
+        return gamma_sample(rng, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.gen_normal(0.0, 1.0);
+        let t = 1.0 + c * x;
+        if t <= 0.0 {
+            continue;
+        }
+        let v = t * t * t;
+        let u = rng.gen_f64();
+        if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+            return d * v;
+        }
+        if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// One Dirichlet(α, …, α) draw over `k` classes: non-negative shares
+/// summing to 1. `α = ∞` returns the exact uniform vector (the
+/// concentration limit), small α concentrates mass on few classes.
+pub fn dirichlet_shares(rng: &mut Pcg64, alpha: f64, k: usize) -> Vec<f64> {
+    assert!(k > 0, "dirichlet needs at least one class");
+    assert!(alpha > 0.0, "dirichlet needs alpha > 0");
+    if alpha.is_infinite() {
+        return vec![1.0 / k as f64; k];
+    }
+    let mut g: Vec<f64> = (0..k).map(|_| gamma_sample(rng, alpha)).collect();
+    let sum: f64 = g.iter().sum();
+    if !(sum > 0.0 && sum.is_finite()) {
+        // all draws underflowed (pathologically small alpha): fall back
+        // to a single random class rather than dividing by zero
+        let mut one_hot = vec![0.0; k];
+        one_hot[rng.gen_range(k)] = 1.0;
+        return one_hot;
+    }
+    for x in &mut g {
+        *x /= sum;
+    }
+    g
+}
+
+/// Per-node Dirichlet(α) class shares, independently seeded per node so
+/// a node's shard never depends on how many peers exist before it.
+pub fn node_shares(alpha: f64, nodes: usize, classes: usize, seed: u64) -> Vec<Vec<f64>> {
+    (0..nodes)
+        .map(|u| {
+            let mut rng =
+                Pcg64::new(seed ^ 0xd1a1 ^ (u as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            dirichlet_shares(&mut rng, alpha, classes)
+        })
+        .collect()
+}
+
+/// The class distributions the trainer actually samples from: finite α
+/// draws [`node_shares`]; `α = ∞` (the dormant default) reproduces
+/// today's deterministic one-class-per-node assignment (`node %
+/// STRIDE_CLASSES`), not the uniform mixture — flipping the knob on must
+/// not silently change the baseline task.
+pub fn trainer_shares(alpha: f64, nodes: usize, classes: usize, seed: u64) -> Vec<Vec<f64>> {
+    if alpha.is_infinite() {
+        return (0..nodes)
+            .map(|u| {
+                let mut s = vec![0.0; classes];
+                s[u % classes] = 1.0;
+                s
+            })
+            .collect();
+    }
+    node_shares(alpha, nodes, classes, seed)
+}
+
+/// One categorical draw from a share vector (inverse-CDF walk; the last
+/// class absorbs fp dust).
+pub fn sample_class(rng: &mut Pcg64, shares: &[f64]) -> usize {
+    let x = rng.gen_f64();
+    let mut acc = 0.0;
+    for (c, &s) in shares.iter().enumerate() {
+        acc += s;
+        if x < acc {
+            return c;
+        }
+    }
+    shares.len() - 1
+}
+
+/// Per-round originator sets for partial participation (`--participation
+/// p`): each round a seeded subset of `ceil(p·n)` nodes (never fewer
+/// than one) trains and originates its payload; everyone else still
+/// relays on the tree. Rounds beyond the plan originate everywhere.
+#[derive(Debug, Clone)]
+pub struct ParticipationPlan {
+    sets: Vec<Vec<usize>>,
+    mask: Vec<Vec<bool>>,
+}
+
+impl ParticipationPlan {
+    /// Sample `rounds` participant sets over `nodes` nodes.
+    pub fn sample(p: f64, nodes: usize, rounds: u64, seed: u64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "participation must be in (0, 1]");
+        assert!(nodes > 0, "participation needs nodes");
+        let k = ((p * nodes as f64).ceil() as usize).clamp(1, nodes);
+        let mut sets = Vec::with_capacity(rounds as usize);
+        let mut mask = Vec::with_capacity(rounds as usize);
+        for r in 0..rounds {
+            let mut rng = Pcg64::new(seed ^ 0x9a47 ^ r.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut set = rng.sample_indices(nodes, k);
+            set.sort_unstable();
+            let mut m = vec![false; nodes];
+            for &u in &set {
+                m[u] = true;
+            }
+            sets.push(set);
+            mask.push(m);
+        }
+        ParticipationPlan { sets, mask }
+    }
+
+    /// The sorted participant set of `round`, or `None` past the plan's
+    /// horizon (⇒ everyone originates).
+    pub fn participants(&self, round: u64) -> Option<&[usize]> {
+        self.sets.get(round as usize).map(Vec::as_slice)
+    }
+
+    /// Does `node` train and originate in `round`?
+    pub fn originates(&self, round: u64, node: usize) -> bool {
+        match self.mask.get(round as usize) {
+            Some(m) => m[node],
+            None => true,
+        }
+    }
+
+    /// Rounds the plan covers.
+    pub fn rounds(&self) -> usize {
+        self.sets.len()
+    }
+}
+
+/// Per-node compute holds for straggler injection (`--straggler-frac` /
+/// `--straggler-slowdown`): a seeded `ceil(frac·n)`-node subset "trains
+/// slower", modeled as skipping the first `hold_slots[u]` transmit
+/// opportunities of every round node `u` originates in — its own copy
+/// enters the slot schedule that many color turns late, and the
+/// pipelined overlap accounting absorbs (or exposes) the delay.
+#[derive(Debug, Clone)]
+pub struct StragglerPlan {
+    /// Transmit opportunities node `u` sits out at each round start.
+    pub hold_slots: Vec<u32>,
+}
+
+impl StragglerPlan {
+    /// Sample the straggler subset and its holds. A slowdown of `s`
+    /// means local compute takes `s×` the baseline, so the node misses
+    /// `ceil(s − 1)` of its transmit turns.
+    pub fn sample(frac: f64, slowdown: f64, nodes: usize, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&frac), "straggler_frac must be in [0, 1]");
+        assert!(slowdown >= 1.0 && slowdown.is_finite(), "straggler_slowdown must be >= 1");
+        let mut hold_slots = vec![0u32; nodes];
+        let k = ((frac * nodes as f64).ceil() as usize).min(nodes);
+        let hold = (slowdown - 1.0).ceil() as u32;
+        if k > 0 && hold > 0 {
+            let mut rng = Pcg64::new(seed ^ 0x57a6);
+            for u in rng.sample_indices(nodes, k) {
+                hold_slots[u] = hold;
+            }
+        }
+        StragglerPlan { hold_slots }
+    }
+
+    /// The straggling nodes (non-zero holds), ascending.
+    pub fn stragglers(&self) -> Vec<usize> {
+        (0..self.hold_slots.len()).filter(|&u| self.hold_slots[u] > 0).collect()
+    }
+
+    /// A plan that holds nobody is structurally a no-op.
+    pub fn is_noop(&self) -> bool {
+        self.hold_slots.iter().all(|&h| h == 0)
+    }
+}
+
+/// D-PSGD mixing step over the gossip tree: Metropolis–Hastings weights
+/// `W_uv = 1 / (1 + max(deg u, deg v))` for each neighbor payload that
+/// arrived, self-weight `1 − Σ W_uv` (row-stochastic, symmetric on the
+/// full tree). `peers` may be any subset of `node`'s tree neighbors —
+/// absent neighbors (non-participants, dropped copies) shift their mass
+/// back onto the self-weight, which is exactly the lazy-update D-PSGD
+/// convention for sampled participation.
+pub fn dpsgd_mix(tree: &Graph, node: usize, own: &[f32], peers: &[(usize, &[f32])]) -> Vec<f32> {
+    let du = tree.degree(node);
+    let mut out: Vec<f64> = vec![0.0; own.len()];
+    let mut self_w = 1.0f64;
+    for &(v, params) in peers {
+        debug_assert!(
+            tree.neighbors(node).iter().any(|&(w, _)| w == v),
+            "dpsgd_mix peers must be tree neighbors"
+        );
+        debug_assert_eq!(params.len(), own.len());
+        let w = 1.0 / (1.0 + du.max(tree.degree(v)) as f64);
+        self_w -= w;
+        for (o, &x) in out.iter_mut().zip(params) {
+            *o += w * x as f64;
+        }
+    }
+    for (o, &x) in out.iter_mut().zip(own) {
+        *o += self_w * x as f64;
+    }
+    out.into_iter().map(|x| x as f32).collect()
+}
+
+/// Accuracy proxy for the synthetic tasks: `1 / (1 + loss)` — monotone
+/// in the loss, 1 at zero loss, comparable across scenario-zoo cells.
+pub fn accuracy_proxy(loss: f64) -> f64 {
+    1.0 / (1.0 + loss.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_sampler_matches_moments() {
+        for &alpha in &[0.5, 1.0, 4.0] {
+            let mut rng = Pcg64::new(7);
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| gamma_sample(&mut rng, alpha)).sum::<f64>() / n as f64;
+            // Gamma(α, 1) has mean α
+            assert!((mean - alpha).abs() < 0.1 * alpha.max(1.0), "α={alpha} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn infinite_alpha_is_exact_uniform() {
+        let mut rng = Pcg64::new(1);
+        let s = dirichlet_shares(&mut rng, f64::INFINITY, 5);
+        assert!(s.iter().all(|&x| x == 0.2));
+    }
+
+    #[test]
+    fn trainer_shares_sentinel_is_one_hot() {
+        let s = trainer_shares(f64::INFINITY, 7, STRIDE_CLASSES, 99);
+        for (u, shares) in s.iter().enumerate() {
+            for (c, &x) in shares.iter().enumerate() {
+                assert_eq!(x, if c == u % STRIDE_CLASSES { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn sample_class_respects_support() {
+        let mut rng = Pcg64::new(3);
+        let shares = [0.0, 0.0, 1.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(sample_class(&mut rng, &shares), 2);
+        }
+    }
+
+    #[test]
+    fn dpsgd_mix_is_convex_and_symmetric_on_a_path() {
+        // path 0-1-2: deg = [1, 2, 1]
+        let mut tree = Graph::new(3);
+        tree.add_edge(0, 1, 1.0);
+        tree.add_edge(1, 2, 1.0);
+        let a = [1.0f32];
+        let b = [4.0f32];
+        let c = [7.0f32];
+        // node 1 mixes both leaves with W = 1/3 each, keeps 1/3
+        let m1 = dpsgd_mix(&tree, 1, &b, &[(0, &a), (2, &c)]);
+        assert!((m1[0] - 4.0).abs() < 1e-6);
+        // leaf 0 uses the same W_01 = 1/3 — symmetric weights
+        let m0 = dpsgd_mix(&tree, 0, &a, &[(1, &b)]);
+        assert!((m0[0] - 2.0).abs() < 1e-6);
+        // no peers = identity (all mass on self)
+        let lone = dpsgd_mix(&tree, 2, &c, &[]);
+        assert_eq!(lone[0], 7.0);
+    }
+}

@@ -2,12 +2,17 @@
 //! the artifact-driven per-node trainer, segment-granular transfer
 //! planning, payload compression codecs (quantization / top-k with
 //! error feedback), DFL round orchestration (train → gossip →
-//! aggregate), and the adversarial robustness plane (Byzantine node
-//! behaviors, robust fold policies, and the chaos-injection harness).
+//! aggregate), the adversarial robustness plane (Byzantine node
+//! behaviors, robust fold policies, and the chaos-injection harness),
+//! and the learning-dynamics scenario zoo (Dirichlet non-IID shards,
+//! partial participation, stragglers, D-PSGD — with the convergence
+//! harness validating compression against accuracy).
 
 pub mod adversary;
 pub mod chaos;
 pub mod compress;
+pub mod convergence;
+pub mod data;
 pub mod models;
 pub mod robust;
 pub mod round;

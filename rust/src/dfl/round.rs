@@ -12,23 +12,36 @@
 //! discrete-event run (the same dual the paper's testbed had: FTP moves
 //! bytes, the protocol decides when).
 //!
+//! The learning-dynamics scenario zoo rides this loop: `--dirichlet-alpha`
+//! shards each node's synthetic data non-IID, `--participation` trains
+//! and originates only a seeded per-round subset (the engine prunes the
+//! matching slots), `--straggler-*` delays slow trainers' first transmit
+//! opportunities, and `--algo dpsgd` swaps the full-dissemination FedAvg
+//! fold for Metropolis neighbor mixing over the tree. All dormant by
+//! default.
+//!
 //! This module is what `examples/dfl_train.rs` drives end-to-end: the full
 //! three-layer stack composing — Rust protocol + DES timing + PJRT
 //! execution of the JAX/Pallas artifacts.
 
 use super::compress::ErrorFeedback;
+use super::data::{self, AlgoKind, STRIDE_CLASSES};
 use super::trainer::{NodeModel, Trainer};
 use crate::coordinator::session::GossipSession;
+use crate::coordinator::engine::PipelineMetrics;
 use anyhow::Result;
 
 /// Per-round report for the training log / loss curve.
 #[derive(Debug, Clone)]
 pub struct DflRoundReport {
     pub round: u64,
-    /// mean local training loss across nodes (before gossip)
+    /// mean local training loss across participating nodes (before gossip)
     pub train_loss: f32,
     /// mean eval loss across nodes after aggregation
     pub eval_loss: f32,
+    /// accuracy proxy `1 / (1 + eval_loss)` — the scenario zoo's
+    /// accuracy-vs-round / accuracy-vs-wire curve ordinate
+    pub accuracy: f64,
     /// simulated communication time of the gossip round (exchange phase,
     /// measured from the round's first seed)
     pub comm_time_s: f64,
@@ -39,12 +52,38 @@ pub struct DflRoundReport {
     /// MB a single model copy actually moved on the wire (== `model_mb`
     /// with `compress = none`)
     pub wire_mb: f64,
+    /// cumulative wire MB the pipeline had moved by this round's full
+    /// dissemination — the accuracy-vs-wire-MB curve abscissa
+    pub cum_wire_mb: f64,
     /// wire segments each model copy traveled as (1 = whole-model)
     pub segments: usize,
     /// absolute pipeline time the round's first seed entered the engine
     pub start_s: f64,
     /// absolute pipeline time the round fully disseminated
     pub done_s: f64,
+}
+
+/// Cumulative wire MB moved by each round's `done_s`: transfer records are
+/// sorted by completion time (the driver emits them slot-ordered, but flows
+/// *within* a slot drain in arbitrary order) and swept once against the
+/// per-round phase deadlines. Attribution is by wall clock, not by round
+/// tag — with pipelining, round `t+1` bytes in flight before round `t`
+/// retires are honestly charged to the earlier point on the curve.
+pub fn cumulative_wire_mb(pipeline: &PipelineMetrics) -> Vec<f64> {
+    let mut done: Vec<(f64, f64)> =
+        pipeline.transfers.iter().map(|t| (t.end, t.payload_mb)).collect();
+    done.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut cum = Vec::with_capacity(pipeline.rounds.len());
+    let mut total = 0.0f64;
+    let mut i = 0;
+    for phase in &pipeline.rounds {
+        while i < done.len() && done[i].0 <= phase.done_s + 1e-9 {
+            total += done[i].1;
+            i += 1;
+        }
+        cum.push(total);
+    }
+    cum
 }
 
 /// Drives `rounds` of decentralized federated learning over the session's
@@ -64,22 +103,41 @@ pub fn run_dfl(
     let n = session.tree().node_count();
     anyhow::ensure!(n > 0, "cannot run DFL over an empty session (n = 0)");
     let model_mb = trainer.artifacts().model_mb();
+    let cfg = session.config();
 
     // one long-lived simulator for every round's gossip, with
     // multi-round pipelining; content-free, so it can run up front. The
     // session's transfer plan decides whether checkpoints move whole or
-    // as cut-through-forwarded segments (--segments / --segment-mb), and
-    // the dynamic network plane (--drift / --probe-every /
-    // --replan-threshold) drifts links and re-plans mid-session; with
-    // the static defaults this is the plain pipeline bit for bit.
+    // as cut-through-forwarded segments (--segments / --segment-mb), the
+    // dynamic network plane (--drift / --probe-every / --replan-threshold)
+    // drifts links and re-plans mid-session, and the scenario zoo prunes
+    // non-participants' slots and holds stragglers (--participation /
+    // --straggler-*); with the static defaults this is the plain pipeline
+    // bit for bit.
     let pipeline = session.run_adaptive_rounds(model_mb, rounds, 0x90551b);
     anyhow::ensure!(
         pipeline.rounds.len() == rounds as usize,
         "pipeline completed {} of {rounds} rounds",
         pipeline.rounds.len()
     );
+    let cum_wire = cumulative_wire_mb(&pipeline);
 
-    let mut nodes: Vec<NodeModel> = (0..n).map(|u| trainer.init_node(u, 0.02)).collect();
+    // per-node Dirichlet class mixtures (--dirichlet-alpha; None = the
+    // legacy fixed node%5 class with byte-identical batches)
+    let shares: Option<Vec<Vec<f64>>> = if cfg.dirichlet_alpha.is_finite() {
+        Some(data::trainer_shares(cfg.dirichlet_alpha, n, STRIDE_CLASSES, cfg.seed))
+    } else {
+        None
+    };
+    let node_shares = |u: usize| shares.as_ref().map(|s| s[u].as_slice());
+    // who trains/originates each round (--participation; None = everyone)
+    let participation = session.participation_plan(rounds);
+    let originates = |round: u64, u: usize| {
+        participation.as_ref().map_or(true, |p| p.originates(round, u))
+    };
+
+    let mut nodes: Vec<NodeModel> =
+        (0..n).map(|u| trainer.init_node(u, 0.02, cfg.seed)).collect();
     let mut reports = Vec::new();
 
     // payload compression (--compress quant|topk): each node encodes
@@ -87,7 +145,7 @@ pub fn run_dfl(
     // payload, carrying the codec error forward as an error-feedback
     // residual. With compress = none this plumbing is skipped entirely
     // and the loop is the legacy full-width path.
-    let codec = session.config().compression();
+    let codec = cfg.compression();
     let dim = nodes.first().map_or(0, |m| m.params.len());
     let mut feedback: Vec<ErrorFeedback> = if codec.is_none() {
         Vec::new()
@@ -97,57 +155,92 @@ pub fn run_dfl(
     let wire_mb = session.transfer_plan(model_mb).wire_mb();
     // robust-aggregation policy (--fold); Mean is the legacy pairwise path
     let policy = session.fold_policy();
+    let algo = cfg.algo;
 
     for round in 0..rounds {
-        // --- local training ---
+        // --- local training (participants only — a sampled-out node's
+        // clock advances but its model does not) ---
         let mut train_loss = 0.0f32;
+        let mut trained = 0u32;
         for node in nodes.iter_mut() {
+            if !originates(round, node.node) {
+                continue;
+            }
             let mut last = 0.0;
             for step in 0..local_steps {
-                last = trainer.train_step(
+                last = trainer.train_step_shares(
                     node,
                     round * local_steps as u64 + step as u64,
                     lr,
+                    node_shares(node.node),
                 )?;
             }
             train_loss += last;
+            trained += 1;
         }
-        train_loss /= n as f32;
+        train_loss /= trained.max(1) as f32;
 
         // --- aggregation: fold every received model under the session's
         // fold policy, in the engine's actual delivery order for this
         // round. `--fold mean` replays the legacy pairwise FedAvg
         // artifact sequence verbatim; the robust policies fold the
-        // canonical owner-sorted candidate set CPU-side. Under a
-        // compression codec the snapshot is each node's decoded
-        // (wire-visible) payload, and the sender adopts that decoded
-        // payload as its own fold contribution too — so every node
-        // averages the identical vector set and consensus stays exact;
-        // the residual carries the codec error into the next round. An
-        // active adversary corrupts the snapshot exactly where a real
-        // Byzantine node would: between local training and the wire. ---
+        // canonical owner-sorted candidate set CPU-side; `--algo dpsgd`
+        // instead mixes only with tree neighbors under Metropolis
+        // weights. Under a compression codec the snapshot is each
+        // originator's decoded (wire-visible) payload, and the sender
+        // adopts that decoded payload as its own fold contribution too —
+        // so every node averages the identical vector set and consensus
+        // stays exact; the residual carries the codec error into the
+        // next round. An active adversary corrupts the snapshot exactly
+        // where a real Byzantine node would: between local training and
+        // the wire. ---
         let received = &pipeline.received[round as usize];
-        let mut snapshot: Vec<Vec<f32>> = if codec.is_none() {
-            nodes.iter().map(|m| m.params.clone()).collect()
-        } else {
-            nodes.iter().map(|m| feedback[m.node].compress(&m.params, &codec)).collect()
-        };
+        // non-originators ship nothing: their slot in the snapshot table
+        // stays empty and their error-feedback residual is untouched
+        let mut snapshot: Vec<Vec<f32>> = nodes
+            .iter()
+            .map(|m| {
+                if !originates(round, m.node) {
+                    Vec::new()
+                } else if codec.is_none() {
+                    m.params.clone()
+                } else {
+                    feedback[m.node].compress(&m.params, &codec)
+                }
+            })
+            .collect();
         if let Some(scenario) = session.adversary() {
-            scenario.corrupt_snapshot(&mut snapshot, round, session.config().seed);
+            scenario.corrupt_snapshot(&mut snapshot, round, cfg.seed);
         }
         let weights: Vec<f32> = nodes.iter().map(|m| m.weight).collect();
         let mut eval_loss = 0.0f32;
         for node in nodes.iter_mut() {
+            let u = node.node;
             node.weight = 1.0;
-            if !codec.is_none() {
-                node.params = snapshot[node.node].clone();
+            if !codec.is_none() && originates(round, u) {
+                node.params = snapshot[u].clone();
             }
-            let payloads: Vec<(usize, &[f32], f32)> = received[node.node]
-                .iter()
-                .map(|&owner| (owner, snapshot[owner].as_slice(), weights[owner]))
-                .collect();
-            trainer.fold_received(node, &payloads, &policy)?;
-            eval_loss += trainer.eval(node, u64::MAX ^ round)?;
+            match algo {
+                AlgoKind::FedAvg => {
+                    let payloads: Vec<(usize, &[f32], f32)> = received[u]
+                        .iter()
+                        .map(|&owner| (owner, snapshot[owner].as_slice(), weights[owner]))
+                        .collect();
+                    trainer.fold_received(node, &payloads, &policy)?;
+                }
+                AlgoKind::DPsgd => {
+                    // D-PSGD mixes only with tree-neighbor payloads that
+                    // actually arrived (and were originated) this round
+                    let tree = session.tree();
+                    let peers: Vec<(usize, &[f32])> = received[u]
+                        .iter()
+                        .filter(|&&o| tree.neighbors(u).iter().any(|&(v, _)| v == o))
+                        .map(|&o| (o, snapshot[o].as_slice()))
+                        .collect();
+                    node.params = data::dpsgd_mix(tree, u, &node.params, &peers);
+                }
+            }
+            eval_loss += trainer.eval_shares(node, u64::MAX ^ round, node_shares(u))?;
             node.weight = 1.0;
         }
         eval_loss /= n as f32;
@@ -157,10 +250,12 @@ pub fn run_dfl(
             round,
             train_loss,
             eval_loss,
+            accuracy: data::accuracy_proxy(eval_loss as f64),
             comm_time_s: phase.exchange_done_s - phase.first_seed_s,
             slots: phase.slot_span(),
             model_mb,
             wire_mb,
+            cum_wire_mb: cum_wire[round as usize],
             segments: pipeline.segments,
             start_s: phase.first_seed_s,
             done_s: phase.done_s,
@@ -252,5 +347,21 @@ mod tests {
                 assert!(!order.contains(&u), "own model is not re-folded");
             }
         }
+    }
+
+    #[test]
+    fn cumulative_wire_mb_is_monotone_and_conserves_bytes() {
+        let cfg = crate::config::ExperimentConfig {
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let session = GossipSession::new(&cfg).unwrap();
+        let p = session.run_pipelined_rounds(5.0, 3, 0x90551b);
+        let cum = cumulative_wire_mb(&p);
+        assert_eq!(cum.len(), 3);
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "cumulative curve must be monotone");
+        // by the last round's done_s every launched transfer has drained
+        let total: f64 = p.transfers.iter().map(|t| t.payload_mb).sum();
+        assert!((cum[2] - total).abs() < 1e-6, "cum {} vs total {}", cum[2], total);
     }
 }

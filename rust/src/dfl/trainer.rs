@@ -1,6 +1,7 @@
 //! The per-node learner: local training and FedAvg aggregation executed
 //! through the AOT artifacts (Layer 2/1) — no Python on this path.
 
+use crate::dfl::data::{sample_class, STRIDE_CLASSES};
 use crate::runtime::{ArtifactSet, Runtime};
 use crate::util::rng::Pcg64;
 use anyhow::{Context, Result};
@@ -15,11 +16,33 @@ pub fn synth_batch(
     seed: u64,
     node: usize,
 ) -> (Vec<i32>, Vec<i32>) {
+    synth_batch_shares(seq_len, vocab, batch, seed, node, None)
+}
+
+/// As [`synth_batch`] under an optional Dirichlet class mixture: with
+/// `shares = None` every row uses the node's fixed legacy class (`node %
+/// 5`) and the output is **byte-identical** to [`synth_batch`]; with
+/// shares, each row first draws its stride class from the node's mixture
+/// (the `--dirichlet-alpha` non-IID shards — class `c` ⇒ stride `3+2c`).
+pub fn synth_batch_shares(
+    seq_len: usize,
+    vocab: usize,
+    batch: usize,
+    seed: u64,
+    node: usize,
+    shares: Option<&[f64]>,
+) -> (Vec<i32>, Vec<i32>) {
     let mut rng = Pcg64::new(seed.wrapping_mul(1_000_003).wrapping_add(node as u64));
-    let stride = (3 + 2 * (node % 5)) as i32;
     let mut tokens = Vec::with_capacity(batch * seq_len);
     let mut targets = Vec::with_capacity(batch * seq_len);
     for _ in 0..batch {
+        // the legacy path must not consume rng for the class draw, or
+        // shares = None would shift the start-token stream
+        let class = match shares {
+            None => node % STRIDE_CLASSES,
+            Some(s) => sample_class(&mut rng, s),
+        };
+        let stride = (3 + 2 * class) as i32;
         let start = rng.gen_range(vocab) as i32;
         for t in 0..seq_len {
             tokens.push((start + stride * t as i32).rem_euclid(vocab as i32));
@@ -55,11 +78,15 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Initialize a node's model: shared exported init plus small per-node
-    /// perturbation so nodes genuinely differ (decentralized start).
-    pub fn init_node(&self, node: usize, noise: f32) -> NodeModel {
+    /// perturbation so nodes genuinely differ (decentralized start). The
+    /// perturbation is seeded by `(seed, node)`, so distinct `--seed` runs
+    /// start from distinct models while one seed replays exactly.
+    pub fn init_node(&self, node: usize, noise: f32, seed: u64) -> NodeModel {
         let mut params = self.artifacts.init_params.clone();
         if noise > 0.0 {
-            let mut rng = Pcg64::new(0xd11 ^ node as u64);
+            let mut rng = Pcg64::new(
+                (seed ^ 0xd11).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(node as u64),
+            );
             let live = self.artifacts.manifest.param_count;
             for p in params.iter_mut().take(live) {
                 *p += noise * (rng.gen_f64() as f32 - 0.5);
@@ -70,8 +97,21 @@ impl<'rt> Trainer<'rt> {
 
     /// One local SGD step on a synthetic batch; returns the training loss.
     pub fn train_step(&self, model: &mut NodeModel, seed: u64, lr: f32) -> Result<f32> {
+        self.train_step_shares(model, seed, lr, None)
+    }
+
+    /// As [`Trainer::train_step`] on a Dirichlet-sharded batch (`None` =
+    /// the legacy per-node class, byte-identical batches).
+    pub fn train_step_shares(
+        &self,
+        model: &mut NodeModel,
+        seed: u64,
+        lr: f32,
+        shares: Option<&[f64]>,
+    ) -> Result<f32> {
         let m = &self.artifacts.manifest;
-        let (tokens, targets) = synth_batch(m.seq_len, m.vocab, m.batch, seed, model.node);
+        let (tokens, targets) =
+            synth_batch_shares(m.seq_len, m.vocab, m.batch, seed, model.node, shares);
         let inputs = [
             self.rt.literal_f32(&model.params),
             self.rt.literal_i32_2d(&tokens, m.batch, m.seq_len)?,
@@ -87,8 +127,16 @@ impl<'rt> Trainer<'rt> {
 
     /// Evaluation loss on a held-out synthetic batch.
     pub fn eval(&self, model: &NodeModel, seed: u64) -> Result<f32> {
+        self.eval_shares(model, seed, None)
+    }
+
+    /// As [`Trainer::eval`] on the node's Dirichlet shard (`None` = the
+    /// legacy per-node class): each node evaluates on its own local
+    /// distribution, the federated-personalization convention.
+    pub fn eval_shares(&self, model: &NodeModel, seed: u64, shares: Option<&[f64]>) -> Result<f32> {
         let m = &self.artifacts.manifest;
-        let (tokens, targets) = synth_batch(m.seq_len, m.vocab, m.batch, seed, model.node);
+        let (tokens, targets) =
+            synth_batch_shares(m.seq_len, m.vocab, m.batch, seed, model.node, shares);
         let inputs = [
             self.rt.literal_f32(&model.params),
             self.rt.literal_i32_2d(&tokens, m.batch, m.seq_len)?,
@@ -174,6 +222,39 @@ mod tests {
     fn nodes_have_different_data() {
         let (a, _) = synth_batch(16, 256, 4, 7, 0);
         let (b, _) = synth_batch(16, 256, 4, 7, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn none_shares_is_byte_identical_to_legacy() {
+        let legacy = synth_batch(16, 256, 4, 7, 2);
+        let shared = synth_batch_shares(16, 256, 4, 7, 2, None);
+        assert_eq!(legacy, shared);
+    }
+
+    #[test]
+    fn one_hot_shares_reproduce_the_node_class() {
+        // a one-hot mixture on the node's own legacy class consumes one
+        // extra rng draw per row, so start tokens differ — but every row
+        // must still walk the same stride (here class 2 ⇒ stride 7)
+        let mut shares = vec![0.0; STRIDE_CLASSES];
+        shares[2] = 1.0;
+        let (x, _) = synth_batch_shares(8, 256, 4, 7, 2, Some(&shares));
+        for row in 0..4 {
+            for t in 0..7 {
+                let a = x[row * 8 + t];
+                let b = x[row * 8 + t + 1];
+                assert_eq!((a + 7).rem_euclid(256), b);
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_shares_change_the_batch() {
+        let mut shares = vec![0.0; STRIDE_CLASSES];
+        shares[4] = 1.0;
+        let (a, _) = synth_batch_shares(16, 256, 4, 7, 0, None);
+        let (b, _) = synth_batch_shares(16, 256, 4, 7, 0, Some(&shares));
         assert_ne!(a, b);
     }
 }

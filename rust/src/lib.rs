@@ -61,6 +61,21 @@
 //! compression; `--fold mean --adversary none` is bit-identical to the
 //! unhardened engine.
 //!
+//! Nor is the learning itself idealized: the **scenario zoo**
+//! ([`dfl::data`] — `--dirichlet-alpha`, `--participation`,
+//! `--straggler-frac`/`--straggler-slowdown`, `--algo {fedavg,dpsgd}`)
+//! deals seeded Dirichlet non-IID class shards to each node, samples a
+//! per-round participant subset (non-participants skip training and
+//! originate nothing but still relay), holds straggler transmit
+//! opportunities back by a slowdown factor inside the slot schedule, and
+//! can swap the FedAvg fold for D-PSGD neighbor mixing. The
+//! [`dfl::convergence`] harness runs the zoo end to end over the real
+//! engine with a synthetic quadratic learner and reports
+//! accuracy-vs-round and accuracy-vs-wire-MB curves
+//! (`benches/convergence_sweep.rs`); every knob's default (`α = inf`,
+//! `p = 1`, no stragglers, FedAvg) is bit-identical to the plain engine
+//! (`tests/engine_equivalence.rs`, `tests/learning_dynamics.rs`).
+//!
 //! On top of single rounds the engine pipelines **multiple rounds over
 //! one long-lived simulator** ([`coordinator::engine::RoundEngine::run_pipelined`]):
 //! each node seeds round *t+1* the moment it has aggregated round *t*,

@@ -151,6 +151,23 @@ fn load_config(f: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(s) = f.get("fold-f") {
         cfg.fold_f = s.parse().context("--fold-f")?;
     }
+    if let Some(s) = f.get("dirichlet-alpha") {
+        // "inf" parses as f64::INFINITY — the IID-off sentinel
+        cfg.dirichlet_alpha = s.parse().context("--dirichlet-alpha")?;
+    }
+    if let Some(s) = f.get("participation") {
+        cfg.participation = s.parse().context("--participation")?;
+    }
+    if let Some(s) = f.get("straggler-frac") {
+        cfg.straggler_frac = s.parse().context("--straggler-frac")?;
+    }
+    if let Some(s) = f.get("straggler-slowdown") {
+        cfg.straggler_slowdown = s.parse().context("--straggler-slowdown")?;
+    }
+    if let Some(s) = f.get("algo") {
+        cfg.algo = mosgu::dfl::data::AlgoKind::parse(s)
+            .with_context(|| format!("bad algo {s} (fedavg|dpsgd)"))?;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!("invalid flags: {e}"))?;
     Ok(cfg)
 }
@@ -221,7 +238,17 @@ fn print_usage() {
          \x20 --fold P       aggregation rule (mean|trimmed-mean|median|krum);\n\
          \x20                mean is the legacy FedAvg fold, the rest tolerate f\n\
          \x20                Byzantine peers at full dissemination\n\
-         \x20 --fold-f N     Byzantine count the robust folds assume (0 = auto)"
+         \x20 --fold-f N     Byzantine count the robust folds assume (0 = auto)\n\
+         \x20 --dirichlet-alpha A  Dirichlet concentration for non-IID data shards\n\
+         \x20                (inf = the legacy per-node class; smaller = more skew)\n\
+         \x20 --participation P  fraction of nodes that train + originate each round,\n\
+         \x20                in (0,1] (default 1 = everyone; sampled-out nodes still relay)\n\
+         \x20 --straggler-frac F  fraction of nodes that are slow trainers (default 0)\n\
+         \x20 --straggler-slowdown S  compute slowdown factor >= 1 for stragglers;\n\
+         \x20                delays their first transmit opportunities (default 4)\n\
+         \x20 --algo A       learning algorithm (fedavg|dpsgd): fedavg folds every\n\
+         \x20                received model, dpsgd mixes only with tree neighbors\n\
+         \x20                under Metropolis weights (requires --fold mean)"
     );
 }
 
@@ -407,11 +434,11 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
         );
     }
     let trainer = Trainer::new(&rt, &artifacts);
-    println!("round  train_loss  eval_loss  comm_s  slots");
+    println!("round  train_loss  eval_loss  accuracy  wire_mb  comm_s  slots");
     let reports = run_dfl(&session, &trainer, rounds, local_steps, lr, |r| {
         println!(
-            "{:>5}  {:>10.4}  {:>9.4}  {:>6.2}  {:>5}",
-            r.round, r.train_loss, r.eval_loss, r.comm_time_s, r.slots
+            "{:>5}  {:>10.4}  {:>9.4}  {:>8.4}  {:>7.1}  {:>6.2}  {:>5}",
+            r.round, r.train_loss, r.eval_loss, r.accuracy, r.cum_wire_mb, r.comm_time_s, r.slots
         );
     })?;
     if let Some(last) = reports.last() {

@@ -251,6 +251,10 @@ pub struct RepeatedMetrics {
     pub logical_mb: Summary,
     /// per-copy wire MB (== logical without compression)
     pub wire_mb: Summary,
+    /// end-of-run accuracy proxy per repeat (learning-dynamics sweeps
+    /// push this via [`RepeatedMetrics::push_accuracy`]; comm-only runs
+    /// leave it empty)
+    pub accuracy: Summary,
 }
 
 impl RepeatedMetrics {
@@ -274,6 +278,18 @@ impl RepeatedMetrics {
         self.exchange.push(round.exchange_time_s);
         self.logical_mb.push(round.logical_model_mb);
         self.wire_mb.push(round.wire_model_mb);
+    }
+
+    /// Record one repeat's final accuracy proxy (`1 / (1 + eval_loss)`),
+    /// orthogonal to the per-round communication indicators above.
+    pub fn push_accuracy(&mut self, accuracy: f64) {
+        self.accuracy.push(accuracy);
+    }
+
+    /// Mean final accuracy over the pushed repeats (0.0 when no
+    /// learning run pushed accuracy — comm-only tables never read this).
+    pub fn mean_accuracy(&self) -> f64 {
+        mean_or_zero(&self.accuracy)
     }
 
     /// Mean logical-to-wire compression ratio over the pushed rounds
@@ -538,6 +554,20 @@ mod tests {
         assert_eq!(rep.total.count(), 2);
         assert!(rep.total.mean().is_finite());
         assert!(rep.bandwidth.mean().is_finite() && rep.transfer.mean().is_finite());
+    }
+
+    #[test]
+    fn accuracy_summary_is_orthogonal_to_comm_indicators() {
+        let mut rep = RepeatedMetrics::default();
+        // comm-only consumers never push accuracy and must read 0.0
+        assert_eq!(rep.mean_accuracy(), 0.0);
+        rep.push_accuracy(0.5);
+        rep.push_accuracy(0.7);
+        assert_eq!(rep.accuracy.count(), 2);
+        assert!((rep.mean_accuracy() - 0.6).abs() < 1e-12);
+        // pushing rounds does not touch the accuracy summary
+        rep.push(&whole_metrics(vec![rec(10.0, 0.0, 2.0)], 2.0, 1));
+        assert_eq!(rep.accuracy.count(), 2);
     }
 
     #[test]

@@ -30,7 +30,13 @@
 //! 9. the robustness plane anchors to the unhardened engine: a
 //!    `--fold mean --adversary none` config (dormant attack/fold knobs
 //!    set) replays the default session bit for bit across every path,
-//!    jitter, and failure injection.
+//!    jitter, and failure injection;
+//! 10. the learning-dynamics scenario zoo anchors to the plain engine:
+//!    comm-neutral knobs (`--dirichlet-alpha`, `--algo`, and a straggler
+//!    slowdown with no stragglers sampled) replay the default session
+//!    bit for bit across every path, jitter, and failure injection —
+//!    only `--participation < 1` and a live straggler subset may touch
+//!    the wire.
 
 use mosgu::coloring::bfs_coloring;
 use mosgu::config::ExperimentConfig;
@@ -439,6 +445,54 @@ fn fold_mean_adversary_none_is_bit_identical_across_topologies_jitter_failures()
 }
 
 #[test]
+fn comm_neutral_zoo_knobs_are_bit_identical_across_topologies_jitter_failures() {
+    // the scenario zoo's compatibility anchor: knobs that change what
+    // nodes *learn* but not what they *transmit* — a finite Dirichlet
+    // alpha, the D-PSGD fold, and a straggler slowdown with a zero
+    // straggler fraction — must replay the default engine bit for bit.
+    // Only `participation < 1` and a sampled straggler subset are allowed
+    // to reshape the wire (covered by tests/learning_dynamics.rs).
+    for kind in TopologyKind::ALL {
+        for jitter in [0.0, 0.08] {
+            let base = ExperimentConfig {
+                topology: kind,
+                latency_jitter: jitter,
+                subnets: 1,
+                ..Default::default()
+            };
+            let mut pinned = base.clone();
+            pinned.dirichlet_alpha = 0.5; // learning-side knobs must not leak
+            pinned.algo = mosgu::dfl::data::AlgoKind::DPsgd;
+            pinned.participation = 1.0; // explicit defaults stay dormant
+            pinned.straggler_frac = 0.0;
+            pinned.straggler_slowdown = 9.0; // meaningless without stragglers
+            pinned.validate().expect("the pinned zoo config must validate");
+            let s_base = GossipSession::new(&base).unwrap();
+            let s_pin = GossipSession::new(&pinned).unwrap();
+            assert!(s_pin.participation_plan(3).is_none(), "{kind:?}: p = 1 must be dormant");
+            assert!(s_pin.straggler_plan().is_none(), "{kind:?}: frac 0 must be dormant");
+            for failure_prob in [0.0, 0.15] {
+                let a = s_base.run_mosgu_round(14.0, 3, failure_prob);
+                let b = s_pin.run_mosgu_round(14.0, 3, failure_prob);
+                let label = format!("{kind:?} j={jitter} f={failure_prob}");
+                assert_rounds_bit_identical(&b, &a, &label);
+                let legacy = legacy_mosgu_round(&s_pin, 14.0, 3, failure_prob);
+                assert_metrics_match_legacy(&b, &legacy);
+            }
+            let ap = s_base.run_adaptive_rounds(14.0, 2, 5);
+            let bp = s_pin.run_adaptive_rounds(14.0, 2, 5);
+            assert_eq!(ap.total_time_s.to_bits(), bp.total_time_s.to_bits(), "{kind:?}");
+            assert_eq!(ap.transfers, bp.transfers, "{kind:?}");
+            assert_eq!(ap.received, bp.received, "{kind:?}: fold inputs diverged");
+            let pp = s_base.run_pipelined_rounds(14.0, 2, 5);
+            let qp = s_pin.run_pipelined_rounds(14.0, 2, 5);
+            assert_eq!(pp.transfers, qp.transfers, "{kind:?} pipelined");
+            assert_eq!(pp.received, qp.received, "{kind:?} pipelined fold inputs");
+        }
+    }
+}
+
+#[test]
 fn full_rerate_oracle_matches_incremental_through_the_engine() {
     // the incremental re-rate's engine-level anchor: a SimDriver whose
     // simulator is forced into full-water-filling oracle mode must run
@@ -662,6 +716,8 @@ fn adaptive_noop_hook_is_bit_identical_under_failures_and_segments() {
         failure_prob: 0.15,
         failure_rng: Pcg64::new(11),
         drops: None,
+        participants: None,
+        stragglers: None,
     };
     for plan in [TransferPlan::whole(14.0), TransferPlan::segmented(36.8, 4)] {
         let mut d1 = SimDriver::new(session.testbed(), 9);

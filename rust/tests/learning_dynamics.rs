@@ -1,0 +1,273 @@
+//! Learning-dynamics scenario-zoo contracts (artifact-free):
+//!
+//! 1. Dirichlet sharding — per-node class shares are a simplex point,
+//!    deterministic per seed, uniform in the large-α limit, and the
+//!    `α = inf` sentinel reproduces the legacy one-hot task exactly.
+//! 2. Partial participation — each round's sampled set has exactly
+//!    `ceil(p·n)` members, replays per seed, varies across rounds, and
+//!    at the engine level non-participants never originate a copy while
+//!    still relaying (every node receives every originator's model).
+//! 3. Stragglers — the sampled plan holds exactly `ceil(frac·n)` nodes,
+//!    a zero-frac / unit-slowdown config is structurally a no-op, and at
+//!    the engine level holds only ever push round completion later.
+
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::session::GossipSession;
+use mosgu::dfl::data::{
+    dirichlet_shares, node_shares, trainer_shares, ParticipationPlan, StragglerPlan,
+    STRIDE_CLASSES,
+};
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
+
+fn quiet_cfg() -> ExperimentConfig {
+    ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+}
+
+// --- 1. Dirichlet sharding -------------------------------------------------
+
+#[test]
+fn dirichlet_shares_are_simplex_points() {
+    check("dirichlet simplex", 128, |rng| {
+        let alpha = rng.gen_f64_range(0.05, 20.0);
+        let k = 2 + rng.gen_range(8);
+        let shares = dirichlet_shares(rng, alpha, k);
+        prop_assert_eq!(shares.len(), k);
+        let sum: f64 = shares.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-9, "sum {sum} at alpha {alpha}");
+        prop_assert!(shares.iter().all(|&s| s >= 0.0), "negative share at alpha {alpha}");
+        Ok(())
+    });
+}
+
+#[test]
+fn node_shares_are_deterministic_per_seed_and_vary_across_seeds() {
+    check("dirichlet determinism", 64, |rng| {
+        let alpha = rng.gen_f64_range(0.1, 5.0);
+        let seed = rng.next_u64();
+        let a = node_shares(alpha, 10, STRIDE_CLASSES, seed);
+        let b = node_shares(alpha, 10, STRIDE_CLASSES, seed);
+        prop_assert!(a == b, "same seed must replay identical shards");
+        let c = node_shares(alpha, 10, STRIDE_CLASSES, seed ^ 0x1);
+        prop_assert!(a != c, "distinct seeds must deal distinct shards");
+        // nodes draw independent mixtures: at least two must differ
+        prop_assert!(a.windows(2).any(|w| w[0] != w[1]), "all nodes got one shard");
+        Ok(())
+    });
+}
+
+#[test]
+fn large_alpha_approaches_the_uniform_mixture() {
+    let shares = node_shares(1e6, 10, STRIDE_CLASSES, 42);
+    let uniform = 1.0 / STRIDE_CLASSES as f64;
+    for row in &shares {
+        for &s in row {
+            assert!((s - uniform).abs() < 0.02, "share {s} far from uniform at alpha 1e6");
+        }
+    }
+}
+
+#[test]
+fn infinite_alpha_is_the_exact_off_sentinel() {
+    // dirichlet_shares(inf) is the mathematical limit: exactly uniform
+    let mut rng = Pcg64::new(7);
+    let shares = dirichlet_shares(&mut rng, f64::INFINITY, 5);
+    assert!(shares.iter().all(|&s| s == 0.2));
+    // trainer_shares(inf) is the *config* sentinel: the legacy one-hot
+    // node % 5 task, so flipping the knob on cannot move the baseline
+    let legacy = trainer_shares(f64::INFINITY, 10, STRIDE_CLASSES, 42);
+    for (u, row) in legacy.iter().enumerate() {
+        for (c, &s) in row.iter().enumerate() {
+            assert_eq!(s, if c == u % STRIDE_CLASSES { 1.0 } else { 0.0 });
+        }
+    }
+}
+
+#[test]
+fn smaller_alpha_concentrates_the_shards() {
+    // mean max-share grows as alpha shrinks (more skew per node)
+    let mean_max = |alpha: f64| {
+        let shares = node_shares(alpha, 40, STRIDE_CLASSES, 9);
+        shares.iter().map(|r| r.iter().cloned().fold(0.0, f64::max)).sum::<f64>() / 40.0
+    };
+    let skewed = mean_max(0.1);
+    let mild = mean_max(10.0);
+    assert!(
+        skewed > mild + 0.1,
+        "alpha 0.1 should concentrate far more than alpha 10 ({skewed} vs {mild})"
+    );
+}
+
+// --- 2. partial participation ----------------------------------------------
+
+#[test]
+fn participation_sets_have_exact_size_and_replay_per_seed() {
+    check("participation sampling", 64, |rng| {
+        let n = 2 + rng.gen_range(38);
+        let p = rng.gen_f64_range(0.05, 1.0);
+        let seed = rng.next_u64();
+        let rounds = 1 + rng.gen_range(6) as u64;
+        let expect = ((p * n as f64).ceil() as usize).clamp(1, n);
+        let plan = ParticipationPlan::sample(p, n, rounds, seed);
+        prop_assert_eq!(plan.rounds(), rounds as usize);
+        for r in 0..rounds {
+            let set = plan.participants(r).unwrap();
+            prop_assert_eq!(set.len(), expect);
+            prop_assert!(set.windows(2).all(|w| w[0] < w[1]), "set must be sorted + unique");
+            prop_assert!(set.iter().all(|&u| u < n), "participant out of range");
+            for u in 0..n {
+                prop_assert_eq!(plan.originates(r, u), set.contains(&u));
+            }
+            // past the planned horizon everyone originates
+            prop_assert!(plan.originates(rounds + r, 0));
+        }
+        let replay = ParticipationPlan::sample(p, n, rounds, seed);
+        for r in 0..rounds {
+            prop_assert_eq!(plan.participants(r).unwrap(), replay.participants(r).unwrap());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn participation_rounds_sample_different_subsets() {
+    // with p = 0.5 over 20 nodes, 6 rounds drawing the same subset every
+    // time would be astronomically unlikely
+    let plan = ParticipationPlan::sample(0.5, 20, 6, 1234);
+    let first = plan.participants(0).unwrap();
+    assert!(
+        (1..6).any(|r| plan.participants(r).unwrap() != first),
+        "every round sampled the identical subset"
+    );
+}
+
+#[test]
+fn engine_prunes_non_participant_originations() {
+    let cfg = ExperimentConfig { participation: 0.6, ..quiet_cfg() };
+    let session = GossipSession::new(&cfg).unwrap();
+    let rounds = 3u64;
+    let plan = session.participation_plan(rounds).expect("p < 1 must build a plan");
+    let p = session.run_pipelined_rounds(5.0, rounds, 0x90551b);
+    assert_eq!(p.received.len(), rounds as usize);
+    for r in 0..rounds {
+        let originators = plan.participants(r).unwrap();
+        assert_eq!(originators.len(), 6, "ceil(0.6 * 10)");
+        for (u, order) in p.received[r as usize].iter().enumerate() {
+            // every node (relaying non-participants included) receives
+            // every originator's copy except its own — and nothing else
+            let mut expect: Vec<usize> =
+                originators.iter().copied().filter(|&o| o != u).collect();
+            let mut got = order.clone();
+            got.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(got, expect, "node {u} round {r}");
+        }
+    }
+}
+
+#[test]
+fn full_participation_is_structurally_dormant() {
+    let session = GossipSession::new(&quiet_cfg()).unwrap();
+    assert!(session.participation_plan(5).is_none(), "p = 1 must not build a plan");
+    // and the engine output is bit-identical to a config that never
+    // heard of the knob (same struct, explicit default)
+    let explicit = ExperimentConfig { participation: 1.0, ..quiet_cfg() };
+    let a = GossipSession::new(&quiet_cfg()).unwrap().run_pipelined_rounds(5.0, 2, 7);
+    let b = GossipSession::new(&explicit).unwrap().run_pipelined_rounds(5.0, 2, 7);
+    assert_eq!(a.transfers, b.transfers);
+    assert_eq!(a.received, b.received);
+}
+
+// --- 3. stragglers ----------------------------------------------------------
+
+#[test]
+fn straggler_plans_hold_the_sampled_subset() {
+    check("straggler sampling", 64, |rng| {
+        let n = 2 + rng.gen_range(38);
+        let frac = rng.gen_f64();
+        let slowdown = 1.0 + rng.gen_f64_range(0.0, 8.0);
+        let seed = rng.next_u64();
+        let plan = StragglerPlan::sample(frac, slowdown, n, seed);
+        let expect_nodes = ((frac * n as f64).ceil() as usize).min(n);
+        let expect_hold = (slowdown - 1.0).ceil() as u32;
+        if expect_hold == 0 || expect_nodes == 0 {
+            prop_assert!(plan.is_noop(), "unit slowdown or empty subset must be a no-op");
+        } else {
+            prop_assert_eq!(plan.stragglers().len(), expect_nodes);
+            for u in plan.stragglers() {
+                prop_assert_eq!(plan.hold_slots[u], expect_hold);
+            }
+            let replay = StragglerPlan::sample(frac, slowdown, n, seed);
+            prop_assert_eq!(plan.stragglers(), replay.stragglers());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_straggler_config_is_structurally_dormant() {
+    let session = GossipSession::new(&quiet_cfg()).unwrap();
+    assert!(session.straggler_plan().is_none(), "frac = 0 must not build a plan");
+    // frac > 0 but slowdown = 1 holds nobody -> also no plan
+    let unit = ExperimentConfig { straggler_frac: 0.5, straggler_slowdown: 1.0, ..quiet_cfg() };
+    assert!(GossipSession::new(&unit).unwrap().straggler_plan().is_none());
+    // engine output matches a knob-free run bit for bit
+    let explicit = ExperimentConfig { straggler_frac: 0.0, ..quiet_cfg() };
+    let a = GossipSession::new(&quiet_cfg()).unwrap().run_pipelined_rounds(5.0, 2, 7);
+    let b = GossipSession::new(&explicit).unwrap().run_pipelined_rounds(5.0, 2, 7);
+    assert_eq!(a.transfers, b.transfers);
+}
+
+#[test]
+fn straggler_holds_only_push_rounds_later() {
+    let baseline = GossipSession::new(&quiet_cfg()).unwrap().run_pipelined_rounds(5.0, 3, 7);
+    let slow_cfg = ExperimentConfig {
+        straggler_frac: 0.2,
+        straggler_slowdown: 4.0,
+        ..quiet_cfg()
+    };
+    let session = GossipSession::new(&slow_cfg).unwrap();
+    let plan = session.straggler_plan().expect("frac 0.2 must build a plan");
+    assert_eq!(plan.stragglers().len(), 2, "ceil(0.2 * 10)");
+    let slow = session.run_pipelined_rounds(5.0, 3, 7);
+
+    assert_eq!(slow.received.len(), 3, "held rounds must still complete");
+    // reception *sets* are untouched (stragglers delay, they don't drop)
+    for (r, round) in slow.received.iter().enumerate() {
+        for (u, order) in round.iter().enumerate() {
+            let mut got = order.clone();
+            got.sort_unstable();
+            let mut want = baseline.received[r][u].clone();
+            want.sort_unstable();
+            assert_eq!(got, want, "node {u} round {r} lost copies");
+        }
+    }
+    // with a 4x slowdown on two nodes the schedule must actually move
+    assert_ne!(slow.transfers, baseline.transfers, "4x holds must reshape the schedule");
+
+    // delays only push transmissions later: within the held run, each
+    // straggler spends its first transmit opportunities computing, so its
+    // first send comes strictly after the earliest non-straggler send
+    let stragglers = plan.stragglers();
+    let first_send = |u: usize| {
+        slow.transfers
+            .iter()
+            .filter(|t| t.src == u)
+            .map(|t| t.start)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let earliest_normal = (0..10)
+        .filter(|u| !stragglers.contains(u))
+        .map(first_send)
+        .fold(f64::INFINITY, f64::min);
+    assert!(earliest_normal.is_finite(), "non-stragglers must transmit");
+    for &u in &stragglers {
+        let held = first_send(u);
+        assert!(held.is_finite(), "straggler {u} must eventually transmit");
+        assert!(
+            held > earliest_normal,
+            "straggler {u} sent at {held} despite holds (earliest normal send {earliest_normal})"
+        );
+    }
+}

@@ -7,6 +7,9 @@ use mosgu::coordinator::session::GossipSession;
 use mosgu::dfl::round::{models_agree, run_dfl};
 use mosgu::dfl::trainer::Trainer;
 use mosgu::runtime::{artifacts_dir, ArtifactSet, Runtime};
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+use mosgu::{prop_assert, prop_assert_eq};
 
 fn load() -> Option<(Runtime, ArtifactSet)> {
     let dir = artifacts_dir();
@@ -33,7 +36,7 @@ fn artifacts_load_and_manifest_consistent() {
 fn train_step_reduces_loss_from_rust() {
     let Some((rt, artifacts)) = load() else { return };
     let trainer = Trainer::new(&rt, &artifacts);
-    let mut model = trainer.init_node(0, 0.0);
+    let mut model = trainer.init_node(0, 0.0, 42);
     let first = trainer.train_step(&mut model, 0, 0.1).unwrap();
     let mut last = first;
     for step in 1..10 {
@@ -44,11 +47,31 @@ fn train_step_reduces_loss_from_rust() {
 }
 
 #[test]
+fn init_node_honors_the_session_seed() {
+    // regression: init_node used to ignore the seed entirely, so every
+    // --seed produced the identical decentralized start
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let a = trainer.init_node(3, 0.02, 42);
+    let b = trainer.init_node(3, 0.02, 43);
+    assert_ne!(a.params, b.params, "distinct seeds must perturb differently");
+    let replay = trainer.init_node(3, 0.02, 42);
+    assert_eq!(a.params, replay.params, "one seed must replay bit-identically");
+    // the seed only moves the perturbation, never the shared init
+    let clean = trainer.init_node(3, 0.0, 42);
+    let clean2 = trainer.init_node(3, 0.0, 1234);
+    assert_eq!(clean.params, clean2.params, "noise 0 must ignore the seed");
+    // and distinct nodes still differ under one seed
+    let other = trainer.init_node(4, 0.02, 42);
+    assert_ne!(a.params, other.params);
+}
+
+#[test]
 fn aggregate_artifact_matches_fedavg_semantics() {
     let Some((rt, artifacts)) = load() else { return };
     let trainer = Trainer::new(&rt, &artifacts);
-    let a = trainer.init_node(0, 0.05);
-    let b = trainer.init_node(1, 0.05);
+    let a = trainer.init_node(0, 0.05, 42);
+    let b = trainer.init_node(1, 0.05, 42);
     // fold b into a with equal weights => elementwise mean
     let mut acc = a.clone();
     trainer.aggregate_into(&mut acc, &b.params, 1.0).unwrap();
@@ -67,7 +90,7 @@ fn aggregate_artifact_matches_fedavg_semantics() {
 fn aggregating_identical_models_is_identity() {
     let Some((rt, artifacts)) = load() else { return };
     let trainer = Trainer::new(&rt, &artifacts);
-    let a = trainer.init_node(0, 0.0);
+    let a = trainer.init_node(0, 0.0, 42);
     let mut acc = a.clone();
     trainer.aggregate_into(&mut acc, &a.params, 1.0).unwrap();
     for i in (0..acc.params.len()).step_by(9973) {
@@ -76,10 +99,63 @@ fn aggregating_identical_models_is_identity() {
 }
 
 #[test]
+fn fold_order_is_invariant_and_weights_accumulate() {
+    // seeded property: pairwise FedAvg over any reception order lands on
+    // the same average (within f32 tolerance), and the accumulated weight
+    // is exactly 1 + the sum of folded weights
+    let Some((rt, artifacts)) = load() else { return };
+    let trainer = Trainer::new(&rt, &artifacts);
+    let policy = ExperimentConfig::default().fold_policy(0);
+    let dim = artifacts.init_params.len();
+    check("fold order invariance", 8, |rng: &mut Pcg64| {
+        let k = 2 + rng.gen_range(3);
+        let peers: Vec<(usize, Vec<f32>, f32)> = (0..k)
+            .map(|o| {
+                let params: Vec<f32> =
+                    (0..dim).map(|_| (rng.gen_f64_range(-1.0, 1.0)) as f32).collect();
+                let weight = 1.0 + rng.gen_range(3) as f32;
+                (o, params, weight)
+            })
+            .collect();
+        let mut base = trainer.init_node(9, 0.02, rng.next_u64());
+        base.weight = 1.0;
+        // forward order
+        let mut fwd = base.clone();
+        let payloads: Vec<(usize, &[f32], f32)> =
+            peers.iter().map(|(o, p, w)| (*o, p.as_slice(), *w)).collect();
+        trainer.fold_received(&mut fwd, &payloads, &policy).unwrap();
+        // a shuffled order
+        let mut order: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut order);
+        let shuffled: Vec<(usize, &[f32], f32)> =
+            order.iter().map(|&i| (peers[i].0, peers[i].1.as_slice(), peers[i].2)).collect();
+        let mut alt = base.clone();
+        trainer.fold_received(&mut alt, &shuffled, &policy).unwrap();
+
+        let want_weight = 1.0 + peers.iter().map(|(_, _, w)| *w).sum::<f32>();
+        prop_assert!(
+            (fwd.weight - want_weight).abs() < 1e-4,
+            "weight {} vs sum {want_weight}",
+            fwd.weight
+        );
+        prop_assert_eq!(fwd.weight, alt.weight);
+        for i in (0..dim).step_by(4099) {
+            prop_assert!(
+                (fwd.params[i] - alt.params[i]).abs() < 1e-4,
+                "idx {i}: {} vs {}",
+                fwd.params[i],
+                alt.params[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn eval_step_is_deterministic() {
     let Some((rt, artifacts)) = load() else { return };
     let trainer = Trainer::new(&rt, &artifacts);
-    let model = trainer.init_node(2, 0.01);
+    let model = trainer.init_node(2, 0.01, 42);
     let l1 = trainer.eval(&model, 42).unwrap();
     let l2 = trainer.eval(&model, 42).unwrap();
     assert_eq!(l1, l2);
@@ -97,9 +173,13 @@ fn two_dfl_rounds_compose_and_reach_consensus_losses() {
     for r in &reports {
         assert!(r.train_loss.is_finite());
         assert!(r.eval_loss.is_finite());
+        assert!((0.0..=1.0).contains(&r.accuracy));
         assert!(r.comm_time_s > 0.0);
         assert!(r.slots > 10, "full dissemination takes many slots");
     }
+    // the wire curve is monotone and strictly positive from round 0
+    assert!(reports[0].cum_wire_mb > 0.0);
+    assert!(reports[1].cum_wire_mb >= reports[0].cum_wire_mb);
 }
 
 #[test]
@@ -110,7 +190,7 @@ fn full_dissemination_plus_fedavg_reaches_identical_models() {
     let Some((rt, artifacts)) = load() else { return };
     let trainer = Trainer::new(&rt, &artifacts);
     let n = 4;
-    let originals: Vec<_> = (0..n).map(|u| trainer.init_node(u, 0.05)).collect();
+    let originals: Vec<_> = (0..n).map(|u| trainer.init_node(u, 0.05, 42)).collect();
     let mut folded = Vec::new();
     for u in 0..n {
         // node u folds everyone else's model in a rotated order
