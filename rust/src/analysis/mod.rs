@@ -1,0 +1,21 @@
+//! Static verification plane: simulation-free checks over plan artifacts.
+//!
+//! The coordinator publishes rich artifacts — spanning trees, slot
+//! colorings, forest lanes, striped transfer plans, participation
+//! masks — and the engine, the netsim, and every paper claim *assume*
+//! they are well formed. This module verifies those assumptions
+//! statically, without running a simulator: see [`plan_lint`] for the
+//! linter itself, the `lint-plan` CLI subcommand for the operator
+//! surface, and the `debug_assertions` hooks inside
+//! [`crate::coordinator::moderator`] and
+//! [`crate::coordinator::hierarchy`] that re-lint every plan and replan
+//! the moderator ever publishes during debug test runs.
+//!
+//! The concurrency half of the plane lives elsewhere by necessity:
+//! [`crate::netsim::pool`] is model-checked under loom (build with
+//! `--features loom`, see `tests/loom_pool.rs`), and CI runs Miri and
+//! ThreadSanitizer over the pointer-heavy netsim/transport subsets.
+
+pub mod plan_lint;
+
+pub use plan_lint::{lint_bundle, lint_epoch, LintContext, LintReport, PlanLinter, Violation};

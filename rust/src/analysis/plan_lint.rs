@@ -1,0 +1,750 @@
+//! The plan linter: a pure, simulation-free verifier over plan artifacts.
+//!
+//! Every claim the paper makes about a round rests on the published plan
+//! being well formed: the gossip tree must *span* (§III-B — otherwise a
+//! node never receives), the coloring must be *proper* so no slot ever
+//! schedules two adjacent half-duplex transmitters (§III-C), extra
+//! dissemination lanes must be pairwise *edge-disjoint* (multi-tree
+//! striping conserves bytes only if stripes never contend for a link),
+//! and the slot budget must equal the §III-C formula over the measured
+//! costs. Until now those invariants were checked incidentally, deep
+//! inside simulation tests; this module checks them **statically** — no
+//! simulator, no engine, just the plan and the cost graph it was planned
+//! from.
+//!
+//! Entry points:
+//!
+//! * [`lint_epoch`] / [`lint_bundle`] — one-shot verification of a
+//!   [`PlanEpoch`] or [`ScheduleBundle`] against a [`LintContext`];
+//! * [`PlanLinter`] — the accumulating form, for composing plan checks
+//!   with transfer-plan ([`PlanLinter::check_stripes`]) and
+//!   participation ([`PlanLinter::check_participation`]) checks;
+//! * `mosgu lint-plan` on the CLI, and a `debug_assertions` hook inside
+//!   the moderator after every plan/replan (see
+//!   [`crate::coordinator::moderator::Moderator`]).
+//!
+//! The linter never panics on malformed input: a plan with the wrong
+//! node count or a truncated coloring produces [`Violation`]s, not an
+//! index panic, so it can sit in front of untrusted or corrupted plans.
+
+use crate::coloring::Coloring;
+use crate::coordinator::engine::PlanEpoch;
+use crate::coordinator::moderator::ScheduleBundle;
+use crate::coordinator::schedule::{class_ping_max_ms, slot_length_s, Schedule};
+use crate::dfl::data::ParticipationPlan;
+use crate::dfl::transfer::TransferPlan;
+use crate::graph::{Graph, NodeId};
+use std::collections::HashMap;
+use std::fmt;
+
+/// What a plan is linted *against*: the cost graph the schedule was
+/// budgeted from and the §III-C slot-formula inputs the moderator used.
+#[derive(Debug, Clone, Copy)]
+pub struct LintContext<'a> {
+    /// The measured cost graph (pings, ms) the plan was computed from.
+    /// Lane trees must draw their edges from here, and the slot budget
+    /// must equal the §III-C formula over these weights.
+    pub costs: &'a Graph,
+    /// The transfer unit (MB) fed to `build_schedule` — the whole
+    /// checkpoint under a whole-model plan, one segment otherwise.
+    pub unit_mb: f64,
+    /// The ping probe payload (bytes) of the slot-length formula.
+    pub ping_size_bytes: u64,
+}
+
+/// One statically detected plan defect. Each variant carries enough
+/// graph context to render an actionable message (see the `Display`
+/// impl); [`Violation::kind`] gives a stable machine-matchable label.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// A lane's tree covers a different node set than the cost graph.
+    WrongNodeCount { lane: usize, tree_nodes: usize, plan_nodes: usize },
+    /// A lane has the wrong edge count for a spanning tree (`n - 1`).
+    NotSpanning { lane: usize, edges: usize, nodes: usize },
+    /// A lane's tree does not reach every node (sample of the cut-off
+    /// nodes, capped at eight).
+    Disconnected { lane: usize, unreachable: Vec<NodeId> },
+    /// A lane's coloring assigns a different number of nodes than the
+    /// tree has.
+    ColoringLength { lane: usize, colored: usize, nodes: usize },
+    /// A tree edge joins two same-colored nodes — the §III-C properness
+    /// invariant is broken.
+    ImproperEdge { lane: usize, u: NodeId, v: NodeId, color: usize },
+    /// A color below `num_colors` has no nodes: a slot with zero
+    /// transmitters in every cycle.
+    EmptyColorClass { lane: usize, color: usize, num_colors: usize },
+    /// `first_color` does not name an existing class (with ≥ 2 colors;
+    /// the modulo slot rotation makes it harmless only when `k = 1`).
+    FirstColorOutOfRange { lane: usize, first_color: usize, num_colors: usize },
+    /// Two adjacent nodes transmit in the same slot — a half-duplex
+    /// conflict on a tree edge.
+    SlotConflict { lane: usize, slot: usize, u: NodeId, v: NodeId },
+    /// A lane uses an edge the cost graph never measured.
+    ForeignEdge { lane: usize, u: NodeId, v: NodeId },
+    /// Two lanes share an edge — stripes must be pairwise edge-disjoint.
+    SharedEdge { lane_a: usize, lane_b: usize, u: NodeId, v: NodeId },
+    /// The published slot length disagrees with the §III-C formula
+    /// recomputed over the cost graph.
+    SlotBudgetMismatch { lane: usize, got_s: f64, want_s: f64, ping_max_ms: f64 },
+    /// The published neighbor table disagrees with the lane-0 tree.
+    NeighborTableMismatch { node: NodeId },
+    /// Striped per-lane transfer plans do not sum back to one copy.
+    StripeByteLoss { lanes: usize, striped_mb: f64, copy_mb: f64 },
+    /// A lane's stripe carries the wrong segment count.
+    StripeSegmentMismatch { lane: usize, got: usize, want: usize },
+    /// Segment bounds leave a gap or overlap inside the parameter vector.
+    SegmentBoundsGap { segment: usize, start: usize, expected_start: usize },
+    /// Segment bounds do not cover the parameter vector exactly.
+    SegmentBoundsCoverage { covered: usize, len: usize },
+    /// A round inside the linted horizon has no participant set.
+    MissingParticipants { round: u64 },
+    /// A round's participant set is empty — nobody originates.
+    NoOriginators { round: u64 },
+    /// A participant id is outside the node range.
+    ParticipantOutOfRange { round: u64, node: NodeId, n: usize },
+    /// `originates` and the participant list disagree about a node.
+    OriginationMismatch { round: u64, node: NodeId, listed: bool, originates: bool },
+}
+
+impl Violation {
+    /// Stable machine-matchable label (the mutation suite keys on it).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::WrongNodeCount { .. } => "wrong-node-count",
+            Violation::NotSpanning { .. } => "not-spanning",
+            Violation::Disconnected { .. } => "disconnected",
+            Violation::ColoringLength { .. } => "coloring-length",
+            Violation::ImproperEdge { .. } => "improper-edge",
+            Violation::EmptyColorClass { .. } => "empty-color-class",
+            Violation::FirstColorOutOfRange { .. } => "first-color-out-of-range",
+            Violation::SlotConflict { .. } => "slot-conflict",
+            Violation::ForeignEdge { .. } => "foreign-edge",
+            Violation::SharedEdge { .. } => "shared-edge",
+            Violation::SlotBudgetMismatch { .. } => "slot-budget-mismatch",
+            Violation::NeighborTableMismatch { .. } => "neighbor-table-mismatch",
+            Violation::StripeByteLoss { .. } => "stripe-byte-loss",
+            Violation::StripeSegmentMismatch { .. } => "stripe-segment-mismatch",
+            Violation::SegmentBoundsGap { .. } => "segment-bounds-gap",
+            Violation::SegmentBoundsCoverage { .. } => "segment-bounds-coverage",
+            Violation::MissingParticipants { .. } => "missing-participants",
+            Violation::NoOriginators { .. } => "no-originators",
+            Violation::ParticipantOutOfRange { .. } => "participant-out-of-range",
+            Violation::OriginationMismatch { .. } => "origination-mismatch",
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::WrongNodeCount { lane, tree_nodes, plan_nodes } => write!(
+                f,
+                "lane {lane}: tree covers {tree_nodes} nodes but the plan is over {plan_nodes}"
+            ),
+            Violation::NotSpanning { lane, edges, nodes } => write!(
+                f,
+                "lane {lane}: {edges} edges for {nodes} nodes (a spanning tree needs n - 1 = {})",
+                nodes.saturating_sub(1)
+            ),
+            Violation::Disconnected { lane, unreachable } => write!(
+                f,
+                "lane {lane}: tree does not reach nodes {unreachable:?} — they would never \
+                 receive a model"
+            ),
+            Violation::ColoringLength { lane, colored, nodes } => write!(
+                f,
+                "lane {lane}: coloring assigns {colored} nodes but the tree has {nodes}"
+            ),
+            Violation::ImproperEdge { lane, u, v, color } => write!(
+                f,
+                "lane {lane}: tree edge ({u}, {v}) joins two color-{color} nodes — they would \
+                 transmit in the same slot (§III-C properness broken)"
+            ),
+            Violation::EmptyColorClass { lane, color, num_colors } => write!(
+                f,
+                "lane {lane}: color {color} of {num_colors} has no nodes — a slot with zero \
+                 transmitters every cycle"
+            ),
+            Violation::FirstColorOutOfRange { lane, first_color, num_colors } => write!(
+                f,
+                "lane {lane}: first_color {first_color} does not name one of the {num_colors} \
+                 classes"
+            ),
+            Violation::SlotConflict { lane, slot, u, v } => write!(
+                f,
+                "lane {lane} slot {slot}: adjacent nodes {u} and {v} both transmit — half-duplex \
+                 conflict on tree edge ({u}, {v})"
+            ),
+            Violation::ForeignEdge { lane, u, v } => write!(
+                f,
+                "lane {lane}: tree edge ({u}, {v}) is absent from the measured cost graph"
+            ),
+            Violation::SharedEdge { lane_a, lane_b, u, v } => write!(
+                f,
+                "lanes {lane_a} and {lane_b} share edge ({u}, {v}) — stripes must ride pairwise \
+                 edge-disjoint trees"
+            ),
+            Violation::SlotBudgetMismatch { lane, got_s, want_s, ping_max_ms } => write!(
+                f,
+                "lane {lane}: published slot length {got_s:.6} s but the §III-C formula over the \
+                 cost graph gives {want_s:.6} s (ping_max {ping_max_ms:.3} ms)"
+            ),
+            Violation::NeighborTableMismatch { node } => write!(
+                f,
+                "neighbor table for node {node} disagrees with the published tree"
+            ),
+            Violation::StripeByteLoss { lanes, striped_mb, copy_mb } => write!(
+                f,
+                "{lanes} striped lanes move {striped_mb:.6} MB total but one copy is \
+                 {copy_mb:.6} MB — bytes are not conserved"
+            ),
+            Violation::StripeSegmentMismatch { lane, got, want } => write!(
+                f,
+                "stripe for lane {lane} carries {got} segments, expected {want}"
+            ),
+            Violation::SegmentBoundsGap { segment, start, expected_start } => write!(
+                f,
+                "segment {segment} starts at element {start}, expected {expected_start} \
+                 (gap or overlap in the slicing)"
+            ),
+            Violation::SegmentBoundsCoverage { covered, len } => write!(
+                f,
+                "segment bounds cover {covered} of {len} parameter elements"
+            ),
+            Violation::MissingParticipants { round } => write!(
+                f,
+                "round {round}: no participant set inside the plan horizon"
+            ),
+            Violation::NoOriginators { round } => write!(
+                f,
+                "round {round}: empty participant set — nobody trains or originates"
+            ),
+            Violation::ParticipantOutOfRange { round, node, n } => write!(
+                f,
+                "round {round}: participant {node} is outside the {n}-node session"
+            ),
+            Violation::OriginationMismatch { round, node, listed, originates } => write!(
+                f,
+                "round {round}: node {node} listed={listed} but originates={originates} — the \
+                 participant set and the origination mask disagree"
+            ),
+        }
+    }
+}
+
+/// The linter's verdict: every violation found, in check order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LintReport {
+    violations: Vec<Violation>,
+}
+
+impl LintReport {
+    /// True when no check fired.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Every violation, in check order.
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    /// Whether any violation of the given [`Violation::kind`] fired.
+    pub fn has(&self, kind: &str) -> bool {
+        self.violations.iter().any(|v| v.kind() == kind)
+    }
+
+    /// Distinct kinds present, in first-seen order.
+    pub fn kinds(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for v in &self.violations {
+            if !out.contains(&v.kind()) {
+                out.push(v.kind());
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.violations.is_empty() {
+            return write!(f, "plan lint: clean");
+        }
+        writeln!(f, "plan lint: {} violation(s)", self.violations.len())?;
+        for v in &self.violations {
+            writeln!(f, "  - [{}] {v}", v.kind())?;
+        }
+        Ok(())
+    }
+}
+
+/// Accumulating plan linter: run any subset of checks against one
+/// [`LintContext`], then [`PlanLinter::finish`] into a [`LintReport`].
+#[derive(Debug)]
+pub struct PlanLinter<'a> {
+    ctx: LintContext<'a>,
+    violations: Vec<Violation>,
+}
+
+impl<'a> PlanLinter<'a> {
+    pub fn new(ctx: LintContext<'a>) -> Self {
+        PlanLinter { ctx, violations: Vec::new() }
+    }
+
+    /// All checks over one dissemination lane (tree + schedule):
+    /// spanning/acyclicity, coloring shape + properness, empty classes,
+    /// `first_color` range, per-slot half-duplex conflicts, edge
+    /// membership in the cost graph, and the §III-C slot budget.
+    pub fn check_lane(&mut self, lane: usize, tree: &Graph, schedule: &Schedule) {
+        let plan_nodes = self.ctx.costs.node_count();
+        let n = tree.node_count();
+        if n != plan_nodes {
+            self.violations.push(Violation::WrongNodeCount {
+                lane,
+                tree_nodes: n,
+                plan_nodes,
+            });
+        }
+        if n > 0 {
+            if tree.edge_count() != n - 1 {
+                self.violations.push(Violation::NotSpanning {
+                    lane,
+                    edges: tree.edge_count(),
+                    nodes: n,
+                });
+            }
+            let unreachable = unreachable_from(tree, 0);
+            if !unreachable.is_empty() {
+                self.violations.push(Violation::Disconnected { lane, unreachable });
+            }
+        }
+        let coloring = &schedule.coloring;
+        if coloring.len() != n {
+            // further color checks would index out of bounds; the length
+            // violation already names the root cause
+            self.violations.push(Violation::ColoringLength {
+                lane,
+                colored: coloring.len(),
+                nodes: n,
+            });
+            return;
+        }
+        for e in tree.edges() {
+            if coloring.color_of(e.u) == coloring.color_of(e.v) {
+                self.violations.push(Violation::ImproperEdge {
+                    lane,
+                    u: e.u,
+                    v: e.v,
+                    color: coloring.color_of(e.u),
+                });
+            }
+        }
+        let num_colors = coloring.num_colors();
+        if num_colors >= 2 {
+            let mut counts = vec![0usize; num_colors];
+            for &c in coloring.assignment() {
+                counts[c] += 1;
+            }
+            for (color, &count) in counts.iter().enumerate() {
+                if count == 0 {
+                    self.violations.push(Violation::EmptyColorClass {
+                        lane,
+                        color,
+                        num_colors,
+                    });
+                }
+            }
+            if schedule.first_color >= num_colors {
+                self.violations.push(Violation::FirstColorOutOfRange {
+                    lane,
+                    first_color: schedule.first_color,
+                    num_colors,
+                });
+            }
+        }
+        // half-duplex conflict freedom, slot by slot over one full color
+        // cycle: O(E·k), independent of class sizes
+        for slot in 0..num_colors {
+            for e in tree.edges() {
+                if schedule.transmits_in_slot(e.u, slot) && schedule.transmits_in_slot(e.v, slot)
+                {
+                    self.violations.push(Violation::SlotConflict {
+                        lane,
+                        slot,
+                        u: e.u,
+                        v: e.v,
+                    });
+                }
+            }
+        }
+        for e in tree.edges() {
+            if e.u < plan_nodes && e.v < plan_nodes && !self.ctx.costs.has_edge(e.u, e.v) {
+                self.violations.push(Violation::ForeignEdge { lane, u: e.u, v: e.v });
+            }
+        }
+        self.check_slot_budget(lane, coloring, schedule.slot_len_s);
+    }
+
+    /// Recompute the §III-C slot length over the context's cost graph —
+    /// the exact fold `build_schedule` runs — and compare.
+    fn check_slot_budget(&mut self, lane: usize, coloring: &Coloring, got_s: f64) {
+        let ping_max_ms = (0..coloring.num_colors())
+            .map(|c| class_ping_max_ms(self.ctx.costs, coloring, c))
+            .fold(0.0, f64::max);
+        let want_s = slot_length_s(ping_max_ms, self.ctx.unit_mb, self.ctx.ping_size_bytes);
+        if (got_s - want_s).abs() > want_s.abs() * 1e-9 + 1e-12 {
+            self.violations.push(Violation::SlotBudgetMismatch {
+                lane,
+                got_s,
+                want_s,
+                ping_max_ms,
+            });
+        }
+    }
+
+    /// Pairwise edge-disjointness across the given lane trees (lane 0
+    /// first). Reports each shared edge once, with both lane indices.
+    pub fn check_disjoint(&mut self, trees: &[&Graph]) {
+        let mut owner: HashMap<(NodeId, NodeId), usize> = HashMap::new();
+        for (lane, tree) in trees.iter().enumerate() {
+            for e in tree.edges() {
+                let key = (e.u.min(e.v), e.u.max(e.v));
+                match owner.get(&key) {
+                    Some(&prev) => self.violations.push(Violation::SharedEdge {
+                        lane_a: prev,
+                        lane_b: lane,
+                        u: key.0,
+                        v: key.1,
+                    }),
+                    None => {
+                        owner.insert(key, lane);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lint every lane of a [`PlanEpoch`] plus cross-lane disjointness.
+    pub fn check_epoch(&mut self, epoch: &PlanEpoch) {
+        self.check_lane(0, &epoch.tree, &epoch.schedule);
+        for (i, lane) in epoch.extra.iter().enumerate() {
+            self.check_lane(i + 1, &lane.tree, &lane.schedule);
+        }
+        let mut trees: Vec<&Graph> = vec![&epoch.tree];
+        trees.extend(epoch.extra.iter().map(|l| &l.tree));
+        self.check_disjoint(&trees);
+    }
+
+    /// Lint a published [`ScheduleBundle`]: every lane, cross-lane
+    /// disjointness, and the neighbor table against the lane-0 tree.
+    pub fn check_bundle(&mut self, bundle: &ScheduleBundle) {
+        self.check_lane(0, &bundle.tree, &bundle.schedule);
+        for (i, lane) in bundle.extra.iter().enumerate() {
+            self.check_lane(i + 1, &lane.tree, &lane.schedule);
+        }
+        let mut trees: Vec<&Graph> = vec![&bundle.tree];
+        trees.extend(bundle.extra.iter().map(|l| &l.tree));
+        self.check_disjoint(&trees);
+        let n = bundle.tree.node_count();
+        if bundle.neighbor_table.len() != n {
+            self.violations.push(Violation::NeighborTableMismatch {
+                node: bundle.neighbor_table.len().min(n),
+            });
+        }
+        for (u, table) in bundle.neighbor_table.iter().enumerate().take(n) {
+            let mut want = bundle.tree.neighbor_ids(u);
+            let mut got = table.clone();
+            want.sort_unstable();
+            got.sort_unstable();
+            if got != want {
+                self.violations.push(Violation::NeighborTableMismatch { node: u });
+            }
+        }
+    }
+
+    /// Byte conservation of a striped transfer: the per-lane plans must
+    /// sum back to exactly one copy's wire bytes, each carrying the
+    /// stripe segment count, and the full plan's segment bounds must
+    /// tile a parameter vector without gap or loss.
+    pub fn check_stripes(&mut self, plan: &TransferPlan, striped: &[TransferPlan]) {
+        if !striped.is_empty() {
+            let striped_mb: f64 = striped.iter().map(TransferPlan::wire_mb).sum();
+            if (striped_mb - plan.wire_mb()).abs() > plan.wire_mb().abs() * 1e-9 + 1e-12 {
+                self.violations.push(Violation::StripeByteLoss {
+                    lanes: striped.len(),
+                    striped_mb,
+                    copy_mb: plan.wire_mb(),
+                });
+            }
+            let want = plan.segments().div_ceil(striped.len()).max(1);
+            for (lane, s) in striped.iter().enumerate() {
+                if s.segments() != want {
+                    self.violations.push(Violation::StripeSegmentMismatch {
+                        lane,
+                        got: s.segments(),
+                        want,
+                    });
+                }
+            }
+        }
+        // slicing coverage on a representative parameter vector (the
+        // bounds are pure arithmetic, so one length exercises the tiling)
+        let len = 64 * plan.segments() + 17;
+        let mut expected_start = 0usize;
+        for (segment, r) in plan.segment_bounds(len).into_iter().enumerate() {
+            if r.start != expected_start {
+                self.violations.push(Violation::SegmentBoundsGap {
+                    segment,
+                    start: r.start,
+                    expected_start,
+                });
+            }
+            expected_start = r.end;
+        }
+        if expected_start != len {
+            self.violations.push(Violation::SegmentBoundsCoverage {
+                covered: expected_start,
+                len,
+            });
+        }
+    }
+
+    /// Participation-origination consistency over the first `rounds`
+    /// rounds: every round has a non-empty in-range participant set, and
+    /// the origination mask agrees with the listed set node for node.
+    pub fn check_participation(&mut self, plan: &ParticipationPlan, nodes: usize, rounds: u64) {
+        for round in 0..rounds {
+            let Some(set) = plan.participants(round) else {
+                self.violations.push(Violation::MissingParticipants { round });
+                continue;
+            };
+            if set.is_empty() {
+                self.violations.push(Violation::NoOriginators { round });
+            }
+            let mut listed = vec![false; nodes];
+            for &u in set {
+                if u >= nodes {
+                    self.violations.push(Violation::ParticipantOutOfRange {
+                        round,
+                        node: u,
+                        n: nodes,
+                    });
+                } else {
+                    listed[u] = true;
+                }
+            }
+            for (u, &l) in listed.iter().enumerate() {
+                let o = plan.originates(round, u);
+                if l != o {
+                    self.violations.push(Violation::OriginationMismatch {
+                        round,
+                        node: u,
+                        listed: l,
+                        originates: o,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Consume the linter, yielding the accumulated report.
+    pub fn finish(self) -> LintReport {
+        LintReport { violations: self.violations }
+    }
+}
+
+/// Nodes a BFS from `start` never reaches (capped at eight for display).
+fn unreachable_from(g: &Graph, start: NodeId) -> Vec<NodeId> {
+    let n = g.node_count();
+    if n == 0 || start >= n {
+        return Vec::new();
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![start];
+    seen[start] = true;
+    while let Some(u) = stack.pop() {
+        for &(v, _) in g.neighbors(u) {
+            if !seen[v] {
+                seen[v] = true;
+                stack.push(v);
+            }
+        }
+    }
+    (0..n).filter(|&u| !seen[u]).take(8).collect()
+}
+
+/// One-shot lint of a [`PlanEpoch`] (all lanes + disjointness).
+pub fn lint_epoch(epoch: &PlanEpoch, ctx: &LintContext<'_>) -> LintReport {
+    let mut linter = PlanLinter::new(*ctx);
+    linter.check_epoch(epoch);
+    linter.finish()
+}
+
+/// One-shot lint of a published [`ScheduleBundle`] (all lanes +
+/// disjointness + neighbor table).
+pub fn lint_bundle(bundle: &ScheduleBundle, ctx: &LintContext<'_>) -> LintReport {
+    let mut linter = PlanLinter::new(*ctx);
+    linter.check_bundle(bundle);
+    linter.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::ColoringAlgorithm;
+    use crate::coordinator::schedule::build_schedule;
+    use crate::mst::MstAlgorithm;
+
+    fn dense_costs(n: usize) -> Graph {
+        let mut g = Graph::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                g.add_edge(u, v, if v == u + 1 { 1.0 } else { 2.0 + (u * n + v) as f64 * 0.01 });
+            }
+        }
+        g
+    }
+
+    fn plan(costs: &Graph) -> PlanEpoch {
+        let tree = MstAlgorithm::Prim.run(costs).unwrap();
+        let coloring = ColoringAlgorithm::Bfs.run(&tree);
+        let schedule = build_schedule(costs, coloring, 11.6, 56, 1);
+        PlanEpoch::single(tree, schedule)
+    }
+
+    #[test]
+    fn clean_plan_lints_clean() {
+        let costs = dense_costs(10);
+        let epoch = plan(&costs);
+        let ctx = LintContext { costs: &costs, unit_mb: 11.6, ping_size_bytes: 56 };
+        let report = lint_epoch(&epoch, &ctx);
+        assert!(report.is_clean(), "{report}");
+        assert_eq!(format!("{report}"), "plan lint: clean");
+    }
+
+    #[test]
+    fn dropped_edge_is_not_spanning() {
+        let costs = dense_costs(8);
+        let epoch = plan(&costs);
+        let mut broken = Graph::new(8);
+        for e in epoch.tree.edges().iter().skip(1) {
+            broken.add_edge(e.u, e.v, e.weight);
+        }
+        let mutated = PlanEpoch::single(broken, epoch.schedule.clone());
+        let ctx = LintContext { costs: &costs, unit_mb: 11.6, ping_size_bytes: 56 };
+        let report = lint_epoch(&mutated, &ctx);
+        assert!(report.has("not-spanning"), "{report}");
+        assert!(report.has("disconnected"), "{report}");
+    }
+
+    #[test]
+    fn merged_colors_fire_properness_and_slot_conflict() {
+        let costs = dense_costs(8);
+        let epoch = plan(&costs);
+        let e = epoch.tree.edges()[0];
+        let mut assignment = epoch.schedule.coloring.assignment().to_vec();
+        assignment[e.v] = assignment[e.u];
+        let schedule = Schedule {
+            coloring: Coloring::new(assignment),
+            slot_len_s: epoch.schedule.slot_len_s,
+            first_color: epoch.schedule.first_color,
+        };
+        let mutated = PlanEpoch::single(epoch.tree.clone(), schedule);
+        let ctx = LintContext { costs: &costs, unit_mb: 11.6, ping_size_bytes: 56 };
+        let report = lint_epoch(&mutated, &ctx);
+        assert!(report.has("improper-edge"), "{report}");
+        assert!(report.has("slot-conflict"), "{report}");
+    }
+
+    #[test]
+    fn shrunk_slot_budget_is_flagged_with_the_formula_value() {
+        let costs = dense_costs(8);
+        let epoch = plan(&costs);
+        let want = epoch.schedule.slot_len_s;
+        let schedule = Schedule { slot_len_s: want * 0.5, ..epoch.schedule.clone() };
+        let mutated = PlanEpoch::single(epoch.tree.clone(), schedule);
+        let ctx = LintContext { costs: &costs, unit_mb: 11.6, ping_size_bytes: 56 };
+        let report = lint_epoch(&mutated, &ctx);
+        assert!(report.has("slot-budget-mismatch"), "{report}");
+        let Violation::SlotBudgetMismatch { want_s, .. } = report.violations()[0] else {
+            panic!("unexpected violation order: {report}");
+        };
+        assert!((want_s - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapping_lanes_share_edges() {
+        let costs = dense_costs(8);
+        let epoch = plan(&costs);
+        let mutated = PlanEpoch {
+            tree: epoch.tree.clone(),
+            schedule: epoch.schedule.clone(),
+            extra: vec![crate::coordinator::engine::TreeLane {
+                tree: epoch.tree.clone(),
+                schedule: epoch.schedule.clone(),
+            }],
+        };
+        let ctx = LintContext { costs: &costs, unit_mb: 11.6, ping_size_bytes: 56 };
+        let report = lint_epoch(&mutated, &ctx);
+        assert!(report.has("shared-edge"), "{report}");
+        // every shared edge names both lanes
+        for v in report.violations() {
+            if let Violation::SharedEdge { lane_a, lane_b, .. } = v {
+                assert_eq!((*lane_a, *lane_b), (0, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_corruption_loses_bytes() {
+        let plan = TransferPlan::segmented(48.0, 6);
+        let good = [plan.stripe(2), plan.stripe(2)];
+        let mut linter = PlanLinter::new(LintContext {
+            costs: &dense_costs(4),
+            unit_mb: 1.0,
+            ping_size_bytes: 56,
+        });
+        linter.check_stripes(&plan, &good);
+        assert!(linter.finish().is_clean());
+
+        let bad = [plan.stripe(2), plan.stripe(3)];
+        let mut linter = PlanLinter::new(LintContext {
+            costs: &dense_costs(4),
+            unit_mb: 1.0,
+            ping_size_bytes: 56,
+        });
+        linter.check_stripes(&plan, &bad);
+        let report = linter.finish();
+        assert!(report.has("stripe-byte-loss"), "{report}");
+        assert!(report.has("stripe-segment-mismatch"), "{report}");
+    }
+
+    #[test]
+    fn participation_horizon_overrun_is_flagged() {
+        let costs = dense_costs(6);
+        let plan = ParticipationPlan::sample(0.5, 6, 3, 7);
+        let ctx = LintContext { costs: &costs, unit_mb: 1.0, ping_size_bytes: 56 };
+        let mut linter = PlanLinter::new(ctx);
+        linter.check_participation(&plan, 6, 3);
+        assert!(linter.finish().is_clean());
+        let mut linter = PlanLinter::new(ctx);
+        linter.check_participation(&plan, 6, 4);
+        let report = linter.finish();
+        assert!(report.has("missing-participants"), "{report}");
+    }
+
+    #[test]
+    fn report_renders_kinds_and_messages() {
+        let costs = dense_costs(6);
+        let epoch = plan(&costs);
+        let schedule = Schedule { first_color: 9, ..epoch.schedule.clone() };
+        let mutated = PlanEpoch::single(epoch.tree.clone(), schedule);
+        let ctx = LintContext { costs: &costs, unit_mb: 11.6, ping_size_bytes: 56 };
+        let report = lint_epoch(&mutated, &ctx);
+        assert!(report.has("first-color-out-of-range"));
+        assert_eq!(report.kinds(), vec!["first-color-out-of-range"]);
+        let rendered = format!("{report}");
+        assert!(rendered.contains("first_color 9"), "{rendered}");
+    }
+}

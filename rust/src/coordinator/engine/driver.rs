@@ -441,6 +441,9 @@ impl<T: Transport> LiveDriver<T> {
             entry.bytes += bytes;
         }
         if entry.received == entry.total {
+            // invariant: the entry was created (or found) just above in
+            // this same call, and nothing between inserts can remove it
+            #[allow(clippy::expect_used)]
             let done = self.reassembly.remove(&(dst, src, seg.model)).expect("entry exists");
             self.reassembled += 1;
             self.reassembled_bytes += done.bytes;
@@ -467,6 +470,10 @@ impl<T: Transport> Driver for LiveDriver<T> {
                 payload: vec![owner as u8; bytes],
             }
         };
+        // invariant-documented panic: `launch` cannot surface transport
+        // errors through the Driver trait, and a failed send means the
+        // live mesh is torn down — no round can make progress past it
+        #[allow(clippy::expect_used)]
         self.endpoints[from].send(to, msg).expect("live transport send failed");
         self.inflight.entry((from, to, seg)).or_default().push_back(token);
         self.inflight_count += 1;
@@ -486,6 +493,10 @@ impl<T: Transport> Driver for LiveDriver<T> {
             }
             for d in 0..self.endpoints.len() {
                 loop {
+                    // invariant-documented panic: a recv error means the
+                    // mesh endpoint is gone; the engine would stall on
+                    // in-flight units anyway, so fail loudly here
+                    #[allow(clippy::expect_used)]
                     let msg = self.endpoints[d].try_recv().expect("live transport recv failed");
                     let Some((src, msg)) = msg else { break };
                     let (seg, bytes) = match msg {
@@ -508,6 +519,10 @@ impl<T: Transport> Driver for LiveDriver<T> {
                     let Some(token) = queue.pop_front() else { continue };
                     self.inflight_count -= 1;
                     let at = self.epoch.elapsed().as_secs_f64();
+                    // invariant: every token in an `inflight` queue was
+                    // inserted into `launched` by the same `launch` call,
+                    // and only this line ever removes it
+                    #[allow(clippy::expect_used)]
                     let (from, to, seg, payload_mb, start) =
                         self.launched.remove(&token).expect("completion for unknown token");
                     self.transfers.push(FlowRecord {

@@ -62,6 +62,7 @@
 //! traffic. Applied migrations are recorded as [`ReplanEvent`]s in
 //! [`PipelineMetrics::replans`]. With a hook that never replans the code
 //! path (and float trajectory) is identical to [`RoundEngine::run_pipelined`].
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod driver;
 pub mod sharded;
@@ -576,6 +577,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
                 "driver made no progress with {outstanding} segments in flight"
             );
             for ev in events {
+                // every token the driver can complete was inserted into `tokens`
+                // by the launch loop above, and each token completes exactly once
+                #[allow(clippy::expect_used)]
                 let (ci, seg_idx) = tokens
                     .remove(&ev.token)
                     .expect("completion for a segment this slot never launched");
@@ -765,6 +769,10 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
             } else {
                 // segmented path: serial segments + cut-through cascades
                 let planned_rounds = vec![0usize; planned.len()];
+                // the segmented branch is only entered when the plan carries
+                // more than one segment, and the setup above snapshots the tree
+                // whenever the plan is segmented
+                #[allow(clippy::expect_used)]
                 let trees = [tree.as_ref().expect("tree snapshot exists for segmented plans")];
                 let stats = self.run_cut_through_slot(
                     &trees,
@@ -1319,6 +1327,9 @@ impl<'a, D: Driver> RoundEngine<'a, D> {
         let mut rounds = Vec::with_capacity(finished.len());
         let mut received = Vec::with_capacity(finished.len());
         for entry in finished {
+            // the scheduling loop above only exits once every round's entry in
+            // `finished` has been populated by its final slot
+            #[allow(clippy::expect_used)]
             let (phase, orders) = entry.expect("every pipelined round completed");
             rounds.push(phase);
             received.push(orders);

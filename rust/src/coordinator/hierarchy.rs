@@ -84,6 +84,18 @@ pub fn plan_hierarchical_forest(
             })
             .collect();
     }
+    // static verification plane: every hierarchical epoch (including the
+    // ScaleScenario path that bypasses the Moderator) is re-linted in
+    // debug builds against the costs it was budgeted from
+    #[cfg(debug_assertions)]
+    {
+        let ctx = crate::analysis::LintContext { costs, unit_mb: model_mb, ping_size_bytes };
+        let report = crate::analysis::lint_epoch(&epoch, &ctx);
+        debug_assert!(
+            report.is_clean(),
+            "hierarchical planner produced a plan that fails lint:\n{report}"
+        );
+    }
     Ok(epoch)
 }
 
@@ -143,6 +155,10 @@ mod tests {
         assert_eq!(epoch.schedule.coloring.assignment(), flat_sched.coloring.assignment());
         assert_eq!(epoch.schedule.slot_len_s.to_bits(), flat_sched.slot_len_s.to_bits());
         assert_eq!(epoch.schedule.first_color, flat_sched.first_color);
+        let ctx =
+            crate::analysis::LintContext { costs: &costs, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_epoch(&epoch, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 
     #[test]
@@ -170,6 +186,10 @@ mod tests {
         )
         .unwrap();
         assert!(!epoch.extra.is_empty(), "dense overlay should admit an extra lane");
+        let ctx =
+            crate::analysis::LintContext { costs: &costs, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_epoch(&epoch, &ctx);
+        assert!(report.is_clean(), "{report}");
         let lanes = epoch.lanes();
         let trees: Vec<Graph> = lanes.iter().map(|l| l.tree.clone()).collect();
         assert!(crate::mst::disjoint::pairwise_edge_disjoint(&trees));
@@ -231,5 +251,9 @@ mod tests {
         let expect =
             crate::coordinator::schedule::slot_length_s(25.0, 14.0, 56);
         assert!(epoch.schedule.slot_len_s >= expect, "slot budget ignores the backbone");
+        let ctx =
+            crate::analysis::LintContext { costs: &costs, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_epoch(&epoch, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 }

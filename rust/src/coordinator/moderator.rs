@@ -276,6 +276,22 @@ impl Moderator {
         self.matrix = Some(matrix);
         self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table, extra });
         self.computed = Some((self.epoch, fingerprint));
+        // static verification plane: every plan the moderator ever
+        // publishes in a debug build is re-linted against the costs it
+        // was planned from (the release hot path pays nothing)
+        #[cfg(debug_assertions)]
+        if let Some(bundle) = self.bundle.as_ref() {
+            let ctx = crate::analysis::LintContext {
+                costs: &costs,
+                unit_mb: model_mb,
+                ping_size_bytes,
+            };
+            let report = crate::analysis::lint_bundle(bundle, &ctx);
+            debug_assert!(
+                report.is_clean(),
+                "moderator published a plan that fails lint:\n{report}"
+            );
+        }
         Ok(self.bundle.as_ref().unwrap())
     }
 
@@ -319,6 +335,21 @@ impl Moderator {
         let neighbor_table = (0..self.n).map(|u| tree.neighbor_ids(u)).collect();
         self.matrix = Some(CostMatrix::from_graph(estimates));
         self.bundle = Some(ScheduleBundle { tree, schedule, neighbor_table, extra });
+        // static verification plane: replanned bundles are linted against
+        // the fresh estimates they were re-budgeted from
+        #[cfg(debug_assertions)]
+        if let Some(bundle) = self.bundle.as_ref() {
+            let ctx = crate::analysis::LintContext {
+                costs: estimates,
+                unit_mb: model_mb,
+                ping_size_bytes,
+            };
+            let report = crate::analysis::lint_bundle(bundle, &ctx);
+            debug_assert!(
+                report.is_clean(),
+                "moderator replanned a bundle that fails lint:\n{report}"
+            );
+        }
         Ok(self.bundle.as_ref().unwrap())
     }
 
@@ -410,6 +441,13 @@ mod tests {
         assert_eq!(red, vec!['C', 'E', 'G', 'H', 'I']);
         // neighbor table mirrors the tree
         assert_eq!(bundle.neighbor_table[example::F], vec![example::E, example::G, example::H]);
+        // the flat paper plan lints clean against the averaged costs
+        let bundle = bundle.clone();
+        let costs = m.matrix().unwrap().to_graph();
+        let ctx =
+            crate::analysis::LintContext { costs: &costs, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_bundle(&bundle, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 
     #[test]
@@ -470,6 +508,11 @@ mod tests {
         for u in 0..10 {
             assert_eq!(bundle.neighbor_table[u], bundle.tree.neighbor_ids(u));
         }
+        // the replanned bundle lints clean against the fresh estimates
+        let ctx =
+            crate::analysis::LintContext { costs: &estimates, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_bundle(bundle, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 
     #[test]
@@ -528,6 +571,13 @@ mod tests {
         for (u, table) in bundle.neighbor_table.iter().enumerate() {
             assert_eq!(table, &bundle.tree.neighbor_ids(u));
         }
+        // the stitched hierarchical bundle lints clean
+        let bundle = bundle.clone();
+        let costs = m.matrix().unwrap().to_graph();
+        let ctx =
+            crate::analysis::LintContext { costs: &costs, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_bundle(&bundle, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 
     #[test]
@@ -615,6 +665,12 @@ mod tests {
             assert!(lane.tree.is_tree());
             assert!(lane.schedule.coloring.is_proper(&lane.tree));
         }
+        // the forest bundle lints clean (including lane disjointness)
+        let costs = m.matrix().unwrap().to_graph();
+        let ctx =
+            crate::analysis::LintContext { costs: &costs, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_bundle(&bundle, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 
     #[test]
@@ -654,6 +710,11 @@ mod tests {
         for lane in &after.extra {
             assert!(lane.schedule.coloring.is_proper(&lane.tree));
         }
+        // the recarved forest lints clean against the drifted estimates
+        let ctx =
+            crate::analysis::LintContext { costs: &estimates, unit_mb: 14.0, ping_size_bytes: 56 };
+        let report = crate::analysis::lint_bundle(&after, &ctx);
+        assert!(report.is_clean(), "{report}");
     }
 
     #[test]

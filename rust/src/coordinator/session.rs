@@ -46,6 +46,11 @@ pub struct GossipSession {
     /// generator (`topology_gen = "hierarchy"`); `None` for flat overlays.
     hierarchy: Option<Hierarchy>,
     bundle: ScheduleBundle,
+    /// The checkpoint size (MB) the session was planned for.
+    model_mb: f64,
+    /// The §III-C transfer unit (MB) the published slot budget covers —
+    /// the whole checkpoint at `segments = 1`, one segment otherwise.
+    unit_mb: f64,
     /// The robustness plane's Byzantine scenario (`--adversary`): which
     /// nodes are compromised and how they misbehave. `None` with
     /// `adversary = none` — every honest path stays bit-identical.
@@ -123,8 +128,37 @@ impl GossipSession {
             measured_costs,
             hierarchy,
             bundle,
+            model_mb,
+            unit_mb,
             adversary,
         })
+    }
+
+    /// Statically lint the session's published plan artifacts: every
+    /// dissemination lane (spanning, coloring properness, half-duplex
+    /// conflict freedom, slot budget vs the §III-C formula over the
+    /// measured costs), cross-lane edge-disjointness, the neighbor
+    /// table, stripe byte conservation against the config's
+    /// [`TransferPlan`], and — when `--participation < 1` — the
+    /// participation/origination masks over `rounds` rounds. Pure and
+    /// simulation-free; the `lint-plan` CLI subcommand prints the
+    /// resulting report.
+    pub fn lint_report(&self, rounds: u64) -> crate::analysis::LintReport {
+        let ctx = crate::analysis::LintContext {
+            costs: &self.measured_costs,
+            unit_mb: self.unit_mb,
+            ping_size_bytes: self.cfg.ping_size_bytes,
+        };
+        let mut linter = crate::analysis::PlanLinter::new(ctx);
+        linter.check_bundle(&self.bundle);
+        let plan = self.cfg.transfer_plan(self.model_mb);
+        let lanes = 1 + self.bundle.extra.len();
+        let striped = vec![plan.stripe(lanes); lanes];
+        linter.check_stripes(&plan, &striped);
+        if let Some(participation) = self.participation_plan(rounds) {
+            linter.check_participation(&participation, self.bundle.tree.node_count(), rounds);
+        }
+        linter.finish()
     }
 
     pub fn testbed(&self) -> &Testbed {

@@ -123,6 +123,19 @@
 //! [`coordinator::session::ScaleScenario`] and `benches/scale_sweep.rs`
 //! drive it to n = 10k.
 //!
+//! None of these artifacts are taken on faith: the **static verification
+//! plane** ([`analysis::plan_lint`]) re-checks every published plan
+//! without running a simulator — trees span and stay acyclic, colorings
+//! are proper with zero half-duplex conflicts in any slot, forest lanes
+//! are pairwise edge-disjoint, the slot budget matches the §III-C
+//! formula over the measured costs, stripes conserve bytes against the
+//! [`dfl::transfer::TransferPlan`], and participation masks agree with
+//! origination. The linter runs as a `debug_assertions` hook after every
+//! moderator plan/replan, as the `lint-plan` CLI subcommand, and as a
+//! mutation-tested suite (`tests/plan_lint.rs`). Its concurrency
+//! counterpart model-checks the work-stealing [`netsim::pool`] under
+//! loom (`--features loom`) with Miri and ThreadSanitizer jobs in CI.
+//!
 //! The `runtime` module loads the AOT artifacts through PJRT so the gossip
 //! request path never touches Python.
 //!
@@ -131,6 +144,7 @@
 //! lives in [`docs::architecture`] (docs/ARCHITECTURE.md) and a runnable
 //! scenario cookbook in [`docs::experiments`] (docs/EXPERIMENTS.md).
 
+pub mod analysis;
 pub mod coloring;
 pub mod config;
 pub mod coordinator;

@@ -9,6 +9,7 @@
 //! mosgu sim --describe [--config f.toml]   # the simulated testbed (Fig 3 stand-in)
 //! mosgu train  [--rounds N] [--local-steps K] [--lr F] [--artifacts DIR]
 //! mosgu headline [--config f.toml]   # abstract's improvement factors
+//! mosgu lint-plan [--model-mb F] [--rounds N] [--config f.toml]  # static plan verification
 //! ```
 //!
 //! Common flags on every subcommand: `--config F`, `--seed N`,
@@ -185,6 +186,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "sim" => cmd_sim(&f),
         "train" => cmd_train(&f),
         "headline" => cmd_headline(&f),
+        "lint-plan" => cmd_lint_plan(&f),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -202,7 +204,10 @@ fn print_usage() {
          \x20 graphviz  emit Figs 1/2/4/5/6 as DOT      [--fig N|all] [--out DIR]\n\
          \x20 sim       testbed description (Fig 3)     --describe\n\
          \x20 train     end-to-end DFL training         [--rounds N] [--local-steps K] [--lr F]\n\
-         \x20 headline  abstract's improvement factors  [--config F]\n\n\
+         \x20 headline  abstract's improvement factors  [--config F]\n\
+         \x20 lint-plan statically verify the published plan (trees span, coloring\n\
+         \x20           conflict-free, lanes edge-disjoint, slot budget = the paper's\n\
+         \x20           formula, stripes conserve bytes)  [--model-mb F] [--rounds N]\n\n\
          common flags (all subcommands):\n\
          \x20 --config F     load a TOML experiment config\n\
          \x20 --seed N       RNG seed for topology + simulator jitter\n\
@@ -453,6 +458,44 @@ fn cmd_train(f: &HashMap<String, String>) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `mosgu lint-plan` — plan the session the config describes, then run
+/// the static verification plane over the published artifacts and print
+/// the report with graph context. Exits non-zero on any violation, so
+/// it slots into CI and pre-flight scripts.
+fn cmd_lint_plan(f: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(f)?;
+    let model_mb: f64 =
+        f.get("model-mb").map(|s| s.parse()).transpose().context("--model-mb")?.unwrap_or(14.0);
+    let rounds: u64 =
+        f.get("rounds").map(|s| s.parse()).transpose().context("--rounds")?.unwrap_or(8);
+    let session = GossipSession::with_model(&cfg, model_mb)?;
+    let lanes = session.lanes();
+    println!(
+        "plan: {} nodes, {} lane(s), topology {} ({}), model {:.1} MB",
+        session.tree().node_count(),
+        lanes.len(),
+        cfg.topology.name(),
+        cfg.topology_gen.name(),
+        model_mb
+    );
+    for (i, lane) in lanes.iter().enumerate() {
+        println!(
+            "  lane {i}: {} edges, {} colors, slot {:.3} s",
+            lane.tree.edge_count(),
+            lane.schedule.coloring.num_colors(),
+            lane.schedule.slot_len_s
+        );
+    }
+    let report = session.lint_report(rounds);
+    print!("{report}");
+    if report.is_clean() {
+        println!();
+        Ok(())
+    } else {
+        bail!("plan lint failed with {} violation(s)", report.violations().len());
+    }
 }
 
 fn cmd_headline(f: &HashMap<String, String>) -> Result<()> {

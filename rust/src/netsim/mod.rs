@@ -43,10 +43,12 @@
 //! scale-out plane runs one `NetSim` per subnet plus a backbone queue,
 //! re-synchronized at round barriers by a persistent work-stealing pool —
 //! see [`shard::ShardedNetSim`] and [`pool::DrainPool`].
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod fairshare;
 pub mod pool;
 pub mod shard;
+pub mod sync;
 pub mod testbed;
 
 use crate::util::rng::Pcg64;
@@ -662,8 +664,16 @@ impl NetSim {
         // congestion-loss inflation at current occupancy (`share / infl`,
         // the exact op order of the full pass)
         for &f in &s.comp_flows {
-            let bottleneck =
-                self.flows.route(f).iter().map(|&c| self.channel_users[c].len()).max().unwrap();
+            // an active flow occupies every channel on its own route, so
+            // occupancy is >= 1 and an empty route cannot occur; 1 keeps
+            // the loss model neutral if it ever did
+            let bottleneck = self
+                .flows
+                .route(f)
+                .iter()
+                .map(|&c| self.channel_users[c].len())
+                .max()
+                .unwrap_or(1);
             let infl = self.loss.inflation(self.flows.payload_mb[f], bottleneck);
             self.flow_rate[f] /= infl;
         }
@@ -687,7 +697,8 @@ impl NetSim {
             }
         }
         for (i, (&f, r)) in self.active_ids.iter().zip(rates).enumerate() {
-            let bottleneck = routes[i].iter().map(|&c| occupancy[c]).max().unwrap();
+            // same >= 1 occupancy argument as the incremental pass
+            let bottleneck = routes[i].iter().map(|&c| occupancy[c]).max().unwrap_or(1);
             let infl = self.loss.inflation(self.flows.payload_mb[f], bottleneck);
             self.flow_rate[f] = r / infl;
         }
@@ -718,7 +729,7 @@ impl NetSim {
                     continue;
                 }
                 let eta = self.now + self.flows.remaining_mb[f] / r;
-                if next_done.is_none() || eta < next_done.unwrap().0 {
+                if next_done.map_or(true, |(best, _)| eta < best) {
                     next_done = Some((eta, f));
                 }
             }

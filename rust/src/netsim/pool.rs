@@ -11,30 +11,66 @@
 //! ## Determinism
 //!
 //! Within a barrier window the shards share no state — each task drains
-//! one `NetSim` to idle with purely private data. Claim order therefore
-//! cannot influence any result: every drain computes the same trajectory
-//! regardless of which worker runs it or when. Pool drains with 1, 2, or
-//! N workers are bit-identical to each other and to a sequential drain
-//! (pinned by tests here and in `tests/scale_shard.rs`).
+//! one [`Drainable`] to idle with purely private data. Claim order
+//! therefore cannot influence any result: every drain computes the same
+//! trajectory regardless of which worker runs it or when. Pool drains
+//! with 1, 2, or N workers are bit-identical to each other and to a
+//! sequential drain (pinned by tests here and in `tests/scale_shard.rs`).
+//!
+//! ## Static verification
+//!
+//! All synchronization goes through [`super::sync`], so building with
+//! `--features loom` swaps in loom's model-checked primitives and
+//! `tests/loom_pool.rs` exhaustively interleaves 2–3 drainers claiming
+//! tasks — every schedule the memory model admits, including the ones
+//! the claim/finish `debug_assert`s guard. CI additionally runs the
+//! pool's tests under Miri (`netsim::pool` filter) to validate the raw
+//! pointer discipline dynamically.
 
+use super::sync::{spawn, Arc, Condvar, JoinHandle, Mutex};
 use super::NetSim;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::PoisonError;
+
+/// Something the pool can drain to idle as one claimable task. Tasks in
+/// one [`DrainPool::drain`] batch must be mutually independent: draining
+/// one may not observe or affect another (the determinism contract
+/// above, and the reason claim order is free to vary).
+pub trait Drainable: Send {
+    /// Run until no work remains (the barrier condition).
+    fn drain_to_idle(&mut self);
+}
+
+impl Drainable for NetSim {
+    fn drain_to_idle(&mut self) {
+        self.run_until_idle();
+    }
+}
 
 /// A claimable drain task. The raw pointer erases the caller's borrow so
-/// the long-lived workers can hold it; [`DrainPool::drain`] re-establishes
-/// the safety contract (see its implementation).
-#[derive(Clone, Copy)]
-struct Task(*mut NetSim);
+/// the long-lived workers can hold it; the `DrainPool` invariants below
+/// re-establish the exclusivity the borrow checker can no longer see.
+struct Task<T>(*mut T);
+
+impl<T> Clone for Task<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for Task<T> {}
 
 // SAFETY: a Task is only ever dereferenced by the single thread that
-// claimed it under the pool mutex, and the NetSim it points at is Send
-// (owned Vecs, Pcg64, Arc<str> labels).
-unsafe impl Send for Task {}
+// claimed it under the pool mutex (invariant I2 on `DrainPool`), and the
+// pointee is `Send` via the `Drainable: Send` bound everywhere tasks are
+// created, so moving the pointer across threads is sound.
+unsafe impl<T: Send> Send for Task<T> {}
 
-struct PoolState {
+struct PoolState<T> {
     /// tasks for the current barrier window
-    tasks: Vec<Task>,
+    tasks: Vec<Task<T>>,
+    /// claim ledger, parallel to `tasks` — `claimed[i]` flips false→true
+    /// exactly once, under the mutex, when task `i` is handed out
+    /// (upholds invariant I2; checked by `debug_assert`)
+    claimed: Vec<bool>,
     /// next unclaimed index into `tasks`
     next: usize,
     /// claimed tasks not yet finished + unclaimed tasks
@@ -42,22 +78,58 @@ struct PoolState {
     shutdown: bool,
 }
 
-struct Shared {
-    state: Mutex<PoolState>,
+struct Shared<T> {
+    state: Mutex<PoolState<T>>,
     /// workers wait here for tasks (or shutdown)
     work_cv: Condvar,
     /// the submitter waits here for `outstanding == 0`
     done_cv: Condvar,
 }
 
-/// A persistent pool draining batches of independent `NetSim`s.
-pub struct DrainPool {
-    shared: Arc<Shared>,
+/// A persistent pool draining batches of independent [`Drainable`]s
+/// (defaulting to [`NetSim`] — the sharded simulator's barrier).
+///
+/// # Invariants
+///
+/// The pool erases `&mut T` borrows into raw pointers so long-lived
+/// workers can hold them; these invariants restore exactly the
+/// exclusivity the erased borrows promised. Every `unsafe` block in this
+/// module cites them.
+///
+/// - **I1 (liveness of the pointee).** Tasks exist only between
+///   [`DrainPool::drain`] publishing a batch and that same call
+///   returning. `drain` blocks until `outstanding == 0` — every claimed
+///   task has finished — so no worker can touch a pointee after the
+///   caller's `&mut` borrows are released. The ledger is also cleared
+///   (`tasks`/`claimed` emptied) before `drain` returns, so no stale
+///   pointer survives the window.
+/// - **I2 (sole claimant).** Task `i` is handed out exactly once: claims
+///   mutate `next` (and the `claimed[i]` ledger) under `state`'s mutex,
+///   and each increment of `next` transfers task `next` to exactly one
+///   thread. The claimant dereferences the pointer only between its
+///   claim and its matching `finish_one`, so at most one thread ever
+///   holds a `&mut` into any pointee — `debug_assert`ed at every claim
+///   site via the ledger.
+/// - **I3 (batch independence).** Each `&mut T` in a batch is a distinct
+///   exclusive borrow, so pointees are pairwise disjoint; with I2 this
+///   gives data-race freedom without any ordering between tasks
+///   (determinism contract in the module docs).
+/// - **I4 (no overlapping windows).** `drain` takes `&self` but windows
+///   never overlap: `outstanding` must be zero when a batch is
+///   published (`debug_assert`ed) and `drain` does not return until it
+///   is zero again. The sharded simulator upholds this by draining from
+///   one coordinating thread.
+///
+/// The loom model in `tests/loom_pool.rs` checks I1/I2/I4 across every
+/// interleaving of 2–3 drainers; Miri checks the pointer discipline on
+/// the native tests.
+pub struct DrainPool<T: Drainable = NetSim> {
+    shared: Arc<Shared<T>>,
     handles: Vec<JoinHandle<()>>,
     parallelism: usize,
 }
 
-impl DrainPool {
+impl<T: Drainable + 'static> DrainPool<T> {
     /// Build a pool with `parallelism` concurrent drainers. The submitting
     /// thread participates in every drain, so `parallelism - 1` worker
     /// threads are spawned; `parallelism <= 1` spawns none and
@@ -67,6 +139,7 @@ impl DrainPool {
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState {
                 tasks: Vec::new(),
+                claimed: Vec::new(),
                 next: 0,
                 outstanding: 0,
                 shutdown: false,
@@ -77,7 +150,7 @@ impl DrainPool {
         let handles = (1..parallelism)
             .map(|_| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared))
+                spawn(move || worker_loop(&shared))
             })
             .collect();
         DrainPool { shared, handles, parallelism }
@@ -88,64 +161,50 @@ impl DrainPool {
         self.parallelism
     }
 
-    /// Drain every sim in `sims` to idle, stealing tasks onto all workers
-    /// plus the calling thread. Blocks until the last task finishes.
-    ///
-    /// SAFETY argument for the internal pointer erasure: each `&mut
-    /// NetSim` becomes exactly one task; a task is claimed by exactly one
-    /// thread (the claim increments `next` under the mutex); and this
-    /// function does not return until `outstanding` reaches zero, so no
-    /// worker touches a sim after the caller's borrows are released.
-    /// Exclusive access per sim is therefore preserved end to end.
+    /// Drain every item in `sims` to idle, stealing tasks onto all
+    /// workers plus the calling thread. Blocks until the last task
+    /// finishes (invariant I1; see the type-level invariant block).
     pub fn drain<'a, I>(&self, sims: I)
     where
-        I: IntoIterator<Item = &'a mut NetSim>,
+        I: IntoIterator<Item = &'a mut T>,
+        T: 'a,
     {
-        let tasks: Vec<Task> = sims.into_iter().map(|s| Task(s as *mut NetSim)).collect();
+        let tasks: Vec<Task<T>> = sims.into_iter().map(|s| Task(s as *mut T)).collect();
         if tasks.is_empty() {
             return;
         }
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            // I4: windows never overlap
             debug_assert!(st.outstanding == 0, "overlapping drain calls");
             st.outstanding = tasks.len();
+            st.claimed = vec![false; tasks.len()];
             st.tasks = tasks;
             st.next = 0;
             self.shared.work_cv.notify_all();
         }
         // the submitter steals too: a 1-wide pool is just this loop
-        loop {
-            let task = {
-                let mut st = self.shared.state.lock().unwrap();
-                if st.next < st.tasks.len() {
-                    let t = st.tasks[st.next];
-                    st.next += 1;
-                    Some(t)
-                } else {
-                    None
-                }
-            };
-            match task {
-                // SAFETY: see above — this thread is the sole claimant
-                Some(t) => {
-                    unsafe { (*t.0).run_until_idle() };
-                    finish_one(&self.shared);
-                }
-                None => break,
-            }
+        while let Some(t) = claim(&self.shared) {
+            // SAFETY: invariants I1–I3 — the pointee outlives the window
+            // this call is inside, and `claim` made this thread the sole
+            // claimant, so this is the only `&mut` into it
+            unsafe { (*t.0).drain_to_idle() };
+            finish_one(&self.shared);
         }
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
         while st.outstanding > 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
+        // I1: drop every erased pointer before the caller's borrows end
         st.tasks.clear();
+        st.claimed.clear();
     }
 }
 
-impl Drop for DrainPool {
+impl<T: Drainable> Drop for DrainPool<T> {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -155,37 +214,57 @@ impl Drop for DrainPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+/// Claim the next unclaimed task, if any, marking this thread its sole
+/// claimant (invariant I2) — all under the state mutex.
+fn claim<T: Drainable>(shared: &Shared<T>) -> Option<Task<T>> {
+    let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+    if st.next < st.tasks.len() {
+        let i = st.next;
+        st.next += 1;
+        debug_assert!(!st.claimed[i], "task {i} claimed twice");
+        st.claimed[i] = true;
+        Some(st.tasks[i])
+    } else {
+        None
+    }
+}
+
+fn worker_loop<T: Drainable>(shared: &Shared<T>) {
     loop {
         let task = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if st.shutdown {
                     return;
                 }
                 if st.next < st.tasks.len() {
-                    let t = st.tasks[st.next];
+                    let i = st.next;
                     st.next += 1;
-                    break t;
+                    debug_assert!(!st.claimed[i], "task {i} claimed twice");
+                    st.claimed[i] = true;
+                    break st.tasks[i];
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                st = shared.work_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         };
-        // SAFETY: sole claimant; see DrainPool::drain
-        unsafe { (*task.0).run_until_idle() };
+        // SAFETY: invariants I1–I3 — the claim above (under the mutex)
+        // made this thread the sole claimant, and the submitter blocks
+        // until `finish_one` below accounts for this task
+        unsafe { (*task.0).drain_to_idle() };
         finish_one(shared);
     }
 }
 
-fn finish_one(shared: &Shared) {
-    let mut st = shared.state.lock().unwrap();
+fn finish_one<T: Drainable>(shared: &Shared<T>) {
+    let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+    debug_assert!(st.outstanding > 0, "finish without a matching claim");
     st.outstanding -= 1;
     if st.outstanding == 0 {
         shared.done_cv.notify_all();
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(feature = "loom")))]
 mod tests {
     use super::*;
     use crate::netsim::{Channel, LossModel};
@@ -262,5 +341,23 @@ mod tests {
         let mut sims = busy_sims(40);
         pool.drain(sims.iter_mut());
         assert!(sims.iter().all(|s| s.active_flow_count() == 0));
+    }
+
+    #[test]
+    fn custom_drainable_runs_every_task_once() {
+        struct Probe {
+            drains: usize,
+        }
+        impl Drainable for Probe {
+            fn drain_to_idle(&mut self) {
+                self.drains += 1;
+            }
+        }
+        let pool: DrainPool<Probe> = DrainPool::new(3);
+        let mut probes: Vec<Probe> = (0..17).map(|_| Probe { drains: 0 }).collect();
+        pool.drain(probes.iter_mut());
+        assert!(probes.iter().all(|p| p.drains == 1));
+        pool.drain(probes.iter_mut());
+        assert!(probes.iter().all(|p| p.drains == 2));
     }
 }

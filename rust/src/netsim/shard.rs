@@ -262,18 +262,22 @@ impl ShardedNetSim {
             let route = if su == sd {
                 vec![up, down]
             } else {
+                // invariant: construction fills the router mesh for every
+                // ordered pair of distinct subnets, and su != sd here
+                #[allow(clippy::expect_used)]
                 let rr = self.router_links[su * self.subnets + sd].expect("router link");
                 vec![up, rr, down]
             };
             self.shards[shard].start_flow(src, dst, route, payload_mb, tag);
-        } else {
+        } else if let Some(bb) = self.backbone.as_mut() {
+            // reached only when `self.backbone.is_none()` failed above,
+            // so the if-let never skips a flow
             let (up, _) = self.backbone_links[src];
             let (_, down) = self.backbone_links[dst];
+            // invariant: as above — the router mesh is fully populated
+            #[allow(clippy::expect_used)]
             let rr = self.router_links[su * self.subnets + sd].expect("router link");
-            self.backbone
-                .as_mut()
-                .expect("backbone shard exists")
-                .start_flow(src, dst, vec![up, rr, down], payload_mb, tag);
+            bb.start_flow(src, dst, vec![up, rr, down], payload_mb, tag);
         }
     }
 
@@ -285,10 +289,7 @@ impl ShardedNetSim {
     pub fn drain_and_sync(&mut self, parallel: bool) -> f64 {
         let width = self.drain_parallelism();
         if parallel && self.shard_count() > 1 && width > 1 {
-            if self.pool.is_none() {
-                self.pool = Some(DrainPool::new(width));
-            }
-            let pool = self.pool.as_ref().expect("pool built above");
+            let pool = self.pool.get_or_insert_with(|| DrainPool::new(width));
             // every busy queue is one task — the backbone too: it carries
             // all gateway traffic and dominates the barrier at large
             // subnet counts, so it must not serialize behind the others

@@ -1,0 +1,25 @@
+//! Concurrency primitives behind a cfg switch: `std::sync` in normal
+//! builds, [loom](https://docs.rs/loom)'s permutation-exploring mocks
+//! under `--features loom`.
+//!
+//! The `netsim` hot path keeps its concurrency kernel ([`super::pool`])
+//! small enough to model-check exhaustively. Everything that kernel
+//! synchronizes through — `Arc`, `Mutex`, `Condvar`, thread spawn/join —
+//! is imported from here rather than `std` directly, so the loom build
+//! swaps the entire substrate without touching the algorithm. The
+//! `loom` cargo feature carries no dependency by itself; the CI `loom`
+//! job adds the crate (`cargo add loom`) before building, keeping the
+//! offline default build dependency-free.
+//!
+//! Model tests live in `tests/loom_pool.rs` and run with
+//! `cargo test --release --features loom --test loom_pool`.
+
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(feature = "loom"))]
+pub use std::thread::{spawn, JoinHandle};
+
+#[cfg(feature = "loom")]
+pub use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(feature = "loom")]
+pub use loom::thread::{spawn, JoinHandle};

@@ -145,6 +145,9 @@ impl Testbed {
         if su == sd {
             vec![up, down]
         } else {
+            // invariant: construction fills the router mesh for every
+            // ordered pair of distinct subnets, and su != sd here
+            #[allow(clippy::expect_used)]
             let rr = self.router_links[su * self.subnets + sd].expect("router link");
             vec![up, rr, down]
         }

@@ -1,0 +1,371 @@
+//! The static verification plane, exercised two ways:
+//!
+//! 1. **Clean coverage** — every planner path the repo ships (flat
+//!    topologies, hierarchical stitching, multi-tree forests, replanned
+//!    bundles, the sparse large-n `ScaleScenario`) must lint clean.
+//!    These asserts hold in release builds too, where the moderator's
+//!    `debug_assert` hook is compiled out.
+//! 2. **Mutation suite** — seeded corruptions of known-good plans (drop
+//!    a tree edge, merge two colors, overlap two lanes, shrink the slot
+//!    budget, ...) must each be flagged with the expected
+//!    [`Violation::kind`], and the unmutated plan must stay silent.
+//!    This is the linter's own soundness/sensitivity check: a lint that
+//!    misses a seeded defect, or fires on a correct plan, fails here.
+
+use mosgu::analysis::{lint_bundle, lint_epoch, LintContext, PlanLinter, Violation};
+use mosgu::coloring::{Coloring, ColoringAlgorithm};
+use mosgu::config::ExperimentConfig;
+use mosgu::coordinator::engine::{PlanEpoch, TreeLane};
+use mosgu::coordinator::moderator::Moderator;
+use mosgu::coordinator::schedule::{build_schedule, Schedule};
+use mosgu::coordinator::session::{sessions_for_all_topologies, GossipSession, ScaleScenario};
+use mosgu::dfl::data::ParticipationPlan;
+use mosgu::dfl::transfer::TransferPlan;
+use mosgu::graph::generators::GeneratorKind;
+use mosgu::graph::Graph;
+use mosgu::mst::MstAlgorithm;
+use mosgu::prop_assert;
+use mosgu::util::proptest::check;
+use mosgu::util::rng::Pcg64;
+
+fn quiet_cfg() -> ExperimentConfig {
+    ExperimentConfig { latency_jitter: 0.0, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// clean coverage: every planner output across the paper topologies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_paper_topology_lints_clean() {
+    let sessions = sessions_for_all_topologies(&quiet_cfg()).unwrap();
+    assert_eq!(sessions.len(), 4);
+    for (kind, s) in sessions {
+        let report = s.lint_report(8);
+        assert!(report.is_clean(), "{kind:?}: {report}");
+    }
+}
+
+#[test]
+fn hierarchical_session_lints_clean() {
+    let cfg = ExperimentConfig {
+        nodes: 12,
+        subnets: 3,
+        topology_gen: GeneratorKind::Hierarchy,
+        ..quiet_cfg()
+    };
+    let s = GossipSession::new(&cfg).unwrap();
+    let report = s.lint_report(8);
+    assert!(report.is_clean(), "{report}");
+}
+
+#[test]
+fn forest_session_lints_clean() {
+    let cfg = ExperimentConfig { trees: 2, ..quiet_cfg() };
+    let s = GossipSession::new(&cfg).unwrap();
+    assert_eq!(s.extra_lanes().len(), 1, "complete n=10 admits an extra lane");
+    let report = s.lint_report(8);
+    assert!(report.is_clean(), "{report}");
+}
+
+#[test]
+fn segmented_and_partial_participation_sessions_lint_clean() {
+    // segments ≥ 2 exercises the stripe/segment-bounds checks for real
+    let cfg = ExperimentConfig { segments: 4, ..quiet_cfg() };
+    let s = GossipSession::new(&cfg).unwrap();
+    let report = s.lint_report(8);
+    assert!(report.is_clean(), "segmented: {report}");
+
+    // participation < 1 exercises the origination-consistency checks
+    let cfg = ExperimentConfig { participation: 0.5, ..quiet_cfg() };
+    let s = GossipSession::new(&cfg).unwrap();
+    let report = s.lint_report(8);
+    assert!(report.is_clean(), "participation: {report}");
+}
+
+#[test]
+fn replanned_bundle_lints_clean_against_fresh_estimates() {
+    let n = 10;
+    let costs = dense_costs(n);
+    let mut m = Moderator::new(0, n, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+    for u in 0..n {
+        let peers: Vec<(usize, f64)> = costs.neighbors(u).to_vec();
+        m.submit_report(u, &peers);
+    }
+    let bundle = m.compute_schedule(14.0, 56, 1).unwrap().clone();
+    let measured = m.matrix().unwrap().to_graph();
+    let ctx = LintContext { costs: &measured, unit_mb: 14.0, ping_size_bytes: 56 };
+    let report = lint_bundle(&bundle, &ctx);
+    assert!(report.is_clean(), "initial: {report}");
+
+    // drift every edge a little and replan: the fresh bundle must lint
+    // clean against the estimates it was re-budgeted from
+    let mut estimates = Graph::new(n);
+    for (i, e) in measured.edges().iter().enumerate() {
+        estimates.add_edge(e.u, e.v, e.weight * (1.0 + 0.2 * ((i % 5) as f64 - 2.0) / 10.0));
+    }
+    let after = m.replan_with_costs(&estimates, 14.0, 56, 1).unwrap().clone();
+    let ctx = LintContext { costs: &estimates, unit_mb: 14.0, ping_size_bytes: 56 };
+    let report = lint_bundle(&after, &ctx);
+    assert!(report.is_clean(), "replanned: {report}");
+}
+
+#[test]
+fn scale_scenario_epoch_lints_clean() {
+    let cfg = ExperimentConfig { nodes: 48, subnets: 6, trees: 2, ..quiet_cfg() };
+    let sc = ScaleScenario::new(&cfg, 14.0).unwrap();
+    // ScaleScenario plans straight from the sparse overlay costs (no
+    // report noise), so the lint baseline is recomputable from its parts
+    let costs = sc.testbed().overlay_costs(sc.structure());
+    let epoch = PlanEpoch {
+        tree: sc.tree().clone(),
+        schedule: sc.schedule().clone(),
+        extra: sc.extra_lanes().to_vec(),
+    };
+    let unit_mb = cfg.transfer_plan(14.0).segment_mb();
+    let ctx = LintContext { costs: &costs, unit_mb, ping_size_bytes: cfg.ping_size_bytes };
+    let report = lint_epoch(&epoch, &ctx);
+    assert!(report.is_clean(), "{report}");
+}
+
+// ---------------------------------------------------------------------------
+// mutation suite: seeded corruptions must be flagged, by kind
+// ---------------------------------------------------------------------------
+
+fn dense_costs(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.add_edge(u, v, if v == u + 1 { 1.0 } else { 2.0 + (u * n + v) as f64 * 0.01 });
+        }
+    }
+    g
+}
+
+fn random_costs(rng: &mut Pcg64, n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.add_edge(u, v, rng.gen_f64_range(1.0, 50.0));
+        }
+    }
+    g
+}
+
+fn plan(costs: &Graph) -> PlanEpoch {
+    let tree = MstAlgorithm::Prim.run(costs).unwrap();
+    let coloring = ColoringAlgorithm::Bfs.run(&tree);
+    let schedule = build_schedule(costs, coloring, 14.0, 56, 1);
+    PlanEpoch::single(tree, schedule)
+}
+
+fn ctx(costs: &Graph) -> LintContext<'_> {
+    LintContext { costs, unit_mb: 14.0, ping_size_bytes: 56 }
+}
+
+/// Rebuild the epoch's schedule around a mutated coloring, keeping the
+/// published budget/rotation so only the seeded defect differs.
+fn with_coloring(epoch: &PlanEpoch, assignment: Vec<usize>) -> PlanEpoch {
+    let schedule = Schedule {
+        coloring: Coloring::new(assignment),
+        slot_len_s: epoch.schedule.slot_len_s,
+        first_color: epoch.schedule.first_color,
+    };
+    PlanEpoch::single(epoch.tree.clone(), schedule)
+}
+
+#[test]
+fn mutation_suite_flags_every_seeded_corruption() {
+    check("plan-lint mutations", 96, |rng| {
+        let n = 6 + rng.gen_range(6); // 6..=11 nodes
+        let costs = random_costs(rng, n);
+        let epoch = plan(&costs);
+        let report = lint_epoch(&epoch, &ctx(&costs));
+        prop_assert!(report.is_clean(), "unmutated plan must lint clean: {report}");
+
+        match rng.gen_range(8) {
+            // drop a random tree edge: the lane no longer spans
+            0 => {
+                let drop = rng.gen_range(epoch.tree.edge_count());
+                let mut broken = Graph::new(n);
+                for (i, e) in epoch.tree.edges().iter().enumerate() {
+                    if i != drop {
+                        broken.add_edge(e.u, e.v, e.weight);
+                    }
+                }
+                let mutated = PlanEpoch::single(broken, epoch.schedule.clone());
+                let report = lint_epoch(&mutated, &ctx(&costs));
+                prop_assert!(report.has("not-spanning"), "dropped edge {drop}: {report}");
+                prop_assert!(report.has("disconnected"), "dropped edge {drop}: {report}");
+            }
+            // merge the colors across a random tree edge: properness and
+            // per-slot half-duplex conflict freedom both break
+            1 => {
+                let e = epoch.tree.edges()[rng.gen_range(epoch.tree.edge_count())];
+                let mut assignment = epoch.schedule.coloring.assignment().to_vec();
+                assignment[e.v] = assignment[e.u];
+                let report = lint_epoch(&with_coloring(&epoch, assignment), &ctx(&costs));
+                prop_assert!(report.has("improper-edge"), "merged ({},{}): {report}", e.u, e.v);
+                prop_assert!(report.has("slot-conflict"), "merged ({},{}): {report}", e.u, e.v);
+            }
+            // clone lane 0 as an extra lane: every edge is shared
+            2 => {
+                let mutated = PlanEpoch {
+                    tree: epoch.tree.clone(),
+                    schedule: epoch.schedule.clone(),
+                    extra: vec![TreeLane {
+                        tree: epoch.tree.clone(),
+                        schedule: epoch.schedule.clone(),
+                    }],
+                };
+                let report = lint_epoch(&mutated, &ctx(&costs));
+                prop_assert!(report.has("shared-edge"), "{report}");
+            }
+            // scale the published slot budget: the §III-C formula recompute
+            // must disagree
+            3 => {
+                let factor = rng.gen_f64_range(1.5, 3.0);
+                let schedule = Schedule {
+                    slot_len_s: epoch.schedule.slot_len_s * factor,
+                    ..epoch.schedule.clone()
+                };
+                let mutated = PlanEpoch::single(epoch.tree.clone(), schedule);
+                let report = lint_epoch(&mutated, &ctx(&costs));
+                prop_assert!(report.has("slot-budget-mismatch"), "factor {factor}: {report}");
+            }
+            // rotate the slot cycle off the end of the color range
+            4 => {
+                let k = epoch.schedule.coloring.num_colors();
+                let schedule =
+                    Schedule { first_color: k + rng.gen_range(4), ..epoch.schedule.clone() };
+                let mutated = PlanEpoch::single(epoch.tree.clone(), schedule);
+                let report = lint_epoch(&mutated, &ctx(&costs));
+                prop_assert!(report.has("first-color-out-of-range"), "{report}");
+            }
+            // shift every color up by one: class 0 goes empty (a slot with
+            // zero transmitters each cycle) while properness survives
+            5 => {
+                let assignment: Vec<usize> =
+                    epoch.schedule.coloring.assignment().iter().map(|&c| c + 1).collect();
+                let report = lint_epoch(&with_coloring(&epoch, assignment), &ctx(&costs));
+                prop_assert!(report.has("empty-color-class"), "{report}");
+                prop_assert!(!report.has("improper-edge"), "shift keeps properness: {report}");
+            }
+            // truncate the coloring: wrong shape, reported without panicking
+            6 => {
+                let mut assignment = epoch.schedule.coloring.assignment().to_vec();
+                assignment.pop();
+                let report = lint_epoch(&with_coloring(&epoch, assignment), &ctx(&costs));
+                prop_assert!(report.has("coloring-length"), "{report}");
+            }
+            // grow the tree by a phantom node: plan/tree node sets diverge
+            _ => {
+                let mut grown = Graph::new(n + 1);
+                for e in epoch.tree.edges() {
+                    grown.add_edge(e.u, e.v, e.weight);
+                }
+                let mutated = PlanEpoch::single(grown, epoch.schedule.clone());
+                let report = lint_epoch(&mutated, &ctx(&costs));
+                prop_assert!(report.has("wrong-node-count"), "{report}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn foreign_edge_mutation_is_flagged_on_sparse_costs() {
+    check("plan-lint foreign edge", 48, |rng| {
+        // chain costs: the tree IS the chain, and (u, u+2) is never measured
+        let n = 5 + rng.gen_range(6);
+        let mut costs = Graph::new(n);
+        for u in 0..n - 1 {
+            costs.add_edge(u, u + 1, rng.gen_f64_range(1.0, 20.0));
+        }
+        let epoch = plan(&costs);
+        prop_assert!(lint_epoch(&epoch, &ctx(&costs)).is_clean(), "chain plan must be clean");
+
+        let u = rng.gen_range(n - 2);
+        let mut rewired = Graph::new(n);
+        for e in epoch.tree.edges() {
+            if (e.u.min(e.v), e.u.max(e.v)) == (u, u + 1) {
+                rewired.add_edge(u, u + 2, e.weight);
+            } else {
+                rewired.add_edge(e.u, e.v, e.weight);
+            }
+        }
+        let mutated = PlanEpoch::single(rewired, epoch.schedule.clone());
+        let report = lint_epoch(&mutated, &ctx(&costs));
+        prop_assert!(report.has("foreign-edge"), "rewired ({u},{}): {report}", u + 2);
+        Ok(())
+    });
+}
+
+#[test]
+fn stripe_mutations_lose_bytes_or_segments() {
+    check("plan-lint stripe mutations", 48, |rng| {
+        let segments = 2 + rng.gen_range(7); // 2..=8
+        let plan = TransferPlan::segmented(48.0, segments);
+        let lanes = 2 + rng.gen_range(2); // 2..=3
+        let good: Vec<TransferPlan> = vec![plan.stripe(lanes); lanes];
+        let mut linter = PlanLinter::new(ctx(&dense_costs(4)));
+        linter.check_stripes(&plan, &good);
+        let report = linter.finish();
+        prop_assert!(report.is_clean(), "even stripes must be clean: {report}");
+
+        // drop one lane's stripe entirely: bytes are lost
+        let short = &good[..lanes - 1];
+        let mut linter = PlanLinter::new(ctx(&dense_costs(4)));
+        linter.check_stripes(&plan, short);
+        let report = linter.finish();
+        prop_assert!(report.has("stripe-byte-loss"), "{report}");
+        Ok(())
+    });
+}
+
+#[test]
+fn participation_mutations_are_flagged() {
+    let costs = dense_costs(6);
+    let plan = ParticipationPlan::sample(0.5, 6, 3, 7);
+
+    // linting past the sampled horizon: rounds 3+ have no participant set
+    let mut linter = PlanLinter::new(ctx(&costs));
+    linter.check_participation(&plan, 6, 5);
+    let report = linter.finish();
+    assert!(report.has("missing-participants"), "{report}");
+
+    // linting against a *smaller* node count: full participation sampled
+    // over 6 nodes guarantees ids 3..6 overflow a 3-node session
+    let full = ParticipationPlan::sample(1.0, 6, 3, 7);
+    let mut linter = PlanLinter::new(ctx(&costs));
+    linter.check_participation(&full, 3, 3);
+    let report = linter.finish();
+    assert!(report.has("participant-out-of-range"), "{report}");
+}
+
+#[test]
+fn corrupted_neighbor_table_is_flagged() {
+    let n = 8;
+    let costs = dense_costs(n);
+    let mut m = Moderator::new(0, n, MstAlgorithm::Prim, ColoringAlgorithm::Bfs);
+    for u in 0..n {
+        let peers: Vec<(usize, f64)> = costs.neighbors(u).to_vec();
+        m.submit_report(u, &peers);
+    }
+    let mut bundle = m.compute_schedule(14.0, 56, 1).unwrap().clone();
+    let measured = m.matrix().unwrap().to_graph();
+    let ctx = LintContext { costs: &measured, unit_mb: 14.0, ping_size_bytes: 56 };
+    assert!(lint_bundle(&bundle, &ctx).is_clean());
+
+    // point node 0's advertised neighbors somewhere else entirely
+    bundle.neighbor_table[0] = vec![(bundle.neighbor_table[0][0] + 1) % n];
+    let report = lint_bundle(&bundle, &ctx);
+    assert!(report.has("neighbor-table-mismatch"), "{report}");
+    assert!(
+        report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, Violation::NeighborTableMismatch { node: 0 })),
+        "the corrupted node must be named: {report}"
+    );
+}
